@@ -1,0 +1,100 @@
+//! Hybrid-datacenter study (§6 of the paper) at full scale: the 52K
+//! Alpaca trace, both threshold sweeps (Eq. 9/10), the λ trade-off of
+//! Eq. 1, and a fleet-sizing extension (k × M1 per A100).
+//!
+//! ```bash
+//! cargo run --release --example hybrid_datacenter_sim
+//! ```
+
+use hetsched::experiments::sweeps::{input_thresholds, output_thresholds, threshold_sweep};
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::model::find_llm;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::oracle::oracle_assign;
+use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Table};
+use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
+use hetsched::workload::Query;
+
+fn main() {
+    let systems = system_catalog();
+    let m1 = &systems[SystemId::M1_PRO.0];
+    let a100 = &systems[SystemId::SWING_A100.0];
+    let energy = EnergyModel::new(PerfModel::new(find_llm("Llama-2-7B").unwrap()));
+    let trace = AlpacaModel::default().trace(2024, ALPACA_SIZE);
+    println!("Alpaca trace: {} queries\n", trace.len());
+
+    // ---- Fig 4 (Eq. 9): input-token threshold -------------------------
+    let q_in: Vec<Query> = trace.iter().map(|q| Query::new(q.id, q.input_tokens, 32)).collect();
+    let c_in = threshold_sweep(&q_in, &energy, m1, a100, &input_thresholds(), true);
+    println!(
+        "Fig 4 — input threshold: optimum T_in={} → {} ({:.2}% below all-A100)",
+        c_in.best_threshold,
+        fmt_joules(c_in.best_energy_j),
+        (1.0 - c_in.best_energy_j / c_in.all_big_energy_j) * 100.0
+    );
+
+    // ---- Fig 5 (Eq. 10): output-token threshold ------------------------
+    let q_out: Vec<Query> = trace.iter().map(|q| Query::new(q.id, 32, q.output_tokens)).collect();
+    let c_out = threshold_sweep(&q_out, &energy, m1, a100, &output_thresholds(), false);
+    println!(
+        "Fig 5 — output threshold: optimum T_out={} → {} ({:.2}% below all-A100)",
+        c_out.best_threshold,
+        fmt_joules(c_out.best_energy_j),
+        (1.0 - c_out.best_energy_j / c_out.all_big_energy_j) * 100.0
+    );
+
+    // ---- λ trade-off (Eq. 1, the knob the paper defines but fixes) ----
+    println!("\nλ trade-off (oracle per-query argmin of U = λE + (1−λ)R):");
+    let mut t = Table::new(&["λ", "energy", "Σ runtime", "→M1", "→A100", "→V100"]);
+    for lambda in [0.0, 0.25, 0.5, 0.75, 0.9, 1.0] {
+        let (assign, _) = oracle_assign(&trace, &systems, &energy, lambda);
+        let mut e_total = 0.0;
+        let mut r_total = 0.0;
+        let mut counts = [0u64; 3];
+        for (q, sid) in trace.iter().zip(&assign) {
+            e_total += energy.energy(&systems[sid.0], q.input_tokens, q.output_tokens);
+            r_total += energy.runtime(&systems[sid.0], q.input_tokens, q.output_tokens);
+            counts[sid.0] += 1;
+        }
+        t.row(&[
+            format!("{lambda:.2}"),
+            fmt_joules(e_total),
+            fmt_secs(r_total),
+            counts[0].to_string(),
+            counts[1].to_string(),
+            counts[2].to_string(),
+        ]);
+    }
+    print!("{}", t.ascii());
+    println!("(λ=0 minimizes runtime, λ=1 minimizes energy — the Pareto knob of Eq. 1)");
+
+    // ---- extension: fleet sizing (k × M1 per A100) ----------------------
+    // Energy totals don't depend on node counts, but makespan does: how
+    // many M1s must back one A100 before the hybrid stops being slower?
+    println!("\nFleet sizing (makespan of the T=32 input-split, Eq. 9 workload):");
+    let mut t = Table::new(&["M1 nodes", "M1 makespan", "A100 makespan", "cluster makespan"]);
+    let small_work: f64 = q_in
+        .iter()
+        .filter(|q| q.input_tokens <= 32)
+        .map(|q| energy.runtime(m1, q.input_tokens, q.output_tokens))
+        .sum();
+    let big_work: f64 = q_in
+        .iter()
+        .filter(|q| q.input_tokens > 32)
+        .map(|q| energy.runtime(a100, q.input_tokens, q.output_tokens))
+        .sum();
+    for k in [1usize, 2, 4, 8, 16] {
+        let m1_span = small_work / k as f64;
+        let span = m1_span.max(big_work);
+        t.row(&[
+            k.to_string(),
+            fmt_secs(m1_span),
+            fmt_secs(big_work),
+            fmt_secs(span),
+        ]);
+    }
+    print!("{}", t.ascii());
+    println!("(the paper's single M1 is the throughput bottleneck; ~the fleet ratio");
+    println!(" where M1 makespan dips below the A100's is the balanced design point)");
+}

@@ -1,0 +1,79 @@
+//! Measurement-methodology study: how accurate are the paper's four
+//! energy meters (§4.2)? The paper reports numbers from NVML, RAPL,
+//! powermetrics, and AMD µProf without quantifying their attribution
+//! error — here we run each simulated meter against ground truth and
+//! report bias/spread, plus the sampling-interval sensitivity.
+//!
+//! ```bash
+//! cargo run --release --example measurement_study
+//! ```
+
+use hetsched::hw::catalog::system_catalog;
+use hetsched::measure::meters::{AmdUprofMeter, Meter, NvmlMeter, PowermetricsMeter, RaplMeter};
+use hetsched::measure::trace::GroundTruthTrace;
+use hetsched::model::find_llm;
+use hetsched::perf::model::PerfModel;
+use hetsched::util::rng::Xoshiro256;
+use hetsched::util::stats::{mean, percentile};
+use hetsched::util::tablefmt::{Align, Table};
+
+fn error_stats(meter: &dyn Meter, trace: &GroundTruthTrace, trials: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Xoshiro256::seed_from(seed);
+    let errs: Vec<f64> = (0..trials).map(|_| meter.measure(trace, &mut rng).rel_error * 100.0).collect();
+    let abs: Vec<f64> = errs.iter().map(|e| e.abs()).collect();
+    (mean(&errs), percentile(&abs, 95.0))
+}
+
+fn main() {
+    let systems = system_catalog();
+    let perf = PerfModel::new(find_llm("Llama-2-7B").unwrap());
+
+    // a mid-size query on the A100 node, with 30 W of unrelated
+    // background load the meters must not misattribute
+    let spec = &systems[1];
+    let gt = GroundTruthTrace::new(perf.power_model(spec, 256, 128), spec, 30.0);
+    println!(
+        "workload: Llama-2-7B (m=256, n=128) on {} — true task energy {:.1} J over {:.1} s\n",
+        spec.name,
+        gt.true_task_energy(),
+        gt.duration()
+    );
+
+    println!("=== meter accuracy (200 trials each; error vs ground truth) ===");
+    let mut t = Table::new(&["meter", "models (§4.2)", "mean bias %", "p95 |error| %"])
+        .align(0, Align::Left)
+        .align(1, Align::Left);
+    let meters: Vec<(Box<dyn Meter>, &str)> = vec![
+        (Box::new(NvmlMeter::default()), "PyJoules→NVML polling (Eq. 5)"),
+        (Box::new(PowermetricsMeter::default()), "powermetrics + α factor (Eq. 6)"),
+        (Box::new(RaplMeter::default()), "RAPL w/ idle subtraction (Eq. 7)"),
+        (Box::new(AmdUprofMeter::default()), "µProf per-core + residency (Eq. 8)"),
+    ];
+    for (m, desc) in &meters {
+        let (bias, p95) = error_stats(m.as_ref(), &gt, 200, 42);
+        t.row(&[m.name().into(), desc.to_string(), format!("{bias:+.2}"), format!("{p95:.2}")]);
+    }
+    print!("{}", t.ascii());
+
+    println!("\n=== sampling-interval sensitivity (NVML-style meter) ===");
+    let mut t = Table::new(&["interval", "mean bias %", "p95 |error| %"]);
+    for interval in [0.01, 0.05, 0.2, 0.5, 1.0, 2.0] {
+        let m = NvmlMeter { interval_s: interval, sensor_noise: 0.02 };
+        let (bias, p95) = error_stats(&m, &gt, 200, 7);
+        t.row(&[format!("{:.0} ms", interval * 1e3), format!("{bias:+.2}"), format!("{p95:.2}")]);
+    }
+    print!("{}", t.ascii());
+    println!("(the paper's 200 ms powermetrics / 100 ms µProf cadences sit in the");
+    println!(" flat region for multi-second queries — but sub-second queries at the");
+    println!(" paper's T=32 routing boundary are exactly where coarse meters blur)");
+
+    println!("\n=== idle-baseline drift (RAPL's weak spot) ===");
+    let mut t = Table::new(&["idle drift", "mean bias %"]);
+    for drift in [-20.0, -10.0, 0.0, 10.0, 20.0] {
+        let m = RaplMeter { idle_drift_w: drift, ..Default::default() };
+        let (bias, _) = error_stats(&m, &gt, 100, 11);
+        t.row(&[format!("{drift:+.0} W"), format!("{bias:+.2}")]);
+    }
+    print!("{}", t.ascii());
+    println!("(Eq. 7's idle subtraction converts baseline drift directly into bias)");
+}

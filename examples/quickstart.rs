@@ -1,0 +1,67 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! 1. Build the paper's cluster (Table 1) and energy model.
+//! 2. Ask the cost function (Eq. 1) where a query should run.
+//! 3. Run the threshold scheduler over a small Alpaca trace and compare
+//!    against the all-A100 baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::find_llm;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::policy::build_policy;
+use hetsched::sim::engine::{simulate, SimOptions};
+use hetsched::util::tablefmt::fmt_joules;
+use hetsched::workload::alpaca::AlpacaModel;
+
+fn main() {
+    // --- 1. cluster + energy model -------------------------------------
+    let systems = system_catalog(); // M1-Pro, Swing-A100, Palmetto-V100
+    let llama = find_llm("Llama-2-7B").unwrap();
+    let energy = EnergyModel::new(PerfModel::new(llama));
+
+    // --- 2. per-query costs (Eq. 1: U = λE + (1−λ)R) --------------------
+    println!("Where should a query run? (E in J, R in s)\n");
+    for (m, n) in [(8u32, 8u32), (32, 32), (512, 128)] {
+        println!("query m={m:4} n={n:4}:");
+        for spec in &systems {
+            let e = energy.energy(spec, m, n);
+            let r = energy.runtime(spec, m, n);
+            println!("    {:<14} E={e:8.1} J   R={r:7.2} s", spec.name);
+        }
+    }
+
+    // --- 3. threshold scheduling vs baseline on Alpaca ------------------
+    let queries = AlpacaModel::default().trace(2024, 5_000);
+    let run = |cfg: &PolicyConfig| {
+        let mut p = build_policy(cfg, energy.clone(), &systems);
+        simulate(&queries, &systems, p.as_mut(), &energy, &SimOptions::default())
+    };
+    let baseline = run(&PolicyConfig::AllOn("Swing-A100".into()));
+    let hybrid = run(&PolicyConfig::Threshold {
+        t_in: 32,
+        t_out: 32,
+        small: "M1-Pro".into(),
+        big: "Swing-A100".into(),
+    });
+
+    println!("\n5,000 Alpaca queries:");
+    println!("  all-A100 baseline : {}", fmt_joules(baseline.total_energy_j));
+    println!(
+        "  hybrid threshold  : {}  ({:.2}% energy saved)",
+        fmt_joules(hybrid.total_energy_j),
+        (1.0 - hybrid.total_energy_j / baseline.total_energy_j) * 100.0
+    );
+    println!(
+        "  routed to M1-Pro  : {} of {} queries",
+        hybrid.routing_counts()[0],
+        queries.len()
+    );
+    println!("\nNext: `hetsched headline` for the paper's full result, or");
+    println!("`cargo run --release --example e2e_serving` for live serving.");
+}

@@ -1,0 +1,229 @@
+"""AOT pipeline: lower the L2 model to HLO text + dump weights.
+
+Run once at build time (`make artifacts`); the rust runtime is then fully
+self-contained. Interchange is **HLO text**, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 (behind the published `xla` 0.1.6 crate) rejects with
+`proto.id() <= INT_MAX`; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  prefill_s{S}.hlo.txt   one per sequence-length bucket
+  decode.hlo.txt         single-token decode step
+  weights.bin            f32 little-endian, concatenated in param order
+  manifest.json          config + param table (name/shape/offset) +
+                         entrypoint descriptions, consumed by
+                         rust/src/runtime/artifacts.rs
+
+Argument convention (must match rust/src/runtime/engine.rs):
+  prefill_sS : [*params, tokens(S,i32)] -> (logits(V,), k(L,H,C,Dh), v(...))
+  decode     : [*params, k, v, pos(1,i32), token(1,i32)]
+                 -> (logits(V,), k, v)
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (ids reassigned).
+
+    return_tuple=False: PJRT then hands the rust runtime one buffer per
+    output (logits, k, v), which lets decode steps chain KV caches as
+    device buffers via execute_b with no per-step host round-trip — the
+    §Perf optimization recorded in EXPERIMENTS.md.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def packed_len(cfg: M.ModelConfig) -> int:
+    """Flat state layout: [logits (V) | k (L·H·C·Dh) | v (L·H·C·Dh)].
+
+    Packing the whole step state into ONE array keeps the HLO root a
+    plain array (multi-result modules get a tuple root, which this
+    PJRT stack returns as a single un-splittable tuple buffer). A single
+    array output chains across decode steps as a device buffer; the tiny
+    `logits` slicer below is the only per-step host transfer (~1 KB).
+    """
+    cache = cfg.n_layers * cfg.n_heads * cfg.cache_capacity * cfg.d_head
+    return cfg.vocab + 2 * cache
+
+
+def _pack(logits, k, v, cfg):
+    return jnp.concatenate([logits, k.reshape(-1), v.reshape(-1)])
+
+
+def _unpack_caches(packed, cfg):
+    l, h, c, dh, v = (cfg.n_layers, cfg.n_heads, cfg.cache_capacity,
+                      cfg.d_head, cfg.vocab)
+    cache = l * h * c * dh
+    k = packed[v:v + cache].reshape(l, h, c, dh)
+    vv = packed[v + cache:v + 2 * cache].reshape(l, h, c, dh)
+    return k, vv
+
+
+def build_entrypoints(cfg: M.ModelConfig):
+    """Return {name: (fn, example_arg_specs)} for every HLO we export."""
+    c = cfg.cache_capacity
+    shapes = M.param_shapes(cfg)
+    pspecs = [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in M.param_names(cfg)]
+    packed_spec = jax.ShapeDtypeStruct((packed_len(cfg),), jnp.float32)
+    i1 = jax.ShapeDtypeStruct((1,), jnp.int32)
+
+    entries = {}
+
+    def make_prefill(s):
+        def fn(*args):
+            params = list(args[:-1])
+            tokens = args[-1]
+            logits, k, v = M.prefill(params, tokens, cfg)
+            return _pack(logits, k, v, cfg)
+        return fn, pspecs + [jax.ShapeDtypeStruct((s,), jnp.int32)]
+
+    for s in cfg.prefill_buckets:
+        if s > c:
+            raise ValueError(f"bucket {s} exceeds cache capacity {c}")
+        entries[f"prefill_s{s}"] = make_prefill(s)
+
+    def decode_fn(*args):
+        params = list(args[:-3])
+        packed, pos, token = args[-3:]
+        k_cache, v_cache = _unpack_caches(packed, cfg)
+        logits, k, v = M.decode_step(params, k_cache, v_cache, pos[0], token[0], cfg)
+        return _pack(logits, k, v, cfg)
+
+    entries["decode"] = (decode_fn, pspecs + [packed_spec, i1, i1])
+
+    def logits_fn(packed):
+        return packed[: cfg.vocab]
+
+    entries["logits"] = (logits_fn, [packed_spec])
+    return entries
+
+
+def write_weights(params, cfg: M.ModelConfig, out_dir: str):
+    """weights.bin (f32 LE) + the manifest param table."""
+    table = []
+    offset = 0
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        for name, arr in zip(M.param_names(cfg), params):
+            a = np.asarray(arr, dtype="<f4")
+            f.write(a.tobytes())
+            table.append({
+                "name": name,
+                "shape": list(a.shape),
+                "offset": offset,
+                "elems": int(a.size),
+            })
+            offset += a.size * 4
+    return table, offset
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--out", default=None, help="(Makefile stamp) path of the stamp HLO file")
+    ap.add_argument("--seed", type=int, default=20240603)  # E2DC'24 date
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-layers", type=int, default=4)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--cache-capacity", type=int, default=512)
+    ap.add_argument("--buckets", default="8,16,32,64,128,256")
+    ap.add_argument("--check", action="store_true", help="numeric self-test after export")
+    args = ap.parse_args(argv)
+
+    cfg = M.ModelConfig(
+        d_model=args.d_model, n_layers=args.n_layers, n_heads=args.n_heads,
+        d_ff=args.d_ff, cache_capacity=args.cache_capacity,
+        prefill_buckets=tuple(int(b) for b in args.buckets.split(",")),
+    )
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    print(f"[aot] model: {cfg.param_count():,} params, buckets={cfg.prefill_buckets}, "
+          f"capacity={cfg.cache_capacity}", flush=True)
+
+    params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+    table, nbytes = write_weights(params, cfg, out_dir)
+    print(f"[aot] weights.bin: {nbytes/1e6:.2f} MB", flush=True)
+
+    entrypoints = {}
+    for name, (fn, specs) in build_entrypoints(cfg).items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entrypoints[name] = {
+            "file": fname,
+            "num_params": len(M.param_names(cfg)),
+            "extra_inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in specs[len(M.param_names(cfg)):]
+            ],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        print(f"[aot] {fname}: {len(text)/1e6:.2f} MB HLO text", flush=True)
+
+    manifest = {
+        "version": 2,  # v2: untupled outputs (one PJRT buffer per output)
+        "seed": args.seed,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ff": cfg.d_ff,
+            "cache_capacity": cfg.cache_capacity,
+            "prefill_buckets": list(cfg.prefill_buckets),
+            "param_count": cfg.param_count(),
+            "packed_len": packed_len(cfg),
+        },
+        "weights": {"file": "weights.bin", "bytes": nbytes, "params": table},
+        "entrypoints": entrypoints,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written to {out_dir}", flush=True)
+
+    if args.check:
+        _self_check(params, cfg)
+    return 0
+
+
+def _self_check(params, cfg):
+    """Round-trip numeric check: jitted export fns == direct model calls."""
+    s = cfg.prefill_buckets[0]
+    toks = (jnp.arange(s, dtype=jnp.int32) * 37 + 11) % cfg.vocab
+    eps = build_entrypoints(cfg)
+    fn, _ = eps[f"prefill_s{s}"]
+    packed = jax.jit(fn)(*params, toks)
+    lg, kc, vc = M.prefill(params, toks, cfg)
+    lfn, _ = eps["logits"]
+    np.testing.assert_allclose(jax.jit(lfn)(packed), lg, rtol=1e-4, atol=1e-4)
+    k_got, v_got = _unpack_caches(packed, cfg)
+    np.testing.assert_allclose(k_got, kc, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(v_got, vc, rtol=1e-4, atol=1e-4)
+    dfn, _ = eps["decode"]
+    tok = int(jnp.argmax(lg))
+    packed_d = jax.jit(dfn)(*params, packed, jnp.array([s], jnp.int32),
+                            jnp.array([tok], jnp.int32))
+    want_d = M.decode_step(params, kc, vc, s, tok, cfg)
+    np.testing.assert_allclose(jax.jit(lfn)(packed_d), want_d[0], rtol=1e-4, atol=1e-4)
+    print("[aot] self-check OK", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""Pallas fused prefill attention (flash-style online softmax).
+
+TPU-shaped structure (see DESIGN.md §Hardware-Adaptation): the grid walks
+(q_block, k_block) tiles; each step pulls a (BQ, D) query tile and a
+(BK, D) key/value tile from HBM into VMEM, runs the (BQ×D)·(D×BK) matmul
+chain on the MXU in fp32 accumulate, and maintains the online-softmax
+running max `m`, denominator `l`, and output accumulator in VMEM scratch.
+Nothing of size (S, T) ever materializes.
+
+Lowered with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU numbers are estimated analytically
+(EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps exp() well-defined
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, block_q, block_k, num_kb, t_minus_s):
+    """One (q_block, k_block) grid step of online-softmax attention."""
+    qb = pl.program_id(0)
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)           # (BQ, D)
+    k = k_ref[...].astype(jnp.float32)           # (BK, D)
+    v = v_ref[...].astype(jnp.float32)           # (BK, D)
+
+    s = jnp.dot(q, k.T) * scale                  # (BQ, BK) on the MXU
+
+    if causal:
+        # query i (global) attends to key j (global) iff j <= i + (T - S)
+        qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(kpos <= qpos + t_minus_s, s, NEG_INF)
+
+    m_prev = m_scr[...]                          # (BQ, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)              # rescale factor for old state
+    p = jnp.exp(s - m_new)                       # (BQ, BK)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kb == num_kb - 1)
+    def _finalize():
+        # Fully-masked rows (can't happen for causal suffix layouts, but
+        # guard anyway): l == 0 → emit zeros rather than NaN.
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True):
+    """Single-head flash attention. q: (S, D), k/v: (T, D) → (S, D).
+
+    S must be divisible by block_q and T by block_k (callers pad to the
+    bucket sizes the AOT pipeline exports).
+    """
+    s, d = q.shape
+    t = k.shape[0]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    if s % block_q != 0 or t % block_k != 0:
+        raise ValueError(f"shape ({s},{t}) not divisible by blocks ({block_q},{block_k})")
+    num_qb = s // block_q
+    num_kb = t // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, num_kb=num_kb, t_minus_s=t - s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(num_qb, num_kb),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), q.dtype),
+        scratch_shapes=[
+            # (BQ, 1) running max / denominator + (BQ, D) accumulator, VMEM
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def mha_flash(q, k, v, *, causal: bool = True, interpret: bool = True,
+              block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K):
+    """Multi-head prefill attention. q/k/v: (H, S|T, D) → (H, S, D)."""
+    fn = functools.partial(flash_attention, causal=causal, interpret=interpret,
+                           block_q=block_q, block_k=block_k)
+    return jax.vmap(fn)(q, k, v)

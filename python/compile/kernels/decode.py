@@ -1,0 +1,96 @@
+"""Pallas decode-step attention: one query token vs. a padded KV cache.
+
+Decode attention is bandwidth-bound (the paper's Fig. 2 asymmetry comes
+from exactly this: every generated token re-streams the whole KV cache).
+The kernel walks (head, cache_block) grid steps, streaming (BC, D) cache
+tiles HBM→VMEM and reducing with an online softmax held in VMEM scratch —
+the (C,)-sized logit row never materializes in HBM.
+
+The cache is padded to capacity C; `pos` (an int32 scalar, passed as a
+(1, 1) array so interpret mode is happy) marks how many entries are
+valid, *including* the current token's K/V already written at pos-1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import attention as _attn
+
+DEFAULT_BLOCK_C = 64
+NEG_INF = _attn.NEG_INF
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale, block_c, num_cb):
+    cb = pl.program_id(1)  # cache-block index; program_id(0) is the head
+
+    @pl.when(cb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0, 0]
+    q = q_ref[0].astype(jnp.float32)              # (1, D)
+    k = k_ref[0].astype(jnp.float32)              # (BC, D)
+    v = v_ref[0].astype(jnp.float32)              # (BC, D)
+
+    s = jnp.dot(q, k.T) * scale                   # (1, BC)
+    cpos = cb * block_c + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+    s = jnp.where(cpos < pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(cb == num_cb - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *,
+                     block_c: int = DEFAULT_BLOCK_C,
+                     interpret: bool = True):
+    """q: (H, D), k_cache/v_cache: (H, C, D), pos: int32 scalar → (H, D)."""
+    h, c, d = k_cache.shape
+    block_c = min(block_c, c)
+    if c % block_c != 0:
+        raise ValueError(f"cache capacity {c} not divisible by block {block_c}")
+    num_cb = c // block_c
+    scale = 1.0 / (d ** 0.5)
+
+    pos_arr = jnp.asarray(pos, dtype=jnp.int32).reshape(1, 1)
+    q2 = q.reshape(h, 1, d)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_c=block_c, num_cb=num_cb)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, num_cb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),        # pos (replicated)
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),  # q row for head i
+            pl.BlockSpec((1, block_c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q2, k_cache, v_cache)
+    return out.reshape(h, d)

@@ -1,0 +1,53 @@
+"""Pallas fused position-wise FFN: GELU(x @ W1 + b1) @ W2 + b2.
+
+Fusion keeps the (BS, F) intermediate in VMEM — on real hardware the
+(S, F) activation (4× the model width) never round-trips to HBM, which is
+the whole point of fusing the block. Grid walks S in (BS,)-row tiles;
+weights are small enough (D×F + F×D) to be resident per grid step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 32
+
+
+def _gelu(x):
+    c = jnp.sqrt(jnp.array(2.0 / jnp.pi, dtype=jnp.float32))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)            # (BS, D)
+    h = _gelu(jnp.dot(x, w1_ref[...].astype(jnp.float32))
+              + b1_ref[...].astype(jnp.float32))  # (BS, F) stays in VMEM
+    out = jnp.dot(h, w2_ref[...].astype(jnp.float32)) + b2_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def fused_ffn(x, w1, b1, w2, b2, *, block_s: int = DEFAULT_BLOCK_S,
+              interpret: bool = True):
+    """x: (S, D), w1: (D, F), b1: (F,), w2: (F, D), b2: (D,) → (S, D)."""
+    s, d = x.shape
+    f = w1.shape[1]
+    block_s = min(block_s, s)
+    if s % block_s != 0:
+        raise ValueError(f"seq len {s} not divisible by block {block_s}")
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(s // block_s,),
+        in_specs=[
+            pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_s, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)

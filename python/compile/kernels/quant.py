@@ -1,0 +1,68 @@
+"""Pallas weight-only int8 matmul kernel (dequantize-in-kernel).
+
+Serving-stack extension: the paper's related work (§7.1, LLM-PQ) serves
+heterogeneous clusters with adaptive quantization; the V100's OOMs in
+§5.3–5.4 are exactly what weight-only int8 fixes (7B fp16 = 13.4 GB →
+int8 = 6.7 GB, inside a 16 GB card with room for KV). This kernel is the
+compute primitive for that mode: weights stay int8 in HBM and are
+dequantized tile-by-tile in VMEM, halving the bandwidth per decode step.
+
+y = x @ (w_q.astype(f32) * scale[col])      x: (S, K) f32
+                                            w_q: (K, N) int8
+                                            scale: (N,) f32 per-channel
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_S = 32
+DEFAULT_BLOCK_N = 64
+
+
+def quantize_per_channel(w):
+    """fp32 (K, N) → (int8 (K, N), f32 scale (N,)) per output channel."""
+    absmax = jnp.max(jnp.abs(w), axis=0)                  # (N,)
+    scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    w_q = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
+    return w_q, scale.astype(jnp.float32)
+
+
+def _qmatmul_kernel(x_ref, wq_ref, scale_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (BS, K)
+    w = wq_ref[...].astype(jnp.float32) * scale_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = jnp.dot(x, w).astype(o_ref.dtype)        # (BS, BN)
+
+
+def quantized_matmul(x, w_q, scale, *, block_s: int = DEFAULT_BLOCK_S,
+                     block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """x: (S, K) f32, w_q: (K, N) int8, scale: (N,) f32 → (S, N) f32."""
+    s, k = x.shape
+    k2, n = w_q.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {k} vs {k2}")
+    block_s = min(block_s, s)
+    block_n = min(block_n, n)
+    if s % block_s != 0 or n % block_n != 0:
+        raise ValueError(f"shape ({s},{n}) not divisible by blocks ({block_s},{block_n})")
+
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel),
+        grid=(s // block_s, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_s, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_q, scale)
+
+
+def quantized_matmul_ref(x, w_q, scale):
+    """Oracle: dequantize fully, then matmul."""
+    w = w_q.astype(jnp.float32) * scale[None, :]
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,76 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here. pytest compares kernel vs. oracle across a hypothesis
+sweep of shapes/dtypes/seeds — this is the core L1 correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Plain softmax attention.
+
+    q: (S, D), k: (T, D), v: (T, D)  →  (S, D)
+    Causal masking assumes query position i attends to key positions
+    <= i + (T - S)  (i.e. q is the *suffix* of a length-T context).
+    """
+    s, d = q.shape
+    t = k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None] + (t - s)
+        kpos = jnp.arange(t)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return (w @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mha_ref(q, k, v, *, causal: bool = True):
+    """Multi-head attention over (H, S, D) tensors via vmap of attention_ref."""
+    return jax.vmap(lambda qq, kk, vv: attention_ref(qq, kk, vv, causal=causal))(q, k, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Single-token decode attention against a (padded) KV cache.
+
+    q: (H, D) one query token per head; k_cache/v_cache: (H, C, D) padded
+    to capacity C; pos: scalar int — number of valid cache entries
+    *including* the current token's K/V (already written at index pos-1).
+    Returns (H, D).
+    """
+    h, c, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.array(d, dtype=jnp.float32))
+    logits = jnp.einsum("hd,hcd->hc", q.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(c)[None, :] < pos
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hc,hcd->hd", w, v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches the kernel's polynomial)."""
+    xf = x.astype(jnp.float32)
+    c = jnp.sqrt(jnp.array(2.0 / jnp.pi, dtype=jnp.float32))
+    out = 0.5 * xf * (1.0 + jnp.tanh(c * (xf + 0.044715 * xf**3)))
+    return out.astype(x.dtype)
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Fused position-wise FFN: GELU(x @ w1 + b1) @ w2 + b2.
+
+    x: (S, D), w1: (D, F), w2: (F, D)  →  (S, D)
+    """
+    h = gelu_ref(x.astype(jnp.float32) @ w1.astype(jnp.float32) + b1.astype(jnp.float32))
+    out = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rmsnorm_ref(x, g, eps: float = 1e-5):
+    """RMSNorm over the last axis."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * g.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,230 @@
+"""L2: byte-level transformer LM (pure JAX, calling the L1 Pallas kernels).
+
+This is the model the rust coordinator actually *serves* end-to-end: a
+small GPT-style decoder with RoPE, RMSNorm, flash prefill attention, a
+Pallas decode-step attention against an explicit KV cache, and a fused
+Pallas FFN. Python never runs at request time — `aot.py` lowers
+``prefill`` (one HLO per sequence-length bucket) and ``decode_step`` (one
+HLO) to text that `rust/src/runtime` loads via PJRT.
+
+Everything is purely functional: the KV cache is an explicit input and
+output, so the rust side owns cache state between steps.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import decode as decode_k
+from .kernels import ffn as ffn_k
+from .kernels import ref as ref_k
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters for the served model."""
+    vocab: int = 256          # byte-level: token == byte; 0 doubles as BOS
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    cache_capacity: int = 512  # max context (prefill + generated)
+    prefill_buckets: tuple = (8, 16, 32, 64, 128, 256)
+    dtype: str = "float32"
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, l = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 2 * d * f + f + d + 2 * d  # qkvo + ffn + norms
+        return v * d + l * per_layer + d + v * d  # embed + layers + final norm + unembed
+
+
+# Deterministic parameter ordering: rust's artifact loader feeds literals
+# in exactly this sequence (see aot.py manifest).
+def param_names(cfg: ModelConfig) -> list[str]:
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"layer{i}.ln1", f"layer{i}.wq", f"layer{i}.wk", f"layer{i}.wv",
+            f"layer{i}.wo", f"layer{i}.ln2", f"layer{i}.w1", f"layer{i}.b1",
+            f"layer{i}.w2", f"layer{i}.b2",
+        ]
+    names += ["ln_f", "unembed"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple]:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    shapes = {"embed": (v, d), "ln_f": (d,), "unembed": (d, v)}
+    for i in range(cfg.n_layers):
+        shapes[f"layer{i}.ln1"] = (d,)
+        shapes[f"layer{i}.wq"] = (d, d)
+        shapes[f"layer{i}.wk"] = (d, d)
+        shapes[f"layer{i}.wv"] = (d, d)
+        shapes[f"layer{i}.wo"] = (d, d)
+        shapes[f"layer{i}.ln2"] = (d,)
+        shapes[f"layer{i}.w1"] = (d, f)
+        shapes[f"layer{i}.b1"] = (f,)
+        shapes[f"layer{i}.w2"] = (f, d)
+        shapes[f"layer{i}.b2"] = (d,)
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig) -> list[jnp.ndarray]:
+    """Scaled-normal init; returns params as a flat list in param_names order."""
+    shapes = param_shapes(cfg)
+    names = param_names(cfg)
+    keys = jax.random.split(key, len(names))
+    out = []
+    for k, name in zip(keys, names):
+        shape = shapes[name]
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b1", ".b2")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            out.append(jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in))
+    return out
+
+
+def _rope(x, positions):
+    """Rotary position embedding. x: (S, H, Dh), positions: (S,) int32."""
+    s, h, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (S, half)
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unpack(params: list, cfg: ModelConfig) -> dict[str, jnp.ndarray]:
+    return dict(zip(param_names(cfg), params))
+
+
+def prefill(params: list, tokens, cfg: ModelConfig, *, interpret: bool = True):
+    """Process a full prompt. tokens: (S,) int32.
+
+    Returns (logits_last (vocab,), k_cache, v_cache) with caches shaped
+    (L, H, C, Dh), the first S rows valid.
+    """
+    p = _unpack(params, cfg)
+    s = tokens.shape[0]
+    h, dh, c = cfg.n_heads, cfg.d_head, cfg.cache_capacity
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    x = p["embed"][tokens]                       # (S, D)
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        xn = ref_k.rmsnorm_ref(x, p[f"layer{i}.ln1"])
+        q = (xn @ p[f"layer{i}.wq"]).reshape(s, h, dh)
+        k = (xn @ p[f"layer{i}.wk"]).reshape(s, h, dh)
+        v = (xn @ p[f"layer{i}.wv"]).reshape(s, h, dh)
+        q = _rope(q, positions)
+        k = _rope(k, positions)
+        # L1 kernel: flash attention over (H, S, Dh)
+        o = attn_k.mha_flash(q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+                             v.transpose(1, 0, 2), causal=True,
+                             interpret=interpret)
+        o = o.transpose(1, 0, 2).reshape(s, cfg.d_model)
+        x = x + o @ p[f"layer{i}.wo"]
+        xn2 = ref_k.rmsnorm_ref(x, p[f"layer{i}.ln2"])
+        # L1 kernel: fused FFN
+        x = x + ffn_k.fused_ffn(xn2, p[f"layer{i}.w1"], p[f"layer{i}.b1"],
+                                p[f"layer{i}.w2"], p[f"layer{i}.b2"],
+                                interpret=interpret)
+        pad = [(0, 0), (0, c - s), (0, 0)]
+        k_caches.append(jnp.pad(k.transpose(1, 0, 2), pad))   # (H, C, Dh)
+        v_caches.append(jnp.pad(v.transpose(1, 0, 2), pad))
+
+    xf = ref_k.rmsnorm_ref(x, p["ln_f"])
+    logits = xf[-1] @ p["unembed"]               # only the last position's logits
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(params: list, k_cache, v_cache, pos, token, cfg: ModelConfig,
+                *, interpret: bool = True):
+    """One autoregressive step.
+
+    k_cache/v_cache: (L, H, C, Dh) with `pos` valid entries; `token` is the
+    token at position `pos` (int32 scalar). Returns
+    (logits (vocab,), new_k_cache, new_v_cache) with pos+1 valid entries.
+    """
+    p = _unpack(params, cfg)
+    h, dh = cfg.n_heads, cfg.d_head
+    pos = jnp.asarray(pos, jnp.int32)
+    position = pos.reshape(1)
+
+    x = p["embed"][token].reshape(1, cfg.d_model)
+    new_k, new_v = [], []
+    for i in range(cfg.n_layers):
+        xn = ref_k.rmsnorm_ref(x, p[f"layer{i}.ln1"])
+        q = (xn @ p[f"layer{i}.wq"]).reshape(1, h, dh)
+        k = (xn @ p[f"layer{i}.wk"]).reshape(1, h, dh)
+        v = (xn @ p[f"layer{i}.wv"]).reshape(1, h, dh)
+        q = _rope(q, position)[0]                # (H, Dh)
+        k = _rope(k, position)[0]
+        v = v[0]
+        # Write this token's K/V at index `pos` along the cache axis.
+        kc = jax.lax.dynamic_update_slice(k_cache[i], k[:, None, :], (0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[i], v[:, None, :], (0, pos, 0))
+        # L1 kernel: decode attention against pos+1 valid entries
+        o = decode_k.decode_attention(q, kc, vc, pos + 1, interpret=interpret)
+        x = x + o.reshape(1, cfg.d_model) @ p[f"layer{i}.wo"]
+        xn2 = ref_k.rmsnorm_ref(x, p[f"layer{i}.ln2"])
+        x = x + ffn_k.fused_ffn(xn2, p[f"layer{i}.w1"], p[f"layer{i}.b1"],
+                                p[f"layer{i}.w2"], p[f"layer{i}.b2"],
+                                block_s=1, interpret=interpret)
+        new_k.append(kc)
+        new_v.append(vc)
+
+    xf = ref_k.rmsnorm_ref(x, p["ln_f"])
+    logits = (xf @ p["unembed"]).reshape(-1)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill_ref(params, tokens, cfg: ModelConfig):
+    """Oracle: same network with pure-jnp attention/FFN (no Pallas)."""
+    p = _unpack(params, cfg)
+    s = tokens.shape[0]
+    h, dh, c = cfg.n_heads, cfg.d_head, cfg.cache_capacity
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = p["embed"][tokens]
+    k_caches, v_caches = [], []
+    for i in range(cfg.n_layers):
+        xn = ref_k.rmsnorm_ref(x, p[f"layer{i}.ln1"])
+        q = _rope((xn @ p[f"layer{i}.wq"]).reshape(s, h, dh), positions)
+        k = _rope((xn @ p[f"layer{i}.wk"]).reshape(s, h, dh), positions)
+        v = (xn @ p[f"layer{i}.wv"]).reshape(s, h, dh)
+        o = ref_k.mha_ref(q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+                          v.transpose(1, 0, 2), causal=True)
+        x = x + o.transpose(1, 0, 2).reshape(s, cfg.d_model) @ p[f"layer{i}.wo"]
+        xn2 = ref_k.rmsnorm_ref(x, p[f"layer{i}.ln2"])
+        x = x + ref_k.ffn_ref(xn2, p[f"layer{i}.w1"], p[f"layer{i}.b1"],
+                              p[f"layer{i}.w2"], p[f"layer{i}.b2"])
+        pad = [(0, 0), (0, c - s), (0, 0)]
+        k_caches.append(jnp.pad(k.transpose(1, 0, 2), pad))
+        v_caches.append(jnp.pad(v.transpose(1, 0, 2), pad))
+    xf = ref_k.rmsnorm_ref(x, p["ln_f"])
+    return xf[-1] @ p["unembed"], jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def generate_ref(params, prompt, n_out, cfg: ModelConfig):
+    """Pure-python greedy generation loop (slow; test oracle only)."""
+    logits, kc, vc = prefill(params, prompt, cfg)
+    pos = prompt.shape[0]
+    out = []
+    for _ in range(n_out):
+        tok = jnp.argmax(logits).astype(jnp.int32)
+        out.append(int(tok))
+        logits, kc, vc = decode_step(params, kc, vc, pos, tok, cfg)
+        pos += 1
+    return out

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

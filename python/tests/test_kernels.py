@@ -1,0 +1,173 @@
+"""L1 correctness: every Pallas kernel vs. its pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes/seeds; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, decode, ffn, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s_blocks=st.integers(1, 4),
+    k_extra_blocks=st.integers(0, 3),
+    d=st.sampled_from([8, 16, 32, 64]),
+    block=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_flash_attention_matches_ref(seed, s_blocks, k_extra_blocks, d, block, causal):
+    s = s_blocks * block
+    t = s + k_extra_blocks * block
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(keys[0], (s, d), jnp.float32)
+    k = _rand(keys[1], (t, d), jnp.float32)
+    v = _rand(keys[2], (t, d), jnp.float32)
+    got = attention.flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(1, 4),
+    s=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 32]),
+)
+def test_mha_flash_matches_ref(seed, h, s, d):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(keys[0], (h, s, d), jnp.float32)
+    k = _rand(keys[1], (h, s, d), jnp.float32)
+    v = _rand(keys[2], (h, s, d), jnp.float32)
+    got = attention.mha_flash(q, k, v)
+    want = ref.mha_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_extreme_logits_no_nan():
+    # online softmax must stay finite for large-magnitude inputs
+    q = jnp.full((32, 16), 30.0)
+    k = jnp.full((32, 16), 30.0)
+    v = jnp.ones((32, 16))
+    out = attention.flash_attention(q, k, v, causal=True)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_flash_attention_rejects_bad_blocks():
+    q = jnp.zeros((10, 8))
+    with pytest.raises(ValueError):
+        attention.flash_attention(q, q, q, block_q=4, block_k=4)
+
+
+def test_flash_attention_first_row_attends_self_only():
+    # causal: row 0 (with S == T) sees only key 0 → output == v[0]
+    key = jax.random.PRNGKey(1)
+    q, k, v = (_rand(kk, (32, 16), jnp.float32) for kk in jax.random.split(key, 3))
+    out = attention.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- decode
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(1, 4),
+    c=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([16, 32]),
+    block_c=st.sampled_from([32, 64]),
+    pos_frac=st.floats(0.01, 1.0),
+)
+def test_decode_attention_matches_ref(seed, h, c, d, block_c, pos_frac):
+    pos = max(1, int(c * pos_frac))
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(keys[0], (h, d), jnp.float32)
+    kc = _rand(keys[1], (h, c, d), jnp.float32)
+    vc = _rand(keys[2], (h, c, d), jnp.float32)
+    got = decode.decode_attention(q, kc, vc, pos, block_c=block_c)
+    want = ref.decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_pos1_returns_v0():
+    # with a single valid cache entry, attention output == v[:, 0, :]
+    key = jax.random.PRNGKey(7)
+    q = _rand(key, (2, 16), jnp.float32)
+    kc = _rand(key, (2, 64, 16), jnp.float32)
+    vc = _rand(key, (2, 64, 16), jnp.float32)
+    out = decode.decode_attention(q, kc, vc, 1)
+    np.testing.assert_allclose(out, vc[:, 0, :], rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_padding():
+    # garbage beyond pos must not change the result
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 3)
+    q = _rand(ks[0], (2, 16), jnp.float32)
+    kc = _rand(ks[1], (2, 64, 16), jnp.float32)
+    vc = _rand(ks[2], (2, 64, 16), jnp.float32)
+    pos = 17
+    base = decode.decode_attention(q, kc, vc, pos)
+    kc2 = kc.at[:, pos:, :].set(1e6)
+    vc2 = vc.at[:, pos:, :].set(-1e6)
+    got = decode.decode_attention(q, kc2, vc2, pos)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- ffn
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([16, 32, 64]),
+    f_mult=st.sampled_from([2, 4]),
+    block_s=st.sampled_from([8, 16, 32]),
+)
+def test_fused_ffn_matches_ref(seed, s, d, f_mult, block_s):
+    if s % min(block_s, s) != 0:
+        return
+    f = d * f_mult
+    keys = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = _rand(keys[0], (s, d), jnp.float32)
+    w1 = _rand(keys[1], (d, f), jnp.float32, 0.3)
+    b1 = _rand(keys[2], (f,), jnp.float32, 0.3)
+    w2 = _rand(keys[3], (f, d), jnp.float32, 0.3)
+    b2 = _rand(keys[4], (d,), jnp.float32, 0.3)
+    got = ffn.fused_ffn(x, w1, b1, w2, b2, block_s=block_s)
+    want = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_ffn_block_s_one():
+    # decode path uses block_s=1
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    x = _rand(ks[0], (1, 32), jnp.float32)
+    w1, b1 = _rand(ks[1], (32, 64), jnp.float32, .3), _rand(ks[2], (64,), jnp.float32, .3)
+    w2, b2 = _rand(ks[3], (64, 32), jnp.float32, .3), _rand(ks[4], (32,), jnp.float32, .3)
+    got = ffn.fused_ffn(x, w1, b1, w2, b2, block_s=1)
+    np.testing.assert_allclose(got, ref.ffn_ref(x, w1, b1, w2, b2), rtol=2e-4, atol=2e-4)
+
+
+def test_gelu_ref_known_values():
+    np.testing.assert_allclose(ref.gelu_ref(jnp.zeros(4)), np.zeros(4), atol=1e-7)
+    # GELU(x) -> x for large x, -> 0 for very negative x
+    np.testing.assert_allclose(ref.gelu_ref(jnp.array([10.0])), [10.0], rtol=1e-4)
+    np.testing.assert_allclose(ref.gelu_ref(jnp.array([-10.0])), [0.0], atol=1e-4)

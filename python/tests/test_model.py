@@ -1,0 +1,118 @@
+"""L2 correctness: model invariants (kernel path vs pure-jnp oracle,
+decode/prefill consistency, causality, cache semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(d_model=64, n_layers=2, n_heads=4, d_ff=128,
+                    cache_capacity=64, prefill_buckets=(8, 16))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _toks(n, seed=0):
+    return ((jnp.arange(n) * 37 + 11 + seed) % CFG.vocab).astype(jnp.int32)
+
+
+def test_param_count_matches_shapes():
+    shapes = M.param_shapes(CFG)
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert total == CFG.param_count()
+
+
+def test_param_names_unique_and_cover_shapes():
+    names = M.param_names(CFG)
+    assert len(names) == len(set(names))
+    assert set(names) == set(M.param_shapes(CFG).keys())
+
+
+def test_prefill_kernel_path_matches_ref(params):
+    toks = _toks(16)
+    lg, kc, vc = M.prefill(params, toks, CFG)
+    lg2, kc2, vc2 = M.prefill_ref(params, toks, CFG)
+    np.testing.assert_allclose(lg, lg2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(kc, kc2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(vc, vc2, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_cache_padding_is_zero(params):
+    toks = _toks(8)
+    _, kc, vc = M.prefill(params, toks, CFG)
+    assert kc.shape == (CFG.n_layers, CFG.n_heads, CFG.cache_capacity, CFG.d_head)
+    np.testing.assert_array_equal(np.asarray(kc[:, :, 8:, :]), 0.0)
+    np.testing.assert_array_equal(np.asarray(vc[:, :, 8:, :]), 0.0)
+
+
+def test_decode_consistent_with_prefill(params):
+    """decode_step after prefill(S) must equal prefill(S+1)'s last logits."""
+    toks = _toks(8)
+    lg, kc, vc = M.prefill(params, toks, CFG)
+    nxt = jnp.int32(42)
+    lg_d, kc_d, vc_d = M.decode_step(params, kc, vc, 8, nxt, CFG)
+    lg_p, kc_p, vc_p = M.prefill_ref(params, jnp.concatenate([toks, nxt[None]]), CFG)
+    np.testing.assert_allclose(lg_d, lg_p, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(kc_d[:, :, :9], kc_p[:, :, :9], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(vc_d[:, :, :9], vc_p[:, :, :9], rtol=1e-3, atol=1e-3)
+
+
+def test_decode_chain_matches_full_prefill(params):
+    """3 chained decode steps == prefill over the extended sequence."""
+    toks = _toks(8, seed=3)
+    _, kc, vc = M.prefill(params, toks, CFG)
+    extra = [5, 200, 133]
+    pos = 8
+    for t in extra:
+        lg, kc, vc = M.decode_step(params, kc, vc, pos, jnp.int32(t), CFG)
+        pos += 1
+    full = jnp.concatenate([toks, jnp.array(extra, jnp.int32)])
+    lg_full, _, _ = M.prefill_ref(params, full, CFG)
+    np.testing.assert_allclose(lg, lg_full, rtol=1e-3, atol=1e-3)
+
+
+def test_causality(params):
+    """Changing a later token must not affect an earlier prefix's cache."""
+    t1 = _toks(16)
+    t2 = t1.at[12].set((int(t1[12]) + 7) % 256)
+    _, k1, _ = M.prefill(params, t1, CFG)
+    _, k2, _ = M.prefill(params, t2, CFG)
+    np.testing.assert_allclose(k1[:, :, :12], k2[:, :, :12], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(k1[:, :, 12], k2[:, :, 12])
+
+
+def test_logits_finite(params):
+    lg, _, _ = M.prefill(params, _toks(16), CFG)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    assert lg.shape == (CFG.vocab,)
+
+
+def test_generate_ref_deterministic(params):
+    out1 = M.generate_ref(params, _toks(8), 4, CFG)
+    out2 = M.generate_ref(params, _toks(8), 4, CFG)
+    assert out1 == out2
+    assert all(0 <= t < CFG.vocab for t in out1)
+
+
+def test_rope_position_dependence():
+    x = jnp.ones((4, 2, 8))
+    p0 = M._rope(x, jnp.array([0, 0, 0, 0], jnp.int32))
+    p1 = M._rope(x, jnp.array([0, 1, 2, 3], jnp.int32))
+    np.testing.assert_allclose(p0[0], p1[0], atol=1e-6)
+    assert not np.allclose(p0[1], p1[1])
+
+
+def test_rope_norm_preserving():
+    # rotations preserve the per-pair L2 norm
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (6, 3, 16))
+    y = M._rope(x, jnp.arange(6, dtype=jnp.int32))
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1),
+                               rtol=1e-5, atol=1e-5)

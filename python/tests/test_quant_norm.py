@@ -1,0 +1,107 @@
+"""Extension kernels: weight-only int8 matmul + RMSNorm vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import norm, quant, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# --------------------------------------------------------------- quantize
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.sampled_from([16, 32, 64]),
+    n=st.sampled_from([64, 128]),
+)
+def test_quantize_round_trip_error_bounded(seed, k, n):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (k, n), jnp.float32)
+    w_q, scale = quant.quantize_per_channel(w)
+    assert w_q.dtype == jnp.int8
+    deq = w_q.astype(jnp.float32) * scale[None, :]
+    # per-channel absmax quantization: error ≤ scale/2 per element
+    err = jnp.abs(deq - w)
+    assert bool(jnp.all(err <= scale[None, :] * 0.5 + 1e-6))
+
+
+def test_quantize_zero_column_safe():
+    w = jnp.zeros((8, 4))
+    w_q, scale = quant.quantize_per_channel(w)
+    np.testing.assert_array_equal(np.asarray(w_q), 0)
+    assert bool(jnp.all(scale > 0))  # no div-by-zero scales
+
+
+# ---------------------------------------------------------------- qmatmul
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.sampled_from([8, 32, 64]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([64, 128]),
+    block_s=st.sampled_from([8, 32]),
+    block_n=st.sampled_from([32, 64]),
+)
+def test_quantized_matmul_matches_ref(seed, s, k, n, block_s, block_n):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(keys[0], (s, k), jnp.float32)
+    w = jax.random.normal(keys[1], (k, n), jnp.float32)
+    w_q, scale = quant.quantize_per_channel(w)
+    got = quant.quantized_matmul(x, w_q, scale, block_s=block_s, block_n=block_n)
+    want = quant.quantized_matmul_ref(x, w_q, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_matmul_close_to_fp32():
+    # end-to-end quantization error vs the unquantized matmul stays small
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(keys[0], (32, 64), jnp.float32)
+    w = jax.random.normal(keys[1], (64, 128), jnp.float32)
+    w_q, scale = quant.quantize_per_channel(w)
+    got = quant.quantized_matmul(x, w_q, scale)
+    exact = x @ w
+    rel = float(jnp.linalg.norm(got - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.01, f"int8 relative error {rel}"
+
+
+def test_quantized_matmul_rejects_mismatch():
+    import pytest
+    x = jnp.zeros((8, 16))
+    w_q = jnp.zeros((32, 64), jnp.int8)
+    with pytest.raises(ValueError):
+        quant.quantized_matmul(x, w_q, jnp.ones((64,)))
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([16, 64, 128]),
+    block_s=st.sampled_from([8, 16, 32]),
+)
+def test_rmsnorm_matches_ref(seed, s, d, block_s):
+    if s % min(block_s, s) != 0:
+        return
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(keys[0], (s, d), jnp.float32) * 3.0
+    g = jax.random.normal(keys[1], (d,), jnp.float32)
+    got = norm.rmsnorm(x, g, block_s=block_s)
+    want = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_unit_output_scale():
+    # with g = 1, output rows have RMS ≈ 1
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 256), jnp.float32) * 10.0
+    out = norm.rmsnorm(x, jnp.ones(256))
+    rms = jnp.sqrt(jnp.mean(out * out, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)

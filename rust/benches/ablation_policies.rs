@@ -1,0 +1,96 @@
+//! Ablation bench (DESIGN.md §8): how much of the headline saving does
+//! each design ingredient contribute? Compares, on the same Eq. 9
+//! workload:
+//!   - fixed threshold at the paper's T = 32
+//!   - fixed threshold at the *offline-optimal* T
+//!   - online adaptive threshold (no offline analysis needed)
+//!   - per-query cost argmin (λ = 1) — the full Eq. 1 machinery
+//!   - the oracle (identical to cost for batch; sanity rail)
+
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::model::find_llm;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::adaptive::AdaptiveThresholdPolicy;
+use hetsched::sched::cost::CostPolicy;
+use hetsched::sched::oracle::oracle_assign;
+use hetsched::sched::policy::{ClusterView, Policy};
+use hetsched::sched::threshold::ThresholdPolicy;
+use hetsched::util::benchkit::bench_header;
+use hetsched::util::tablefmt::{fmt_joules, Align, Table};
+use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
+use hetsched::workload::Query;
+
+fn total_energy(policy: &mut dyn Policy, queries: &[Query], energy: &EnergyModel) -> f64 {
+    let systems = system_catalog();
+    let depths = vec![0.0; systems.len()];
+    let lens = vec![0usize; systems.len()];
+    queries
+        .iter()
+        .map(|q| {
+            let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+            let sid = policy.assign(q, &view);
+            energy.energy(&systems[sid.0], q.input_tokens, q.output_tokens)
+        })
+        .sum()
+}
+
+fn main() {
+    bench_header("Ablation — which ingredient buys the saving?");
+    let systems = system_catalog();
+    let energy = EnergyModel::new(PerfModel::new(find_llm("Llama-2-7B").unwrap()));
+    let queries: Vec<Query> = AlpacaModel::default()
+        .trace(2024, ALPACA_SIZE)
+        .iter()
+        .map(|q| Query::new(q.id, q.input_tokens, 32))
+        .collect();
+
+    let baseline: f64 = queries
+        .iter()
+        .map(|q| energy.energy(&systems[1], q.input_tokens, q.output_tokens))
+        .sum();
+
+    // offline-optimal fixed threshold
+    let grid = hetsched::experiments::sweeps::input_thresholds();
+    let curve = hetsched::experiments::sweeps::threshold_sweep(
+        &queries, &energy, &systems[0], &systems[1], &grid, true,
+    );
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut t32 = ThresholdPolicy::new(32, 32, SystemId::M1_PRO, SystemId::SWING_A100, energy.clone());
+    rows.push(("fixed threshold T=32 (paper)".into(), total_energy(&mut t32, &queries, &energy)));
+    let mut topt = ThresholdPolicy::new(
+        curve.best_threshold, u32::MAX, SystemId::M1_PRO, SystemId::SWING_A100, energy.clone(),
+    );
+    rows.push((format!("fixed threshold T={} (offline opt)", curve.best_threshold),
+               total_energy(&mut topt, &queries, &energy)));
+    let mut adaptive = AdaptiveThresholdPolicy::new(8, SystemId::M1_PRO, SystemId::SWING_A100, energy.clone());
+    rows.push(("adaptive threshold (online, from T=8)".into(), total_energy(&mut adaptive, &queries, &energy)));
+    let mut cost = CostPolicy::new(1.0, energy.clone());
+    rows.push(("cost argmin λ=1 (Eq. 1)".into(), total_energy(&mut cost, &queries, &energy)));
+    let (oracle_assignments, _) = oracle_assign(&queries, &systems, &energy, 1.0);
+    let oracle_e: f64 = queries
+        .iter()
+        .zip(&oracle_assignments)
+        .map(|(q, s)| energy.energy(&systems[s.0], q.input_tokens, q.output_tokens))
+        .sum();
+    rows.push(("oracle (per-query optimum)".into(), oracle_e));
+
+    let mut t = Table::new(&["policy", "energy", "saving vs all-A100"]).align(0, Align::Left);
+    t.row(&["all-A100 baseline".into(), fmt_joules(baseline), "—".into()]);
+    for (name, e) in &rows {
+        t.row(&[name.clone(), fmt_joules(*e), format!("{:+.2}%", (1.0 - e / baseline) * 100.0)]);
+    }
+    print!("{}", t.ascii());
+
+    // sanity rails
+    let t32_e = rows[0].1;
+    let topt_e = rows[1].1;
+    let cost_e = rows[3].1;
+    assert!(topt_e <= t32_e, "offline-optimal T must beat T=32");
+    assert!(cost_e <= topt_e * 1.0001, "cost argmin must match/beat any fixed threshold");
+    assert!((oracle_e - cost_e).abs() / oracle_e < 1e-9, "oracle == cost(λ=1) in batch");
+    let adaptive_e = rows[2].1;
+    assert!(adaptive_e <= baseline, "adaptive must at least not lose vs baseline");
+    println!("\nordering checks ✓ (oracle == cost ≤ fixed-opt ≤ fixed-32; adaptive converges between)");
+}

@@ -1,0 +1,71 @@
+//! Bench: regenerate **Figure 2** — runtime (a), throughput (b), and
+//! energy-per-token (c) vs. *output* tokens (n ∈ 8..4096, m = 32), with
+//! the paper's OOM/limit gaps (missing data points in Fig. 2).
+
+use hetsched::experiments::output_sweep;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::llm_catalog;
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+use hetsched::util::tablefmt::{fmt_secs, Align, Table};
+
+fn main() {
+    bench_header("Figure 2 — output-token sweep (m = 32)");
+    let rows = output_sweep(&llm_catalog(), &system_catalog());
+
+    for model in ["Falcon-7B", "Llama-2-7B", "Mistral-7B"] {
+        println!("\n--- {model} ---");
+        let mut t = Table::new(&["n", "R (2a)", "tok/s (2b)", "J/token (2c)", "system"])
+            .align(4, Align::Left);
+        for r in rows.iter().filter(|r| r.model == model) {
+            if let Some(reason) = r.skipped {
+                t.row(&[r.tokens.to_string(), reason.into(), "-".into(), "-".into(), r.system.clone()]);
+            } else {
+                t.row(&[
+                    r.tokens.to_string(),
+                    fmt_secs(r.runtime_s),
+                    format!("{:.1}", r.throughput_tok_s),
+                    format!("{:.2}", r.energy_per_token_j),
+                    r.system.clone(),
+                ]);
+            }
+        }
+        print!("{}", t.ascii());
+    }
+
+    // ---- shape + gap assertions -----------------------------------------
+    let get = |model: &str, sys: &str, n: u32| {
+        rows.iter()
+            .find(|r| r.model == model && r.system == sys && r.tokens == n)
+            .unwrap()
+    };
+    // (2a/§5.5) output growth dominates input growth (vs fig1 at same token count)
+    // (2b) throughput declines with n on every feasible system
+    for sys in ["M1-Pro", "Swing-A100", "Palmetto-V100"] {
+        let hi = get("Llama-2-7B", sys, 64).throughput_tok_s;
+        let lo = get("Llama-2-7B", sys, 512).throughput_tok_s;
+        assert!(lo < hi, "{sys}: throughput must decline");
+    }
+    // (2c) energy/token rises with n
+    assert!(
+        get("Llama-2-7B", "Swing-A100", 4096).energy_per_token_j
+            > get("Llama-2-7B", "Swing-A100", 64).energy_per_token_j
+    );
+    // the paper's exact gaps: V100+Falcon OOM > 1024; V100 all > 2048;
+    // M1 > 512; Falcon absent on M1 entirely
+    assert_eq!(get("Falcon-7B", "Palmetto-V100", 2048).skipped, Some("OOM"));
+    assert!(get("Falcon-7B", "Palmetto-V100", 1024).skipped.is_none());
+    assert_eq!(get("Llama-2-7B", "Palmetto-V100", 4096).skipped, Some("OOM"));
+    assert_eq!(get("Llama-2-7B", "M1-Pro", 1024).skipped, Some("ctx-limit"));
+    assert!(rows
+        .iter()
+        .filter(|r| r.model == "Falcon-7B" && r.system == "M1-Pro")
+        .all(|r| r.skipped.is_some()));
+    println!("\nshape checks vs paper Fig 2 ✓ (decline, rise, OOM gaps match §5.4)");
+
+    let models = llm_catalog();
+    let systems = system_catalog();
+    let r = Bench::quick().run("full fig2 sweep", (3 * 3 * 10) as u64, || {
+        black_box(output_sweep(&models, &systems));
+    });
+    println!("{}", r.line());
+}

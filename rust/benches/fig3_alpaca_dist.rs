@@ -1,0 +1,42 @@
+//! Bench: regenerate **Figure 3** — the Alpaca input/output token-count
+//! distributions that drive Eq. 9/10 (52K queries).
+
+use hetsched::experiments::fig3_alpaca;
+use hetsched::experiments::figures::render_histogram;
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
+
+fn main() {
+    bench_header("Figure 3 — Alpaca token-count distributions");
+    let trace = AlpacaModel::default().trace(2024, ALPACA_SIZE);
+    let f = fig3_alpaca(&trace);
+
+    println!("{}", render_histogram(&f.input_hist, "Fig 3(a): input tokens"));
+    println!(
+        "  median={:.0}  mean={:.1}  p90={:.0}  p99={:.0}  max={}\n",
+        f.input_summary.median, f.input_summary.mean, f.input_summary.p90,
+        f.input_summary.p99, f.input_summary.max
+    );
+    println!("{}", render_histogram(&f.output_hist, "Fig 3(b): output tokens"));
+    println!(
+        "  median={:.0}  mean={:.1}  p90={:.0}  p99={:.0}  max={}",
+        f.output_summary.median, f.output_summary.mean, f.output_summary.p90,
+        f.output_summary.p99, f.output_summary.max
+    );
+
+    // shape checks: right-skewed input dist centred in the tens of
+    // tokens; broader output dist shifted right — the premise that makes
+    // T = 32 interesting at all
+    assert!(f.input_summary.median < f.output_summary.median);
+    assert!(f.input_summary.mean > f.input_summary.median, "right skew");
+    let below_t32 = trace.iter().filter(|q| q.input_tokens <= 32).count() as f64 / trace.len() as f64;
+    println!("\nfraction of queries with m ≤ 32: {:.1}% (the mass the hybrid routes to the M1)", below_t32 * 100.0);
+    assert!((0.4..0.9).contains(&below_t32));
+    println!("shape checks vs paper Fig 3 ✓");
+
+    let model = AlpacaModel::default();
+    let r = Bench::quick().run("sample 52K-query trace", ALPACA_SIZE as u64, || {
+        black_box(model.trace(1, ALPACA_SIZE));
+    });
+    println!("{}", r.line());
+}

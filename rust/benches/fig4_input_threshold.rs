@@ -1,0 +1,63 @@
+//! Bench: regenerate **Figure 4** — hybrid datacenter energy (4a) and
+//! runtime (4b) vs. input-token threshold T_in on Alpaca (Eq. 9), with
+//! the single-hardware dashed lines.
+
+use hetsched::experiments::sweeps::{input_thresholds, threshold_sweep};
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::model::find_llm;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Table};
+use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
+use hetsched::workload::Query;
+
+fn main() {
+    bench_header("Figure 4 — input-threshold sweep (Eq. 9, Alpaca, n = 32)");
+    let systems = system_catalog();
+    let m1 = &systems[SystemId::M1_PRO.0];
+    let a100 = &systems[SystemId::SWING_A100.0];
+    let energy = EnergyModel::new(PerfModel::new(find_llm("Llama-2-7B").unwrap()));
+    let queries: Vec<Query> = AlpacaModel::default()
+        .trace(2024, ALPACA_SIZE)
+        .iter()
+        .map(|q| Query::new(q.id, q.input_tokens, 32))
+        .collect();
+
+    let grid = input_thresholds();
+    let c = threshold_sweep(&queries, &energy, m1, a100, &grid, true);
+
+    let mut t = Table::new(&["T_in", "energy (4a)", "runtime (4b)", "vs all-A100"]);
+    for ((&th, &e), &r) in c.thresholds.iter().zip(&c.hybrid_energy_j).zip(&c.hybrid_runtime_s) {
+        t.row(&[
+            th.to_string(),
+            fmt_joules(e),
+            fmt_secs(r),
+            format!("{:+.2}%", (1.0 - e / c.all_big_energy_j) * 100.0),
+        ]);
+    }
+    print!("{}", t.ascii());
+    println!(
+        "dashed: all-M1 {} / {}    all-A100 {} / {}",
+        fmt_joules(c.all_small_energy_j), fmt_secs(c.all_small_runtime_s),
+        fmt_joules(c.all_big_energy_j), fmt_secs(c.all_big_runtime_s)
+    );
+    println!(
+        "optimum T_in = {} → {} ({:+.2}% vs all-A100)   [paper: T_in = 32]",
+        c.best_threshold, fmt_joules(c.best_energy_j),
+        (1.0 - c.best_energy_j / c.all_big_energy_j) * 100.0
+    );
+
+    // shape checks: U-curve dipping below both dashed lines, optimum in
+    // the tens of tokens, runtime monotone cost (4b trade-off)
+    assert!(c.best_energy_j < c.all_big_energy_j && c.best_energy_j < c.all_small_energy_j);
+    assert!((16..=64).contains(&c.best_threshold), "optimum {}", c.best_threshold);
+    let i32_idx = grid.iter().position(|&t| t == 32).unwrap();
+    assert!(c.hybrid_runtime_s[i32_idx] > c.all_big_runtime_s, "energy saving must cost runtime");
+    println!("shape checks vs paper Fig 4 ✓");
+
+    let r = Bench::quick().run("52K-query × 16-threshold sweep", (queries.len() * grid.len()) as u64, || {
+        black_box(threshold_sweep(&queries, &energy, m1, a100, &grid, true));
+    });
+    println!("{}", r.line());
+}

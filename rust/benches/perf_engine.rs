@@ -1,0 +1,48 @@
+//! §Perf bench: the real PJRT inference engine (L1/L2 artifacts driven
+//! from rust). Reports prefill latency per bucket and decode tokens/s —
+//! the numbers EXPERIMENTS.md §Perf tracks across optimization rounds.
+//! Requires `make artifacts`; self-skips otherwise.
+
+use hetsched::runtime::artifacts::ArtifactBundle;
+use hetsched::runtime::client::Runtime;
+use hetsched::runtime::engine::{InferenceEngine, SamplingParams};
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+use hetsched::util::tablefmt::fmt_secs;
+use std::path::Path;
+
+fn main() {
+    bench_header("§Perf — PJRT inference engine (real artifacts)");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first (skipping)");
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let t0 = std::time::Instant::now();
+    let bundle = ArtifactBundle::load(&rt, &dir).expect("bundle");
+    println!("bundle load+compile: {}", fmt_secs(t0.elapsed().as_secs_f64()));
+    let engine = InferenceEngine::new(bundle);
+    let buckets = engine.manifest().prefill_buckets.clone();
+
+    let bench = Bench { warmup: 1, min_samples: 5, max_samples: 15, rel_ci_target: 0.05, budget_s: 20.0 };
+
+    // prefill latency per bucket
+    for &b in &buckets {
+        let prompt: Vec<i32> = (0..b as i32).map(|i| (i % 250) + 1).collect();
+        let r = bench.run(&format!("prefill bucket {b}"), b as u64, || {
+            black_box(engine.generate(&prompt, 0, SamplingParams::default()).unwrap());
+        });
+        println!("{}", r.line());
+    }
+
+    // decode throughput at small and large contexts
+    for (label, prompt_len, gen) in [("decode (short ctx)", 8usize, 64u32), ("decode (long ctx)", 256, 64)] {
+        let prompt: Vec<i32> = (0..prompt_len as i32).map(|i| (i % 250) + 1).collect();
+        let r = bench.run(label, gen as u64, || {
+            black_box(engine.generate(&prompt, gen, SamplingParams::default()).unwrap());
+        });
+        println!("{}  ({:.1} tok/s)", r.line(), r.throughput());
+    }
+
+    println!("\n(structure targets for L1 live in perf::roofline tests: VMEM fit + MXU estimate)");
+}

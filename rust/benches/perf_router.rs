@@ -1,0 +1,55 @@
+//! §Perf bench: the L3 routing hot path. Target (DESIGN.md §7): ≥1 M
+//! policy decisions/s single-thread — the coordinator must never be the
+//! bottleneck against ms-scale inference service times.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::find_llm;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::policy::{build_policy, ClusterView};
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+use hetsched::workload::alpaca::AlpacaModel;
+
+fn main() {
+    bench_header("§Perf — router hot path (policy decisions/s)");
+    let systems = system_catalog();
+    let energy = EnergyModel::new(PerfModel::new(find_llm("Llama-2-7B").unwrap()));
+    let queries = AlpacaModel::default().trace(7, 100_000);
+    let depths = vec![0.0f64; systems.len()];
+    let lens = vec![0usize; systems.len()];
+
+    let configs = [
+        PolicyConfig::Threshold { t_in: 32, t_out: 32, small: "M1-Pro".into(), big: "Swing-A100".into() },
+        PolicyConfig::Cost { lambda: 1.0 },
+        PolicyConfig::RoundRobin,
+        PolicyConfig::JoinShortestQueue,
+    ];
+
+    let bench = Bench::default();
+    let mut reports = Vec::new();
+    for cfg in &configs {
+        let mut policy = build_policy(cfg, energy.clone(), &systems);
+        let r = bench.run(&format!("assign × 100K [{}]", policy.name()), queries.len() as u64, || {
+            let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+            for q in &queries {
+                black_box(policy.assign(q, &view));
+            }
+        });
+        println!("{}", r.line());
+        reports.push((policy.name(), r));
+    }
+
+    println!();
+    let mut all_ok = true;
+    for (name, r) in &reports {
+        let dps = r.throughput();
+        let ok = dps >= 1.0e6;
+        all_ok &= ok;
+        println!(
+            "{name:<40} {dps:>12.0} decisions/s   target ≥ 1M: {}",
+            if ok { "HIT ✓" } else { "MISS ✗" }
+        );
+    }
+    assert!(all_ok, "router hot-path target missed — see EXPERIMENTS.md §Perf");
+}

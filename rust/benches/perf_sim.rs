@@ -1,0 +1,50 @@
+//! §Perf bench: the discrete-event simulation engine. Target (DESIGN.md
+//! §7): ≥5 M query-events/s so 52K-query × 64-threshold studies run in
+//! seconds — plus the threshold-sweep evaluator throughput.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::experiments::sweeps::{input_thresholds, threshold_sweep};
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::model::find_llm;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::policy::build_policy;
+use hetsched::sim::engine::{simulate, SimOptions};
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+use hetsched::workload::alpaca::AlpacaModel;
+use hetsched::workload::Query;
+
+fn main() {
+    bench_header("§Perf — simulation engine (query-events/s)");
+    let systems = system_catalog();
+    let energy = EnergyModel::new(PerfModel::new(find_llm("Llama-2-7B").unwrap()));
+    let queries = AlpacaModel::default().trace(9, 100_000);
+
+    let bench = Bench::default();
+    let cfg = PolicyConfig::Threshold { t_in: 32, t_out: 32, small: "M1-Pro".into(), big: "Swing-A100".into() };
+    let r = bench.run("simulate 100K Alpaca queries", queries.len() as u64, || {
+        let mut p = build_policy(&cfg, energy.clone(), &systems);
+        black_box(simulate(&queries, &systems, p.as_mut(), &energy, &SimOptions::default()));
+    });
+    println!("{}", r.line());
+    let qps = r.throughput();
+    println!("simulation rate: {qps:.0} queries/s");
+
+    // threshold-sweep evaluator (the Fig 4/5 inner loop)
+    let q_in: Vec<Query> = queries.iter().take(52_002).map(|q| Query::new(q.id, q.input_tokens, 32)).collect();
+    let grid = input_thresholds();
+    let m1 = systems[SystemId::M1_PRO.0].clone();
+    let a100 = systems[SystemId::SWING_A100.0].clone();
+    let r2 = bench.run(
+        "threshold sweep 52K × 16",
+        (q_in.len() * grid.len()) as u64,
+        || {
+            black_box(threshold_sweep(&q_in, &energy, &m1, &a100, &grid, true));
+        },
+    );
+    println!("{}", r2.line());
+
+    let evals = r2.throughput();
+    println!("\nquery-evaluations/s: sim {qps:.0} | sweep {evals:.0}   target ≥ 5M evals/s: {}",
+        if evals >= 5.0e6 { "HIT ✓" } else { "MISS ✗ (see EXPERIMENTS.md §Perf)" });
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate **Table 1** (system configurations) from the
+//! catalog the experiments actually use, and time catalog construction.
+
+use hetsched::experiments::table1;
+use hetsched::hw::catalog::{extended_catalog, system_catalog};
+use hetsched::util::benchkit::{bench_header, black_box, Bench};
+
+fn main() {
+    bench_header("Table 1 — system configurations");
+    println!("{}", table1(&system_catalog()).ascii());
+    println!("extension systems (not in the paper):");
+    println!("{}", table1(&extended_catalog()[3..]).ascii());
+
+    for s in extended_catalog() {
+        s.validate().expect("catalog spec invalid");
+    }
+    println!("all specs validate ✓");
+
+    let r = Bench::quick().run("system_catalog()", 1, || {
+        black_box(system_catalog());
+    });
+    println!("{}", r.line());
+}

@@ -1,0 +1,8 @@
+//! Configuration system: a TOML-subset parser plus typed schemas for
+//! cluster, policy, workload, and serving configuration.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ClusterConfig, ExperimentConfig, PolicyConfig, ServeConfig, WorkloadConfig};
+pub use toml::TomlDoc;

@@ -1,0 +1,389 @@
+//! Typed configuration schema on top of the TOML-subset parser.
+//!
+//! A config file describes an experiment end-to-end: the cluster (which
+//! catalog systems, how many of each), the scheduling policy and its
+//! parameters (Eq. 1's λ, the thresholds of §6), the workload, and —
+//! for `hetsched serve` — the live-serving knobs. `configs/` ships
+//! ready-made files for every paper experiment.
+
+use super::toml::{TomlDoc, TomlTable, TomlValue};
+use crate::hw::catalog::{extended_catalog, find_system};
+use crate::hw::spec::SystemSpec;
+use crate::workload::generator::Arrival;
+
+/// Which scheduling policy to run (see `sched`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyConfig {
+    /// paper §6: route small-token queries to the efficient system
+    Threshold { t_in: u32, t_out: u32, small: String, big: String },
+    /// paper Eq. 1–4: per-query argmin of λE + (1−λ)R
+    Cost { lambda: f64 },
+    /// workload-unaware baselines
+    AllOn(String),
+    RoundRobin,
+    Random { seed: u64 },
+    JoinShortestQueue,
+    /// offline per-query optimum (lower bound)
+    Oracle { lambda: f64 },
+}
+
+impl PolicyConfig {
+    pub fn name(&self) -> String {
+        match self {
+            PolicyConfig::Threshold { t_in, t_out, .. } => format!("threshold(t_in={t_in},t_out={t_out})"),
+            PolicyConfig::Cost { lambda } => format!("cost(λ={lambda})"),
+            PolicyConfig::AllOn(s) => format!("all-on-{s}"),
+            PolicyConfig::RoundRobin => "round-robin".into(),
+            PolicyConfig::Random { .. } => "random".into(),
+            PolicyConfig::JoinShortestQueue => "jsq".into(),
+            PolicyConfig::Oracle { lambda } => format!("oracle(λ={lambda})"),
+        }
+    }
+}
+
+/// Cluster: a multiset of catalog systems.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub systems: Vec<SystemSpec>,
+}
+
+impl ClusterConfig {
+    /// The paper's §6 hybrid: 1×M1-Pro + 1×Swing-A100.
+    pub fn paper_hybrid() -> Self {
+        let cat = extended_catalog();
+        Self {
+            systems: vec![
+                cat[0].clone(), // M1-Pro
+                cat[1].clone(), // Swing-A100
+            ],
+        }
+    }
+
+    /// All three Table-1 systems.
+    pub fn table1() -> Self {
+        let cat = extended_catalog();
+        Self { systems: cat[..3].to_vec() }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.systems.is_empty() {
+            return Err("cluster has no systems".into());
+        }
+        for s in &self.systems {
+            s.validate()?;
+        }
+        let mut names: Vec<&str> = self.systems.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.systems.len() {
+            return Err("duplicate system names in cluster".into());
+        }
+        Ok(())
+    }
+}
+
+/// Workload description.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub queries: usize,
+    pub arrival: Arrival,
+    pub seed: u64,
+    /// path to a CSV trace; overrides the generative model when set
+    pub trace_path: Option<String>,
+    pub llm: String,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            queries: crate::workload::alpaca::ALPACA_SIZE,
+            arrival: Arrival::Batch,
+            seed: 2024,
+            trace_path: None,
+            llm: "Llama-2-7B".into(),
+        }
+    }
+}
+
+/// Live-serving knobs for `hetsched serve` / the e2e example.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// max queries batched per worker dispatch
+    pub max_batch: usize,
+    /// max time a query waits for batchmates (s)
+    pub max_wait_s: f64,
+    /// bounded router queue (admission control)
+    pub queue_cap: usize,
+    /// generated tokens per request for the served tiny model
+    pub gen_tokens: u32,
+    pub artifacts_dir: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait_s: 0.02,
+            queue_cap: 1024,
+            gen_tokens: 32,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Everything an experiment needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub cluster: ClusterConfig,
+    pub policy: PolicyConfig,
+    pub workload: WorkloadConfig,
+    pub serve: ServeConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::paper_hybrid(),
+            policy: PolicyConfig::Threshold {
+                t_in: 32,
+                t_out: 32,
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            workload: WorkloadConfig::default(),
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_toml_str(&src)
+    }
+
+    pub fn from_toml_str(src: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(src)?;
+        let mut cfg = ExperimentConfig::default();
+
+        // [cluster]: systems = ["M1-Pro", "Swing-A100"], counts = [1, 1]
+        if let Some(t) = doc.section("cluster") {
+            if let Some(TomlValue::Arr(names)) = t.get("systems") {
+                let cat = extended_catalog();
+                let mut systems = Vec::new();
+                for v in names {
+                    let name = v.as_str().ok_or("cluster.systems entries must be strings")?;
+                    let id = find_system(&cat, name)
+                        .ok_or_else(|| format!("unknown system '{name}' (catalog: {})",
+                            cat.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")))?;
+                    systems.push(cat[id.0].clone());
+                }
+                cfg.cluster = ClusterConfig { systems };
+            }
+            if let Some(TomlValue::Arr(counts)) = t.get("counts") {
+                if counts.len() != cfg.cluster.systems.len() {
+                    return Err("cluster.counts length must match cluster.systems".into());
+                }
+                for (spec, c) in cfg.cluster.systems.iter_mut().zip(counts) {
+                    spec.count = c.as_f64().ok_or("cluster.counts must be numbers")? as usize;
+                }
+            }
+        }
+
+        if let Some(t) = doc.section("policy") {
+            cfg.policy = parse_policy(t)?;
+        }
+
+        if let Some(t) = doc.section("workload") {
+            if let Some(v) = t.get("queries") {
+                cfg.workload.queries = v.as_f64().ok_or("workload.queries must be a number")? as usize;
+            }
+            if let Some(v) = t.get("seed") {
+                cfg.workload.seed = v.as_f64().ok_or("workload.seed must be a number")? as u64;
+            }
+            if let Some(v) = t.get("llm") {
+                cfg.workload.llm = v.as_str().ok_or("workload.llm must be a string")?.into();
+            }
+            if let Some(v) = t.get("trace") {
+                cfg.workload.trace_path = Some(v.as_str().ok_or("workload.trace must be a string")?.into());
+            }
+            if let Some(v) = t.get("arrival") {
+                let kind = v.as_str().ok_or("workload.arrival must be a string")?;
+                cfg.workload.arrival = match kind {
+                    "batch" => Arrival::Batch,
+                    "poisson" => {
+                        let rate = t.get("rate").and_then(|v| v.as_f64()).unwrap_or(10.0);
+                        Arrival::Poisson { rate }
+                    }
+                    "bursty" => {
+                        let rate = t.get("rate").and_then(|v| v.as_f64()).unwrap_or(10.0);
+                        let on_s = t.get("on_s").and_then(|v| v.as_f64()).unwrap_or(1.0);
+                        let off_s = t.get("off_s").and_then(|v| v.as_f64()).unwrap_or(1.0);
+                        Arrival::Bursty { rate, on_s, off_s }
+                    }
+                    other => return Err(format!("unknown arrival kind '{other}'")),
+                };
+            }
+        }
+
+        if let Some(t) = doc.section("serve") {
+            if let Some(v) = t.get("max_batch") {
+                cfg.serve.max_batch = v.as_f64().ok_or("serve.max_batch must be a number")? as usize;
+            }
+            if let Some(v) = t.get("max_wait_s") {
+                cfg.serve.max_wait_s = v.as_f64().ok_or("serve.max_wait_s must be a number")?;
+            }
+            if let Some(v) = t.get("queue_cap") {
+                cfg.serve.queue_cap = v.as_f64().ok_or("serve.queue_cap must be a number")? as usize;
+            }
+            if let Some(v) = t.get("gen_tokens") {
+                cfg.serve.gen_tokens = v.as_f64().ok_or("serve.gen_tokens must be a number")? as u32;
+            }
+            if let Some(v) = t.get("artifacts_dir") {
+                cfg.serve.artifacts_dir = v.as_str().ok_or("serve.artifacts_dir must be a string")?.into();
+            }
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.cluster.validate()?;
+        if self.workload.queries == 0 {
+            return Err("workload.queries must be > 0".into());
+        }
+        if self.serve.max_batch == 0 || self.serve.queue_cap == 0 {
+            return Err("serve.max_batch and serve.queue_cap must be > 0".into());
+        }
+        if let PolicyConfig::Cost { lambda } | PolicyConfig::Oracle { lambda } = self.policy {
+            if !(0.0..=1.0).contains(&lambda) {
+                return Err(format!("lambda {lambda} outside [0,1]"));
+            }
+        }
+        if let PolicyConfig::Threshold { small, big, .. } = &self.policy {
+            for name in [small, big] {
+                if !self.cluster.systems.iter().any(|s| s.name.eq_ignore_ascii_case(name)) {
+                    return Err(format!("threshold policy references '{name}' not in cluster"));
+                }
+            }
+        }
+        if let PolicyConfig::AllOn(name) = &self.policy {
+            if !self.cluster.systems.iter().any(|s| s.name.eq_ignore_ascii_case(name)) {
+                return Err(format!("all-on policy references '{name}' not in cluster"));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_policy(t: &TomlTable) -> Result<PolicyConfig, String> {
+    let kind = t
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .ok_or("policy.kind is required")?;
+    Ok(match kind {
+        "threshold" => PolicyConfig::Threshold {
+            t_in: t.get("t_in").and_then(|v| v.as_u32()).unwrap_or(32),
+            t_out: t.get("t_out").and_then(|v| v.as_u32()).unwrap_or(32),
+            small: t.get("small").and_then(|v| v.as_str()).unwrap_or("M1-Pro").into(),
+            big: t.get("big").and_then(|v| v.as_str()).unwrap_or("Swing-A100").into(),
+        },
+        "cost" => PolicyConfig::Cost {
+            lambda: t.get("lambda").and_then(|v| v.as_f64()).unwrap_or(1.0),
+        },
+        "all-on" => PolicyConfig::AllOn(
+            t.get("system")
+                .and_then(|v| v.as_str())
+                .ok_or("all-on policy requires 'system'")?
+                .into(),
+        ),
+        "round-robin" => PolicyConfig::RoundRobin,
+        "random" => PolicyConfig::Random {
+            seed: t.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        },
+        "jsq" => PolicyConfig::JoinShortestQueue,
+        "oracle" => PolicyConfig::Oracle {
+            lambda: t.get("lambda").and_then(|v| v.as_f64()).unwrap_or(1.0),
+        },
+        other => return Err(format!("unknown policy kind '{other}'")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+[cluster]
+systems = ["M1-Pro", "Swing-A100"]
+counts = [2, 1]
+
+[policy]
+kind = "threshold"
+t_in = 64
+t_out = 16
+
+[workload]
+queries = 1000
+arrival = "poisson"
+rate = 25.0
+llm = "Mistral-7B"
+
+[serve]
+max_batch = 4
+"#;
+
+    #[test]
+    fn full_round_trip() {
+        let cfg = ExperimentConfig::from_toml_str(SRC).unwrap();
+        assert_eq!(cfg.cluster.systems.len(), 2);
+        assert_eq!(cfg.cluster.systems[0].count, 2);
+        assert_eq!(
+            cfg.policy,
+            PolicyConfig::Threshold { t_in: 64, t_out: 16, small: "M1-Pro".into(), big: "Swing-A100".into() }
+        );
+        assert_eq!(cfg.workload.queries, 1000);
+        assert_eq!(cfg.workload.llm, "Mistral-7B");
+        assert!(matches!(cfg.workload.arrival, Arrival::Poisson { rate } if rate == 25.0));
+        assert_eq!(cfg.serve.max_batch, 4);
+    }
+
+    #[test]
+    fn default_is_paper_setup() {
+        let cfg = ExperimentConfig::default();
+        cfg.validate().unwrap();
+        assert!(matches!(cfg.policy, PolicyConfig::Threshold { t_in: 32, t_out: 32, .. }));
+        assert_eq!(cfg.workload.queries, crate::workload::alpaca::ALPACA_SIZE);
+    }
+
+    #[test]
+    fn rejects_unknown_system() {
+        let src = "[cluster]\nsystems = [\"TPU-v9\"]\n";
+        assert!(ExperimentConfig::from_toml_str(src).unwrap_err().contains("unknown system"));
+    }
+
+    #[test]
+    fn rejects_bad_lambda() {
+        let src = "[policy]\nkind = \"cost\"\nlambda = 1.5\n";
+        assert!(ExperimentConfig::from_toml_str(src).unwrap_err().contains("lambda"));
+    }
+
+    #[test]
+    fn rejects_policy_referencing_missing_system() {
+        let src = "[cluster]\nsystems = [\"Swing-A100\"]\n[policy]\nkind = \"threshold\"\n";
+        assert!(ExperimentConfig::from_toml_str(src).is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let src = "[cluster]\nsystems = [\"M1-Pro\"]\ncounts = [1, 2]\n";
+        assert!(ExperimentConfig::from_toml_str(src).unwrap_err().contains("counts"));
+    }
+
+    #[test]
+    fn policy_names_stable() {
+        assert_eq!(PolicyConfig::RoundRobin.name(), "round-robin");
+        assert!(PolicyConfig::Cost { lambda: 0.5 }.name().contains("0.5"));
+    }
+}

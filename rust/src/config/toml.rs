@@ -1,0 +1,225 @@
+//! TOML-subset parser: `[section]` / `[[array-of-tables]]` headers and
+//! `key = value` pairs (strings, numbers, booleans, flat arrays).
+//! Covers everything our config schema needs without pulling a crate.
+
+use std::collections::BTreeMap;
+
+/// A scalar or flat-array TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_f64().map(|x| x as u32)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` (or one element of a `[[section]]` list).
+pub type TomlTable = BTreeMap<String, TomlValue>;
+
+/// A parsed document: the root table, named sections, and arrays of tables.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub root: TomlTable,
+    pub sections: BTreeMap<String, TomlTable>,
+    pub table_arrays: BTreeMap<String, Vec<TomlTable>>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        // where new keys currently land
+        enum Target {
+            Root,
+            Section(String),
+            ArrayElem(String),
+        }
+        let mut target = Target::Root;
+
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let errline = |msg: &str| format!("line {}: {msg}: '{raw}'", lineno + 1);
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(errline("empty table-array name"));
+                }
+                doc.table_arrays.entry(name.clone()).or_default().push(TomlTable::new());
+                target = Target::ArrayElem(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                if name.is_empty() {
+                    return Err(errline("empty section name"));
+                }
+                doc.sections.entry(name.clone()).or_default();
+                target = Target::Section(name);
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                if key.is_empty() {
+                    return Err(errline("empty key"));
+                }
+                let val = parse_value(v.trim()).map_err(|e| errline(&e))?;
+                let table = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Section(s) => doc.sections.get_mut(s).unwrap(),
+                    Target::ArrayElem(s) => {
+                        doc.table_arrays.get_mut(s).unwrap().last_mut().unwrap()
+                    }
+                };
+                if table.insert(key, val).is_some() {
+                    return Err(errline("duplicate key"));
+                }
+            } else {
+                return Err(errline("expected 'key = value' or '[section]'"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&TomlTable> {
+        self.sections.get(name)
+    }
+
+    /// Typed getter with a `section.key` error path.
+    pub fn get<'a>(&'a self, section: &str, key: &str) -> Option<&'a TomlValue> {
+        match section {
+            "" => self.root.get(key),
+            s => self.sections.get(s)?.get(key),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no # inside strings in our configs; keep the parser simple
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Some(body) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(Vec::new()));
+        }
+        let items: Result<Vec<TomlValue>, String> =
+            body.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    if s == "inf" {
+        return Ok(TomlValue::Num(f64::INFINITY));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# top comment
+name = "demo"
+seed = 42
+
+[policy]
+kind = "threshold"   # inline comment
+t_in = 32
+lambda = 0.5
+enabled = true
+
+[[system]]
+name = "m1"
+count = 2
+
+[[system]]
+name = "a100"
+count = 1
+buckets = [8, 16, 32]
+"#;
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.root["name"].as_str(), Some("demo"));
+        assert_eq!(d.get("policy", "t_in").unwrap().as_u32(), Some(32));
+        assert_eq!(d.get("policy", "enabled").unwrap().as_bool(), Some(true));
+        let sys = &d.table_arrays["system"];
+        assert_eq!(sys.len(), 2);
+        assert_eq!(sys[1]["name"].as_str(), Some("a100"));
+        match &sys[1]["buckets"] {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_stripped_not_in_strings() {
+        let d = TomlDoc::parse("x = \"a#b\" # real comment\n").unwrap();
+        assert_eq!(d.root["x"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(TomlDoc::parse("a = 1\na = 2\n").is_err());
+        assert!(TomlDoc::parse("just words\n").is_err());
+        assert!(TomlDoc::parse("[]\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        let err = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert!(err.contains("line 2"));
+    }
+
+    #[test]
+    fn inf_and_numbers() {
+        let d = TomlDoc::parse("a = inf\nb = -2.5e3\n").unwrap();
+        assert_eq!(d.root["a"].as_f64(), Some(f64::INFINITY));
+        assert_eq!(d.root["b"].as_f64(), Some(-2500.0));
+    }
+}

@@ -1,0 +1,166 @@
+//! SLO-aware admission & routing (extension; the paper's §6.3 raises QoS
+//! for LLM serving as open — "energy efficiency may also become a
+//! critical QoS dimension").
+//!
+//! Each request may carry a latency SLO. The admission controller
+//! estimates completion time per system (queue depth + modeled service
+//! time) and (a) overrides energy-optimal routing when the efficient
+//! system would blow the deadline, (b) rejects outright when *no* system
+//! can make it — bounded-queue backpressure with a deadline, not just a
+//! length cap.
+
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::Feasibility;
+use crate::sched::policy::ClusterView;
+use crate::workload::Query;
+
+/// Routing verdict for a request with an optional SLO.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verdict {
+    /// keep the policy's (energy-optimal) choice
+    Keep(SystemId),
+    /// deadline forces a faster system
+    Upgrade { from: SystemId, to: SystemId },
+    /// no system can meet the deadline
+    Reject { best_possible_s: f64 },
+}
+
+/// SLO-aware admission over an energy model.
+pub struct SloAdmission {
+    pub energy: EnergyModel,
+}
+
+impl SloAdmission {
+    pub fn new(energy: EnergyModel) -> Self {
+        Self { energy }
+    }
+
+    /// Estimated completion (queueing + service) on system `sid`.
+    pub fn eta_s(&self, view: &ClusterView, q: &Query, sid: usize) -> f64 {
+        let spec: &SystemSpec = &view.systems[sid];
+        if self.energy.perf.feasibility(spec, q.input_tokens, q.output_tokens) != Feasibility::Ok {
+            return f64::INFINITY;
+        }
+        view.queue_depth_s[sid] + self.energy.runtime(spec, q.input_tokens, q.output_tokens)
+    }
+
+    /// Decide for a request routed to `chosen` with deadline `slo_s`.
+    pub fn admit(&self, view: &ClusterView, q: &Query, chosen: SystemId, slo_s: Option<f64>) -> Verdict {
+        let Some(slo) = slo_s else { return Verdict::Keep(chosen) };
+        if self.eta_s(view, q, chosen.0) <= slo {
+            return Verdict::Keep(chosen);
+        }
+        // find the fastest feasible alternative
+        let mut best = chosen.0;
+        let mut best_eta = self.eta_s(view, q, chosen.0);
+        for sid in 0..view.n() {
+            let eta = self.eta_s(view, q, sid);
+            if eta < best_eta {
+                best_eta = eta;
+                best = sid;
+            }
+        }
+        if best_eta <= slo {
+            Verdict::Upgrade { from: chosen, to: SystemId(best) }
+        } else {
+            Verdict::Reject { best_possible_s: best_eta }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+
+    fn setup() -> (SloAdmission, Vec<SystemSpec>) {
+        let em = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        (SloAdmission::new(em), system_catalog())
+    }
+
+    fn view<'a>(
+        systems: &'a [SystemSpec],
+        depths: &'a [f64],
+        lens: &'a [usize],
+    ) -> ClusterView<'a> {
+        ClusterView { systems, queue_depth_s: depths, queue_len: lens }
+    }
+
+    #[test]
+    fn no_slo_keeps_choice() {
+        let (adm, systems) = setup();
+        let depths = vec![0.0; 3];
+        let lens = vec![0; 3];
+        let v = view(&systems, &depths, &lens);
+        let q = Query::new(0, 8, 8);
+        assert_eq!(adm.admit(&v, &q, SystemId::M1_PRO, None), Verdict::Keep(SystemId::M1_PRO));
+    }
+
+    #[test]
+    fn generous_slo_keeps_efficient_system() {
+        let (adm, systems) = setup();
+        let depths = vec![0.0; 3];
+        let lens = vec![0; 3];
+        let v = view(&systems, &depths, &lens);
+        let q = Query::new(0, 8, 8);
+        // M1 serves (8,8) in ~1s; 60s SLO is fine
+        assert_eq!(adm.admit(&v, &q, SystemId::M1_PRO, Some(60.0)), Verdict::Keep(SystemId::M1_PRO));
+    }
+
+    #[test]
+    fn tight_slo_upgrades_to_gpu() {
+        let (adm, systems) = setup();
+        let depths = vec![0.0; 3];
+        let lens = vec![0; 3];
+        let v = view(&systems, &depths, &lens);
+        // a 256-in/128-out query takes minutes on the M1, ~1.7s on A100
+        let q = Query::new(0, 256, 128);
+        match adm.admit(&v, &q, SystemId::M1_PRO, Some(5.0)) {
+            Verdict::Upgrade { to, .. } => assert_eq!(to, SystemId::SWING_A100),
+            other => panic!("expected upgrade, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn impossible_slo_rejected_with_estimate() {
+        let (adm, systems) = setup();
+        let depths = vec![0.0; 3];
+        let lens = vec![0; 3];
+        let v = view(&systems, &depths, &lens);
+        let q = Query::new(0, 2048, 512);
+        match adm.admit(&v, &q, SystemId::SWING_A100, Some(0.001)) {
+            Verdict::Reject { best_possible_s } => assert!(best_possible_s > 0.001),
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queue_depth_counts_against_slo() {
+        let (adm, systems) = setup();
+        // A100 backlogged by 100 s; V100 empty → upgrade lands on V100
+        let depths = vec![500.0, 100.0, 0.0];
+        let lens = vec![50, 10, 0];
+        let v = view(&systems, &depths, &lens);
+        let q = Query::new(0, 128, 64);
+        match adm.admit(&v, &q, SystemId::SWING_A100, Some(10.0)) {
+            Verdict::Upgrade { to, .. } => assert_eq!(to, SystemId::PALMETTO_V100),
+            other => panic!("expected upgrade to V100, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eta_infinite_for_infeasible() {
+        let (adm, systems) = setup();
+        let depths = vec![0.0; 3];
+        let lens = vec![0; 3];
+        let v = view(&systems, &depths, &lens);
+        let q = Query::new(0, 8, 4096); // infeasible on M1 + V100
+        assert!(adm.eta_s(&v, &q, 0).is_infinite());
+        assert!(adm.eta_s(&v, &q, 2).is_infinite());
+        assert!(adm.eta_s(&v, &q, 1).is_finite());
+    }
+}

@@ -1,0 +1,191 @@
+//! Per-system bounded queues with dynamic batch formation.
+//!
+//! Each system class owns one `SystemQueue`; workers call
+//! [`SystemQueue::take_batch`], which blocks for work, then lingers up to
+//! `max_wait` to accumulate batchmates (classic dynamic batching:
+//! amortize dispatch without unbounded latency).
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why an enqueue was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    QueueFull,
+    ShuttingDown,
+}
+
+pub struct SystemQueue {
+    inner: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    cap: usize,
+    closing: AtomicBool,
+}
+
+impl SystemQueue {
+    pub fn new(cap: usize) -> Self {
+        Self { inner: Mutex::new(VecDeque::new()), cv: Condvar::new(), cap, closing: AtomicBool::new(false) }
+    }
+
+    /// Admission-controlled enqueue.
+    pub fn push(&self, req: Request) -> Result<(), (Request, Rejected)> {
+        if self.closing.load(Ordering::Acquire) {
+            return Err((req, Rejected::ShuttingDown));
+        }
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err((req, Rejected::QueueFull));
+        }
+        q.push_back(req);
+        drop(q);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Estimated queue depth in requests (used by the router's view).
+    pub fn depth(&self) -> usize {
+        self.len()
+    }
+
+    /// Block until work arrives (or shutdown), then gather up to
+    /// `max_batch` requests, lingering at most `max_wait` for stragglers.
+    /// Returns an empty vec only at shutdown.
+    pub fn take_batch(&self, max_batch: usize, max_wait: Duration) -> Vec<Request> {
+        let mut q = self.inner.lock().unwrap();
+        // phase 1: wait for the first request
+        while q.is_empty() {
+            if self.closing.load(Ordering::Acquire) {
+                return Vec::new();
+            }
+            let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = guard;
+        }
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(q.pop_front().unwrap());
+        // phase 2: linger for batchmates
+        let deadline = Instant::now() + max_wait;
+        while batch.len() < max_batch {
+            if let Some(r) = q.pop_front() {
+                batch.push(r);
+                continue;
+            }
+            let now = Instant::now();
+            if now >= deadline || self.closing.load(Ordering::Acquire) {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+        batch
+    }
+
+    /// Begin shutdown: no new work; wake all waiters.
+    pub fn close(&self) {
+        self.closing.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+
+    pub fn is_closing(&self) -> bool {
+        self.closing.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request { id, prompt: vec![0, 1], gen_tokens: 1, submitted: Instant::now(), respond: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q = SystemQueue::new(10);
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (r, rx) = req(i);
+            q.push(r).map_err(|_| ()).unwrap();
+            rxs.push(rx);
+        }
+        let batch = q.take_batch(5, Duration::from_millis(1));
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let q = SystemQueue::new(2);
+        let (r0, _k0) = req(0);
+        let (r1, _k1) = req(1);
+        let (r2, _k2) = req(2);
+        q.push(r0).map_err(|_| ()).unwrap();
+        q.push(r1).map_err(|_| ()).unwrap();
+        match q.push(r2) {
+            Err((r, Rejected::QueueFull)) => assert_eq!(r.id, 2),
+            other => panic!("expected QueueFull, got {:?}", other.map(|_| ()).err().map(|e| e.1)),
+        }
+    }
+
+    #[test]
+    fn batch_respects_max() {
+        let q = SystemQueue::new(10);
+        let mut keep = Vec::new();
+        for i in 0..7 {
+            let (r, rx) = req(i);
+            q.push(r).map_err(|_| ()).unwrap();
+            keep.push(rx);
+        }
+        let b1 = q.take_batch(4, Duration::from_millis(1));
+        assert_eq!(b1.len(), 4);
+        let b2 = q.take_batch(4, Duration::from_millis(1));
+        assert_eq!(b2.len(), 3);
+    }
+
+    #[test]
+    fn linger_collects_late_arrivals() {
+        let q = Arc::new(SystemQueue::new(10));
+        let (r0, _k0) = req(0);
+        q.push(r0).map_err(|_| ()).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            let (r1, rx) = req(1);
+            q2.push(r1).map_err(|_| ()).unwrap();
+            rx
+        });
+        let batch = q.take_batch(4, Duration::from_millis(200));
+        let _rx = h.join().unwrap();
+        assert_eq!(batch.len(), 2, "late arrival should join the batch");
+    }
+
+    #[test]
+    fn close_wakes_blocked_worker() {
+        let q = Arc::new(SystemQueue::new(4));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.take_batch(4, Duration::from_millis(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        let batch = h.join().unwrap();
+        assert!(batch.is_empty());
+        // pushes now rejected
+        let (r, _k) = req(9);
+        assert!(matches!(q.push(r), Err((_, Rejected::ShuttingDown))));
+    }
+}

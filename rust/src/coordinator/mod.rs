@@ -1,0 +1,24 @@
+//! The live serving coordinator — L3's request path.
+//!
+//! ```text
+//!  clients ─submit→ [router thread] ─assign(policy)→ [per-system queues]
+//!                                                        │ batcher
+//!                                  [worker threads] ←────┘
+//!                                        │ real PJRT inference (runtime)
+//!  clients ←──────── responses ──────────┘ + virtual energy attribution
+//! ```
+//!
+//! Python never appears here: workers execute AOT artifacts through the
+//! PJRT runtime. Energy per request is attributed by the paper's
+//! phase-power model applied to *measured* phase durations (a "virtual
+//! power meter" — this box has no M1/A100, see DESIGN.md §2).
+
+pub mod admission;
+pub mod batcher;
+pub mod energy_acct;
+pub mod request;
+pub mod server;
+pub mod worker;
+
+pub use request::{Request, Response};
+pub use server::{Server, ServerHandle, ServerStats};

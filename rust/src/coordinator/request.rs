@@ -1,0 +1,81 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// An in-flight inference request.
+pub struct Request {
+    pub id: u64,
+    /// token ids including BOS
+    pub prompt: Vec<i32>,
+    pub gen_tokens: u32,
+    pub submitted: Instant,
+    /// where the worker sends the response
+    pub respond: mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// The paper's `m` for routing purposes.
+    pub fn input_tokens(&self) -> u32 {
+        self.prompt.len() as u32
+    }
+}
+
+/// The served result.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// which cluster system served it (index into the cluster spec list)
+    pub system: usize,
+    pub system_name: String,
+    /// measured phase times on the real runtime
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    /// end-to-end latency including queueing
+    pub latency_s: f64,
+    /// virtual joules attributed by the system's power model
+    pub energy_j: f64,
+    /// requests that were batched together with this one
+    pub batch_size: usize,
+}
+
+impl Response {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.tokens.len() as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_m_is_prompt_len() {
+        let (tx, _rx) = mpsc::channel();
+        let r = Request { id: 1, prompt: vec![0, 5, 9], gen_tokens: 4, submitted: Instant::now(), respond: tx };
+        assert_eq!(r.input_tokens(), 3);
+    }
+
+    #[test]
+    fn response_throughput() {
+        let (tx, _rx) = mpsc::channel::<Response>();
+        drop(tx);
+        let r = Response {
+            id: 0,
+            tokens: vec![1, 2, 3, 4],
+            system: 0,
+            system_name: "x".into(),
+            prefill_s: 0.1,
+            decode_s: 2.0,
+            latency_s: 2.5,
+            energy_j: 10.0,
+            batch_size: 1,
+        };
+        assert!((r.tokens_per_s() - 2.0).abs() < 1e-9);
+    }
+}

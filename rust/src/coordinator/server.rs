@@ -1,0 +1,182 @@
+//! The serving front end: router thread + per-system queues + workers.
+//!
+//! `Server::start` builds the whole topology from an `ExperimentConfig`;
+//! `ServerHandle::submit` is the client API (returns a channel the
+//! response arrives on). Shutdown is graceful: queues close, workers
+//! drain, threads join.
+
+use super::batcher::{Rejected, SystemQueue};
+use super::request::{Request, Response};
+use crate::config::schema::ExperimentConfig;
+use crate::hw::spec::SystemSpec;
+use crate::metrics::Registry;
+use crate::model::find_llm;
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::PerfModel;
+use crate::runtime::engine::SamplingParams;
+use crate::sched::policy::{build_policy, ClusterView, Policy};
+use crate::workload::Query;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A running server.
+pub struct Server {
+    handle: ServerHandle,
+    queues: Vec<Arc<SystemQueue>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Cheap-to-clone client handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    policy: Mutex<Box<dyn Policy>>,
+    queues: Vec<Arc<SystemQueue>>,
+    systems: Vec<SystemSpec>,
+    energy: EnergyModel,
+    next_id: AtomicU64,
+    metrics: Arc<Registry>,
+    default_gen: u32,
+}
+
+/// Point-in-time server statistics.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub queue_lens: Vec<usize>,
+}
+
+impl Server {
+    /// Build and start the full serving topology. `factory` constructs an
+    /// inference engine *inside each worker thread* (PJRT handles are
+    /// thread-local by construction in the `xla` crate); use
+    /// [`Server::artifact_factory`] for the standard artifacts-dir setup.
+    pub fn start(cfg: &ExperimentConfig, factory: super::worker::EngineFactory) -> anyhow::Result<Server> {
+        let systems = cfg.cluster.systems.clone();
+        let llm = find_llm(&cfg.workload.llm)
+            .ok_or_else(|| anyhow::anyhow!("unknown llm '{}'", cfg.workload.llm))?;
+        let energy = EnergyModel::new(PerfModel::new(llm));
+        let metrics = Arc::new(Registry::default());
+        let queues: Vec<Arc<SystemQueue>> =
+            systems.iter().map(|_| Arc::new(SystemQueue::new(cfg.serve.queue_cap))).collect();
+
+        let policy = build_policy(&cfg.policy, energy.clone(), &systems);
+        let mut workers = Vec::new();
+        for (i, spec) in systems.iter().enumerate() {
+            // one worker thread per node of the system class
+            for node in 0..spec.count.max(1) {
+                let wc = super::worker::WorkerConfig {
+                    system_index: i,
+                    spec: spec.clone(),
+                    max_batch: cfg.serve.max_batch,
+                    max_wait: Duration::from_secs_f64(cfg.serve.max_wait_s),
+                    sampling: SamplingParams::default(),
+                };
+                let q = queues[i].clone();
+                let f = factory.clone();
+                let m = metrics.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("worker-{}-{}", spec.name, node))
+                        .spawn(move || super::worker::run_worker(wc, q, f, m))
+                        .expect("spawn worker"),
+                );
+            }
+        }
+
+        let inner = Arc::new(Inner {
+            policy: Mutex::new(policy),
+            queues: queues.clone(),
+            systems,
+            energy,
+            next_id: AtomicU64::new(0),
+            metrics,
+            default_gen: cfg.serve.gen_tokens,
+        });
+        Ok(Server { handle: ServerHandle { inner }, queues, workers })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Standard engine factory: load + compile the artifact bundle from a
+    /// directory (each worker does this once at startup).
+    pub fn artifact_factory(dir: std::path::PathBuf) -> super::worker::EngineFactory {
+        Arc::new(move || {
+            let rt = crate::runtime::client::Runtime::cpu()?;
+            let bundle = crate::runtime::artifacts::ArtifactBundle::load(&rt, &dir)?;
+            Ok(crate::runtime::engine::InferenceEngine::new(bundle))
+        })
+    }
+
+    /// Graceful shutdown: close queues, drain, join workers.
+    pub fn shutdown(self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the response channel, or the rejection
+    /// reason under backpressure.
+    pub fn submit(&self, prompt: Vec<i32>, gen_tokens: Option<u32>) -> Result<mpsc::Receiver<Response>, Rejected> {
+        let inner = &self.inner;
+        let gen = gen_tokens.unwrap_or(inner.default_gen);
+        let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = Request { id, prompt, gen_tokens: gen, submitted: Instant::now(), respond: tx };
+
+        // route: policy sees (m, n) and live queue state — exactly the
+        // paper's decision inputs plus load
+        let depths: Vec<f64> = inner.queues.iter().map(|q| q.depth() as f64).collect();
+        let lens: Vec<usize> = inner.queues.iter().map(|q| q.len()).collect();
+        let q = Query::new(id, req.input_tokens(), gen);
+        let sid = {
+            let mut policy = inner.policy.lock().unwrap();
+            let view = ClusterView { systems: &inner.systems, queue_depth_s: &depths, queue_len: &lens };
+            policy.assign(&q, &view)
+        };
+        inner.metrics.counter("router.submitted").inc();
+        inner.metrics.counter(&format!("router.to.{}", inner.systems[sid.0].name)).inc();
+
+        match inner.queues[sid.0].push(req) {
+            Ok(()) => Ok(rx),
+            Err((_req, why)) => {
+                inner.metrics.counter("router.rejected").inc();
+                Err(why)
+            }
+        }
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        ServerStats {
+            submitted: self.inner.metrics.counter("router.submitted").get(),
+            rejected: self.inner.metrics.counter("router.rejected").get(),
+            queue_lens: self.inner.queues.iter().map(|q| q.len()).collect(),
+        }
+    }
+
+    pub fn metrics_json(&self) -> String {
+        self.inner.metrics.to_json()
+    }
+
+    /// Paper-scale energy estimate for a hypothetical (m, n) on system s
+    /// (exposed for reporting in the e2e example).
+    pub fn paper_energy(&self, system: usize, m: u32, n: u32) -> f64 {
+        self.inner.energy.energy(&self.inner.systems[system], m, n)
+    }
+
+    pub fn system_names(&self) -> Vec<String> {
+        self.inner.systems.iter().map(|s| s.name.to_string()).collect()
+    }
+}

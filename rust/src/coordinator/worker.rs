@@ -1,0 +1,135 @@
+//! Worker threads: one per cluster system class, draining that system's
+//! queue in dynamic batches and executing each request on the real PJRT
+//! engine.
+
+use super::batcher::SystemQueue;
+use super::energy_acct;
+use super::request::{Request, Response};
+use crate::hw::spec::SystemSpec;
+use crate::metrics::Registry;
+use crate::runtime::engine::{InferenceEngine, SamplingParams};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Builds an engine *inside* the worker thread: the xla crate's PJRT
+/// handles are `Rc`-based (!Send), so each worker owns its own client +
+/// compiled executables.
+pub type EngineFactory = Arc<dyn Fn() -> anyhow::Result<InferenceEngine> + Send + Sync>;
+
+/// Configuration for one worker.
+pub struct WorkerConfig {
+    pub system_index: usize,
+    pub spec: SystemSpec,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub sampling: SamplingParams,
+}
+
+/// Run the worker loop until the queue closes and drains. Every request
+/// receives a response (send failures mean the client went away — fine).
+pub fn run_worker(
+    cfg: WorkerConfig,
+    queue: Arc<SystemQueue>,
+    factory: EngineFactory,
+    metrics: Arc<Registry>,
+) {
+    let engine = match factory() {
+        Ok(e) => e,
+        Err(e) => {
+            // fail every request fast rather than hanging the queue
+            metrics.counter(&format!("worker.{}.engine_init_failures", cfg.spec.name)).inc();
+            loop {
+                let batch = queue.take_batch(cfg.max_batch, cfg.max_wait);
+                if batch.is_empty() {
+                    if queue.is_closing() && queue.is_empty() {
+                        return;
+                    }
+                    continue;
+                }
+                for req in batch {
+                    let _ = req.respond.send(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        system: cfg.system_index,
+                        system_name: format!("{} (engine init failed: {e:#})", cfg.spec.name),
+                        prefill_s: 0.0,
+                        decode_s: 0.0,
+                        latency_s: req.submitted.elapsed().as_secs_f64(),
+                        energy_j: 0.0,
+                        batch_size: 1,
+                    });
+                }
+            }
+        }
+    };
+    let served = metrics.counter(&format!("worker.{}.served", cfg.spec.name));
+    let errors = metrics.counter(&format!("worker.{}.errors", cfg.spec.name));
+    let batches = metrics.counter(&format!("worker.{}.batches", cfg.spec.name));
+    let latency = metrics.histo(&format!("worker.{}.latency", cfg.spec.name));
+
+    loop {
+        let batch = queue.take_batch(cfg.max_batch, cfg.max_wait);
+        if batch.is_empty() {
+            if queue.is_closing() && queue.is_empty() {
+                return;
+            }
+            continue;
+        }
+        batches.inc();
+        let batch_size = batch.len();
+        for req in batch {
+            serve_one(&cfg, req, batch_size, &engine, &served, &errors, &latency);
+        }
+    }
+}
+
+fn serve_one(
+    cfg: &WorkerConfig,
+    req: Request,
+    batch_size: usize,
+    engine: &InferenceEngine,
+    served: &crate::metrics::Counter,
+    errors: &crate::metrics::Counter,
+    latency: &crate::metrics::LatencyHisto,
+) {
+    let id = req.id;
+    match engine.generate(&req.prompt, req.gen_tokens, cfg.sampling) {
+        Ok(gen) => {
+            let latency_s = req.submitted.elapsed().as_secs_f64();
+            let energy_j = energy_acct::attribute(
+                &cfg.spec,
+                0.0, // dispatch already amortized by batching
+                gen.prefill_s,
+                gen.decode_s,
+            );
+            latency.observe(latency_s);
+            served.inc();
+            let _ = req.respond.send(Response {
+                id,
+                tokens: gen.tokens,
+                system: cfg.system_index,
+                system_name: cfg.spec.name.to_string(),
+                prefill_s: gen.prefill_s,
+                decode_s: gen.decode_s,
+                latency_s,
+                energy_j,
+                batch_size,
+            });
+        }
+        Err(e) => {
+            errors.inc();
+            // deliver an empty response so callers don't hang
+            let _ = req.respond.send(Response {
+                id,
+                tokens: Vec::new(),
+                system: cfg.system_index,
+                system_name: format!("{} (error: {e:#})", cfg.spec.name),
+                prefill_s: 0.0,
+                decode_s: 0.0,
+                latency_s: req.submitted.elapsed().as_secs_f64(),
+                energy_j: 0.0,
+                batch_size,
+            });
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Table 1 and Fig. 3 generators.
+
+use crate::hw::spec::SystemSpec;
+use crate::util::stats::LogHistogram;
+use crate::util::tablefmt::{Align, Table};
+use crate::workload::alpaca::{summarize, AlpacaModel};
+use crate::workload::Query;
+
+/// Table 1: system configurations (rendered from the catalog, so the
+/// table the bench prints is provably what the experiments used).
+pub fn table1(systems: &[SystemSpec]) -> Table {
+    let mut t = Table::new(&[
+        "System Name",
+        "Class",
+        "Eff. compute",
+        "Mem BW",
+        "VRAM",
+        "Idle W",
+        "Peak W",
+        "Overhead",
+    ])
+    .align(0, Align::Left)
+    .align(1, Align::Left);
+    for s in systems {
+        t.row(&[
+            s.name.to_string(),
+            format!("{:?}", s.accel),
+            format!("{:.1} TFLOP/s", s.compute_flops / 1e12),
+            format!("{:.0} GB/s", s.mem_bw / 1e9),
+            format!("{:.0} GB", s.vram_bytes / 1e9),
+            format!("{:.0}", s.idle_w),
+            format!("{:.0}", s.peak_w),
+            format!("{:.0} ms", s.overhead_s * 1e3),
+        ]);
+    }
+    t
+}
+
+/// Fig. 3 data: log-binned histograms of the Alpaca input/output token
+/// counts plus summary stats.
+pub struct AlpacaFigure {
+    pub input_hist: LogHistogram,
+    pub output_hist: LogHistogram,
+    pub input_summary: crate::workload::alpaca::DistSummary,
+    pub output_summary: crate::workload::alpaca::DistSummary,
+    pub n_queries: usize,
+}
+
+pub fn fig3_alpaca(trace: &[Query]) -> AlpacaFigure {
+    let mut input_hist = LogHistogram::new(1.0, 2048.0, 22);
+    let mut output_hist = LogHistogram::new(1.0, 2048.0, 22);
+    for q in trace {
+        input_hist.push(q.input_tokens as f64);
+        output_hist.push(q.output_tokens as f64);
+    }
+    AlpacaFigure {
+        input_summary: summarize(trace.iter().map(|q| q.input_tokens)),
+        output_summary: summarize(trace.iter().map(|q| q.output_tokens)),
+        input_hist,
+        output_hist,
+        n_queries: trace.len(),
+    }
+}
+
+/// Render a LogHistogram as an ASCII bar chart (what the Fig. 3 bench
+/// prints).
+pub fn render_histogram(h: &LogHistogram, title: &str) -> String {
+    let mut out = format!("{title} (n={})\n", h.count);
+    let max = h.bins.iter().copied().max().unwrap_or(1).max(1);
+    for (i, &c) in h.bins.iter().enumerate() {
+        let bar_len = (c as f64 / max as f64 * 50.0).round() as usize;
+        out.push_str(&format!(
+            "{:>6.0}–{:<6.0} |{:<50}| {}\n",
+            h.bin_lo(i),
+            h.bin_lo(i + 1),
+            "█".repeat(bar_len),
+            c
+        ));
+    }
+    out
+}
+
+/// Default trace used across Fig. 3/4/5 regenerations.
+pub fn default_alpaca_trace() -> Vec<Query> {
+    AlpacaModel::default().trace(2024, crate::workload::alpaca::ALPACA_SIZE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+
+    #[test]
+    fn table1_has_all_systems() {
+        let t = table1(&system_catalog());
+        let s = t.ascii();
+        for name in ["M1-Pro", "Swing-A100", "Palmetto-V100"] {
+            assert!(s.contains(name), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn fig3_histograms_populated() {
+        let trace = AlpacaModel::default().trace(1, 5000);
+        let f = fig3_alpaca(&trace);
+        assert_eq!(f.n_queries, 5000);
+        assert_eq!(f.input_hist.count, 5000);
+        // input mode bin should sit well below the output mode bin
+        let in_mode = f.input_hist.mode_lo();
+        let out_mode = f.output_hist.mode_lo();
+        assert!(in_mode < out_mode, "in={in_mode} out={out_mode}");
+    }
+
+    #[test]
+    fn histogram_renders() {
+        let trace = AlpacaModel::default().trace(1, 1000);
+        let f = fig3_alpaca(&trace);
+        let s = render_histogram(&f.input_hist, "inputs");
+        assert!(s.lines().count() > 10);
+        assert!(s.contains('█'));
+    }
+}

@@ -1,0 +1,137 @@
+//! The headline result (abstract: **7.5 % CPU+GPU energy reduction** vs.
+//! a workload-unaware baseline on Alpaca).
+//!
+//! The paper's number comes from the Eq. 9-style analysis: take the
+//! Alpaca *input*-token distribution with the sweep's fixed n = 32,
+//! route queries with m ≤ T_in = 32 to the M1 Pro, the rest to the A100,
+//! and compare total energy against all-A100. We reproduce that framing
+//! (primary), the Eq. 10 output-side analog, and additionally a full
+//! (m, n)-trace dual-threshold simulation with the extra baselines the
+//! paper doesn't report (round-robin, random, JSQ, cost(λ=1)).
+
+use super::sweeps::threshold_sweep;
+use crate::config::schema::PolicyConfig;
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+use crate::perf::energy::EnergyModel;
+use crate::sched::policy::build_policy;
+use crate::sim::engine::{simulate, SimOptions};
+use crate::sim::report::SimReport;
+use crate::workload::Query;
+
+/// Everything the headline bench prints.
+#[derive(Clone, Debug)]
+pub struct HeadlineResult {
+    /// Eq. 9 framing at T_in = 32 (the paper's 7.5 %)
+    pub eq9_saving_at_32: f64,
+    /// Eq. 10 framing at T_out = 32
+    pub eq10_saving_at_32: f64,
+    /// best threshold found on each axis (paper: 32 for both)
+    pub eq9_best_threshold: u32,
+    pub eq10_best_threshold: u32,
+    /// full-trace dual-threshold sim vs. all-A100
+    pub combined_saving: f64,
+    pub runtime_increase_frac: f64,
+    /// policy comparison on the full trace (baseline first)
+    pub reports: Vec<SimReport>,
+}
+
+/// Run the headline experiment suite on an Alpaca trace.
+pub fn headline_savings(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+) -> HeadlineResult {
+    let m1 = &systems[SystemId::M1_PRO.0];
+    let a100 = &systems[SystemId::SWING_A100.0];
+
+    // Eq. 9: Alpaca input distribution, n fixed at the sweep default 32
+    let q9: Vec<Query> = queries.iter().map(|q| Query::new(q.id, q.input_tokens, 32)).collect();
+    let c9 = threshold_sweep(&q9, energy, m1, a100, &super::sweeps::input_thresholds(), true);
+    let at = |c: &super::sweeps::ThresholdCurve, t: u32| {
+        let i = c.thresholds.iter().position(|&x| x == t).expect("grid contains t");
+        1.0 - c.hybrid_energy_j[i] / c.all_big_energy_j
+    };
+    let eq9_saving_at_32 = at(&c9, 32);
+
+    // Eq. 10: Alpaca output distribution, m fixed at 32
+    let q10: Vec<Query> = queries.iter().map(|q| Query::new(q.id, 32, q.output_tokens)).collect();
+    let c10 = threshold_sweep(&q10, energy, m1, a100, &super::sweeps::output_thresholds(), false);
+    let eq10_saving_at_32 = at(&c10, 32);
+
+    // full-trace policy comparison
+    let run = |cfg: &PolicyConfig| -> SimReport {
+        let mut p = build_policy(cfg, energy.clone(), systems);
+        simulate(queries, systems, p.as_mut(), energy, &SimOptions::default())
+    };
+    let baseline = run(&PolicyConfig::AllOn("Swing-A100".into()));
+    let hybrid = run(&PolicyConfig::Threshold {
+        t_in: 32,
+        t_out: 32,
+        small: "M1-Pro".into(),
+        big: "Swing-A100".into(),
+    });
+    let combined_saving = 1.0 - hybrid.total_energy_j / baseline.total_energy_j;
+    let runtime_increase_frac = hybrid.total_service_s / baseline.total_service_s - 1.0;
+    let reports = vec![
+        baseline,
+        hybrid,
+        run(&PolicyConfig::RoundRobin),
+        run(&PolicyConfig::Random { seed: 7 }),
+        run(&PolicyConfig::JoinShortestQueue),
+        run(&PolicyConfig::Cost { lambda: 1.0 }),
+    ];
+
+    HeadlineResult {
+        eq9_saving_at_32,
+        eq10_saving_at_32,
+        eq9_best_threshold: c9.best_threshold,
+        eq10_best_threshold: c10.best_threshold,
+        combined_saving,
+        runtime_increase_frac,
+        reports,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+    use crate::workload::alpaca::AlpacaModel;
+
+    #[test]
+    fn headline_reproduces_paper_band() {
+        let queries = AlpacaModel::default().trace(2024, 20_000);
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let r = headline_savings(&queries, &systems, &energy);
+        // paper: 7.5 % at T_in = 32; accept a band (modeled substrate)
+        assert!(
+            (0.04..=0.15).contains(&r.eq9_saving_at_32),
+            "Eq.9 saving {:.1}% outside band",
+            r.eq9_saving_at_32 * 100.0
+        );
+        // optima near the paper's 32 on both axes
+        assert!(
+            (16..=64).contains(&r.eq9_best_threshold),
+            "T_in* = {}",
+            r.eq9_best_threshold
+        );
+        assert!(
+            (16..=96).contains(&r.eq10_best_threshold),
+            "T_out* = {}",
+            r.eq10_best_threshold
+        );
+        // output-side analysis also saves at 32
+        assert!(r.eq10_saving_at_32 > 0.0);
+        // full-trace dual-threshold sim saves too, at a runtime cost
+        assert!(r.combined_saving > 0.0);
+        assert!(r.runtime_increase_frac > 0.0);
+        // cost(λ=1) at least matches the fixed threshold on total energy
+        let hybrid = &r.reports[1];
+        let cost = r.reports.iter().find(|o| o.policy.starts_with("cost")).unwrap();
+        assert!(cost.total_energy_j <= hybrid.total_energy_j * 1.001);
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! CLI (`hetsched <subcommand>`) and the bench binaries so both always
+//! agree. Each returns render-ready tables plus the raw series.
+
+pub mod figures;
+pub mod headline;
+pub mod sweeps;
+
+pub use figures::{fig3_alpaca, table1};
+pub use headline::{headline_savings, HeadlineResult};
+pub use sweeps::{input_sweep, output_sweep, threshold_sweep, SweepRow, ThresholdCurve};

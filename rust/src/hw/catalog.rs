@@ -1,0 +1,192 @@
+//! The system catalog: Table 1 of the paper plus extension entries.
+//!
+//! Rates are *effective* single-stream values (datasheet peak × a
+//! realistic utilization for 7B fp16 inference through HF Accelerate),
+//! chosen so the qualitative shapes of the paper's Figs. 1–2 hold; see
+//! DESIGN.md §2 for the substitution argument and EXPERIMENTS.md for the
+//! calibration evidence.
+
+use super::spec::{Accelerator, SystemSpec};
+
+/// Index into [`system_catalog`] — the `s` of `E(m,n,s)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SystemId(pub usize);
+
+impl SystemId {
+    pub const M1_PRO: SystemId = SystemId(0);
+    pub const SWING_A100: SystemId = SystemId(1);
+    pub const PALMETTO_V100: SystemId = SystemId(2);
+}
+
+impl std::fmt::Display for SystemId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Table 1 systems (in paper order) + extension entries used by the
+/// fleet-sizing and carbon-aware studies.
+pub fn system_catalog() -> Vec<SystemSpec> {
+    vec![
+        // ─── Table 1, row 1: MacBook Pro, 10-core M1 Pro + 14-core GPU ──
+        // 32 GB unified LPDDR5 @ 200 GB/s; GPU ≈ 4.5 TFLOP fp32. LLM fp16
+        // effective ≈ 0.9 TFLOP/s through Accelerate/MPS. Low idle, ~40 W
+        // package peak. Unified-memory contention + thermal ramp make
+        // per-token service time grow early with context (the paper's
+        // §5.3–5.4 observation that the M1 degrades fastest and cannot
+        // generate past 512 tokens) — modeled by a low soft context limit
+        // with a gentle polynomial throttle. This throttle is what puts
+        // the M1↔A100 energy crossover near the paper's T = 32.
+        SystemSpec {
+            name: "M1-Pro",
+            accel: Accelerator::AppleSilicon,
+            compute_flops: 0.9e12,
+            mem_bw: 110e9, // effective decode streaming through MPS (~60% of 200 GB/s LPDDR5 peak)
+            vram_bytes: 24e9, // unified, minus OS headroom
+            idle_w: 4.0,
+            peak_w: 42.0,
+            host_active_w: 0.0, // host == accelerator (unified package)
+            overhead_s: 0.08,
+            util_prefill: 0.95,
+            util_decode: 0.72,
+            soft_ctx_limit: 64.0,
+            throttle_exp: 1.35,
+            count: 1,
+        },
+        // ─── Table 1, row 2: Swing — 2×EPYC 7742 + 8×A100-40G (1 used) ──
+        // A100 SXM: 312 TFLOP bf16 peak, 1555 GB/s HBM2e, 400 W TDP.
+        // Effective single-stream prefill ≈ 18% MFU through Accelerate;
+        // decode streams weights at ~75% of peak bandwidth. Host EPYCs
+        // burn ~90 W attributable while the task runs (paper counts
+        // CPU+GPU energy).
+        SystemSpec {
+            name: "Swing-A100",
+            accel: Accelerator::NvidiaGpu,
+            compute_flops: 56e12,
+            mem_bw: 1150e9,
+            vram_bytes: 40e9,
+            idle_w: 55.0,
+            peak_w: 400.0,
+            host_active_w: 90.0,
+            overhead_s: 0.15, // warm-process dispatch: tokenize + launch cascade
+            util_prefill: 0.88,
+            util_decode: 0.55,
+            soft_ctx_limit: f64::INFINITY,
+            throttle_exp: 1.0,
+            count: 1,
+        },
+        // ─── Table 1, row 3: Palmetto — Xeon 6148G + 2×V100-16G (1 used) ─
+        // V100 PCIe: 112 TFLOP fp16 tensor peak, 900 GB/s HBM2, 250 W.
+        // Older part: lower MFU (~14%), 16 GB VRAM → OOMs the paper hit
+        // (Falcon > 1024 out; all models > 2048 out) are enforced by the
+        // perf model's feasibility check.
+        SystemSpec {
+            name: "Palmetto-V100",
+            accel: Accelerator::NvidiaGpu,
+            compute_flops: 16e12,
+            mem_bw: 680e9,
+            vram_bytes: 15e9, // 16 GB minus CUDA context + allocator headroom
+            idle_w: 40.0,
+            peak_w: 250.0,
+            host_active_w: 70.0,
+            overhead_s: 0.2,
+            util_prefill: 0.85,
+            util_decode: 0.5,
+            soft_ctx_limit: f64::INFINITY,
+            throttle_exp: 1.0,
+            count: 1,
+        },
+    ]
+}
+
+/// Extension systems for the fleet-sizing / what-if studies (not in the
+/// paper's Table 1; datasheet-derived the same way).
+pub fn extended_catalog() -> Vec<SystemSpec> {
+    let mut v = system_catalog();
+    v.push(SystemSpec {
+        name: "H100-SXM",
+        accel: Accelerator::NvidiaGpu,
+        compute_flops: 180e12, // 989 TFLOP bf16 peak × ~18% MFU
+        mem_bw: 2500e9,
+        vram_bytes: 80e9,
+        idle_w: 70.0,
+        peak_w: 700.0,
+        host_active_w: 100.0,
+        overhead_s: 0.5,
+        util_prefill: 0.88,
+        util_decode: 0.55,
+        soft_ctx_limit: f64::INFINITY,
+        throttle_exp: 1.0,
+        count: 1,
+    });
+    v.push(SystemSpec {
+        name: "EPYC-7742-cpu",
+        accel: Accelerator::X86Cpu,
+        compute_flops: 2.2e12, // AVX2 fp32 effective for GEMM
+        mem_bw: 150e9,
+        vram_bytes: 512e9, // DRAM
+        idle_w: 90.0,
+        peak_w: 420.0, // 2 sockets under load
+        host_active_w: 0.0,
+        overhead_s: 0.05,
+        util_prefill: 0.9,
+        util_decode: 0.6,
+        soft_ctx_limit: f64::INFINITY,
+        throttle_exp: 1.0,
+        count: 1,
+    });
+    v
+}
+
+/// Look up a system by (case-insensitive) name in a spec list.
+pub fn find_system(specs: &[SystemSpec], name: &str) -> Option<SystemId> {
+    specs
+        .iter()
+        .position(|s| s.name.eq_ignore_ascii_case(name))
+        .map(SystemId)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table1_order() {
+        let cat = system_catalog();
+        assert_eq!(cat.len(), 3);
+        assert_eq!(cat[SystemId::M1_PRO.0].name, "M1-Pro");
+        assert_eq!(cat[SystemId::SWING_A100.0].name, "Swing-A100");
+        assert_eq!(cat[SystemId::PALMETTO_V100.0].name, "Palmetto-V100");
+    }
+
+    #[test]
+    fn all_specs_validate() {
+        for s in extended_catalog() {
+            s.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn qualitative_ordering_holds() {
+        let cat = system_catalog();
+        let m1 = &cat[0];
+        let a100 = &cat[1];
+        let v100 = &cat[2];
+        // the premise of the whole paper: M1 sips power, A100 crunches
+        assert!(m1.peak_w < v100.peak_w && v100.peak_w < a100.peak_w);
+        assert!(m1.compute_flops < v100.compute_flops);
+        assert!(v100.compute_flops < a100.compute_flops);
+        assert!(m1.overhead_s < a100.overhead_s);
+        // only the M1 has a soft context limit
+        assert!(m1.soft_ctx_limit.is_finite());
+        assert!(!a100.soft_ctx_limit.is_finite());
+    }
+
+    #[test]
+    fn find_by_name() {
+        let cat = system_catalog();
+        assert_eq!(find_system(&cat, "m1-pro"), Some(SystemId::M1_PRO));
+        assert_eq!(find_system(&cat, "SWING-A100"), Some(SystemId::SWING_A100));
+        assert_eq!(find_system(&cat, "nope"), None);
+    }
+}

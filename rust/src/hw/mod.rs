@@ -1,0 +1,16 @@
+//! Hardware substrate: parametric system specifications standing in for
+//! the paper's physical testbed (Table 1), plus the power-state model.
+//!
+//! The paper reduces every system to two functions — energy `E(m,n,s)`
+//! and runtime `R(m,n,s)` (Eq. 1). Our specs carry exactly the parameters
+//! those functions need: effective compute rate, memory bandwidth, VRAM,
+//! idle/peak power, and dispatch overheads. Values come from public
+//! datasheets; DESIGN.md §2 documents the substitution.
+
+pub mod catalog;
+pub mod power;
+pub mod spec;
+
+pub use catalog::{system_catalog, SystemId};
+pub use power::PowerModel;
+pub use spec::{Accelerator, SystemSpec};

@@ -1,0 +1,118 @@
+//! Phase-resolved power model: turns a query's execution phases into a
+//! ground-truth power trace that the measurement simulators (§4.2 of the
+//! paper) sample, and that the energy model integrates exactly.
+
+use super::spec::SystemSpec;
+
+/// One constant-power phase of query execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Phase {
+    /// duration in seconds
+    pub dur_s: f64,
+    /// accelerator utilization in [0,1] during the phase
+    pub util: f64,
+    /// host-side active power applies during this phase
+    pub host_active: bool,
+}
+
+/// The power/timing profile of a single query on a single system.
+#[derive(Clone, Debug, Default)]
+pub struct PowerModel {
+    pub phases: Vec<Phase>,
+}
+
+impl PowerModel {
+    pub fn total_time(&self) -> f64 {
+        self.phases.iter().map(|p| p.dur_s).sum()
+    }
+
+    /// Exact energy (J) over all phases, including idle floor and host
+    /// power — the "CPU+GPU" total the paper reports.
+    pub fn total_energy(&self, spec: &SystemSpec) -> f64 {
+        self.phases
+            .iter()
+            .map(|p| {
+                let dev = spec.power_at(p.util);
+                let host = if p.host_active { spec.host_active_w } else { 0.0 };
+                (dev + host) * p.dur_s
+            })
+            .sum()
+    }
+
+    /// Energy with the idle floor *subtracted* (net energy, the paper's
+    /// RAPL methodology, Eq. 7).
+    pub fn net_energy(&self, spec: &SystemSpec) -> f64 {
+        self.total_energy(spec) - spec.idle_w * self.total_time()
+    }
+
+    /// Instantaneous total power (W) at time t since query start; None
+    /// past the end. Used as ground truth by `measure::*`.
+    pub fn power_at_time(&self, spec: &SystemSpec, t: f64) -> Option<f64> {
+        let mut acc = 0.0;
+        for p in &self.phases {
+            if t < acc + p.dur_s {
+                let host = if p.host_active { spec.host_active_w } else { 0.0 };
+                return Some(spec.power_at(p.util) + host);
+            }
+            acc += p.dur_s;
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+
+    fn model() -> PowerModel {
+        PowerModel {
+            phases: vec![
+                Phase { dur_s: 1.0, util: 0.0, host_active: false }, // idle-ish setup
+                Phase { dur_s: 2.0, util: 1.0, host_active: true },  // compute
+            ],
+        }
+    }
+
+    #[test]
+    fn time_and_energy_add_up() {
+        let spec = &system_catalog()[1]; // A100
+        let m = model();
+        assert_eq!(m.total_time(), 3.0);
+        let want = spec.idle_w * 1.0 + (spec.peak_w + spec.host_active_w) * 2.0;
+        assert!((m.total_energy(spec) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_energy_subtracts_idle_floor() {
+        let spec = &system_catalog()[1];
+        let m = model();
+        let net = m.net_energy(spec);
+        assert!((net - (m.total_energy(spec) - spec.idle_w * 3.0)).abs() < 1e-9);
+        assert!(net < m.total_energy(spec));
+    }
+
+    #[test]
+    fn power_at_time_piecewise() {
+        let spec = &system_catalog()[1];
+        let m = model();
+        assert_eq!(m.power_at_time(spec, 0.5), Some(spec.idle_w));
+        assert_eq!(m.power_at_time(spec, 1.5), Some(spec.peak_w + spec.host_active_w));
+        assert_eq!(m.power_at_time(spec, 3.5), None);
+    }
+
+    #[test]
+    fn integral_matches_sampled_sum() {
+        // energy from fine sampling ≈ closed-form total
+        let spec = &system_catalog()[0];
+        let m = model();
+        let dt = 1e-4;
+        let mut e = 0.0;
+        let mut t = 0.0;
+        while let Some(p) = m.power_at_time(spec, t) {
+            e += p * dt;
+            t += dt;
+        }
+        assert!((e - m.total_energy(spec)).abs() / m.total_energy(spec) < 1e-3);
+    }
+}

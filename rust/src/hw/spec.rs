@@ -1,0 +1,156 @@
+//! System specifications: the parameters the perf/energy models consume.
+
+/// Accelerator class — determines which measurement simulator applies
+/// (§4.2 of the paper) and how utilization maps to power.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Accelerator {
+    /// NVIDIA discrete GPU (measured via NVML in the paper)
+    NvidiaGpu,
+    /// Apple Silicon unified CPU/GPU (measured via powermetrics)
+    AppleSilicon,
+    /// x86 CPU-only (measured via RAPL / AMD µProf)
+    X86Cpu,
+}
+
+/// A schedulable system: one node class of the heterogeneous cluster.
+///
+/// All rates are *effective for single-stream 7B-class inference*, not
+/// theoretical peaks: `compute_flops` is peak × a realistic MFU, so the
+/// runtime model can divide FLOPs by it directly.
+#[derive(Clone, Debug)]
+pub struct SystemSpec {
+    /// Human-readable name; Table 1 uses e.g. "Swing AMD+A100".
+    pub name: &'static str,
+    pub accel: Accelerator,
+    /// Effective compute throughput for prefill (FLOP/s, fp16/bf16).
+    pub compute_flops: f64,
+    /// Effective memory bandwidth for decode weight/KV streaming (B/s).
+    pub mem_bw: f64,
+    /// Accelerator memory capacity (bytes). Weights + KV must fit.
+    pub vram_bytes: f64,
+    /// Idle power of the parts we attribute to the task (W). Following
+    /// the paper's RAPL methodology this is *subtracted* for CPU meters
+    /// but the scheduler can include it via `attribute_idle`.
+    pub idle_w: f64,
+    /// Power at full accelerator utilization (W), CPU+GPU package total.
+    pub peak_w: f64,
+    /// Host-side power while a query is active (W) — the "CPU+" part of
+    /// the paper's CPU+GPU accounting for GPU systems.
+    pub host_active_w: f64,
+    /// Fixed per-query dispatch/software overhead (s): tokenizer, HF
+    /// Accelerate dispatch, kernel launch cascades. Dominates small-m
+    /// energy on big GPUs (this is what creates the paper's crossover).
+    pub overhead_s: f64,
+    /// Fraction of peak power drawn during compute-bound prefill.
+    pub util_prefill: f64,
+    /// Fraction of peak power drawn during bandwidth-bound decode.
+    pub util_decode: f64,
+    /// Context length beyond which the system slows (thermal/VM pressure
+    /// on unified-memory parts; f64::INFINITY = no soft limit).
+    pub soft_ctx_limit: f64,
+    /// Strength of the slowdown past `soft_ctx_limit` (1 = linear).
+    pub throttle_exp: f64,
+    /// Number of identical nodes of this class in the cluster.
+    pub count: usize,
+}
+
+impl SystemSpec {
+    /// Sanity checks used by config validation and property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.compute_flops <= 0.0 || self.mem_bw <= 0.0 {
+            return Err(format!("{}: rates must be positive", self.name));
+        }
+        if self.peak_w < self.idle_w {
+            return Err(format!("{}: peak_w < idle_w", self.name));
+        }
+        if !(0.0..=1.0).contains(&self.util_prefill) || !(0.0..=1.0).contains(&self.util_decode) {
+            return Err(format!("{}: utilization fractions must be in [0,1]", self.name));
+        }
+        if self.overhead_s < 0.0 || self.count == 0 {
+            return Err(format!("{}: bad overhead/count", self.name));
+        }
+        Ok(())
+    }
+
+    /// Power draw (W) at a given accelerator utilization in [0, 1],
+    /// linear interpolation between idle and peak — the standard
+    /// first-order model used by cluster simulators.
+    pub fn power_at(&self, util: f64) -> f64 {
+        let u = util.clamp(0.0, 1.0);
+        self.idle_w + (self.peak_w - self.idle_w) * u
+    }
+
+    /// Throttle multiplier on service *time* for a given context length:
+    /// 1.0 below the soft limit, growing polynomially beyond it. Models
+    /// the M1 Pro's observed collapse past ~512 generated tokens (§5.4).
+    pub fn throttle_factor(&self, ctx: f64) -> f64 {
+        if ctx <= self.soft_ctx_limit {
+            1.0
+        } else {
+            (ctx / self.soft_ctx_limit).powf(self.throttle_exp)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SystemSpec {
+        SystemSpec {
+            name: "test",
+            accel: Accelerator::NvidiaGpu,
+            compute_flops: 1e12,
+            mem_bw: 1e11,
+            vram_bytes: 16e9,
+            idle_w: 50.0,
+            peak_w: 250.0,
+            host_active_w: 80.0,
+            overhead_s: 0.1,
+            util_prefill: 0.9,
+            util_decode: 0.5,
+            soft_ctx_limit: 512.0,
+            throttle_exp: 2.0,
+            count: 1,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_good_spec() {
+        assert!(spec().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut s = spec();
+        s.peak_w = 10.0;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.compute_flops = 0.0;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.util_decode = 1.5;
+        assert!(s.validate().is_err());
+        let mut s = spec();
+        s.count = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn power_interpolates() {
+        let s = spec();
+        assert_eq!(s.power_at(0.0), 50.0);
+        assert_eq!(s.power_at(1.0), 250.0);
+        assert_eq!(s.power_at(0.5), 150.0);
+        assert_eq!(s.power_at(2.0), 250.0); // clamped
+    }
+
+    #[test]
+    fn throttle_kicks_in_past_limit() {
+        let s = spec();
+        assert_eq!(s.throttle_factor(100.0), 1.0);
+        assert_eq!(s.throttle_factor(512.0), 1.0);
+        assert!((s.throttle_factor(1024.0) - 4.0).abs() < 1e-9); // (2)^2
+        assert!(s.throttle_factor(2048.0) > s.throttle_factor(1024.0));
+    }
+}

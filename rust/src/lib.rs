@@ -1,0 +1,31 @@
+//! # hetsched — energy-aware LLM inference scheduling on hybrid clusters
+//!
+//! Reproduction of *"Hybrid Heterogeneous Clusters Can Lower the Energy
+//! Consumption of LLM Inference Workloads"* (Wilkins, Keshav, Mortier —
+//! E2DC 2024) as a three-layer rust + JAX + Pallas serving stack:
+//!
+//! - **L3 (this crate)**: the paper's contribution — a cost-based,
+//!   workload-aware router (`sched`, `coordinator`) over a heterogeneous
+//!   cluster model (`hw`, `perf`), a discrete-event simulator (`sim`),
+//!   the §4.2 measurement-methodology simulators (`measure`), and the
+//!   Alpaca workload model (`workload`).
+//! - **L2/L1 (python/, build-time only)**: a byte-level transformer with
+//!   Pallas kernels, AOT-lowered to HLO text that `runtime` executes via
+//!   PJRT — python is never on the request path.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod hw;
+pub mod measure;
+pub mod metrics;
+pub mod model;
+pub mod perf;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

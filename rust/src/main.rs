@@ -1,0 +1,362 @@
+//! `hetsched` — CLI for the E2DC'24 hybrid-cluster reproduction.
+//!
+//! Subcommands map 1:1 to the paper's tables/figures plus serving and
+//! calibration utilities; `hetsched <cmd> --help` lists flags.
+
+use hetsched::config::schema::ExperimentConfig;
+use hetsched::experiments::{fig3_alpaca, headline_savings, input_sweep, output_sweep, table1, threshold_sweep};
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::model::{find_llm, llm_catalog};
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::util::cli::Args;
+use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Align, Table};
+use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
+use hetsched::workload::Query;
+
+const USAGE: &str = "\
+hetsched — energy-aware LLM inference scheduling on hybrid clusters
+(reproduction of Wilkins/Keshav/Mortier, E2DC 2024)
+
+usage: hetsched <command> [flags]
+
+paper experiments:
+  table1            print the system catalog (Table 1)
+  sweep-input       runtime/throughput/energy vs input tokens (Fig 1)
+  sweep-output      same vs output tokens, with OOM gaps (Fig 2)
+  alpaca-stats      Alpaca token distributions (Fig 3)
+  threshold-sweep   hybrid energy/runtime vs threshold (Figs 4-5)
+  headline          the 7.5% energy-saving result + policy comparison
+
+system:
+  simulate          run a config-driven cluster simulation
+  serve             start the live serving demo on the AOT artifacts
+  calibrate         fit perf-model constants from a measured sweep
+
+run `hetsched <command> --help` for flags.";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(String::as_str) {
+        Some("table1") => cmd_table1(&argv[1..]),
+        Some("sweep-input") => cmd_sweep(&argv[1..], true),
+        Some("sweep-output") => cmd_sweep(&argv[1..], false),
+        Some("alpaca-stats") => cmd_alpaca(&argv[1..]),
+        Some("threshold-sweep") => cmd_threshold(&argv[1..]),
+        Some("headline") => cmd_headline(&argv[1..]),
+        Some("simulate") => cmd_simulate(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("calibrate") => cmd_calibrate(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command '{other}'\n\n{USAGE}")),
+    };
+    if let Err(msg) = code {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    }
+}
+
+fn cmd_table1(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("table1")
+        .flag("markdown", "emit GitHub markdown instead of ASCII")
+        .parse(argv)?;
+    let t = table1(&system_catalog());
+    print!("{}", if args.get_bool("markdown") { t.markdown() } else { t.ascii() });
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String], input_axis: bool) -> Result<(), String> {
+    let args = Args::new(if input_axis { "sweep-input" } else { "sweep-output" })
+        .opt("model", "all", "LLM name or 'all'")
+        .flag("csv", "emit CSV")
+        .parse(argv)?;
+    let models = match args.get("model") {
+        "all" => llm_catalog(),
+        name => vec![find_llm(name).ok_or_else(|| format!("unknown model '{name}'"))?],
+    };
+    let rows = if input_axis {
+        input_sweep(&models, &system_catalog())
+    } else {
+        output_sweep(&models, &system_catalog())
+    };
+    let mut t = Table::new(&["model", "system", "tokens", "runtime", "tok/s", "J/token"])
+        .align(0, Align::Left)
+        .align(1, Align::Left);
+    for r in &rows {
+        if let Some(reason) = r.skipped {
+            t.row(&[r.model.clone(), r.system.clone(), r.tokens.to_string(), reason.into(), "-".into(), "-".into()]);
+        } else {
+            t.row(&[
+                r.model.clone(),
+                r.system.clone(),
+                r.tokens.to_string(),
+                fmt_secs(r.runtime_s),
+                format!("{:.1}", r.throughput_tok_s),
+                format!("{:.2}", r.energy_per_token_j),
+            ]);
+        }
+    }
+    print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+    Ok(())
+}
+
+fn cmd_alpaca(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("alpaca-stats")
+        .opt("queries", &ALPACA_SIZE.to_string(), "trace size")
+        .opt("seed", "2024", "trace seed")
+        .parse(argv)?;
+    let trace = AlpacaModel::default().trace(args.get_u64("seed")?, args.get_usize("queries")?);
+    let f = fig3_alpaca(&trace);
+    print!("{}", hetsched::experiments::figures::render_histogram(&f.input_hist, "Fig 3(a) input tokens"));
+    println!(
+        "  median={:.0} mean={:.1} p90={:.0} p99={:.0} max={}",
+        f.input_summary.median, f.input_summary.mean, f.input_summary.p90, f.input_summary.p99, f.input_summary.max
+    );
+    print!("{}", hetsched::experiments::figures::render_histogram(&f.output_hist, "Fig 3(b) output tokens"));
+    println!(
+        "  median={:.0} mean={:.1} p90={:.0} p99={:.0} max={}",
+        f.output_summary.median, f.output_summary.mean, f.output_summary.p90, f.output_summary.p99, f.output_summary.max
+    );
+    Ok(())
+}
+
+fn alpaca_fixed(axis_input: bool, seed: u64, size: usize) -> Vec<Query> {
+    AlpacaModel::default()
+        .trace(seed, size)
+        .iter()
+        .map(|q| {
+            if axis_input {
+                Query::new(q.id, q.input_tokens, 32)
+            } else {
+                Query::new(q.id, 32, q.output_tokens)
+            }
+        })
+        .collect()
+}
+
+fn cmd_threshold(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("threshold-sweep")
+        .opt("axis", "input", "input (Fig 4) or output (Fig 5)")
+        .opt("model", "Llama-2-7B", "LLM for the energy model")
+        .opt("queries", "52002", "Alpaca trace size")
+        .opt("seed", "2024", "trace seed")
+        .parse(argv)?;
+    let input_axis = match args.get("axis") {
+        "input" => true,
+        "output" => false,
+        other => return Err(format!("--axis must be input|output, got '{other}'")),
+    };
+    let llm = find_llm(args.get("model")).ok_or("unknown model")?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let systems = system_catalog();
+    let queries = alpaca_fixed(input_axis, args.get_u64("seed")?, args.get_usize("queries")?);
+    let grid = if input_axis {
+        hetsched::experiments::sweeps::input_thresholds()
+    } else {
+        hetsched::experiments::sweeps::output_thresholds()
+    };
+    let c = threshold_sweep(
+        &queries,
+        &energy,
+        &systems[SystemId::M1_PRO.0],
+        &systems[SystemId::SWING_A100.0],
+        &grid,
+        input_axis,
+    );
+    let fig = if input_axis { "Fig 4" } else { "Fig 5" };
+    println!("{fig}: hybrid M1-Pro + Swing-A100 on Alpaca ({} queries)", queries.len());
+    let mut t = Table::new(&["threshold", "energy", "runtime", "saving vs all-A100"]);
+    for ((&th, &e), &r) in c.thresholds.iter().zip(&c.hybrid_energy_j).zip(&c.hybrid_runtime_s) {
+        t.row(&[
+            th.to_string(),
+            fmt_joules(e),
+            fmt_secs(r),
+            format!("{:+.2}%", (1.0 - e / c.all_big_energy_j) * 100.0),
+        ]);
+    }
+    print!("{}", t.ascii());
+    println!(
+        "dashed lines:  all-M1 {} / {}   all-A100 {} / {}",
+        fmt_joules(c.all_small_energy_j),
+        fmt_secs(c.all_small_runtime_s),
+        fmt_joules(c.all_big_energy_j),
+        fmt_secs(c.all_big_runtime_s)
+    );
+    println!(
+        "optimum: T={} at {} ({:+.2}% vs all-A100; paper found T=32)",
+        c.best_threshold,
+        fmt_joules(c.best_energy_j),
+        (1.0 - c.best_energy_j / c.all_big_energy_j) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_headline(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("headline")
+        .opt("queries", "52002", "Alpaca trace size")
+        .opt("seed", "2024", "trace seed")
+        .opt("model", "Llama-2-7B", "LLM for the energy model")
+        .parse(argv)?;
+    let llm = find_llm(args.get("model")).ok_or("unknown model")?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let systems = system_catalog();
+    let queries = AlpacaModel::default().trace(args.get_u64("seed")?, args.get_usize("queries")?);
+    let r = headline_savings(&queries, &systems, &energy);
+    println!("=== headline: hybrid vs workload-unaware all-A100 (paper: 7.5%) ===");
+    println!(
+        "Eq. 9  (input dist, n=32):  {:+.2}% at T_in=32   (optimum T={})",
+        r.eq9_saving_at_32 * 100.0,
+        r.eq9_best_threshold
+    );
+    println!(
+        "Eq. 10 (output dist, m=32): {:+.2}% at T_out=32  (optimum T={})",
+        r.eq10_saving_at_32 * 100.0,
+        r.eq10_best_threshold
+    );
+    println!(
+        "full-trace dual threshold:  {:+.2}% energy, {:+.1}% runtime",
+        r.combined_saving * 100.0,
+        r.runtime_increase_frac * 100.0
+    );
+    let mut t = Table::new(&["policy", "energy", "service time", "makespan", "M1", "A100", "V100"])
+        .align(0, Align::Left);
+    for rep in &r.reports {
+        let counts = rep.routing_counts();
+        t.row(&[
+            rep.policy.clone(),
+            fmt_joules(rep.total_energy_j),
+            fmt_secs(rep.total_service_s),
+            fmt_secs(rep.makespan_s),
+            counts.first().copied().unwrap_or(0).to_string(),
+            counts.get(1).copied().unwrap_or(0).to_string(),
+            counts.get(2).copied().unwrap_or(0).to_string(),
+        ]);
+    }
+    print!("{}", t.ascii());
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("simulate")
+        .opt("config", "", "TOML config path (empty = paper defaults)")
+        .flag("idle-energy", "charge idle power across the makespan")
+        .parse(argv)?;
+    let cfg = match args.get("config") {
+        "" => ExperimentConfig::default(),
+        path => ExperimentConfig::from_file(path)?,
+    };
+    let llm = find_llm(&cfg.workload.llm).ok_or("unknown llm in config")?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let queries = match &cfg.workload.trace_path {
+        Some(p) => hetsched::workload::trace::read_csv(std::path::Path::new(p))?,
+        None => hetsched::workload::generator::TraceGenerator::new(cfg.workload.arrival, cfg.workload.seed)
+            .generate(cfg.workload.queries),
+    };
+    let mut policy = hetsched::sched::policy::build_policy(&cfg.policy, energy.clone(), &cfg.cluster.systems);
+    let opts = hetsched::sim::engine::SimOptions {
+        include_idle_energy: args.get_bool("idle-energy"),
+        strict: false,
+    };
+    let rep = hetsched::sim::engine::simulate(&queries, &cfg.cluster.systems, policy.as_mut(), &energy, &opts);
+    println!("policy: {}", rep.policy);
+    println!(
+        "queries: {}   energy: {}   service: {}   makespan: {}",
+        rep.outcomes.len(),
+        fmt_joules(rep.total_energy_j),
+        fmt_secs(rep.total_service_s),
+        fmt_secs(rep.makespan_s)
+    );
+    println!("latency: mean {}   p99 {}", fmt_secs(rep.mean_latency_s()), fmt_secs(rep.p99_latency_s()));
+    let mut t = Table::new(&["system", "queries", "busy", "energy"]).align(0, Align::Left);
+    for s in &rep.systems {
+        t.row(&[s.name.clone(), s.queries.to_string(), fmt_secs(s.busy_s), fmt_joules(s.energy_j)]);
+    }
+    print!("{}", t.ascii());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("serve")
+        .opt("config", "", "TOML config path (empty = paper defaults)")
+        .opt("artifacts", "artifacts", "AOT artifacts directory")
+        .opt("requests", "32", "demo requests to push through")
+        .opt("gen", "16", "tokens to generate per request")
+        .parse(argv)?;
+    let mut cfg = match args.get("config") {
+        "" => ExperimentConfig::default(),
+        path => ExperimentConfig::from_file(path)?,
+    };
+    cfg.serve.artifacts_dir = args.get("artifacts").to_string();
+    cfg.serve.gen_tokens = args.get_u64("gen")? as u32;
+    let n_requests = args.get_usize("requests")?;
+
+    let factory = hetsched::coordinator::server::Server::artifact_factory(std::path::PathBuf::from(
+        &cfg.serve.artifacts_dir,
+    ));
+    let server = hetsched::coordinator::server::Server::start(&cfg, factory)
+        .map_err(|e| format!("server start: {e:#}"))?;
+    let handle = server.handle();
+    let tok = hetsched::runtime::tokenizer::ByteTokenizer;
+
+    println!("serving {n_requests} demo requests through policy {} ...", cfg.policy.name());
+    let model = AlpacaModel::default();
+    let mut rng = hetsched::util::rng::Xoshiro256::seed_from(cfg.workload.seed);
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let m = model.sample_input(&mut rng).min(200);
+        let text: String = (0..m).map(|j| (b'a' + ((i + j as usize) % 26) as u8) as char).collect();
+        match handle.submit(tok.encode(&text), None) {
+            Ok(rx) => rxs.push(rx),
+            Err(why) => println!("request {i} rejected: {why:?}"),
+        }
+    }
+    let mut by_system: std::collections::BTreeMap<String, (usize, f64, f64)> = Default::default();
+    for rx in rxs {
+        let r = rx.recv().map_err(|e| e.to_string())?;
+        let entry = by_system.entry(r.system_name.clone()).or_default();
+        entry.0 += 1;
+        entry.1 += r.latency_s;
+        entry.2 += r.energy_j;
+    }
+    let mut t = Table::new(&["system", "served", "mean latency", "virtual energy"]).align(0, Align::Left);
+    for (name, (count, lat, e)) in &by_system {
+        t.row(&[name.clone(), count.to_string(), fmt_secs(lat / *count as f64), fmt_joules(*e)]);
+    }
+    print!("{}", t.ascii());
+    println!("metrics: {}", handle.metrics_json());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_calibrate(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("calibrate")
+        .opt("system", "Swing-A100", "catalog system to calibrate against")
+        .opt("model", "Llama-2-7B", "LLM")
+        .opt("noise", "0.02", "relative measurement noise for the demo sweep")
+        .opt("seed", "1", "rng seed")
+        .parse(argv)?;
+    let systems = system_catalog();
+    let sid = hetsched::hw::catalog::find_system(&systems, args.get("system"))
+        .ok_or_else(|| format!("unknown system '{}'", args.get("system")))?;
+    let spec = &systems[sid.0];
+    let llm = find_llm(args.get("model")).ok_or("unknown model")?;
+    let perf = PerfModel::new(llm);
+    let mut rng = hetsched::util::rng::Xoshiro256::seed_from(args.get_u64("seed")?);
+    let pts: Vec<(u32, u32)> = [8u32, 16, 32, 64, 128, 256, 512].iter().map(|&n| (32, n)).collect();
+    let trials =
+        hetsched::perf::calibration::synthetic_sweep(&perf, spec, &pts, args.get_f64("noise")?, &mut rng);
+    let fit = hetsched::perf::calibration::fit_decode(&trials);
+    println!(
+        "decode fit on {}: base={} per-token={} r²={:.4}",
+        spec.name,
+        fmt_secs(fit.base_s),
+        fmt_secs(fit.per_token_s),
+        fit.r2
+    );
+    let bw = hetsched::perf::calibration::implied_bandwidth(&fit, &perf.llm, 160.0);
+    println!("implied effective bandwidth: {:.0} GB/s (catalog: {:.0} GB/s)", bw / 1e9, spec.mem_bw / 1e9);
+    Ok(())
+}

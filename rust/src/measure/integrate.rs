@@ -1,0 +1,76 @@
+//! Discrete integration of sampled power readings → energy (the Σ P·Δt
+//! of Eqs. 5–8), with both the paper's rectangle rule and trapezoid for
+//! error comparison.
+
+/// (timestamp s, power W) sample.
+pub type Sample = (f64, f64);
+
+/// Rectangle rule: each reading holds until the next (what a polling
+/// meter actually assumes — Eqs. 5, 6, 8).
+pub fn rectangle(samples: &[Sample]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    samples
+        .windows(2)
+        .map(|w| w[0].1 * (w[1].0 - w[0].0))
+        .sum()
+}
+
+/// Trapezoid rule: linear interpolation between readings.
+pub fn trapezoid(samples: &[Sample]) -> f64 {
+    if samples.len() < 2 {
+        return 0.0;
+    }
+    samples
+        .windows(2)
+        .map(|w| 0.5 * (w[0].1 + w[1].1) * (w[1].0 - w[0].0))
+        .sum()
+}
+
+/// Final-interval correction: extend the last reading to `end_t` (meters
+/// stop polling when the task exits; the tail otherwise goes missing).
+pub fn with_tail(samples: &[Sample], end_t: f64) -> Vec<Sample> {
+    let mut v = samples.to_vec();
+    if let Some(&(t, p)) = samples.last() {
+        if end_t > t {
+            v.push((end_t, p));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_power_exact() {
+        let s: Vec<Sample> = (0..11).map(|i| (i as f64 * 0.1, 50.0)).collect();
+        assert!((rectangle(&s) - 50.0).abs() < 1e-9);
+        assert!((trapezoid(&s) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ramp_trapezoid_beats_rectangle() {
+        // P(t) = 100·t over [0,1] → E = 50 J
+        let s: Vec<Sample> = (0..6).map(|i| (i as f64 * 0.2, 100.0 * i as f64 * 0.2)).collect();
+        let r = rectangle(&s);
+        let t = trapezoid(&s);
+        assert!((t - 50.0).abs() < 1e-9); // exact for linear
+        assert!(r < 50.0); // rectangle underestimates a rising ramp
+    }
+
+    #[test]
+    fn tail_extension() {
+        let s = vec![(0.0, 10.0), (1.0, 10.0)];
+        let e = rectangle(&with_tail(&s, 2.0));
+        assert!((e - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(rectangle(&[]), 0.0);
+        assert_eq!(trapezoid(&[(0.0, 5.0)]), 0.0);
+    }
+}

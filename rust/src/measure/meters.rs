@@ -1,0 +1,277 @@
+//! The four energy meters of §4.2, each reproducing its real tool's
+//! sampling cadence, attribution trick, and failure modes.
+
+use super::integrate;
+use super::trace::GroundTruthTrace;
+use crate::util::rng::Xoshiro256;
+
+/// A meter estimates task energy (J) from a ground-truth trace.
+pub trait Meter {
+    fn name(&self) -> &'static str;
+    /// Run the measurement over the full task duration.
+    fn measure(&self, trace: &GroundTruthTrace, rng: &mut Xoshiro256) -> MeterReading;
+}
+
+/// Outcome of one measurement.
+#[derive(Clone, Debug)]
+pub struct MeterReading {
+    pub energy_j: f64,
+    pub samples: usize,
+    /// signed relative error vs. the true task energy
+    pub rel_error: f64,
+}
+
+fn reading(trace: &GroundTruthTrace, energy_j: f64, samples: usize) -> MeterReading {
+    let truth = trace.true_task_energy();
+    MeterReading { energy_j, samples, rel_error: (energy_j - truth) / truth }
+}
+
+/// §4.2.1 — PyJoules/NVML for NVIDIA GPUs (Eq. 5): polls device power at
+/// ~20 Hz for the tracked process; device power is *already* isolated
+/// from other host processes (it's the GPU's own sensor), so attribution
+/// error is just sampling + sensor noise. We add the host-side power the
+/// paper counts by polling RAPL alongside (folded into the trace's task
+/// phases here).
+pub struct NvmlMeter {
+    pub interval_s: f64,
+    pub sensor_noise: f64,
+}
+
+impl Default for NvmlMeter {
+    fn default() -> Self {
+        Self { interval_s: 0.05, sensor_noise: 0.02 }
+    }
+}
+
+impl Meter for NvmlMeter {
+    fn name(&self) -> &'static str {
+        "nvml"
+    }
+
+    fn measure(&self, trace: &GroundTruthTrace, rng: &mut Xoshiro256) -> MeterReading {
+        // NVML reads the device's own power sensor: task phases only, no
+        // background. Jittered polling timestamps like a real daemon.
+        let dur = trace.duration();
+        let mut samples = Vec::new();
+        let mut t = 0.0;
+        while t < dur {
+            let task_power = trace.package_power(t) - trace.background_w;
+            let noisy = (task_power * (1.0 + self.sensor_noise * rng.normal())).max(0.0);
+            samples.push((t, noisy));
+            t += self.interval_s * (1.0 + 0.05 * rng.normal()).max(0.1);
+        }
+        let e = integrate::rectangle(&integrate::with_tail(&samples, dur));
+        reading(trace, e, samples.len())
+    }
+}
+
+/// §4.2.2 — macOS powermetrics for Apple Silicon (Eq. 6): 200 ms cadence;
+/// reports *total* CPU/GPU package power plus a per-process "energy
+/// impact factor" α that we multiply in to attribute the task's share.
+/// The α estimate itself is noisy — that is this method's error source.
+pub struct PowermetricsMeter {
+    pub interval_s: f64,
+    pub alpha_noise: f64,
+}
+
+impl Default for PowermetricsMeter {
+    fn default() -> Self {
+        Self { interval_s: 0.2, alpha_noise: 0.08 }
+    }
+}
+
+impl Meter for PowermetricsMeter {
+    fn name(&self) -> &'static str {
+        "powermetrics"
+    }
+
+    fn measure(&self, trace: &GroundTruthTrace, rng: &mut Xoshiro256) -> MeterReading {
+        let dur = trace.duration();
+        let mut samples = Vec::new();
+        let mut t = 0.0;
+        while t < dur {
+            let total = trace.noisy_package_power(t, 0.02, rng);
+            // α: the tool's estimate of the task's share, noisy around truth
+            let alpha = (trace.task_share(t) * (1.0 + self.alpha_noise * rng.normal()))
+                .clamp(0.0, 1.0);
+            samples.push((t, alpha * total));
+            t += self.interval_s;
+        }
+        let e = integrate::rectangle(&integrate::with_tail(&samples, dur));
+        reading(trace, e, samples.len())
+    }
+}
+
+/// §4.2.3 — RAPL package counters on Intel (Eq. 7): the counter
+/// integrates *everything* on the package; the paper subtracts a
+/// pre-measured average idle draw. Attribution error comes from (a) the
+/// background processes the subtraction misattributes and (b) idle drift
+/// between pre-measurement and the run.
+pub struct RaplMeter {
+    pub interval_s: f64,
+    /// error in the pre-measured idle baseline (W, signed)
+    pub idle_drift_w: f64,
+}
+
+impl Default for RaplMeter {
+    fn default() -> Self {
+        Self { interval_s: 0.1, idle_drift_w: 0.0 }
+    }
+}
+
+impl Meter for RaplMeter {
+    fn name(&self) -> &'static str {
+        "rapl"
+    }
+
+    fn measure(&self, trace: &GroundTruthTrace, rng: &mut Xoshiro256) -> MeterReading {
+        let dur = trace.duration();
+        // pre-analysis phase: measure "idle" (which includes background!)
+        let measured_idle = trace.idle_w + trace.background_w + self.idle_drift_w
+            + 0.5 * rng.normal();
+        let mut samples = Vec::new();
+        let mut t = 0.0;
+        while t < dur {
+            // counter sees the full package
+            let pkg = trace.noisy_package_power(t, 0.01, rng);
+            samples.push((t, (pkg - measured_idle).max(0.0)));
+            t += self.interval_s;
+        }
+        let e = integrate::rectangle(&integrate::with_tail(&samples, dur));
+        // RAPL subtracts idle; the paper's Eq. 7 reports *net* energy, so
+        // compare against net truth by adding back the idle floor share:
+        let net_truth_adjust = trace.idle_w * dur;
+        reading(trace, e + net_truth_adjust, samples.len())
+    }
+}
+
+/// §4.2.4 — AMD µProf timechart (Eq. 8): 100 ms per-core power samples;
+/// psutil tells us which cores the task occupied; energy = Σ over active
+/// cores. Error: cores are attributed whole even when shared.
+pub struct AmdUprofMeter {
+    pub interval_s: f64,
+    pub n_cores: usize,
+    /// probability a sampled "active" core was actually shared with
+    /// background work in that interval
+    pub residency_confusion: f64,
+}
+
+impl Default for AmdUprofMeter {
+    fn default() -> Self {
+        Self { interval_s: 0.1, n_cores: 64, residency_confusion: 0.05 }
+    }
+}
+
+impl Meter for AmdUprofMeter {
+    fn name(&self) -> &'static str {
+        "amd-uprof"
+    }
+
+    fn measure(&self, trace: &GroundTruthTrace, rng: &mut Xoshiro256) -> MeterReading {
+        let dur = trace.duration();
+        let mut samples = Vec::new();
+        let mut t = 0.0;
+        while t < dur {
+            let task_power = (trace.package_power(t) - trace.background_w).max(0.0);
+            // task power is spread over its active cores; µProf sums the
+            // per-core numbers back up, occasionally folding in a shared
+            // core's background slice.
+            let confusion = if rng.bool(self.residency_confusion) {
+                trace.background_w / self.n_cores as f64
+            } else {
+                0.0
+            };
+            let p = (task_power + confusion) * (1.0 + 0.02 * rng.normal());
+            samples.push((t, p.max(0.0)));
+            t += self.interval_s;
+        }
+        let e = integrate::rectangle(&integrate::with_tail(&samples, dur));
+        reading(trace, e, samples.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+
+    fn trace(background_w: f64) -> GroundTruthTrace {
+        let specs = system_catalog();
+        let spec = specs[1].clone();
+        let pm = PerfModel::new(llm_catalog()[1].clone());
+        GroundTruthTrace::new(pm.power_model(&spec, 256, 128), &spec, background_w)
+    }
+
+    fn check_meter<M: Meter>(m: M, tol: f64) {
+        let tr = trace(30.0);
+        let mut rng = Xoshiro256::seed_from(11);
+        // average over trials to beat sampling noise
+        let n = 20;
+        let mean_err: f64 = (0..n)
+            .map(|_| m.measure(&tr, &mut rng).rel_error)
+            .sum::<f64>()
+            / n as f64;
+        assert!(
+            mean_err.abs() < tol,
+            "{}: mean rel error {mean_err} exceeds {tol}",
+            m.name()
+        );
+    }
+
+    #[test]
+    fn nvml_accurate() {
+        check_meter(NvmlMeter::default(), 0.03);
+    }
+
+    #[test]
+    fn powermetrics_accurate() {
+        check_meter(PowermetricsMeter::default(), 0.05);
+    }
+
+    #[test]
+    fn rapl_accurate_without_drift() {
+        check_meter(RaplMeter::default(), 0.05);
+    }
+
+    #[test]
+    fn uprof_accurate() {
+        check_meter(AmdUprofMeter::default(), 0.05);
+    }
+
+    #[test]
+    fn rapl_idle_drift_biases_reading() {
+        let tr = trace(30.0);
+        let mut rng = Xoshiro256::seed_from(5);
+        let none = RaplMeter::default().measure(&tr, &mut rng).energy_j;
+        let mut rng = Xoshiro256::seed_from(5);
+        let drift = RaplMeter { idle_drift_w: 20.0, ..Default::default() }
+            .measure(&tr, &mut rng)
+            .energy_j;
+        assert!(drift < none, "over-measured idle must under-report energy");
+    }
+
+    #[test]
+    fn coarser_sampling_increases_error_spread() {
+        let tr = trace(30.0);
+        let fine = NvmlMeter { interval_s: 0.02, sensor_noise: 0.02 };
+        let coarse = NvmlMeter { interval_s: 1.0, sensor_noise: 0.02 };
+        let spread = |m: &NvmlMeter, seed| {
+            let mut rng = Xoshiro256::seed_from(seed);
+            let errs: Vec<f64> =
+                (0..30).map(|_| m.measure(&tr, &mut rng).rel_error.abs()).collect();
+            crate::util::stats::mean(&errs)
+        };
+        assert!(spread(&coarse, 7) > spread(&fine, 7));
+    }
+
+    #[test]
+    fn sample_counts_match_cadence() {
+        let tr = trace(0.0);
+        let mut rng = Xoshiro256::seed_from(1);
+        let r = PowermetricsMeter::default().measure(&tr, &mut rng);
+        let expect = (tr.duration() / 0.2).ceil() as usize;
+        assert!((r.samples as i64 - expect as i64).abs() <= 1);
+    }
+}

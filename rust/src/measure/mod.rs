@@ -1,0 +1,18 @@
+//! Measurement-methodology simulators (§4.2 of the paper).
+//!
+//! The paper measures energy four different ways — NVML polling for
+//! NVIDIA GPUs (Eq. 5), powermetrics with an "energy impact factor" for
+//! Apple Silicon (Eq. 6), RAPL package counters with idle subtraction for
+//! Intel (Eq. 7), and AMD µProf per-core traces with psutil residency
+//! attribution (Eq. 8). We reproduce each tool as a *sampler over a
+//! ground-truth power trace* so that (a) the methodology itself is
+//! exercised end-to-end and (b) the attribution error of each method is
+//! quantifiable (`examples/measurement_study.rs`) — something the paper
+//! does not report.
+
+pub mod integrate;
+pub mod meters;
+pub mod trace;
+
+pub use meters::{AmdUprofMeter, Meter, NvmlMeter, PowermetricsMeter, RaplMeter};
+pub use trace::GroundTruthTrace;

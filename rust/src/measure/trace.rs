@@ -1,0 +1,111 @@
+//! Ground-truth power traces: what the machine "actually" drew, built
+//! from the phase-resolved power model plus background/other-process
+//! power that real meters must disentangle.
+
+use crate::hw::power::PowerModel;
+use crate::hw::spec::SystemSpec;
+use crate::util::rng::Xoshiro256;
+
+/// Continuous ground truth for one query execution on one system.
+#[derive(Clone, Debug)]
+pub struct GroundTruthTrace {
+    /// power attributable to the inference task (W) per phase
+    pub model: PowerModel,
+    /// constant background draw from *other* processes (W) — meters that
+    /// can't attribute per-process (powermetrics totals, RAPL packages)
+    /// see task + background and must separate them
+    pub background_w: f64,
+    /// idle floor of the package (W), baked into the spec but repeated
+    /// here for meters that do idle pre-measurement
+    pub idle_w: f64,
+    spec: SystemSpec,
+}
+
+impl GroundTruthTrace {
+    pub fn new(model: PowerModel, spec: &SystemSpec, background_w: f64) -> Self {
+        Self { model, background_w, idle_w: spec.idle_w, spec: spec.clone() }
+    }
+
+    /// total duration of the traced execution (s)
+    pub fn duration(&self) -> f64 {
+        self.model.total_time()
+    }
+
+    /// True task-attributable energy (J) — the quantity every meter is
+    /// trying to estimate.
+    pub fn true_task_energy(&self) -> f64 {
+        self.model.total_energy(&self.spec)
+    }
+
+    /// Instantaneous *total package* power at time t: task + background.
+    /// Returns background+idle after the task completes (machine stays on).
+    pub fn package_power(&self, t: f64) -> f64 {
+        match self.model.power_at_time(&self.spec, t) {
+            Some(p) => p + self.background_w,
+            None => self.idle_w + self.background_w,
+        }
+    }
+
+    /// Fraction of package power attributable to the task at time t —
+    /// the ground truth behind powermetrics' "energy impact factor" and
+    /// µProf's core-residency attribution.
+    pub fn task_share(&self, t: f64) -> f64 {
+        match self.model.power_at_time(&self.spec, t) {
+            Some(p) => p / (p + self.background_w).max(1e-12),
+            None => 0.0,
+        }
+    }
+
+    /// Sample with meter noise: relative gaussian jitter on the reading.
+    pub fn noisy_package_power(&self, t: f64, rel_noise: f64, rng: &mut Xoshiro256) -> f64 {
+        (self.package_power(t) * (1.0 + rel_noise * rng.normal())).max(0.0)
+    }
+
+    pub fn spec(&self) -> &SystemSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+
+    pub fn example_trace() -> GroundTruthTrace {
+        let specs = system_catalog();
+        let spec = specs[1].clone(); // A100
+        let pm = PerfModel::new(llm_catalog()[1].clone());
+        GroundTruthTrace::new(pm.power_model(&spec, 64, 64), &spec, 35.0)
+    }
+
+    #[test]
+    fn package_exceeds_task_by_background() {
+        let tr = example_trace();
+        let t = tr.duration() * 0.5;
+        let pkg = tr.package_power(t);
+        assert!(pkg > tr.background_w);
+        assert!((0.0..=1.0).contains(&tr.task_share(t)));
+    }
+
+    #[test]
+    fn after_completion_only_idle_plus_background() {
+        let tr = example_trace();
+        let t = tr.duration() + 1.0;
+        assert_eq!(tr.package_power(t), tr.idle_w + tr.background_w);
+        assert_eq!(tr.task_share(t), 0.0);
+    }
+
+    #[test]
+    fn noise_has_zero_mean() {
+        let tr = example_trace();
+        let mut rng = Xoshiro256::seed_from(3);
+        let t = tr.duration() * 0.5;
+        let clean = tr.package_power(t);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| tr.noisy_package_power(t, 0.05, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - clean).abs() / clean < 0.01);
+    }
+}

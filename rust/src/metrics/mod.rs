@@ -1,0 +1,222 @@
+//! Metrics registry for the live coordinator: counters, gauges, and
+//! fixed-bucket histograms, exportable as JSON — lock-cheap (atomics for
+//! counters/gauges; a light mutex for histograms).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge (signed).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-spaced latency histogram, 1 µs .. ~100 s.
+pub struct LatencyHisto {
+    buckets: Mutex<Vec<u64>>,
+}
+
+const HISTO_BUCKETS: usize = 64;
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self { buckets: Mutex::new(vec![0; HISTO_BUCKETS]) }
+    }
+}
+
+impl LatencyHisto {
+    fn bucket_of(secs: f64) -> usize {
+        // bucket i covers [1µs · r^i, 1µs · r^{i+1}) with r chosen so the
+        // top bucket is ~100 s: r = (1e8)^(1/64)
+        let ratio = (1e8f64).powf(1.0 / HISTO_BUCKETS as f64);
+        let x = (secs / 1e-6).max(1.0);
+        (x.ln() / ratio.ln()).floor().min((HISTO_BUCKETS - 1) as f64) as usize
+    }
+
+    pub fn observe(&self, secs: f64) {
+        let idx = Self::bucket_of(secs);
+        self.buckets.lock().unwrap()[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.lock().unwrap().iter().sum()
+    }
+
+    /// Approximate quantile from bucket midpoints (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let b = self.buckets.lock().unwrap();
+        let total: u64 = b.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let ratio = (1e8f64).powf(1.0 / HISTO_BUCKETS as f64);
+        let mut acc = 0;
+        for (i, &c) in b.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1e-6 * ratio.powi(i as i32 + 1);
+            }
+        }
+        1e-6 * ratio.powi(HISTO_BUCKETS as i32)
+    }
+}
+
+/// Named registry, JSON-exportable.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
+    histos: Mutex<BTreeMap<String, std::sync::Arc<LatencyHisto>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters.lock().unwrap().entry(name.into()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges.lock().unwrap().entry(name.into()).or_default().clone()
+    }
+
+    pub fn histo(&self, name: &str) -> std::sync::Arc<LatencyHisto> {
+        self.histos.lock().unwrap().entry(name.into()).or_default().clone()
+    }
+
+    /// Compact JSON snapshot.
+    pub fn to_json(&self) -> String {
+        let mut w = crate::util::json::JsonWriter::new();
+        w.raw("{");
+        let mut first = true;
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            if !first {
+                w.raw(",");
+            }
+            first = false;
+            w.string(k);
+            w.raw(":");
+            w.num(c.get() as f64);
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            if !first {
+                w.raw(",");
+            }
+            first = false;
+            w.string(k);
+            w.raw(":");
+            w.num(g.get() as f64);
+        }
+        for (k, h) in self.histos.lock().unwrap().iter() {
+            if !first {
+                w.raw(",");
+            }
+            first = false;
+            w.string(&format!("{k}_p50"));
+            w.raw(":");
+            w.num(h.quantile(0.5));
+            w.raw(",");
+            w.string(&format!("{k}_p99"));
+            w.raw(":");
+            w.num(h.quantile(0.99));
+            w.raw(",");
+            w.string(&format!("{k}_count"));
+            w.raw(":");
+            w.num(h.count() as f64);
+        }
+        w.raw("}");
+        w.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let r = Registry::default();
+        r.counter("requests").add(5);
+        r.counter("requests").inc();
+        assert_eq!(r.counter("requests").get(), 6);
+        r.gauge("inflight").set(3);
+        r.gauge("inflight").add(-1);
+        assert_eq!(r.gauge("inflight").get(), 2);
+    }
+
+    #[test]
+    fn histo_quantiles_ordered() {
+        let h = LatencyHisto::default();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-3); // 1ms..1s
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 < p99);
+        // p50 within a bucket of 0.5 s
+        assert!((0.3..0.9).contains(&p50), "p50={p50}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn json_snapshot_parses() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.gauge("b").set(-2);
+        r.histo("lat").observe(0.01);
+        let j = crate::util::json::Json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("b").unwrap().as_f64(), Some(-2.0));
+        assert!(j.get("lat_p50").is_some());
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let r = std::sync::Arc::new(Registry::default());
+        let c = r.counter("x");
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 40_000);
+    }
+}

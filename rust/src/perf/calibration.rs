@@ -1,0 +1,139 @@
+//! Calibration: recover perf-model constants from measured samples.
+//!
+//! The paper calibrates its Eq. 9/10 predictors from benchmark sweeps
+//! (§5.2: randomized repeated trials until a 95% CI of ±0.5 s or 25
+//! trials). We reproduce both the trial protocol and the fitting step so
+//! a user with a real testbed CSV can refit our catalog.
+
+use crate::hw::spec::SystemSpec;
+use crate::model::LlmSpec;
+use crate::perf::model::PerfModel;
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::{linregress, Welford};
+
+/// One measured (or simulated-measured) trial.
+#[derive(Clone, Copy, Debug)]
+pub struct Trial {
+    pub m: u32,
+    pub n: u32,
+    pub runtime_s: f64,
+    pub energy_j: f64,
+}
+
+/// Fitted linear decode model: runtime ≈ a + b·n at fixed m.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeFit {
+    pub base_s: f64,
+    pub per_token_s: f64,
+    pub r2: f64,
+}
+
+/// Fit the decode-side constants from an output-token sweep at fixed m.
+pub fn fit_decode(trials: &[Trial]) -> DecodeFit {
+    let xs: Vec<f64> = trials.iter().map(|t| t.n as f64).collect();
+    let ys: Vec<f64> = trials.iter().map(|t| t.runtime_s).collect();
+    let (a, b, r2) = linregress(&xs, &ys);
+    DecodeFit { base_s: a, per_token_s: b, r2 }
+}
+
+/// Implied effective bandwidth (B/s) from a decode fit.
+pub fn implied_bandwidth(fit: &DecodeFit, llm: &LlmSpec, mean_ctx: f64) -> f64 {
+    llm.decode_bytes(mean_ctx) / fit.per_token_s
+}
+
+/// The paper's §5.2.3 trial protocol: repeat a noisy measurement until
+/// the 95% CI half-width on the mean runtime is within `tol_s`, or
+/// `max_trials` is reached. Returns (mean, trials_used).
+pub fn run_trials<F>(mut measure: F, tol_s: f64, max_trials: u32) -> (f64, u32)
+where
+    F: FnMut() -> f64,
+{
+    let mut w = Welford::new();
+    for i in 1..=max_trials {
+        w.push(measure());
+        if i >= 2 && w.ci95_half_width() <= tol_s {
+            return (w.mean(), i);
+        }
+    }
+    (w.mean(), max_trials)
+}
+
+/// Generate noisy synthetic trials from the perf model (measurement noise
+/// ~ N(0, rel_noise·R)) — the test harness for the fitting code and the
+/// input to the `calibrate` subcommand's demo mode.
+pub fn synthetic_sweep(
+    perf: &PerfModel,
+    spec: &SystemSpec,
+    points: &[(u32, u32)],
+    rel_noise: f64,
+    rng: &mut Xoshiro256,
+) -> Vec<Trial> {
+    points
+        .iter()
+        .map(|&(m, n)| {
+            let c = perf.query_cost(spec, m, n);
+            let noise_r = 1.0 + rel_noise * rng.normal();
+            let noise_e = 1.0 + rel_noise * rng.normal();
+            Trial {
+                m,
+                n,
+                runtime_s: (c.runtime_s * noise_r).max(1e-6),
+                energy_j: (c.energy_j * noise_e).max(1e-6),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::{system_catalog, SystemId};
+    use crate::model::llm_catalog;
+
+    #[test]
+    fn fit_recovers_decode_rate() {
+        let perf = PerfModel::new(llm_catalog()[1].clone());
+        let specs = system_catalog();
+        let a100 = &specs[SystemId::SWING_A100.0];
+        let mut rng = Xoshiro256::seed_from(1);
+        let pts: Vec<(u32, u32)> = [8u32, 16, 32, 64, 128, 256, 512]
+            .iter()
+            .map(|&n| (32u32, n))
+            .collect();
+        let trials = synthetic_sweep(&perf, a100, &pts, 0.01, &mut rng);
+        let fit = fit_decode(&trials);
+        assert!(fit.r2 > 0.99, "r2={}", fit.r2);
+        // per-token time should match the model's mid-sweep step time ±15%
+        let want = perf.decode_step_time(a100, 32.0 + 128.0);
+        assert!(
+            (fit.per_token_s - want).abs() / want < 0.15,
+            "fit {} vs model {want}",
+            fit.per_token_s
+        );
+        // implied bandwidth lands near the spec's
+        let bw = implied_bandwidth(&fit, &perf.llm, 160.0);
+        assert!((bw - a100.mem_bw).abs() / a100.mem_bw < 0.2, "bw={bw:e}");
+    }
+
+    #[test]
+    fn trial_protocol_stops_early_when_quiet() {
+        let mut i = 0u32;
+        let (mean, used) = run_trials(
+            || {
+                i += 1;
+                1.0 + 0.001 * (i % 2) as f64
+            },
+            0.5,
+            25,
+        );
+        assert!(used < 25, "should stop early, used {used}");
+        assert!((mean - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn trial_protocol_caps_at_max() {
+        let mut rng = Xoshiro256::seed_from(2);
+        let (_, used) = run_trials(|| rng.normal_with(10.0, 5.0), 0.001, 25);
+        assert_eq!(used, 25); // paper's cap (§5.2.3 condition 2)
+    }
+}

@@ -1,0 +1,178 @@
+//! Energy model `E(m,n,s)` — Eq. 1's energy component, plus the hybrid
+//! total-energy predictions of Eqs. 9–10.
+//!
+//! Thin wrapper over [`PerfModel`]: callers pick total vs. net (idle-
+//! subtracted) attribution, matching the paper's mixed methodology
+//! (NVML total for GPUs, RAPL net for CPUs, powermetrics impact-factor
+//! for Apple Silicon).
+
+use super::model::PerfModel;
+use crate::hw::spec::SystemSpec;
+
+/// Which energy attribution to report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Attribution {
+    /// full draw while the task runs (CPU+GPU, incl. idle floor)
+    Total,
+    /// idle floor subtracted (paper's RAPL methodology, Eq. 7)
+    Net,
+}
+
+/// Energy model over a fixed (llm, attribution) pair.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    pub perf: PerfModel,
+    pub attribution: Attribution,
+}
+
+impl EnergyModel {
+    pub fn new(perf: PerfModel) -> Self {
+        Self { perf, attribution: Attribution::Total }
+    }
+
+    pub fn with_attribution(perf: PerfModel, attribution: Attribution) -> Self {
+        Self { perf, attribution }
+    }
+
+    /// E(m,n,s) in joules.
+    pub fn energy(&self, spec: &SystemSpec, m: u32, n: u32) -> f64 {
+        let c = self.perf.query_cost(spec, m, n);
+        match self.attribution {
+            Attribution::Total => c.energy_j,
+            Attribution::Net => c.net_energy_j,
+        }
+    }
+
+    /// R(m,n,s) in seconds (forwarded for cost-function convenience).
+    pub fn runtime(&self, spec: &SystemSpec, m: u32, n: u32) -> f64 {
+        self.perf.runtime(spec, m, n)
+    }
+
+    /// Mean energy per *input* token with fixed n — `E_sys,in(m)` of
+    /// Eq. 9 (the paper's input-sweep curves use n = 32).
+    pub fn energy_per_input_token(&self, spec: &SystemSpec, m: u32, fixed_n: u32) -> f64 {
+        self.energy(spec, m, fixed_n) / m.max(1) as f64
+    }
+
+    /// Mean energy per *output* token with fixed m — `E_sys,out(n)` of
+    /// Eq. 10 (the paper's output-sweep curves use m = 32).
+    pub fn energy_per_output_token(&self, spec: &SystemSpec, n: u32, fixed_m: u32) -> f64 {
+        self.energy(spec, fixed_m, n) / n.max(1) as f64
+    }
+}
+
+/// Eq. 9/10 evaluator: total predicted energy of a histogram of token
+/// counts split at threshold T between two systems (small → `small_sys`,
+/// large → `big_sys`).
+///
+/// `freqs[t]` = number of queries with token count `t` (the Alpaca
+/// histograms of Fig. 3); `energy_at(t, sys)` = mean per-token energy.
+pub fn threshold_split_energy<F>(
+    freqs: &[(u32, f64)],
+    threshold: u32,
+    mut energy_per_token_on: F,
+) -> f64
+where
+    F: FnMut(u32, bool) -> f64, // (token_count, use_small_system) -> J/token
+{
+    let mut total = 0.0;
+    for &(t, freq) in freqs {
+        let small = t <= threshold;
+        total += t as f64 * freq * energy_per_token_on(t, small);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::{system_catalog, SystemId};
+    use crate::model::llm_catalog;
+
+    fn em() -> EnergyModel {
+        EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+    }
+
+    #[test]
+    fn net_below_total() {
+        let specs = system_catalog();
+        let total = em();
+        let net = EnergyModel::with_attribution(total.perf.clone(), Attribution::Net);
+        for spec in &specs {
+            assert!(net.energy(spec, 64, 64) < total.energy(spec, 64, 64), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn per_token_metrics_positive_and_finite() {
+        let e = em();
+        let specs = system_catalog();
+        for spec in &specs {
+            for t in [8u32, 32, 256, 2048] {
+                let ein = e.energy_per_input_token(spec, t, 32);
+                assert!(ein.is_finite() && ein > 0.0);
+            }
+            for t in [8u32, 32, 256] {
+                let eout = e.energy_per_output_token(spec, t, 32);
+                assert!(eout.is_finite() && eout > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn input_crossover_exists_near_paper_threshold() {
+        // The mechanism behind T_in = 32: M1 cheaper per token at small m,
+        // A100 cheaper at large m, crossing in the tens-of-tokens regime.
+        let e = em();
+        let specs = system_catalog();
+        let m1 = &specs[SystemId::M1_PRO.0];
+        let a100 = &specs[SystemId::SWING_A100.0];
+        let mut crossover = None;
+        let mut prev_sign = None;
+        for m in 1..=2048u32 {
+            let d = e.energy_per_input_token(m1, m, 32) - e.energy_per_input_token(a100, m, 32);
+            let sign = d > 0.0;
+            if let Some(p) = prev_sign {
+                if p != sign {
+                    crossover = Some(m);
+                    break;
+                }
+            }
+            prev_sign = Some(sign);
+        }
+        let x = crossover.expect("no M1/A100 crossover in input sweep");
+        assert!((8..=128).contains(&x), "crossover at {x}, expected near 32");
+    }
+
+    #[test]
+    fn output_crossover_exists() {
+        let e = em();
+        let specs = system_catalog();
+        let m1 = &specs[SystemId::M1_PRO.0];
+        let a100 = &specs[SystemId::SWING_A100.0];
+        // M1 cheaper for very small generations...
+        assert!(
+            e.energy_per_output_token(m1, 8, 32) < e.energy_per_output_token(a100, 8, 32)
+        );
+        // ...but worse near its context cliff
+        assert!(
+            e.energy_per_output_token(m1, 512, 32) > e.energy_per_output_token(a100, 512, 32)
+        );
+    }
+
+    #[test]
+    fn threshold_split_reduces_to_single_system_at_extremes() {
+        let freqs: Vec<(u32, f64)> = (1..=100).map(|t| (t, 1.0)).collect();
+        let small_only = threshold_split_energy(&freqs, 100, |_, small| {
+            assert!(small);
+            1.0
+        });
+        let big_only = threshold_split_energy(&freqs, 0, |_, small| {
+            assert!(!small);
+            2.0
+        });
+        let sum_t: f64 = (1..=100).map(|t| t as f64).sum();
+        assert!((small_only - sum_t).abs() < 1e-9);
+        assert!((big_only - 2.0 * sum_t).abs() < 1e-9);
+    }
+}

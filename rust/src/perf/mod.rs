@@ -1,0 +1,15 @@
+//! Performance & energy models: `R(m,n,s)` and `E(m,n,s)` (Eq. 1).
+//!
+//! This is the quantitative substrate for every figure in the paper. A
+//! query's execution decomposes into phases (dispatch overhead → prefill
+//! → n decode steps); runtime follows a roofline per phase (prefill
+//! compute-bound, decode bandwidth-bound, the §5.5 asymmetry) and energy
+//! is the exact integral of the phase-resolved power model.
+
+pub mod calibration;
+pub mod energy;
+pub mod model;
+pub mod roofline;
+
+pub use energy::EnergyModel;
+pub use model::{PerfModel, QueryCost, Feasibility};

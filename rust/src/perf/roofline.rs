@@ -1,0 +1,80 @@
+//! Roofline helpers (§5.3 cites Williams et al.'s model for the observed
+//! throughput shape) + the L1 kernel VMEM/MXU estimators recorded in
+//! EXPERIMENTS.md §Perf.
+
+use crate::hw::spec::SystemSpec;
+
+/// Arithmetic intensity (FLOP/byte) at which a system flips from
+/// bandwidth-bound to compute-bound.
+pub fn ridge_point(spec: &SystemSpec) -> f64 {
+    spec.compute_flops / spec.mem_bw
+}
+
+/// Attainable FLOP/s at a given arithmetic intensity.
+pub fn attainable_flops(spec: &SystemSpec, intensity: f64) -> f64 {
+    (spec.mem_bw * intensity).min(spec.compute_flops)
+}
+
+/// VMEM footprint estimate (bytes) of the Pallas flash-attention kernel
+/// for given tile sizes — documents the L1 design choice (16 MB budget).
+pub fn flash_attention_vmem(block_q: usize, block_k: usize, d_head: usize) -> usize {
+    let f = 4; // fp32 accumulate
+    let q_tile = block_q * d_head * f;
+    let kv_tiles = 2 * block_k * d_head * f;
+    let acc = block_q * d_head * f;
+    let softmax_state = 2 * block_q * f; // m, l
+    let s_tile = block_q * block_k * f;
+    // ×2 on streamed tiles for double buffering headroom
+    q_tile + 2 * kv_tiles + acc + softmax_state + s_tile
+}
+
+/// MXU utilization *estimate* for the flash kernel: fraction of issued
+/// MACs that land on the 128×128 systolic array given tile shapes.
+pub fn flash_attention_mxu_utilization(block_q: usize, block_k: usize, d_head: usize) -> f64 {
+    // each matmul tile is (block_q × d_head) · (d_head × block_k);
+    // the MXU wants each dim ≥ 128 — fractional occupancy otherwise.
+    let occ = |dim: usize| (dim as f64 / 128.0).min(1.0);
+    occ(block_q) * occ(block_k) * occ(d_head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+
+    #[test]
+    fn ridge_point_ordering() {
+        let specs = system_catalog();
+        // A100 ridge ≈ 56e12/1150e9 ≈ 49 FLOP/B; decode intensity (~1) is
+        // far below → decode is bandwidth-bound on every system.
+        for s in &specs {
+            assert!(ridge_point(s) > 2.0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn attainable_clamps_at_peak() {
+        let specs = system_catalog();
+        let a100 = &specs[1];
+        assert!(attainable_flops(a100, 0.1) < a100.compute_flops);
+        assert_eq!(attainable_flops(a100, 1e6), a100.compute_flops);
+    }
+
+    #[test]
+    fn default_tiles_fit_vmem_budget() {
+        // attention.py defaults: block_q = block_k = 32, d_head = 32
+        let bytes = flash_attention_vmem(32, 32, 32);
+        assert!(bytes < 16 * 1024 * 1024, "VMEM estimate {bytes} over budget");
+        // and a production-shaped tile (128×128×128) still fits
+        let big = flash_attention_vmem(128, 128, 128);
+        assert!(big < 16 * 1024 * 1024, "{big}");
+    }
+
+    #[test]
+    fn mxu_estimate_monotone_in_tiles() {
+        let small = flash_attention_mxu_utilization(32, 32, 32);
+        let big = flash_attention_mxu_utilization(128, 128, 128);
+        assert!(small < big);
+        assert!((big - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,284 @@
+//! Artifact loading: `manifest.json` + `weights.bin` + compiled HLO
+//! executables, matching `python/compile/aot.py`'s output format exactly.
+
+use super::client::Runtime;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub seed: u64,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub cache_capacity: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub param_count: u64,
+    pub params: Vec<ParamEntry>,
+    pub weights_bytes: u64,
+    pub entry_files: BTreeMap<String, String>,
+}
+
+/// One weight tensor in `weights.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub elems: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let cfg = j.req("config").map_err(|e| anyhow!(e))?;
+        let get_u = |v: &Json, k: &str| -> Result<u64> {
+            v.req(k)
+                .map_err(|e| anyhow!(e))?
+                .as_u64()
+                .ok_or_else(|| anyhow!("manifest: '{k}' not a number"))
+        };
+        let params_j = j
+            .req("weights")
+            .and_then(|w| w.req("params"))
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: weights.params not an array"))?;
+        let mut params = Vec::with_capacity(params_j.len());
+        for p in params_j {
+            params.push(ParamEntry {
+                name: p
+                    .req("name")
+                    .map_err(|e| anyhow!(e))?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string(),
+                shape: p
+                    .req("shape")
+                    .map_err(|e| anyhow!(e))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: get_u(p, "offset")? as usize,
+                elems: get_u(p, "elems")? as usize,
+            });
+        }
+        let mut entry_files = BTreeMap::new();
+        let eps = j
+            .req("entrypoints")
+            .map_err(|e| anyhow!(e))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: entrypoints not an object"))?;
+        for (name, ep) in eps {
+            let file = ep
+                .req("file")
+                .map_err(|e| anyhow!(e))?
+                .as_str()
+                .ok_or_else(|| anyhow!("entrypoint file"))?;
+            entry_files.insert(name.clone(), file.to_string());
+        }
+        let buckets = cfg
+            .req("prefill_buckets")
+            .map_err(|e| anyhow!(e))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("prefill_buckets"))?
+            .iter()
+            .map(|b| b.as_usize().unwrap_or(0))
+            .collect();
+        Ok(Manifest {
+            seed: get_u(&j, "seed")?,
+            vocab: get_u(cfg, "vocab")? as usize,
+            d_model: get_u(cfg, "d_model")? as usize,
+            n_layers: get_u(cfg, "n_layers")? as usize,
+            n_heads: get_u(cfg, "n_heads")? as usize,
+            d_head: get_u(cfg, "d_head")? as usize,
+            d_ff: get_u(cfg, "d_ff")? as usize,
+            cache_capacity: get_u(cfg, "cache_capacity")? as usize,
+            prefill_buckets: buckets,
+            param_count: get_u(cfg, "param_count")?,
+            weights_bytes: j
+                .req("weights")
+                .and_then(|w| w.req("bytes"))
+                .map_err(|e| anyhow!(e))?
+                .as_u64()
+                .ok_or_else(|| anyhow!("weights.bytes"))?,
+            params,
+            entry_files,
+        })
+    }
+
+    /// Smallest bucket that can hold a prompt of `len` tokens.
+    pub fn bucket_for(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.params.is_empty() {
+            bail!("manifest has no params");
+        }
+        let mut offset = 0usize;
+        for p in &self.params {
+            if p.offset != offset {
+                bail!("param {} offset {} != expected {offset}", p.name, p.offset);
+            }
+            let n: usize = p.shape.iter().product();
+            if n != p.elems {
+                bail!("param {} shape/elems mismatch", p.name);
+            }
+            offset += p.elems * 4;
+        }
+        if offset as u64 != self.weights_bytes {
+            bail!("weights.bytes {} != sum of params {offset}", self.weights_bytes);
+        }
+        let mut sorted = self.prefill_buckets.clone();
+        sorted.sort_unstable();
+        if sorted != self.prefill_buckets || sorted.is_empty() {
+            bail!("prefill_buckets must be ascending and non-empty");
+        }
+        if *sorted.last().unwrap() > self.cache_capacity {
+            bail!("largest bucket exceeds cache capacity");
+        }
+        Ok(())
+    }
+}
+
+/// Weights (resident on the PJRT device) + compiled executables.
+pub struct ArtifactBundle {
+    pub manifest: Manifest,
+    /// weights uploaded once at load time (§Perf: no per-call transfer)
+    pub weight_bufs: Vec<xla::PjRtBuffer>,
+    /// prefill executables keyed by bucket size
+    pub prefill: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    pub decode: xla::PjRtLoadedExecutable,
+    /// device-side slicer: packed state -> logits (the only per-step
+    /// host transfer)
+    pub logits: xla::PjRtLoadedExecutable,
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+}
+
+impl ArtifactBundle {
+    /// Load manifest + weights (uploaded to the device once) and compile
+    /// every entrypoint.
+    pub fn load(rt: &Runtime, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+
+        let raw = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading {}/weights.bin", dir.display()))?;
+        if raw.len() as u64 != manifest.weights_bytes {
+            bail!("weights.bin size {} != manifest {}", raw.len(), manifest.weights_bytes);
+        }
+        let client = rt.client().clone();
+        let mut weight_bufs = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let bytes = &raw[p.offset..p.offset + p.elems * 4];
+            // decode f32 LE explicitly (alignment-safe); NB: the crate's
+            // `buffer_from_host_raw_bytes` mixes up ElementType and
+            // PrimitiveType discriminants, so use the typed upload.
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&floats, &p.shape, None)
+                .with_context(|| format!("uploading {}", p.name))?;
+            weight_bufs.push(buf);
+        }
+
+        let mut prefill = BTreeMap::new();
+        let mut decode = None;
+        let mut logits = None;
+        for (name, file) in &manifest.entry_files {
+            let exe = rt.compile_hlo_file(&dir.join(file))?;
+            if let Some(s) = name.strip_prefix("prefill_s") {
+                prefill.insert(s.parse::<usize>().context("bucket name")?, exe);
+            } else if name == "decode" {
+                decode = Some(exe);
+            } else if name == "logits" {
+                logits = Some(exe);
+            }
+        }
+        let decode = decode.ok_or_else(|| anyhow!("manifest has no decode entrypoint"))?;
+        let logits = logits
+            .ok_or_else(|| anyhow!("manifest has no logits entrypoint — regenerate with `make artifacts` (v2)"))?;
+        if prefill.is_empty() {
+            bail!("manifest has no prefill entrypoints");
+        }
+        Ok(Self { manifest, weight_bufs, prefill, decode, logits, client, dir: dir.to_path_buf() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1, "seed": 7,
+      "config": {"vocab": 256, "d_model": 8, "n_layers": 1, "n_heads": 2,
+                 "d_head": 4, "d_ff": 16, "cache_capacity": 32,
+                 "prefill_buckets": [8, 16], "param_count": 100},
+      "weights": {"file": "weights.bin", "bytes": 48,
+        "params": [
+          {"name": "a", "shape": [2, 3], "offset": 0, "elems": 6},
+          {"name": "b", "shape": [6], "offset": 24, "elems": 6}]},
+      "entrypoints": {"prefill_s8": {"file": "prefill_s8.hlo.txt"},
+                      "decode": {"file": "decode.hlo.txt"}}
+    }"#;
+
+    #[test]
+    fn parse_and_validate() {
+        let m = Manifest::parse(MINI).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.entry_files["decode"], "decode.hlo.txt");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.bucket_for(1), Some(8));
+        assert_eq!(m.bucket_for(8), Some(8));
+        assert_eq!(m.bucket_for(9), Some(16));
+        assert_eq!(m.bucket_for(17), None);
+    }
+
+    #[test]
+    fn validate_rejects_bad_offsets() {
+        let bad = MINI.replace("\"offset\": 24", "\"offset\": 20");
+        assert!(Manifest::parse(&bad).unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_size_mismatch() {
+        let bad = MINI.replace("\"bytes\": 48", "\"bytes\": 44");
+        assert!(Manifest::parse(&bad).unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn parses_shipped_manifest_if_present() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            m.validate().unwrap();
+            assert_eq!(m.vocab, 256);
+            assert!(m.prefill_buckets.contains(&32));
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT client + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text file and compile it to an executable.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.device_count() >= 1);
+        let p = rt.platform().to_lowercase();
+        assert!(p.contains("cpu") || p.contains("host"), "platform={p}");
+    }
+
+    #[test]
+    fn compile_missing_file_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.compile_hlo_file(Path::new("/nonexistent.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! The inference engine: bucketed prefill + autoregressive decode over
+//! the AOT artifacts. This is the L1/L2 compute path the L3 coordinator
+//! drives — pure rust + PJRT at request time.
+//!
+//! Bucketing trick: prompts are right-padded to the bucket size, and the
+//! first "real" step is a decode at `pos = len-1` re-feeding the last
+//! prompt token. The decode writes that token's K/V (identical to what
+//! prefill computed) and masks every cache row ≥ `pos+1`, so pad garbage
+//! is never attended to and the logits are exact for any prompt length —
+//! no per-length HLO needed beyond the bucket set.
+
+use super::artifacts::ArtifactBundle;
+use crate::util::rng::Xoshiro256;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Sampling configuration for generation.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, seed: 0 }
+    }
+}
+
+/// Outcome of one generation call, with phase timings for the energy
+/// accountant.
+#[derive(Clone, Debug)]
+pub struct GenerationResult {
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    pub bucket: usize,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+}
+
+impl GenerationResult {
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.tokens.len() as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Engine over one artifact bundle. `generate` is `&self` and the xla
+/// executables are internally synchronized, so one engine can be shared
+/// behind an `Arc` by worker threads.
+pub struct InferenceEngine {
+    bundle: ArtifactBundle,
+}
+
+impl InferenceEngine {
+    pub fn new(bundle: ArtifactBundle) -> Self {
+        Self { bundle }
+    }
+
+    pub fn manifest(&self) -> &super::artifacts::Manifest {
+        &self.bundle.manifest
+    }
+
+    /// Generate up to `gen_tokens` tokens after `prompt` (token ids incl.
+    /// BOS). Stops early only at cache capacity.
+    pub fn generate(&self, prompt: &[i32], gen_tokens: u32, sp: SamplingParams) -> Result<GenerationResult> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let man = &self.bundle.manifest;
+        // truncate from the front if the prompt exceeds the largest bucket
+        let max_bucket = *man.prefill_buckets.last().unwrap();
+        let prompt = if prompt.len() > max_bucket {
+            &prompt[prompt.len() - max_bucket..]
+        } else {
+            prompt
+        };
+        let len = prompt.len();
+        let bucket = man.bucket_for(len).context("no bucket fits prompt")?;
+
+        // ---- prefill (padded to bucket) ----
+        // §Perf path: weights are device-resident buffers uploaded at
+        // load; outputs are untupled (aot.py return_tuple=False), so the
+        // KV caches stay on device and chain into decode via execute_b —
+        // only logits (1 KB) cross back to the host per step.
+        let t0 = Instant::now();
+        let mut padded: Vec<i32> = prompt.to_vec();
+        padded.resize(bucket, super::tokenizer::BOS);
+        let client = &self.bundle.client;
+        let tok_buf = client.buffer_from_host_buffer::<i32>(&padded, &[bucket], None)?;
+        let exe = &self.bundle.prefill[&bucket];
+        let mut args: Vec<&xla::PjRtBuffer> = self.bundle.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        let mut out = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let mut outputs = out.remove(0);
+        if outputs.len() != 1 {
+            bail!(
+                "prefill returned {} outputs, expected 1 packed state — \
+                 regenerate artifacts with `make artifacts` (packed v2 format)",
+                outputs.len()
+            );
+        }
+        // packed state [logits | k | v] stays on device across the run
+        let mut packed = outputs.pop().unwrap();
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        // ---- decode loop (device-buffer chained) ----
+        let t1 = Instant::now();
+        let mut rng = Xoshiro256::seed_from(sp.seed);
+        let mut pos = (len - 1) as i32;
+        let mut token = prompt[len - 1];
+        let mut generated = Vec::with_capacity(gen_tokens as usize);
+        let cap = man.cache_capacity as i32;
+        for _ in 0..gen_tokens {
+            if pos + 1 >= cap {
+                break; // KV cache full
+            }
+            let pos_buf = client.buffer_from_host_buffer::<i32>(&[pos], &[1], None)?;
+            let tok_buf = client.buffer_from_host_buffer::<i32>(&[token], &[1], None)?;
+            let mut args: Vec<&xla::PjRtBuffer> = self.bundle.weight_bufs.iter().collect();
+            args.push(&packed);
+            args.push(&pos_buf);
+            args.push(&tok_buf);
+            let mut out = self.bundle.decode.execute_b::<&xla::PjRtBuffer>(&args)?;
+            let mut outputs = out.remove(0);
+            if outputs.len() != 1 {
+                bail!("decode returned {} outputs, expected 1", outputs.len());
+            }
+            packed = outputs.pop().unwrap();
+            // device-side slice: only the vocab-sized logits cross back
+            let mut lg_out = self.bundle.logits.execute_b::<&xla::PjRtBuffer>(&[&packed])?;
+            let logits: Vec<f32> = lg_out.remove(0).pop().unwrap().to_literal_sync()?.to_vec()?;
+            token = sample(&logits, sp.temperature, &mut rng);
+            generated.push(token);
+            pos += 1;
+        }
+        let decode_s = t1.elapsed().as_secs_f64();
+
+        Ok(GenerationResult { prompt_len: len, tokens: generated, bucket, prefill_s, decode_s })
+    }
+}
+
+/// Argmax or temperature sampling over raw logits.
+fn sample(logits: &[f32], temperature: f32, rng: &mut Xoshiro256) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // softmax with temperature, numerically stable
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .collect();
+    rng.categorical(&weights) as i32
+}
+
+fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_sampling() {
+        let logits = vec![0.0f32, 5.0, -1.0, 4.9];
+        assert_eq!(argmax(&logits), 1);
+        let mut rng = Xoshiro256::seed_from(1);
+        // greedy
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+        // low temperature ≈ greedy
+        let picks: Vec<i32> = (0..50).map(|_| sample(&logits, 0.01, &mut rng)).collect();
+        assert!(picks.iter().filter(|&&p| p == 1).count() > 45);
+        // high temperature spreads
+        let picks: Vec<i32> = (0..500).map(|_| sample(&logits, 50.0, &mut rng)).collect();
+        let distinct: std::collections::BTreeSet<i32> = picks.into_iter().collect();
+        assert!(distinct.len() >= 3);
+    }
+
+    #[test]
+    fn sampling_deterministic_per_seed() {
+        let logits: Vec<f32> = (0..64).map(|i| ((i * 37) % 11) as f32 * 0.3).collect();
+        let run = |seed| {
+            let mut rng = Xoshiro256::seed_from(seed);
+            (0..20).map(|_| sample(&logits, 1.0, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+}

@@ -1,0 +1,13 @@
+//! The PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client —
+//! the request path never touches Python.
+
+pub mod artifacts;
+pub mod client;
+pub mod engine;
+pub mod tokenizer;
+
+pub use artifacts::{ArtifactBundle, Manifest};
+pub use client::Runtime;
+pub use engine::{GenerationResult, InferenceEngine, SamplingParams};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,71 @@
+//! Byte-level tokenizer: token == byte, with byte 0 reserved as BOS/pad.
+//! No external vocab files — any UTF-8 (or binary) text is servable,
+//! which keeps the end-to-end example self-contained.
+
+/// Byte-level tokenizer for the served tiny model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+/// Reserved token: beginning-of-sequence / padding.
+pub const BOS: i32 = 0;
+
+impl ByteTokenizer {
+    /// Encode text → BOS + bytes (0 bytes are mapped to 1 to keep BOS
+    /// unambiguous; lossy only for NUL, which never appears in text).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| if b == 0 { 1 } else { b as i32 }));
+        out
+    }
+
+    /// Decode generated token ids back to (lossy) text.
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .filter(|&&t| t != BOS)
+            .map(|&t| (t.clamp(0, 255)) as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_ascii() {
+        let t = ByteTokenizer;
+        let ids = t.encode("hello");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn round_trip_utf8() {
+        let t = ByteTokenizer;
+        let s = "héllo ∞";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn nul_byte_remapped() {
+        let t = ByteTokenizer;
+        let ids = t.encode("\0");
+        assert_eq!(ids, vec![BOS, 1]);
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let t = ByteTokenizer;
+        for id in t.encode("any text at all — ünïcode too") {
+            assert!((0..256).contains(&id));
+        }
+    }
+}

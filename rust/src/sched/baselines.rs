@@ -1,0 +1,135 @@
+//! Workload-unaware baselines the paper compares against (§6: "a
+//! workload-unaware baseline") plus standard load-balancing strawmen.
+
+use super::policy::{ClusterView, Policy};
+use crate::hw::catalog::SystemId;
+use crate::util::rng::Xoshiro256;
+use crate::workload::Query;
+
+/// Everything on one system — the paper's primary baseline (all-A100)
+/// and the dashed single-hardware lines of Figs. 4–5.
+pub struct AllOnPolicy {
+    target: SystemId,
+}
+
+impl AllOnPolicy {
+    pub fn new(target: SystemId) -> Self {
+        Self { target }
+    }
+}
+
+impl Policy for AllOnPolicy {
+    fn name(&self) -> String {
+        format!("all-on-{}", self.target)
+    }
+
+    fn assign(&mut self, _q: &Query, _view: &ClusterView) -> SystemId {
+        self.target
+    }
+}
+
+/// Round-robin across systems, ignoring workload and heterogeneity.
+#[derive(Default)]
+pub struct RoundRobinPolicy {
+    next: usize,
+}
+
+impl Policy for RoundRobinPolicy {
+    fn name(&self) -> String {
+        "round-robin".into()
+    }
+
+    fn assign(&mut self, _q: &Query, view: &ClusterView) -> SystemId {
+        let id = SystemId(self.next % view.n());
+        self.next = (self.next + 1) % view.n();
+        id
+    }
+}
+
+/// Uniform random placement.
+pub struct RandomPolicy {
+    rng: Xoshiro256,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::seed_from(seed) }
+    }
+}
+
+impl Policy for RandomPolicy {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn assign(&mut self, _q: &Query, view: &ClusterView) -> SystemId {
+        SystemId(self.rng.below(view.n() as u64) as usize)
+    }
+}
+
+/// Join-shortest-queue by estimated outstanding seconds: load-aware but
+/// still workload/energy-unaware.
+pub struct JsqPolicy;
+
+impl Policy for JsqPolicy {
+    fn name(&self) -> String {
+        "jsq".into()
+    }
+
+    fn assign(&mut self, _q: &Query, view: &ClusterView) -> SystemId {
+        let mut best = 0;
+        let mut depth = f64::INFINITY;
+        for (i, &d) in view.queue_depth_s.iter().enumerate() {
+            if d < depth {
+                depth = d;
+                best = i;
+            }
+        }
+        SystemId(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+
+    fn check_assign(p: &mut dyn Policy, depths: &[f64]) -> SystemId {
+        let systems = system_catalog();
+        let lens = vec![0usize; systems.len()];
+        let v = ClusterView { systems: &systems, queue_depth_s: depths, queue_len: &lens };
+        p.assign(&Query::new(0, 16, 16), &v)
+    }
+
+    #[test]
+    fn all_on_constant() {
+        let mut p = AllOnPolicy::new(SystemId(1));
+        for _ in 0..5 {
+            assert_eq!(check_assign(&mut p, &[0.0, 0.0, 0.0]), SystemId(1));
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut p = RoundRobinPolicy::default();
+        let got: Vec<usize> = (0..6).map(|_| check_assign(&mut p, &[0.0, 0.0, 0.0]).0).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn random_covers_all_systems() {
+        let mut p = RandomPolicy::new(3);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[check_assign(&mut p, &[0.0, 0.0, 0.0]).0] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn jsq_picks_shallowest() {
+        let mut p = JsqPolicy;
+        assert_eq!(check_assign(&mut p, &[5.0, 1.0, 9.0]), SystemId(1));
+        assert_eq!(check_assign(&mut p, &[0.0, 1.0, 9.0]), SystemId(0));
+    }
+}

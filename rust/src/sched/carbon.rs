@@ -1,0 +1,203 @@
+//! Carbon-aware scheduling (extension; the paper's §7.1 cites
+//! Radovanović et al.'s carbon-aware computing as adjacent work).
+//!
+//! Joules are not the quantity the atmosphere cares about: the same
+//! joule costs different grams of CO₂ depending on *where* and *when* it
+//! is drawn. A hybrid cluster may even span regions (edge M1 fleet vs.
+//! datacenter GPUs). This module generalizes Eq. 1 to
+//!
+//! `U(m,n,s) = λ·CI(s,t)·E(m,n,s) + (1−λ)·R(m,n,s)`
+//!
+//! with `CI` a per-system, time-varying carbon intensity (gCO₂/kWh).
+
+use super::policy::{ClusterView, Policy};
+use crate::hw::catalog::SystemId;
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::Feasibility;
+use crate::workload::Query;
+
+pub const J_PER_KWH: f64 = 3.6e6;
+
+/// A daily carbon-intensity profile (gCO₂/kWh) per system, 24 hourly
+/// points, linearly interpolated. Real grids swing 2–4× across a day.
+#[derive(Clone, Debug)]
+pub struct CarbonProfile {
+    pub hourly: [f64; 24],
+}
+
+impl CarbonProfile {
+    /// Flat profile (reduces carbon-aware to energy-aware scheduling).
+    pub fn flat(g_per_kwh: f64) -> Self {
+        Self { hourly: [g_per_kwh; 24] }
+    }
+
+    /// A solar-heavy grid: low mid-day, high overnight.
+    pub fn solar_grid(base: f64) -> Self {
+        let mut hourly = [0.0; 24];
+        for (h, v) in hourly.iter_mut().enumerate() {
+            // dip to ~40% of base at 13:00, peak overnight
+            let phase = (h as f64 - 13.0) / 24.0 * std::f64::consts::TAU;
+            *v = base * (1.0 - 0.6 * (phase.cos().max(0.0)));
+        }
+        Self { hourly }
+    }
+
+    /// Intensity at time `t` seconds into the day (wraps).
+    pub fn at(&self, t_s: f64) -> f64 {
+        let hour = (t_s / 3600.0).rem_euclid(24.0);
+        let lo = hour.floor() as usize % 24;
+        let hi = (lo + 1) % 24;
+        let frac = hour - hour.floor();
+        self.hourly[lo] * (1.0 - frac) + self.hourly[hi] * frac
+    }
+}
+
+/// Carbon-aware variant of the cost policy.
+pub struct CarbonPolicy {
+    pub lambda: f64,
+    energy: EnergyModel,
+    profiles: Vec<CarbonProfile>,
+    /// wall-clock offset of "now" in seconds-of-day (advanced by arrivals)
+    pub clock_s: f64,
+}
+
+impl CarbonPolicy {
+    pub fn new(lambda: f64, energy: EnergyModel, profiles: Vec<CarbonProfile>) -> Self {
+        assert!((0.0..=1.0).contains(&lambda));
+        Self { lambda, energy, profiles, clock_s: 0.0 }
+    }
+
+    /// Grams of CO₂ for the query on system `sid` at the current clock.
+    pub fn grams(&self, q: &Query, view: &ClusterView, sid: usize) -> f64 {
+        let spec = &view.systems[sid];
+        let e_j = self.energy.energy(spec, q.input_tokens, q.output_tokens);
+        let ci = self.profiles[sid].at(self.clock_s + q.arrival_s);
+        ci * e_j / J_PER_KWH
+    }
+
+    fn cost(&self, q: &Query, view: &ClusterView, sid: usize) -> f64 {
+        let spec = &view.systems[sid];
+        if self.energy.perf.feasibility(spec, q.input_tokens, q.output_tokens) != Feasibility::Ok {
+            return f64::INFINITY;
+        }
+        let r = self.energy.runtime(spec, q.input_tokens, q.output_tokens);
+        self.lambda * self.grams(q, view, sid) + (1.0 - self.lambda) * r
+    }
+}
+
+impl Policy for CarbonPolicy {
+    fn name(&self) -> String {
+        format!("carbon(λ={})", self.lambda)
+    }
+
+    fn assign(&mut self, q: &Query, view: &ClusterView) -> SystemId {
+        let mut best = 0;
+        let mut best_c = f64::INFINITY;
+        for sid in 0..view.n() {
+            let c = self.cost(q, view, sid);
+            if c < best_c {
+                best_c = c;
+                best = sid;
+            }
+        }
+        SystemId(best)
+    }
+}
+
+/// Total grams of CO₂ for an assignment (reporting helper).
+pub fn total_grams(
+    queries: &[Query],
+    assignment: &[SystemId],
+    view_systems: &[crate::hw::spec::SystemSpec],
+    energy: &EnergyModel,
+    profiles: &[CarbonProfile],
+    clock_s: f64,
+) -> f64 {
+    queries
+        .iter()
+        .zip(assignment)
+        .map(|(q, sid)| {
+            let e = energy.energy(&view_systems[sid.0], q.input_tokens, q.output_tokens);
+            profiles[sid.0].at(clock_s + q.arrival_s) * e / J_PER_KWH
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+
+    fn energy() -> EnergyModel {
+        EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+    }
+
+    #[test]
+    fn profile_interpolates_and_wraps() {
+        let p = CarbonProfile::solar_grid(400.0);
+        assert!(p.at(13.0 * 3600.0) < p.at(1.0 * 3600.0), "midday must be cleaner");
+        // wrap: hour 25 == hour 1
+        assert!((p.at(25.0 * 3600.0) - p.at(3600.0)).abs() < 1e-9);
+        // flat profile is constant
+        let f = CarbonProfile::flat(300.0);
+        assert_eq!(f.at(0.0), 300.0);
+        assert_eq!(f.at(12.5 * 3600.0), 300.0);
+    }
+
+    #[test]
+    fn flat_profiles_reduce_to_energy_policy() {
+        let systems = system_catalog();
+        let em = energy();
+        let profiles = vec![CarbonProfile::flat(300.0); 3];
+        let mut carbon = CarbonPolicy::new(1.0, em.clone(), profiles);
+        let mut cost = crate::sched::cost::CostPolicy::new(1.0, em);
+        let depths = vec![0.0; 3];
+        let lens = vec![0usize; 3];
+        let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+        use crate::sched::policy::Policy as _;
+        for (m, n) in [(8u32, 8u32), (64, 64), (1024, 128)] {
+            let q = Query::new(0, m, n);
+            assert_eq!(carbon.assign(&q, &view), cost.assign(&q, &view), "({m},{n})");
+        }
+    }
+
+    #[test]
+    fn dirty_grid_repels_queries() {
+        // A100 on a very dirty grid, M1 on a clean one → carbon policy
+        // shifts more queries to the M1 than the energy policy would
+        let systems = system_catalog();
+        let em = energy();
+        let profiles = vec![
+            CarbonProfile::flat(20.0),   // clean edge
+            CarbonProfile::flat(900.0),  // coal-heavy DC
+            CarbonProfile::flat(900.0),
+        ];
+        let mut carbon = CarbonPolicy::new(1.0, em.clone(), profiles);
+        let depths = vec![0.0; 3];
+        let lens = vec![0usize; 3];
+        let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+        use crate::sched::policy::Policy as _;
+        // a mid-size query that energy-routing sends to the A100
+        let q = Query::new(0, 128, 32);
+        let mut cost = crate::sched::cost::CostPolicy::new(1.0, em);
+        assert_eq!(cost.assign(&q, &view), SystemId(1));
+        assert_eq!(carbon.assign(&q, &view), SystemId(0), "clean M1 should win on carbon");
+    }
+
+    #[test]
+    fn grams_scale_with_intensity() {
+        let systems = system_catalog();
+        let em = energy();
+        let q = Query::new(0, 32, 32);
+        let depths = vec![0.0; 3];
+        let lens = vec![0usize; 3];
+        let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+        let p1 = CarbonPolicy::new(1.0, em.clone(), vec![CarbonProfile::flat(100.0); 3]);
+        let p2 = CarbonPolicy::new(1.0, em, vec![CarbonProfile::flat(200.0); 3]);
+        let g1 = p1.grams(&q, &view, 1);
+        let g2 = p2.grams(&q, &view, 1);
+        assert!((g2 / g1 - 2.0).abs() < 1e-9);
+    }
+}

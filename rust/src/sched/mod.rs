@@ -1,0 +1,16 @@
+//! Scheduling policies — the paper's contribution (§3 cost function,
+//! §6 threshold heuristic) plus the workload-unaware baselines it
+//! compares against and an offline oracle lower bound.
+
+pub mod adaptive;
+pub mod baselines;
+pub mod carbon;
+pub mod cost;
+pub mod oracle;
+pub mod policy;
+pub mod threshold;
+
+pub use cost::CostPolicy;
+pub use oracle::oracle_assign;
+pub use policy::{build_policy, ClusterView, Policy};
+pub use threshold::ThresholdPolicy;

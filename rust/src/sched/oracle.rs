@@ -1,0 +1,120 @@
+//! Offline oracle: per-query argmin of U with *exact* costs — the lower
+//! bound on what any workload-aware router can achieve when queueing is
+//! ignored (the paper's batch setting, where per-query argmin is in fact
+//! globally optimal because assignments don't interact).
+
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::Feasibility;
+use crate::workload::Query;
+
+/// Assign every query to its U-minimizing feasible system. Returns the
+/// assignment vector and the total cost.
+pub fn oracle_assign(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    lambda: f64,
+) -> (Vec<SystemId>, f64) {
+    let mut total = 0.0;
+    let assignment = queries
+        .iter()
+        .map(|q| {
+            let (m, n) = (q.input_tokens, q.output_tokens);
+            let mut best = SystemId(0);
+            let mut best_u = f64::INFINITY;
+            for (i, spec) in systems.iter().enumerate() {
+                if energy.perf.feasibility(spec, m, n) != Feasibility::Ok {
+                    continue;
+                }
+                let u = lambda * energy.energy(spec, m, n) + (1.0 - lambda) * energy.runtime(spec, m, n);
+                if u < best_u {
+                    best_u = u;
+                    best = SystemId(i);
+                }
+            }
+            total += best_u;
+            best
+        })
+        .collect();
+    (assignment, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+    use crate::workload::alpaca::AlpacaModel;
+
+    fn setup() -> (Vec<Query>, Vec<SystemSpec>, EnergyModel) {
+        let queries = AlpacaModel::default().trace(7, 2000);
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        (queries, systems, energy)
+    }
+
+    #[test]
+    fn oracle_beats_any_single_system() {
+        let (queries, systems, energy) = setup();
+        let (_, oracle_cost) = oracle_assign(&queries, &systems, &energy, 1.0);
+        for (i, spec) in systems.iter().enumerate() {
+            let single: f64 = queries
+                .iter()
+                .filter(|q| {
+                    energy.perf.feasibility(spec, q.input_tokens, q.output_tokens)
+                        == Feasibility::Ok
+                })
+                .map(|q| energy.energy(spec, q.input_tokens, q.output_tokens))
+                .sum();
+            assert!(
+                oracle_cost <= single + 1e-6,
+                "oracle {oracle_cost} worse than all-on-{i} {single}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_beats_threshold_policy() {
+        // the threshold heuristic approximates the oracle; oracle must
+        // be at least as good (it IS the per-query optimum)
+        let (queries, systems, energy) = setup();
+        let (assignment, oracle_cost) = oracle_assign(&queries, &systems, &energy, 1.0);
+        // threshold(32,32) routing cost
+        let threshold_cost: f64 = queries
+            .iter()
+            .map(|q| {
+                let small = q.input_tokens <= 32
+                    && q.output_tokens <= 32
+                    && energy.perf.feasibility(&systems[0], q.input_tokens, q.output_tokens)
+                        == Feasibility::Ok;
+                let sid = if small { 0 } else { 1 };
+                energy.energy(&systems[sid], q.input_tokens, q.output_tokens)
+            })
+            .sum();
+        assert!(oracle_cost <= threshold_cost + 1e-6);
+        // and the oracle actually uses both systems on Alpaca
+        let m1_count = assignment.iter().filter(|s| s.0 == 0).count();
+        assert!(m1_count > 0 && m1_count < queries.len());
+    }
+
+    #[test]
+    fn lambda_zero_oracle_minimizes_runtime() {
+        let (queries, systems, energy) = setup();
+        let (assignment, _) = oracle_assign(&queries, &systems, &energy, 0.0);
+        for (q, sid) in queries.iter().take(200).zip(&assignment) {
+            let chosen = energy.runtime(&systems[sid.0], q.input_tokens, q.output_tokens);
+            for (i, spec) in systems.iter().enumerate() {
+                if energy.perf.feasibility(spec, q.input_tokens, q.output_tokens) != Feasibility::Ok {
+                    continue;
+                }
+                assert!(
+                    chosen <= energy.runtime(spec, q.input_tokens, q.output_tokens) + 1e-9,
+                    "query {q:?} not runtime-optimal vs {i}"
+                );
+            }
+        }
+    }
+}

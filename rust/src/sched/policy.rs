@@ -1,0 +1,108 @@
+//! The `Policy` trait and cluster view the router exposes to policies.
+
+use crate::config::schema::PolicyConfig;
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+use crate::perf::energy::EnergyModel;
+use crate::workload::Query;
+
+/// What a policy may observe when placing a query: static specs plus the
+/// per-system queue state (for load-aware baselines like JSQ).
+pub struct ClusterView<'a> {
+    pub systems: &'a [SystemSpec],
+    /// outstanding work per system, in estimated seconds
+    pub queue_depth_s: &'a [f64],
+    /// in-flight + queued query count per system
+    pub queue_len: &'a [usize],
+}
+
+impl<'a> ClusterView<'a> {
+    pub fn n(&self) -> usize {
+        self.systems.len()
+    }
+}
+
+/// A scheduling policy: place one query on one system.
+///
+/// Eqs. 3–4 of the paper (each query assigned exactly once, partitions
+/// disjoint) are guaranteed structurally: `assign` returns exactly one
+/// `SystemId` per call, and the router calls it exactly once per query —
+/// a property test in `sim` verifies conservation end-to-end.
+pub trait Policy: Send {
+    fn name(&self) -> String;
+
+    /// Choose a system for `q`. Must return an index < view.n().
+    fn assign(&mut self, q: &Query, view: &ClusterView) -> SystemId;
+}
+
+/// Build a boxed policy from config (the energy model parameterizes the
+/// cost-based policies).
+pub fn build_policy(cfg: &PolicyConfig, energy: EnergyModel, systems: &[SystemSpec]) -> Box<dyn Policy> {
+    use super::baselines::{AllOnPolicy, JsqPolicy, RandomPolicy, RoundRobinPolicy};
+    use super::cost::CostPolicy;
+    use super::threshold::ThresholdPolicy;
+
+    match cfg {
+        PolicyConfig::Threshold { t_in, t_out, small, big } => Box::new(ThresholdPolicy::new(
+            *t_in,
+            *t_out,
+            lookup(systems, small),
+            lookup(systems, big),
+            energy,
+        )),
+        PolicyConfig::Cost { lambda } => Box::new(CostPolicy::new(*lambda, energy)),
+        PolicyConfig::AllOn(name) => Box::new(AllOnPolicy::new(lookup(systems, name))),
+        PolicyConfig::RoundRobin => Box::new(RoundRobinPolicy::default()),
+        PolicyConfig::Random { seed } => Box::new(RandomPolicy::new(*seed)),
+        PolicyConfig::JoinShortestQueue => Box::new(JsqPolicy),
+        PolicyConfig::Oracle { lambda } => Box::new(CostPolicy::new(*lambda, energy)), // oracle == cost for per-query U
+    }
+}
+
+fn lookup(systems: &[SystemSpec], name: &str) -> SystemId {
+    SystemId(
+        systems
+            .iter()
+            .position(|s| s.name.eq_ignore_ascii_case(name))
+            .unwrap_or_else(|| panic!("system '{name}' not in cluster")),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+
+    #[test]
+    fn build_all_policy_kinds() {
+        let systems = system_catalog();
+        let em = || EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let cfgs = [
+            PolicyConfig::Threshold { t_in: 32, t_out: 32, small: "M1-Pro".into(), big: "Swing-A100".into() },
+            PolicyConfig::Cost { lambda: 0.7 },
+            PolicyConfig::AllOn("Swing-A100".into()),
+            PolicyConfig::RoundRobin,
+            PolicyConfig::Random { seed: 1 },
+            PolicyConfig::JoinShortestQueue,
+            PolicyConfig::Oracle { lambda: 1.0 },
+        ];
+        let depth = vec![0.0; systems.len()];
+        let lens = vec![0usize; systems.len()];
+        let view = ClusterView { systems: &systems, queue_depth_s: &depth, queue_len: &lens };
+        for cfg in cfgs {
+            let mut p = build_policy(&cfg, em(), &systems);
+            let q = Query::new(0, 16, 16);
+            let sid = p.assign(&q, &view);
+            assert!(sid.0 < systems.len(), "{} returned {sid:?}", p.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not in cluster")]
+    fn lookup_unknown_panics() {
+        let systems = system_catalog();
+        lookup(&systems, "DGX-Z9");
+    }
+}

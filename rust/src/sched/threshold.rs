@@ -1,0 +1,105 @@
+//! §6 of the paper: the threshold heuristic. Queries with
+//! `m ≤ T_in && n ≤ T_out` go to the energy-efficient system; everything
+//! else to the high-performance GPU. Infeasible placements (OOM / M1
+//! generation cap) fall through to the big system.
+
+use super::policy::{ClusterView, Policy};
+use crate::hw::catalog::SystemId;
+use crate::perf::energy::EnergyModel;
+use crate::workload::Query;
+
+#[derive(Clone)]
+pub struct ThresholdPolicy {
+    pub t_in: u32,
+    pub t_out: u32,
+    pub small: SystemId,
+    pub big: SystemId,
+    energy: EnergyModel,
+}
+
+impl ThresholdPolicy {
+    pub fn new(t_in: u32, t_out: u32, small: SystemId, big: SystemId, energy: EnergyModel) -> Self {
+        Self { t_in, t_out, small, big, energy }
+    }
+
+    /// The bare routing predicate (used by Eq. 9/10 evaluators too).
+    pub fn routes_small(&self, q: &Query) -> bool {
+        q.input_tokens <= self.t_in && q.output_tokens <= self.t_out
+    }
+}
+
+impl Policy for ThresholdPolicy {
+    fn name(&self) -> String {
+        format!("threshold(t_in={},t_out={})", self.t_in, self.t_out)
+    }
+
+    fn assign(&mut self, q: &Query, view: &ClusterView) -> SystemId {
+        if self.routes_small(q) {
+            let spec = &view.systems[self.small.0];
+            let feasible = self
+                .energy
+                .perf
+                .feasibility(spec, q.input_tokens, q.output_tokens)
+                == crate::perf::model::Feasibility::Ok;
+            if feasible {
+                return self.small;
+            }
+        }
+        self.big
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+
+    fn policy(t_in: u32, t_out: u32) -> ThresholdPolicy {
+        ThresholdPolicy::new(
+            t_in,
+            t_out,
+            SystemId::M1_PRO,
+            SystemId::SWING_A100,
+            EnergyModel::new(PerfModel::new(llm_catalog()[1].clone())),
+        )
+    }
+
+    fn view(systems: &[crate::hw::spec::SystemSpec]) -> (Vec<f64>, Vec<usize>) {
+        (vec![0.0; systems.len()], vec![0; systems.len()])
+    }
+
+    #[test]
+    fn routes_by_both_thresholds() {
+        let systems = system_catalog();
+        let (d, l) = view(&systems);
+        let v = ClusterView { systems: &systems, queue_depth_s: &d, queue_len: &l };
+        let mut p = policy(32, 32);
+        assert_eq!(p.assign(&Query::new(0, 32, 32), &v), SystemId::M1_PRO);
+        assert_eq!(p.assign(&Query::new(1, 33, 32), &v), SystemId::SWING_A100);
+        assert_eq!(p.assign(&Query::new(2, 32, 33), &v), SystemId::SWING_A100);
+        assert_eq!(p.assign(&Query::new(3, 2048, 1024), &v), SystemId::SWING_A100);
+    }
+
+    #[test]
+    fn infeasible_small_system_falls_through() {
+        // huge generation request below a silly-large threshold still
+        // can't run on the M1 (512-token cap) → must go big
+        let systems = system_catalog();
+        let (d, l) = view(&systems);
+        let v = ClusterView { systems: &systems, queue_depth_s: &d, queue_len: &l };
+        let mut p = policy(u32::MAX, u32::MAX);
+        assert_eq!(p.assign(&Query::new(0, 8, 4096), &v), SystemId::SWING_A100);
+    }
+
+    #[test]
+    fn degenerate_thresholds() {
+        let systems = system_catalog();
+        let (d, l) = view(&systems);
+        let v = ClusterView { systems: &systems, queue_depth_s: &d, queue_len: &l };
+        // T = 0 → everything big (the all-A100 baseline)
+        let mut p = policy(0, 0);
+        assert_eq!(p.assign(&Query::new(0, 1, 1), &v), SystemId::SWING_A100);
+    }
+}

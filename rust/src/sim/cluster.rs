@@ -1,0 +1,135 @@
+//! Cluster state for simulation and live routing: per-system FIFO queues
+//! over `count` identical nodes.
+
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+
+/// Dynamic state of one system class (possibly multiple nodes).
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    pub spec: SystemSpec,
+    /// next instant each node becomes free (s)
+    pub node_free_at: Vec<f64>,
+    /// queued + in-flight estimated service seconds (for JSQ / views)
+    pub queue_depth_s: f64,
+    pub queue_len: usize,
+    /// totals
+    pub busy_s: f64,
+    pub energy_j: f64,
+    pub queries: u64,
+}
+
+impl NodeState {
+    pub fn new(spec: SystemSpec) -> Self {
+        let nodes = spec.count.max(1);
+        Self {
+            spec,
+            node_free_at: vec![0.0; nodes],
+            queue_depth_s: 0.0,
+            queue_len: 0,
+            busy_s: 0.0,
+            energy_j: 0.0,
+            queries: 0,
+        }
+    }
+
+    /// Earliest node availability.
+    pub fn earliest_free(&self) -> f64 {
+        self.node_free_at.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Schedule a service of `dur` starting no earlier than `t`; returns
+    /// (start, finish).
+    pub fn schedule(&mut self, t: f64, dur: f64) -> (f64, f64) {
+        let (idx, &free_at) = self
+            .node_free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("system has nodes");
+        let start = t.max(free_at);
+        let finish = start + dur;
+        self.node_free_at[idx] = finish;
+        self.busy_s += dur;
+        self.queries += 1;
+        (start, finish)
+    }
+}
+
+/// The cluster: all system states, indexable by `SystemId`.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    pub nodes: Vec<NodeState>,
+}
+
+impl ClusterState {
+    pub fn new(systems: &[SystemSpec]) -> Self {
+        Self { nodes: systems.iter().cloned().map(NodeState::new).collect() }
+    }
+
+    pub fn get(&self, id: SystemId) -> &NodeState {
+        &self.nodes[id.0]
+    }
+
+    pub fn get_mut(&mut self, id: SystemId) -> &mut NodeState {
+        &mut self.nodes[id.0]
+    }
+
+    pub fn queue_depths(&self) -> Vec<f64> {
+        self.nodes.iter().map(|n| n.queue_depth_s).collect()
+    }
+
+    pub fn queue_lens(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.queue_len).collect()
+    }
+
+    /// Makespan: when the last node finishes.
+    pub fn makespan(&self) -> f64 {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.node_free_at.iter().copied())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+
+    #[test]
+    fn schedule_serializes_on_one_node() {
+        let mut specs = system_catalog();
+        specs[0].count = 1;
+        let mut cs = ClusterState::new(&specs);
+        let n = cs.get_mut(SystemId(0));
+        let (s1, f1) = n.schedule(0.0, 2.0);
+        let (s2, f2) = n.schedule(0.0, 3.0);
+        assert_eq!((s1, f1), (0.0, 2.0));
+        assert_eq!((s2, f2), (2.0, 5.0)); // waits for node
+        assert_eq!(n.busy_s, 5.0);
+        assert_eq!(n.queries, 2);
+    }
+
+    #[test]
+    fn multiple_nodes_run_parallel() {
+        let mut specs = system_catalog();
+        specs[0].count = 2;
+        let mut cs = ClusterState::new(&specs);
+        let n = cs.get_mut(SystemId(0));
+        let (_, f1) = n.schedule(0.0, 2.0);
+        let (s2, f2) = n.schedule(0.0, 2.0);
+        assert_eq!(f1, 2.0);
+        assert_eq!(s2, 0.0); // second node picks it up immediately
+        assert_eq!(f2, 2.0);
+    }
+
+    #[test]
+    fn makespan_is_max_over_nodes() {
+        let specs = system_catalog();
+        let mut cs = ClusterState::new(&specs);
+        cs.get_mut(SystemId(0)).schedule(0.0, 5.0);
+        cs.get_mut(SystemId(1)).schedule(0.0, 9.0);
+        assert_eq!(cs.makespan(), 9.0);
+    }
+}

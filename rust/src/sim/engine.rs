@@ -1,0 +1,271 @@
+//! The simulation engine: trace × policy × cluster → SimReport.
+//!
+//! Two modes, matching the paper:
+//! - **batch** (the paper's Eq. 9/10 analysis): assignments don't
+//!   interact; each query is charged its standalone `R`/`E` and nodes
+//!   serialize FIFO per system. Arrivals are all at t=0.
+//! - **online**: queries arrive over time; the policy sees live queue
+//!   state (enabling queue-aware extensions the paper speculates about).
+//!
+//! Infeasible assignments (policy sent an OOM query somewhere) are
+//! re-routed to the cheapest feasible system and counted in
+//! `SimOptions::strict` mode as errors.
+
+use super::cluster::ClusterState;
+use super::report::{QueryOutcome, SimReport, SystemTotals};
+use crate::hw::spec::SystemSpec;
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::Feasibility;
+use crate::sched::policy::{ClusterView, Policy};
+use crate::workload::Query;
+
+/// Engine knobs.
+#[derive(Clone, Debug)]
+pub struct SimOptions {
+    /// charge idle-floor energy of all nodes across the makespan
+    pub include_idle_energy: bool,
+    /// panic if the policy picks an infeasible system (tests); otherwise
+    /// fall back to the cheapest feasible one
+    pub strict: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self { include_idle_energy: false, strict: false }
+    }
+}
+
+/// Run the simulation. Queries must be sorted by arrival time (batch
+/// traces trivially are).
+pub fn simulate(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    energy: &EnergyModel,
+    opts: &SimOptions,
+) -> SimReport {
+    debug_assert!(
+        queries.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        "queries must be sorted by arrival"
+    );
+    let mut cluster = ClusterState::new(systems);
+    let mut outcomes = Vec::with_capacity(queries.len());
+    let mut sys_energy = vec![0.0f64; systems.len()];
+
+    for q in queries {
+        let (m, n) = (q.input_tokens, q.output_tokens);
+        // advance queue-depth estimates to the arrival instant
+        let depths: Vec<f64> = cluster
+            .nodes
+            .iter()
+            .map(|node| {
+                node.node_free_at
+                    .iter()
+                    .map(|&f| (f - q.arrival_s).max(0.0))
+                    .sum::<f64>()
+            })
+            .collect();
+        let lens = cluster.queue_lens();
+        let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+        let mut sid = policy.assign(q, &view);
+        assert!(sid.0 < systems.len(), "policy returned out-of-range system");
+
+        if energy.perf.feasibility(&systems[sid.0], m, n) != Feasibility::Ok {
+            if opts.strict {
+                panic!(
+                    "policy '{}' routed infeasible query (m={m}, n={n}) to {}",
+                    policy.name(),
+                    systems[sid.0].name
+                );
+            }
+            // fall back: cheapest feasible system
+            let mut best = None;
+            let mut best_e = f64::INFINITY;
+            for (i, spec) in systems.iter().enumerate() {
+                if energy.perf.feasibility(spec, m, n) == Feasibility::Ok {
+                    let e = energy.energy(spec, m, n);
+                    if e < best_e {
+                        best_e = e;
+                        best = Some(i);
+                    }
+                }
+            }
+            sid = crate::hw::catalog::SystemId(
+                best.unwrap_or_else(|| panic!("query (m={m},n={n}) feasible nowhere")),
+            );
+        }
+
+        let spec = &systems[sid.0];
+        let service = energy.runtime(spec, m, n);
+        let e_j = energy.energy(spec, m, n);
+        let node = cluster.get_mut(sid);
+        let (start, finish) = node.schedule(q.arrival_s, service);
+        node.energy_j += e_j;
+        node.queue_depth_s = node.node_free_at.iter().map(|&f| (f - q.arrival_s).max(0.0)).sum();
+        node.queue_len += 1;
+        sys_energy[sid.0] += e_j;
+        outcomes.push(QueryOutcome {
+            query_id: q.id,
+            system: sid.0,
+            arrival_s: q.arrival_s,
+            start_s: start,
+            finish_s: finish,
+            service_s: service,
+            energy_j: e_j,
+        });
+    }
+
+    let makespan = cluster.makespan();
+    let idle_energy: f64 = if opts.include_idle_energy {
+        systems
+            .iter()
+            .zip(&cluster.nodes)
+            .map(|(s, node)| s.idle_w * (makespan * s.count as f64 - node.busy_s).max(0.0))
+            .sum()
+    } else {
+        0.0
+    };
+
+    let total_service: f64 = outcomes.iter().map(|o| o.service_s).sum();
+    let total_energy: f64 = sys_energy.iter().sum::<f64>() + idle_energy;
+
+    SimReport {
+        policy: policy.name(),
+        systems: cluster
+            .nodes
+            .iter()
+            .map(|n| SystemTotals {
+                name: n.spec.name.to_string(),
+                queries: n.queries,
+                busy_s: n.busy_s,
+                energy_j: n.energy_j,
+            })
+            .collect(),
+        outcomes,
+        makespan_s: makespan,
+        total_service_s: total_service,
+        total_energy_j: total_energy,
+        idle_energy_j: idle_energy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::PolicyConfig;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+    use crate::sched::policy::build_policy;
+    use crate::workload::alpaca::AlpacaModel;
+
+    fn energy() -> EnergyModel {
+        EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+    }
+
+    fn run(policy_cfg: PolicyConfig, queries: &[Query]) -> SimReport {
+        let systems = system_catalog();
+        let em = energy();
+        let mut p = build_policy(&policy_cfg, em.clone(), &systems);
+        simulate(queries, &systems, p.as_mut(), &em, &SimOptions::default())
+    }
+
+    #[test]
+    fn every_query_processed_exactly_once() {
+        // Eq. 3–4: partition property
+        let queries = AlpacaModel::default().trace(3, 5000);
+        let r = run(PolicyConfig::RoundRobin, &queries);
+        assert_eq!(r.outcomes.len(), queries.len());
+        let mut ids: Vec<u64> = r.outcomes.iter().map(|o| o.query_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), queries.len());
+        assert_eq!(r.routing_counts().iter().sum::<u64>(), queries.len() as u64);
+    }
+
+    #[test]
+    fn energy_conservation() {
+        let queries = AlpacaModel::default().trace(4, 3000);
+        for cfg in [
+            PolicyConfig::Threshold { t_in: 32, t_out: 32, small: "M1-Pro".into(), big: "Swing-A100".into() },
+            PolicyConfig::Cost { lambda: 1.0 },
+            PolicyConfig::AllOn("Swing-A100".into()),
+        ] {
+            let r = run(cfg, &queries);
+            assert!(r.energy_conserved(), "{}", r.policy);
+        }
+    }
+
+    #[test]
+    fn hybrid_threshold_saves_energy_vs_all_a100() {
+        // the paper's headline mechanism, end-to-end through the sim
+        let queries = AlpacaModel::default().trace(2024, 20_000);
+        let hybrid = run(
+            PolicyConfig::Threshold { t_in: 32, t_out: 32, small: "M1-Pro".into(), big: "Swing-A100".into() },
+            &queries,
+        );
+        let baseline = run(PolicyConfig::AllOn("Swing-A100".into()), &queries);
+        let saving = 1.0 - hybrid.total_energy_j / baseline.total_energy_j;
+        assert!(
+            (0.005..=0.20).contains(&saving),
+            "hybrid saving {:.1}% outside plausible band",
+            saving * 100.0
+        );
+        // but costs runtime (paper §6.3's stated trade-off)
+        assert!(hybrid.total_service_s > baseline.total_service_s);
+    }
+
+    #[test]
+    fn infeasible_fallback_rescues_queries() {
+        // all-on-M1 with big generations → fallback must reroute
+        let queries = vec![Query::new(0, 8, 4096), Query::new(1, 8, 8)];
+        let r = run(PolicyConfig::AllOn("M1-Pro".into()), &queries);
+        assert_eq!(r.outcomes.len(), 2);
+        // the 4096-generation query cannot have run on the M1
+        let big = r.outcomes.iter().find(|o| o.query_id == 0).unwrap();
+        assert_ne!(big.system, 0);
+        let small = r.outcomes.iter().find(|o| o.query_id == 1).unwrap();
+        assert_eq!(small.system, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "routed infeasible")]
+    fn strict_mode_panics_on_infeasible() {
+        let systems = system_catalog();
+        let em = energy();
+        let mut p = build_policy(&PolicyConfig::AllOn("M1-Pro".into()), em.clone(), &systems);
+        let queries = vec![Query::new(0, 8, 4096)];
+        simulate(&queries, &systems, p.as_mut(), &em, &SimOptions { strict: true, ..Default::default() });
+    }
+
+    #[test]
+    fn online_arrivals_queue_properly() {
+        use crate::workload::generator::{Arrival, TraceGenerator};
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 50.0 }, 5).generate(500);
+        let r = run(PolicyConfig::JoinShortestQueue, &queries);
+        // starts never precede arrivals; finishes never precede starts
+        for o in &r.outcomes {
+            assert!(o.start_s >= o.arrival_s - 1e-9);
+            assert!(o.finish_s >= o.start_s);
+        }
+        // under load, someone must have waited
+        assert!(r.outcomes.iter().any(|o| o.queue_wait_s() > 0.0));
+    }
+
+    #[test]
+    fn idle_energy_accounting() {
+        let queries = AlpacaModel::default().trace(6, 200);
+        let systems = system_catalog();
+        let em = energy();
+        let mut p = build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
+        let with_idle = simulate(
+            &queries,
+            &systems,
+            p.as_mut(),
+            &em,
+            &SimOptions { include_idle_energy: true, ..Default::default() },
+        );
+        assert!(with_idle.idle_energy_j > 0.0);
+        assert!(with_idle.total_energy_j > with_idle.systems.iter().map(|s| s.energy_j).sum::<f64>());
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete-event cluster simulator: runs a trace through a policy and a
+//! cluster model, producing the energy/runtime totals behind Figs. 4–5
+//! and the headline result.
+
+pub mod cluster;
+pub mod queueing;
+pub mod engine;
+pub mod report;
+
+pub use cluster::{ClusterState, NodeState};
+pub use engine::{simulate, SimOptions};
+pub use report::SimReport;

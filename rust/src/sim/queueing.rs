@@ -1,0 +1,140 @@
+//! Analytic queueing estimates (M/M/c) used to cross-validate the
+//! discrete-event simulator and to size fleets without simulating.
+//!
+//! The sim is ground truth; these closed forms give the sanity rails:
+//! utilization ρ, Erlang-C wait probability, and mean waiting time. A
+//! test drives both on the same Poisson workload and checks agreement.
+
+/// M/M/c steady-state results.
+#[derive(Clone, Copy, Debug)]
+pub struct MmcResult {
+    /// offered load a = λ/µ (erlangs)
+    pub offered: f64,
+    /// per-server utilization ρ = a/c
+    pub rho: f64,
+    /// probability an arrival waits (Erlang-C)
+    pub p_wait: f64,
+    /// mean wait in queue (s)
+    pub wq_s: f64,
+    /// mean time in system (s)
+    pub w_s: f64,
+}
+
+/// Solve M/M/c for arrival rate `lambda` (1/s), mean service time
+/// `service_s`, and `c` servers. Returns None when unstable (ρ ≥ 1).
+pub fn mmc(lambda: f64, service_s: f64, c: usize) -> Option<MmcResult> {
+    assert!(lambda > 0.0 && service_s > 0.0 && c > 0);
+    let mu = 1.0 / service_s;
+    let a = lambda / mu;
+    let rho = a / c as f64;
+    if rho >= 1.0 {
+        return None;
+    }
+    // Erlang C via the numerically stable iterative form
+    let mut inv_b = 1.0; // Erlang-B inverse, B(0, a) = 1
+    for k in 1..=c {
+        inv_b = 1.0 + inv_b * k as f64 / a;
+    }
+    let b = 1.0 / inv_b;
+    let p_wait = b / (1.0 - rho * (1.0 - b));
+    let wq = p_wait * service_s / (c as f64 * (1.0 - rho));
+    Some(MmcResult { offered: a, rho, p_wait, wq_s: wq, w_s: wq + service_s })
+}
+
+/// Minimum servers for target mean wait (fleet sizing helper).
+pub fn servers_for_wait(lambda: f64, service_s: f64, max_wq_s: f64) -> usize {
+    for c in 1..=4096 {
+        if let Some(r) = mmc(lambda, service_s, c) {
+            if r.wq_s <= max_wq_s {
+                return c;
+            }
+        }
+    }
+    4096
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm1_closed_form() {
+        // M/M/1: Wq = ρ/(µ−λ); λ=0.5, µ=1 → Wq = 1.0
+        let r = mmc(0.5, 1.0, 1).unwrap();
+        assert!((r.rho - 0.5).abs() < 1e-12);
+        assert!((r.p_wait - 0.5).abs() < 1e-12); // P(wait) = ρ for M/M/1
+        assert!((r.wq_s - 1.0).abs() < 1e-9);
+        assert!((r.w_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instability_detected() {
+        assert!(mmc(2.0, 1.0, 1).is_none());
+        assert!(mmc(2.0, 1.0, 2).is_none()); // ρ = 1 exactly
+        assert!(mmc(2.0, 1.0, 3).is_some());
+    }
+
+    #[test]
+    fn more_servers_less_wait() {
+        let w2 = mmc(1.5, 1.0, 2).unwrap().wq_s;
+        let w4 = mmc(1.5, 1.0, 4).unwrap().wq_s;
+        let w8 = mmc(1.5, 1.0, 8).unwrap().wq_s;
+        assert!(w2 > w4 && w4 > w8);
+    }
+
+    #[test]
+    fn sizing_helper_meets_target() {
+        let c = servers_for_wait(10.0, 1.0, 0.1);
+        let r = mmc(10.0, 1.0, c).unwrap();
+        assert!(r.wq_s <= 0.1);
+        if c > 1 {
+            // c−1 must miss the target (minimality)
+            match mmc(10.0, 1.0, c - 1) {
+                Some(r2) => assert!(r2.wq_s > 0.1),
+                None => {} // unstable — also a miss
+            }
+        }
+    }
+
+    /// Cross-validation: discrete-event sim ≈ M/M/1 on an exponential-ish
+    /// workload. We can't get exponential service exactly (service times
+    /// come from the perf model), so this uses a single-system cluster
+    /// with near-constant service (M/D/1) and checks the sim's wait lies
+    /// between the M/D/1 and M/M/1 predictions (M/D/1 = half M/M/1).
+    #[test]
+    fn sim_wait_bracketed_by_queueing_theory() {
+        use crate::config::schema::PolicyConfig;
+        use crate::hw::catalog::system_catalog;
+        use crate::model::llm_catalog;
+        use crate::perf::energy::EnergyModel;
+        use crate::perf::model::PerfModel;
+        use crate::sched::policy::build_policy;
+        use crate::sim::engine::{simulate, SimOptions};
+        use crate::workload::generator::{Arrival, TraceGenerator};
+        use crate::workload::Query;
+
+        let systems = vec![system_catalog()[1].clone()]; // A100 only
+        let em = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        // constant-size queries → deterministic service
+        let service = em.runtime(&systems[0], 32, 32);
+        let rho_target = 0.7;
+        let rate = rho_target / service;
+        let mut queries: Vec<Query> = TraceGenerator::new(Arrival::Poisson { rate }, 3)
+            .generate(20_000)
+            .into_iter()
+            .map(|q| Query { input_tokens: 32, output_tokens: 32, ..q })
+            .collect();
+        queries.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        let mut p = build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
+        let rep = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+        let sim_wq: f64 =
+            rep.outcomes.iter().map(|o| o.queue_wait_s()).sum::<f64>() / rep.outcomes.len() as f64;
+
+        let mm1 = mmc(rate, service, 1).unwrap().wq_s;
+        let md1 = mm1 / 2.0;
+        assert!(
+            sim_wq > md1 * 0.8 && sim_wq < mm1 * 1.2,
+            "sim Wq {sim_wq:.3} outside [M/D/1 {md1:.3}, M/M/1 {mm1:.3}] bracket"
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Simulation results: the numbers behind Figs. 4–5 and the headline.
+
+use crate::util::stats::percentile;
+
+/// Per-query outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryOutcome {
+    pub query_id: u64,
+    pub system: usize,
+    pub arrival_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+    pub service_s: f64,
+    pub energy_j: f64,
+}
+
+impl QueryOutcome {
+    pub fn latency_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+
+    pub fn queue_wait_s(&self) -> f64 {
+        self.start_s - self.arrival_s
+    }
+}
+
+/// Per-system totals.
+#[derive(Clone, Debug, Default)]
+pub struct SystemTotals {
+    pub name: String,
+    pub queries: u64,
+    pub busy_s: f64,
+    pub energy_j: f64,
+}
+
+/// Full simulation report.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub policy: String,
+    pub outcomes: Vec<QueryOutcome>,
+    pub systems: Vec<SystemTotals>,
+    pub makespan_s: f64,
+    /// Σ per-query service time — the paper's "runtime" axis in
+    /// Figs. 4(b)/5(b) (serial compute time, queueing excluded)
+    pub total_service_s: f64,
+    pub total_energy_j: f64,
+    /// idle-floor energy burned by all nodes over the makespan when the
+    /// experiment includes always-on attribution
+    pub idle_energy_j: f64,
+}
+
+impl SimReport {
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.latency_s()).sum::<f64>() / self.outcomes.len() as f64
+    }
+
+    pub fn p99_latency_s(&self) -> f64 {
+        let v: Vec<f64> = self.outcomes.iter().map(|o| o.latency_s()).collect();
+        if v.is_empty() {
+            0.0
+        } else {
+            percentile(&v, 99.0)
+        }
+    }
+
+    pub fn energy_per_query(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.total_energy_j / self.outcomes.len() as f64
+    }
+
+    /// conservation check: Σ query energy == Σ system energy
+    pub fn energy_conserved(&self) -> bool {
+        let by_query: f64 = self.outcomes.iter().map(|o| o.energy_j).sum();
+        let by_system: f64 = self.systems.iter().map(|s| s.energy_j).sum();
+        (by_query - by_system).abs() <= 1e-6 * by_system.max(1.0)
+    }
+
+    /// queries routed to each system, in system order
+    pub fn routing_counts(&self) -> Vec<u64> {
+        self.systems.iter().map(|s| s.queries).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_math() {
+        let o = QueryOutcome {
+            query_id: 0,
+            system: 0,
+            arrival_s: 1.0,
+            start_s: 3.0,
+            finish_s: 7.0,
+            service_s: 4.0,
+            energy_j: 10.0,
+        };
+        assert_eq!(o.latency_s(), 6.0);
+        assert_eq!(o.queue_wait_s(), 2.0);
+    }
+
+    #[test]
+    fn conservation_detects_mismatch() {
+        let mut r = SimReport {
+            policy: "t".into(),
+            outcomes: vec![QueryOutcome {
+                query_id: 0,
+                system: 0,
+                arrival_s: 0.0,
+                start_s: 0.0,
+                finish_s: 1.0,
+                service_s: 1.0,
+                energy_j: 5.0,
+            }],
+            systems: vec![SystemTotals { name: "x".into(), queries: 1, busy_s: 1.0, energy_j: 5.0 }],
+            makespan_s: 1.0,
+            total_service_s: 1.0,
+            total_energy_j: 5.0,
+            idle_energy_j: 0.0,
+        };
+        assert!(r.energy_conserved());
+        r.systems[0].energy_j = 6.0;
+        assert!(!r.energy_conserved());
+    }
+}

@@ -1,0 +1,146 @@
+//! Timing harness for `harness = false` benches (criterion is not in the
+//! offline crate set). Warms up, runs timed samples until a target CI or
+//! sample cap, reports median ± MAD and throughput — and doubles as the
+//! §Perf measurement tool recorded in EXPERIMENTS.md.
+
+use super::stats::{mad, median, Welford};
+use std::time::Instant;
+
+/// One benchmark measurement report.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    pub samples: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    /// iterations per sample (work units per timed sample)
+    pub iters: u64,
+}
+
+impl BenchReport {
+    /// work-units per second, using the median sample time.
+    pub fn throughput(&self) -> f64 {
+        self.iters as f64 / self.median_s
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>12} median  ±{:>10} mad   {:>14.0} ops/s   ({} samples)",
+            self.name,
+            super::tablefmt::fmt_secs(self.median_s / self.iters as f64),
+            super::tablefmt::fmt_secs(self.mad_s / self.iters as f64),
+            self.throughput(),
+            self.samples
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    /// stop early when the CI95 half-width / mean falls below this
+    pub rel_ci_target: f64,
+    /// wall-clock budget per benchmark, seconds
+    pub budget_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, min_samples: 10, max_samples: 100, rel_ci_target: 0.02, budget_s: 10.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup: 1, min_samples: 5, max_samples: 20, rel_ci_target: 0.05, budget_s: 3.0 }
+    }
+
+    /// Time `f`, which performs `iters` work units per call.
+    pub fn run<F: FnMut()>(&self, name: &str, iters: u64, mut f: F) -> BenchReport {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut times = Vec::with_capacity(self.max_samples);
+        let mut w = Welford::new();
+        while times.len() < self.max_samples {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            times.push(dt);
+            w.push(dt);
+            let enough = times.len() >= self.min_samples;
+            let ci_ok = w.mean() > 0.0 && w.ci95_half_width() / w.mean() < self.rel_ci_target;
+            let over_budget = start.elapsed().as_secs_f64() > self.budget_s;
+            if enough && (ci_ok || over_budget) {
+                break;
+            }
+        }
+        BenchReport {
+            name: name.to_string(),
+            samples: times.len(),
+            median_s: median(&times),
+            mad_s: mad(&times),
+            mean_s: w.mean(),
+            min_s: w.min(),
+            iters,
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard header printed by every bench binary.
+pub fn bench_header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("host: {} cores | {}", std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+             if cfg!(debug_assertions) { "DEBUG BUILD (numbers not meaningful)" } else { "release" });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math() {
+        let b = Bench { warmup: 0, min_samples: 3, max_samples: 5, rel_ci_target: 0.5, budget_s: 1.0 };
+        let r = b.run("noop", 100, || {
+            black_box(42u64);
+        });
+        assert!(r.samples >= 3 && r.samples <= 5);
+        assert!(r.median_s >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let b = Bench { warmup: 0, min_samples: 2, max_samples: 10_000, rel_ci_target: 0.0, budget_s: 0.05 };
+        let t0 = Instant::now();
+        let r = b.run("sleepy", 1, || std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(t0.elapsed().as_secs_f64() < 2.0);
+        assert!(r.samples < 10_000);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = BenchReport {
+            name: "x".into(),
+            samples: 5,
+            median_s: 0.001,
+            mad_s: 0.0001,
+            mean_s: 0.001,
+            min_s: 0.0009,
+            iters: 10,
+        };
+        assert!(r.line().contains("ops/s"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Declarative command-line flag parsing (no clap in the offline crate
+//! set). Supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! positional args, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Bool,
+    Value { default: Option<String> },
+}
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    kind: Kind,
+    help: String,
+}
+
+/// Flag-set builder + parse result.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+    command: String,
+}
+
+impl Args {
+    pub fn new(command: &str) -> Self {
+        Self { command: command.to_string(), ..Default::default() }
+    }
+
+    /// Declare a value flag with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            kind: Kind::Value { default: Some(default.into()) },
+            help: help.into(),
+        });
+        self
+    }
+
+    /// Declare a required value flag.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), kind: Kind::Value { default: None }, help: help.into() });
+        self
+    }
+
+    /// Declare a boolean flag (defaults to false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), kind: Kind::Bool, help: help.into() });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: hetsched {} [flags]\n\nflags:\n", self.command);
+        for spec in &self.specs {
+            let d = match &spec.kind {
+                Kind::Bool => "  (bool)".to_string(),
+                Kind::Value { default: Some(d) } => format!("  (default: {d})"),
+                Kind::Value { default: None } => "  (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<24}{}{}\n", spec.name, spec.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw token list. Returns Err(message) on malformed input or
+    /// `--help`.
+    pub fn parse(mut self, argv: &[String]) -> Result<Args, String> {
+        // defaults
+        for spec in &self.specs {
+            match &spec.kind {
+                Kind::Bool => {
+                    self.bools.insert(spec.name.clone(), false);
+                }
+                Kind::Value { default: Some(d) } => {
+                    self.values.insert(spec.name.clone(), d.clone());
+                }
+                _ => {}
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?
+                    .clone();
+                match spec.kind {
+                    Kind::Bool => {
+                        let v = match inline.as_deref() {
+                            None => true,
+                            Some("true") => true,
+                            Some("false") => false,
+                            Some(other) => return Err(format!("--{name} expects true/false, got '{other}'")),
+                        };
+                        self.bools.insert(name, v);
+                    }
+                    Kind::Value { .. } => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| format!("--{name} expects a value"))?
+                            }
+                        };
+                        self.values.insert(name, v);
+                    }
+                }
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // required check
+        for spec in &self.specs {
+            if let Kind::Value { default: None } = spec.kind {
+                if !self.values.contains_key(&spec.name) {
+                    return Err(format!("missing required flag --{}\n\n{}", spec.name, self.usage()));
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared/parsed"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("bool flag --{name} not declared"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: expected integer: {e}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: expected integer: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|e| format!("--{name}: expected number: {e}"))
+    }
+
+    /// Comma-separated u32 list ("8,16,32").
+    pub fn get_u32_list(&self, name: &str) -> Result<Vec<u32>, String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| format!("--{name}: bad entry '{s}': {e}")))
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t")
+            .opt("count", "5", "n")
+            .flag("verbose", "v")
+            .parse(&argv(&["--count", "9"]))
+            .unwrap();
+        assert_eq!(a.get_u64("count").unwrap(), 9);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn inline_equals_and_bool() {
+        let a = Args::new("t")
+            .opt("x", "1", "")
+            .flag("f", "")
+            .parse(&argv(&["--x=42", "--f"]))
+            .unwrap();
+        assert_eq!(a.get("x"), "42");
+        assert!(a.get_bool("f"));
+    }
+
+    #[test]
+    fn required_enforced() {
+        let err = Args::new("t").req("must", "").parse(&argv(&[])).unwrap_err();
+        assert!(err.contains("--must"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let err = Args::new("t").parse(&argv(&["--nope"])).unwrap_err();
+        assert!(err.contains("unknown flag"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::new("t").parse(&argv(&["one", "two"])).unwrap();
+        assert_eq!(a.positional(), &["one".to_string(), "two".to_string()]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::new("t").opt("xs", "1,2,3", "").parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_u32_list("xs").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = Args::new("t").opt("a", "1", "alpha").parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("alpha"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared infrastructure: PRNG, statistics, JSON, tables, CLI flags,
+//! property-testing and bench harnesses. These exist because the offline
+//! crate set has no rand/serde/clap/criterion/proptest — see DESIGN.md.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod quick;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;

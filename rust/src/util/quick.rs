@@ -1,0 +1,206 @@
+//! Property-testing mini-harness (no proptest offline).
+//!
+//! A property is a closure over a [`Gen`]; the harness runs it for N
+//! seeded cases and, on failure, retries the same seed with shrinking
+//! *sizes* (the generator scales magnitudes by `gen.size`), reporting the
+//! smallest failing size and seed for reproduction.
+//!
+//! ```ignore
+//! quick::check(100, |g| {
+//!     let xs = g.vec_u32(0..1000, 0..64);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     prop_assert!(sorted.len() == xs.len());
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+use std::ops::Range;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Random-input generator with a size parameter in (0, 1].
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub size: f64,
+    pub case: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, size: f64) -> Self {
+        Self { rng: Xoshiro256::seed_from(seed ^ case.wrapping_mul(0x9E3779B97F4A7C15)), size, case }
+    }
+
+    /// Integer in `range`, biased toward the low end as `size` shrinks.
+    pub fn u64_in(&mut self, range: Range<u64>) -> u64 {
+        assert!(range.end > range.start);
+        let span = range.end - range.start;
+        let scaled = ((span as f64 * self.size).ceil() as u64).clamp(1, span);
+        range.start + self.rng.below(scaled)
+    }
+
+    pub fn u32_in(&mut self, range: Range<u32>) -> u32 {
+        self.u64_in(range.start as u64..range.end as u64) as u32
+    }
+
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        self.u64_in(range.start as u64..range.end as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let hi_scaled = lo + (hi - lo) * self.size;
+        self.rng.range_f64(lo, hi_scaled.max(lo + f64::EPSILON))
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec_u32(&mut self, each: Range<u32>, len: Range<usize>) -> Vec<u32> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| self.u32_in(each.clone())).collect()
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with a reproducible report
+/// on the first failure (after size-shrinking).
+pub fn check<F>(cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    check_seeded(0xE2DC_2024, cases, prop)
+}
+
+/// Like [`check`] with an explicit base seed.
+pub fn check_seeded<F>(seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // shrink by size: find the smallest size at which it still fails
+            let mut best = (1.0, msg);
+            for k in 1..=16 {
+                let size = 1.0 / (1 << k) as f64;
+                let mut g = Gen::new(seed, case, size);
+                match prop(&mut g) {
+                    Err(m) => best = (size, m),
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (seed={seed:#x}, case={case}, size={}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert inside a property, returning Err instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {} ({}:{})", stringify!($cond), file!(), line!()));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!("{} ({}:{})", format!($($fmt)+), file!(), line!()));
+        }
+    };
+}
+
+/// Assert two floats are within relative-or-absolute tolerance.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b, tol): (f64, f64, f64) = ($a, $b, $tol);
+        let diff = (a - b).abs();
+        let scale = a.abs().max(b.abs()).max(1.0);
+        if diff > tol * scale {
+            return Err(format!(
+                "{} ≉ {} (diff {diff:.3e} > tol {tol:.1e}·{scale:.3e}) ({}:{})",
+                a, b, file!(), line!()
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0u64;
+        // interior mutability via Cell not needed; use a RefCell-free trick
+        let counter = std::cell::Cell::new(0u64);
+        check(50, |g| {
+            counter.set(counter.get() + 1);
+            let x = g.u64_in(0..100);
+            prop_assert!(x < 100);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(50, |g| {
+            let x = g.u64_in(0..100);
+            prop_assert!(x < 5, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generator_respects_ranges() {
+        check(200, |g| {
+            let x = g.u32_in(10..20);
+            prop_assert!((10..20).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_u32(0..5, 1..10);
+            prop_assert!(!v.is_empty() && v.len() < 10);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut out = Vec::new();
+            let o = std::cell::RefCell::new(&mut out);
+            check_seeded(seed, 10, |g| {
+                o.borrow_mut().push(g.u64_in(0..1_000_000));
+                Ok(())
+            });
+            out
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    fn prop_assert_close_tolerates() {
+        check(10, |_g| {
+            prop_assert_close!(1.0, 1.0 + 1e-12, 1e-9);
+            Ok(())
+        });
+    }
+}

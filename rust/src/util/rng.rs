@@ -1,0 +1,328 @@
+//! Deterministic PRNG + distribution samplers.
+//!
+//! The offline crate set has no `rand`, so we carry our own:
+//! [`SplitMix64`] for seeding, [`Xoshiro256`] (xoshiro256**) as the
+//! workhorse generator, and the samplers the workload models need
+//! (uniform, normal, log-normal, exponential, Poisson, gamma, Zipf,
+//! categorical). Everything is reproducible from a `u64` seed — every
+//! experiment in EXPERIMENTS.md records its seed.
+
+/// SplitMix64: tiny, solid stream for seeding other generators.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 per the xoshiro authors' recommendation.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Independent child stream (for per-worker/per-trial RNGs).
+    pub fn fork(&mut self) -> Self {
+        Self::seed_from(self.next_u64())
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-ish rejection-free for our use).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps bias < 2^-64 — fine for simulations.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided for determinism).
+    pub fn normal(&mut self) -> f64 {
+        // guard against log(0)
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal with the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate lambda (mean 1/lambda).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        -self.f64().max(1e-300).ln() / lambda
+    }
+
+    /// Poisson; Knuth for small mean, normal approximation for large.
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = self.normal_with(mean, mean.sqrt()).round();
+            if v < 0.0 { 0 } else { v as u64 }
+        }
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang.
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        debug_assert!(k > 0.0 && theta > 0.0);
+        if k < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) * U^(1/k)
+            let g = self.gamma(k + 1.0, 1.0);
+            return g * self.f64().max(1e-300).powf(1.0 / k) * theta;
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * theta;
+            }
+        }
+    }
+
+    /// Zipf over {1..n} with exponent s (simple inverse-CDF table-free
+    /// rejection; adequate for n <= ~1e6).
+    pub fn zipf(&mut self, n: u64, s: f64) -> u64 {
+        // rejection method from Devroye
+        let b = 2f64.powf(s - 1.0);
+        loop {
+            let u = self.f64();
+            let v = self.f64();
+            let x = (u.max(1e-300).powf(-1.0 / (s - 1.0))).floor();
+            if x < 1.0 || x > n as f64 {
+                continue;
+            }
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                return x as u64;
+            }
+        }
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from(42)
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = rng();
+        let mut b = rng();
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut a = rng();
+        let mut c = a.fork();
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = rng();
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = rng();
+        for n in [1u64, 2, 7, 1000] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = rng();
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = rng();
+        let mu = 3.0f64;
+        let n = 100_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(mu, 0.8)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        // median of lognormal = e^mu
+        assert!((med.ln() - mu).abs() < 0.03, "median={med}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = rng();
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean={m}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut r = rng();
+        for mean in [0.5, 4.0, 80.0] {
+            let n = 50_000;
+            let m: f64 = (0..n).map(|_| r.poisson(mean) as f64).sum::<f64>() / n as f64;
+            assert!((m - mean).abs() / mean < 0.05, "mean={mean} got={m}");
+        }
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = rng();
+        let (k, theta) = (2.5, 1.5);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| r.gamma(k, theta)).sum::<f64>() / n as f64;
+        assert!((m - k * theta).abs() / (k * theta) < 0.03, "got={m}");
+    }
+
+    #[test]
+    fn zipf_rank_one_most_frequent() {
+        let mut r = rng();
+        let mut counts = [0u64; 11];
+        for _ in 0..20_000 {
+            let z = r.zipf(10, 1.5);
+            assert!((1..=10).contains(&z));
+            counts[z as usize] += 1;
+        }
+        assert!(counts[1] > counts[2] && counts[2] > counts[4]);
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = rng();
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0u64; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = rng();
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

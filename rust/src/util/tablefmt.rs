@@ -1,0 +1,222 @@
+//! ASCII / markdown / CSV table rendering for bench output.
+//!
+//! Every figure/table bench prints its series through this module so the
+//! regenerated rows line up with the paper's presentation.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Clone, Debug)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            aligns: headers.iter().map(|_| Align::Right).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as an ASCII box table.
+    pub fn ascii(&self) -> String {
+        let w = self.widths();
+        let sep: String = {
+            let mut s = String::from("+");
+            for wi in &w {
+                s.push_str(&"-".repeat(wi + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = sep.clone();
+        out.push_str(&self.render_row(&self.headers, &w));
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&self.render_row(row, &w));
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    fn render_row(&self, cells: &[String], w: &[usize]) -> String {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            match self.aligns[i] {
+                Align::Left => s.push_str(&format!(" {:<width$} |", c, width = w[i])),
+                Align::Right => s.push_str(&format!(" {:>width$} |", c, width = w[i])),
+            }
+        }
+        s.push('\n');
+        s
+    }
+
+    /// Render as GitHub-flavored markdown.
+    pub fn markdown(&self) -> String {
+        let mut out = String::from("|");
+        for h in &self.headers {
+            out.push_str(&format!(" {h} |"));
+        }
+        out.push_str("\n|");
+        for a in &self.aligns {
+            out.push_str(match a {
+                Align::Left => " :--- |",
+                Align::Right => " ---: |",
+            });
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push('|');
+            for c in row {
+                out.push_str(&format!(" {c} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish quoting).
+    pub fn csv(&self) -> String {
+        let quote = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| quote(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+/// Format joules human-readably (J/kJ/MJ).
+pub fn fmt_joules(j: f64) -> String {
+    if j < 1e3 {
+        format!("{j:.2}J")
+    } else if j < 1e6 {
+        format!("{:.2}kJ", j / 1e3)
+    } else {
+        format!("{:.3}MJ", j / 1e6)
+    }
+}
+
+/// Format a count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).align(0, Align::Left);
+        t.row_strs(&["alpha", "1"]);
+        t.row_strs(&["b", "22222"]);
+        let s = t.ascii();
+        assert!(s.contains("| alpha |"));
+        assert!(s.contains("| 22222 |"));
+        // all lines same width
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn markdown_has_alignment_row() {
+        let mut t = Table::new(&["a", "b"]).align(0, Align::Left);
+        t.row_strs(&["x", "1"]);
+        let md = t.markdown();
+        assert!(md.contains(":--- |"));
+        assert!(md.contains("---: |"));
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut t = Table::new(&["a"]);
+        t.row_strs(&["x,y"]);
+        assert!(t.csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_secs(5e-7), "0.5µs");
+        assert_eq!(fmt_secs(0.0123), "12.30ms");
+        assert_eq!(fmt_secs(3.0), "3.00s");
+        assert_eq!(fmt_joules(12.3), "12.30J");
+        assert_eq!(fmt_joules(12_300.0), "12.30kJ");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+}

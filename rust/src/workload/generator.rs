@@ -1,0 +1,137 @@
+//! Synthetic trace generators: fixed sweeps (the §5.2 experiment grids)
+//! and online arrival processes (Poisson / bursty) for the live serving
+//! experiments the paper's batch simulation doesn't cover.
+
+use super::alpaca::AlpacaModel;
+use super::Query;
+use crate::util::rng::Xoshiro256;
+
+/// §5.2.1 grid: input sizes 8..=2048 (powers of two), fixed n = 32.
+pub fn input_sweep_points() -> Vec<(u32, u32)> {
+    [8u32, 16, 32, 64, 128, 256, 512, 1024, 2048]
+        .iter()
+        .map(|&m| (m, 32))
+        .collect()
+}
+
+/// §5.2.2 grid: output sizes 8..=4096 (powers of two), fixed m = 32.
+pub fn output_sweep_points() -> Vec<(u32, u32)> {
+    [8u32, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096]
+        .iter()
+        .map(|&n| (32, n))
+        .collect()
+}
+
+/// Arrival process shapes for online serving experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// all queries at t = 0 (the paper's batch simulation)
+    Batch,
+    /// Poisson with mean rate λ (queries/s)
+    Poisson { rate: f64 },
+    /// on/off bursts: Poisson at `rate` for `on_s`, silent for `off_s`
+    Bursty { rate: f64, on_s: f64, off_s: f64 },
+}
+
+/// Trace generator: token sizes from the Alpaca model, arrivals from the
+/// chosen process.
+#[derive(Clone, Debug)]
+pub struct TraceGenerator {
+    pub model: AlpacaModel,
+    pub arrival: Arrival,
+    pub seed: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(arrival: Arrival, seed: u64) -> Self {
+        Self { model: AlpacaModel::default(), arrival, seed }
+    }
+
+    pub fn generate(&self, count: usize) -> Vec<Query> {
+        let mut rng = Xoshiro256::seed_from(self.seed);
+        let mut arr_rng = rng.fork();
+        let mut t = 0.0f64;
+        let mut window_left = match self.arrival {
+            Arrival::Bursty { on_s, .. } => on_s,
+            _ => f64::INFINITY,
+        };
+        (0..count as u64)
+            .map(|id| {
+                let m = self.model.sample_input(&mut rng);
+                let n = self.model.sample_output(&mut rng);
+                let arrival_s = match self.arrival {
+                    Arrival::Batch => 0.0,
+                    Arrival::Poisson { rate } => {
+                        t += arr_rng.exponential(rate);
+                        t
+                    }
+                    Arrival::Bursty { rate, on_s, off_s } => {
+                        let mut gap = arr_rng.exponential(rate);
+                        while gap > window_left {
+                            gap -= window_left;
+                            t += window_left + off_s;
+                            window_left = on_s;
+                        }
+                        window_left -= gap;
+                        t += gap;
+                        t
+                    }
+                };
+                Query { id, arrival_s, input_tokens: m, output_tokens: n }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_grids_match_paper() {
+        let inp = input_sweep_points();
+        assert_eq!(inp.first(), Some(&(8, 32)));
+        assert_eq!(inp.last(), Some(&(2048, 32)));
+        let out = output_sweep_points();
+        assert_eq!(out.first(), Some(&(32, 8)));
+        assert_eq!(out.last(), Some(&(32, 4096)));
+    }
+
+    #[test]
+    fn batch_arrivals_all_zero() {
+        let g = TraceGenerator::new(Arrival::Batch, 1);
+        assert!(g.generate(100).iter().all(|q| q.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn poisson_rate_approximately_respected() {
+        let g = TraceGenerator::new(Arrival::Poisson { rate: 10.0 }, 1);
+        let t = g.generate(5000);
+        let span = t.last().unwrap().arrival_s;
+        let rate = 5000.0 / span;
+        assert!((rate - 10.0).abs() < 1.0, "rate={rate}");
+        // arrivals are sorted
+        assert!(t.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn bursty_has_gaps() {
+        let g = TraceGenerator::new(
+            Arrival::Bursty { rate: 50.0, on_s: 1.0, off_s: 5.0 },
+            1,
+        );
+        let t = g.generate(500);
+        let mut max_gap = 0.0f64;
+        for w in t.windows(2) {
+            max_gap = max_gap.max(w[1].arrival_s - w[0].arrival_s);
+        }
+        assert!(max_gap >= 5.0, "expected an off-window gap, max={max_gap}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = TraceGenerator::new(Arrival::Poisson { rate: 5.0 }, 9).generate(50);
+        let b = TraceGenerator::new(Arrival::Poisson { rate: 5.0 }, 9).generate(50);
+        assert_eq!(a, b);
+    }
+}

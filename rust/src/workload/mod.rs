@@ -1,0 +1,40 @@
+//! Workload substrate: queries, the Alpaca token-count model (Fig. 3),
+//! trace generation, and CSV trace I/O.
+
+pub mod alpaca;
+pub mod generator;
+pub mod trace;
+
+/// One inference request: the paper's `(m, n)` pair plus arrival time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Query {
+    pub id: u64,
+    /// arrival time (s since trace start); 0 for batch workloads
+    pub arrival_s: f64,
+    /// input (prompt) tokens — the paper's `m`
+    pub input_tokens: u32,
+    /// output (generated) tokens — the paper's `n`
+    pub output_tokens: u32,
+}
+
+impl Query {
+    pub fn new(id: u64, input_tokens: u32, output_tokens: u32) -> Self {
+        Self { id, arrival_s: 0.0, input_tokens, output_tokens }
+    }
+
+    pub fn total_tokens(&self) -> u32 {
+        self.input_tokens + self.output_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_totals() {
+        let q = Query::new(1, 10, 20);
+        assert_eq!(q.total_tokens(), 30);
+        assert_eq!(q.arrival_s, 0.0);
+    }
+}

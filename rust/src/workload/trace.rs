@@ -1,0 +1,110 @@
+//! Trace file I/O: CSV `(arrival_s, input_tokens, output_tokens)` so
+//! users can feed real workload traces (e.g. tokenized Alpaca, or
+//! production logs) instead of the generative model.
+
+use super::Query;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Write a trace as CSV with a header row.
+pub fn write_csv(path: &Path, trace: &[Query]) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "arrival_s,input_tokens,output_tokens")?;
+    for q in trace {
+        writeln!(f, "{},{},{}", q.arrival_s, q.input_tokens, q.output_tokens)?;
+    }
+    Ok(())
+}
+
+/// Read a trace CSV (header optional). Errors carry the line number.
+pub fn read_csv(path: &Path) -> Result<Vec<Query>, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_csv(BufReader::new(f))
+}
+
+/// Parse from any reader (unit-testable without touching disk).
+pub fn parse_csv<R: BufRead>(reader: R) -> Result<Vec<Query>, String> {
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if lineno == 0 && line.to_ascii_lowercase().starts_with("arrival") {
+            continue; // header
+        }
+        let mut parts = line.split(',').map(str::trim);
+        let err = |what: &str| format!("line {}: bad {what}: '{line}'", lineno + 1);
+        let arrival_s: f64 = parts
+            .next()
+            .ok_or_else(|| err("row"))?
+            .parse()
+            .map_err(|_| err("arrival_s"))?;
+        let input_tokens: u32 = parts
+            .next()
+            .ok_or_else(|| err("row"))?
+            .parse()
+            .map_err(|_| err("input_tokens"))?;
+        let output_tokens: u32 = parts
+            .next()
+            .ok_or_else(|| err("row"))?
+            .parse()
+            .map_err(|_| err("output_tokens"))?;
+        if input_tokens == 0 {
+            return Err(err("input_tokens (must be >= 1)"));
+        }
+        if arrival_s < 0.0 {
+            return Err(err("arrival_s (must be >= 0)"));
+        }
+        out.push(Query { id, arrival_s, input_tokens, output_tokens });
+        id += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("hetsched_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let trace = vec![
+            Query { id: 0, arrival_s: 0.0, input_tokens: 8, output_tokens: 32 },
+            Query { id: 1, arrival_s: 1.5, input_tokens: 100, output_tokens: 7 },
+        ];
+        write_csv(&path, &trace).unwrap();
+        let got = read_csv(&path).unwrap();
+        assert_eq!(got, trace);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parses_without_header_and_skips_comments() {
+        let src = "# comment\n0.0,10,20\n\n2.5,1,1\n";
+        let got = parse_csv(Cursor::new(src)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].arrival_s, 2.5);
+        assert_eq!(got[1].id, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        assert!(parse_csv(Cursor::new("a,b,c\n")).is_err());
+        assert!(parse_csv(Cursor::new("0.0,10\n")).is_err());
+        assert!(parse_csv(Cursor::new("0.0,0,5\n")).is_err(), "zero input tokens");
+        assert!(parse_csv(Cursor::new("-1.0,5,5\n")).is_err(), "negative arrival");
+        let err = parse_csv(Cursor::new("0.0,10,20\nbroken\n")).unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_csv(Path::new("/nonexistent/x.csv")).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! Property-based tests over the whole scheduling stack, driven by the
+//! in-crate `quick` harness (no proptest offline). Each property encodes
+//! one of the paper's formal guarantees (Eqs. 2–4) or a conservation/
+//! consistency invariant of our implementation.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::llm_catalog;
+use hetsched::perf::energy::{Attribution, EnergyModel};
+use hetsched::perf::model::{Feasibility, PerfModel};
+use hetsched::sched::cost::CostPolicy;
+use hetsched::sched::policy::Policy as _;
+use hetsched::sched::policy::{build_policy, ClusterView};
+use hetsched::sim::engine::{simulate, SimOptions};
+use hetsched::util::quick::{self, Gen};
+use hetsched::workload::Query;
+use hetsched::{prop_assert, prop_assert_close};
+
+fn energy_model() -> EnergyModel {
+    EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+}
+
+fn random_queries(g: &mut Gen, max: usize) -> Vec<Query> {
+    let n = g.usize_in(1..max.max(2));
+    (0..n as u64)
+        .map(|id| Query::new(id, g.u32_in(1..2048), g.u32_in(1..512)))
+        .collect()
+}
+
+/// Eqs. 3–4: every policy partitions Q — each query lands on exactly one
+/// system, nothing is dropped or duplicated.
+#[test]
+fn prop_partition_invariant() {
+    let systems = system_catalog();
+    let em = energy_model();
+    quick::check(60, |g| {
+        let queries = random_queries(g, 400);
+        let cfg = match g.u32_in(0..5) {
+            0 => PolicyConfig::Threshold {
+                t_in: g.u32_in(0..256),
+                t_out: g.u32_in(0..256),
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            1 => PolicyConfig::Cost { lambda: g.f64_in(0.0, 1.0) },
+            2 => PolicyConfig::RoundRobin,
+            3 => PolicyConfig::Random { seed: g.rng.next_u64() },
+            _ => PolicyConfig::JoinShortestQueue,
+        };
+        let mut p = build_policy(&cfg, em.clone(), &systems);
+        let rep = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+        prop_assert!(rep.outcomes.len() == queries.len(), "dropped/duplicated queries");
+        let mut ids: Vec<u64> = rep.outcomes.iter().map(|o| o.query_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        prop_assert!(ids.len() == queries.len(), "duplicate outcome ids");
+        let routed: u64 = rep.routing_counts().iter().sum();
+        prop_assert!(routed == queries.len() as u64, "routing counts disagree");
+        Ok(())
+    });
+}
+
+/// Σ per-query energy == Σ per-system energy, and runtime/latency sanity.
+#[test]
+fn prop_energy_conservation_and_time_sanity() {
+    let systems = system_catalog();
+    let em = energy_model();
+    quick::check(40, |g| {
+        let queries = random_queries(g, 300);
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let rep = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+        prop_assert!(rep.energy_conserved(), "energy not conserved");
+        for o in &rep.outcomes {
+            prop_assert!(o.start_s >= o.arrival_s - 1e-9, "start before arrival");
+            prop_assert!(o.finish_s >= o.start_s, "negative service");
+            prop_assert!(o.energy_j > 0.0 && o.energy_j.is_finite(), "bad energy");
+        }
+        prop_assert!(rep.makespan_s >= 0.0);
+        Ok(())
+    });
+}
+
+/// The cost policy is argmin-consistent: no feasible system has strictly
+/// lower U than the one chosen.
+#[test]
+fn prop_cost_policy_argmin() {
+    let systems = system_catalog();
+    let em = energy_model();
+    quick::check(80, |g| {
+        let lambda = g.f64_in(0.0, 1.0);
+        let policy = CostPolicy::new(lambda, em.clone());
+        let mut policy2 = policy.clone();
+        let q = Query::new(0, g.u32_in(1..2048), g.u32_in(1..4096));
+        let depths = vec![0.0; systems.len()];
+        let lens = vec![0usize; systems.len()];
+        let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+        let sid = policy2.assign(&q, &view);
+        let chosen = policy.cost(&q, &view, sid.0);
+        for other in 0..systems.len() {
+            prop_assert!(
+                chosen <= policy.cost(&q, &view, other) + 1e-9,
+                "λ={lambda}: not argmin for {q:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// cost(λ=1) agrees with the explicit two-way energy argmin whenever the
+/// V100 isn't the winner — the mechanism behind the threshold heuristic.
+#[test]
+fn prop_cost_matches_explicit_energy_argmin() {
+    let systems = system_catalog();
+    let em = energy_model();
+    quick::check(60, |g| {
+        let m = g.u32_in(1..2048);
+        let q = Query::new(0, m, 32);
+        let depths = vec![0.0; systems.len()];
+        let lens = vec![0usize; systems.len()];
+        let view = ClusterView { systems: &systems, queue_depth_s: &depths, queue_len: &lens };
+        let mut cost = CostPolicy::new(1.0, em.clone());
+        let chosen = cost.assign(&q, &view);
+        let e_m1 = em.energy(&systems[0], m, 32);
+        let e_a100 = em.energy(&systems[1], m, 32);
+        let e_v100 = em.energy(&systems[2], m, 32);
+        if e_v100 > e_m1.min(e_a100) {
+            let want = if e_m1 < e_a100 { 0 } else { 1 };
+            prop_assert!(
+                chosen.0 == want,
+                "m={m}: cost chose {} (E: m1={e_m1:.1} a100={e_a100:.1})",
+                chosen.0
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Perf-model invariants for arbitrary (m, n, system): monotonicity in
+/// both arguments and phase-decomposition consistency.
+#[test]
+fn prop_perf_model_monotone_and_consistent() {
+    let systems = system_catalog();
+    let perf = PerfModel::new(llm_catalog()[1].clone());
+    quick::check(100, |g| {
+        let spec = &systems[g.usize_in(0..3)];
+        let m = g.u32_in(1..1024);
+        let n = g.u32_in(1..256);
+        let dm = g.u32_in(1..512);
+        let dn = g.u32_in(1..128);
+        prop_assert!(perf.runtime(spec, m + dm, n) > perf.runtime(spec, m, n), "R not monotone in m");
+        prop_assert!(perf.runtime(spec, m, n + dn) > perf.runtime(spec, m, n), "R not monotone in n");
+        let c = perf.query_cost(spec, m, n);
+        prop_assert_close!(c.runtime_s, c.overhead_s + c.prefill_s + c.decode_s, 1e-9);
+        prop_assert!(c.energy_j > 0.0 && c.net_energy_j > 0.0 && c.net_energy_j < c.energy_j);
+        Ok(())
+    });
+}
+
+/// Net attribution is total minus idle·R exactly, for any query/system.
+#[test]
+fn prop_attribution_identity() {
+    let systems = system_catalog();
+    let perf = PerfModel::new(llm_catalog()[2].clone()); // mistral for variety
+    let total = EnergyModel::with_attribution(perf.clone(), Attribution::Total);
+    let net = EnergyModel::with_attribution(perf, Attribution::Net);
+    quick::check(60, |g| {
+        let spec = &systems[g.usize_in(0..3)];
+        let m = g.u32_in(1..1024);
+        let n = g.u32_in(1..256);
+        let e_total = total.energy(spec, m, n);
+        let e_net = net.energy(spec, m, n);
+        let r = total.runtime(spec, m, n);
+        prop_assert_close!(e_total - e_net, spec.idle_w * r, 1e-6);
+        Ok(())
+    });
+}
+
+/// Feasibility is monotone: growing a query never makes an infeasible
+/// placement feasible.
+#[test]
+fn prop_feasibility_monotone() {
+    let systems = system_catalog();
+    quick::check(80, |g| {
+        let llm = &llm_catalog()[g.usize_in(0..3)];
+        let perf = PerfModel::new(llm.clone());
+        let spec = &systems[g.usize_in(0..3)];
+        let m = g.u32_in(1..2048);
+        let n = g.u32_in(1..4096);
+        if perf.feasibility(spec, m, n) != Feasibility::Ok {
+            let m2 = m + g.u32_in(1..1024);
+            let n2 = n + g.u32_in(1..1024);
+            prop_assert!(
+                perf.feasibility(spec, m2, n2) != Feasibility::Ok,
+                "{}: ({m},{n}) infeasible but ({m2},{n2}) feasible",
+                spec.name
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Trace CSV round-trips arbitrary queries exactly.
+#[test]
+fn prop_trace_round_trip() {
+    quick::check(30, |g| {
+        let mut t = 0.0;
+        let n = g.usize_in(1..200);
+        let queries: Vec<Query> = (0..n as u64)
+            .map(|id| {
+                t += g.f64_in(0.0, 10.0);
+                Query { id, arrival_s: t, input_tokens: g.u32_in(1..4096), output_tokens: g.u32_in(0..4096) }
+            })
+            .collect();
+        let mut csv = String::from("arrival_s,input_tokens,output_tokens\n");
+        for q in &queries {
+            csv.push_str(&format!("{},{},{}\n", q.arrival_s, q.input_tokens, q.output_tokens));
+        }
+        let parsed = hetsched::workload::trace::parse_csv(std::io::Cursor::new(csv.as_bytes()))
+            .map_err(|e| e.to_string())?;
+        prop_assert!(parsed.len() == queries.len());
+        for (a, b) in parsed.iter().zip(&queries) {
+            prop_assert!(a.input_tokens == b.input_tokens && a.output_tokens == b.output_tokens);
+            prop_assert_close!(a.arrival_s, b.arrival_s, 1e-9);
+        }
+        Ok(())
+    });
+}
+
+/// Threshold-sweep identities: T=0 equals the all-big baseline; a
+/// threshold above every token count equals all-small (when feasible).
+#[test]
+fn prop_threshold_sweep_boundary_identities() {
+    let systems = system_catalog();
+    let em = energy_model();
+    quick::check(25, |g| {
+        let n_q = g.usize_in(10..300);
+        // keep n <= 32 so the M1 path stays feasible for the all-small end
+        let queries: Vec<Query> = (0..n_q as u64)
+            .map(|id| Query::new(id, g.u32_in(1..512), g.u32_in(1..32)))
+            .collect();
+        let c = hetsched::experiments::sweeps::threshold_sweep(
+            &queries,
+            &em,
+            &systems[0],
+            &systems[1],
+            &[0, 4096],
+            true,
+        );
+        prop_assert_close!(c.hybrid_energy_j[0], c.all_big_energy_j, 1e-9);
+        prop_assert_close!(c.hybrid_energy_j[1], c.all_small_energy_j, 1e-9);
+        Ok(())
+    });
+}
+
+/// Metrics histogram quantiles bracket observed values.
+#[test]
+fn prop_latency_histogram_quantiles() {
+    quick::check(30, |g| {
+        let h = hetsched::metrics::LatencyHisto::default();
+        let n = g.usize_in(10..2000);
+        let mut max_v: f64 = 0.0;
+        for _ in 0..n {
+            let v = g.f64_in(1e-5, 10.0);
+            max_v = max_v.max(v);
+            h.observe(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        prop_assert!(p50 <= p99, "quantiles out of order");
+        // log-bucket upper edges over-estimate by at most the bucket ratio
+        prop_assert!(p99 <= max_v * 1.5 + 1e-6, "p99 {p99} way above max {max_v}");
+        Ok(())
+    });
+}
+
+/// Measurement simulators converge to truth as noise → 0 and sampling →
+/// fine, for arbitrary workloads.
+#[test]
+fn prop_meters_converge() {
+    use hetsched::measure::meters::{Meter, NvmlMeter};
+    use hetsched::measure::trace::GroundTruthTrace;
+    let systems = system_catalog();
+    let perf = PerfModel::new(llm_catalog()[1].clone());
+    quick::check(25, |g| {
+        let spec = &systems[g.usize_in(0..3)];
+        let m = g.u32_in(8..1024);
+        let n = g.u32_in(8..256);
+        if perf.feasibility(spec, m, n) != Feasibility::Ok {
+            return Ok(());
+        }
+        let gt = GroundTruthTrace::new(perf.power_model(spec, m, n), spec, g.f64_in(0.0, 50.0));
+        let meter = NvmlMeter { interval_s: 0.005, sensor_noise: 0.0 };
+        let mut rng = hetsched::util::rng::Xoshiro256::seed_from(g.rng.next_u64());
+        let r = meter.measure(&gt, &mut rng);
+        prop_assert!(r.rel_error.abs() < 0.02, "fine noiseless meter off by {}", r.rel_error);
+        Ok(())
+    });
+}
