@@ -1,8 +1,12 @@
 //! Bench (extension): the **λ trade-off of Eq. 1**. The paper defines
 //! U = λE + (1−λ)R but evaluates only the energy end; this sweeps λ to
 //! expose the full energy/runtime Pareto frontier and checks Eqs. 2–4's
-//! partition properties.
+//! partition properties. The grid runs through the parallel sweep
+//! executor (`experiments::runner::lambda_sweep`): the model is
+//! evaluated once into a CostTable, then every λ point is a cheap
+//! argmin pass fanned across cores.
 
+use hetsched::experiments::runner::lambda_sweep;
 use hetsched::hw::catalog::system_catalog;
 use hetsched::model::find_llm;
 use hetsched::perf::energy::EnergyModel;
@@ -19,42 +23,43 @@ fn main() {
     let queries = AlpacaModel::default().trace(2024, 20_000);
 
     let lambdas = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
-    let mut frontier = Vec::new();
+    let points = lambda_sweep(&queries, &systems, &energy, &lambdas);
     let mut t = Table::new(&["λ", "energy", "Σ runtime", "→M1", "→A100", "→V100"]);
-    for &l in &lambdas {
-        let (assign, _) = oracle_assign(&queries, &systems, &energy, l);
-        let mut e = 0.0;
-        let mut r = 0.0;
-        let mut counts = [0u64; 3];
-        for (q, sid) in queries.iter().zip(&assign) {
-            e += energy.energy(&systems[sid.0], q.input_tokens, q.output_tokens);
-            r += energy.runtime(&systems[sid.0], q.input_tokens, q.output_tokens);
-            counts[sid.0] += 1;
-        }
-        frontier.push((l, e, r));
+    for p in &points {
         t.row(&[
-            format!("{l:.2}"),
-            fmt_joules(e),
-            fmt_secs(r),
-            counts[0].to_string(),
-            counts[1].to_string(),
-            counts[2].to_string(),
+            format!("{:.2}", p.lambda),
+            fmt_joules(p.energy_j),
+            fmt_secs(p.runtime_s),
+            p.routing[0].to_string(),
+            p.routing[1].to_string(),
+            p.routing[2].to_string(),
         ]);
     }
     print!("{}", t.ascii());
 
     // Pareto structure: energy non-increasing in λ, runtime non-decreasing
-    for w in frontier.windows(2) {
-        assert!(w[1].1 <= w[0].1 * 1.0001, "energy must fall as λ→1");
-        assert!(w[1].2 >= w[0].2 * 0.9999, "runtime must rise as λ→1");
+    for w in points.windows(2) {
+        assert!(w[1].energy_j <= w[0].energy_j * 1.0001, "energy must fall as λ→1");
+        assert!(w[1].runtime_s >= w[0].runtime_s * 0.9999, "runtime must rise as λ→1");
     }
-    let span_e = 1.0 - frontier.last().unwrap().1 / frontier[0].1;
-    let span_r = frontier.last().unwrap().2 / frontier[0].2 - 1.0;
+    let span_e = 1.0 - points.last().unwrap().energy_j / points[0].energy_j;
+    let span_r = points.last().unwrap().runtime_s / points[0].runtime_s - 1.0;
     println!("\nfrontier span: {:.1}% energy for {:+.0}% runtime between λ=0 and λ=1", span_e * 100.0, span_r * 100.0);
     println!("Pareto monotonicity ✓");
 
-    let b = Bench::quick().run("oracle assignment (20K queries)", queries.len() as u64, || {
-        black_box(oracle_assign(&queries, &systems, &energy, 0.5));
+    // the table-backed sweep must agree with the direct oracle
+    let (assign, _) = oracle_assign(&queries, &systems, &energy, 0.5);
+    let mid = points.iter().find(|p| p.lambda == 0.5).unwrap();
+    assert_eq!(mid.assignment, assign, "λ-sweep diverged from oracle_assign");
+    println!("oracle agreement at λ=0.5 ✓");
+
+    let b = Bench::quick().run("λ sweep (8 grid points × 20K queries)", (queries.len() * lambdas.len()) as u64, || {
+        black_box(lambda_sweep(&queries, &systems, &energy, &lambdas));
     });
     println!("{}", b.line());
+
+    let b2 = Bench::quick().run("oracle assignment, direct (20K)", queries.len() as u64, || {
+        black_box(oracle_assign(&queries, &systems, &energy, 0.5));
+    });
+    println!("{}", b2.line());
 }

@@ -1,15 +1,28 @@
 //! §Perf bench: the real PJRT inference engine (L1/L2 artifacts driven
 //! from rust). Reports prefill latency per bucket and decode tokens/s —
 //! the numbers EXPERIMENTS.md §Perf tracks across optimization rounds.
-//! Requires `make artifacts`; self-skips otherwise.
+//! Requires `--features pjrt` plus `make artifacts`; self-skips
+//! otherwise.
 
+#[cfg(feature = "pjrt")]
 use hetsched::runtime::artifacts::ArtifactBundle;
+#[cfg(feature = "pjrt")]
 use hetsched::runtime::client::Runtime;
+#[cfg(feature = "pjrt")]
 use hetsched::runtime::engine::{InferenceEngine, SamplingParams};
+#[cfg(feature = "pjrt")]
 use hetsched::util::benchkit::{bench_header, black_box, Bench};
+#[cfg(feature = "pjrt")]
 use hetsched::util::tablefmt::fmt_secs;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("perf_engine needs the real PJRT runtime — rerun with --features pjrt");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     bench_header("§Perf — PJRT inference engine (real artifacts)");
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

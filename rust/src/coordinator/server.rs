@@ -7,6 +7,7 @@
 
 use super::batcher::{Rejected, SystemQueue};
 use super::request::{Request, Response};
+use crate::anyhow;
 use crate::config::schema::ExperimentConfig;
 use crate::hw::spec::SystemSpec;
 use crate::metrics::Registry;
@@ -15,6 +16,7 @@ use crate::perf::energy::EnergyModel;
 use crate::perf::model::PerfModel;
 use crate::runtime::engine::SamplingParams;
 use crate::sched::policy::{build_policy, ClusterView, Policy};
+use crate::util::error::Result;
 use crate::workload::Query;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -53,13 +55,14 @@ pub struct ServerStats {
 
 impl Server {
     /// Build and start the full serving topology. `factory` constructs an
-    /// inference engine *inside each worker thread* (PJRT handles are
-    /// thread-local by construction in the `xla` crate); use
-    /// [`Server::artifact_factory`] for the standard artifacts-dir setup.
-    pub fn start(cfg: &ExperimentConfig, factory: super::worker::EngineFactory) -> anyhow::Result<Server> {
+    /// inference backend *inside each worker thread* for that worker's
+    /// system spec (PJRT handles are thread-local by construction in the
+    /// `xla` crate); use [`Server::default_factory`] for the standard
+    /// setup.
+    pub fn start(cfg: &ExperimentConfig, factory: super::worker::EngineFactory) -> Result<Server> {
         let systems = cfg.cluster.systems.clone();
         let llm = find_llm(&cfg.workload.llm)
-            .ok_or_else(|| anyhow::anyhow!("unknown llm '{}'", cfg.workload.llm))?;
+            .ok_or_else(|| anyhow!("unknown llm '{}'", cfg.workload.llm))?;
         let energy = EnergyModel::new(PerfModel::new(llm));
         let metrics = Arc::new(Registry::default());
         let queues: Vec<Arc<SystemQueue>> =
@@ -105,14 +108,59 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Standard engine factory: load + compile the artifact bundle from a
+    /// PJRT engine factory: load + compile the artifact bundle from a
     /// directory (each worker does this once at startup).
+    #[cfg(feature = "pjrt")]
     pub fn artifact_factory(dir: std::path::PathBuf) -> super::worker::EngineFactory {
-        Arc::new(move || {
+        use crate::runtime::backend::InferenceBackend;
+        Arc::new(move |_spec: &SystemSpec| {
             let rt = crate::runtime::client::Runtime::cpu()?;
             let bundle = crate::runtime::artifacts::ArtifactBundle::load(&rt, &dir)?;
-            Ok(crate::runtime::engine::InferenceEngine::new(bundle))
+            Ok(Box::new(crate::runtime::engine::InferenceEngine::new(bundle))
+                as Box<dyn InferenceBackend>)
         })
+    }
+
+    /// Model-driven factory: each worker serves deterministic synthetic
+    /// tokens with phase timings from the paper's perf model for its
+    /// system class — no artifacts or PJRT needed.
+    pub fn sim_factory(llm: crate::model::LlmSpec) -> super::worker::EngineFactory {
+        use crate::runtime::backend::{InferenceBackend, SimBackend};
+        Arc::new(move |spec: &SystemSpec| {
+            Ok(Box::new(SimBackend::new(spec.clone(), PerfModel::new(llm.clone())))
+                as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Whether [`Server::default_factory`] will choose the real PJRT
+    /// backend for this config (compiled with `pjrt` AND the configured
+    /// artifacts directory has a manifest). Exposed so callers that
+    /// report the backend in use never re-derive the rule.
+    pub fn default_backend_is_pjrt(cfg: &ExperimentConfig) -> bool {
+        #[cfg(feature = "pjrt")]
+        {
+            std::path::Path::new(&cfg.serve.artifacts_dir).join("manifest.json").exists()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = cfg;
+            false
+        }
+    }
+
+    /// The standard factory: PJRT artifacts when
+    /// [`Server::default_backend_is_pjrt`] holds, the sim backend
+    /// otherwise.
+    pub fn default_factory(cfg: &ExperimentConfig) -> Result<super::worker::EngineFactory> {
+        #[cfg(feature = "pjrt")]
+        if Self::default_backend_is_pjrt(cfg) {
+            return Ok(Self::artifact_factory(std::path::PathBuf::from(
+                &cfg.serve.artifacts_dir,
+            )));
+        }
+        let llm = find_llm(&cfg.workload.llm)
+            .ok_or_else(|| anyhow!("unknown llm '{}'", cfg.workload.llm))?;
+        Ok(Self::sim_factory(llm))
     }
 
     /// Graceful shutdown: close queues, drain, join workers.

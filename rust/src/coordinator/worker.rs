@@ -1,20 +1,25 @@
 //! Worker threads: one per cluster system class, draining that system's
-//! queue in dynamic batches and executing each request on the real PJRT
-//! engine.
+//! queue in dynamic batches and executing each request on an inference
+//! backend (real PJRT under `--features pjrt`, the model-driven
+//! [`crate::runtime::SimBackend`] otherwise).
 
 use super::batcher::SystemQueue;
 use super::energy_acct;
 use super::request::{Request, Response};
 use crate::hw::spec::SystemSpec;
 use crate::metrics::Registry;
-use crate::runtime::engine::{InferenceEngine, SamplingParams};
+use crate::runtime::backend::InferenceBackend;
+use crate::runtime::engine::SamplingParams;
+use crate::util::error::Result;
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Builds an engine *inside* the worker thread: the xla crate's PJRT
-/// handles are `Rc`-based (!Send), so each worker owns its own client +
-/// compiled executables.
-pub type EngineFactory = Arc<dyn Fn() -> anyhow::Result<InferenceEngine> + Send + Sync>;
+/// Builds a backend *inside* the worker thread for the worker's system
+/// spec: the xla crate's PJRT handles are `Rc`-based (!Send), so each
+/// worker owns its own client + compiled executables; the sim backend
+/// uses the spec to model its phase timings.
+pub type EngineFactory =
+    Arc<dyn Fn(&SystemSpec) -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
 
 /// Configuration for one worker.
 pub struct WorkerConfig {
@@ -33,7 +38,7 @@ pub fn run_worker(
     factory: EngineFactory,
     metrics: Arc<Registry>,
 ) {
-    let engine = match factory() {
+    let engine = match factory(&cfg.spec) {
         Ok(e) => e,
         Err(e) => {
             // fail every request fast rather than hanging the queue
@@ -78,7 +83,7 @@ pub fn run_worker(
         batches.inc();
         let batch_size = batch.len();
         for req in batch {
-            serve_one(&cfg, req, batch_size, &engine, &served, &errors, &latency);
+            serve_one(&cfg, req, batch_size, engine.as_ref(), &served, &errors, &latency);
         }
     }
 }
@@ -87,7 +92,7 @@ fn serve_one(
     cfg: &WorkerConfig,
     req: Request,
     batch_size: usize,
-    engine: &InferenceEngine,
+    engine: &dyn InferenceBackend,
     served: &crate::metrics::Counter,
     errors: &crate::metrics::Counter,
     latency: &crate::metrics::LatencyHisto,

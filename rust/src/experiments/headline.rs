@@ -8,14 +8,18 @@
 //! (primary), the Eq. 10 output-side analog, and additionally a full
 //! (m, n)-trace dual-threshold simulation with the extra baselines the
 //! paper doesn't report (round-robin, random, JSQ, cost(λ=1)).
+//!
+//! Costs flow through [`crate::perf::cost_table::CostTable`]: each of
+//! the three trace framings (Eq. 9, Eq. 10, full-trace) is evaluated
+//! once, and the six-policy comparison reuses one shared table via
+//! [`super::runner::policy_comparison`].
 
+use super::runner::policy_comparison;
 use super::sweeps::threshold_sweep;
 use crate::config::schema::PolicyConfig;
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
 use crate::perf::energy::EnergyModel;
-use crate::sched::policy::build_policy;
-use crate::sim::engine::{simulate, SimOptions};
 use crate::sim::report::SimReport;
 use crate::workload::Query;
 
@@ -59,28 +63,26 @@ pub fn headline_savings(
     let c10 = threshold_sweep(&q10, energy, m1, a100, &super::sweeps::output_thresholds(), false);
     let eq10_saving_at_32 = at(&c10, 32);
 
-    // full-trace policy comparison
-    let run = |cfg: &PolicyConfig| -> SimReport {
-        let mut p = build_policy(cfg, energy.clone(), systems);
-        simulate(queries, systems, p.as_mut(), energy, &SimOptions::default())
-    };
-    let baseline = run(&PolicyConfig::AllOn("Swing-A100".into()));
-    let hybrid = run(&PolicyConfig::Threshold {
-        t_in: 32,
-        t_out: 32,
-        small: "M1-Pro".into(),
-        big: "Swing-A100".into(),
-    });
+    // full-trace policy comparison over one shared cost table, all six
+    // policies fanned across cores
+    let cfgs = vec![
+        PolicyConfig::AllOn("Swing-A100".into()),
+        PolicyConfig::Threshold {
+            t_in: 32,
+            t_out: 32,
+            small: "M1-Pro".into(),
+            big: "Swing-A100".into(),
+        },
+        PolicyConfig::RoundRobin,
+        PolicyConfig::Random { seed: 7 },
+        PolicyConfig::JoinShortestQueue,
+        PolicyConfig::Cost { lambda: 1.0 },
+    ];
+    let reports = policy_comparison(queries, systems, energy, &cfgs);
+    let baseline = &reports[0];
+    let hybrid = &reports[1];
     let combined_saving = 1.0 - hybrid.total_energy_j / baseline.total_energy_j;
     let runtime_increase_frac = hybrid.total_service_s / baseline.total_service_s - 1.0;
-    let reports = vec![
-        baseline,
-        hybrid,
-        run(&PolicyConfig::RoundRobin),
-        run(&PolicyConfig::Random { seed: 7 }),
-        run(&PolicyConfig::JoinShortestQueue),
-        run(&PolicyConfig::Cost { lambda: 1.0 }),
-    ];
 
     HeadlineResult {
         eq9_saving_at_32,

@@ -1,0 +1,226 @@
+//! Parallel sweep executor: fan λ grids, policy comparisons, and seed
+//! replicates across cores on top of a shared [`CostTable`].
+//!
+//! Everything here is deterministic — work is chunked contiguously and
+//! re-concatenated in input order by [`crate::util::par`], so a sweep
+//! produces bit-identical results at any core count. The model is
+//! evaluated once per (query, system); every grid point afterwards is
+//! pure accumulation (threshold grids get the same treatment in
+//! [`super::sweeps::threshold_sweep_from_costs`]).
+
+use crate::config::schema::PolicyConfig;
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+use crate::perf::cost_table::CostTable;
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::Feasibility;
+use crate::sched::policy::build_policy;
+use crate::sim::engine::{simulate_with_table, SimOptions};
+use crate::sim::report::SimReport;
+use crate::util::par::par_map;
+use crate::workload::Query;
+
+/// One λ point of the Eq. 1 trade-off frontier.
+#[derive(Clone, Debug)]
+pub struct LambdaPoint {
+    pub lambda: f64,
+    /// Σ E over the placeable queries of the assignment (J)
+    pub energy_j: f64,
+    /// Σ R over the placeable queries (serial seconds)
+    pub runtime_s: f64,
+    /// chosen system per query (oracle semantics: queries feasible
+    /// nowhere fall back to system 0, as in `sched::oracle`)
+    pub assignment: Vec<SystemId>,
+    /// placeable queries routed to each system, in catalog order —
+    /// sums to `n_queries − unplaceable`
+    pub routing: Vec<u64>,
+    /// queries feasible on no system: excluded from `energy_j`,
+    /// `runtime_s`, and `routing` (their `assignment` entry is the
+    /// oracle's system-0 placeholder)
+    pub unplaceable: u64,
+}
+
+/// Sweep λ over `U = λ·E + (1−λ)·R` with per-query argmin — the offline
+/// oracle of `sched::oracle::oracle_assign`, but the model is evaluated
+/// once for the whole grid and the λ points run concurrently.
+pub fn lambda_sweep(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    lambdas: &[f64],
+) -> Vec<LambdaPoint> {
+    let table = CostTable::build(queries, systems, energy);
+    lambda_sweep_with_table(&table, lambdas)
+}
+
+/// λ sweep over a prebuilt table (reuse the table across grids).
+pub fn lambda_sweep_with_table(table: &CostTable, lambdas: &[f64]) -> Vec<LambdaPoint> {
+    let n_systems = table.n_systems();
+    par_map(lambdas, |&lambda| {
+        let mut energy_j = 0.0;
+        let mut runtime_s = 0.0;
+        let mut routing = vec![0u64; n_systems];
+        let mut unplaceable = 0u64;
+        let mut assignment = Vec::with_capacity(table.n_queries());
+        for q in 0..table.n_queries() {
+            let mut best = SystemId(0);
+            let mut best_u = f64::INFINITY;
+            for s in 0..n_systems {
+                if table.feasibility(q, s) != Feasibility::Ok {
+                    continue;
+                }
+                let u = lambda * table.energy_j(q, s) + (1.0 - lambda) * table.runtime_s(q, s);
+                if u < best_u {
+                    best_u = u;
+                    best = SystemId(s);
+                }
+            }
+            if best_u.is_finite() {
+                energy_j += table.energy_j(q, best.0);
+                runtime_s += table.runtime_s(q, best.0);
+                routing[best.0] += 1;
+            } else {
+                unplaceable += 1;
+            }
+            assignment.push(best);
+        }
+        LambdaPoint { lambda, energy_j, runtime_s, assignment, routing, unplaceable }
+    })
+}
+
+/// Run every policy over the same trace, each against one shared
+/// [`CostTable`], fanned across cores. Reports come back in `cfgs`
+/// order and are identical to serial [`crate::sim::engine::simulate`]
+/// runs.
+pub fn policy_comparison(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    cfgs: &[PolicyConfig],
+) -> Vec<SimReport> {
+    let table = CostTable::build(queries, systems, energy);
+    par_map(cfgs, |cfg| {
+        let mut p = build_policy(cfg, energy.clone(), systems);
+        simulate_with_table(queries, systems, p.as_mut(), &table, &SimOptions::default())
+    })
+}
+
+/// Run an experiment once per seed, fanned across cores; results come
+/// back in seed order.
+pub fn seed_replicates<R, F>(seeds: &[u64], run: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(u64) -> R + Sync,
+{
+    par_map(seeds, |&s| run(s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+    use crate::sched::oracle::oracle_assign;
+    use crate::sim::engine::simulate;
+    use crate::workload::alpaca::AlpacaModel;
+
+    fn energy() -> EnergyModel {
+        EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+    }
+
+    #[test]
+    fn lambda_sweep_matches_oracle_assign() {
+        let queries = AlpacaModel::default().trace(11, 2_000);
+        let systems = system_catalog();
+        let em = energy();
+        let lambdas = [0.0, 0.5, 1.0];
+        let points = lambda_sweep(&queries, &systems, &em, &lambdas);
+        assert_eq!(points.len(), lambdas.len());
+        for p in &points {
+            let (assign, _) = oracle_assign(&queries, &systems, &em, p.lambda);
+            assert_eq!(p.assignment, assign, "λ={}", p.lambda);
+            // totals agree with recomputing from the assignment
+            let mut e = 0.0;
+            let mut r = 0.0;
+            for (q, sid) in queries.iter().zip(&assign) {
+                e += em.energy(&systems[sid.0], q.input_tokens, q.output_tokens);
+                r += em.runtime(&systems[sid.0], q.input_tokens, q.output_tokens);
+            }
+            assert!((p.energy_j - e).abs() <= 1e-9 * e.abs().max(1.0), "λ={}", p.lambda);
+            assert!((p.runtime_s - r).abs() <= 1e-9 * r.abs().max(1.0), "λ={}", p.lambda);
+            assert_eq!(
+                p.routing.iter().sum::<u64>() + p.unplaceable,
+                queries.len() as u64
+            );
+            assert_eq!(p.unplaceable, 0, "every Alpaca query fits somewhere");
+        }
+    }
+
+    #[test]
+    fn unplaceable_queries_excluded_from_totals() {
+        // a 100K-token generation fits nowhere in the catalog
+        let queries = vec![Query::new(0, 16, 16), Query::new(1, 8, 100_000)];
+        let systems = system_catalog();
+        let points = lambda_sweep(&queries, &systems, &energy(), &[1.0]);
+        let p = &points[0];
+        assert_eq!(p.unplaceable, 1);
+        assert_eq!(p.routing.iter().sum::<u64>(), 1);
+        assert!(p.energy_j.is_finite() && p.energy_j > 0.0);
+        assert!(p.runtime_s.is_finite() && p.runtime_s > 0.0);
+        assert_eq!(p.assignment.len(), 2);
+    }
+
+    #[test]
+    fn lambda_frontier_is_pareto_monotone() {
+        let queries = AlpacaModel::default().trace(12, 5_000);
+        let systems = system_catalog();
+        let points = lambda_sweep(&queries, &systems, &energy(), &[0.0, 0.25, 0.5, 0.75, 1.0]);
+        for w in points.windows(2) {
+            assert!(w[1].energy_j <= w[0].energy_j * 1.0001, "energy must fall as λ→1");
+            assert!(w[1].runtime_s >= w[0].runtime_s * 0.9999, "runtime must rise as λ→1");
+        }
+    }
+
+    #[test]
+    fn policy_comparison_matches_serial_simulate() {
+        let queries = AlpacaModel::default().trace(13, 2_000);
+        let systems = system_catalog();
+        let em = energy();
+        let cfgs = vec![
+            PolicyConfig::AllOn("Swing-A100".into()),
+            PolicyConfig::Threshold {
+                t_in: 32,
+                t_out: 32,
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            PolicyConfig::RoundRobin,
+        ];
+        let reports = policy_comparison(&queries, &systems, &em, &cfgs);
+        assert_eq!(reports.len(), cfgs.len());
+        for (cfg, rep) in cfgs.iter().zip(&reports) {
+            let mut p = build_policy(cfg, em.clone(), &systems);
+            let serial = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+            assert_eq!(rep.total_energy_j, serial.total_energy_j, "{}", serial.policy);
+            assert_eq!(rep.total_service_s, serial.total_service_s, "{}", serial.policy);
+            assert_eq!(rep.routing_counts(), serial.routing_counts(), "{}", serial.policy);
+        }
+    }
+
+    #[test]
+    fn seed_replicates_preserve_order_and_determinism() {
+        let seeds = [3u64, 1, 4, 1, 5];
+        let out = seed_replicates(&seeds, |s| {
+            AlpacaModel::default().trace(s, 100).iter().map(|q| q.total_tokens() as u64).sum::<u64>()
+        });
+        let serial: Vec<u64> = seeds
+            .iter()
+            .map(|&s| {
+                AlpacaModel::default().trace(s, 100).iter().map(|q| q.total_tokens() as u64).sum()
+            })
+            .collect();
+        assert_eq!(out, serial);
+        assert_eq!(out[1], out[3], "same seed must replicate identically");
+    }
+}

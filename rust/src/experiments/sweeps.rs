@@ -1,9 +1,18 @@
 //! Figs. 1, 2, 4, 5: token sweeps and threshold sweeps.
+//!
+//! The threshold sweep is table-backed: per-query `(small, big)` costs
+//! are evaluated **once** (in parallel across cores) by [`pair_costs`],
+//! then every grid point is a cheap accumulation —
+//! O(|trace| + |grid|·|trace|) adds instead of
+//! O(|grid|·|trace|) perf-model evaluations. Curves are bit-identical
+//! to direct per-(query, threshold) evaluation (equivalence-tested in
+//! `rust/tests/cost_table_equivalence.rs`).
 
 use crate::hw::spec::SystemSpec;
 use crate::model::LlmSpec;
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::{Feasibility, PerfModel};
+use crate::util::par::par_map;
 use crate::workload::alpaca::AlpacaModel;
 use crate::workload::Query;
 
@@ -91,13 +100,57 @@ pub struct ThresholdCurve {
     pub best_energy_j: f64,
 }
 
+/// Per-query `(E, R)` on the small and big systems, with the threshold
+/// router's fallback already applied: a query infeasible on the small
+/// system is charged the big system's costs on *both* sides (threshold
+/// policy semantics — it would have been routed big).
+#[derive(Clone, Copy, Debug)]
+pub struct PairCost {
+    pub small_energy_j: f64,
+    pub small_runtime_s: f64,
+    pub big_energy_j: f64,
+    pub big_runtime_s: f64,
+}
+
+/// Evaluate the perf/energy model once per query for a (small, big)
+/// system pair, fanned across cores. This is the entire model cost of a
+/// threshold sweep — grid evaluation afterwards is pure accumulation.
+pub fn pair_costs(
+    queries: &[Query],
+    energy: &EnergyModel,
+    small: &SystemSpec,
+    big: &SystemSpec,
+) -> Vec<PairCost> {
+    par_map(queries, |q| {
+        let (m, n) = (q.input_tokens, q.output_tokens);
+        let (big_e, big_r) = energy.energy_and_runtime(big, m, n);
+        if energy.perf.feasibility(small, m, n) == Feasibility::Ok {
+            let (small_e, small_r) = energy.energy_and_runtime(small, m, n);
+            PairCost {
+                small_energy_j: small_e,
+                small_runtime_s: small_r,
+                big_energy_j: big_e,
+                big_runtime_s: big_r,
+            }
+        } else {
+            PairCost {
+                small_energy_j: big_e,
+                small_runtime_s: big_r,
+                big_energy_j: big_e,
+                big_runtime_s: big_r,
+            }
+        }
+    })
+}
+
 /// Eq. 9 (input axis) / Eq. 10 (output axis) over the Alpaca trace:
 /// sweep T, split queries between `small` and `big`, total the energy
 /// and (serial) runtime. `input_axis` picks which token count the
 /// threshold tests — the *other* dimension follows the trace (unlike the
 /// paper, which holds it at the sweep default, we use the actual per-
 /// query values; tests confirm both framings give the same optimum
-/// region).
+/// region). Costs are evaluated once via [`pair_costs`] and the grid is
+/// fanned across cores.
 pub fn threshold_sweep(
     queries: &[Query],
     energy: &EnergyModel,
@@ -106,43 +159,44 @@ pub fn threshold_sweep(
     thresholds: &[u32],
     input_axis: bool,
 ) -> ThresholdCurve {
-    let cost_on = |spec: &SystemSpec, q: &Query| -> (f64, f64) {
-        let (m, n) = (q.input_tokens, q.output_tokens);
-        if energy.perf.feasibility(spec, m, n) != Feasibility::Ok {
-            // infeasible on the small system → the router falls back to
-            // big (threshold policy semantics)
-            let e = energy.energy(big, m, n);
-            let r = energy.runtime(big, m, n);
-            return (e, r);
-        }
-        (energy.energy(spec, m, n), energy.runtime(spec, m, n))
-    };
+    let costs = pair_costs(queries, energy, small, big);
+    threshold_sweep_from_costs(queries, &costs, thresholds, input_axis)
+}
 
-    let mut hybrid_energy = Vec::with_capacity(thresholds.len());
-    let mut hybrid_runtime = Vec::with_capacity(thresholds.len());
-    for &t in thresholds {
+/// Grid evaluation over precomputed [`pair_costs`] — reuse `costs`
+/// across several grids on the same trace.
+pub fn threshold_sweep_from_costs(
+    queries: &[Query],
+    costs: &[PairCost],
+    thresholds: &[u32],
+    input_axis: bool,
+) -> ThresholdCurve {
+    assert_eq!(queries.len(), costs.len(), "one PairCost per query");
+    let points: Vec<(f64, f64)> = par_map(thresholds, |&t| {
         let mut e_total = 0.0;
         let mut r_total = 0.0;
-        for q in queries {
+        for (q, c) in queries.iter().zip(costs) {
             let key = if input_axis { q.input_tokens } else { q.output_tokens };
-            let spec = if key <= t { small } else { big };
-            let (e, r) = cost_on(spec, q);
+            let (e, r) = if key <= t {
+                (c.small_energy_j, c.small_runtime_s)
+            } else {
+                (c.big_energy_j, c.big_runtime_s)
+            };
             e_total += e;
             r_total += r;
         }
-        hybrid_energy.push(e_total);
-        hybrid_runtime.push(r_total);
-    }
+        (e_total, r_total)
+    });
+    let hybrid_energy: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let hybrid_runtime: Vec<f64> = points.iter().map(|p| p.1).collect();
 
     let (mut all_small_e, mut all_small_r) = (0.0, 0.0);
     let (mut all_big_e, mut all_big_r) = (0.0, 0.0);
-    for q in queries {
-        let (e, r) = cost_on(small, q);
-        all_small_e += e;
-        all_small_r += r;
-        let (e, r) = cost_on(big, q);
-        all_big_e += e;
-        all_big_r += r;
+    for c in costs {
+        all_small_e += c.small_energy_j;
+        all_small_r += c.small_runtime_s;
+        all_big_e += c.big_energy_j;
+        all_big_r += c.big_runtime_s;
     }
 
     let best_idx = hybrid_energy
@@ -305,5 +359,24 @@ mod tests {
         );
         // hybrid (T=32) runtime > all-big runtime (T=0)
         assert!(curve.hybrid_runtime_s[1] > curve.hybrid_runtime_s[0]);
+    }
+
+    #[test]
+    fn reused_pair_costs_match_fresh_sweep() {
+        let queries: Vec<Query> = alpaca_trace(7, 3_000)
+            .iter()
+            .map(|q| Query::new(q.id, q.input_tokens, 32))
+            .collect();
+        let systems = system_catalog();
+        let e = energy();
+        let (small, big) = (&systems[0], &systems[1]);
+        let costs = pair_costs(&queries, &e, small, big);
+        let grid = input_thresholds();
+        let fresh = threshold_sweep(&queries, &e, small, big, &grid, true);
+        let reused = threshold_sweep_from_costs(&queries, &costs, &grid, true);
+        assert_eq!(fresh.hybrid_energy_j, reused.hybrid_energy_j);
+        assert_eq!(fresh.hybrid_runtime_s, reused.hybrid_runtime_s);
+        assert_eq!(fresh.all_small_energy_j, reused.all_small_energy_j);
+        assert_eq!(fresh.best_threshold, reused.best_threshold);
     }
 }

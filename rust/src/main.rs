@@ -263,11 +263,12 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let rep = hetsched::sim::engine::simulate(&queries, &cfg.cluster.systems, policy.as_mut(), &energy, &opts);
     println!("policy: {}", rep.policy);
     println!(
-        "queries: {}   energy: {}   service: {}   makespan: {}",
+        "queries: {}   energy: {}   service: {}   makespan: {}   rerouted: {}",
         rep.outcomes.len(),
         fmt_joules(rep.total_energy_j),
         fmt_secs(rep.total_service_s),
-        fmt_secs(rep.makespan_s)
+        fmt_secs(rep.makespan_s),
+        rep.rerouted
     );
     println!("latency: mean {}   p99 {}", fmt_secs(rep.mean_latency_s()), fmt_secs(rep.p99_latency_s()));
     let mut t = Table::new(&["system", "queries", "busy", "energy"]).align(0, Align::Left);
@@ -293,9 +294,9 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     cfg.serve.gen_tokens = args.get_u64("gen")? as u32;
     let n_requests = args.get_usize("requests")?;
 
-    let factory = hetsched::coordinator::server::Server::artifact_factory(std::path::PathBuf::from(
-        &cfg.serve.artifacts_dir,
-    ));
+    // PJRT artifacts when available (feature "pjrt"), sim backend otherwise
+    let factory = hetsched::coordinator::server::Server::default_factory(&cfg)
+        .map_err(|e| format!("engine factory: {e}"))?;
     let server = hetsched::coordinator::server::Server::start(&cfg, factory)
         .map_err(|e| format!("server start: {e:#}"))?;
     let handle = server.handle();

@@ -1,0 +1,218 @@
+//! Precomputed per-(query, system) cost table — the shared substrate
+//! under the simulator and every sweep.
+//!
+//! `E(m,n,s)` and `R(m,n,s)` are pure functions of the query and the
+//! system (Eq. 1): nothing about thresholds, λ, or queue state changes
+//! them. The seed code nevertheless re-evaluated the analytical model
+//! for every (query, grid-point) pair, making Fig. 4/5-style sweeps
+//! O(|trace| × |grid|) model evaluations. A [`CostTable`] evaluates the
+//! model **once per (query, system)** — in parallel across cores via
+//! [`crate::util::par`] — and its consumers
+//! ([`crate::sim::engine::simulate_with_table`],
+//! [`crate::experiments::runner`]) then read costs in O(1). The
+//! threshold sweeps use the sibling per-query precompute
+//! [`crate::experiments::sweeps::pair_costs`], which bakes the
+//! threshold router's small→big fallback into its cells; any change to
+//! evaluation semantics here (e.g. attribution handling) must be
+//! mirrored there.
+//!
+//! Cells are stored exactly as the direct evaluation would produce them
+//! (same code path, same f64 operation order), so table-backed results
+//! are bit-identical to per-query evaluation — equivalence is enforced
+//! by `rust/tests/cost_table_equivalence.rs`.
+
+use super::energy::{Attribution, EnergyModel};
+use super::model::Feasibility;
+use crate::hw::spec::SystemSpec;
+use crate::util::par::par_map;
+use crate::workload::Query;
+
+/// Cost of one query on one system. Infeasible cells carry `NaN` costs
+/// and a non-`Ok` feasibility; consumers must check feasibility before
+/// reading costs (the simulator and sweeps do).
+#[derive(Clone, Copy, Debug)]
+pub struct CostCell {
+    pub energy_j: f64,
+    pub runtime_s: f64,
+    pub feasibility: Feasibility,
+}
+
+/// Dense (query-major) table of [`CostCell`]s for a trace × catalog,
+/// plus the per-query energy-cheapest feasible system (the simulator's
+/// re-route fallback target).
+#[derive(Clone, Debug)]
+pub struct CostTable {
+    n_systems: usize,
+    cells: Vec<CostCell>,
+    cheapest: Vec<Option<usize>>,
+    /// which attribution ([`Attribution::Total`] / [`Attribution::Net`])
+    /// the energy column was built with
+    pub attribution: Attribution,
+}
+
+impl CostTable {
+    /// Evaluate the perf/energy model once per (query, system), fanned
+    /// across cores. Deterministic: identical to the serial build.
+    pub fn build(queries: &[Query], systems: &[SystemSpec], energy: &EnergyModel) -> Self {
+        let n_systems = systems.len();
+        let rows: Vec<Vec<CostCell>> = par_map(queries, |q| {
+            let (m, n) = (q.input_tokens, q.output_tokens);
+            systems
+                .iter()
+                .map(|spec| {
+                    let feasibility = energy.perf.feasibility(spec, m, n);
+                    if feasibility == Feasibility::Ok {
+                        let (energy_j, runtime_s) = energy.energy_and_runtime(spec, m, n);
+                        CostCell { energy_j, runtime_s, feasibility }
+                    } else {
+                        CostCell { energy_j: f64::NAN, runtime_s: f64::NAN, feasibility }
+                    }
+                })
+                .collect()
+        });
+        let mut cells = Vec::with_capacity(queries.len() * n_systems);
+        let mut cheapest = Vec::with_capacity(queries.len());
+        for row in rows {
+            // argmin energy over feasible systems, scanning in catalog
+            // order with strict `<` — the same tie-break the simulator's
+            // direct fallback scan used
+            let mut best = None;
+            let mut best_e = f64::INFINITY;
+            for (i, c) in row.iter().enumerate() {
+                if c.feasibility == Feasibility::Ok && c.energy_j < best_e {
+                    best_e = c.energy_j;
+                    best = Some(i);
+                }
+            }
+            cheapest.push(best);
+            cells.extend(row);
+        }
+        Self { n_systems, cells, cheapest, attribution: energy.attribution }
+    }
+
+    #[inline]
+    fn idx(&self, query: usize, system: usize) -> usize {
+        debug_assert!(system < self.n_systems);
+        query * self.n_systems + system
+    }
+
+    #[inline]
+    pub fn cell(&self, query: usize, system: usize) -> &CostCell {
+        &self.cells[self.idx(query, system)]
+    }
+
+    /// `E(m,n,s)` in joules (NaN when infeasible).
+    #[inline]
+    pub fn energy_j(&self, query: usize, system: usize) -> f64 {
+        self.cell(query, system).energy_j
+    }
+
+    /// `R(m,n,s)` in seconds (NaN when infeasible).
+    #[inline]
+    pub fn runtime_s(&self, query: usize, system: usize) -> f64 {
+        self.cell(query, system).runtime_s
+    }
+
+    #[inline]
+    pub fn feasibility(&self, query: usize, system: usize) -> Feasibility {
+        self.cell(query, system).feasibility
+    }
+
+    #[inline]
+    pub fn is_feasible(&self, query: usize, system: usize) -> bool {
+        self.feasibility(query, system) == Feasibility::Ok
+    }
+
+    /// The energy-cheapest feasible system for `query`, if any — the
+    /// simulator's fallback when a policy routes somewhere infeasible.
+    #[inline]
+    pub fn cheapest_feasible(&self, query: usize) -> Option<usize> {
+        self.cheapest[query]
+    }
+
+    pub fn n_queries(&self) -> usize {
+        if self.n_systems == 0 {
+            0
+        } else {
+            self.cells.len() / self.n_systems
+        }
+    }
+
+    pub fn n_systems(&self) -> usize {
+        self.n_systems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::model::PerfModel;
+    use crate::workload::alpaca::AlpacaModel;
+
+    fn table(attribution: Attribution) -> (Vec<Query>, Vec<SystemSpec>, EnergyModel, CostTable) {
+        let queries = AlpacaModel::default().trace(17, 2_000);
+        let systems = system_catalog();
+        let energy =
+            EnergyModel::with_attribution(PerfModel::new(llm_catalog()[1].clone()), attribution);
+        let t = CostTable::build(&queries, &systems, &energy);
+        (queries, systems, energy, t)
+    }
+
+    #[test]
+    fn cells_match_direct_model_evaluation_exactly() {
+        for attribution in [Attribution::Total, Attribution::Net] {
+            let (queries, systems, energy, t) = table(attribution);
+            assert_eq!(t.n_queries(), queries.len());
+            assert_eq!(t.n_systems(), systems.len());
+            for (qi, q) in queries.iter().enumerate() {
+                for (si, spec) in systems.iter().enumerate() {
+                    let feas = energy.perf.feasibility(spec, q.input_tokens, q.output_tokens);
+                    assert_eq!(t.feasibility(qi, si), feas);
+                    if feas == Feasibility::Ok {
+                        let e = energy.energy(spec, q.input_tokens, q.output_tokens);
+                        let r = energy.runtime(spec, q.input_tokens, q.output_tokens);
+                        assert_eq!(t.energy_j(qi, si), e, "energy cell ({qi},{si})");
+                        assert_eq!(t.runtime_s(qi, si), r, "runtime cell ({qi},{si})");
+                    } else {
+                        assert!(t.energy_j(qi, si).is_nan());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cheapest_feasible_is_the_energy_argmin() {
+        let (queries, systems, energy, t) = table(Attribution::Total);
+        for (qi, q) in queries.iter().enumerate() {
+            let mut best = None;
+            let mut best_e = f64::INFINITY;
+            for (i, spec) in systems.iter().enumerate() {
+                if energy.perf.feasibility(spec, q.input_tokens, q.output_tokens)
+                    == Feasibility::Ok
+                {
+                    let e = energy.energy(spec, q.input_tokens, q.output_tokens);
+                    if e < best_e {
+                        best_e = e;
+                        best = Some(i);
+                    }
+                }
+            }
+            assert_eq!(t.cheapest_feasible(qi), best, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn infeasible_everywhere_has_no_fallback() {
+        // a 100K-token generation's KV cache exceeds every catalog
+        // system's memory (and the M1's generation cap)
+        let queries = vec![Query::new(0, 8, 100_000)];
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let t = CostTable::build(&queries, &systems, &energy);
+        assert_eq!(t.cheapest_feasible(0), None);
+        assert!((0..systems.len()).all(|s| !t.is_feasible(0, s)));
+    }
+}

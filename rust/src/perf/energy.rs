@@ -48,6 +48,19 @@ impl EnergyModel {
         self.perf.runtime(spec, m, n)
     }
 
+    /// `(E, R)` from a single model evaluation — the building block of
+    /// [`super::cost_table::CostTable`]. Produces exactly the values
+    /// [`Self::energy`] and [`Self::runtime`] would (same code path,
+    /// same f64 operation order).
+    pub fn energy_and_runtime(&self, spec: &SystemSpec, m: u32, n: u32) -> (f64, f64) {
+        let c = self.perf.query_cost(spec, m, n);
+        let e = match self.attribution {
+            Attribution::Total => c.energy_j,
+            Attribution::Net => c.net_energy_j,
+        };
+        (e, c.runtime_s)
+    }
+
     /// Mean energy per *input* token with fixed n — `E_sys,in(m)` of
     /// Eq. 9 (the paper's input-sweep curves use n = 32).
     pub fn energy_per_input_token(&self, spec: &SystemSpec, m: u32, fixed_n: u32) -> f64 {

@@ -7,9 +7,11 @@
 //! is the exact integral of the phase-resolved power model.
 
 pub mod calibration;
+pub mod cost_table;
 pub mod energy;
 pub mod model;
 pub mod roofline;
 
+pub use cost_table::{CostCell, CostTable};
 pub use energy::EnergyModel;
 pub use model::{PerfModel, QueryCost, Feasibility};

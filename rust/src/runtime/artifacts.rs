@@ -1,11 +1,19 @@
 //! Artifact loading: `manifest.json` + `weights.bin` + compiled HLO
 //! executables, matching `python/compile/aot.py`'s output format exactly.
+//!
+//! [`Manifest`] parsing/validation is plain std and always available;
+//! [`ArtifactBundle`] uploads weights and compiles HLO through the `xla`
+//! crate, so it is gated behind the `pjrt` feature.
 
+#[cfg(feature = "pjrt")]
 use super::client::Runtime;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
@@ -158,6 +166,7 @@ impl Manifest {
 }
 
 /// Weights (resident on the PJRT device) + compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactBundle {
     pub manifest: Manifest,
     /// weights uploaded once at load time (§Perf: no per-call transfer)
@@ -172,6 +181,7 @@ pub struct ArtifactBundle {
     pub dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactBundle {
     /// Load manifest + weights (uploaded to the device once) and compile
     /// every entrypoint.

@@ -1,0 +1,132 @@
+//! Pluggable inference backends for the serving coordinator.
+//!
+//! Workers drive a [`InferenceBackend`]; the real PJRT engine implements
+//! it behind the `pjrt` feature, and [`SimBackend`] implements it
+//! unconditionally so the full router/batcher/worker topology runs in
+//! any environment — tokens are synthetic but deterministic, and phase
+//! timings come from the paper's perf model for the worker's system.
+
+use super::engine::{GenerationResult, SamplingParams};
+use crate::hw::spec::SystemSpec;
+use crate::perf::model::PerfModel;
+use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
+
+/// One generation call — what a worker needs from any engine.
+pub trait InferenceBackend: Send {
+    fn generate(&self, prompt: &[i32], gen_tokens: u32, sp: SamplingParams)
+        -> Result<GenerationResult>;
+}
+
+#[cfg(feature = "pjrt")]
+impl InferenceBackend for super::engine::InferenceEngine {
+    fn generate(
+        &self,
+        prompt: &[i32],
+        gen_tokens: u32,
+        sp: SamplingParams,
+    ) -> Result<GenerationResult> {
+        super::engine::InferenceEngine::generate(self, prompt, gen_tokens, sp)
+    }
+}
+
+/// Model-driven backend: byte tokens derived deterministically from the
+/// (seed, prompt) pair, phase times from `R(m,n,s)`'s decomposition.
+///
+/// By default generation returns instantly — reported `prefill_s` /
+/// `decode_s` are *modeled*, so wall-clock latency through the server
+/// reflects dispatch overhead only. Set a non-zero [`time_scale`]
+/// (e.g. 0.01 = 100× faster than modeled) to make workers actually
+/// occupy the modeled time, which exercises queueing and batching.
+///
+/// [`time_scale`]: SimBackend::with_time_scale
+pub struct SimBackend {
+    spec: SystemSpec,
+    perf: PerfModel,
+    time_scale: f64,
+}
+
+impl SimBackend {
+    pub fn new(spec: SystemSpec, perf: PerfModel) -> Self {
+        Self { spec, perf, time_scale: 0.0 }
+    }
+
+    /// Sleep `modeled_time × scale` inside `generate` (0 = no sleep).
+    pub fn with_time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale.max(0.0);
+        self
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn generate(
+        &self,
+        prompt: &[i32],
+        gen_tokens: u32,
+        sp: SamplingParams,
+    ) -> Result<GenerationResult> {
+        let m = prompt.len().max(1) as u32;
+        // pure phase durations, matching GenerationResult's contract;
+        // dispatch overhead is deliberately excluded — the worker's
+        // energy attribution treats dispatch as amortized by batching
+        // (it charges attribute(spec, 0.0, prefill, decode))
+        let prefill_s = self.perf.prefill_time(&self.spec, m);
+        let decode_s = self.perf.decode_time(&self.spec, m, gen_tokens);
+        // FNV-1a over the prompt so identical (seed, prompt) pairs
+        // reproduce and different prompts diverge
+        let mut h = 0xcbf29ce484222325u64;
+        for &t in prompt {
+            h = (h ^ t as u64).wrapping_mul(0x100000001b3);
+        }
+        let mut rng = Xoshiro256::seed_from(sp.seed ^ h);
+        let tokens: Vec<i32> = (0..gen_tokens).map(|_| rng.below(256) as i32).collect();
+        if self.time_scale > 0.0 {
+            let dur = (prefill_s + decode_s) * self.time_scale;
+            if dur > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(dur));
+            }
+        }
+        Ok(GenerationResult { prompt_len: prompt.len(), tokens, bucket: 0, prefill_s, decode_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+
+    fn backend(system: usize) -> SimBackend {
+        SimBackend::new(
+            system_catalog()[system].clone(),
+            PerfModel::new(llm_catalog()[1].clone()),
+        )
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_prompt() {
+        let b = backend(1);
+        let sp = SamplingParams { temperature: 0.0, seed: 9 };
+        let a = b.generate(&[0, 5, 7], 16, sp).unwrap();
+        let a2 = b.generate(&[0, 5, 7], 16, sp).unwrap();
+        assert_eq!(a.tokens, a2.tokens);
+        assert_eq!(a.tokens.len(), 16);
+        assert!(a.tokens.iter().all(|&t| (0..256).contains(&t)));
+        let other_prompt = b.generate(&[0, 5, 8], 16, sp).unwrap();
+        assert_ne!(a.tokens, other_prompt.tokens);
+        let other_seed =
+            b.generate(&[0, 5, 7], 16, SamplingParams { temperature: 0.0, seed: 10 }).unwrap();
+        assert_ne!(a.tokens, other_seed.tokens);
+    }
+
+    #[test]
+    fn phase_times_follow_the_perf_model() {
+        let b = backend(0); // M1
+        let sp = SamplingParams::default();
+        let short = b.generate(&[0; 8], 8, sp).unwrap();
+        let long = b.generate(&[0; 64], 64, sp).unwrap();
+        assert!(short.prefill_s > 0.0 && short.decode_s > 0.0);
+        assert!(long.prefill_s > short.prefill_s);
+        assert!(long.decode_s > short.decode_s);
+    }
+}

@@ -4,7 +4,7 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §1).
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 /// Process-wide PJRT client + compile cache.

@@ -1,13 +1,30 @@
-//! The PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`) and executes them on the CPU PJRT client —
-//! the request path never touches Python.
+//! The inference runtime. Two backends sit behind
+//! [`backend::InferenceBackend`]:
+//!
+//! - **PJRT** (`--features pjrt`): loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered by `python/compile/aot.py`) and executes them on the
+//!   CPU PJRT client — the request path never touches Python. Gated
+//!   because it needs the external `xla` crate, which the offline crate
+//!   set cannot provide.
+//! - **Sim** (always available): [`backend::SimBackend`] serves
+//!   deterministic synthetic tokens with phase timings from the paper's
+//!   perf model, so the full coordinator topology runs (and is tested)
+//!   without artifacts or PJRT.
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod engine;
 pub mod tokenizer;
 
-pub use artifacts::{ArtifactBundle, Manifest};
+#[cfg(feature = "pjrt")]
+pub use artifacts::ArtifactBundle;
+pub use artifacts::Manifest;
+pub use backend::{InferenceBackend, SimBackend};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
-pub use engine::{GenerationResult, InferenceEngine, SamplingParams};
+#[cfg(feature = "pjrt")]
+pub use engine::InferenceEngine;
+pub use engine::{GenerationResult, SamplingParams};
 pub use tokenizer::ByteTokenizer;

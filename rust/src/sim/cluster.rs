@@ -1,8 +1,36 @@
 //! Cluster state for simulation and live routing: per-system FIFO queues
 //! over `count` identical nodes.
+//!
+//! Queue state is **derived, never cached**: `queue_len` counts the
+//! in-flight assignments whose finish instant lies beyond the observed
+//! time (a min-heap pruned by [`NodeState::advance_to`]), and
+//! `queue_depth_at` integrates outstanding seconds from `node_free_at`.
+//! The seed code cached both on the node and only ever incremented them,
+//! so online policies routed on cumulative arrival counts — the
+//! regression tests in `sim::engine` pin the fixed behavior.
 
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// A finish instant with a total order (finish times are never NaN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct FinishAt(f64);
+
+impl Eq for FinishAt {}
+
+impl PartialOrd for FinishAt {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FinishAt {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
 
 /// Dynamic state of one system class (possibly multiple nodes).
 #[derive(Clone, Debug)]
@@ -10,9 +38,9 @@ pub struct NodeState {
     pub spec: SystemSpec,
     /// next instant each node becomes free (s)
     pub node_free_at: Vec<f64>,
-    /// queued + in-flight estimated service seconds (for JSQ / views)
-    pub queue_depth_s: f64,
-    pub queue_len: usize,
+    /// finish instants of assignments not yet completed at the last
+    /// `advance_to` time (min-heap)
+    inflight: BinaryHeap<Reverse<FinishAt>>,
     /// totals
     pub busy_s: f64,
     pub energy_j: f64,
@@ -25,8 +53,7 @@ impl NodeState {
         Self {
             spec,
             node_free_at: vec![0.0; nodes],
-            queue_depth_s: 0.0,
-            queue_len: 0,
+            inflight: BinaryHeap::new(),
             busy_s: 0.0,
             energy_j: 0.0,
             queries: 0,
@@ -36,6 +63,25 @@ impl NodeState {
     /// Earliest node availability.
     pub fn earliest_free(&self) -> f64 {
         self.node_free_at.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Retire every assignment that has finished by time `t`, so
+    /// [`Self::queue_len`] reflects live state at `t`.
+    pub fn advance_to(&mut self, t: f64) {
+        while self.inflight.peek().is_some_and(|&Reverse(FinishAt(f))| f <= t) {
+            self.inflight.pop();
+        }
+    }
+
+    /// Queued + in-flight assignments as of the last `advance_to`.
+    pub fn queue_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Outstanding estimated service seconds at time `t` (for JSQ /
+    /// queue-aware cost policies).
+    pub fn queue_depth_at(&self, t: f64) -> f64 {
+        self.node_free_at.iter().map(|&f| (f - t).max(0.0)).sum()
     }
 
     /// Schedule a service of `dur` starting no earlier than `t`; returns
@@ -50,6 +96,7 @@ impl NodeState {
         let start = t.max(free_at);
         let finish = start + dur;
         self.node_free_at[idx] = finish;
+        self.inflight.push(Reverse(FinishAt(finish)));
         self.busy_s += dur;
         self.queries += 1;
         (start, finish)
@@ -75,12 +122,21 @@ impl ClusterState {
         &mut self.nodes[id.0]
     }
 
-    pub fn queue_depths(&self) -> Vec<f64> {
-        self.nodes.iter().map(|n| n.queue_depth_s).collect()
+    /// Retire finished work cluster-wide (call once per arrival instant).
+    pub fn advance_to(&mut self, t: f64) {
+        for n in &mut self.nodes {
+            n.advance_to(t);
+        }
     }
 
+    /// Outstanding seconds per system at time `t`.
+    pub fn queue_depths_at(&self, t: f64) -> Vec<f64> {
+        self.nodes.iter().map(|n| n.queue_depth_at(t)).collect()
+    }
+
+    /// Live in-flight counts per system (as of the last `advance_to`).
     pub fn queue_lens(&self) -> Vec<usize> {
-        self.nodes.iter().map(|n| n.queue_len).collect()
+        self.nodes.iter().map(NodeState::queue_len).collect()
     }
 
     /// Makespan: when the last node finishes.
@@ -131,5 +187,41 @@ mod tests {
         cs.get_mut(SystemId(0)).schedule(0.0, 5.0);
         cs.get_mut(SystemId(1)).schedule(0.0, 9.0);
         assert_eq!(cs.makespan(), 9.0);
+    }
+
+    #[test]
+    fn queue_state_drains_as_time_advances() {
+        let mut specs = system_catalog();
+        specs[0].count = 1;
+        let mut cs = ClusterState::new(&specs);
+        let n = cs.get_mut(SystemId(0));
+        n.schedule(0.0, 2.0); // busy [0, 2)
+        n.schedule(0.0, 3.0); // busy [2, 5)
+        n.advance_to(0.0);
+        assert_eq!(n.queue_len(), 2);
+        assert!((n.queue_depth_at(0.0) - 5.0).abs() < 1e-12);
+        n.advance_to(2.0);
+        assert_eq!(n.queue_len(), 1); // first finished exactly at t=2
+        assert!((n.queue_depth_at(3.0) - 2.0).abs() < 1e-12);
+        n.advance_to(5.0);
+        assert_eq!(n.queue_len(), 0);
+        assert_eq!(n.queue_depth_at(10.0), 0.0);
+    }
+
+    #[test]
+    fn cluster_advance_applies_to_every_system() {
+        let specs = system_catalog();
+        let mut cs = ClusterState::new(&specs);
+        cs.get_mut(SystemId(0)).schedule(0.0, 1.0);
+        cs.get_mut(SystemId(1)).schedule(0.0, 4.0);
+        cs.advance_to(0.0);
+        assert_eq!(cs.queue_lens(), vec![1, 1, 0]);
+        cs.advance_to(2.0);
+        assert_eq!(cs.queue_lens(), vec![0, 1, 0]);
+        let depths = cs.queue_depths_at(2.0);
+        assert_eq!(depths[0], 0.0);
+        assert!((depths[1] - 2.0).abs() < 1e-12);
+        cs.advance_to(100.0);
+        assert_eq!(cs.queue_lens(), vec![0, 0, 0]);
     }
 }

@@ -6,14 +6,22 @@
 //!   serialize FIFO per system. Arrivals are all at t=0.
 //! - **online**: queries arrive over time; the policy sees live queue
 //!   state (enabling queue-aware extensions the paper speculates about).
+//!   Queue state is derived from `node_free_at` at each arrival instant
+//!   — both `queue_depth_s` and `queue_len` drain as work completes.
 //!
-//! Infeasible assignments (policy sent an OOM query somewhere) are
-//! re-routed to the cheapest feasible system and counted in
-//! `SimOptions::strict` mode as errors.
+//! Per-query costs come from a [`CostTable`] built once per trace
+//! ([`simulate`] builds it; [`simulate_with_table`] reuses a shared one
+//! across a sweep grid — see [`crate::experiments::runner`]).
+//!
+//! Infeasible assignments (policy sent an OOM query somewhere) panic in
+//! [`SimOptions::strict`] mode; otherwise they are re-routed to the
+//! cheapest feasible system and counted in [`SimReport::rerouted`].
 
 use super::cluster::ClusterState;
 use super::report::{QueryOutcome, SimReport, SystemTotals};
+use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
+use crate::perf::cost_table::CostTable;
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
 use crate::sched::policy::{ClusterView, Policy};
@@ -25,7 +33,8 @@ pub struct SimOptions {
     /// charge idle-floor energy of all nodes across the makespan
     pub include_idle_energy: bool,
     /// panic if the policy picks an infeasible system (tests); otherwise
-    /// fall back to the cheapest feasible one
+    /// fall back to the cheapest feasible one and count it in
+    /// [`SimReport::rerouted`]
     pub strict: bool,
 }
 
@@ -35,8 +44,9 @@ impl Default for SimOptions {
     }
 }
 
-/// Run the simulation. Queries must be sorted by arrival time (batch
-/// traces trivially are).
+/// Run the simulation, evaluating the perf/energy model through a
+/// freshly built [`CostTable`]. Queries must be sorted by arrival time
+/// (batch traces trivially are).
 pub fn simulate(
     queries: &[Query],
     systems: &[SystemSpec],
@@ -44,33 +54,44 @@ pub fn simulate(
     energy: &EnergyModel,
     opts: &SimOptions,
 ) -> SimReport {
+    let table = CostTable::build(queries, systems, energy);
+    simulate_with_table(queries, systems, policy, &table, opts)
+}
+
+/// Run the simulation against a prebuilt [`CostTable`] (row `i` must
+/// describe `queries[i]` over exactly `systems`). Sweeps that replay the
+/// same trace under many policies / grid points build the table once and
+/// call this per point.
+pub fn simulate_with_table(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    table: &CostTable,
+    opts: &SimOptions,
+) -> SimReport {
     debug_assert!(
         queries.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
         "queries must be sorted by arrival"
     );
+    assert_eq!(table.n_queries(), queries.len(), "cost table rows must match the trace");
+    assert_eq!(table.n_systems(), systems.len(), "cost table columns must match the cluster");
     let mut cluster = ClusterState::new(systems);
     let mut outcomes = Vec::with_capacity(queries.len());
     let mut sys_energy = vec![0.0f64; systems.len()];
+    let mut rerouted = 0u64;
 
-    for q in queries {
+    for (qi, q) in queries.iter().enumerate() {
         let (m, n) = (q.input_tokens, q.output_tokens);
-        // advance queue-depth estimates to the arrival instant
-        let depths: Vec<f64> = cluster
-            .nodes
-            .iter()
-            .map(|node| {
-                node.node_free_at
-                    .iter()
-                    .map(|&f| (f - q.arrival_s).max(0.0))
-                    .sum::<f64>()
-            })
-            .collect();
+        // retire finished work, then view queue state at the arrival
+        // instant — the policy sees live depths *and* live lengths
+        cluster.advance_to(q.arrival_s);
+        let depths = cluster.queue_depths_at(q.arrival_s);
         let lens = cluster.queue_lens();
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
         let mut sid = policy.assign(q, &view);
         assert!(sid.0 < systems.len(), "policy returned out-of-range system");
 
-        if energy.perf.feasibility(&systems[sid.0], m, n) != Feasibility::Ok {
+        if table.feasibility(qi, sid.0) != Feasibility::Ok {
             if opts.strict {
                 panic!(
                     "policy '{}' routed infeasible query (m={m}, n={n}) to {}",
@@ -79,30 +100,19 @@ pub fn simulate(
                 );
             }
             // fall back: cheapest feasible system
-            let mut best = None;
-            let mut best_e = f64::INFINITY;
-            for (i, spec) in systems.iter().enumerate() {
-                if energy.perf.feasibility(spec, m, n) == Feasibility::Ok {
-                    let e = energy.energy(spec, m, n);
-                    if e < best_e {
-                        best_e = e;
-                        best = Some(i);
-                    }
-                }
-            }
-            sid = crate::hw::catalog::SystemId(
-                best.unwrap_or_else(|| panic!("query (m={m},n={n}) feasible nowhere")),
+            sid = SystemId(
+                table
+                    .cheapest_feasible(qi)
+                    .unwrap_or_else(|| panic!("query (m={m},n={n}) feasible nowhere")),
             );
+            rerouted += 1;
         }
 
-        let spec = &systems[sid.0];
-        let service = energy.runtime(spec, m, n);
-        let e_j = energy.energy(spec, m, n);
+        let service = table.runtime_s(qi, sid.0);
+        let e_j = table.energy_j(qi, sid.0);
         let node = cluster.get_mut(sid);
         let (start, finish) = node.schedule(q.arrival_s, service);
         node.energy_j += e_j;
-        node.queue_depth_s = node.node_free_at.iter().map(|&f| (f - q.arrival_s).max(0.0)).sum();
-        node.queue_len += 1;
         sys_energy[sid.0] += e_j;
         outcomes.push(QueryOutcome {
             query_id: q.id,
@@ -146,6 +156,7 @@ pub fn simulate(
         total_service_s: total_service,
         total_energy_j: total_energy,
         idle_energy_j: idle_energy,
+        rerouted,
     }
 }
 
@@ -226,6 +237,8 @@ mod tests {
         assert_ne!(big.system, 0);
         let small = r.outcomes.iter().find(|o| o.query_id == 1).unwrap();
         assert_eq!(small.system, 0);
+        // the fallback is visible in the report
+        assert_eq!(r.rerouted, 1);
     }
 
     #[test]
@@ -250,6 +263,8 @@ mod tests {
         }
         // under load, someone must have waited
         assert!(r.outcomes.iter().any(|o| o.queue_wait_s() > 0.0));
+        // a feasible-everywhere workload never triggers the fallback
+        assert_eq!(r.rerouted, 0);
     }
 
     #[test]
@@ -267,5 +282,121 @@ mod tests {
         );
         assert!(with_idle.idle_energy_j > 0.0);
         assert!(with_idle.total_energy_j > with_idle.systems.iter().map(|s| s.energy_j).sum::<f64>());
+    }
+
+    /// A probe that routes like JSQ-by-length and records every view it
+    /// was shown — the regression instrument for the stale-queue bug.
+    struct LenJsqProbe {
+        seen_lens: Vec<Vec<usize>>,
+        seen_depths: Vec<Vec<f64>>,
+    }
+
+    impl Policy for LenJsqProbe {
+        fn name(&self) -> String {
+            "len-jsq-probe".into()
+        }
+
+        fn assign(&mut self, _q: &Query, view: &ClusterView) -> SystemId {
+            self.seen_lens.push(view.queue_len.to_vec());
+            self.seen_depths.push(view.queue_depth_s.to_vec());
+            let best = view
+                .queue_len
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            SystemId(best)
+        }
+    }
+
+    /// Regression for the seed bug where `queue_len` was only ever
+    /// incremented: a queue-length JSQ on a *drained* cluster must route
+    /// exactly like a fresh cluster, because the view's lengths (and
+    /// depths) must have fallen back to zero.
+    #[test]
+    fn drained_cluster_routes_like_fresh_cluster() {
+        let systems = system_catalog();
+        let em = energy();
+        // a burst at t=0 followed by one arrival long after everything
+        // finished (Alpaca service times are far below 1e6 s)
+        let mut queries: Vec<Query> = (0..50u64).map(|id| Query::new(id, 64, 64)).collect();
+        let mut late = Query::new(50, 64, 64);
+        late.arrival_s = 1.0e6;
+        queries.push(late);
+
+        let mut probe = LenJsqProbe { seen_lens: Vec::new(), seen_depths: Vec::new() };
+        let drained =
+            simulate(&queries, &systems, &mut probe, &em, &SimOptions::default());
+        // mid-burst the probe must have seen non-zero backlog...
+        assert!(
+            probe.seen_lens.iter().any(|lens| lens.iter().any(|&l| l > 0)),
+            "burst never surfaced in queue_len — view is not live"
+        );
+        // ...but the drained arrival sees an all-zero view, exactly like
+        // the first query of a fresh simulation
+        let last_lens = probe.seen_lens.last().unwrap();
+        let last_depths = probe.seen_depths.last().unwrap();
+        assert!(last_lens.iter().all(|&l| l == 0), "stale queue_len: {last_lens:?}");
+        assert!(last_depths.iter().all(|&d| d == 0.0), "stale depth: {last_depths:?}");
+        assert_eq!(probe.seen_lens.first().unwrap(), last_lens);
+
+        // and the routing decision matches a fresh cluster's first query
+        let mut fresh_probe = LenJsqProbe { seen_lens: Vec::new(), seen_depths: Vec::new() };
+        let fresh = simulate(
+            &[Query::new(0, 64, 64)],
+            &systems,
+            &mut fresh_probe,
+            &em,
+            &SimOptions::default(),
+        );
+        assert_eq!(
+            drained.outcomes.last().unwrap().system,
+            fresh.outcomes[0].system,
+            "drained cluster must route like a fresh cluster"
+        );
+    }
+
+    /// The built-in (depth-based) JSQ agrees between drained and fresh
+    /// clusters end-to-end through `build_policy`.
+    #[test]
+    fn jsq_on_drained_cluster_matches_fresh() {
+        let systems = system_catalog();
+        let em = energy();
+        let mut queries: Vec<Query> = (0..30u64).map(|id| Query::new(id, 128, 32)).collect();
+        let mut late = Query::new(30, 128, 32);
+        late.arrival_s = 1.0e6;
+        queries.push(late);
+        let mut p = build_policy(&PolicyConfig::JoinShortestQueue, em.clone(), &systems);
+        let drained = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+        let mut p2 = build_policy(&PolicyConfig::JoinShortestQueue, em.clone(), &systems);
+        let fresh = simulate(
+            &[Query::new(0, 128, 32)],
+            &systems,
+            p2.as_mut(),
+            &em,
+            &SimOptions::default(),
+        );
+        assert_eq!(drained.outcomes.last().unwrap().system, fresh.outcomes[0].system);
+    }
+
+    /// `simulate` and `simulate_with_table` over a shared table are the
+    /// same computation.
+    #[test]
+    fn table_reuse_is_equivalent() {
+        let systems = system_catalog();
+        let em = energy();
+        let queries = AlpacaModel::default().trace(8, 2_000);
+        let table = CostTable::build(&queries, &systems, &em);
+        let cfg = PolicyConfig::Cost { lambda: 1.0 };
+        let mut p1 = build_policy(&cfg, em.clone(), &systems);
+        let direct = simulate(&queries, &systems, p1.as_mut(), &em, &SimOptions::default());
+        let mut p2 = build_policy(&cfg, em.clone(), &systems);
+        let shared =
+            simulate_with_table(&queries, &systems, p2.as_mut(), &table, &SimOptions::default());
+        assert_eq!(direct.total_energy_j, shared.total_energy_j);
+        assert_eq!(direct.total_service_s, shared.total_service_s);
+        assert_eq!(direct.makespan_s, shared.makespan_s);
+        assert_eq!(direct.routing_counts(), shared.routing_counts());
     }
 }

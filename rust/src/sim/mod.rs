@@ -8,5 +8,5 @@ pub mod engine;
 pub mod report;
 
 pub use cluster::{ClusterState, NodeState};
-pub use engine::{simulate, SimOptions};
+pub use engine::{simulate, simulate_with_table, SimOptions};
 pub use report::SimReport;

@@ -47,6 +47,10 @@ pub struct SimReport {
     /// idle-floor energy burned by all nodes over the makespan when the
     /// experiment includes always-on attribution
     pub idle_energy_j: f64,
+    /// queries the engine re-routed to the cheapest feasible system
+    /// because the policy picked an infeasible one (always 0 in strict
+    /// mode, which panics instead)
+    pub rerouted: u64,
 }
 
 impl SimReport {
@@ -123,6 +127,7 @@ mod tests {
             total_service_s: 1.0,
             total_energy_j: 5.0,
             idle_energy_j: 0.0,
+            rerouted: 0,
         };
         assert!(r.energy_conserved());
         r.systems[0].energy_j = 6.0;

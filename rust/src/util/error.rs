@@ -1,0 +1,135 @@
+//! Minimal `anyhow`-style error handling over `std` only (the offline
+//! crate set has no `anyhow` — see DESIGN.md). Provides an opaque
+//! message-carrying [`Error`], a defaulted [`Result`] alias, the
+//! [`Context`] extension trait, and the crate-level `anyhow!` / `bail!`
+//! macros with the same call shapes the `anyhow` crate accepts.
+
+use std::fmt;
+
+/// An opaque, context-carrying error. Deliberately does *not* implement
+/// `std::error::Error`, so the blanket `From<E: Error>` conversion below
+/// stays coherent (the same trick `anyhow` uses).
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulted to our [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach human-readable context to failures (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or a
+/// format string + args (the three shapes `anyhow::anyhow!` accepts).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke at {}", 42);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = crate::anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let who = "disk";
+        let e = crate::anyhow!("lost {who}");
+        assert_eq!(e.to_string(), "lost disk");
+        let e = crate::anyhow!("lost {}", who);
+        assert_eq!(e.to_string(), "lost disk");
+        let e = crate::anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+        assert_eq!(fails().unwrap_err().to_string(), "broke at 42");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        assert_eq!(r.context("outer").unwrap_err().to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".into());
+        assert_eq!(
+            r.with_context(|| format!("outer {}", 1)).unwrap_err().to_string(),
+            "outer 1: inner"
+        );
+        let o: Option<u8> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(7u8).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -4,7 +4,9 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod par;
 pub mod quick;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,112 @@
+//! Deterministic fork–join parallelism over `std::thread::scope` (the
+//! offline crate set has no rayon). Work is split into contiguous
+//! chunks, one per available core, and the outputs are re-concatenated
+//! in input order — so results are **bit-identical to the serial map**
+//! regardless of thread count. This is the substrate under
+//! [`crate::perf::cost_table::CostTable::build`] and the
+//! [`crate::experiments::runner`] sweep executor.
+
+use std::cell::Cell;
+use std::num::NonZeroUsize;
+
+thread_local! {
+    /// Set inside `par_map` worker threads so nested `par_map` calls
+    /// (e.g. `seed_replicates(…, |s| simulate(…))`, whose inner
+    /// `CostTable::build` also fans out) run serially instead of
+    /// oversubscribing with threads() × threads() workers.
+    static INSIDE_PAR_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Worker threads to fan across (≥ 1).
+pub fn threads() -> usize {
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Parallel, order-preserving map. Falls back to a serial map when only
+/// one core is available, the input is trivial, or the caller is itself
+/// a `par_map` worker (nested fan-out would oversubscribe the machine).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = threads();
+    let nested = INSIDE_PAR_WORKER.with(Cell::get);
+    if nested || n <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = items.len().div_ceil(n);
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| {
+                s.spawn(move || {
+                    INSIDE_PAR_WORKER.with(|flag| flag.set(true));
+                    c.iter().map(fref).collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(items.len());
+        for h in handles {
+            out.extend(h.join().expect("par_map worker panicked"));
+        }
+        out
+    })
+}
+
+/// Parallel, order-preserving map over indices `0..count` — handy when
+/// the work is addressed positionally rather than by slice element.
+pub fn par_map_range<R, F>(count: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let indices: Vec<usize> = (0..count).collect();
+    par_map(&indices, |&i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_map_in_order() {
+        let items: Vec<u64> = (0..10_001).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| x * 3 + 1).collect();
+        let parallel = par_map(&items, |&x| x * 3 + 1);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_small_and_empty_inputs() {
+        assert_eq!(par_map(&[] as &[u32], |&x| x), Vec::<u32>::new());
+        assert_eq!(par_map(&[5u32], |&x| x + 1), vec![6]);
+        assert_eq!(par_map(&[1u32, 2], |&x| x + 1), vec![2, 3]);
+    }
+
+    #[test]
+    fn range_variant_indexes_correctly() {
+        assert_eq!(par_map_range(5, |i| i * i), vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn captures_environment_by_reference() {
+        let base = vec![10u64, 20, 30];
+        let items: Vec<usize> = (0..3).collect();
+        let out = par_map(&items, |&i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn nested_calls_match_serial_results() {
+        let outer: Vec<u64> = (0..8).collect();
+        let out = par_map(&outer, |&o| {
+            let inner: Vec<u64> = (0..100).collect();
+            par_map(&inner, |&i| i * o).iter().sum::<u64>()
+        });
+        let want: Vec<u64> = outer.iter().map(|&o| (0..100u64).map(|i| i * o).sum()).collect();
+        assert_eq!(out, want);
+    }
+}

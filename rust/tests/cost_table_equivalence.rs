@@ -1,0 +1,176 @@
+//! CostTable equivalence: sweeps and simulations that route their model
+//! evaluations through [`hetsched::perf::cost_table::CostTable`] must
+//! reproduce the direct per-(query, grid-point) evaluation exactly. The
+//! direct paths below are verbatim re-implementations of the
+//! pre-CostTable algorithms.
+
+use hetsched::experiments::sweeps::{input_thresholds, output_thresholds, threshold_sweep};
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::hw::spec::SystemSpec;
+use hetsched::model::llm_catalog;
+use hetsched::perf::energy::{Attribution, EnergyModel};
+use hetsched::perf::model::Feasibility;
+use hetsched::perf::model::PerfModel;
+use hetsched::workload::alpaca::AlpacaModel;
+use hetsched::workload::Query;
+
+const TRACE_SIZE: usize = 20_000;
+const TOL: f64 = 1e-9;
+
+fn energy(attribution: Attribution) -> EnergyModel {
+    EnergyModel::with_attribution(PerfModel::new(llm_catalog()[1].clone()), attribution)
+}
+
+fn close(a: f64, b: f64, what: &str) {
+    assert!(
+        (a - b).abs() <= TOL * a.abs().max(b.abs()).max(1.0),
+        "{what}: table-backed {a} vs direct {b}"
+    );
+}
+
+/// The seed's threshold_sweep inner loop: re-evaluate E/R per
+/// (query, threshold) pair, with the small→big infeasibility fallback.
+fn direct_threshold_totals(
+    queries: &[Query],
+    energy: &EnergyModel,
+    small: &SystemSpec,
+    big: &SystemSpec,
+    threshold: u32,
+    input_axis: bool,
+) -> (f64, f64) {
+    let cost_on = |spec: &SystemSpec, q: &Query| -> (f64, f64) {
+        let (m, n) = (q.input_tokens, q.output_tokens);
+        if energy.perf.feasibility(spec, m, n) != Feasibility::Ok {
+            return (energy.energy(big, m, n), energy.runtime(big, m, n));
+        }
+        (energy.energy(spec, m, n), energy.runtime(spec, m, n))
+    };
+    let mut e_total = 0.0;
+    let mut r_total = 0.0;
+    for q in queries {
+        let key = if input_axis { q.input_tokens } else { q.output_tokens };
+        let spec = if key <= threshold { small } else { big };
+        let (e, r) = cost_on(spec, q);
+        e_total += e;
+        r_total += r;
+    }
+    (e_total, r_total)
+}
+
+#[test]
+fn threshold_sweep_matches_direct_evaluation_on_both_axes_and_attributions() {
+    let trace = AlpacaModel::default().trace(2024, TRACE_SIZE);
+    let systems = system_catalog();
+    let small = &systems[SystemId::M1_PRO.0];
+    let big = &systems[SystemId::SWING_A100.0];
+
+    for attribution in [Attribution::Total, Attribution::Net] {
+        let em = energy(attribution);
+        for (input_axis, grid) in [(true, input_thresholds()), (false, output_thresholds())] {
+            let queries: Vec<Query> = trace
+                .iter()
+                .map(|q| {
+                    if input_axis {
+                        Query::new(q.id, q.input_tokens, 32)
+                    } else {
+                        Query::new(q.id, 32, q.output_tokens)
+                    }
+                })
+                .collect();
+            let curve = threshold_sweep(&queries, &em, small, big, &grid, input_axis);
+            for (i, &t) in grid.iter().enumerate() {
+                let (e, r) =
+                    direct_threshold_totals(&queries, &em, small, big, t, input_axis);
+                close(curve.hybrid_energy_j[i], e, "hybrid energy");
+                close(curve.hybrid_runtime_s[i], r, "hybrid runtime");
+            }
+            // dashed baselines: T beyond every count ≡ all-small (with
+            // fallback); T = 0 ≡ all-big
+            let (small_e, small_r) =
+                direct_threshold_totals(&queries, &em, small, big, u32::MAX, input_axis);
+            close(curve.all_small_energy_j, small_e, "all-small energy");
+            close(curve.all_small_runtime_s, small_r, "all-small runtime");
+            let (big_e, big_r) =
+                direct_threshold_totals(&queries, &em, small, big, 0, input_axis);
+            close(curve.all_big_energy_j, big_e, "all-big energy");
+            close(curve.all_big_runtime_s, big_r, "all-big runtime");
+        }
+    }
+}
+
+/// The seed's simulate inner loop: per-query feasibility check against
+/// the policy's pick, cheapest-feasible fallback, then E/R of the final
+/// placement — accumulated directly from the energy model.
+#[test]
+fn simulate_matches_direct_model_accumulation() {
+    use hetsched::config::schema::PolicyConfig;
+    use hetsched::sched::policy::build_policy;
+    use hetsched::sim::engine::{simulate, SimOptions};
+
+    let queries = AlpacaModel::default().trace(2024, TRACE_SIZE);
+    let systems = system_catalog();
+    for attribution in [Attribution::Total, Attribution::Net] {
+        let em = energy(attribution);
+        for cfg in [
+            PolicyConfig::Threshold {
+                t_in: 32,
+                t_out: 32,
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            PolicyConfig::AllOn("Swing-A100".into()),
+            PolicyConfig::Cost { lambda: 1.0 },
+        ] {
+            let mut p = build_policy(&cfg, em.clone(), &systems);
+            let rep = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+
+            // direct accumulation over the reported placements
+            let mut direct_energy = 0.0;
+            let mut direct_service = 0.0;
+            for (q, o) in queries.iter().zip(&rep.outcomes) {
+                let spec = &systems[o.system];
+                assert_eq!(
+                    em.perf.feasibility(spec, q.input_tokens, q.output_tokens),
+                    Feasibility::Ok,
+                    "sim placed a query somewhere infeasible"
+                );
+                direct_energy += em.energy(spec, q.input_tokens, q.output_tokens);
+                direct_service += em.runtime(spec, q.input_tokens, q.output_tokens);
+            }
+            close(rep.total_energy_j, direct_energy, &format!("{} energy", rep.policy));
+            close(rep.total_service_s, direct_service, &format!("{} service", rep.policy));
+        }
+    }
+}
+
+/// Deeper placement equivalence: the engine's fallback must land on the
+/// same system the direct cheapest-feasible scan picks.
+#[test]
+fn fallback_placement_matches_direct_argmin() {
+    use hetsched::config::schema::PolicyConfig;
+    use hetsched::sched::policy::build_policy;
+    use hetsched::sim::engine::{simulate, SimOptions};
+
+    // Falcon cannot run on the M1 at all → every query re-routes
+    let em = EnergyModel::new(PerfModel::new(llm_catalog()[0].clone()));
+    let systems = system_catalog();
+    let queries = AlpacaModel::default().trace(5, 5_000);
+    let mut p = build_policy(&PolicyConfig::AllOn("M1-Pro".into()), em.clone(), &systems);
+    let rep = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
+    assert_eq!(rep.rerouted, queries.len() as u64);
+    for (q, o) in queries.iter().zip(&rep.outcomes) {
+        let (m, n) = (q.input_tokens, q.output_tokens);
+        let mut best = None;
+        let mut best_e = f64::INFINITY;
+        for (i, spec) in systems.iter().enumerate() {
+            if em.perf.feasibility(spec, m, n) == Feasibility::Ok {
+                let e = em.energy(spec, m, n);
+                if e < best_e {
+                    best_e = e;
+                    best = Some(i);
+                }
+            }
+        }
+        assert_eq!(Some(o.system), best, "fallback diverged for (m={m}, n={n})");
+    }
+}

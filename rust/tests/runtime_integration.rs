@@ -1,6 +1,10 @@
 //! Integration: artifacts → PJRT → generation, and the full serving
-//! topology. Requires `make artifacts` (the Makefile test target
-//! guarantees ordering); tests self-skip when artifacts are missing.
+//! topology. Requires the `pjrt` feature plus `make artifacts` (the
+//! Makefile test target guarantees ordering); tests self-skip when
+//! artifacts are missing. The PJRT-free serving topology is covered by
+//! `serving_sim.rs`.
+
+#![cfg(feature = "pjrt")]
 
 use hetsched::config::schema::{ExperimentConfig, PolicyConfig};
 use hetsched::coordinator::server::Server;
