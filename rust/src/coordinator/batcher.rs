@@ -4,6 +4,22 @@
 //! [`SystemQueue::take_batch`], which blocks for work, then lingers up to
 //! `max_wait` to accumulate batchmates (classic dynamic batching:
 //! amortize dispatch without unbounded latency).
+//!
+//! ## Shutdown protocol
+//!
+//! `closing` is only ever *written* under the queue mutex, and
+//! [`SystemQueue::push`] re-checks it under the same mutex. That pair of
+//! rules gives the drain guarantee workers rely on: once a push has been
+//! accepted, either it happened-before [`SystemQueue::close`] — so any
+//! worker that later observes `closing` must also observe the request in
+//! the queue and batch it out — or the push observed `closing` and was
+//! rejected with [`Rejected::ShuttingDown`]. (The seed version checked
+//! `closing` only before taking the lock, so a push racing `close()`
+//! could be accepted after the workers had already drained-and-exited —
+//! a silently lost request. The interleaving tests below pin the fix.)
+//! [`SystemQueue::take_batch`] returns an empty vec only when the queue
+//! is *both* closing and empty: residual requests enqueued before
+//! shutdown are always handed out, never dropped.
 
 use super::request::Request;
 use std::collections::VecDeque;
@@ -32,10 +48,17 @@ impl SystemQueue {
 
     /// Admission-controlled enqueue.
     pub fn push(&self, req: Request) -> Result<(), (Request, Rejected)> {
+        // fast-path reject without the lock…
         if self.closing.load(Ordering::Acquire) {
             return Err((req, Rejected::ShuttingDown));
         }
         let mut q = self.inner.lock().unwrap();
+        // …then re-check under it: `close()` flips the flag while holding
+        // this mutex, so an accepted push is ordered strictly before the
+        // close and can never be stranded behind exiting workers
+        if self.closing.load(Ordering::Acquire) {
+            return Err((req, Rejected::ShuttingDown));
+        }
         if q.len() >= self.cap {
             return Err((req, Rejected::QueueFull));
         }
@@ -60,20 +83,35 @@ impl SystemQueue {
 
     /// Block until work arrives (or shutdown), then gather up to
     /// `max_batch` requests, lingering at most `max_wait` for stragglers.
-    /// Returns an empty vec only at shutdown.
+    ///
+    /// Returns an empty vec **only when the queue is closing and fully
+    /// drained**: residual requests enqueued before `close()` keep being
+    /// batched out (without lingering — closing skips the straggler
+    /// wait), so accepted work is always completed.
     pub fn take_batch(&self, max_batch: usize, max_wait: Duration) -> Vec<Request> {
         let mut q = self.inner.lock().unwrap();
-        // phase 1: wait for the first request
-        while q.is_empty() {
+        // phase 1: wait for the first request. The emptiness check comes
+        // *before* the closing check: at shutdown the residual queue is
+        // drained, never abandoned. The 50 ms timeout only bounds how
+        // long a missed wakeup could stall a waiter (close() notifies
+        // under the lock, so wakeups are not normally missed); a spurious
+        // wakeup just re-loops — it cannot produce an empty batch while
+        // requests remain queued.
+        loop {
+            if !q.is_empty() {
+                break;
+            }
             if self.closing.load(Ordering::Acquire) {
-                return Vec::new();
+                return Vec::new(); // closing AND drained
             }
             let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
             q = guard;
         }
         let mut batch = Vec::with_capacity(max_batch);
         batch.push(q.pop_front().unwrap());
-        // phase 2: linger for batchmates
+        // phase 2: linger for batchmates. Queued requests are always
+        // popped before the closing/deadline checks, so shutdown drains
+        // what is already there and only skips the wait for stragglers.
         let deadline = Instant::now() + max_wait;
         while batch.len() < max_batch {
             if let Some(r) = q.pop_front() {
@@ -90,9 +128,13 @@ impl SystemQueue {
         batch
     }
 
-    /// Begin shutdown: no new work; wake all waiters.
+    /// Begin shutdown: no new work; wake all waiters. The flag flips
+    /// under the queue mutex so it totally orders against every
+    /// [`Self::push`] — see the module docs for the drain guarantee.
     pub fn close(&self) {
+        let _guard = self.inner.lock().unwrap();
         self.closing.store(true, Ordering::Release);
+        drop(_guard);
         self.cv.notify_all();
     }
 
@@ -173,6 +215,98 @@ mod tests {
         let batch = q.take_batch(4, Duration::from_millis(200));
         let _rx = h.join().unwrap();
         assert_eq!(batch.len(), 2, "late arrival should join the batch");
+    }
+
+    /// Satellite regression: residual requests at shutdown are drained,
+    /// not dropped — take_batch keeps handing out batches after close()
+    /// and returns empty only once the queue is truly empty.
+    #[test]
+    fn pushed_then_closed_requests_all_batched_out() {
+        let q = SystemQueue::new(10);
+        let mut keep = Vec::new();
+        for i in 0..6 {
+            let (r, rx) = req(i);
+            q.push(r).map_err(|_| ()).unwrap();
+            keep.push(rx);
+        }
+        q.close();
+        let mut drained = Vec::new();
+        loop {
+            // a generous linger: closing must skip it, not wait it out
+            let b = q.take_batch(4, Duration::from_secs(60));
+            if b.is_empty() {
+                break;
+            }
+            drained.extend(b.iter().map(|r| r.id));
+        }
+        assert_eq!(drained, vec![0, 1, 2, 3, 4, 5], "every accepted request must drain in order");
+        assert!(q.is_empty());
+        assert!(q.take_batch(4, Duration::from_millis(1)).is_empty());
+    }
+
+    /// Satellite regression, loom-style: race {push} × {close} × {worker}
+    /// across many interleavings. Invariant: a push racing close() either
+    /// returns ShuttingDown or its request is drained by the worker —
+    /// never accepted-then-lost. (The seed checked `closing` only before
+    /// taking the lock, so a push could slip in after the worker had
+    /// drained-and-exited.)
+    #[test]
+    fn close_push_race_never_loses_requests() {
+        for round in 0..200u64 {
+            let q = Arc::new(SystemQueue::new(8));
+            let drained: Arc<std::sync::Mutex<Vec<u64>>> = Arc::default();
+            let worker = {
+                let q = Arc::clone(&q);
+                let drained = Arc::clone(&drained);
+                std::thread::spawn(move || loop {
+                    let b = q.take_batch(4, Duration::from_millis(1));
+                    if b.is_empty() {
+                        // empty means closing-and-drained by contract
+                        if q.is_closing() && q.is_empty() {
+                            return;
+                        }
+                        continue;
+                    }
+                    drained.lock().unwrap().extend(b.iter().map(|r| r.id));
+                })
+            };
+            let pusher = {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    // vary the interleaving across rounds
+                    if round % 2 == 0 {
+                        std::thread::yield_now();
+                    }
+                    let (r, rx) = req(round);
+                    match q.push(r) {
+                        Ok(()) => Some(rx),
+                        Err((_, Rejected::ShuttingDown)) => None,
+                        Err((_, Rejected::QueueFull)) => panic!("cap 8 queue cannot be full"),
+                    }
+                })
+            };
+            let closer = {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    if round % 3 == 0 {
+                        std::thread::yield_now();
+                    }
+                    q.close();
+                })
+            };
+            let accepted = pusher.join().unwrap();
+            closer.join().unwrap();
+            worker.join().unwrap();
+            if accepted.is_some() {
+                assert!(
+                    drained.lock().unwrap().contains(&round),
+                    "round {round}: accepted request was lost at shutdown"
+                );
+            }
+            // once close() has returned, every push is refused
+            let (late, _k) = req(u64::MAX);
+            assert!(matches!(q.push(late), Err((_, Rejected::ShuttingDown))));
+        }
     }
 
     #[test]

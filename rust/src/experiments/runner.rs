@@ -11,13 +11,16 @@
 use crate::config::schema::PolicyConfig;
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
-use crate::perf::cost_table::CostTable;
+use crate::perf::cost_table::{BatchTable, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
 use crate::sched::policy::build_policy;
-use crate::sim::engine::{simulate_with_table, SimOptions};
+use crate::sim::engine::{
+    simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
+};
 use crate::sim::report::SimReport;
 use crate::util::par::par_map;
+use crate::workload::generator::{Arrival, TraceGenerator};
 use crate::workload::Query;
 
 /// One λ point of the Eq. 1 trade-off frontier.
@@ -115,6 +118,88 @@ where
     par_map(seeds, |&s| run(s))
 }
 
+/// One grid point of a [`batching_sweep`]: a summarized batched-sim run
+/// (full [`SimReport`]s over a big grid would hold every outcome vec).
+#[derive(Clone, Debug)]
+pub struct BatchingPoint {
+    /// Poisson arrival rate λ of the trace (queries/s)
+    pub rate: f64,
+    pub max_batch: usize,
+    pub linger_s: f64,
+    pub total_energy_j: f64,
+    /// Σ dispatch-overhead energy — the component batching amortizes
+    pub dispatch_energy_j: f64,
+    /// energy saved vs one-query-per-dispatch execution of the same
+    /// routing (J, positive = batching saved)
+    pub batching_delta_j: f64,
+    pub dispatches: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub makespan_s: f64,
+    /// per-system batch-size histograms (`[sys][size-1]` = count)
+    pub size_hist: Vec<Vec<u64>>,
+}
+
+/// Sweep the dynamic-batching grid: `max_batch × linger_s` per arrival
+/// rate λ, fanned over [`crate::util::par`]. Per rate the trace, the
+/// [`CostTable`], and one shared memoized [`BatchTable`] are built once;
+/// each grid point is then pure simulation (`max_batch = 1` points
+/// reproduce the serial engine exactly, so the sweep embeds its own
+/// baseline). Points come back rate-major in grid order.
+pub fn batching_sweep(
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    policy: &PolicyConfig,
+    rates: &[f64],
+    max_batches: &[usize],
+    lingers: &[f64],
+    n_queries: usize,
+    seed: u64,
+) -> Vec<BatchingPoint> {
+    let mut out = Vec::with_capacity(rates.len() * max_batches.len() * lingers.len());
+    for &rate in rates {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n_queries);
+        let table = CostTable::build(&queries, systems, energy);
+        let batch_table = BatchTable::new(energy.clone(), systems);
+        let grid: Vec<(usize, f64)> = max_batches
+            .iter()
+            .flat_map(|&mb| lingers.iter().map(move |&lg| (mb, lg)))
+            .collect();
+        let points = par_map(&grid, |&(max_batch, linger_s)| {
+            let mut p = build_policy(policy, energy.clone(), systems);
+            let opts = SimOptions {
+                batching: Some(BatchingOptions { max_batch, linger_s }),
+                ..Default::default()
+            };
+            let rep = simulate_batched_with_tables(
+                &queries,
+                systems,
+                p.as_mut(),
+                &table,
+                &batch_table,
+                &opts,
+            );
+            BatchingPoint {
+                rate,
+                max_batch,
+                linger_s,
+                total_energy_j: rep.total_energy_j,
+                dispatch_energy_j: rep.dispatch_energy_j(),
+                batching_delta_j: rep.batching_energy_delta_j(),
+                dispatches: rep.total_dispatches(),
+                mean_batch_size: rep.mean_batch_size(),
+                mean_latency_s: rep.mean_latency_s(),
+                p99_latency_s: rep.p99_latency_s(),
+                makespan_s: rep.makespan_s,
+                size_hist: rep.batches.iter().map(|b| b.size_hist.clone()).collect(),
+            }
+        });
+        out.extend(points);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +291,66 @@ mod tests {
             assert_eq!(rep.total_service_s, serial.total_service_s, "{}", serial.policy);
             assert_eq!(rep.routing_counts(), serial.routing_counts(), "{}", serial.policy);
         }
+    }
+
+    #[test]
+    fn batching_sweep_covers_grid_and_embeds_serial_baseline() {
+        let systems = system_catalog();
+        let em = energy();
+        let pts = batching_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::AllOn("Swing-A100".into()),
+            &[20.0],
+            &[1, 4],
+            &[0.0, 0.2],
+            150,
+            11,
+        );
+        assert_eq!(pts.len(), 4);
+        // max_batch = 1 points are the serial engine: all-singleton
+        // histograms, zero batching delta
+        for p in pts.iter().filter(|p| p.max_batch == 1) {
+            assert!((p.mean_batch_size - 1.0).abs() < 1e-12);
+            assert!(p.batching_delta_j.abs() < 1e-6);
+            assert_eq!(p.dispatches, 150);
+        }
+        // and the batched points packed something
+        let batched: Vec<_> = pts.iter().filter(|p| p.max_batch == 4).collect();
+        assert!(batched.iter().any(|p| p.mean_batch_size > 1.0));
+    }
+
+    /// Acceptance criterion: on an Alpaca-distributed trace the total
+    /// dispatch-overhead energy is monotone non-increasing in
+    /// `max_batch` (more packing ⇒ fewer dispatches ⇒ less overhead).
+    #[test]
+    fn dispatch_overhead_energy_monotone_in_max_batch() {
+        let systems = system_catalog();
+        let em = energy();
+        let pts = batching_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::AllOn("Swing-A100".into()),
+            &[30.0],
+            &[1, 2, 4, 8],
+            &[0.25],
+            300,
+            2024,
+        );
+        assert_eq!(pts.len(), 4);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].dispatch_energy_j <= w[0].dispatch_energy_j + 1e-9,
+                "dispatch energy rose from {} (b={}) to {} (b={})",
+                w[0].dispatch_energy_j,
+                w[0].max_batch,
+                w[1].dispatch_energy_j,
+                w[1].max_batch
+            );
+            assert!(w[1].dispatches <= w[0].dispatches);
+        }
+        // and strictly fewer dispatches at the extremes under this load
+        assert!(pts[3].dispatches < pts[0].dispatches);
     }
 
     #[test]

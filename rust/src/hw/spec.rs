@@ -80,6 +80,14 @@ impl SystemSpec {
         self.idle_w + (self.peak_w - self.idle_w) * u
     }
 
+    /// Energy of one dispatch-overhead phase (J): host active while the
+    /// accelerator sits near idle (util 0.05, matching the overhead
+    /// phase of `perf::model::PerfModel::power_model`). This is the
+    /// per-dispatch cost that dynamic batching amortizes.
+    pub fn dispatch_energy_j(&self) -> f64 {
+        (self.power_at(0.05) + self.host_active_w) * self.overhead_s
+    }
+
     /// Throttle multiplier on service *time* for a given context length:
     /// 1.0 below the soft limit, growing polynomially beyond it. Models
     /// the M1 Pro's observed collapse past ~512 generated tokens (§5.4).
@@ -143,6 +151,16 @@ mod tests {
         assert_eq!(s.power_at(1.0), 250.0);
         assert_eq!(s.power_at(0.5), 150.0);
         assert_eq!(s.power_at(2.0), 250.0); // clamped
+    }
+
+    #[test]
+    fn dispatch_energy_is_overhead_phase_energy() {
+        let s = spec();
+        let want = (s.power_at(0.05) + s.host_active_w) * s.overhead_s;
+        assert_eq!(s.dispatch_energy_j(), want);
+        let mut free = spec();
+        free.overhead_s = 0.0;
+        assert_eq!(free.dispatch_energy_j(), 0.0);
     }
 
     #[test]

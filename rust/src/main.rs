@@ -3,12 +3,16 @@
 //! Subcommands map 1:1 to the paper's tables/figures plus serving and
 //! calibration utilities; `hetsched <cmd> --help` lists flags.
 
-use hetsched::config::schema::ExperimentConfig;
-use hetsched::experiments::{fig3_alpaca, headline_savings, input_sweep, output_sweep, table1, threshold_sweep};
-use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::config::schema::{ExperimentConfig, PolicyConfig};
+use hetsched::experiments::{
+    batching_sweep, fig3_alpaca, headline_savings, input_sweep, output_sweep, table1,
+    threshold_sweep,
+};
+use hetsched::hw::catalog::{find_system, system_catalog, SystemId};
 use hetsched::model::{find_llm, llm_catalog};
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
+use hetsched::sim::engine::{BatchingOptions, SimOptions};
 use hetsched::util::cli::Args;
 use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Align, Table};
 use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
@@ -30,6 +34,7 @@ paper experiments:
 
 system:
   simulate          run a config-driven cluster simulation
+  batching-sweep    batched-sim energy/latency grid over max_batch × linger × λ
   serve             start the live serving demo on the AOT artifacts
   calibrate         fit perf-model constants from a measured sweep
 
@@ -45,6 +50,7 @@ fn main() {
         Some("threshold-sweep") => cmd_threshold(&argv[1..]),
         Some("headline") => cmd_headline(&argv[1..]),
         Some("simulate") => cmd_simulate(&argv[1..]),
+        Some("batching-sweep") => cmd_batching_sweep(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("calibrate") => cmd_calibrate(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -242,6 +248,8 @@ fn cmd_headline(argv: &[String]) -> Result<(), String> {
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let args = Args::new("simulate")
         .opt("config", "", "TOML config path (empty = paper defaults)")
+        .opt("max-batch", "1", "dynamic batch size per dispatch (1 = serial)")
+        .opt("linger", "0.05", "seconds a partial batch lingers for stragglers")
         .flag("idle-energy", "charge idle power across the makespan")
         .parse(argv)?;
     let cfg = match args.get("config") {
@@ -256,9 +264,15 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             .generate(cfg.workload.queries),
     };
     let mut policy = hetsched::sched::policy::build_policy(&cfg.policy, energy.clone(), &cfg.cluster.systems);
-    let opts = hetsched::sim::engine::SimOptions {
+    let max_batch = args.get_usize("max-batch")?;
+    if max_batch == 0 {
+        return Err("--max-batch must be >= 1".into());
+    }
+    let linger_s = args.get_f64("linger")?;
+    let opts = SimOptions {
         include_idle_energy: args.get_bool("idle-energy"),
         strict: false,
+        batching: (max_batch > 1).then_some(BatchingOptions { max_batch, linger_s }),
     };
     let rep = hetsched::sim::engine::simulate(&queries, &cfg.cluster.systems, policy.as_mut(), &energy, &opts);
     println!("policy: {}", rep.policy);
@@ -271,11 +285,131 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         rep.rerouted
     );
     println!("latency: mean {}   p99 {}", fmt_secs(rep.mean_latency_s()), fmt_secs(rep.p99_latency_s()));
-    let mut t = Table::new(&["system", "queries", "busy", "energy"]).align(0, Align::Left);
-    for s in &rep.systems {
-        t.row(&[s.name.clone(), s.queries.to_string(), fmt_secs(s.busy_s), fmt_joules(s.energy_j)]);
+    let mut t = Table::new(&["system", "queries", "busy", "energy", "dispatches", "mean batch"])
+        .align(0, Align::Left);
+    for (s, b) in rep.systems.iter().zip(&rep.batches) {
+        t.row(&[
+            s.name.clone(),
+            s.queries.to_string(),
+            fmt_secs(s.busy_s),
+            fmt_joules(s.energy_j),
+            b.dispatches.to_string(),
+            format!("{:.2}", b.mean_size()),
+        ]);
     }
     print!("{}", t.ascii());
+    if opts.batching.is_some() {
+        println!(
+            "batching: mean size {:.2}   dispatch energy {}   saved vs serial dispatch {}",
+            rep.mean_batch_size(),
+            fmt_joules(rep.dispatch_energy_j()),
+            fmt_joules(rep.batching_energy_delta_j())
+        );
+        for (s, b) in rep.systems.iter().zip(&rep.batches) {
+            if b.dispatches > 0 {
+                println!("  {} batch sizes (1..): {:?}", s.name, b.size_hist);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A comma-separated flag list that must be non-empty.
+fn required_list<T: std::str::FromStr>(args: &Args, flag: &str) -> Result<Vec<T>, String>
+where
+    T::Err: std::fmt::Display,
+{
+    let vals = args.get_list::<T>(flag)?;
+    if vals.is_empty() {
+        return Err(format!("--{flag}: needs at least one value"));
+    }
+    Ok(vals)
+}
+
+/// Map a `--policy` shortcut to a [`PolicyConfig`]; a catalog system
+/// name selects the all-on baseline for it.
+fn parse_policy_flag(name: &str) -> Result<PolicyConfig, String> {
+    Ok(match name {
+        "cost" => PolicyConfig::Cost { lambda: 1.0 },
+        "jsq" => PolicyConfig::JoinShortestQueue,
+        "rr" | "round-robin" => PolicyConfig::RoundRobin,
+        "threshold" => PolicyConfig::Threshold {
+            t_in: 32,
+            t_out: 32,
+            small: "M1-Pro".into(),
+            big: "Swing-A100".into(),
+        },
+        other => {
+            if find_system(&system_catalog(), other).is_some() {
+                PolicyConfig::AllOn(other.to_string())
+            } else {
+                return Err(format!(
+                    "--policy must be cost | jsq | round-robin | threshold | <system name>, got '{other}'"
+                ));
+            }
+        }
+    })
+}
+
+fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("batching-sweep")
+        .opt("model", "Llama-2-7B", "LLM for the energy model")
+        .opt("policy", "cost", "cost | jsq | round-robin | threshold | <system name>")
+        .opt("rates", "5,20,50", "Poisson arrival rates λ (q/s), comma-separated")
+        .opt("max-batch", "1,2,4,8", "max batch sizes, comma-separated")
+        .opt("linger", "0,0.1,0.25", "linger windows (s), comma-separated")
+        .opt("queries", "2000", "trace length per rate")
+        .opt("seed", "2024", "trace seed")
+        .flag("csv", "emit CSV")
+        .parse(argv)?;
+    let llm = find_llm(args.get("model")).ok_or("unknown model")?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let systems = system_catalog();
+    let policy = parse_policy_flag(args.get("policy"))?;
+    let rates = required_list::<f64>(&args, "rates")?;
+    let max_batches = required_list::<usize>(&args, "max-batch")?;
+    if max_batches.iter().any(|&b| b == 0) {
+        return Err("--max-batch values must be >= 1".into());
+    }
+    let lingers = required_list::<f64>(&args, "linger")?;
+    let n_queries = args.get_usize("queries")?;
+    let seed = args.get_u64("seed")?;
+    let pts = batching_sweep(
+        &systems, &energy, &policy, &rates, &max_batches, &lingers, n_queries, seed,
+    );
+    println!(
+        "dynamic-batching sweep: policy {}, {} queries per rate, seed {}",
+        policy.name(),
+        n_queries,
+        seed
+    );
+    let mut t = Table::new(&[
+        "rate",
+        "max_batch",
+        "linger",
+        "energy",
+        "saved",
+        "dispatch J",
+        "batches",
+        "mean size",
+        "mean lat",
+        "p99 lat",
+    ]);
+    for p in &pts {
+        t.row(&[
+            format!("{:.1}", p.rate),
+            p.max_batch.to_string(),
+            format!("{:.2}", p.linger_s),
+            fmt_joules(p.total_energy_j),
+            fmt_joules(p.batching_delta_j),
+            fmt_joules(p.dispatch_energy_j),
+            p.dispatches.to_string(),
+            format!("{:.2}", p.mean_batch_size),
+            fmt_secs(p.mean_latency_s),
+            fmt_secs(p.p99_latency_s),
+        ]);
+    }
+    print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
     Ok(())
 }
 

@@ -22,10 +22,12 @@
 //! by `rust/tests/cost_table_equivalence.rs`.
 
 use super::energy::{Attribution, EnergyModel};
-use super::model::Feasibility;
+use super::model::{BatchCost, Feasibility};
 use crate::hw::spec::SystemSpec;
 use crate::util::par::par_map;
 use crate::workload::Query;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Cost of one query on one system. Infeasible cells carry `NaN` costs
 /// and a non-`Ok` feasibility; consumers must check feasibility before
@@ -143,6 +145,82 @@ impl CostTable {
     }
 }
 
+/// Composition key of a batch on a system: the member `(m, n)` pairs in
+/// dispatch order.
+type BatchKey = (usize, Vec<(u32, u32)>);
+
+/// Memoized batch-cost table — the batched sibling of [`CostTable`].
+///
+/// Batch compositions are data-dependent (they emerge from arrivals and
+/// queue state), so they cannot be enumerated up front the way per-query
+/// cells can. Instead the table buckets by composition: the model runs
+/// **once per (composition, system)** and every later hit — the same
+/// batch shape recurring within a trace, or across the grid points of a
+/// [`crate::experiments::runner::batching_sweep`] sharing one table — is
+/// a lookup. Thread-safe: sweep grid points fan over
+/// [`crate::util::par`] against one shared instance.
+pub struct BatchTable {
+    energy: EnergyModel,
+    systems: Vec<SystemSpec>,
+    cache: Mutex<HashMap<BatchKey, Arc<BatchCost>>>,
+}
+
+impl BatchTable {
+    pub fn new(energy: EnergyModel, systems: &[SystemSpec]) -> Self {
+        Self { energy, systems: systems.to_vec(), cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Which attribution the [`Self::energy_j`] accessor reports.
+    pub fn attribution(&self) -> Attribution {
+        self.energy.attribution
+    }
+
+    pub fn n_systems(&self) -> usize {
+        self.systems.len()
+    }
+
+    /// Cost of dispatching `members` as one batch on `system`, memoized
+    /// per composition. Deterministic: a hit returns exactly what the
+    /// miss computed.
+    pub fn cost(&self, system: usize, members: &[(u32, u32)]) -> Arc<BatchCost> {
+        let key: BatchKey = (system, members.to_vec());
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return hit.clone();
+        }
+        // evaluate outside the lock so concurrent sweeps don't serialize
+        // on the model; a racing duplicate computes the same value and
+        // the first insert wins
+        let cost = Arc::new(self.energy.perf.batch_cost(&self.systems[system], members));
+        self.cache.lock().unwrap().entry(key).or_insert(cost).clone()
+    }
+
+    /// The batch's energy under this table's attribution.
+    pub fn energy_j(&self, cost: &BatchCost) -> f64 {
+        match self.energy.attribution {
+            Attribution::Total => cost.energy_j,
+            Attribution::Net => cost.net_energy_j,
+        }
+    }
+
+    /// Longest feasible prefix of `members` on `system` (joint KV
+    /// footprint check): the simulator trims oversized batches to this
+    /// length and leaves the tail queued. At least 1 when the first
+    /// member is individually feasible.
+    pub fn feasible_prefix(&self, system: usize, members: &[(u32, u32)]) -> usize {
+        let spec = &self.systems[system];
+        let mut k = members.len();
+        while k > 1 && self.energy.perf.batch_feasibility(spec, &members[..k]) != Feasibility::Ok {
+            k -= 1;
+        }
+        k
+    }
+
+    /// Distinct (composition, system) buckets evaluated so far.
+    pub fn evaluations(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +280,41 @@ mod tests {
             }
             assert_eq!(t.cheapest_feasible(qi), best, "query {qi}");
         }
+    }
+
+    #[test]
+    fn batch_table_memoizes_per_composition() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let t = BatchTable::new(energy.clone(), &systems);
+        let members = [(32u32, 64u32), (16, 32)];
+        let a = t.cost(1, &members);
+        assert_eq!(t.evaluations(), 1);
+        let b = t.cost(1, &members);
+        assert_eq!(t.evaluations(), 1, "repeat composition must be a cache hit");
+        assert!(Arc::ptr_eq(&a, &b));
+        // same composition on another system is a distinct bucket
+        let _ = t.cost(2, &members);
+        assert_eq!(t.evaluations(), 2);
+        // and the cached cell matches direct evaluation exactly
+        let direct = energy.perf.batch_cost(&systems[1], &members);
+        assert_eq!(a.runtime_s, direct.runtime_s);
+        assert_eq!(a.energy_j, direct.energy_j);
+        assert_eq!(a.member_finish_s, direct.member_finish_s);
+    }
+
+    #[test]
+    fn feasible_prefix_trims_joint_oom() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let t = BatchTable::new(energy, &systems);
+        // V100 (index 2): (32, 1024) fits alone but not four at once
+        let members = [(32u32, 1024u32); 4];
+        let k = t.feasible_prefix(2, &members);
+        assert!(k >= 1 && k < 4, "prefix {k}");
+        assert_eq!(t.cost(2, &members[..k]).feasibility, Feasibility::Ok);
+        // a comfortably small batch is untrimmed
+        assert_eq!(t.feasible_prefix(1, &[(8, 8), (8, 8)]), 2);
     }
 
     #[test]

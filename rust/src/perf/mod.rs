@@ -12,6 +12,6 @@ pub mod energy;
 pub mod model;
 pub mod roofline;
 
-pub use cost_table::{CostCell, CostTable};
+pub use cost_table::{BatchTable, CostCell, CostTable};
 pub use energy::EnergyModel;
-pub use model::{PerfModel, QueryCost, Feasibility};
+pub use model::{BatchCost, PerfModel, QueryCost, Feasibility};

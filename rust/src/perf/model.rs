@@ -45,6 +45,41 @@ impl QueryCost {
     }
 }
 
+/// Cost of one *batch* of queries dispatched together on one system —
+/// the batched extension of `R`/`E` (Wilkins et al., arXiv 2407.04014).
+///
+/// Execution model (static batch, the coordinator's `take_batch`
+/// semantics): one dispatch overhead for the whole batch, prefill work
+/// summed across members, then decode steps that stride at the max-`n`
+/// member's pace. Each decode step streams the weights **once** for the
+/// whole batch but reads every live member's KV cache and spends every
+/// live member's FLOPs; members retire from the live set as their `n`
+/// completes. This is where batching pays: the dispatch overhead and the
+/// per-step weight traffic amortize over the batch width.
+#[derive(Clone, Debug)]
+pub struct BatchCost {
+    /// wall time from dispatch to the last member's completion
+    pub runtime_s: f64,
+    pub energy_j: f64,
+    /// net of the idle floor (RAPL-style attribution, Eq. 7)
+    pub net_energy_j: f64,
+    /// Σ member prefill time (batch prefill is serialized compute)
+    pub prefill_s: f64,
+    /// decode time through the max-n member's last step
+    pub decode_s: f64,
+    pub overhead_s: f64,
+    pub feasibility: Feasibility,
+    /// per-member completion offset from batch start, in input order
+    /// (overhead + full batch prefill + decode through that member's n)
+    pub member_finish_s: Vec<f64>,
+}
+
+impl BatchCost {
+    pub fn is_feasible(&self) -> bool {
+        self.feasibility == Feasibility::Ok
+    }
+}
+
 /// The paper's per-(model, system) performance model.
 #[derive(Clone, Debug)]
 pub struct PerfModel {
@@ -149,6 +184,137 @@ impl PerfModel {
             decode_s,
             overhead_s: spec.overhead_s,
             feasibility,
+        }
+    }
+
+    /// Batch feasibility: every member must pass its per-query checks
+    /// (generation caps, MPS compatibility) *and* the summed footprint —
+    /// weights once plus every member's KV cache and scratch — must fit
+    /// in VRAM. A batch of OOM-compatible singles can still OOM jointly.
+    pub fn batch_feasibility(&self, spec: &SystemSpec, members: &[(u32, u32)]) -> Feasibility {
+        let mut extra_bytes = 0.0;
+        for &(m, n) in members {
+            let f = self.feasibility(spec, m, n);
+            if f != Feasibility::Ok {
+                return f;
+            }
+            extra_bytes += self.llm.footprint_bytes(m as f64, n as f64) - self.llm.weight_bytes();
+        }
+        if self.llm.weight_bytes() + extra_bytes > spec.vram_bytes {
+            return Feasibility::OutOfMemory;
+        }
+        Feasibility::Ok
+    }
+
+    /// Cost of dispatching `members` (each an `(m, n)` pair) as one
+    /// static batch on `spec` — see [`BatchCost`] for the execution
+    /// model. A single-member batch takes exactly the
+    /// [`Self::query_cost`] code path, so its numbers are bit-identical
+    /// to serial evaluation (the `max_batch = 1` equivalence the
+    /// simulator's property tests pin).
+    pub fn batch_cost(&self, spec: &SystemSpec, members: &[(u32, u32)]) -> BatchCost {
+        assert!(!members.is_empty(), "batch_cost needs at least one member");
+        if members.len() == 1 {
+            let (m, n) = members[0];
+            let c = self.query_cost(spec, m, n);
+            return BatchCost {
+                runtime_s: c.runtime_s,
+                energy_j: c.energy_j,
+                net_energy_j: c.net_energy_j,
+                prefill_s: c.prefill_s,
+                decode_s: c.decode_s,
+                overhead_s: c.overhead_s,
+                feasibility: c.feasibility,
+                member_finish_s: vec![c.runtime_s],
+            };
+        }
+        let feasibility = self.batch_feasibility(spec, members);
+        if feasibility != Feasibility::Ok {
+            return BatchCost {
+                runtime_s: f64::NAN,
+                energy_j: f64::NAN,
+                net_energy_j: f64::NAN,
+                prefill_s: f64::NAN,
+                decode_s: f64::NAN,
+                overhead_s: spec.overhead_s,
+                feasibility,
+                member_finish_s: vec![f64::NAN; members.len()],
+            };
+        }
+
+        let prefill_s: f64 = members.iter().map(|&(m, _)| self.prefill_time(spec, m)).sum();
+
+        // Decode: walk steps in retirement segments. `order` sorts member
+        // indices by ascending n; within a segment all members of the
+        // live suffix decode together.
+        let mut order: Vec<usize> = (0..members.len()).collect();
+        order.sort_by_key(|&i| members[i].1);
+        let max_n = members.iter().map(|&(_, n)| n).max().unwrap() as u64;
+        let mut decode_done = vec![0.0f64; members.len()];
+        let mut t = 0.0f64; // cumulative decode seconds
+        let mut step = 0u64; // decode steps completed so far
+        let mut retired = 0usize; // members of `order` already finished
+        while step < max_n {
+            // retire members whose n is exhausted at this step count
+            while retired < order.len() && members[order[retired]].1 as u64 <= step {
+                decode_done[order[retired]] = t;
+                retired += 1;
+            }
+            let seg_end = members[order[retired]].1 as u64; // > step
+            let live = &order[retired..];
+            // blocked integration (same 16-step blocks as decode_time)
+            let mut i = step;
+            while i < seg_end {
+                let block = 16u64.min(seg_end - i);
+                let mid = i as f64 + block as f64 / 2.0;
+                let mut bytes = self.llm.weight_bytes(); // streamed once per step
+                let mut flops = 0.0f64;
+                let mut max_ctx = 0.0f64;
+                for &j in live {
+                    let ctx = members[j].0 as f64 + mid;
+                    bytes += self.llm.kv_bytes_per_token() * self.llm.effective_ctx(ctx);
+                    flops += self.llm.decode_flops(ctx);
+                    max_ctx = max_ctx.max(ctx);
+                }
+                let per_step = (bytes / spec.mem_bw)
+                    .max(flops / spec.compute_flops)
+                    * spec.throttle_factor(max_ctx);
+                t += per_step * block as f64;
+                i += block;
+            }
+            step = seg_end;
+        }
+        while retired < order.len() {
+            decode_done[order[retired]] = t;
+            retired += 1;
+        }
+        let decode_s = t;
+
+        // Energy through the same phase-resolved power model as
+        // query_cost: one overhead phase for the whole batch.
+        let mut phases = Vec::with_capacity(3);
+        if spec.overhead_s > 0.0 {
+            phases.push(Phase { dur_s: spec.overhead_s, util: 0.05, host_active: true });
+        }
+        if prefill_s > 0.0 {
+            phases.push(Phase { dur_s: prefill_s, util: spec.util_prefill, host_active: true });
+        }
+        if decode_s > 0.0 {
+            phases.push(Phase { dur_s: decode_s, util: spec.util_decode, host_active: true });
+        }
+        let pm = PowerModel { phases };
+        BatchCost {
+            runtime_s: pm.total_time(),
+            energy_j: pm.total_energy(spec),
+            net_energy_j: pm.net_energy(spec),
+            prefill_s,
+            decode_s,
+            overhead_s: spec.overhead_s,
+            feasibility,
+            member_finish_s: decode_done
+                .iter()
+                .map(|&d| spec.overhead_s + prefill_s + d)
+                .collect(),
         }
     }
 }
@@ -294,6 +460,101 @@ mod tests {
             assert!((c.runtime_s - sum).abs() < 1e-9, "{}", spec.name);
             assert!(c.net_energy_j < c.energy_j);
             assert!(c.net_energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn singleton_batch_is_bit_identical_to_query_cost() {
+        let (pm, specs) = setup();
+        for spec in &specs {
+            for &(m, n) in &[(8u32, 8u32), (64, 32), (512, 128)] {
+                let q = pm.query_cost(spec, m, n);
+                let b = pm.batch_cost(spec, &[(m, n)]);
+                assert_eq!(b.runtime_s, q.runtime_s, "{}", spec.name);
+                assert_eq!(b.energy_j, q.energy_j, "{}", spec.name);
+                assert_eq!(b.net_energy_j, q.net_energy_j, "{}", spec.name);
+                assert_eq!(b.prefill_s, q.prefill_s);
+                assert_eq!(b.decode_s, q.decode_s);
+                assert_eq!(b.feasibility, q.feasibility);
+                assert_eq!(b.member_finish_s, vec![q.runtime_s]);
+            }
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_dispatch_and_weight_traffic() {
+        let (pm, specs) = setup();
+        let a100 = &specs[SystemId::SWING_A100.0];
+        let members = [(64u32, 64u32); 4];
+        let b = pm.batch_cost(a100, &members);
+        assert!(b.is_feasible());
+        let serial: f64 = members.iter().map(|&(m, n)| pm.query_cost(a100, m, n).runtime_s).sum();
+        let serial_e: f64 = members.iter().map(|&(m, n)| pm.query_cost(a100, m, n).energy_j).sum();
+        // one dispatch instead of four, weights streamed once per step
+        assert!(b.runtime_s < serial, "batched {} vs serial {serial}", b.runtime_s);
+        assert!(b.energy_j < serial_e, "batched {} vs serial {serial_e}", b.energy_j);
+        // but slower than any single member alone
+        assert!(b.runtime_s > pm.query_cost(a100, 64, 64).runtime_s);
+    }
+
+    #[test]
+    fn member_finishes_ordered_by_n_and_bounded_by_runtime() {
+        let (pm, specs) = setup();
+        let a100 = &specs[SystemId::SWING_A100.0];
+        let members = [(32u32, 8u32), (32, 256), (32, 64)];
+        let b = pm.batch_cost(a100, &members);
+        assert!(b.is_feasible());
+        assert_eq!(b.member_finish_s.len(), 3);
+        // shorter generations finish earlier; the longest defines runtime
+        assert!(b.member_finish_s[0] < b.member_finish_s[2]);
+        assert!(b.member_finish_s[2] < b.member_finish_s[1]);
+        assert!((b.member_finish_s[1] - b.runtime_s).abs() < 1e-12);
+        // every member waits at least for overhead + batch prefill
+        for f in &b.member_finish_s {
+            assert!(*f >= b.overhead_s + b.prefill_s - 1e-12);
+        }
+    }
+
+    #[test]
+    fn batch_feasibility_catches_joint_oom() {
+        let specs = system_catalog();
+        let v100 = &specs[SystemId::PALMETTO_V100.0];
+        let llama = PerfModel::new(llm_catalog()[1].clone());
+        // each member fits alone on the 16 GB V100...
+        assert_eq!(llama.feasibility(v100, 32, 1024), Feasibility::Ok);
+        // ...but four KV caches of that size cannot coexist
+        let members = [(32u32, 1024u32); 4];
+        assert_eq!(llama.batch_feasibility(v100, &members), Feasibility::OutOfMemory);
+        let b = llama.batch_cost(v100, &members);
+        assert_eq!(b.feasibility, Feasibility::OutOfMemory);
+        assert!(b.runtime_s.is_nan());
+        // per-member caps still dominate: an M1 batch with a >512-token
+        // member is a context-limit failure, not an OOM
+        let m1 = &specs[SystemId::M1_PRO.0];
+        assert_eq!(
+            llama.batch_feasibility(m1, &[(8, 8), (8, 513)]),
+            Feasibility::ContextLimit
+        );
+    }
+
+    #[test]
+    fn dispatch_energy_matches_overhead_phase() {
+        let (pm, specs) = setup();
+        for spec in &specs {
+            // query_cost's overhead phase carries exactly this energy:
+            // subtracting a zero-overhead clone's energy isolates it
+            let mut no_overhead = spec.clone();
+            no_overhead.overhead_s = 0.0;
+            let with = pm.query_cost(spec, 64, 64);
+            let without = pm.query_cost(&no_overhead, 64, 64);
+            let phase_j = with.energy_j - without.energy_j;
+            assert!(
+                (spec.dispatch_energy_j() - phase_j).abs() < 1e-9,
+                "{}: {} vs {}",
+                spec.name,
+                spec.dispatch_energy_j(),
+                phase_j
+            );
         }
     }
 

@@ -101,6 +101,31 @@ impl NodeState {
         self.queries += 1;
         (start, finish)
     }
+
+    /// Schedule one *batch* dispatch starting no earlier than `t`: the
+    /// node is occupied for `dur` (the whole batch runtime, amortizing
+    /// one dispatch), while each member completes at its own offset from
+    /// the batch start. Returns the batch start plus per-member finish
+    /// instants in `member_offsets` order. The finish heap tracks every
+    /// member individually so `queue_len` keeps counting in-flight
+    /// *queries*, not dispatches.
+    pub fn schedule_batch(&mut self, t: f64, dur: f64, member_offsets: &[f64]) -> (f64, Vec<f64>) {
+        let (idx, &free_at) = self
+            .node_free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("system has nodes");
+        let start = t.max(free_at);
+        self.node_free_at[idx] = start + dur;
+        let finishes: Vec<f64> = member_offsets.iter().map(|&off| start + off).collect();
+        for &f in &finishes {
+            self.inflight.push(Reverse(FinishAt(f)));
+        }
+        self.busy_s += dur;
+        self.queries += member_offsets.len() as u64;
+        (start, finishes)
+    }
 }
 
 /// The cluster: all system states, indexable by `SystemId`.
@@ -178,6 +203,40 @@ mod tests {
         assert_eq!(f1, 2.0);
         assert_eq!(s2, 0.0); // second node picks it up immediately
         assert_eq!(f2, 2.0);
+    }
+
+    #[test]
+    fn schedule_batch_occupies_node_and_tracks_members() {
+        let mut specs = system_catalog();
+        specs[0].count = 1;
+        let mut cs = ClusterState::new(&specs);
+        let n = cs.get_mut(SystemId(0));
+        // batch of 3: members finish at +1, +2, +4; node busy [0, 4)
+        let (start, finishes) = n.schedule_batch(0.0, 4.0, &[1.0, 2.0, 4.0]);
+        assert_eq!(start, 0.0);
+        assert_eq!(finishes, vec![1.0, 2.0, 4.0]);
+        assert_eq!(n.queries, 3);
+        assert_eq!(n.busy_s, 4.0);
+        // queue_len counts members, draining as each finishes
+        n.advance_to(0.0);
+        assert_eq!(n.queue_len(), 3);
+        n.advance_to(1.5);
+        assert_eq!(n.queue_len(), 2);
+        n.advance_to(4.0);
+        assert_eq!(n.queue_len(), 0);
+        // next batch waits for the node, not for member finishes
+        let (s2, f2) = n.schedule_batch(1.0, 2.0, &[2.0]);
+        assert_eq!(s2, 4.0);
+        assert_eq!(f2, vec![6.0]);
+        // a singleton batch behaves exactly like schedule()
+        let mut cs2 = ClusterState::new(&specs);
+        let a = cs2.get_mut(SystemId(0));
+        let (sa, fa) = a.schedule(3.0, 2.0);
+        let mut cs3 = ClusterState::new(&specs);
+        let b = cs3.get_mut(SystemId(0));
+        let (sb, fb) = b.schedule_batch(3.0, 2.0, &[2.0]);
+        assert_eq!((sa, fa), (sb, fb[0]));
+        assert_eq!(a.busy_s, b.busy_s);
     }
 
     #[test]

@@ -8,5 +8,7 @@ pub mod engine;
 pub mod report;
 
 pub use cluster::{ClusterState, NodeState};
-pub use engine::{simulate, simulate_with_table, SimOptions};
-pub use report::SimReport;
+pub use engine::{
+    simulate, simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
+};
+pub use report::{BatchStats, SimReport};

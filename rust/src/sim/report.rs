@@ -33,6 +33,43 @@ pub struct SystemTotals {
     pub energy_j: f64,
 }
 
+/// Per-system batch-dispatch statistics. Serial simulation is reported
+/// as one dispatch per query (every batch has size 1), so serial and
+/// batched reports are directly comparable.
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    /// batches dispatched to this system
+    pub dispatches: u64,
+    /// `size_hist[k]` = batches of size `k + 1`
+    pub size_hist: Vec<u64>,
+    /// energy burned in dispatch-overhead phases (J) — the component
+    /// batching amortizes
+    pub dispatch_energy_j: f64,
+}
+
+impl BatchStats {
+    pub fn record(&mut self, size: usize, dispatch_energy_j: f64) {
+        self.dispatches += 1;
+        if self.size_hist.len() < size {
+            self.size_hist.resize(size, 0);
+        }
+        self.size_hist[size - 1] += 1;
+        self.dispatch_energy_j += dispatch_energy_j;
+    }
+
+    /// queries served through this system's dispatches
+    pub fn queries(&self) -> u64 {
+        self.size_hist.iter().enumerate().map(|(i, &c)| (i as u64 + 1) * c).sum()
+    }
+
+    pub fn mean_size(&self) -> f64 {
+        if self.dispatches == 0 {
+            return 0.0;
+        }
+        self.queries() as f64 / self.dispatches as f64
+    }
+}
+
 /// Full simulation report.
 #[derive(Clone, Debug)]
 pub struct SimReport {
@@ -51,6 +88,13 @@ pub struct SimReport {
     /// because the policy picked an infeasible one (always 0 in strict
     /// mode, which panics instead)
     pub rerouted: u64,
+    /// per-system dispatch/batch-size statistics, in system order
+    pub batches: Vec<BatchStats>,
+    /// what the realized routing would have cost executed one query per
+    /// dispatch (Σ per-query `E` over the same assignment, idle
+    /// excluded). Equals `total_energy_j − idle_energy_j` in serial
+    /// mode; the gap to it is the energy batching saved.
+    pub serial_energy_j: f64,
 }
 
 impl SimReport {
@@ -87,6 +131,32 @@ impl SimReport {
     /// queries routed to each system, in system order
     pub fn routing_counts(&self) -> Vec<u64> {
         self.systems.iter().map(|s| s.queries).collect()
+    }
+
+    /// total dispatch-overhead energy across systems (J)
+    pub fn dispatch_energy_j(&self) -> f64 {
+        self.batches.iter().map(|b| b.dispatch_energy_j).sum()
+    }
+
+    /// total batches dispatched across systems
+    pub fn total_dispatches(&self) -> u64 {
+        self.batches.iter().map(|b| b.dispatches).sum()
+    }
+
+    /// mean batch size across all dispatches (1.0 in serial mode)
+    pub fn mean_batch_size(&self) -> f64 {
+        let d = self.total_dispatches();
+        if d == 0 {
+            return 0.0;
+        }
+        self.batches.iter().map(BatchStats::queries).sum::<u64>() as f64 / d as f64
+    }
+
+    /// energy saved by batching vs running the same assignment one query
+    /// per dispatch (J, positive = batching saved energy; 0 in serial
+    /// mode by construction)
+    pub fn batching_energy_delta_j(&self) -> f64 {
+        self.serial_energy_j - (self.total_energy_j - self.idle_energy_j)
     }
 }
 
@@ -128,9 +198,24 @@ mod tests {
             total_energy_j: 5.0,
             idle_energy_j: 0.0,
             rerouted: 0,
+            batches: vec![BatchStats::default()],
+            serial_energy_j: 5.0,
         };
         assert!(r.energy_conserved());
         r.systems[0].energy_j = 6.0;
         assert!(!r.energy_conserved());
+    }
+
+    #[test]
+    fn batch_stats_histogram_and_means() {
+        let mut b = BatchStats::default();
+        b.record(1, 2.0);
+        b.record(4, 2.0);
+        b.record(4, 2.0);
+        assert_eq!(b.dispatches, 3);
+        assert_eq!(b.size_hist, vec![1, 0, 0, 2]);
+        assert_eq!(b.queries(), 9);
+        assert!((b.mean_size() - 3.0).abs() < 1e-12);
+        assert!((b.dispatch_energy_j - 6.0).abs() < 1e-12);
     }
 }

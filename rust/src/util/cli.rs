@@ -169,13 +169,23 @@ impl Args {
             .map_err(|e| format!("--{name}: expected number: {e}"))
     }
 
-    /// Comma-separated u32 list ("8,16,32").
-    pub fn get_u32_list(&self, name: &str) -> Result<Vec<u32>, String> {
+    /// Comma-separated typed list ("8,16,32" / "0.1,0.5"). Empty
+    /// entries (stray/trailing commas) are skipped.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
         self.get(name)
             .split(',')
+            .map(str::trim)
             .filter(|s| !s.is_empty())
-            .map(|s| s.trim().parse().map_err(|e| format!("--{name}: bad entry '{s}': {e}")))
+            .map(|s| s.parse().map_err(|e| format!("--{name}: bad entry '{s}': {e}")))
             .collect()
+    }
+
+    /// Comma-separated u32 list ("8,16,32").
+    pub fn get_u32_list(&self, name: &str) -> Result<Vec<u32>, String> {
+        self.get_list(name)
     }
 
     pub fn positional(&self) -> &[String] {

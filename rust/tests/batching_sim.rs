@@ -1,0 +1,172 @@
+//! End-to-end acceptance tests for batched simulation (ISSUE 2):
+//! `max_batch = 1` reproduces the serial engine bit-identically on an
+//! Alpaca trace, the batching sweep's dispatch-overhead energy is
+//! monotone non-increasing in `max_batch`, and the batch-size histogram
+//! is populated in the report.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::experiments::batching_sweep;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::llm_catalog;
+use hetsched::perf::cost_table::{BatchTable, CostTable};
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::policy::build_policy;
+use hetsched::sim::engine::{
+    simulate, simulate_batched_with_tables, BatchingOptions, SimOptions,
+};
+use hetsched::workload::generator::{Arrival, TraceGenerator};
+use hetsched::workload::Query;
+
+fn energy_model() -> EnergyModel {
+    EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+}
+
+/// Alpaca-distributed token sizes over Poisson arrivals.
+fn alpaca_trace(rate: f64, seed: u64, n: usize) -> Vec<Query> {
+    TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n)
+}
+
+#[test]
+fn max_batch_one_reproduces_serial_engine_on_alpaca_trace() {
+    let systems = system_catalog();
+    let em = energy_model();
+    let queries = alpaca_trace(15.0, 2024, 800);
+    let cfg = PolicyConfig::Threshold {
+        t_in: 32,
+        t_out: 32,
+        small: "M1-Pro".into(),
+        big: "Swing-A100".into(),
+    };
+    let mut p1 = build_policy(&cfg, em.clone(), &systems);
+    let serial = simulate(&queries, &systems, p1.as_mut(), &em, &SimOptions::default());
+    let mut p2 = build_policy(&cfg, em.clone(), &systems);
+    let batched = simulate(
+        &queries,
+        &systems,
+        p2.as_mut(),
+        &em,
+        &SimOptions {
+            batching: Some(BatchingOptions { max_batch: 1, linger_s: 0.2 }),
+            ..Default::default()
+        },
+    );
+    assert_eq!(serial.outcomes.len(), batched.outcomes.len());
+    for (a, b) in serial.outcomes.iter().zip(&batched.outcomes) {
+        assert_eq!(a.query_id, b.query_id);
+        assert_eq!(a.system, b.system);
+        assert_eq!(a.start_s, b.start_s, "query {}", a.query_id);
+        assert_eq!(a.finish_s, b.finish_s, "query {}", a.query_id);
+        assert_eq!(a.service_s, b.service_s, "query {}", a.query_id);
+        assert_eq!(a.energy_j, b.energy_j, "query {}", a.query_id);
+    }
+    assert_eq!(serial.total_energy_j, batched.total_energy_j);
+    assert_eq!(serial.total_service_s, batched.total_service_s);
+    assert_eq!(serial.makespan_s, batched.makespan_s);
+    assert_eq!(serial.routing_counts(), batched.routing_counts());
+}
+
+#[test]
+fn sweep_dispatch_overhead_energy_monotone_in_max_batch() {
+    let systems = system_catalog();
+    let em = energy_model();
+    let max_batches = [1usize, 2, 4, 8, 16];
+    let pts = batching_sweep(
+        &systems,
+        &em,
+        &PolicyConfig::AllOn("Swing-A100".into()),
+        &[25.0],
+        &max_batches,
+        &[0.25],
+        500,
+        2024,
+    );
+    assert_eq!(pts.len(), max_batches.len());
+    for w in pts.windows(2) {
+        assert!(
+            w[1].dispatch_energy_j <= w[0].dispatch_energy_j + 1e-9,
+            "dispatch-overhead energy must not rise with max_batch: {} J at b={} vs {} J at b={}",
+            w[0].dispatch_energy_j,
+            w[0].max_batch,
+            w[1].dispatch_energy_j,
+            w[1].max_batch
+        );
+    }
+    // under this load the amortization is strict end-to-end
+    assert!(pts.last().unwrap().dispatch_energy_j < pts[0].dispatch_energy_j);
+    assert!(pts.last().unwrap().total_energy_j < pts[0].total_energy_j);
+    // the serial point is the embedded baseline
+    assert_eq!(pts[0].max_batch, 1);
+    assert!((pts[0].mean_batch_size - 1.0).abs() < 1e-12);
+    assert!(pts[0].batching_delta_j.abs() < 1e-6);
+}
+
+#[test]
+fn batched_report_carries_per_system_histograms() {
+    let systems = system_catalog();
+    let em = energy_model();
+    let queries = alpaca_trace(30.0, 7, 400);
+    let cfg = PolicyConfig::Threshold {
+        t_in: 32,
+        t_out: 32,
+        small: "M1-Pro".into(),
+        big: "Swing-A100".into(),
+    };
+    let mut p = build_policy(&cfg, em.clone(), &systems);
+    let rep = simulate(
+        &queries,
+        &systems,
+        p.as_mut(),
+        &em,
+        &SimOptions {
+            batching: Some(BatchingOptions { max_batch: 8, linger_s: 0.25 }),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.batches.len(), systems.len());
+    // histogram totals account for every routed query on every system
+    for (tot, b) in rep.systems.iter().zip(&rep.batches) {
+        assert_eq!(tot.queries, b.queries(), "{}: histogram loses queries", tot.name);
+    }
+    // somewhere the batcher actually packed a batch
+    assert!(rep.mean_batch_size() > 1.0, "mean batch {}", rep.mean_batch_size());
+    assert!(rep.batches.iter().any(|b| b.size_hist.len() > 1));
+    // and conservation still holds with shared batch energy split out
+    assert!(rep.energy_conserved());
+}
+
+#[test]
+fn shared_tables_across_grid_points_are_deterministic() {
+    let systems = system_catalog();
+    let em = energy_model();
+    let queries = alpaca_trace(20.0, 3, 300);
+    let table = CostTable::build(&queries, &systems, &em);
+    let shared = BatchTable::new(em.clone(), &systems);
+    let cfg = PolicyConfig::Cost { lambda: 1.0 };
+    let opts = SimOptions {
+        batching: Some(BatchingOptions { max_batch: 4, linger_s: 0.1 }),
+        ..Default::default()
+    };
+    // first run populates the memo; the replay must hit it and agree
+    let mut p1 = build_policy(&cfg, em.clone(), &systems);
+    let first = simulate_batched_with_tables(&queries, &systems, p1.as_mut(), &table, &shared, &opts);
+    let evals_after_first = shared.evaluations();
+    assert!(evals_after_first > 0);
+    let mut p2 = build_policy(&cfg, em.clone(), &systems);
+    let second =
+        simulate_batched_with_tables(&queries, &systems, p2.as_mut(), &table, &shared, &opts);
+    assert_eq!(
+        shared.evaluations(),
+        evals_after_first,
+        "replaying the same grid point must be pure cache hits"
+    );
+    assert_eq!(first.total_energy_j, second.total_energy_j);
+    assert_eq!(first.makespan_s, second.makespan_s);
+    assert_eq!(first.total_dispatches(), second.total_dispatches());
+    // and a fresh, unshared table gives the same physics
+    let fresh = BatchTable::new(em.clone(), &systems);
+    let mut p3 = build_policy(&cfg, em.clone(), &systems);
+    let third = simulate_batched_with_tables(&queries, &systems, p3.as_mut(), &table, &fresh, &opts);
+    assert_eq!(first.total_energy_j, third.total_energy_j);
+    assert_eq!(first.makespan_s, third.makespan_s);
+}

@@ -11,8 +11,9 @@ use hetsched::perf::model::{Feasibility, PerfModel};
 use hetsched::sched::cost::CostPolicy;
 use hetsched::sched::policy::Policy as _;
 use hetsched::sched::policy::{build_policy, ClusterView};
-use hetsched::sim::engine::{simulate, SimOptions};
+use hetsched::sim::engine::{simulate, BatchingOptions, SimOptions};
 use hetsched::util::quick::{self, Gen};
+use hetsched::workload::generator::{Arrival, TraceGenerator};
 use hetsched::workload::Query;
 use hetsched::{prop_assert, prop_assert_close};
 
@@ -76,6 +77,79 @@ fn prop_energy_conservation_and_time_sanity() {
             prop_assert!(o.energy_j > 0.0 && o.energy_j.is_finite(), "bad energy");
         }
         prop_assert!(rep.makespan_s >= 0.0);
+        Ok(())
+    });
+}
+
+/// ISSUE 2 satellite: batched simulation with `max_batch = 1` is
+/// bit-identical to the serial online engine, across policies, arrival
+/// rates, lingers, and seeds. A singleton batch takes the exact
+/// query-cost code path and dispatches at its arrival instant, so every
+/// outcome field — routing, timing, energy — must match to the last bit.
+#[test]
+fn prop_batched_max_batch_one_is_bit_identical_to_serial() {
+    let systems = system_catalog();
+    let em = energy_model();
+    quick::check(30, |g| {
+        let n = g.usize_in(5..150);
+        let rate = g.f64_in(0.5, 60.0);
+        let trace_seed = g.rng.next_u64();
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, trace_seed).generate(n);
+        let cfg = match g.u32_in(0..6) {
+            0 => PolicyConfig::Threshold {
+                t_in: g.u32_in(0..256),
+                t_out: g.u32_in(0..256),
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            1 => PolicyConfig::Cost { lambda: g.f64_in(0.0, 1.0) },
+            2 => PolicyConfig::RoundRobin,
+            3 => PolicyConfig::Random { seed: g.rng.next_u64() },
+            4 => PolicyConfig::AllOn("Swing-A100".into()),
+            _ => PolicyConfig::JoinShortestQueue,
+        };
+        let mut p1 = build_policy(&cfg, em.clone(), &systems);
+        let serial = simulate(&queries, &systems, p1.as_mut(), &em, &SimOptions::default());
+        let mut p2 = build_policy(&cfg, em.clone(), &systems);
+        let batched = simulate(
+            &queries,
+            &systems,
+            p2.as_mut(),
+            &em,
+            &SimOptions {
+                batching: Some(BatchingOptions { max_batch: 1, linger_s: g.f64_in(0.0, 1.0) }),
+                ..Default::default()
+            },
+        );
+        prop_assert!(serial.outcomes.len() == batched.outcomes.len(), "outcome count diverged");
+        for (a, b) in serial.outcomes.iter().zip(&batched.outcomes) {
+            prop_assert!(a.query_id == b.query_id, "outcome order diverged at {}", a.query_id);
+            prop_assert!(a.system == b.system, "routing diverged on query {}", a.query_id);
+            prop_assert!(
+                a.start_s == b.start_s && a.finish_s == b.finish_s,
+                "timing diverged on query {}: ({}, {}) vs ({}, {})",
+                a.query_id,
+                a.start_s,
+                a.finish_s,
+                b.start_s,
+                b.finish_s
+            );
+            prop_assert!(
+                a.service_s == b.service_s && a.energy_j == b.energy_j,
+                "cost diverged on query {}",
+                a.query_id
+            );
+        }
+        prop_assert!(serial.total_energy_j == batched.total_energy_j, "total energy diverged");
+        prop_assert!(serial.total_service_s == batched.total_service_s, "service diverged");
+        prop_assert!(serial.makespan_s == batched.makespan_s, "makespan diverged");
+        prop_assert!(serial.routing_counts() == batched.routing_counts(), "routing counts");
+        prop_assert!(serial.rerouted == batched.rerouted, "rerouted diverged");
+        prop_assert!(serial.serial_energy_j == batched.serial_energy_j, "serial-equiv energy");
+        prop_assert!(
+            batched.total_dispatches() == queries.len() as u64,
+            "max_batch=1 must dispatch one batch per query"
+        );
         Ok(())
     });
 }

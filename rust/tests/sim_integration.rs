@@ -173,7 +173,7 @@ fn idle_energy_accounting_increases_total_monotonically() {
         &systems,
         p.as_mut(),
         &em,
-        &SimOptions { include_idle_energy: true, strict: false },
+        &SimOptions { include_idle_energy: true, ..Default::default() },
     );
     assert!(with.total_energy_j > without.total_energy_j);
     assert!(with.idle_energy_j > 0.0);
