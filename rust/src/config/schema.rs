@@ -9,7 +9,30 @@
 use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::hw::catalog::{extended_catalog, find_system};
 use crate::hw::spec::SystemSpec;
+use crate::sched::formation::FormationPolicy;
+use crate::sim::engine::BatchingOptions;
 use crate::workload::generator::Arrival;
+
+/// Strict integer parse for count/seed/cap fields: errors on fractional,
+/// non-finite, or non-numeric values instead of silently truncating them
+/// (`max_batch = 2.7` used to become 2), and on negative values instead
+/// of saturating them to 0 (`seed = -1` used to become 0).
+fn require_u64(v: &TomlValue, field: &str) -> Result<u64, String> {
+    let i = v
+        .as_integer()
+        .ok_or_else(|| format!("{field} must be an integer (no fractional part)"))?;
+    u64::try_from(i).map_err(|_| format!("{field} must be >= 0, got {i}"))
+}
+
+fn require_usize(v: &TomlValue, field: &str) -> Result<usize, String> {
+    let x = require_u64(v, field)?;
+    usize::try_from(x).map_err(|_| format!("{field} is too large for this platform, got {x}"))
+}
+
+fn require_u32(v: &TomlValue, field: &str) -> Result<u32, String> {
+    let x = require_u64(v, field)?;
+    u32::try_from(x).map_err(|_| format!("{field} must fit in 32 bits, got {x}"))
+}
 
 /// Which scheduling policy to run (see `sched`).
 #[derive(Clone, Debug, PartialEq)]
@@ -116,6 +139,8 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// generated tokens per request for the served tiny model
     pub gen_tokens: u32,
+    /// how workers pick batch members ("fifo" | "shape" | "shape:<bins>")
+    pub formation: FormationPolicy,
     pub artifacts_dir: String,
 }
 
@@ -126,6 +151,7 @@ impl Default for ServeConfig {
             max_wait_s: 0.02,
             queue_cap: 1024,
             gen_tokens: 32,
+            formation: FormationPolicy::FifoPrefix,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -138,6 +164,11 @@ pub struct ExperimentConfig {
     pub policy: PolicyConfig,
     pub workload: WorkloadConfig,
     pub serve: ServeConfig,
+    /// simulator dynamic-batching knobs (`[batching]`): `None` runs the
+    /// serial engine. Before this section existed, `hetsched simulate
+    /// --config` silently ran serial even when the user had configured
+    /// batching elsewhere — the knobs were CLI-only.
+    pub batching: Option<BatchingOptions>,
 }
 
 impl Default for ExperimentConfig {
@@ -152,6 +183,7 @@ impl Default for ExperimentConfig {
             },
             workload: WorkloadConfig::default(),
             serve: ServeConfig::default(),
+            batching: None,
         }
     }
 }
@@ -185,7 +217,7 @@ impl ExperimentConfig {
                     return Err("cluster.counts length must match cluster.systems".into());
                 }
                 for (spec, c) in cfg.cluster.systems.iter_mut().zip(counts) {
-                    spec.count = c.as_f64().ok_or("cluster.counts must be numbers")? as usize;
+                    spec.count = require_usize(c, "cluster.counts entries")?;
                 }
             }
         }
@@ -196,10 +228,10 @@ impl ExperimentConfig {
 
         if let Some(t) = doc.section("workload") {
             if let Some(v) = t.get("queries") {
-                cfg.workload.queries = v.as_f64().ok_or("workload.queries must be a number")? as usize;
+                cfg.workload.queries = require_usize(v, "workload.queries")?;
             }
             if let Some(v) = t.get("seed") {
-                cfg.workload.seed = v.as_f64().ok_or("workload.seed must be a number")? as u64;
+                cfg.workload.seed = require_u64(v, "workload.seed")?;
             }
             if let Some(v) = t.get("llm") {
                 cfg.workload.llm = v.as_str().ok_or("workload.llm must be a string")?.into();
@@ -228,20 +260,47 @@ impl ExperimentConfig {
 
         if let Some(t) = doc.section("serve") {
             if let Some(v) = t.get("max_batch") {
-                cfg.serve.max_batch = v.as_f64().ok_or("serve.max_batch must be a number")? as usize;
+                cfg.serve.max_batch = require_usize(v, "serve.max_batch")?;
             }
             if let Some(v) = t.get("max_wait_s") {
                 cfg.serve.max_wait_s = v.as_f64().ok_or("serve.max_wait_s must be a number")?;
             }
             if let Some(v) = t.get("queue_cap") {
-                cfg.serve.queue_cap = v.as_f64().ok_or("serve.queue_cap must be a number")? as usize;
+                cfg.serve.queue_cap = require_usize(v, "serve.queue_cap")?;
             }
             if let Some(v) = t.get("gen_tokens") {
-                cfg.serve.gen_tokens = v.as_f64().ok_or("serve.gen_tokens must be a number")? as u32;
+                cfg.serve.gen_tokens = require_u32(v, "serve.gen_tokens")?;
+            }
+            if let Some(v) = t.get("formation") {
+                cfg.serve.formation =
+                    FormationPolicy::parse(v.as_str().ok_or("serve.formation must be a string")?)
+                        .map_err(|e| format!("serve.formation: {e}"))?;
             }
             if let Some(v) = t.get("artifacts_dir") {
                 cfg.serve.artifacts_dir = v.as_str().ok_or("serve.artifacts_dir must be a string")?.into();
             }
+        }
+
+        // [batching]: simulator dynamic batching (ROADMAP PR-2 wiring:
+        // `hetsched simulate --config` used to ignore these knobs)
+        if let Some(t) = doc.section("batching") {
+            let max_batch = match t.get("max_batch") {
+                Some(v) => require_usize(v, "batching.max_batch")?,
+                None => 1,
+            };
+            let linger_s = match t.get("linger_s") {
+                Some(v) => v.as_f64().ok_or("batching.linger_s must be a number")?,
+                None => 0.05,
+            };
+            let formation = match t.get("formation") {
+                Some(v) => FormationPolicy::parse(
+                    v.as_str().ok_or("batching.formation must be a string")?,
+                )
+                .map_err(|e| format!("batching.formation: {e}"))?,
+                None => FormationPolicy::FifoPrefix,
+            };
+            cfg.batching =
+                Some(BatchingOptions::new(max_batch, linger_s).with_formation(formation));
         }
 
         cfg.validate()?;
@@ -255,6 +314,19 @@ impl ExperimentConfig {
         }
         if self.serve.max_batch == 0 || self.serve.queue_cap == 0 {
             return Err("serve.max_batch and serve.queue_cap must be > 0".into());
+        }
+        if let Some(b) = &self.batching {
+            if b.max_batch == 0 {
+                return Err("batching.max_batch must be >= 1".into());
+            }
+            if !(b.linger_s.is_finite() && b.linger_s >= 0.0) {
+                return Err(format!("batching.linger_s must be finite and >= 0, got {}", b.linger_s));
+            }
+            if let FormationPolicy::ShapeAware { n_bins } = b.formation {
+                if n_bins == 0 {
+                    return Err("batching.formation shape: n_bins must be >= 1".into());
+                }
+            }
         }
         if let PolicyConfig::Cost { lambda } | PolicyConfig::Oracle { lambda } = self.policy {
             if !(0.0..=1.0).contains(&lambda) {
@@ -284,8 +356,14 @@ fn parse_policy(t: &TomlTable) -> Result<PolicyConfig, String> {
         .ok_or("policy.kind is required")?;
     Ok(match kind {
         "threshold" => PolicyConfig::Threshold {
-            t_in: t.get("t_in").and_then(|v| v.as_u32()).unwrap_or(32),
-            t_out: t.get("t_out").and_then(|v| v.as_u32()).unwrap_or(32),
+            t_in: match t.get("t_in") {
+                Some(v) => require_u32(v, "policy.t_in")?,
+                None => 32,
+            },
+            t_out: match t.get("t_out") {
+                Some(v) => require_u32(v, "policy.t_out")?,
+                None => 32,
+            },
             small: t.get("small").and_then(|v| v.as_str()).unwrap_or("M1-Pro").into(),
             big: t.get("big").and_then(|v| v.as_str()).unwrap_or("Swing-A100").into(),
         },
@@ -300,7 +378,10 @@ fn parse_policy(t: &TomlTable) -> Result<PolicyConfig, String> {
         ),
         "round-robin" => PolicyConfig::RoundRobin,
         "random" => PolicyConfig::Random {
-            seed: t.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            seed: match t.get("seed") {
+                Some(v) => require_u64(v, "policy.seed")?,
+                None => 0,
+            },
         },
         "jsq" => PolicyConfig::JoinShortestQueue,
         "oracle" => PolicyConfig::Oracle {
@@ -385,5 +466,90 @@ max_batch = 4
     fn policy_names_stable() {
         assert_eq!(PolicyConfig::RoundRobin.name(), "round-robin");
         assert!(PolicyConfig::Cost { lambda: 0.5 }.name().contains("0.5"));
+    }
+
+    /// Satellite regression: integer fields used to be parsed with
+    /// `as_f64()? as usize`, so `max_batch = 2.7` silently became 2 and
+    /// `seed = -1` silently became 0. Strict parsing rejects both.
+    #[test]
+    fn rejects_fractional_integer_fields() {
+        for (src, field) in [
+            ("[serve]\nmax_batch = 2.7\n", "serve.max_batch"),
+            ("[serve]\nqueue_cap = 10.5\n", "serve.queue_cap"),
+            ("[serve]\ngen_tokens = 1.25\n", "serve.gen_tokens"),
+            ("[workload]\nqueries = 99.9\n", "workload.queries"),
+            ("[workload]\nseed = 1.5\n", "workload.seed"),
+            ("[policy]\nkind = \"threshold\"\nt_in = 31.4\n", "policy.t_in"),
+            ("[policy]\nkind = \"threshold\"\nt_out = 0.1\n", "policy.t_out"),
+            ("[policy]\nkind = \"random\"\nseed = 0.5\n", "policy.seed"),
+            ("[batching]\nmax_batch = 3.9\n", "batching.max_batch"),
+            (
+                "[cluster]\nsystems = [\"M1-Pro\"]\ncounts = [1.5]\n",
+                "cluster.counts",
+            ),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(field), "{src}: error '{err}' should name {field}");
+            assert!(err.contains("integer"), "{src}: error '{err}' should say integer");
+        }
+    }
+
+    #[test]
+    fn rejects_negative_integer_fields() {
+        for (src, field) in [
+            ("[workload]\nseed = -1\n", "workload.seed"),
+            ("[serve]\nmax_batch = -4\n", "serve.max_batch"),
+            ("[policy]\nkind = \"random\"\nseed = -7\n", "policy.seed"),
+            ("[batching]\nmax_batch = -2\n", "batching.max_batch"),
+            (
+                "[cluster]\nsystems = [\"M1-Pro\"]\ncounts = [-1]\n",
+                "cluster.counts",
+            ),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(field), "{src}: error '{err}' should name {field}");
+            assert!(err.contains(">= 0"), "{src}: error '{err}' should reject the sign");
+        }
+    }
+
+    /// ROADMAP PR-2 wiring: `[batching]` reaches `SimOptions::batching`
+    /// (formation policy included) instead of being silently ignored.
+    #[test]
+    fn batching_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[batching]\nmax_batch = 8\nlinger_s = 0.25\nformation = \"shape:4\"\n",
+        )
+        .unwrap();
+        let b = cfg.batching.expect("batching section must populate");
+        assert_eq!(b.max_batch, 8);
+        assert!((b.linger_s - 0.25).abs() < 1e-12);
+        assert_eq!(b.formation, FormationPolicy::ShapeAware { n_bins: 4 });
+
+        // defaults: present-but-sparse section still enables batching
+        let cfg = ExperimentConfig::from_toml_str("[batching]\nmax_batch = 4\n").unwrap();
+        let b = cfg.batching.unwrap();
+        assert_eq!(b.max_batch, 4);
+        assert_eq!(b.formation, FormationPolicy::FifoPrefix);
+
+        // absent section stays serial
+        assert!(ExperimentConfig::from_toml_str("").unwrap().batching.is_none());
+
+        // bad knobs are rejected at parse time
+        assert!(ExperimentConfig::from_toml_str("[batching]\nmax_batch = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[batching]\nlinger_s = -0.5\n").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("[batching]\nformation = \"sorted\"\n").is_err()
+        );
+    }
+
+    #[test]
+    fn serve_formation_parses() {
+        let cfg =
+            ExperimentConfig::from_toml_str("[serve]\nformation = \"shape\"\n").unwrap();
+        assert!(matches!(cfg.serve.formation, FormationPolicy::ShapeAware { .. }));
+        assert_eq!(
+            ExperimentConfig::default().serve.formation,
+            FormationPolicy::FifoPrefix
+        );
     }
 }

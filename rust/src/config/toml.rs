@@ -28,8 +28,28 @@ impl TomlValue {
         }
     }
 
-    pub fn as_u32(&self) -> Option<u32> {
-        self.as_f64().map(|x| x as u32)
+    /// Strict integer view: `Some` only for finite numbers with no
+    /// fractional part that fit in `i64`. `2.7`, `inf`, and `1e300` are
+    /// `None` — unlike an `as u32`/`as usize` cast, which would silently
+    /// truncate or saturate them (the seed schema's bug class; this is
+    /// deliberately the *only* numeric-to-integer view, so every count
+    /// field goes through the strict path). Negative integers are
+    /// `Some(negative)` so callers can report a sign error rather than
+    /// saturating to 0. The upper bound is exclusive: `i64::MAX as f64`
+    /// rounds up to 2^63, which an `as i64` cast would saturate — the
+    /// largest accepted value is the largest f64 below 2^63.
+    pub fn as_integer(&self) -> Option<i64> {
+        match self {
+            TomlValue::Num(x)
+                if x.is_finite()
+                    && x.fract() == 0.0
+                    && *x >= i64::MIN as f64
+                    && *x < i64::MAX as f64 =>
+            {
+                Some(*x as i64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -189,7 +209,7 @@ buckets = [8, 16, 32]
     fn parses_sections_and_arrays() {
         let d = TomlDoc::parse(DOC).unwrap();
         assert_eq!(d.root["name"].as_str(), Some("demo"));
-        assert_eq!(d.get("policy", "t_in").unwrap().as_u32(), Some(32));
+        assert_eq!(d.get("policy", "t_in").unwrap().as_integer(), Some(32));
         assert_eq!(d.get("policy", "enabled").unwrap().as_bool(), Some(true));
         let sys = &d.table_arrays["system"];
         assert_eq!(sys.len(), 2);
@@ -221,5 +241,20 @@ buckets = [8, 16, 32]
         let d = TomlDoc::parse("a = inf\nb = -2.5e3\n").unwrap();
         assert_eq!(d.root["a"].as_f64(), Some(f64::INFINITY));
         assert_eq!(d.root["b"].as_f64(), Some(-2500.0));
+    }
+
+    #[test]
+    fn strict_integer_view() {
+        let d = TomlDoc::parse("a = 42\nb = 2.7\nc = -3\nd = inf\ne = \"7\"\nf = -2.5e3\n").unwrap();
+        assert_eq!(d.root["a"].as_integer(), Some(42));
+        assert_eq!(d.root["b"].as_integer(), None, "fractional values are not integers");
+        assert_eq!(d.root["c"].as_integer(), Some(-3), "sign survives for the caller to reject");
+        assert_eq!(d.root["d"].as_integer(), None);
+        assert_eq!(d.root["e"].as_integer(), None, "strings are not integers");
+        assert_eq!(d.root["f"].as_integer(), Some(-2500), "integral scientific notation is fine");
+        // 2^63 would saturate an `as i64` cast — the strict view refuses
+        let big = TomlDoc::parse("g = 9223372036854775808\n").unwrap();
+        assert_eq!(big.root["g"].as_integer(), None);
+        assert_eq!(TomlValue::Num(i64::MIN as f64).as_integer(), Some(i64::MIN));
     }
 }

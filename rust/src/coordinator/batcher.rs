@@ -22,6 +22,7 @@
 //! shutdown are always handed out, never dropped.
 
 use super::request::Request;
+use crate::sched::formation::FormationPolicy;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -89,43 +90,74 @@ impl SystemQueue {
     /// batched out (without lingering — closing skips the straggler
     /// wait), so accepted work is always completed.
     pub fn take_batch(&self, max_batch: usize, max_wait: Duration) -> Vec<Request> {
+        self.take_batch_with(FormationPolicy::FifoPrefix, max_batch, max_wait)
+    }
+
+    /// [`Self::take_batch`] with an explicit batch-formation policy: once
+    /// the batch is due (full, deadline, or closing), `formation` decides
+    /// **which** waiting requests ship — the FIFO prefix, or shape-aware
+    /// grouping of near-equal generation lengths over a lookahead window
+    /// (the same [`crate::sched::formation`] implementation the batched
+    /// simulator uses, so the sim validates exactly this grouping). The
+    /// oldest waiter is always in the batch (starvation freedom), and the
+    /// drain-on-close guarantee is unchanged.
+    pub fn take_batch_with(
+        &self,
+        formation: FormationPolicy,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Vec<Request> {
         let mut q = self.inner.lock().unwrap();
-        // phase 1: wait for the first request. The emptiness check comes
-        // *before* the closing check: at shutdown the residual queue is
-        // drained, never abandoned. The 50 ms timeout only bounds how
-        // long a missed wakeup could stall a waiter (close() notifies
-        // under the lock, so wakeups are not normally missed); a spurious
-        // wakeup just re-loops — it cannot produce an empty batch while
-        // requests remain queued.
         loop {
-            if !q.is_empty() {
-                break;
+            // phase 1: wait for the first request. The emptiness check
+            // comes *before* the closing check: at shutdown the residual
+            // queue is drained, never abandoned. The 50 ms timeout only
+            // bounds how long a missed wakeup could stall a waiter
+            // (close() notifies under the lock, so wakeups are not
+            // normally missed); a spurious wakeup just re-loops — it
+            // cannot produce an empty batch while requests remain queued.
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if self.closing.load(Ordering::Acquire) {
+                    return Vec::new(); // closing AND drained
+                }
+                let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
             }
-            if self.closing.load(Ordering::Acquire) {
-                return Vec::new(); // closing AND drained
+            // phase 2: linger for batchmates until the batch is full, the
+            // deadline passes, or the queue starts closing (shutdown
+            // drains what is queued and only skips the straggler wait).
+            let deadline = Instant::now() + max_wait;
+            while q.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline || self.closing.load(Ordering::Acquire) {
+                    break;
+                }
+                let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
             }
-            let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
-            q = guard;
-        }
-        let mut batch = Vec::with_capacity(max_batch);
-        batch.push(q.pop_front().unwrap());
-        // phase 2: linger for batchmates. Queued requests are always
-        // popped before the closing/deadline checks, so shutdown drains
-        // what is already there and only skips the wait for stragglers.
-        let deadline = Instant::now() + max_wait;
-        while batch.len() < max_batch {
-            if let Some(r) = q.pop_front() {
-                batch.push(r);
+            // lingering releases the lock, so a sibling worker on the
+            // same queue may have taken everything; go back to waiting
+            // rather than returning a spurious empty batch
+            if q.is_empty() {
                 continue;
             }
-            let now = Instant::now();
-            if now >= deadline || self.closing.load(Ordering::Acquire) {
-                break;
+            // phase 3: formation picks which waiters ship
+            let window = formation.candidate_window(max_batch).min(q.len());
+            let shapes: Vec<(u32, u32)> =
+                q.iter().take(window).map(|r| (r.input_tokens(), r.gen_tokens)).collect();
+            let sel = formation.select(&shapes, max_batch);
+            let mut batch = Vec::with_capacity(sel.len());
+            // remove back-to-front so earlier indices stay valid, then
+            // restore arrival order
+            for &i in sel.iter().rev() {
+                batch.push(q.remove(i).expect("selected index in range"));
             }
-            let (guard, _) = self.cv.wait_timeout(q, deadline - now).unwrap();
-            q = guard;
+            batch.reverse();
+            return batch;
         }
-        batch
     }
 
     /// Begin shutdown: no new work; wake all waiters. The flag flips

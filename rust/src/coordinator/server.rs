@@ -78,6 +78,7 @@ impl Server {
                     spec: spec.clone(),
                     max_batch: cfg.serve.max_batch,
                     max_wait: Duration::from_secs_f64(cfg.serve.max_wait_s),
+                    formation: cfg.serve.formation,
                     sampling: SamplingParams::default(),
                 };
                 let q = queues[i].clone();

@@ -10,6 +10,7 @@ use crate::hw::spec::SystemSpec;
 use crate::metrics::Registry;
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::engine::SamplingParams;
+use crate::sched::formation::FormationPolicy;
 use crate::util::error::Result;
 use std::sync::Arc;
 use std::time::Duration;
@@ -27,6 +28,8 @@ pub struct WorkerConfig {
     pub spec: SystemSpec,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// which waiting requests form each batch (shared with the sim)
+    pub formation: FormationPolicy,
     pub sampling: SamplingParams,
 }
 
@@ -44,7 +47,7 @@ pub fn run_worker(
             // fail every request fast rather than hanging the queue
             metrics.counter(&format!("worker.{}.engine_init_failures", cfg.spec.name)).inc();
             loop {
-                let batch = queue.take_batch(cfg.max_batch, cfg.max_wait);
+                let batch = queue.take_batch_with(cfg.formation, cfg.max_batch, cfg.max_wait);
                 if batch.is_empty() {
                     if queue.is_closing() && queue.is_empty() {
                         return;
@@ -73,7 +76,7 @@ pub fn run_worker(
     let latency = metrics.histo(&format!("worker.{}.latency", cfg.spec.name));
 
     loop {
-        let batch = queue.take_batch(cfg.max_batch, cfg.max_wait);
+        let batch = queue.take_batch_with(cfg.formation, cfg.max_batch, cfg.max_wait);
         if batch.is_empty() {
             if queue.is_closing() && queue.is_empty() {
                 return;

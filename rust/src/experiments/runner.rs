@@ -11,9 +11,10 @@
 use crate::config::schema::PolicyConfig;
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
-use crate::perf::cost_table::{BatchTable, CostTable};
+use crate::perf::cost_table::{BatchTable, BucketSpec, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
+use crate::sched::formation::FormationPolicy;
 use crate::sched::policy::build_policy;
 use crate::sim::engine::{
     simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
@@ -169,7 +170,7 @@ pub fn batching_sweep(
         let points = par_map(&grid, |&(max_batch, linger_s)| {
             let mut p = build_policy(policy, energy.clone(), systems);
             let opts = SimOptions {
-                batching: Some(BatchingOptions { max_batch, linger_s }),
+                batching: Some(BatchingOptions::new(max_batch, linger_s)),
                 ..Default::default()
             };
             let rep = simulate_batched_with_tables(
@@ -198,6 +199,127 @@ pub fn batching_sweep(
         out.extend(points);
     }
     out
+}
+
+/// One grid point of a [`formation_sweep`]: a summarized batched-sim run
+/// under one (rate, max_batch, formation) combination.
+#[derive(Clone, Debug)]
+pub struct FormationPoint {
+    /// Poisson arrival rate λ of the trace (queries/s)
+    pub rate: f64,
+    pub max_batch: usize,
+    pub formation: FormationPolicy,
+    pub total_energy_j: f64,
+    /// per-system energy (J) in catalog order — the FIFO-vs-shape-aware
+    /// energy delta *per system* is read off pairs of points
+    pub system_energy_j: Vec<f64>,
+    /// Σ over batches of Σ members `max(n) − n` — the decode steps
+    /// shape-aware formation exists to cut
+    pub straggler_steps: u64,
+    pub dispatches: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub makespan_s: f64,
+}
+
+/// A [`formation_sweep`] result: the grid points plus the shared
+/// bucketed-[`BatchTable`] statistics (the sweep is also the acceptance
+/// harness for quantile bucketing — without it, exact composition keys
+/// almost never repeat on long Alpaca traces and the hit rate is ~0).
+#[derive(Clone, Debug)]
+pub struct FormationSweep {
+    /// rate-major, then `max_batches` order, then `formations` order
+    pub points: Vec<FormationPoint>,
+    /// cache hits / lookups across every grid point (shared tables)
+    pub batch_table_hit_rate: f64,
+    pub batch_table_lookups: u64,
+    /// distinct (bucket-signature, system) cells actually evaluated
+    pub batch_table_evaluations: usize,
+    /// smallest effective (m, n) quantile-bin counts across the per-rate
+    /// bucket specs (each rate derives its own bins from its own trace;
+    /// dedup can shrink them differently per rate)
+    pub bucket_bins: (usize, usize),
+}
+
+/// Sweep batch formation: `formation × max_batch` per arrival rate λ,
+/// fanned over [`crate::util::par`]. Per rate the trace, the
+/// [`CostTable`], and one shared quantile-bucketed [`BatchTable`] (bins
+/// derived once from that rate's trace) are built once; every grid point
+/// then reuses them, so FIFO and shape-aware points are costed through
+/// the exact same cells and their energy delta is pure formation effect.
+#[allow(clippy::too_many_arguments)]
+pub fn formation_sweep(
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    policy: &PolicyConfig,
+    rates: &[f64],
+    max_batches: &[usize],
+    formations: &[FormationPolicy],
+    linger_s: f64,
+    n_queries: usize,
+    seed: u64,
+    bucket_bins: usize,
+) -> FormationSweep {
+    let mut points = Vec::with_capacity(rates.len() * max_batches.len() * formations.len());
+    let mut lookups = 0u64;
+    let mut hits = 0u64;
+    let mut evaluations = 0usize;
+    let mut bins = (usize::MAX, usize::MAX);
+    for &rate in rates {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n_queries);
+        let table = CostTable::build(&queries, systems, energy);
+        let spec = BucketSpec::from_trace(&queries, bucket_bins);
+        let (mb, nb) = spec.bin_counts();
+        bins = (bins.0.min(mb), bins.1.min(nb));
+        let batch_table = BatchTable::bucketed(energy.clone(), systems, spec);
+        let grid: Vec<(usize, FormationPolicy)> = max_batches
+            .iter()
+            .flat_map(|&mb| formations.iter().map(move |&f| (mb, f)))
+            .collect();
+        let rate_points = par_map(&grid, |&(max_batch, formation)| {
+            let mut p = build_policy(policy, energy.clone(), systems);
+            let opts = SimOptions {
+                batching: Some(BatchingOptions::new(max_batch, linger_s).with_formation(formation)),
+                ..Default::default()
+            };
+            let rep = simulate_batched_with_tables(
+                &queries,
+                systems,
+                p.as_mut(),
+                &table,
+                &batch_table,
+                &opts,
+            );
+            FormationPoint {
+                rate,
+                max_batch,
+                formation,
+                total_energy_j: rep.total_energy_j,
+                system_energy_j: rep.systems.iter().map(|s| s.energy_j).collect(),
+                straggler_steps: rep.total_straggler_steps(),
+                dispatches: rep.total_dispatches(),
+                mean_batch_size: rep.mean_batch_size(),
+                mean_latency_s: rep.mean_latency_s(),
+                p99_latency_s: rep.p99_latency_s(),
+                makespan_s: rep.makespan_s,
+            }
+        });
+        points.extend(rate_points);
+        lookups += batch_table.lookups();
+        hits += batch_table.hits();
+        evaluations += batch_table.evaluations();
+    }
+    if bins.0 == usize::MAX {
+        bins = (0, 0); // no rates swept
+    }
+    FormationSweep {
+        points,
+        batch_table_hit_rate: if lookups == 0 { 0.0 } else { hits as f64 / lookups as f64 },
+        batch_table_lookups: lookups,
+        batch_table_evaluations: evaluations,
+        bucket_bins: bins,
+    }
 }
 
 #[cfg(test)]
@@ -351,6 +473,63 @@ mod tests {
         }
         // and strictly fewer dispatches at the extremes under this load
         assert!(pts[3].dispatches < pts[0].dispatches);
+    }
+
+    /// Acceptance: shape-aware formation cuts straggler drag (and with
+    /// it energy) vs FIFO on a saturating Alpaca trace, and the shared
+    /// bucketed BatchTable turns grid-point reuse into real cache hits.
+    #[test]
+    fn formation_sweep_shape_aware_cuts_drag_and_buckets_hit() {
+        let systems = system_catalog();
+        let em = energy();
+        let formations = [
+            FormationPolicy::FifoPrefix,
+            FormationPolicy::ShapeAware { n_bins: 8 },
+        ];
+        let sweep = formation_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::AllOn("Swing-A100".into()),
+            &[25.0],
+            &[4, 8],
+            &formations,
+            0.25,
+            300,
+            2024,
+            8,
+        );
+        assert_eq!(sweep.points.len(), 4, "rate × max_batch × formation grid");
+        // points come back (max_batch, formation)-ordered per rate
+        for pair in sweep.points.chunks(2) {
+            let (fifo, shape) = (&pair[0], &pair[1]);
+            assert_eq!(fifo.formation, FormationPolicy::FifoPrefix);
+            assert_eq!(fifo.max_batch, shape.max_batch);
+            assert!(
+                shape.straggler_steps <= fifo.straggler_steps,
+                "shape drag {} > fifo {} at max_batch {}",
+                shape.straggler_steps,
+                fifo.straggler_steps,
+                fifo.max_batch
+            );
+        }
+        // at max_batch 8 under overload the win is strict, in drag and J
+        let fifo8 = &sweep.points[2];
+        let shape8 = &sweep.points[3];
+        assert!(shape8.straggler_steps < fifo8.straggler_steps);
+        assert!(shape8.total_energy_j < fifo8.total_energy_j);
+        // per-system energy sums to the total (idle off)
+        for p in &sweep.points {
+            let sum: f64 = p.system_energy_j.iter().sum();
+            assert!((sum - p.total_energy_j).abs() <= 1e-6 * p.total_energy_j.max(1.0));
+        }
+        // grid points share compositions through the bucket signatures
+        assert!(sweep.batch_table_lookups > 0);
+        assert!(
+            sweep.batch_table_hit_rate > 0.0,
+            "bucketed table must hit across shared grid points"
+        );
+        assert!(sweep.batch_table_evaluations as u64 <= sweep.batch_table_lookups);
+        assert!(sweep.bucket_bins.0 >= 2 && sweep.bucket_bins.1 >= 2);
     }
 
     #[test]

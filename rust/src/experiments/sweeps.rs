@@ -202,7 +202,9 @@ pub fn threshold_sweep_from_costs(
     let best_idx = hybrid_energy
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        // total_cmp: NaN cells (infeasible points) sort last instead
+        // of panicking the argmin
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
 

@@ -5,13 +5,14 @@
 
 use hetsched::config::schema::{ExperimentConfig, PolicyConfig};
 use hetsched::experiments::{
-    batching_sweep, fig3_alpaca, headline_savings, input_sweep, output_sweep, table1,
-    threshold_sweep,
+    batching_sweep, fig3_alpaca, formation_sweep, headline_savings, input_sweep, output_sweep,
+    table1, threshold_sweep,
 };
 use hetsched::hw::catalog::{find_system, system_catalog, SystemId};
 use hetsched::model::{find_llm, llm_catalog};
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
+use hetsched::sched::formation::FormationPolicy;
 use hetsched::sim::engine::{BatchingOptions, SimOptions};
 use hetsched::util::cli::Args;
 use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Align, Table};
@@ -35,6 +36,7 @@ paper experiments:
 system:
   simulate          run a config-driven cluster simulation
   batching-sweep    batched-sim energy/latency grid over max_batch × linger × λ
+  formation-sweep   FIFO vs shape-aware batch formation over max_batch × λ
   serve             start the live serving demo on the AOT artifacts
   calibrate         fit perf-model constants from a measured sweep
 
@@ -51,6 +53,7 @@ fn main() {
         Some("headline") => cmd_headline(&argv[1..]),
         Some("simulate") => cmd_simulate(&argv[1..]),
         Some("batching-sweep") => cmd_batching_sweep(&argv[1..]),
+        Some("formation-sweep") => cmd_formation_sweep(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("calibrate") => cmd_calibrate(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -248,8 +251,9 @@ fn cmd_headline(argv: &[String]) -> Result<(), String> {
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let args = Args::new("simulate")
         .opt("config", "", "TOML config path (empty = paper defaults)")
-        .opt("max-batch", "1", "dynamic batch size per dispatch (1 = serial)")
-        .opt("linger", "0.05", "seconds a partial batch lingers for stragglers")
+        .opt("max-batch", "", "dynamic batch size per dispatch (1 = serial; empty = config's [batching])")
+        .opt("linger", "", "seconds a partial batch lingers for stragglers (empty = config)")
+        .opt("formation", "", "batch formation: fifo | shape | shape:<bins> (empty = config)")
         .flag("idle-energy", "charge idle power across the makespan")
         .parse(argv)?;
     let cfg = match args.get("config") {
@@ -264,15 +268,55 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             .generate(cfg.workload.queries),
     };
     let mut policy = hetsched::sched::policy::build_policy(&cfg.policy, energy.clone(), &cfg.cluster.systems);
-    let max_batch = args.get_usize("max-batch")?;
-    if max_batch == 0 {
-        return Err("--max-batch must be >= 1".into());
+
+    // batching: the config's [batching] section is the baseline (None =
+    // serial — before the section existed the knobs were CLI-only and a
+    // configured run silently fell back to serial); CLI flags override
+    // field-wise
+    let mut batching = cfg.batching;
+    match args.get("max-batch") {
+        "" => {}
+        _ => {
+            let max_batch = args.get_usize("max-batch")?;
+            if max_batch == 0 {
+                return Err("--max-batch must be >= 1".into());
+            }
+            if max_batch == 1 {
+                batching = None; // explicit serial
+            } else {
+                let mut b = batching.unwrap_or_else(|| BatchingOptions::new(max_batch, 0.05));
+                b.max_batch = max_batch;
+                batching = Some(b);
+            }
+        }
     }
-    let linger_s = args.get_f64("linger")?;
+    match args.get("linger") {
+        "" => {}
+        _ => {
+            let linger_s = args.get_f64("linger")?;
+            if !(linger_s.is_finite() && linger_s >= 0.0) {
+                return Err(format!("--linger must be finite and >= 0, got {linger_s}"));
+            }
+            match &mut batching {
+                Some(b) => b.linger_s = linger_s,
+                None => return Err("--linger needs batching (--max-batch > 1 or a [batching] config section)".into()),
+            }
+        }
+    }
+    match args.get("formation") {
+        "" => {}
+        s => {
+            let formation = FormationPolicy::parse(s)?;
+            match &mut batching {
+                Some(b) => b.formation = formation,
+                None => return Err("--formation needs batching (--max-batch > 1 or a [batching] config section)".into()),
+            }
+        }
+    }
     let opts = SimOptions {
         include_idle_energy: args.get_bool("idle-energy"),
         strict: false,
-        batching: (max_batch > 1).then_some(BatchingOptions { max_batch, linger_s }),
+        batching,
     };
     let rep = hetsched::sim::engine::simulate(&queries, &cfg.cluster.systems, policy.as_mut(), &energy, &opts);
     println!("policy: {}", rep.policy);
@@ -298,11 +342,13 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         ]);
     }
     print!("{}", t.ascii());
-    if opts.batching.is_some() {
+    if let Some(b) = &opts.batching {
         println!(
-            "batching: mean size {:.2}   dispatch energy {}   saved vs serial dispatch {}",
+            "batching: formation {}   mean size {:.2}   dispatch energy {}   straggler steps {}   saved vs serial dispatch {}",
+            b.formation.name(),
             rep.mean_batch_size(),
             fmt_joules(rep.dispatch_energy_j()),
+            rep.total_straggler_steps(),
             fmt_joules(rep.batching_energy_delta_j())
         );
         for (s, b) in rep.systems.iter().zip(&rep.batches) {
@@ -410,6 +456,122 @@ fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
         ]);
     }
     print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+    Ok(())
+}
+
+fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("formation-sweep")
+        .opt("model", "Llama-2-7B", "LLM for the energy model")
+        .opt("policy", "cost", "cost | jsq | round-robin | threshold | <system name>")
+        .opt("rates", "10,25", "Poisson arrival rates λ (q/s), comma-separated")
+        .opt("max-batch", "4,8", "max batch sizes, comma-separated")
+        .opt("formations", "fifo,shape", "formation policies (fifo | shape | shape:<bins>), comma-separated")
+        .opt("linger", "0.25", "linger window (s)")
+        .opt("queries", "2000", "trace length per rate")
+        .opt("seed", "2024", "trace seed")
+        .opt("bins", "8", "quantile bins per (m, n) axis for the bucketed BatchTable")
+        .flag("csv", "emit CSV")
+        .parse(argv)?;
+    let llm = find_llm(args.get("model")).ok_or("unknown model")?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let systems = system_catalog();
+    let policy = parse_policy_flag(args.get("policy"))?;
+    let rates = required_list::<f64>(&args, "rates")?;
+    let max_batches = required_list::<usize>(&args, "max-batch")?;
+    if max_batches.iter().any(|&b| b == 0) {
+        return Err("--max-batch values must be >= 1".into());
+    }
+    let formations: Vec<FormationPolicy> = args
+        .get("formations")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(FormationPolicy::parse)
+        .collect::<Result<_, _>>()?;
+    if formations.is_empty() {
+        return Err("--formations: needs at least one value".into());
+    }
+    let linger_s = args.get_f64("linger")?;
+    if !(linger_s.is_finite() && linger_s >= 0.0) {
+        return Err(format!("--linger must be finite and >= 0, got {linger_s}"));
+    }
+    let n_queries = args.get_usize("queries")?;
+    let seed = args.get_u64("seed")?;
+    let bins = args.get_usize("bins")?;
+    if bins == 0 {
+        return Err("--bins must be >= 1".into());
+    }
+    let sweep = formation_sweep(
+        &systems, &energy, &policy, &rates, &max_batches, &formations, linger_s, n_queries,
+        seed, bins,
+    );
+    println!(
+        "batch-formation sweep: policy {}, linger {:.2}s, {} queries per rate, seed {}",
+        policy.name(),
+        linger_s,
+        n_queries,
+        seed
+    );
+    let mut t = Table::new(&[
+        "rate",
+        "max_batch",
+        "formation",
+        "energy",
+        "straggler steps",
+        "batches",
+        "mean size",
+        "mean lat",
+        "p99 lat",
+    ]);
+    for p in &sweep.points {
+        t.row(&[
+            format!("{:.1}", p.rate),
+            p.max_batch.to_string(),
+            p.formation.name(),
+            fmt_joules(p.total_energy_j),
+            p.straggler_steps.to_string(),
+            p.dispatches.to_string(),
+            format!("{:.2}", p.mean_batch_size),
+            fmt_secs(p.mean_latency_s),
+            fmt_secs(p.p99_latency_s),
+        ]);
+    }
+    print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+
+    // FIFO-vs-alternative energy delta, per system, at each grid point
+    let names: Vec<&str> = systems.iter().map(|s| s.name).collect();
+    for fifo in sweep.points.iter().filter(|p| p.formation == FormationPolicy::FifoPrefix) {
+        for other in sweep.points.iter().filter(|p| {
+            p.formation != FormationPolicy::FifoPrefix
+                && p.rate == fifo.rate
+                && p.max_batch == fifo.max_batch
+        }) {
+            let total = fifo.total_energy_j - other.total_energy_j;
+            let parts: Vec<String> = names
+                .iter()
+                .zip(fifo.system_energy_j.iter().zip(&other.system_energy_j))
+                .filter(|(_, (f, o))| **f != 0.0 || **o != 0.0)
+                .map(|(name, (f, o))| format!("{name} {}", fmt_joules(f - o)))
+                .collect();
+            println!(
+                "λ={:.1} b={}: fifo − {} = {} ({:+.2}%)   per system: {}",
+                fifo.rate,
+                fifo.max_batch,
+                other.formation.name(),
+                fmt_joules(total),
+                100.0 * total / fifo.total_energy_j.max(f64::MIN_POSITIVE),
+                parts.join("   ")
+            );
+        }
+    }
+    println!(
+        "bucketed BatchTable: hit rate {:.1}% over {} lookups, {} cells evaluated, ({} × {}) bins",
+        100.0 * sweep.batch_table_hit_rate,
+        sweep.batch_table_lookups,
+        sweep.batch_table_evaluations,
+        sweep.bucket_bins.0,
+        sweep.bucket_bins.1
+    );
     Ok(())
 }
 

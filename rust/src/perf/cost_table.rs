@@ -27,6 +27,7 @@ use crate::hw::spec::SystemSpec;
 use crate::util::par::par_map;
 use crate::workload::Query;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Cost of one query on one system. Infeasible cells carry `NaN` costs
@@ -146,28 +147,123 @@ impl CostTable {
 }
 
 /// Composition key of a batch on a system: the member `(m, n)` pairs in
-/// dispatch order.
+/// dispatch order (bucket representatives when the table is bucketed).
 type BatchKey = (usize, Vec<(u32, u32)>);
+
+/// Quantile bucket grid over `(m, n)`, derived once from a trace — the
+/// ROADMAP's bucketed-`BatchTable` layout. Exact compositions rarely
+/// repeat on long Alpaca traces (the token distributions are heavy-
+/// tailed), so the exact-key memo's hit rate is near zero; mapping each
+/// member to its quantile bin collapses near-identical compositions into
+/// one cell and turns that into real sharing, at a small modeling-error
+/// cost (costs are evaluated at the bin's lower edge).
+///
+/// Bucket representatives are the bin **lower** edges, clamped to the
+/// member's own value, so a representative is always `<=` the actual
+/// member in both coordinates. Feasibility is monotone in `(m, n)`
+/// (growing a query never fixes an OOM — pinned by
+/// `prop_feasibility_monotone`), so any batch whose actual members pass
+/// the exact feasibility check has a feasible representative — a
+/// bucketed cost cell can never go NaN on a feasible batch.
+#[derive(Clone, Debug)]
+pub struct BucketSpec {
+    /// ascending bin lower edges for input tokens
+    m_edges: Vec<u32>,
+    /// ascending bin lower edges for output tokens
+    n_edges: Vec<u32>,
+}
+
+impl BucketSpec {
+    /// Derive `bins` equal-population (quantile) bins per axis from the
+    /// trace's token distributions. Duplicate edges (heavy repeated
+    /// values) are collapsed, so the effective bin count may be lower.
+    pub fn from_trace(queries: &[Query], bins: usize) -> Self {
+        Self {
+            m_edges: quantile_edges(queries.iter().map(|q| q.input_tokens).collect(), bins),
+            n_edges: quantile_edges(queries.iter().map(|q| q.output_tokens).collect(), bins),
+        }
+    }
+
+    /// The bucket representative of a member: per axis, the largest bin
+    /// lower edge `<=` the value (clamped to the value itself for inputs
+    /// below every edge, e.g. compositions outside the deriving trace).
+    pub fn representative(&self, m: u32, n: u32) -> (u32, u32) {
+        (lower_edge(&self.m_edges, m).min(m), lower_edge(&self.n_edges, n).min(n))
+    }
+
+    /// Distinct bins per axis (after dedup): `(m_bins, n_bins)`.
+    pub fn bin_counts(&self) -> (usize, usize) {
+        (self.m_edges.len(), self.n_edges.len())
+    }
+}
+
+fn quantile_edges(mut vals: Vec<u32>, bins: usize) -> Vec<u32> {
+    assert!(bins >= 1, "bucket spec needs at least one bin");
+    if vals.is_empty() {
+        return vec![0];
+    }
+    vals.sort_unstable();
+    let mut edges: Vec<u32> = (0..bins).map(|b| vals[b * vals.len() / bins]).collect();
+    edges.dedup();
+    edges
+}
+
+/// Largest edge `<=` v (edges ascending; v below the first edge maps to
+/// the first edge — callers clamp).
+fn lower_edge(edges: &[u32], v: u32) -> u32 {
+    match edges.binary_search(&v) {
+        Ok(i) => edges[i],
+        Err(0) => edges[0],
+        Err(i) => edges[i - 1],
+    }
+}
 
 /// Memoized batch-cost table — the batched sibling of [`CostTable`].
 ///
 /// Batch compositions are data-dependent (they emerge from arrivals and
 /// queue state), so they cannot be enumerated up front the way per-query
-/// cells can. Instead the table buckets by composition: the model runs
+/// cells can. Instead the table memoizes by composition: the model runs
 /// **once per (composition, system)** and every later hit — the same
 /// batch shape recurring within a trace, or across the grid points of a
 /// [`crate::experiments::runner::batching_sweep`] sharing one table — is
-/// a lookup. Thread-safe: sweep grid points fan over
-/// [`crate::util::par`] against one shared instance.
+/// a lookup. [`BatchTable::bucketed`] keys by quantile-bin signature
+/// instead of exact composition (see [`BucketSpec`]), which raises hit
+/// rates from near zero to useful on long traces. Thread-safe: sweep
+/// grid points fan over [`crate::util::par`] against one shared
+/// instance, and bucketed cells are evaluated at the deterministic bin
+/// representative — never at whichever actual composition got there
+/// first — so results are identical at any core count.
 pub struct BatchTable {
     energy: EnergyModel,
     systems: Vec<SystemSpec>,
+    buckets: Option<BucketSpec>,
     cache: Mutex<HashMap<BatchKey, Arc<BatchCost>>>,
+    lookups: AtomicU64,
+    hits: AtomicU64,
 }
 
 impl BatchTable {
+    /// Exact-composition memoization (bit-identical to direct
+    /// [`crate::perf::model::PerfModel::batch_cost`] evaluation).
     pub fn new(energy: EnergyModel, systems: &[SystemSpec]) -> Self {
-        Self { energy, systems: systems.to_vec(), cache: Mutex::new(HashMap::new()) }
+        Self {
+            energy,
+            systems: systems.to_vec(),
+            buckets: None,
+            cache: Mutex::new(HashMap::new()),
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Quantile-bucketed memoization: costs are keyed and evaluated at
+    /// each member's bucket representative.
+    pub fn bucketed(energy: EnergyModel, systems: &[SystemSpec], buckets: BucketSpec) -> Self {
+        Self { buckets: Some(buckets), ..Self::new(energy, systems) }
+    }
+
+    pub fn is_bucketed(&self) -> bool {
+        self.buckets.is_some()
     }
 
     /// Which attribution the [`Self::energy_j`] accessor reports.
@@ -180,18 +276,48 @@ impl BatchTable {
     }
 
     /// Cost of dispatching `members` as one batch on `system`, memoized
-    /// per composition. Deterministic: a hit returns exactly what the
-    /// miss computed.
+    /// per composition (per bucket signature when bucketed).
+    /// Deterministic: a hit returns exactly what the miss computed, and
+    /// bucketed cells are always evaluated at the bin representative —
+    /// independent of which actual composition reached the bucket first.
     pub fn cost(&self, system: usize, members: &[(u32, u32)]) -> Arc<BatchCost> {
-        let key: BatchKey = (system, members.to_vec());
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let keyed: Vec<(u32, u32)> = match &self.buckets {
+            None => members.to_vec(),
+            Some(b) => members.iter().map(|&(m, n)| b.representative(m, n)).collect(),
+        };
+        let key: BatchKey = (system, keyed);
         if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return hit.clone();
         }
         // evaluate outside the lock so concurrent sweeps don't serialize
         // on the model; a racing duplicate computes the same value and
         // the first insert wins
-        let cost = Arc::new(self.energy.perf.batch_cost(&self.systems[system], members));
+        let cost = Arc::new(self.energy.perf.batch_cost(&self.systems[system], &key.1));
         self.cache.lock().unwrap().entry(key).or_insert(cost).clone()
+    }
+
+    /// Cache lookups served so far (both modes).
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that were cache hits.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of lookups served from the memo (0 when none yet). Near
+    /// zero for exact keys on long Alpaca traces; the point of
+    /// [`Self::bucketed`] is to make this real.
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups();
+        if l == 0 {
+            0.0
+        } else {
+            self.hits() as f64 / l as f64
+        }
     }
 
     /// The batch's energy under this table's attribution.
@@ -315,6 +441,92 @@ mod tests {
         assert_eq!(t.cost(2, &members[..k]).feasibility, Feasibility::Ok);
         // a comfortably small batch is untrimmed
         assert_eq!(t.feasible_prefix(1, &[(8, 8), (8, 8)]), 2);
+    }
+
+    #[test]
+    fn bucketed_table_collapses_near_identical_compositions() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let trace = AlpacaModel::default().trace(5, 4_000);
+        let spec = BucketSpec::from_trace(&trace, 8);
+        let (mb, nb) = spec.bin_counts();
+        assert!(mb >= 2 && nb >= 2, "alpaca trace must yield multiple bins ({mb}, {nb})");
+        let t = BatchTable::bucketed(energy.clone(), &systems, spec.clone());
+
+        // two compositions that differ inside their bins share one cell
+        let a = t.cost(1, &[(40, 70), (300, 20)]);
+        let b_members = [(41u32, 71u32), (301, 21)];
+        let same_bucket = spec.representative(40, 70) == spec.representative(41, 71)
+            && spec.representative(300, 20) == spec.representative(301, 21);
+        let b = t.cost(1, &b_members);
+        if same_bucket {
+            assert!(Arc::ptr_eq(&a, &b), "same bucket signature must be one cell");
+            assert_eq!(t.hits(), 1);
+            assert!(t.hit_rate() > 0.0);
+        }
+        assert_eq!(t.lookups(), 2);
+
+        // deterministic: the cell is evaluated at the representative, so
+        // a fresh table seeded by the *other* composition agrees exactly
+        let t2 = BatchTable::bucketed(energy, &systems, spec);
+        let b2 = t2.cost(1, &b_members);
+        let a2 = t2.cost(1, &[(40, 70), (300, 20)]);
+        assert_eq!(a.runtime_s, a2.runtime_s);
+        assert_eq!(a.energy_j, a2.energy_j);
+        if same_bucket {
+            assert!(Arc::ptr_eq(&a2, &b2));
+        }
+    }
+
+    #[test]
+    fn bucket_representative_never_exceeds_member() {
+        let trace = AlpacaModel::default().trace(9, 2_000);
+        let spec = BucketSpec::from_trace(&trace, 6);
+        for q in &trace {
+            let (rm, rn) = spec.representative(q.input_tokens, q.output_tokens);
+            assert!(rm <= q.input_tokens && rn <= q.output_tokens, "({rm},{rn}) repr of query {q:?}");
+        }
+        // values outside the deriving trace clamp safely (incl. below
+        // the lowest edge)
+        let (rm, rn) = spec.representative(0, 0);
+        assert_eq!((rm, rn), (0, 0));
+    }
+
+    /// Feasibility safety: a batch whose actual members pass the exact
+    /// joint check always has a feasible (<= componentwise)
+    /// representative, so bucketed costs of feasible batches are never
+    /// NaN.
+    #[test]
+    fn bucketed_cost_of_feasible_batch_is_finite() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let trace = AlpacaModel::default().trace(3, 2_000);
+        let spec = BucketSpec::from_trace(&trace, 8);
+        let t = BatchTable::bucketed(energy.clone(), &systems, spec);
+        // V100: (32, 1024) fits alone but four don't — trim exactly like
+        // the exact table, then cost the trimmed batch
+        let members = [(32u32, 1024u32); 4];
+        let k = t.feasible_prefix(2, &members);
+        assert!(k >= 1 && k < 4);
+        let c = t.cost(2, &members[..k]);
+        assert_eq!(c.feasibility, Feasibility::Ok);
+        assert!(c.runtime_s.is_finite() && c.energy_j.is_finite());
+        assert_eq!(c.member_finish_s.len(), k);
+    }
+
+    #[test]
+    fn exact_table_hit_rate_counters() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let t = BatchTable::new(energy, &systems);
+        assert!(!t.is_bucketed());
+        assert_eq!(t.hit_rate(), 0.0, "no lookups yet");
+        let _ = t.cost(1, &[(8, 8)]);
+        let _ = t.cost(1, &[(8, 8)]);
+        let _ = t.cost(1, &[(8, 9)]);
+        assert_eq!(t.lookups(), 3);
+        assert_eq!(t.hits(), 1);
+        assert!((t.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Shape-aware batch formation — the one implementation behind both the
+//! serving coordinator (`coordinator::batcher::SystemQueue::take_batch_with`)
+//! and the batched simulator (`sim::engine`), so the sim validates exactly
+//! the grouping the coordinator ships.
+//!
+//! ## Why formation matters
+//!
+//! A static batch decodes at the pace of its longest-generation member:
+//! every batchmate of a long-`n` straggler sits through `max(n) − n`
+//! decode steps it doesn't need (Wilkins et al., arXiv 2407.04014 — decode
+//! dominates batched energy; Fernandez et al., arXiv 2504.17674 — batch
+//! composition is a first-order energy lever). FIFO-prefix batching makes
+//! that drag a lottery over arrival order. [`FormationPolicy::ShapeAware`]
+//! instead groups near-equal output lengths, provably never exceeding
+//! FIFO's total drag on the same arrival set (see the invariant below).
+//!
+//! ## The ShapeAware algorithm
+//!
+//! Per dispatch, over a lookahead window of the `n_bins × max_batch`
+//! oldest waiters:
+//!
+//! 1. rank the window's members by output length `n` (stable on arrival
+//!    order);
+//! 2. partition the ranked sequence into exactly `ceil(w / max_batch)`
+//!    consecutive groups of at most `max_batch` members each, minimizing
+//!    total straggler drag `Σ_g Σ_{i∈g} (max_n(g) − n_i)` by dynamic
+//!    program (consecutive-in-sorted-order partitions contain an optimum
+//!    for this objective, by the standard exchange argument);
+//! 3. dispatch the group containing the **oldest** waiter (starvation
+//!    freedom: the queue front is always in the next batch).
+//!
+//! Because the group count is the minimum that covers the window, group
+//! sizes are forced near-full, so shape-aware draining issues exactly as
+//! many dispatches as FIFO — it never trades drag for extra dispatch
+//! overhead.
+//!
+//! ## Invariant (pinned by `rust/tests/properties.rs`)
+//!
+//! Draining any member multiset, the total straggler decode steps of
+//! `ShapeAware` never exceed `FifoPrefix`'s: the optimal window partition
+//! costs no more than the FIFO chunking of the same window, and removing
+//! a whole group leaves a partition that is still feasible for the
+//! shrunken window, so the bound telescopes across dispatches.
+//! `ShapeAware { n_bins: 1 }` degenerates to `FifoPrefix` exactly (a
+//! one-batch window has nothing to regroup), as does `max_batch = 1`
+//! (singleton batches carry zero drag).
+
+/// How a batcher picks which waiting requests form the next batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FormationPolicy {
+    /// Dispatch the oldest `max_batch` waiters — classic dynamic
+    /// batching, agnostic to member shapes.
+    #[default]
+    FifoPrefix,
+    /// Group near-equal output lengths within a lookahead window of
+    /// `n_bins × max_batch` waiters (see the module docs). `n_bins` is
+    /// how many batches' worth of queue the batcher may look ahead:
+    /// `1` is FIFO; larger windows approach globally sorted formation.
+    ShapeAware { n_bins: usize },
+}
+
+/// Default lookahead for shape-aware formation: 8 batches' worth.
+pub const DEFAULT_N_BINS: usize = 8;
+
+impl FormationPolicy {
+    /// Canonical short name (used by reports and sweep tables).
+    pub fn name(&self) -> String {
+        match self {
+            FormationPolicy::FifoPrefix => "fifo".into(),
+            FormationPolicy::ShapeAware { n_bins } => format!("shape:{n_bins}"),
+        }
+    }
+
+    /// Parse a CLI/config spelling: `fifo`, `shape`, or `shape:<n_bins>`.
+    pub fn parse(s: &str) -> Result<FormationPolicy, String> {
+        match s {
+            "fifo" => Ok(FormationPolicy::FifoPrefix),
+            "shape" | "shape-aware" => Ok(FormationPolicy::ShapeAware { n_bins: DEFAULT_N_BINS }),
+            other => {
+                if let Some(bins) =
+                    other.strip_prefix("shape:").or_else(|| other.strip_prefix("shape-aware:"))
+                {
+                    let n_bins: usize = bins
+                        .parse()
+                        .map_err(|_| format!("formation 'shape:<n_bins>': bad n_bins '{bins}'"))?;
+                    if n_bins == 0 {
+                        return Err("formation shape: n_bins must be >= 1".into());
+                    }
+                    Ok(FormationPolicy::ShapeAware { n_bins })
+                } else {
+                    Err(format!("unknown formation '{other}' (expected fifo | shape | shape:<n_bins>)"))
+                }
+            }
+        }
+    }
+
+    /// How many of the oldest waiters a batcher must expose to
+    /// [`Self::select`]. FIFO never looks past one batch; shape-aware
+    /// looks `n_bins` batches ahead.
+    pub fn candidate_window(&self, max_batch: usize) -> usize {
+        match self {
+            FormationPolicy::FifoPrefix => max_batch,
+            FormationPolicy::ShapeAware { n_bins } => n_bins.max(1) * max_batch,
+        }
+    }
+
+    /// Pick the next batch from `waiting` (the `(m, n)` shapes of queued
+    /// requests, oldest first; callers pass at most
+    /// [`Self::candidate_window`] entries). Returns indices into
+    /// `waiting`, strictly ascending, always non-empty for non-empty
+    /// input, always containing index 0 (the oldest waiter — starvation
+    /// freedom), and never longer than `max_batch`.
+    pub fn select(&self, waiting: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        if waiting.is_empty() {
+            return Vec::new();
+        }
+        match self {
+            FormationPolicy::FifoPrefix => (0..waiting.len().min(max_batch)).collect(),
+            FormationPolicy::ShapeAware { n_bins } => {
+                let w = waiting.len().min(n_bins.max(1) * max_batch);
+                if w <= max_batch {
+                    // one group covers the whole window: nothing to regroup
+                    return (0..w).collect();
+                }
+                select_shape_aware(&waiting[..w], max_batch)
+            }
+        }
+    }
+
+    /// Straggler decode steps a batch of these members drags through:
+    /// `Σ (max_n − n_i)` — the decode steps short members idle inside the
+    /// batch while the longest member finishes.
+    pub fn straggler_steps(members: &[(u32, u32)]) -> u64 {
+        let Some(max_n) = members.iter().map(|&(_, n)| n).max() else { return 0 };
+        members.iter().map(|&(_, n)| (max_n - n) as u64).sum()
+    }
+}
+
+/// Drag-minimal consecutive partition over the n-ranked window; returns
+/// the group containing the oldest waiter, as ascending waiting-indices.
+fn select_shape_aware(window: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
+    let w = window.len();
+    let k = max_batch;
+    let groups = w.div_ceil(k);
+    // stable rank by (n, arrival): `order[r]` = waiting-index of rank r
+    let mut order: Vec<usize> = (0..w).collect();
+    order.sort_by_key(|&i| (window[i].1, i));
+    let n_at = |rank: usize| window[order[rank]].1 as u64;
+
+    // dp[g][i]: minimal total drag partitioning ranks [0, i) into g
+    // consecutive groups of size 1..=k. cut[g][i] = start rank of the
+    // last group in the optimum. Deterministic: sizes scanned in fixed
+    // order, strict `<` improvement.
+    const INF: u64 = u64::MAX;
+    let mut dp = vec![vec![INF; w + 1]; groups + 1];
+    let mut cut = vec![vec![0usize; w + 1]; groups + 1];
+    dp[0][0] = 0;
+    // prefix sums of ranked n for O(1) group drag
+    let mut prefix = vec![0u64; w + 1];
+    for r in 0..w {
+        prefix[r + 1] = prefix[r] + n_at(r);
+    }
+    for g in 1..=groups {
+        for i in 1..=w {
+            let mut best = INF;
+            let mut best_j = 0;
+            for s in 1..=k.min(i) {
+                let j = i - s;
+                if dp[g - 1][j] == INF {
+                    continue;
+                }
+                // group of ranks [j, i): max is the last rank (sorted)
+                let drag = s as u64 * n_at(i - 1) - (prefix[i] - prefix[j]);
+                let cost = dp[g - 1][j].saturating_add(drag);
+                if cost < best {
+                    best = cost;
+                    best_j = j;
+                }
+            }
+            dp[g][i] = best;
+            cut[g][i] = best_j;
+        }
+    }
+    debug_assert!(
+        dp[groups][w] != INF,
+        "window of {w} must partition into {groups} groups of <= {k}"
+    );
+
+    // walk the cuts back, keeping the group whose members include the
+    // oldest waiter (waiting-index 0)
+    let mut i = w;
+    for g in (1..=groups).rev() {
+        let j = cut[g][i];
+        let members: Vec<usize> = order[j..i].to_vec();
+        if members.contains(&0) {
+            let mut sel = members;
+            sel.sort_unstable();
+            return sel;
+        }
+        i = j;
+    }
+    unreachable!("the oldest waiter is in exactly one group");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes(ns: &[u32]) -> Vec<(u32, u32)> {
+        ns.iter().map(|&n| (32, n)).collect()
+    }
+
+    /// Drain a multiset through repeated selection, as the batchers do.
+    fn drain(policy: FormationPolicy, ns: &[u32], max_batch: usize) -> (u64, usize, Vec<Vec<u32>>) {
+        let mut waiting = shapes(ns);
+        let mut drag = 0u64;
+        let mut dispatches = 0usize;
+        let mut batches = Vec::new();
+        while !waiting.is_empty() {
+            let window = policy.candidate_window(max_batch).min(waiting.len());
+            let sel = policy.select(&waiting[..window], max_batch);
+            assert!(!sel.is_empty() && sel[0] == 0, "selection must include the oldest waiter");
+            assert!(sel.len() <= max_batch);
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "indices must ascend");
+            let members: Vec<(u32, u32)> = sel.iter().map(|&i| waiting[i]).collect();
+            drag += FormationPolicy::straggler_steps(&members);
+            batches.push(members.iter().map(|&(_, n)| n).collect());
+            dispatches += 1;
+            for &i in sel.iter().rev() {
+                waiting.remove(i);
+            }
+        }
+        (drag, dispatches, batches)
+    }
+
+    #[test]
+    fn fifo_prefix_is_the_identity_grouping() {
+        let p = FormationPolicy::FifoPrefix;
+        assert_eq!(p.select(&shapes(&[9, 1, 5]), 2), vec![0, 1]);
+        assert_eq!(p.select(&shapes(&[9]), 4), vec![0]);
+        let (_, dispatches, batches) = drain(p, &[4, 8, 15, 16, 23], 2);
+        assert_eq!(dispatches, 3);
+        assert_eq!(batches, vec![vec![4, 8], vec![15, 16], vec![23]]);
+    }
+
+    #[test]
+    fn shape_aware_groups_near_equal_n() {
+        let p = FormationPolicy::ShapeAware { n_bins: 8 };
+        // arrival order interleaves short and long generations
+        let (drag, dispatches, batches) = drain(p, &[8, 512, 8, 512], 2);
+        assert_eq!(drag, 0, "equal-n pairs exist: {batches:?}");
+        assert_eq!(dispatches, 2);
+        let (fifo_drag, fifo_dispatches, _) =
+            drain(FormationPolicy::FifoPrefix, &[8, 512, 8, 512], 2);
+        assert_eq!(fifo_drag, 2 * 504);
+        assert_eq!(dispatches, fifo_dispatches);
+    }
+
+    #[test]
+    fn shape_aware_never_exceeds_fifo_drag_or_dispatches() {
+        // deterministic pseudo-random multisets, incl. windows smaller
+        // than the waiting set and non-multiple-of-k tails
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..400 {
+            let n_members = 1 + (next() % 17) as usize;
+            let k = 1 + (next() % 5) as usize;
+            let n_bins = 1 + (next() % 4) as usize;
+            let ns: Vec<u32> = (0..n_members).map(|_| (next() % 600) as u32).collect();
+            let (fifo, fifo_b, _) = drain(FormationPolicy::FifoPrefix, &ns, k);
+            let (shape, shape_b, _) = drain(FormationPolicy::ShapeAware { n_bins }, &ns, k);
+            assert!(
+                shape <= fifo,
+                "shape drag {shape} > fifo {fifo} on ns={ns:?} k={k} bins={n_bins}"
+            );
+            assert_eq!(shape_b, fifo_b, "dispatch counts diverged on ns={ns:?} k={k}");
+        }
+    }
+
+    #[test]
+    fn one_bin_window_degenerates_to_fifo() {
+        let ns = [100u32, 3, 99, 4, 98, 5, 97];
+        for k in 1..=4 {
+            let (fd, fb, fbatches) = drain(FormationPolicy::FifoPrefix, &ns, k);
+            let (sd, sb, sbatches) = drain(FormationPolicy::ShapeAware { n_bins: 1 }, &ns, k);
+            assert_eq!((fd, fb), (sd, sb));
+            assert_eq!(fbatches, sbatches, "n_bins=1 must be FIFO at k={k}");
+        }
+    }
+
+    #[test]
+    fn max_batch_one_has_zero_drag_everywhere() {
+        for p in [FormationPolicy::FifoPrefix, FormationPolicy::ShapeAware { n_bins: 8 }] {
+            let (drag, dispatches, _) = drain(p, &[7, 300, 12, 9], 1);
+            assert_eq!(drag, 0);
+            assert_eq!(dispatches, 4);
+        }
+    }
+
+    #[test]
+    fn straggler_steps_accounting() {
+        assert_eq!(FormationPolicy::straggler_steps(&[]), 0);
+        assert_eq!(FormationPolicy::straggler_steps(&[(8, 64)]), 0);
+        assert_eq!(FormationPolicy::straggler_steps(&shapes(&[10, 30, 30])), 20 + 0 + 0);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(FormationPolicy::parse("fifo").unwrap(), FormationPolicy::FifoPrefix);
+        assert_eq!(
+            FormationPolicy::parse("shape").unwrap(),
+            FormationPolicy::ShapeAware { n_bins: DEFAULT_N_BINS }
+        );
+        assert_eq!(
+            FormationPolicy::parse("shape:3").unwrap(),
+            FormationPolicy::ShapeAware { n_bins: 3 }
+        );
+        assert_eq!(FormationPolicy::parse("shape-aware:5").unwrap().name(), "shape:5");
+        assert!(FormationPolicy::parse("shape:0").is_err());
+        assert!(FormationPolicy::parse("sorted").is_err());
+        for p in [FormationPolicy::FifoPrefix, FormationPolicy::ShapeAware { n_bins: 4 }] {
+            assert_eq!(FormationPolicy::parse(&p.name()).unwrap(), p);
+        }
+    }
+}

@@ -6,11 +6,13 @@ pub mod adaptive;
 pub mod baselines;
 pub mod carbon;
 pub mod cost;
+pub mod formation;
 pub mod oracle;
 pub mod policy;
 pub mod threshold;
 
 pub use cost::CostPolicy;
+pub use formation::FormationPolicy;
 pub use oracle::oracle_assign;
 pub use policy::{build_policy, ClusterView, Policy};
 pub use threshold::ThresholdPolicy;

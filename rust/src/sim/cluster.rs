@@ -91,7 +91,7 @@ impl NodeState {
             .node_free_at
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .expect("system has nodes");
         let start = t.max(free_at);
         let finish = start + dur;
@@ -114,7 +114,7 @@ impl NodeState {
             .node_free_at
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .expect("system has nodes");
         let start = t.max(free_at);
         self.node_free_at[idx] = start + dur;

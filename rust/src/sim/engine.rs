@@ -10,11 +10,15 @@
 //!   — both `queue_depth_s` and `queue_len` drain as work completes.
 //! - **batched online** ([`SimOptions::batching`]): the virtual-time
 //!   mirror of the serving coordinator's dynamic batcher
-//!   (`coordinator::batcher::SystemQueue::take_batch`). Routed queries
-//!   queue per system; a batch dispatches the moment `max_batch` members
-//!   are waiting, or after lingering `linger_s` from when a node could
-//!   first take the batch. Batch costs follow the batched `R`/`E`
-//!   extension (Wilkins et al., arXiv 2407.04014) via
+//!   (`coordinator::batcher::SystemQueue::take_batch_with`). Routed
+//!   queries queue per system; a batch becomes due the moment
+//!   `max_batch` members are waiting, or after lingering `linger_s`
+//!   from when a node could first take the batch — and when the shared
+//!   [`crate::sched::formation::FormationPolicy`] looks past one batch,
+//!   its *membership* is decided at hand-off (when a node is free to
+//!   take it), exactly as workers calling `take_batch` do. Batch costs
+//!   follow the batched
+//!   `R`/`E` extension (Wilkins et al., arXiv 2407.04014) via
 //!   [`crate::perf::model::PerfModel::batch_cost`]. With `max_batch = 1`
 //!   this mode is bit-identical to plain online simulation (pinned by
 //!   property tests).
@@ -38,12 +42,14 @@ use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
+use crate::sched::formation::FormationPolicy;
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::Query;
 use std::collections::VecDeque;
 
 /// Dynamic-batching knobs for the simulator — the virtual-time analogue
-/// of the coordinator's `(max_batch, max_wait)` pair.
+/// of the coordinator's `(max_batch, max_wait)` pair, plus the shared
+/// batch-formation policy ([`crate::sched::formation`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BatchingOptions {
     /// dispatch as soon as this many queries are waiting (≥ 1)
@@ -51,6 +57,21 @@ pub struct BatchingOptions {
     /// how long a partial batch lingers for stragglers before
     /// dispatching, counted from the instant a node could first take it
     pub linger_s: f64,
+    /// which waiting requests form each batch — FIFO prefixes, or
+    /// shape-aware grouping of near-equal output lengths
+    pub formation: FormationPolicy,
+}
+
+impl BatchingOptions {
+    /// FIFO-prefix batching with the given knobs (the PR-2 behavior).
+    pub fn new(max_batch: usize, linger_s: f64) -> Self {
+        Self { max_batch, linger_s, formation: FormationPolicy::FifoPrefix }
+    }
+
+    pub fn with_formation(mut self, formation: FormationPolicy) -> Self {
+        self.formation = formation;
+        self
+    }
 }
 
 /// Engine knobs.
@@ -232,7 +253,7 @@ pub fn simulate_with_table(
         let (start, finish) = node.schedule(q.arrival_s, service);
         node.energy_j += e_j;
         serial_energy_j += e_j;
-        batches[sid.0].record(1, systems[sid.0].dispatch_energy_j());
+        batches[sid.0].record(1, systems[sid.0].dispatch_energy_j(), 0);
         outcomes.push(QueryOutcome {
             query_id: q.id,
             system: sid.0,
@@ -251,10 +272,20 @@ pub fn simulate_with_table(
 /// `SystemQueue::take_batch` in virtual time, per system class:
 ///
 /// - a routed query joins its system's FIFO;
-/// - the queue's batch *completes* the instant `max_batch` members are
-///   waiting (dispatching at the filling member's arrival), or —
-///   when arrivals are too sparse to fill it — `linger_s` after the
-///   first member could have started on a node;
+/// - the queue's batch becomes *due* the instant `max_batch` members are
+///   waiting (at the filling member's arrival), or — when arrivals are
+///   too sparse to fill it — `linger_s` after the first member could
+///   have started on a node; when the formation policy looks past one
+///   batch (shape-aware, `n_bins > 1`), a full batch *forms* at
+///   hand-off, once a node is free to take it — that lets a backlog
+///   accumulate for regrouping, as real workers see, without moving the
+///   batch start (already `max(arrival, free)`); window-less formation
+///   keeps the eager dispatch instant;
+/// - **which** waiters form the batch is decided by
+///   [`BatchingOptions::formation`] — the FIFO prefix, or shape-aware
+///   grouping of near-equal output lengths over a lookahead window
+///   (the same [`crate::sched::formation`] implementation the
+///   coordinator's `take_batch_with` uses);
 /// - a completed batch reserves the earliest-free node: one dispatch
 ///   overhead for the whole batch, per-member finish instants from
 ///   [`crate::perf::model::BatchCost`];
@@ -294,11 +325,26 @@ pub fn simulate_batched_with_tables(
 
     let mut cluster = ClusterState::new(systems);
     let mut pending: Vec<VecDeque<usize>> = (0..systems.len()).map(|_| VecDeque::new()).collect();
-    let mut outcomes: Vec<QueryOutcome> = Vec::with_capacity(queries.len());
+    // (trace index, outcome): dispatches interleave across systems in
+    // `ready` order, so outcomes are re-sorted to trace order at the end
+    // to stay comparable with the serial engine's reports
+    let mut outcomes: Vec<(usize, QueryOutcome)> = Vec::with_capacity(queries.len());
     let mut batches: Vec<BatchStats> = vec![BatchStats::default(); systems.len()];
-    let mut serial_energy_j = 0.0f64;
     let mut rerouted = 0u64;
     let mut next = 0usize;
+
+    // When the formation policy looks past one batch (shape-aware with
+    // n_bins > 1), full-batch *membership* is decided at hand-off — when
+    // a node can actually take the batch — exactly as the coordinator's
+    // workers call take_batch when they free up. Gating on
+    // `earliest_free` is what lets a backlog accumulate for the
+    // lookahead window to regroup, and it does not move the batch start
+    // (which was `max(arrival, free)` already). Window-less formation
+    // (FIFO, or any policy at max_batch = 1) keeps the eager PR-2
+    // dispatch instant, preserving the serial engine's exact float
+    // arithmetic for the max_batch = 1 bit-identity property.
+    let hand_off_gated = bopts.max_batch > 1
+        && bopts.formation.candidate_window(bopts.max_batch) > bopts.max_batch;
 
     loop {
         let next_arrival = queries.get(next).map_or(f64::INFINITY, |q| q.arrival_s);
@@ -309,8 +355,15 @@ pub fn simulate_batched_with_tables(
         for (s, pq) in pending.iter().enumerate() {
             let Some(&front) = pq.front() else { continue };
             let ready = if pq.len() >= bopts.max_batch {
-                // full: complete the instant the filling member arrived
-                queries[pq[bopts.max_batch - 1]].arrival_s
+                // full: due the instant the filling member arrived
+                // (membership additionally waits for a free node when
+                // the formation window needs a backlog — see above)
+                let filling = queries[pq[bopts.max_batch - 1]].arrival_s;
+                if hand_off_gated {
+                    cluster.nodes[s].earliest_free().max(filling)
+                } else {
+                    filling
+                }
             } else {
                 // partial: linger from when a node could first take it
                 cluster.nodes[s].earliest_free().max(queries[front].arrival_s) + bopts.linger_s
@@ -324,18 +377,25 @@ pub fn simulate_batched_with_tables(
             // dispatch everything due before the next arrival; an
             // arrival exactly at the deadline misses the batch
             if ready <= next_arrival {
-                let want = bopts.max_batch.min(pending[s].len());
-                let mut members: Vec<usize> = pending[s].iter().take(want).copied().collect();
-                let pairs: Vec<(u32, u32)> = members
+                // batch formation over the lookahead window (FIFO prefix,
+                // or shape-aware grouping of near-equal n — one shared
+                // implementation with the coordinator's take_batch)
+                let window =
+                    bopts.formation.candidate_window(bopts.max_batch).min(pending[s].len());
+                let cand: Vec<usize> = pending[s].iter().take(window).copied().collect();
+                let shapes: Vec<(u32, u32)> = cand
                     .iter()
                     .map(|&qi| (queries[qi].input_tokens, queries[qi].output_tokens))
                     .collect();
-                // joint-KV feasibility: trim to the longest prefix that
-                // fits; the tail stays queued for the next dispatch
+                let sel = bopts.formation.select(&shapes, bopts.max_batch);
+                let pairs: Vec<(u32, u32)> = sel.iter().map(|&i| shapes[i]).collect();
+                // joint-KV feasibility: trim to the longest prefix of the
+                // selection that fits; the tail stays queued for the next
+                // dispatch
                 let take = batch_table.feasible_prefix(s, &pairs);
-                members.truncate(take);
-                for _ in 0..take {
-                    pending[s].pop_front();
+                let members: Vec<usize> = sel[..take].iter().map(|&i| cand[i]).collect();
+                for &i in sel[..take].iter().rev() {
+                    pending[s].remove(i);
                 }
                 let pairs = &pairs[..take];
                 let cost = batch_table.cost(s, pairs);
@@ -345,7 +405,11 @@ pub fn simulate_batched_with_tables(
                 let (start, finishes) =
                     node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s);
                 node.energy_j += e_batch;
-                batches[s].record(take, systems[s].dispatch_energy_j());
+                batches[s].record(
+                    take,
+                    systems[s].dispatch_energy_j(),
+                    FormationPolicy::straggler_steps(pairs),
+                );
                 let batch_tokens: f64 =
                     pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
                 for (k, &qi) in members.iter().enumerate() {
@@ -353,16 +417,18 @@ pub fn simulate_batched_with_tables(
                     // attribute batch energy by token share (a singleton
                     // gets exactly the full batch energy)
                     let share = (pairs[k].0 + pairs[k].1) as f64 / batch_tokens;
-                    serial_energy_j += table.energy_j(qi, s);
-                    outcomes.push(QueryOutcome {
-                        query_id: q.id,
-                        system: s,
-                        arrival_s: q.arrival_s,
-                        start_s: start,
-                        finish_s: finishes[k],
-                        service_s: cost.member_finish_s[k],
-                        energy_j: e_batch * share,
-                    });
+                    outcomes.push((
+                        qi,
+                        QueryOutcome {
+                            query_id: q.id,
+                            system: s,
+                            arrival_s: q.arrival_s,
+                            start_s: start,
+                            finish_s: finishes[k],
+                            service_s: cost.member_finish_s[k],
+                            energy_j: e_batch * share,
+                        },
+                    ));
                 }
                 continue;
             }
@@ -386,6 +452,14 @@ pub fn simulate_batched_with_tables(
         next += 1;
     }
 
+    outcomes.sort_unstable_by_key(|&(qi, _)| qi);
+    // serial-equivalent energy summed in trace order — the same float
+    // accumulation order the serial engine uses, so `max_batch = 1`
+    // stays bit-identical even though dispatches interleave across
+    // systems in `ready` order
+    let serial_energy_j: f64 =
+        outcomes.iter().map(|&(qi, ref o)| table.energy_j(qi, o.system)).sum();
+    let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();
     finalize_report(policy.name(), &cluster, outcomes, opts, rerouted, batches, serial_energy_j)
 }
 
@@ -636,7 +710,7 @@ mod tests {
             p.as_mut(),
             &em,
             &SimOptions {
-                batching: Some(BatchingOptions { max_batch: 4, linger_s: 0.1 }),
+                batching: Some(BatchingOptions::new(4, 0.1)),
                 ..Default::default()
             },
         );
@@ -692,7 +766,7 @@ mod tests {
             p_batched.as_mut(),
             &em,
             &SimOptions {
-                batching: Some(BatchingOptions { max_batch: 8, linger_s: 0.25 }),
+                batching: Some(BatchingOptions::new(8, 0.25)),
                 ..Default::default()
             },
         );
@@ -738,7 +812,7 @@ mod tests {
                 p.as_mut(),
                 &em,
                 &SimOptions {
-                    batching: Some(BatchingOptions { max_batch: 8, linger_s }),
+                    batching: Some(BatchingOptions::new(8, linger_s)),
                     ..Default::default()
                 },
             )

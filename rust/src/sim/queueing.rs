@@ -124,7 +124,7 @@ mod tests {
             .into_iter()
             .map(|q| Query { input_tokens: 32, output_tokens: 32, ..q })
             .collect();
-        queries.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+        queries.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let mut p = build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
         let rep = simulate(&queries, &systems, p.as_mut(), &em, &SimOptions::default());
         let sim_wq: f64 =

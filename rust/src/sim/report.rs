@@ -45,16 +45,22 @@ pub struct BatchStats {
     /// energy burned in dispatch-overhead phases (J) — the component
     /// batching amortizes
     pub dispatch_energy_j: f64,
+    /// straggler drag: Σ over batches of Σ members `max(n) − n_member` —
+    /// decode steps short members idled inside batches while the longest
+    /// member finished. 0 in serial mode (every batch is a singleton);
+    /// the number shape-aware formation exists to shrink.
+    pub straggler_decode_steps: u64,
 }
 
 impl BatchStats {
-    pub fn record(&mut self, size: usize, dispatch_energy_j: f64) {
+    pub fn record(&mut self, size: usize, dispatch_energy_j: f64, straggler_steps: u64) {
         self.dispatches += 1;
         if self.size_hist.len() < size {
             self.size_hist.resize(size, 0);
         }
         self.size_hist[size - 1] += 1;
         self.dispatch_energy_j += dispatch_energy_j;
+        self.straggler_decode_steps += straggler_steps;
     }
 
     /// queries served through this system's dispatches
@@ -143,6 +149,11 @@ impl SimReport {
         self.batches.iter().map(|b| b.dispatches).sum()
     }
 
+    /// total straggler decode steps across systems (0 in serial mode)
+    pub fn total_straggler_steps(&self) -> u64 {
+        self.batches.iter().map(|b| b.straggler_decode_steps).sum()
+    }
+
     /// mean batch size across all dispatches (1.0 in serial mode)
     pub fn mean_batch_size(&self) -> f64 {
         let d = self.total_dispatches();
@@ -209,13 +220,14 @@ mod tests {
     #[test]
     fn batch_stats_histogram_and_means() {
         let mut b = BatchStats::default();
-        b.record(1, 2.0);
-        b.record(4, 2.0);
-        b.record(4, 2.0);
+        b.record(1, 2.0, 0);
+        b.record(4, 2.0, 7);
+        b.record(4, 2.0, 5);
         assert_eq!(b.dispatches, 3);
         assert_eq!(b.size_hist, vec![1, 0, 0, 2]);
         assert_eq!(b.queries(), 9);
         assert!((b.mean_size() - 3.0).abs() < 1e-12);
         assert!((b.dispatch_energy_j - 6.0).abs() < 1e-12);
+        assert_eq!(b.straggler_decode_steps, 12);
     }
 }

@@ -257,7 +257,7 @@ mod tests {
         let mu = 3.0f64;
         let n = 100_000;
         let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(mu, 0.8)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let med = xs[n / 2];
         // median of lognormal = e^mu
         assert!((med.ln() - mu).abs() < 0.03, "median={med}");

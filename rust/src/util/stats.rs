@@ -80,11 +80,18 @@ impl Welford {
 }
 
 /// Percentile over a sorted copy (exact, fine for post-hoc reporting).
+///
+/// NaN-safe: `total_cmp` orders NaNs after every real value instead of
+/// panicking mid-sort, so a single poisoned sample (a degenerate 0-token
+/// query, a bad calibration entry) degrades the top percentiles to NaN
+/// rather than killing the whole report. (The seed sorted with
+/// `partial_cmp(..).unwrap()`, which panics on the first NaN
+/// comparison.)
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     assert!((0.0..=100.0).contains(&p));
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -277,6 +284,25 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+    }
+
+    /// Satellite regression: a single NaN latency (degenerate 0-token
+    /// query, bad calibration entry) used to panic the whole report via
+    /// `partial_cmp(..).unwrap()` mid-sort. Now NaNs sort after every
+    /// real value: low/mid percentiles stay exact and only the top
+    /// percentiles degrade to NaN.
+    #[test]
+    fn percentile_survives_nan_samples() {
+        let mut xs: Vec<f64> = (1..=99).map(|i| i as f64).collect();
+        xs.push(f64::NAN);
+        // must not panic, and the NaN lands at the top of the order
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // an all-NaN slice degrades fully instead of panicking
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
+        // median/mad ride on percentile and must survive too
+        assert!(!median(&xs).is_nan());
     }
 
     #[test]

@@ -103,7 +103,8 @@ pub struct DistSummary {
 pub fn summarize(tokens: impl Iterator<Item = u32>) -> DistSummary {
     let mut v: Vec<f64> = tokens.map(|t| t as f64).collect();
     assert!(!v.is_empty());
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a poisoned sample must not panic the whole summary
+    v.sort_by(f64::total_cmp);
     DistSummary {
         median: crate::util::stats::percentile(&v, 50.0),
         mean: crate::util::stats::mean(&v),

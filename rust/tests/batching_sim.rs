@@ -47,7 +47,7 @@ fn max_batch_one_reproduces_serial_engine_on_alpaca_trace() {
         p2.as_mut(),
         &em,
         &SimOptions {
-            batching: Some(BatchingOptions { max_batch: 1, linger_s: 0.2 }),
+            batching: Some(BatchingOptions::new(1, 0.2)),
             ..Default::default()
         },
     );
@@ -119,7 +119,7 @@ fn batched_report_carries_per_system_histograms() {
         p.as_mut(),
         &em,
         &SimOptions {
-            batching: Some(BatchingOptions { max_batch: 8, linger_s: 0.25 }),
+            batching: Some(BatchingOptions::new(8, 0.25)),
             ..Default::default()
         },
     );
@@ -144,7 +144,7 @@ fn shared_tables_across_grid_points_are_deterministic() {
     let shared = BatchTable::new(em.clone(), &systems);
     let cfg = PolicyConfig::Cost { lambda: 1.0 };
     let opts = SimOptions {
-        batching: Some(BatchingOptions { max_batch: 4, linger_s: 0.1 }),
+        batching: Some(BatchingOptions::new(4, 0.1)),
         ..Default::default()
     };
     // first run populates the memo; the replay must hit it and agree

@@ -1,0 +1,398 @@
+//! End-to-end acceptance tests for shape-aware batch formation
+//! (ISSUE 3): the coordinator's `take_batch_with` and the batched sim
+//! engine drive the *same* `sched::formation` implementation (verified
+//! against a reference drain over the same request sequence), the
+//! batched engine's dispatch-boundary semantics are pinned (an arrival
+//! exactly at a linger deadline misses the batch; a feasibility-trimmed
+//! tail re-lingers from the post-dispatch node availability), and the
+//! quantile-bucketed `BatchTable` turns repeated compositions into real
+//! cache hits.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::coordinator::batcher::SystemQueue;
+use hetsched::coordinator::request::Request;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::llm_catalog;
+use hetsched::perf::cost_table::{BatchTable, BucketSpec, CostTable};
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::formation::FormationPolicy;
+use hetsched::sched::policy::build_policy;
+use hetsched::sim::engine::{simulate, simulate_batched_with_tables, BatchingOptions, SimOptions};
+use hetsched::sim::report::SimReport;
+use hetsched::workload::Query;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+fn energy_model() -> EnergyModel {
+    EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+}
+
+/// The interleaved short/long generations that make FIFO batching drag:
+/// `(m, n)` shapes in arrival order.
+fn zigzag_shapes() -> Vec<(u32, u32)> {
+    vec![
+        (32, 8),
+        (32, 500),
+        (48, 12),
+        (40, 480),
+        (32, 16),
+        (64, 460),
+        (32, 10),
+        (32, 490),
+        (56, 20),
+        (32, 470),
+        (32, 14),
+        (48, 440),
+    ]
+}
+
+/// Reference drain mirroring how both batchers consume the shared
+/// formation implementation in the overload scenario below: the first
+/// `max_batch` requests are all that's waiting at the first hand-off;
+/// after that the full backlog is visible. Returns batch compositions in
+/// dispatch order (members in arrival order).
+fn reference_batches(
+    shapes: &[(u32, u32)],
+    formation: FormationPolicy,
+    max_batch: usize,
+) -> Vec<Vec<(u32, u32)>> {
+    let mut batches = Vec::new();
+    let mut waiting: Vec<(u32, u32)> = shapes[..max_batch.min(shapes.len())].to_vec();
+    let first = formation.select(&waiting, max_batch);
+    batches.push(first.iter().map(|&i| waiting[i]).collect());
+    for &i in first.iter().rev() {
+        waiting.remove(i);
+    }
+    waiting.extend_from_slice(&shapes[max_batch.min(shapes.len())..]);
+    while !waiting.is_empty() {
+        let window = formation.candidate_window(max_batch).min(waiting.len());
+        let sel = formation.select(&waiting[..window], max_batch);
+        batches.push(sel.iter().map(|&i| waiting[i]).collect());
+        for &i in sel.iter().rev() {
+            waiting.remove(i);
+        }
+    }
+    batches
+}
+
+type ResponseRx = mpsc::Receiver<hetsched::coordinator::request::Response>;
+
+fn request(id: u64, m: u32, n: u32) -> (Request, ResponseRx) {
+    let (tx, rx) = mpsc::channel();
+    (
+        Request {
+            id,
+            prompt: vec![0; m as usize],
+            gen_tokens: n,
+            submitted: Instant::now(),
+            respond: tx,
+        },
+        rx,
+    )
+}
+
+/// Drive the serving-path batcher through the same sequence: the first
+/// `max_batch` requests are queued when the worker first takes a batch,
+/// the rest are queued while it is "busy", then everything drains.
+fn coordinator_batches(
+    shapes: &[(u32, u32)],
+    formation: FormationPolicy,
+    max_batch: usize,
+) -> Vec<Vec<(u32, u32)>> {
+    let q = SystemQueue::new(1024);
+    let mut keep = Vec::new();
+    for (i, &(m, n)) in shapes.iter().take(max_batch).enumerate() {
+        let (r, rx) = request(i as u64, m, n);
+        q.push(r).map_err(|_| ()).unwrap();
+        keep.push(rx);
+    }
+    let mut batches = Vec::new();
+    let first = q.take_batch_with(formation, max_batch, Duration::from_millis(1));
+    batches.push(first.iter().map(|r| (r.input_tokens(), r.gen_tokens)).collect());
+    for (i, &(m, n)) in shapes.iter().enumerate().skip(max_batch) {
+        let (r, rx) = request(i as u64, m, n);
+        q.push(r).map_err(|_| ()).unwrap();
+        keep.push(rx);
+    }
+    q.close();
+    loop {
+        let b = q.take_batch_with(formation, max_batch, Duration::from_secs(60));
+        if b.is_empty() {
+            break;
+        }
+        batches.push(b.iter().map(|r| (r.input_tokens(), r.gen_tokens)).collect());
+    }
+    batches
+}
+
+/// Run the batched sim on the same shapes (near-simultaneous arrivals,
+/// one saturated A100) and recover batch compositions by grouping
+/// outcomes that share a dispatch start instant.
+fn sim_batches(
+    shapes: &[(u32, u32)],
+    formation: FormationPolicy,
+    max_batch: usize,
+) -> Vec<Vec<(u32, u32)>> {
+    let systems = system_catalog();
+    let em = energy_model();
+    let queries: Vec<Query> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n))| Query {
+            id: i as u64,
+            arrival_s: i as f64 * 1e-4,
+            input_tokens: m,
+            output_tokens: n,
+        })
+        .collect();
+    let mut p = build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
+    let rep = simulate(
+        &queries,
+        &systems,
+        p.as_mut(),
+        &em,
+        &SimOptions {
+            batching: Some(BatchingOptions::new(max_batch, 0.01).with_formation(formation)),
+            ..Default::default()
+        },
+    );
+    group_by_dispatch(&rep, &queries)
+}
+
+/// Group a batched report's outcomes into dispatches: members of one
+/// batch share the exact start instant (a single node serializes
+/// batches, so distinct dispatches have distinct starts). Batches come
+/// back in start order, members in arrival order.
+fn group_by_dispatch(rep: &SimReport, queries: &[Query]) -> Vec<Vec<(u32, u32)>> {
+    let mut tagged: Vec<(u64, u64, (u32, u32))> = rep
+        .outcomes
+        .iter()
+        .map(|o| {
+            let q = queries.iter().find(|q| q.id == o.query_id).unwrap();
+            (o.start_s.to_bits(), q.id, (q.input_tokens, q.output_tokens))
+        })
+        .collect();
+    tagged.sort_unstable();
+    let mut batches: Vec<Vec<(u32, u32)>> = Vec::new();
+    let mut last_start = None;
+    for (start_bits, _, shape) in tagged {
+        if last_start != Some(start_bits) {
+            batches.push(Vec::new());
+            last_start = Some(start_bits);
+        }
+        batches.last_mut().unwrap().push(shape);
+    }
+    batches
+}
+
+/// Acceptance: coordinator and sim share one formation implementation —
+/// driven through the same request sequence, both reproduce the
+/// reference drain's batch compositions exactly, for FIFO and
+/// shape-aware alike.
+#[test]
+fn coordinator_and_sim_form_identical_batches() {
+    let shapes = zigzag_shapes();
+    let max_batch = 4;
+    for formation in [
+        FormationPolicy::FifoPrefix,
+        FormationPolicy::ShapeAware { n_bins: 8 },
+        FormationPolicy::ShapeAware { n_bins: 1 },
+    ] {
+        let want = reference_batches(&shapes, formation, max_batch);
+        let coord = coordinator_batches(&shapes, formation, max_batch);
+        assert_eq!(coord, want, "coordinator diverged from shared formation ({formation:?})");
+        let sim = sim_batches(&shapes, formation, max_batch);
+        assert_eq!(sim, want, "sim diverged from shared formation ({formation:?})");
+    }
+    // and the scenario actually exercises regrouping: shape-aware must
+    // differ from FIFO somewhere
+    assert_ne!(
+        reference_batches(&shapes, FormationPolicy::ShapeAware { n_bins: 8 }, max_batch),
+        reference_batches(&shapes, FormationPolicy::FifoPrefix, max_batch),
+        "zigzag trace must force a non-FIFO grouping"
+    );
+}
+
+/// Shape-aware formation cuts the report's straggler-drag accounting on
+/// the same trace, never below zero, and conserves energy.
+#[test]
+fn shape_aware_report_shows_less_drag_than_fifo() {
+    let shapes = zigzag_shapes();
+    let fifo = sim_report(&shapes, FormationPolicy::FifoPrefix);
+    let shape = sim_report(&shapes, FormationPolicy::ShapeAware { n_bins: 8 });
+    assert!(fifo.total_straggler_steps() > 0, "zigzag FIFO batches must drag");
+    assert!(shape.total_straggler_steps() < fifo.total_straggler_steps());
+    assert!(shape.energy_conserved() && fifo.energy_conserved());
+    assert_eq!(shape.outcomes.len(), shapes.len());
+    assert!(shape.total_energy_j < fifo.total_energy_j, "less drag must cost less energy");
+}
+
+fn sim_report(shapes: &[(u32, u32)], formation: FormationPolicy) -> SimReport {
+    let systems = system_catalog();
+    let em = energy_model();
+    let queries: Vec<Query> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n))| Query {
+            id: i as u64,
+            arrival_s: i as f64 * 1e-4,
+            input_tokens: m,
+            output_tokens: n,
+        })
+        .collect();
+    let mut p = build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
+    simulate(
+        &queries,
+        &systems,
+        p.as_mut(),
+        &em,
+        &SimOptions {
+            batching: Some(BatchingOptions::new(4, 0.01).with_formation(formation)),
+            ..Default::default()
+        },
+    )
+}
+
+/// Dispatch-boundary pin #1: an arrival landing *exactly* at a linger
+/// deadline misses the batch (doc-comment-only behavior until now).
+#[test]
+fn arrival_exactly_at_linger_deadline_misses_the_batch() {
+    let systems = system_catalog();
+    let em = energy_model();
+    let linger = 0.5f64;
+    let mut q0 = Query::new(0, 64, 64);
+    q0.arrival_s = 0.0;
+    let mut q1 = Query::new(1, 64, 64);
+    q1.arrival_s = linger; // exactly the first batch's linger deadline
+    let run = |queries: &[Query]| {
+        let mut p =
+            build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
+        simulate(
+            queries,
+            &systems,
+            p.as_mut(),
+            &em,
+            &SimOptions {
+                batching: Some(BatchingOptions::new(4, linger)),
+                ..Default::default()
+            },
+        )
+    };
+    let rep = run(&[q0, q1]);
+    assert_eq!(rep.total_dispatches(), 2, "the boundary arrival must miss the first batch");
+    let o0 = &rep.outcomes[0];
+    let o1 = &rep.outcomes[1];
+    assert!((o0.start_s - linger).abs() < 1e-12, "first batch lingers the full window");
+    // the second query re-lingers from the post-dispatch availability
+    let expect = o0.finish_s.max(q1.arrival_s) + linger;
+    assert!(
+        (o1.start_s - expect).abs() < 1e-9,
+        "boundary arrival must start its own batch at {expect}, got {}",
+        o1.start_s
+    );
+
+    // contrast: a hair earlier and it joins the first batch
+    let mut q1_early = q1;
+    q1_early.arrival_s = linger - 1e-3;
+    let rep = run(&[q0, q1_early]);
+    assert_eq!(rep.total_dispatches(), 1, "an arrival inside the window joins the batch");
+    assert_eq!(rep.mean_batch_size(), 2.0);
+}
+
+/// Dispatch-boundary pin #2: a feasibility-trimmed tail is not
+/// dispatched immediately — it re-lingers from the post-dispatch
+/// `earliest_free` (doc-comment-only behavior until now).
+#[test]
+fn feasibility_trimmed_tail_relingers_from_post_dispatch_availability() {
+    let systems = system_catalog();
+    let em = energy_model();
+    let linger = 0.25f64;
+    // (32, 1024) fits the 16 GB V100 alone but four KV caches cannot
+    // coexist — the batch must trim and leave a tail queued
+    let queries: Vec<Query> = (0..4u64).map(|id| Query::new(id, 32, 1024)).collect();
+    let mut p = build_policy(&PolicyConfig::AllOn("Palmetto-V100".into()), em.clone(), &systems);
+    let rep = simulate(
+        &queries,
+        &systems,
+        p.as_mut(),
+        &em,
+        &SimOptions {
+            batching: Some(BatchingOptions::new(4, linger)),
+            ..Default::default()
+        },
+    );
+    assert_eq!(rep.outcomes.len(), 4, "trimmed tail must still be served");
+    assert!(rep.total_dispatches() >= 2, "joint OOM must split the batch");
+    // first dispatch starts immediately (full batch due at t = 0)
+    let first_start = rep.outcomes.iter().map(|o| o.start_s).fold(f64::INFINITY, f64::min);
+    assert_eq!(first_start, 0.0);
+    let first_free = rep
+        .outcomes
+        .iter()
+        .filter(|o| o.start_s == first_start)
+        .map(|o| o.finish_s)
+        .fold(0.0, f64::max);
+    // the tail's dispatch re-lingers from when the node frees up — not
+    // at t = 0, and not at the node-free instant either
+    let second_start = rep
+        .outcomes
+        .iter()
+        .map(|o| o.start_s)
+        .filter(|&s| s > first_start)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        (second_start - (first_free + linger)).abs() < 1e-9,
+        "tail must re-linger from post-dispatch availability: {second_start} vs {} + {linger}",
+        first_free
+    );
+}
+
+/// Acceptance: on a repeated-composition trace the bucketed BatchTable's
+/// hit rate is > 0 (exact keys would hit too, but the bucketed table is
+/// what the formation sweep ships with).
+#[test]
+fn bucketed_batch_table_hits_on_repeated_composition_trace() {
+    let systems = system_catalog();
+    let em = energy_model();
+    // the same four compositions cycling — every dispatch after the
+    // first pass of each shape is a bucket hit
+    let base = [(32u32, 64u32), (33, 65), (128, 200), (129, 201)];
+    let queries: Vec<Query> = (0..200u64)
+        .map(|id| {
+            let (m, n) = base[(id % 4) as usize];
+            let mut q = Query::new(id, m, n);
+            q.arrival_s = id as f64 * 0.01;
+            q
+        })
+        .collect();
+    let table = CostTable::build(&queries, &systems, &em);
+    // 2 bins per axis: (32, 64) and (33, 65) share a bucket, as do
+    // (128, 200) and (129, 201) — distinct exact compositions collapse
+    let buckets = BucketSpec::from_trace(&queries, 2);
+    let batch_table = BatchTable::bucketed(em.clone(), &systems, buckets);
+    let mut p = build_policy(&PolicyConfig::AllOn("Swing-A100".into()), em.clone(), &systems);
+    let opts = SimOptions {
+        batching: Some(
+            BatchingOptions::new(4, 0.05)
+                .with_formation(FormationPolicy::ShapeAware { n_bins: 4 }),
+        ),
+        ..Default::default()
+    };
+    let rep =
+        simulate_batched_with_tables(&queries, &systems, p.as_mut(), &table, &batch_table, &opts);
+    assert_eq!(rep.outcomes.len(), queries.len());
+    assert!(batch_table.lookups() > 0);
+    assert!(
+        batch_table.hit_rate() > 0.0,
+        "repeated compositions must hit the bucketed memo (rate {})",
+        batch_table.hit_rate()
+    );
+    assert!(
+        (batch_table.evaluations() as u64) < rep.total_dispatches(),
+        "bucketing must evaluate fewer cells than dispatches ({} vs {})",
+        batch_table.evaluations(),
+        rep.total_dispatches()
+    );
+    assert!(rep.energy_conserved());
+}

@@ -9,6 +9,7 @@ use hetsched::model::llm_catalog;
 use hetsched::perf::energy::{Attribution, EnergyModel};
 use hetsched::perf::model::{Feasibility, PerfModel};
 use hetsched::sched::cost::CostPolicy;
+use hetsched::sched::formation::FormationPolicy;
 use hetsched::sched::policy::Policy as _;
 use hetsched::sched::policy::{build_policy, ClusterView};
 use hetsched::sim::engine::{simulate, BatchingOptions, SimOptions};
@@ -81,11 +82,12 @@ fn prop_energy_conservation_and_time_sanity() {
     });
 }
 
-/// ISSUE 2 satellite: batched simulation with `max_batch = 1` is
-/// bit-identical to the serial online engine, across policies, arrival
-/// rates, lingers, and seeds. A singleton batch takes the exact
-/// query-cost code path and dispatches at its arrival instant, so every
-/// outcome field — routing, timing, energy — must match to the last bit.
+/// ISSUE 2 satellite (extended by ISSUE 3): batched simulation with
+/// `max_batch = 1` is bit-identical to the serial online engine, across
+/// policies, arrival rates, lingers, seeds, **and formation policies** —
+/// singleton batches leave formation nothing to decide, so FIFO and
+/// shape-aware must both take the exact query-cost code path and dispatch
+/// at the arrival instant; every outcome field must match to the last bit.
 #[test]
 fn prop_batched_max_batch_one_is_bit_identical_to_serial() {
     let systems = system_catalog();
@@ -94,6 +96,11 @@ fn prop_batched_max_batch_one_is_bit_identical_to_serial() {
         let n = g.usize_in(5..150);
         let rate = g.f64_in(0.5, 60.0);
         let trace_seed = g.rng.next_u64();
+        let formation = match g.u32_in(0..3) {
+            0 => FormationPolicy::FifoPrefix,
+            1 => FormationPolicy::ShapeAware { n_bins: 1 },
+            _ => FormationPolicy::ShapeAware { n_bins: g.usize_in(2..16) },
+        };
         let queries = TraceGenerator::new(Arrival::Poisson { rate }, trace_seed).generate(n);
         let cfg = match g.u32_in(0..6) {
             0 => PolicyConfig::Threshold {
@@ -117,7 +124,9 @@ fn prop_batched_max_batch_one_is_bit_identical_to_serial() {
             p2.as_mut(),
             &em,
             &SimOptions {
-                batching: Some(BatchingOptions { max_batch: 1, linger_s: g.f64_in(0.0, 1.0) }),
+                batching: Some(
+                    BatchingOptions::new(1, g.f64_in(0.0, 1.0)).with_formation(formation),
+                ),
                 ..Default::default()
             },
         );
@@ -150,6 +159,62 @@ fn prop_batched_max_batch_one_is_bit_identical_to_serial() {
             batched.total_dispatches() == queries.len() as u64,
             "max_batch=1 must dispatch one batch per query"
         );
+        Ok(())
+    });
+}
+
+/// Drain a waiting multiset through repeated batch formation, exactly as
+/// the batchers do: expose the policy's candidate window, select, remove.
+/// Returns (total straggler decode steps, dispatch count).
+fn drain_formation(policy: FormationPolicy, shapes: &[(u32, u32)], max_batch: usize) -> (u64, u64) {
+    let mut waiting: Vec<(u32, u32)> = shapes.to_vec();
+    let mut drag = 0u64;
+    let mut dispatches = 0u64;
+    while !waiting.is_empty() {
+        let window = policy.candidate_window(max_batch).min(waiting.len());
+        let sel = policy.select(&waiting[..window], max_batch);
+        assert!(!sel.is_empty() && sel[0] == 0, "oldest waiter must always ship");
+        let members: Vec<(u32, u32)> = sel.iter().map(|&i| waiting[i]).collect();
+        drag += FormationPolicy::straggler_steps(&members);
+        dispatches += 1;
+        for &i in sel.iter().rev() {
+            waiting.remove(i);
+        }
+    }
+    (drag, dispatches)
+}
+
+/// ISSUE 3 acceptance property: for any member multiset, shape-aware
+/// formation's total straggler decode steps never exceed FIFO's on the
+/// same arrival set — and it never pays for that with extra dispatches.
+/// (The optimal window partition costs no more than the FIFO chunking of
+/// the same window, and removing a whole group leaves a feasible
+/// partition of the shrunken window, so the bound telescopes.)
+#[test]
+fn prop_shape_aware_drag_never_exceeds_fifo() {
+    quick::check(120, |g| {
+        let n_members = g.usize_in(1..40);
+        let max_batch = g.usize_in(1..8);
+        let n_bins = g.usize_in(1..12);
+        let shapes: Vec<(u32, u32)> = (0..n_members)
+            .map(|_| (g.u32_in(1..2048), g.u32_in(0..1024)))
+            .collect();
+        let (fifo_drag, fifo_dispatches) =
+            drain_formation(FormationPolicy::FifoPrefix, &shapes, max_batch);
+        let (shape_drag, shape_dispatches) =
+            drain_formation(FormationPolicy::ShapeAware { n_bins }, &shapes, max_batch);
+        prop_assert!(
+            shape_drag <= fifo_drag,
+            "shape drag {shape_drag} > fifo {fifo_drag} (k={max_batch}, bins={n_bins}, shapes={shapes:?})"
+        );
+        prop_assert!(
+            shape_dispatches == fifo_dispatches,
+            "dispatch counts diverged: {shape_dispatches} vs {fifo_dispatches}"
+        );
+        // max_batch = 1 drains with zero drag under any policy
+        if max_batch == 1 {
+            prop_assert!(shape_drag == 0 && fifo_drag == 0, "singleton batches can't drag");
+        }
         Ok(())
     });
 }
