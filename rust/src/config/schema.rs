@@ -10,7 +10,7 @@ use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::hw::catalog::{extended_catalog, find_system};
 use crate::hw::spec::SystemSpec;
 use crate::sched::formation::FormationPolicy;
-use crate::sim::engine::BatchingOptions;
+use crate::sim::engine::{BatchingOptions, QueueModel};
 use crate::workload::generator::Arrival;
 
 /// Strict integer parse for count/seed/cap fields: errors on fractional,
@@ -157,6 +157,26 @@ impl Default for ServeConfig {
     }
 }
 
+/// Fleet-sizing sweep description (`[fleet]`): which node counts to try
+/// for each cluster system, at which arrival rates, under which p99 SLO
+/// — consumed by `hetsched fleet-sweep` via
+/// [`crate::experiments::runner::fleet_sweep`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// per-system candidate node counts, in `cluster.systems` order
+    /// (`counts = [[1, 2, 4], [1, 2]]`); every count must be ≥ 1 — drop
+    /// a system from `[cluster]` to model not provisioning it at all
+    pub count_grids: Vec<Vec<usize>>,
+    /// Poisson arrival rates λ (queries/s) to sweep
+    pub rates: Vec<f64>,
+    /// p99 latency SLO (s); `None` = report-only, every point feasible
+    pub slo_p99_s: Option<f64>,
+    /// trace length per rate
+    pub queries: usize,
+    /// trace seed
+    pub seed: u64,
+}
+
 /// Everything an experiment needs.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -169,6 +189,9 @@ pub struct ExperimentConfig {
     /// --config` silently ran serial even when the user had configured
     /// batching elsewhere — the knobs were CLI-only.
     pub batching: Option<BatchingOptions>,
+    /// fleet-sizing sweep description (`[fleet]`): `None` unless the
+    /// config file carries the section
+    pub fleet: Option<FleetConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -184,6 +207,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadConfig::default(),
             serve: ServeConfig::default(),
             batching: None,
+            fleet: None,
         }
     }
 }
@@ -299,8 +323,74 @@ impl ExperimentConfig {
                 .map_err(|e| format!("batching.formation: {e}"))?,
                 None => FormationPolicy::FifoPrefix,
             };
-            cfg.batching =
-                Some(BatchingOptions::new(max_batch, linger_s).with_formation(formation));
+            let queues = match t.get("queues") {
+                Some(v) => {
+                    QueueModel::parse(v.as_str().ok_or("batching.queues must be a string")?)
+                        .map_err(|e| format!("batching.queues: {e}"))?
+                }
+                None => QueueModel::PerWorker,
+            };
+            cfg.batching = Some(
+                BatchingOptions::new(max_batch, linger_s)
+                    .with_formation(formation)
+                    .with_queues(queues),
+            );
+        }
+
+        // [fleet]: fleet-sizing sweep (nested `counts` arrays — one count
+        // grid per cluster system; strict-integer parsed like every count
+        // field, so `counts = [[1.5]]` is an error, not a truncation)
+        if let Some(t) = doc.section("fleet") {
+            let counts = t.get("counts").ok_or("fleet.counts is required")?;
+            let TomlValue::Arr(rows) = counts else {
+                return Err("fleet.counts must be an array of per-system count arrays".into());
+            };
+            if rows.is_empty() {
+                return Err("fleet.counts must have one grid per cluster system".into());
+            }
+            let mut count_grids = Vec::with_capacity(rows.len());
+            for row in rows {
+                let TomlValue::Arr(vals) = row else {
+                    return Err(
+                        "fleet.counts entries must be arrays (one count grid per system)".into()
+                    );
+                };
+                if vals.is_empty() {
+                    return Err("fleet.counts grids must be non-empty".into());
+                }
+                let mut grid = Vec::with_capacity(vals.len());
+                for v in vals {
+                    let c = require_usize(v, "fleet.counts entries")?;
+                    if c == 0 {
+                        return Err("fleet.counts entries must be >= 1 (drop the system from \
+                                    [cluster] to exclude it)"
+                            .into());
+                    }
+                    grid.push(c);
+                }
+                count_grids.push(grid);
+            }
+            let rates = match t.get("rates") {
+                Some(TomlValue::Arr(vs)) => vs
+                    .iter()
+                    .map(|v| v.as_f64().ok_or_else(|| "fleet.rates entries must be numbers".to_string()))
+                    .collect::<Result<Vec<f64>, String>>()?,
+                Some(_) => return Err("fleet.rates must be an array of numbers".into()),
+                None => vec![10.0],
+            };
+            let slo_p99_s = match t.get("slo_p99_s") {
+                Some(v) => Some(v.as_f64().ok_or("fleet.slo_p99_s must be a number")?),
+                None => None,
+            };
+            let queries = match t.get("queries") {
+                Some(v) => require_usize(v, "fleet.queries")?,
+                None => 2000,
+            };
+            let seed = match t.get("seed") {
+                Some(v) => require_u64(v, "fleet.seed")?,
+                None => 2024,
+            };
+            cfg.fleet = Some(FleetConfig { count_grids, rates, slo_p99_s, queries, seed });
         }
 
         cfg.validate()?;
@@ -326,6 +416,31 @@ impl ExperimentConfig {
                 if n_bins == 0 {
                     return Err("batching.formation shape: n_bins must be >= 1".into());
                 }
+            }
+        }
+        if let Some(f) = &self.fleet {
+            if f.count_grids.len() != self.cluster.systems.len() {
+                return Err(format!(
+                    "fleet.counts has {} grids but the cluster has {} systems",
+                    f.count_grids.len(),
+                    self.cluster.systems.len()
+                ));
+            }
+            if f.rates.is_empty() {
+                return Err("fleet.rates must be non-empty".into());
+            }
+            for &r in &f.rates {
+                if !(r.is_finite() && r > 0.0) {
+                    return Err(format!("fleet.rates entries must be positive, got {r}"));
+                }
+            }
+            if let Some(s) = f.slo_p99_s {
+                if !(s.is_finite() && s > 0.0) {
+                    return Err(format!("fleet.slo_p99_s must be positive, got {s}"));
+                }
+            }
+            if f.queries == 0 {
+                return Err("fleet.queries must be > 0".into());
             }
         }
         if let PolicyConfig::Cost { lambda } | PolicyConfig::Oracle { lambda } = self.policy {
@@ -539,6 +654,87 @@ max_batch = 4
         assert!(ExperimentConfig::from_toml_str("[batching]\nlinger_s = -0.5\n").is_err());
         assert!(
             ExperimentConfig::from_toml_str("[batching]\nformation = \"sorted\"\n").is_err()
+        );
+    }
+
+    /// ISSUE 4: the `[fleet]` section round-trips, defaults apply, and
+    /// the nested count grids parse per system.
+    #[test]
+    fn fleet_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[fleet]\ncounts = [[1, 2, 4], [1, 2]]\nrates = [5.0, 20.0]\nslo_p99_s = 2.5\nqueries = 500\nseed = 7\n",
+        )
+        .unwrap();
+        let f = cfg.fleet.expect("fleet section must populate");
+        assert_eq!(f.count_grids, vec![vec![1, 2, 4], vec![1, 2]]);
+        assert_eq!(f.rates, vec![5.0, 20.0]);
+        assert_eq!(f.slo_p99_s, Some(2.5));
+        assert_eq!(f.queries, 500);
+        assert_eq!(f.seed, 7);
+
+        // sparse section takes defaults (default cluster has 2 systems)
+        let cfg = ExperimentConfig::from_toml_str("[fleet]\ncounts = [[1], [1, 2]]\n").unwrap();
+        let f = cfg.fleet.unwrap();
+        assert_eq!(f.rates, vec![10.0]);
+        assert_eq!(f.slo_p99_s, None);
+        assert_eq!(f.queries, 2000);
+        assert_eq!(f.seed, 2024);
+
+        // absent section stays None
+        assert!(ExperimentConfig::from_toml_str("").unwrap().fleet.is_none());
+    }
+
+    /// ISSUE 4 satellite: `[fleet]` error paths — bad count grids, empty
+    /// grids, and fractional counts rejected by the PR-3 strict-integer
+    /// parsing rather than silently truncated.
+    #[test]
+    fn fleet_error_paths() {
+        for (src, needle) in [
+            // fractional count: strict-integer parse must name the field
+            ("[fleet]\ncounts = [[1, 2.5], [1]]\n", "integer"),
+            // negative count: sign error, not saturation
+            ("[fleet]\ncounts = [[-1], [1]]\n", ">= 0"),
+            // zero count is not a fleet point
+            ("[fleet]\ncounts = [[0], [1]]\n", ">= 1"),
+            // empty inner grid
+            ("[fleet]\ncounts = [[], [1]]\n", "non-empty"),
+            // grid count must match the cluster (default cluster: 2 systems)
+            ("[fleet]\ncounts = [[1]]\n", "grids"),
+            ("[fleet]\ncounts = [[1], [1], [1]]\n", "grids"),
+            // counts must be an array of arrays
+            ("[fleet]\ncounts = [1, 2]\n", "arrays"),
+            ("[fleet]\ncounts = \"1,2\"\n", "array"),
+            // counts is required
+            ("[fleet]\nrates = [5.0]\n", "required"),
+            // rates must be positive numbers, non-empty
+            ("[fleet]\ncounts = [[1], [1]]\nrates = [-3.0]\n", "positive"),
+            ("[fleet]\ncounts = [[1], [1]]\nrates = []\n", "non-empty"),
+            ("[fleet]\ncounts = [[1], [1]]\nrates = [\"x\"]\n", "numbers"),
+            // SLO must be positive
+            ("[fleet]\ncounts = [[1], [1]]\nslo_p99_s = 0\n", "positive"),
+            // queries strict and non-zero, seed non-negative
+            ("[fleet]\ncounts = [[1], [1]]\nqueries = 0\n", "> 0"),
+            ("[fleet]\ncounts = [[1], [1]]\nqueries = 10.5\n", "integer"),
+            ("[fleet]\ncounts = [[1], [1]]\nseed = -1\n", ">= 0"),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");
+        }
+    }
+
+    /// `[batching] queues` selects the simulated queue layout; the
+    /// default is the coordinator-mirroring per-worker model.
+    #[test]
+    fn batching_queue_model_parses() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[batching]\nmax_batch = 4\nqueues = \"per-class\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.batching.unwrap().queues, QueueModel::PerClass);
+        let cfg = ExperimentConfig::from_toml_str("[batching]\nmax_batch = 4\n").unwrap();
+        assert_eq!(cfg.batching.unwrap().queues, QueueModel::PerWorker);
+        assert!(
+            ExperimentConfig::from_toml_str("[batching]\nqueues = \"shared\"\n").is_err()
         );
     }
 

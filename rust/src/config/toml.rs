@@ -1,6 +1,8 @@
 //! TOML-subset parser: `[section]` / `[[array-of-tables]]` headers and
-//! `key = value` pairs (strings, numbers, booleans, flat arrays).
-//! Covers everything our config schema needs without pulling a crate.
+//! `key = value` pairs (strings, numbers, booleans, arrays — including
+//! nested arrays like the `[fleet]` section's per-system count grids).
+//! Arrays must fit on one line. Covers everything our config schema
+//! needs without pulling a crate.
 
 use std::collections::BTreeMap;
 
@@ -138,6 +140,38 @@ impl TomlDoc {
     }
 }
 
+/// Split an array body on top-level commas only: commas inside nested
+/// `[...]` or inside strings don't separate elements. This is what lets
+/// `counts = [[1, 2], [1]]` (the `[fleet]` count grids) parse as an
+/// array of arrays rather than garbage fragments.
+fn split_top_level(body: &str) -> Result<Vec<&str>, String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in body.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| format!("unbalanced ']' in array '{body}'"))?;
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(&body[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 || in_str {
+        return Err(format!("unbalanced brackets or quotes in array '{body}'"));
+    }
+    parts.push(&body[start..]);
+    Ok(parts)
+}
+
 fn strip_comment(line: &str) -> &str {
     // no # inside strings in our configs; keep the parser simple
     let mut in_str = false;
@@ -169,7 +203,7 @@ fn parse_value(s: &str) -> Result<TomlValue, String> {
             return Ok(TomlValue::Arr(Vec::new()));
         }
         let items: Result<Vec<TomlValue>, String> =
-            body.split(',').map(|p| parse_value(p.trim())).collect();
+            split_top_level(body)?.into_iter().map(|p| parse_value(p.trim())).collect();
         return Ok(TomlValue::Arr(items?));
     }
     if s == "inf" {
@@ -234,6 +268,30 @@ buckets = [8, 16, 32]
         assert!(TomlDoc::parse("k = \n").is_err());
         let err = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
         assert!(err.contains("line 2"));
+    }
+
+    #[test]
+    fn nested_arrays_parse() {
+        let d = TomlDoc::parse("g = [[1, 2], [3]]\nmixed = [[\"a,b\", 2], []]\n").unwrap();
+        let TomlValue::Arr(rows) = &d.root["g"] else { panic!("g must be an array") };
+        assert_eq!(rows.len(), 2);
+        let TomlValue::Arr(first) = &rows[0] else { panic!("g[0] must be an array") };
+        assert_eq!(first.len(), 2);
+        assert_eq!(first[0].as_integer(), Some(1));
+        let TomlValue::Arr(second) = &rows[1] else { panic!("g[1] must be an array") };
+        assert_eq!(second[0].as_integer(), Some(3));
+        // strings containing commas/brackets survive, empty inner arrays too
+        let TomlValue::Arr(mixed) = &d.root["mixed"] else { panic!() };
+        let TomlValue::Arr(inner) = &mixed[0] else { panic!() };
+        assert_eq!(inner[0].as_str(), Some("a,b"));
+        assert_eq!(mixed[1], TomlValue::Arr(Vec::new()));
+        // flat arrays are unchanged
+        let flat = TomlDoc::parse("xs = [8, 16, 32]\n").unwrap();
+        let TomlValue::Arr(xs) = &flat.root["xs"] else { panic!() };
+        assert_eq!(xs.len(), 3);
+        // unbalanced nesting is an error, not a silent mis-split
+        assert!(TomlDoc::parse("bad = [[1, 2]\n").is_err());
+        assert!(TomlDoc::parse("bad = [1, 2]]\n").is_err());
     }
 
     #[test]

@@ -1,11 +1,16 @@
-//! Parallel sweep executor: fan λ grids, policy comparisons, and seed
-//! replicates across cores on top of a shared [`CostTable`].
+//! Parallel sweep executor: fan λ grids, policy comparisons, fleet
+//! provisioning grids, and seed replicates across cores on top of a
+//! shared [`CostTable`].
 //!
 //! Everything here is deterministic — work is chunked contiguously and
-//! re-concatenated in input order by [`crate::util::par`], so a sweep
-//! produces bit-identical results at any core count. The model is
-//! evaluated once per (query, system); every grid point afterwards is
-//! pure accumulation (threshold grids get the same treatment in
+//! re-concatenated in input order by [`crate::util::par`] (a reusable
+//! worker pool, so thousands of small grid points don't pay per-call
+//! thread spawns), so a sweep produces bit-identical results at any
+//! core count. The model is evaluated once per (query, system) — once
+//! per *unique* `(m, n)` pair for [`fleet_sweep`], which multiplies
+//! hundreds of `SystemSpec::count` variants against one trace — and
+//! every grid point afterwards is pure accumulation (threshold grids
+//! get the same treatment in
 //! [`super::sweeps::threshold_sweep_from_costs`]).
 
 use crate::config::schema::PolicyConfig;
@@ -47,6 +52,22 @@ pub struct LambdaPoint {
 /// Sweep λ over `U = λ·E + (1−λ)·R` with per-query argmin — the offline
 /// oracle of `sched::oracle::oracle_assign`, but the model is evaluated
 /// once for the whole grid and the λ points run concurrently.
+///
+/// ```
+/// use hetsched::experiments::runner::lambda_sweep;
+/// use hetsched::hw::catalog::system_catalog;
+/// use hetsched::model::llm_catalog;
+/// use hetsched::perf::energy::EnergyModel;
+/// use hetsched::perf::model::PerfModel;
+/// use hetsched::workload::alpaca::AlpacaModel;
+///
+/// let systems = system_catalog();
+/// let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+/// let queries = AlpacaModel::default().trace(7, 200);
+/// let points = lambda_sweep(&queries, &systems, &energy, &[0.0, 1.0]);
+/// // λ = 1 optimizes energy alone, so it can never spend more than λ = 0
+/// assert!(points[1].energy_j <= points[0].energy_j);
+/// ```
 pub fn lambda_sweep(
     queries: &[Query],
     systems: &[SystemSpec],
@@ -322,6 +343,196 @@ pub fn formation_sweep(
     }
 }
 
+/// One provisioning point of a [`fleet_sweep`] grid: a cluster with a
+/// specific node count per system, simulated online at one arrival rate
+/// with the idle floor of every provisioned node charged across the
+/// makespan — provisioning is exactly the idle-vs-queueing trade.
+#[derive(Clone, Debug)]
+pub struct FleetPoint {
+    /// Poisson arrival rate λ of the trace (queries/s)
+    pub rate: f64,
+    /// nodes provisioned per system, in catalog order
+    pub counts: Vec<usize>,
+    /// Σ `counts`
+    pub total_nodes: usize,
+    /// total energy **including** every provisioned node's idle floor (J)
+    pub total_energy_j: f64,
+    /// the idle-floor component of `total_energy_j` (J)
+    pub idle_energy_j: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub makespan_s: f64,
+    /// p99 latency within the SLO (`true` when no SLO was set)
+    pub slo_ok: bool,
+    /// queries the engine re-routed off infeasible policy picks
+    pub rerouted: u64,
+}
+
+/// A [`fleet_sweep`] result: the grid points plus the per-rate best
+/// fleet and the [`CostTable::build_dedup`] sharing statistics.
+#[derive(Clone, Debug)]
+pub struct FleetSweepResult {
+    /// rate-major, then count-grid odometer order (last system's grid
+    /// varies fastest) — see [`count_grid_points`]
+    pub points: Vec<FleetPoint>,
+    /// per rate (in `rates` order), the index into `points` of the
+    /// lowest-energy SLO-feasible fleet; `None` when no fleet meets the
+    /// SLO at that rate. Ties break to the earlier grid point.
+    pub best_per_rate: Vec<Option<usize>>,
+    /// the SLO the feasibility flags were computed against
+    pub slo_p99_s: Option<f64>,
+    /// per rate, `(unique (m, n) rows, trace length)` of the shared
+    /// deduplicated [`CostTable`] — the build-cost shrink dedup bought
+    pub dedup_rows: Vec<(usize, usize)>,
+}
+
+/// Enumerate the cartesian product of per-system count grids in
+/// odometer order (the last system's grid varies fastest) —
+/// deterministic, so sweep points line up with the flags/TOML that
+/// produced them.
+pub fn count_grid_points(grids: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    if grids.iter().any(Vec::is_empty) {
+        return Vec::new();
+    }
+    let total: usize = grids.iter().map(Vec::len).product();
+    let mut out = Vec::with_capacity(total);
+    let mut idx = vec![0usize; grids.len()];
+    for _ in 0..total {
+        out.push(idx.iter().zip(grids).map(|(&i, g)| g[i]).collect());
+        for axis in (0..grids.len()).rev() {
+            idx[axis] += 1;
+            if idx[axis] < grids[axis].len() {
+                break;
+            }
+            idx[axis] = 0;
+        }
+    }
+    out
+}
+
+/// Fleet-sizing sweep: vary `SystemSpec::count` grids × arrival rate λ
+/// over **one deduplicated [`CostTable`] per rate**, reporting energy
+/// and SLO feasibility per fleet point.
+///
+/// `E(m,n,s)` and `R(m,n,s)` are per-*system-class* quantities — node
+/// counts never enter a cell — so every fleet point of a rate reads the
+/// same table, and the table itself evaluates the model once per unique
+/// `(m, n)` pair ([`CostTable::build_dedup`]; Alpaca traces repeat
+/// pairs heavily). Each point then runs the online engine with
+/// [`crate::sim::engine::SimOptions::include_idle_energy`] set: more
+/// nodes cut queueing (p99 falls toward the SLO) but burn idle floor
+/// across the horizon — and since clearing the backlog also shrinks the
+/// makespan every provisioned node idles across, total energy can tip
+/// either way, which is exactly the frontier the sweep maps. Fleet
+/// points fan over [`crate::util::par`]; results are deterministic at
+/// any core count.
+///
+/// Counts must be ≥ 1 — to ask "what if we bought none of system X",
+/// drop X from the cluster instead (a zero-count class would still
+/// attract the router).
+///
+/// `batching: Some(..)` runs every fleet point through the **batched**
+/// engine (one shared memoized [`BatchTable`] across the whole grid) so
+/// provisioning decisions reflect the batched deployment a `[batching]`
+/// config describes — fleet-sweep must not silently fall back to serial
+/// numbers the way pre-PR-3 `simulate --config` did. `None` runs the
+/// serial online engine.
+///
+/// ```
+/// use hetsched::config::schema::PolicyConfig;
+/// use hetsched::experiments::runner::fleet_sweep;
+/// use hetsched::hw::catalog::system_catalog;
+/// use hetsched::model::llm_catalog;
+/// use hetsched::perf::energy::EnergyModel;
+/// use hetsched::perf::model::PerfModel;
+///
+/// let systems = system_catalog();
+/// let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+/// let grids = vec![vec![1, 2], vec![1], vec![1]]; // 1 or 2 M1-Pro nodes
+/// let sweep = fleet_sweep(
+///     &systems, &energy, &PolicyConfig::JoinShortestQueue, None,
+///     &[10.0], &grids, None, 120, 42,
+/// );
+/// assert_eq!(sweep.points.len(), 2);
+/// // with no SLO every point is feasible, so a best fleet always exists
+/// assert!(sweep.best_per_rate[0].is_some());
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn fleet_sweep(
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    policy: &PolicyConfig,
+    batching: Option<BatchingOptions>,
+    rates: &[f64],
+    count_grids: &[Vec<usize>],
+    slo_p99_s: Option<f64>,
+    n_queries: usize,
+    seed: u64,
+) -> FleetSweepResult {
+    assert_eq!(count_grids.len(), systems.len(), "one count grid per system");
+    assert!(count_grids.iter().all(|g| !g.is_empty()), "count grids must be non-empty");
+    assert!(
+        count_grids.iter().flatten().all(|&c| c >= 1),
+        "fleet counts must be >= 1 (drop a system from the cluster to exclude it)"
+    );
+    let fleets = count_grid_points(count_grids);
+    // one memoized batch table for the whole grid: compositions repeat
+    // across fleet points and rates, and cells are deterministic
+    let batch_table = batching.map(|_| BatchTable::new(energy.clone(), systems));
+    let mut points = Vec::with_capacity(rates.len() * fleets.len());
+    let mut best_per_rate = Vec::with_capacity(rates.len());
+    let mut dedup_rows = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n_queries);
+        // counts never enter E/R cells, so every fleet point of this
+        // rate shares one deduplicated table
+        let table = CostTable::build_dedup(&queries, systems, energy);
+        dedup_rows.push((table.n_unique_rows(), queries.len()));
+        let rate_points = par_map(&fleets, |counts| {
+            let mut sized: Vec<SystemSpec> = systems.to_vec();
+            for (spec, &c) in sized.iter_mut().zip(counts) {
+                spec.count = c;
+            }
+            let mut p = build_policy(policy, energy.clone(), &sized);
+            let opts = SimOptions { include_idle_energy: true, batching, strict: false };
+            let rep = match &batch_table {
+                Some(bt) => {
+                    simulate_batched_with_tables(&queries, &sized, p.as_mut(), &table, bt, &opts)
+                }
+                None => simulate_with_table(&queries, &sized, p.as_mut(), &table, &opts),
+            };
+            let p99 = rep.p99_latency_s();
+            FleetPoint {
+                rate,
+                counts: counts.clone(),
+                total_nodes: counts.iter().sum(),
+                total_energy_j: rep.total_energy_j,
+                idle_energy_j: rep.idle_energy_j,
+                mean_latency_s: rep.mean_latency_s(),
+                p99_latency_s: p99,
+                makespan_s: rep.makespan_s,
+                slo_ok: slo_p99_s.map_or(true, |slo| p99 <= slo),
+                rerouted: rep.rerouted,
+            }
+        });
+        // lowest-energy SLO-feasible point; strict `<` so ties break to
+        // the earlier (usually smaller) fleet
+        let base = points.len();
+        let mut best_rel: Option<usize> = None;
+        for (i, fp) in rate_points.iter().enumerate() {
+            if !fp.slo_ok {
+                continue;
+            }
+            if best_rel.map_or(true, |b| fp.total_energy_j < rate_points[b].total_energy_j) {
+                best_rel = Some(i);
+            }
+        }
+        best_per_rate.push(best_rel.map(|i| base + i));
+        points.extend(rate_points);
+    }
+    FleetSweepResult { points, best_per_rate, slo_p99_s, dedup_rows }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -530,6 +741,136 @@ mod tests {
         );
         assert!(sweep.batch_table_evaluations as u64 <= sweep.batch_table_lookups);
         assert!(sweep.bucket_bins.0 >= 2 && sweep.bucket_bins.1 >= 2);
+    }
+
+    #[test]
+    fn count_grid_points_enumerate_odometer_order() {
+        let grids = vec![vec![1, 2], vec![3], vec![4, 5]];
+        let pts = count_grid_points(&grids);
+        assert_eq!(
+            pts,
+            vec![vec![1, 3, 4], vec![1, 3, 5], vec![2, 3, 4], vec![2, 3, 5]]
+        );
+        assert_eq!(count_grid_points(&[]), vec![Vec::<usize>::new()]);
+        assert_eq!(count_grid_points(&[vec![1], vec![]]), Vec::<Vec<usize>>::new());
+    }
+
+    #[test]
+    fn fleet_sweep_covers_grid_and_reports_best() {
+        let systems = system_catalog();
+        let em = energy();
+        let grids = vec![vec![1, 2], vec![1], vec![1]];
+        let sweep = fleet_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::JoinShortestQueue,
+            None,
+            &[25.0],
+            &grids,
+            Some(1e6), // an SLO nothing misses: feasibility plumbing only
+            250,
+            7,
+        );
+        assert_eq!(sweep.points.len(), 2);
+        assert_eq!(sweep.points[0].counts, vec![1, 1, 1]);
+        assert_eq!(sweep.points[1].counts, vec![2, 1, 1]);
+        assert_eq!(sweep.points[0].total_nodes, 3);
+        assert_eq!(sweep.points[1].total_nodes, 4);
+        for p in &sweep.points {
+            assert!(p.total_energy_j.is_finite() && p.total_energy_j > 0.0);
+            assert!(p.idle_energy_j > 0.0, "fleet points must charge the idle floor");
+            assert!(p.total_energy_j > p.idle_energy_j);
+            assert!(p.slo_ok);
+        }
+        // best is the energy argmin over feasible points
+        let best = sweep.best_per_rate[0].expect("every point is SLO-feasible");
+        let min_e = sweep
+            .points
+            .iter()
+            .map(|p| p.total_energy_j)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(sweep.points[best].total_energy_j, min_e);
+        // the shared table deduplicated a repeated-pair Alpaca trace
+        let (unique, total) = sweep.dedup_rows[0];
+        assert_eq!(total, 250);
+        assert!(unique <= total);
+    }
+
+    /// A fleet point is exactly a direct `simulate` run of the sized
+    /// cluster (same trace, idle charged): the shared deduplicated table
+    /// changes the build cost, never the numbers.
+    #[test]
+    fn fleet_point_matches_direct_simulation() {
+        let systems = system_catalog();
+        let em = energy();
+        let rate = 15.0;
+        let seed = 3;
+        let n = 200;
+        let grids = vec![vec![2], vec![1], vec![1]];
+        let sweep = fleet_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::Cost { lambda: 1.0 },
+            None,
+            &[rate],
+            &grids,
+            None,
+            n,
+            seed,
+        );
+        assert_eq!(sweep.points.len(), 1);
+        let fp = &sweep.points[0];
+
+        let mut sized = system_catalog();
+        sized[0].count = 2;
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n);
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &sized);
+        let direct = simulate(
+            &queries,
+            &sized,
+            p.as_mut(),
+            &em,
+            &SimOptions { include_idle_energy: true, ..Default::default() },
+        );
+        assert_eq!(fp.total_energy_j, direct.total_energy_j);
+        assert_eq!(fp.idle_energy_j, direct.idle_energy_j);
+        assert_eq!(fp.makespan_s, direct.makespan_s);
+        assert_eq!(fp.p99_latency_s, direct.p99_latency_s());
+        assert_eq!(fp.rerouted, direct.rerouted);
+    }
+
+    /// An impossible SLO yields no best fleet; a generous one always
+    /// yields the cheapest.
+    #[test]
+    fn fleet_sweep_slo_filters_best() {
+        let systems = system_catalog();
+        let em = energy();
+        let grids = vec![vec![1], vec![1], vec![1]];
+        let strict = fleet_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::JoinShortestQueue,
+            None,
+            &[40.0],
+            &grids,
+            Some(1e-9), // sub-nanosecond p99: unreachable
+            150,
+            11,
+        );
+        assert_eq!(strict.best_per_rate, vec![None]);
+        assert!(strict.points.iter().all(|p| !p.slo_ok));
+        let lax = fleet_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::JoinShortestQueue,
+            None,
+            &[40.0],
+            &grids,
+            None,
+            150,
+            11,
+        );
+        assert_eq!(lax.best_per_rate, vec![Some(0)]);
     }
 
     #[test]

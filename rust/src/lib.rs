@@ -2,19 +2,78 @@
 //!
 //! Reproduction of *"Hybrid Heterogeneous Clusters Can Lower the Energy
 //! Consumption of LLM Inference Workloads"* (Wilkins, Keshav, Mortier —
-//! E2DC 2024) as a three-layer rust + JAX + Pallas serving stack:
+//! E2DC 2024), grown into a serving/simulation stack. The paper's core
+//! claim: routing queries by their token counts `(m, n)` across a
+//! heterogeneous fleet (an efficient small system plus a fast big one)
+//! lowers total inference energy at a modest runtime cost.
+//!
+//! ## Layer map
 //!
 //! - **L3 (this crate)**: the paper's contribution — a cost-based,
-//!   workload-aware router (`sched`, `coordinator`) over a heterogeneous
-//!   cluster model (`hw`, `perf`), a discrete-event simulator (`sim`),
-//!   the §4.2 measurement-methodology simulators (`measure`), and the
-//!   Alpaca workload model (`workload`).
+//!   workload-aware router ([`sched`], [`coordinator`]) over a
+//!   heterogeneous cluster model ([`hw`], [`perf`]), a discrete-event
+//!   simulator ([`sim`]), the §4.2 measurement-methodology simulators
+//!   ([`measure`]), and the Alpaca workload model ([`workload`]).
 //! - **L2/L1 (python/, build-time only)**: a byte-level transformer with
-//!   Pallas kernels, AOT-lowered to HLO text that `runtime` executes via
-//!   PJRT — python is never on the request path.
+//!   Pallas kernels, AOT-lowered to HLO text that [`runtime`] executes
+//!   via PJRT — python is never on the request path.
 //!
-//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
-//! paper-vs-measured results.
+//! ## Module flow
+//!
+//! A typical experiment flows left to right:
+//!
+//! ```text
+//! config ─▶ workload ─▶ perf ─▶ sched ─▶ sim / coordinator ─▶ experiments ─▶ CLI
+//! (TOML)    (m, n)      E, R    policy    virtual / wall time    sweep grids
+//! ```
+//!
+//! - [`config`] parses TOML into a typed [`config::schema::ExperimentConfig`];
+//! - [`workload`] turns a seed (or CSV) into `(m, n)` queries with
+//!   arrival times;
+//! - [`perf`] evaluates the analytical runtime/energy model `R(m,n,s)` /
+//!   `E(m,n,s)` per system, memoized in
+//!   [`perf::cost_table::CostTable`] (dense or (m, n)-deduplicated) and
+//!   [`perf::cost_table::BatchTable`];
+//! - [`sched`] decides *where* each query runs
+//!   ([`sched::policy::Policy`]) and *which* waiting queries batch
+//!   together ([`sched::formation::FormationPolicy`]);
+//! - [`sim`] replays a trace in virtual time (per-worker queues, dynamic
+//!   batching), while [`coordinator`] runs the same decisions against
+//!   wall-clock worker threads;
+//! - [`experiments`] fans sweep grids — thresholds, λ, batching knobs,
+//!   formation policies, fleet sizes — across cores over
+//!   [`util::par`]'s reusable worker pool.
+//!
+//! See `docs/ARCHITECTURE.md` for the full module map, a symbol table
+//! linking paper notation to concrete types, and the data flow of a
+//! sweep run; README.md documents the CLI surface.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use hetsched::config::schema::PolicyConfig;
+//! use hetsched::hw::catalog::system_catalog;
+//! use hetsched::model::llm_catalog;
+//! use hetsched::perf::energy::EnergyModel;
+//! use hetsched::perf::model::PerfModel;
+//! use hetsched::sched::policy::build_policy;
+//! use hetsched::sim::engine::{simulate, SimOptions};
+//! use hetsched::workload::alpaca::AlpacaModel;
+//!
+//! let systems = system_catalog(); // Table 1: M1-Pro, Swing-A100, V100
+//! let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+//! let queries = AlpacaModel::default().trace(2024, 500);
+//! let cfg = PolicyConfig::Threshold {
+//!     t_in: 32,
+//!     t_out: 32,
+//!     small: "M1-Pro".into(),
+//!     big: "Swing-A100".into(),
+//! };
+//! let mut policy = build_policy(&cfg, energy.clone(), &systems);
+//! let report = simulate(&queries, &systems, policy.as_mut(), &energy, &SimOptions::default());
+//! assert_eq!(report.outcomes.len(), 500);
+//! assert!(report.total_energy_j > 0.0);
+//! ```
 
 pub mod config;
 pub mod experiments;

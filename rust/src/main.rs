@@ -5,15 +5,16 @@
 
 use hetsched::config::schema::{ExperimentConfig, PolicyConfig};
 use hetsched::experiments::{
-    batching_sweep, fig3_alpaca, formation_sweep, headline_savings, input_sweep, output_sweep,
-    table1, threshold_sweep,
+    batching_sweep, fig3_alpaca, fleet_sweep, formation_sweep, headline_savings, input_sweep,
+    output_sweep, table1, threshold_sweep,
 };
 use hetsched::hw::catalog::{find_system, system_catalog, SystemId};
+use hetsched::hw::spec::SystemSpec;
 use hetsched::model::{find_llm, llm_catalog};
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
 use hetsched::sched::formation::FormationPolicy;
-use hetsched::sim::engine::{BatchingOptions, SimOptions};
+use hetsched::sim::engine::{BatchingOptions, QueueModel, SimOptions};
 use hetsched::util::cli::Args;
 use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Align, Table};
 use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
@@ -37,6 +38,7 @@ system:
   simulate          run a config-driven cluster simulation
   batching-sweep    batched-sim energy/latency grid over max_batch × linger × λ
   formation-sweep   FIFO vs shape-aware batch formation over max_batch × λ
+  fleet-sweep       provisioning grid: node counts × λ over one deduplicated CostTable
   serve             start the live serving demo on the AOT artifacts
   calibrate         fit perf-model constants from a measured sweep
 
@@ -54,6 +56,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&argv[1..]),
         Some("batching-sweep") => cmd_batching_sweep(&argv[1..]),
         Some("formation-sweep") => cmd_formation_sweep(&argv[1..]),
+        Some("fleet-sweep") => cmd_fleet_sweep(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("calibrate") => cmd_calibrate(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -254,6 +257,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         .opt("max-batch", "", "dynamic batch size per dispatch (1 = serial; empty = config's [batching])")
         .opt("linger", "", "seconds a partial batch lingers for stragglers (empty = config)")
         .opt("formation", "", "batch formation: fifo | shape | shape:<bins> (empty = config)")
+        .opt("queues", "", "batched-queue layout: per-worker | per-class (empty = config)")
         .flag("idle-energy", "charge idle power across the makespan")
         .parse(argv)?;
     let cfg = match args.get("config") {
@@ -313,6 +317,16 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             }
         }
     }
+    match args.get("queues") {
+        "" => {}
+        s => {
+            let queues = QueueModel::parse(s)?;
+            match &mut batching {
+                Some(b) => b.queues = queues,
+                None => return Err("--queues needs batching (--max-batch > 1 or a [batching] config section)".into()),
+            }
+        }
+    }
     let opts = SimOptions {
         include_idle_energy: args.get_bool("idle-energy"),
         strict: false,
@@ -344,8 +358,9 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     print!("{}", t.ascii());
     if let Some(b) = &opts.batching {
         println!(
-            "batching: formation {}   mean size {:.2}   dispatch energy {}   straggler steps {}   saved vs serial dispatch {}",
+            "batching: formation {}   queues {}   mean size {:.2}   dispatch energy {}   straggler steps {}   saved vs serial dispatch {}",
             b.formation.name(),
+            b.queues.name(),
             rep.mean_batch_size(),
             fmt_joules(rep.dispatch_energy_j()),
             rep.total_straggler_steps(),
@@ -572,6 +587,209 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
         sweep.bucket_bins.0,
         sweep.bucket_bins.1
     );
+    Ok(())
+}
+
+/// Parse a fleet `--counts` spec: per-system grids separated by `;`,
+/// each grid a comma list of counts and/or `a:b` inclusive ranges —
+/// e.g. `1,2,4;1:2;1` for a 3-system catalog.
+fn parse_counts_spec(spec: &str, n_systems: usize) -> Result<Vec<Vec<usize>>, String> {
+    let groups: Vec<&str> = spec.split(';').map(str::trim).collect();
+    if groups.len() != n_systems {
+        return Err(format!(
+            "--counts needs {n_systems} ';'-separated grids (one per system), got {}",
+            groups.len()
+        ));
+    }
+    let mut grids = Vec::with_capacity(groups.len());
+    for group in groups {
+        let mut grid: Vec<usize> = Vec::new();
+        for part in group.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some((lo, hi)) = part.split_once(':') {
+                let lo: usize = lo
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("--counts: bad range start in '{part}': {e}"))?;
+                let hi: usize = hi
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("--counts: bad range end in '{part}': {e}"))?;
+                if lo > hi {
+                    return Err(format!("--counts: empty range '{part}'"));
+                }
+                grid.extend(lo..=hi);
+            } else {
+                grid.push(part.parse().map_err(|e| format!("--counts: bad count '{part}': {e}"))?);
+            }
+        }
+        if grid.is_empty() {
+            return Err("--counts: every system needs at least one count".into());
+        }
+        if grid.contains(&0) {
+            return Err(
+                "--counts: counts must be >= 1 (omit a system from the cluster config to exclude it)"
+                    .into(),
+            );
+        }
+        grids.push(grid);
+    }
+    Ok(grids)
+}
+
+fn cmd_fleet_sweep(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("fleet-sweep")
+        .opt("config", "", "TOML config path with a [fleet] section (flags override)")
+        .opt("model", "", "LLM for the energy model (default: config's workload.llm, else Llama-2-7B)")
+        .opt("policy", "", "cost | jsq | round-robin | threshold | <system name> (default jsq)")
+        .opt("rates", "", "Poisson arrival rates λ (q/s), comma-separated (default 5,20)")
+        .opt("counts", "", "per-system count grids: ';' between systems, ',' or 'a:b' within (default 1:3 per system)")
+        .opt("slo", "", "p99 latency SLO in seconds (empty = no SLO filter)")
+        .opt("queries", "", "trace length per rate (default 2000)")
+        .opt("seed", "", "trace seed (default 2024)")
+        .flag("csv", "emit CSV")
+        .parse(argv)?;
+    // the config file (when given) supplies the cluster, the policy, and
+    // the [fleet] section; explicit flags override field-wise
+    let cfg = match args.get("config") {
+        "" => None,
+        path => Some(ExperimentConfig::from_file(path)?),
+    };
+    let systems: Vec<SystemSpec> =
+        cfg.as_ref().map_or_else(system_catalog, |c| c.cluster.systems.clone());
+    let fleet = cfg.as_ref().and_then(|c| c.fleet.clone());
+    let model_name = match args.get("model") {
+        "" => cfg.as_ref().map_or("Llama-2-7B", |c| c.workload.llm.as_str()),
+        name => name,
+    };
+    let llm = find_llm(model_name).ok_or_else(|| format!("unknown model '{model_name}'"))?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let policy = match args.get("policy") {
+        "" => cfg
+            .as_ref()
+            .map(|c| c.policy.clone())
+            .unwrap_or(PolicyConfig::JoinShortestQueue),
+        name => parse_policy_flag(name)?,
+    };
+    let rates: Vec<f64> = match args.get("rates") {
+        "" => fleet.as_ref().map(|f| f.rates.clone()).unwrap_or_else(|| vec![5.0, 20.0]),
+        _ => required_list::<f64>(&args, "rates")?,
+    };
+    if rates.iter().any(|r| !(r.is_finite() && *r > 0.0)) {
+        return Err("--rates entries must be positive".into());
+    }
+    let count_grids: Vec<Vec<usize>> = match args.get("counts") {
+        "" => fleet
+            .as_ref()
+            .map(|f| f.count_grids.clone())
+            .unwrap_or_else(|| systems.iter().map(|_| (1..=3).collect()).collect()),
+        spec => parse_counts_spec(spec, systems.len())?,
+    };
+    if count_grids.len() != systems.len() {
+        return Err(format!(
+            "fleet counts: {} grids for {} systems",
+            count_grids.len(),
+            systems.len()
+        ));
+    }
+    let slo = match args.get("slo") {
+        "" => fleet.as_ref().and_then(|f| f.slo_p99_s),
+        _ => {
+            let s = args.get_f64("slo")?;
+            if !(s.is_finite() && s > 0.0) {
+                return Err(format!("--slo must be positive, got {s}"));
+            }
+            Some(s)
+        }
+    };
+    let n_queries = match args.get("queries") {
+        "" => fleet.as_ref().map_or(2000, |f| f.queries),
+        _ => args.get_usize("queries")?,
+    };
+    if n_queries == 0 {
+        return Err("--queries must be > 0".into());
+    }
+    let seed = match args.get("seed") {
+        "" => fleet.as_ref().map_or(2024, |f| f.seed),
+        _ => args.get_u64("seed")?,
+    };
+
+    // the config's [batching] section reaches every fleet point — a
+    // configured batched deployment must not be provisioned from serial
+    // numbers (the silent-serial bug class `simulate --config` had)
+    let batching = cfg.as_ref().and_then(|c| c.batching);
+
+    let fleet_points: usize = count_grids.iter().map(Vec::len).product();
+    println!(
+        "fleet-sizing sweep: policy {}, engine {}, {} fleets × {} rates, {} queries per rate, seed {}{}",
+        policy.name(),
+        batching.map_or("serial".to_string(), |b| {
+            format!(
+                "batched (max_batch {}, {}, {} queues)",
+                b.max_batch,
+                b.formation.name(),
+                b.queues.name()
+            )
+        }),
+        fleet_points,
+        rates.len(),
+        n_queries,
+        seed,
+        slo.map(|s| format!(", SLO p99 <= {s}s")).unwrap_or_default()
+    );
+    let sweep = fleet_sweep(
+        &systems, &energy, &policy, batching, &rates, &count_grids, slo, n_queries, seed,
+    );
+
+    let mut t = Table::new(&[
+        "rate", "fleet", "nodes", "energy", "idle", "mean lat", "p99 lat", "SLO", "best",
+    ])
+    .align(1, Align::Left);
+    let fleet_label = |counts: &[usize]| {
+        systems
+            .iter()
+            .zip(counts)
+            .map(|(s, c)| format!("{c}x{}", s.name))
+            .collect::<Vec<_>>()
+            .join(" + ")
+    };
+    for (i, p) in sweep.points.iter().enumerate() {
+        let is_best = sweep.best_per_rate.contains(&Some(i));
+        t.row(&[
+            format!("{:.1}", p.rate),
+            fleet_label(&p.counts),
+            p.total_nodes.to_string(),
+            fmt_joules(p.total_energy_j),
+            fmt_joules(p.idle_energy_j),
+            fmt_secs(p.mean_latency_s),
+            fmt_secs(p.p99_latency_s),
+            if p.slo_ok { "ok".into() } else { "miss".into() },
+            if is_best { "*".into() } else { String::new() },
+        ]);
+    }
+    print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+
+    for (&rate, best) in rates.iter().zip(&sweep.best_per_rate) {
+        match best {
+            Some(i) => {
+                let p = &sweep.points[*i];
+                println!(
+                    "λ={rate:.1}: best fleet {} — {} total ({} idle), p99 {}",
+                    fleet_label(&p.counts),
+                    fmt_joules(p.total_energy_j),
+                    fmt_joules(p.idle_energy_j),
+                    fmt_secs(p.p99_latency_s)
+                );
+            }
+            None => println!("λ={rate:.1}: no fleet point meets the SLO"),
+        }
+    }
+    for ((unique, total), &rate) in sweep.dedup_rows.iter().zip(&rates) {
+        println!(
+            "λ={rate:.1}: CostTable deduplicated {total} queries into {unique} unique (m, n) rows \
+             ({:.1}x build shrink)",
+            *total as f64 / (*unique).max(1) as f64
+        );
+    }
     Ok(())
 }
 

@@ -40,17 +40,88 @@ pub struct CostCell {
     pub feasibility: Feasibility,
 }
 
-/// Dense (query-major) table of [`CostCell`]s for a trace × catalog,
-/// plus the per-query energy-cheapest feasible system (the simulator's
-/// re-route fallback target).
+/// Table of [`CostCell`]s for a trace × catalog, plus the per-query
+/// energy-cheapest feasible system (the simulator's re-route fallback
+/// target).
+///
+/// Two physical layouts share one lookup API:
+///
+/// - [`CostTable::build`] — **dense**: one row of cells per query.
+/// - [`CostTable::build_dedup`] — **(m, n)-deduplicated**: one row per
+///   *unique* token pair, with a per-query row index. Alpaca traces
+///   repeat token pairs heavily, so for fleet studies that multiply
+///   hundreds of `SystemSpec::count` variants against one trace this
+///   shrinks build cost by the trace's repeat factor while every
+///   accessor stays O(1). Cells are evaluated through the identical
+///   code path, so the two layouts are bit-identical cell-for-cell
+///   (property-tested in `rust/tests/properties.rs`).
+///
+/// ```
+/// use hetsched::hw::catalog::system_catalog;
+/// use hetsched::model::llm_catalog;
+/// use hetsched::perf::cost_table::CostTable;
+/// use hetsched::perf::energy::EnergyModel;
+/// use hetsched::perf::model::PerfModel;
+/// use hetsched::workload::Query;
+///
+/// let systems = system_catalog();
+/// let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+/// // two queries with the same (m, n) = one unique shape
+/// let queries = vec![Query::new(0, 32, 64), Query::new(1, 32, 64)];
+/// let dense = CostTable::build(&queries, &systems, &energy);
+/// let dedup = CostTable::build_dedup(&queries, &systems, &energy);
+/// assert_eq!(dense.n_unique_rows(), 2);
+/// assert_eq!(dedup.n_unique_rows(), 1);
+/// assert_eq!(dense.energy_j(1, 1), dedup.energy_j(1, 1)); // same cells
+/// ```
 #[derive(Clone, Debug)]
 pub struct CostTable {
     n_systems: usize,
+    n_queries: usize,
+    /// row of `cells` describing each query: the identity map for the
+    /// dense layout, the first-occurrence shape index when deduplicated
+    row_of: Vec<usize>,
+    /// `n_rows × n_systems` cells, row-major
     cells: Vec<CostCell>,
+    /// energy-cheapest feasible system per row
     cheapest: Vec<Option<usize>>,
     /// which attribution ([`Attribution::Total`] / [`Attribution::Net`])
     /// the energy column was built with
     pub attribution: Attribution,
+}
+
+/// One row of cells for a `(m, n)` pair over the catalog — the single
+/// evaluation path both [`CostTable::build`] and
+/// [`CostTable::build_dedup`] go through, which is what makes the two
+/// layouts bit-identical.
+fn eval_row(m: u32, n: u32, systems: &[SystemSpec], energy: &EnergyModel) -> Vec<CostCell> {
+    systems
+        .iter()
+        .map(|spec| {
+            let feasibility = energy.perf.feasibility(spec, m, n);
+            if feasibility == Feasibility::Ok {
+                let (energy_j, runtime_s) = energy.energy_and_runtime(spec, m, n);
+                CostCell { energy_j, runtime_s, feasibility }
+            } else {
+                CostCell { energy_j: f64::NAN, runtime_s: f64::NAN, feasibility }
+            }
+        })
+        .collect()
+}
+
+/// Argmin energy over feasible systems, scanning in catalog order with
+/// strict `<` — the same tie-break the simulator's direct fallback scan
+/// used.
+fn cheapest_of(row: &[CostCell]) -> Option<usize> {
+    let mut best = None;
+    let mut best_e = f64::INFINITY;
+    for (i, c) in row.iter().enumerate() {
+        if c.feasibility == Feasibility::Ok && c.energy_j < best_e {
+            best_e = c.energy_j;
+            best = Some(i);
+        }
+    }
+    best
 }
 
 impl CostTable {
@@ -58,45 +129,66 @@ impl CostTable {
     /// across cores. Deterministic: identical to the serial build.
     pub fn build(queries: &[Query], systems: &[SystemSpec], energy: &EnergyModel) -> Self {
         let n_systems = systems.len();
-        let rows: Vec<Vec<CostCell>> = par_map(queries, |q| {
-            let (m, n) = (q.input_tokens, q.output_tokens);
-            systems
-                .iter()
-                .map(|spec| {
-                    let feasibility = energy.perf.feasibility(spec, m, n);
-                    if feasibility == Feasibility::Ok {
-                        let (energy_j, runtime_s) = energy.energy_and_runtime(spec, m, n);
-                        CostCell { energy_j, runtime_s, feasibility }
-                    } else {
-                        CostCell { energy_j: f64::NAN, runtime_s: f64::NAN, feasibility }
-                    }
-                })
-                .collect()
-        });
+        let rows: Vec<Vec<CostCell>> =
+            par_map(queries, |q| eval_row(q.input_tokens, q.output_tokens, systems, energy));
         let mut cells = Vec::with_capacity(queries.len() * n_systems);
         let mut cheapest = Vec::with_capacity(queries.len());
         for row in rows {
-            // argmin energy over feasible systems, scanning in catalog
-            // order with strict `<` — the same tie-break the simulator's
-            // direct fallback scan used
-            let mut best = None;
-            let mut best_e = f64::INFINITY;
-            for (i, c) in row.iter().enumerate() {
-                if c.feasibility == Feasibility::Ok && c.energy_j < best_e {
-                    best_e = c.energy_j;
-                    best = Some(i);
-                }
-            }
-            cheapest.push(best);
+            cheapest.push(cheapest_of(&row));
             cells.extend(row);
         }
-        Self { n_systems, cells, cheapest, attribution: energy.attribution }
+        Self {
+            n_systems,
+            n_queries: queries.len(),
+            row_of: (0..queries.len()).collect(),
+            cells,
+            cheapest,
+            attribution: energy.attribution,
+        }
+    }
+
+    /// The (m, n)-deduplicated build: evaluate the model once per
+    /// **unique** token pair (in first-occurrence order, fanned across
+    /// cores) and map every query to its shape's row. `E(m,n,s)` and
+    /// `R(m,n,s)` depend only on the pair, so the cells are bit-identical
+    /// to the dense build's — heavy-repeat traces (Alpaca) just stop
+    /// paying for the same evaluation over and over. All accessors keep
+    /// their per-query indexing and O(1) cost.
+    pub fn build_dedup(queries: &[Query], systems: &[SystemSpec], energy: &EnergyModel) -> Self {
+        let n_systems = systems.len();
+        let mut shape_row: HashMap<(u32, u32), usize> = HashMap::new();
+        let mut shapes: Vec<(u32, u32)> = Vec::new();
+        let mut row_of = Vec::with_capacity(queries.len());
+        for q in queries {
+            let key = (q.input_tokens, q.output_tokens);
+            let row = *shape_row.entry(key).or_insert_with(|| {
+                shapes.push(key);
+                shapes.len() - 1
+            });
+            row_of.push(row);
+        }
+        let rows: Vec<Vec<CostCell>> =
+            par_map(&shapes, |&(m, n)| eval_row(m, n, systems, energy));
+        let mut cells = Vec::with_capacity(shapes.len() * n_systems);
+        let mut cheapest = Vec::with_capacity(shapes.len());
+        for row in rows {
+            cheapest.push(cheapest_of(&row));
+            cells.extend(row);
+        }
+        Self {
+            n_systems,
+            n_queries: queries.len(),
+            row_of,
+            cells,
+            cheapest,
+            attribution: energy.attribution,
+        }
     }
 
     #[inline]
     fn idx(&self, query: usize, system: usize) -> usize {
         debug_assert!(system < self.n_systems);
-        query * self.n_systems + system
+        self.row_of[query] * self.n_systems + system
     }
 
     #[inline]
@@ -130,19 +222,23 @@ impl CostTable {
     /// simulator's fallback when a policy routes somewhere infeasible.
     #[inline]
     pub fn cheapest_feasible(&self, query: usize) -> Option<usize> {
-        self.cheapest[query]
+        self.cheapest[self.row_of[query]]
     }
 
     pub fn n_queries(&self) -> usize {
-        if self.n_systems == 0 {
-            0
-        } else {
-            self.cells.len() / self.n_systems
-        }
+        self.n_queries
     }
 
     pub fn n_systems(&self) -> usize {
         self.n_systems
+    }
+
+    /// Physical rows actually evaluated and stored: equals
+    /// [`Self::n_queries`] for the dense layout, the number of distinct
+    /// `(m, n)` pairs for [`Self::build_dedup`]. The ratio to
+    /// `n_queries` is the build-cost shrink factor dedup bought.
+    pub fn n_unique_rows(&self) -> usize {
+        self.cheapest.len()
     }
 }
 
@@ -219,6 +315,22 @@ fn lower_edge(edges: &[u32], v: u32) -> u32 {
 }
 
 /// Memoized batch-cost table — the batched sibling of [`CostTable`].
+///
+/// ```
+/// use hetsched::hw::catalog::system_catalog;
+/// use hetsched::model::llm_catalog;
+/// use hetsched::perf::cost_table::BatchTable;
+/// use hetsched::perf::energy::EnergyModel;
+/// use hetsched::perf::model::PerfModel;
+///
+/// let systems = system_catalog();
+/// let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+/// let table = BatchTable::new(energy, &systems);
+/// let first = table.cost(1, &[(32, 64), (16, 32)]);
+/// let again = table.cost(1, &[(32, 64), (16, 32)]); // memo hit
+/// assert_eq!(table.hits(), 1);
+/// assert_eq!(first.runtime_s, again.runtime_s);
+/// ```
 ///
 /// Batch compositions are data-dependent (they emerge from arrivals and
 /// queue state), so they cannot be enumerated up front the way per-query
@@ -527,6 +639,71 @@ mod tests {
         assert_eq!(t.lookups(), 3);
         assert_eq!(t.hits(), 1);
         assert!((t.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// ISSUE 4 acceptance: the deduplicated layout is bit-identical to
+    /// the dense build on a repeated-pair Alpaca trace — every cell,
+    /// every fallback target — while storing far fewer rows.
+    #[test]
+    fn dedup_layout_matches_dense_on_alpaca_trace() {
+        let queries = AlpacaModel::default().trace(2024, 6_000);
+        let systems = system_catalog();
+        for attribution in [Attribution::Total, Attribution::Net] {
+            let energy = EnergyModel::with_attribution(
+                PerfModel::new(llm_catalog()[1].clone()),
+                attribution,
+            );
+            let dense = CostTable::build(&queries, &systems, &energy);
+            let dedup = CostTable::build_dedup(&queries, &systems, &energy);
+            assert_eq!(dedup.n_queries(), dense.n_queries());
+            assert_eq!(dedup.n_systems(), dense.n_systems());
+            // Alpaca token pairs repeat heavily: dedup must store
+            // strictly fewer rows than queries
+            assert!(
+                dedup.n_unique_rows() < queries.len(),
+                "no repeats found in {} queries ({} rows)",
+                queries.len(),
+                dedup.n_unique_rows()
+            );
+            assert_eq!(dense.n_unique_rows(), queries.len());
+            for qi in 0..queries.len() {
+                assert_eq!(dedup.cheapest_feasible(qi), dense.cheapest_feasible(qi), "query {qi}");
+                for si in 0..systems.len() {
+                    assert_eq!(dedup.feasibility(qi, si), dense.feasibility(qi, si));
+                    if dense.is_feasible(qi, si) {
+                        // bit-identical, not approximately equal
+                        assert_eq!(
+                            dedup.energy_j(qi, si).to_bits(),
+                            dense.energy_j(qi, si).to_bits(),
+                            "energy cell ({qi},{si})"
+                        );
+                        assert_eq!(
+                            dedup.runtime_s(qi, si).to_bits(),
+                            dense.runtime_s(qi, si).to_bits(),
+                            "runtime cell ({qi},{si})"
+                        );
+                    } else {
+                        assert!(dedup.energy_j(qi, si).is_nan());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dedup_layout_handles_all_unique_and_all_same() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        // all-identical trace: one row
+        let same: Vec<Query> = (0..50u64).map(|id| Query::new(id, 40, 40)).collect();
+        let t = CostTable::build_dedup(&same, &systems, &energy);
+        assert_eq!(t.n_unique_rows(), 1);
+        assert_eq!(t.n_queries(), 50);
+        assert_eq!(t.energy_j(0, 1), t.energy_j(49, 1));
+        // all-unique trace: as many rows as queries
+        let uniq: Vec<Query> = (0..50u64).map(|id| Query::new(id, 8 + id as u32, 8)).collect();
+        let t = CostTable::build_dedup(&uniq, &systems, &energy);
+        assert_eq!(t.n_unique_rows(), 50);
     }
 
     #[test]

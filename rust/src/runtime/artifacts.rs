@@ -2,8 +2,9 @@
 //! executables, matching `python/compile/aot.py`'s output format exactly.
 //!
 //! [`Manifest`] parsing/validation is plain std and always available;
-//! [`ArtifactBundle`] uploads weights and compiles HLO through the `xla`
-//! crate, so it is gated behind the `pjrt` feature.
+//! `ArtifactBundle` uploads weights and compiles HLO through the `xla`
+//! crate, so it is gated behind the `pjrt` feature (linking it here
+//! would break rustdoc in default builds).
 
 #[cfg(feature = "pjrt")]
 use super::client::Runtime;

@@ -46,6 +46,24 @@
 //! (singleton batches carry zero drag).
 
 /// How a batcher picks which waiting requests form the next batch.
+///
+/// ```
+/// use hetsched::sched::formation::FormationPolicy;
+///
+/// // four waiters, output lengths interleaving short and long
+/// let waiting = [(32u32, 8u32), (32, 512), (32, 8), (32, 512)];
+///
+/// // FIFO ships the two oldest: a size-8 member drags through 504
+/// // decode steps it doesn't need
+/// let fifo = FormationPolicy::FifoPrefix.select(&waiting, 2);
+/// assert_eq!(fifo, vec![0, 1]);
+///
+/// // shape-aware groups the equal-n pair containing the oldest waiter
+/// let shape = FormationPolicy::ShapeAware { n_bins: 8 }.select(&waiting, 2);
+/// assert_eq!(shape, vec![0, 2]);
+/// let members: Vec<_> = shape.iter().map(|&i| waiting[i]).collect();
+/// assert_eq!(FormationPolicy::straggler_steps(&members), 0);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum FormationPolicy {
     /// Dispatch the oldest `max_batch` waiters — classic dynamic

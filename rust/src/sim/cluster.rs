@@ -103,21 +103,39 @@ impl NodeState {
     }
 
     /// Schedule one *batch* dispatch starting no earlier than `t`: the
-    /// node is occupied for `dur` (the whole batch runtime, amortizing
-    /// one dispatch), while each member completes at its own offset from
-    /// the batch start. Returns the batch start plus per-member finish
-    /// instants in `member_offsets` order. The finish heap tracks every
-    /// member individually so `queue_len` keeps counting in-flight
-    /// *queries*, not dispatches.
+    /// earliest-free node is occupied for `dur` (the whole batch runtime,
+    /// amortizing one dispatch), while each member completes at its own
+    /// offset from the batch start. Returns the batch start plus
+    /// per-member finish instants in `member_offsets` order. This is the
+    /// per-class queue discipline: any node of the class may take any
+    /// batch. The per-worker-queue engine uses [`Self::schedule_batch_on`]
+    /// instead, pinning each virtual worker's batches to its own node.
     pub fn schedule_batch(&mut self, t: f64, dur: f64, member_offsets: &[f64]) -> (f64, Vec<f64>) {
-        let (idx, &free_at) = self
+        let (idx, _) = self
             .node_free_at
             .iter()
             .enumerate()
             .min_by(|a, b| a.1.total_cmp(b.1))
             .expect("system has nodes");
+        self.schedule_batch_on(idx, t, dur, member_offsets)
+    }
+
+    /// [`Self::schedule_batch`] pinned to one specific node of the class
+    /// — the per-worker-queue engine dispatches each virtual worker's
+    /// batches to that worker's own node rather than the class-wide
+    /// earliest-free one, so a skewed queue delays only its own node.
+    /// The finish heap tracks every member individually so `queue_len`
+    /// keeps counting in-flight *queries*, not dispatches.
+    pub fn schedule_batch_on(
+        &mut self,
+        node_idx: usize,
+        t: f64,
+        dur: f64,
+        member_offsets: &[f64],
+    ) -> (f64, Vec<f64>) {
+        let free_at = self.node_free_at[node_idx];
         let start = t.max(free_at);
-        self.node_free_at[idx] = start + dur;
+        self.node_free_at[node_idx] = start + dur;
         let finishes: Vec<f64> = member_offsets.iter().map(|&off| start + off).collect();
         for &f in &finishes {
             self.inflight.push(Reverse(FinishAt(f)));
@@ -237,6 +255,34 @@ mod tests {
         let (sb, fb) = b.schedule_batch(3.0, 2.0, &[2.0]);
         assert_eq!((sa, fa), (sb, fb[0]));
         assert_eq!(a.busy_s, b.busy_s);
+    }
+
+    #[test]
+    fn schedule_batch_on_pins_the_node() {
+        let mut specs = system_catalog();
+        specs[0].count = 2;
+        let mut cs = ClusterState::new(&specs);
+        let n = cs.get_mut(SystemId(0));
+        // occupy node 0; a batch pinned to node 0 must wait for it even
+        // though node 1 is idle
+        let (s0, _) = n.schedule_batch_on(0, 0.0, 3.0, &[3.0]);
+        assert_eq!(s0, 0.0);
+        let (s1, f1) = n.schedule_batch_on(0, 1.0, 2.0, &[2.0]);
+        assert_eq!(s1, 3.0);
+        assert_eq!(f1, vec![5.0]);
+        assert_eq!(n.node_free_at, vec![5.0, 0.0]);
+        // pinned to the idle node it starts immediately
+        let (s2, _) = n.schedule_batch_on(1, 1.0, 2.0, &[2.0]);
+        assert_eq!(s2, 1.0);
+        assert_eq!(n.queries, 3);
+        // with one node, schedule_batch and schedule_batch_on(0) agree
+        let mut one = system_catalog();
+        one[0].count = 1;
+        let mut a = ClusterState::new(&one);
+        let mut b = ClusterState::new(&one);
+        let ra = a.get_mut(SystemId(0)).schedule_batch(2.0, 4.0, &[1.0, 4.0]);
+        let rb = b.get_mut(SystemId(0)).schedule_batch_on(0, 2.0, 4.0, &[1.0, 4.0]);
+        assert_eq!(ra, rb);
     }
 
     #[test]

@@ -1,20 +1,167 @@
-//! Deterministic fork–join parallelism over `std::thread::scope` (the
-//! offline crate set has no rayon). Work is split into contiguous
-//! chunks, one per available core, and the outputs are re-concatenated
-//! in input order — so results are **bit-identical to the serial map**
-//! regardless of thread count. This is the substrate under
-//! [`crate::perf::cost_table::CostTable::build`] and the
+//! Deterministic fork–join parallelism over a **reusable scoped worker
+//! pool** (the offline crate set has no rayon). Work is split into
+//! contiguous chunks, one per available core, and the outputs are
+//! re-concatenated in input order — so results are **bit-identical to
+//! the serial map** regardless of thread count. This is the substrate
+//! under [`crate::perf::cost_table::CostTable::build`] and the
 //! [`crate::experiments::runner`] sweep executor.
+//!
+//! ## Why a pool
+//!
+//! The PR-1 implementation spawned fresh threads per `par_map` call via
+//! `std::thread::scope`. That is correct but pays spawn/join once per
+//! call — and the many-small-sims paths (`properties.rs` cases, fleet
+//! grids, adaptive-policy studies) issue thousands of small fan-outs.
+//! The pool here is spawned once, lazily, on the first parallel call
+//! and reused for every later one: `threads() − 1` long-lived workers
+//! pull type-erased chunk jobs from a shared queue while the calling
+//! thread executes the first chunk itself, then blocks until every
+//! submitted chunk has completed. Chunking, chunk order, and output
+//! concatenation are unchanged from the scoped version, so results stay
+//! bit-identical to a serial map.
+//!
+//! ## Safety model
+//!
+//! Jobs borrow the caller's stack (the input slice, the closure, one
+//! output slot each). Those borrows are lent to `'static`-typed jobs via
+//! an `unsafe` lifetime erasure, made sound by a completion latch:
+//! `par_map` does not return — not even by panic — until every job it
+//! submitted has finished running, so no job can outlive the frame it
+//! borrows from. Panics inside chunks are caught, carried through the
+//! latch, and re-raised on the caller.
 
+use std::any::Any;
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::num::NonZeroUsize;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 thread_local! {
-    /// Set inside `par_map` worker threads so nested `par_map` calls
-    /// (e.g. `seed_replicates(…, |s| simulate(…))`, whose inner
+    /// Set on pool workers (permanently) and on the caller while it runs
+    /// its own chunk, so nested `par_map` calls (e.g.
+    /// `seed_replicates(…, |s| simulate(…))`, whose inner
     /// `CostTable::build` also fans out) run serially instead of
-    /// oversubscribing with threads() × threads() workers.
+    /// deadlocking on a saturated pool or oversubscribing the machine.
     static INSIDE_PAR_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A type-erased chunk of work. Jobs are self-contained: each catches
+/// its own panic and reports completion through its call's latch, so the
+/// worker loop never needs to know which `par_map` call a job belongs to.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+struct Pool {
+    state: Arc<PoolState>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, spawned on first use. Workers are detached and
+/// live until process exit (they hold only the shared queue).
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let workers = threads().saturating_sub(1);
+        let state = Arc::new(PoolState {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for i in 0..workers {
+            let state = Arc::clone(&state);
+            std::thread::Builder::new()
+                .name(format!("par-pool-{i}"))
+                .spawn(move || worker_loop(&state))
+                .expect("spawn pool worker");
+        }
+        Pool { state, workers }
+    })
+}
+
+/// Pool workers live for the process: block for a job, run it, repeat.
+/// The nested flag stays set for the thread's whole life — anything
+/// running on a pool worker is by definition inside a parallel region.
+fn worker_loop(state: &PoolState) {
+    INSIDE_PAR_WORKER.with(|flag| flag.set(true));
+    loop {
+        let job = {
+            let mut q = state.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = state.available.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+fn submit(pool: &Pool, job: Job) {
+    let mut q = pool.state.jobs.lock().unwrap();
+    q.push_back(job);
+    drop(q);
+    pool.state.available.notify_one();
+}
+
+/// Completion latch for one `par_map` call: counts outstanding pool jobs
+/// and carries the first panic payload back to the caller.
+struct Latch {
+    state: Mutex<(usize, Option<Box<dyn Any + Send>>)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Self {
+        Self { state: Mutex::new((jobs, None)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        if s.1.is_none() {
+            s.1 = panic;
+        }
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job has completed; returns the first panic.
+    fn wait(&self) -> Option<Box<dyn Any + Send>> {
+        let mut s = self.state.lock().unwrap();
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        s.1.take()
+    }
+}
+
+/// Erase a scoped job's lifetime so it can enter the `'static` pool
+/// queue.
+///
+/// # Safety
+///
+/// The caller must not return (normally or by unwind) until the job has
+/// finished running — `par_map` guarantees this by waiting on the
+/// call's [`Latch`] on every exit path.
+unsafe fn erase_job<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(job)
+}
+
+/// Restores the caller's nested flag even if the chunk panics.
+struct NestedFlagGuard(bool);
+
+impl Drop for NestedFlagGuard {
+    fn drop(&mut self) {
+        let prev = self.0;
+        INSIDE_PAR_WORKER.with(|flag| flag.set(prev));
+    }
 }
 
 /// Worker threads to fan across (≥ 1).
@@ -22,9 +169,17 @@ pub fn threads() -> usize {
     std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
 }
 
-/// Parallel, order-preserving map. Falls back to a serial map when only
-/// one core is available, the input is trivial, or the caller is itself
-/// a `par_map` worker (nested fan-out would oversubscribe the machine).
+/// Long-lived workers backing the pool (0 on single-core machines, where
+/// every map runs serially on the caller). Calling this spawns the pool
+/// if it isn't up yet.
+pub fn pool_workers() -> usize {
+    pool().workers
+}
+
+/// Parallel, order-preserving map over the reusable pool. Falls back to
+/// a serial map when only one core is available, the input is trivial,
+/// or the caller is itself inside a parallel region (nested fan-out
+/// would deadlock on the shared pool or oversubscribe the machine).
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -36,24 +191,67 @@ where
     if nested || n <= 1 || items.len() <= 1 {
         return items.iter().map(f).collect();
     }
+    let pool = pool();
+    if pool.workers == 0 {
+        return items.iter().map(f).collect();
+    }
+
     let chunk = items.len().div_ceil(n);
+    let chunks: Vec<&[T]> = items.chunks(chunk).collect();
+    let mut outs: Vec<Option<Vec<R>>> = Vec::with_capacity(chunks.len());
+    outs.resize_with(chunks.len(), || None);
+
+    let latch = Arc::new(Latch::new(chunks.len() - 1));
     let fref = &f;
-    std::thread::scope(|s| {
-        let handles: Vec<_> = items
-            .chunks(chunk)
-            .map(|c| {
-                s.spawn(move || {
-                    INSIDE_PAR_WORKER.with(|flag| flag.set(true));
-                    c.iter().map(fref).collect::<Vec<R>>()
-                })
-            })
-            .collect();
-        let mut out = Vec::with_capacity(items.len());
-        for h in handles {
-            out.extend(h.join().expect("par_map worker panicked"));
+    {
+        let mut slots = outs.iter_mut();
+        let my_slot = slots.next().expect("at least one chunk");
+        // hand chunks 1.. to the pool
+        for (slot, &chunk_items) in slots.zip(&chunks[1..]) {
+            let latch = Arc::clone(&latch);
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                match catch_unwind(AssertUnwindSafe(|| {
+                    chunk_items.iter().map(fref).collect::<Vec<R>>()
+                })) {
+                    Ok(v) => {
+                        *slot = Some(v);
+                        latch.complete(None);
+                    }
+                    Err(p) => latch.complete(Some(p)),
+                }
+            });
+            // SAFETY: the job borrows `items`, `f`, and one `outs` slot
+            // from this frame. Every exit path below first waits on the
+            // latch (`latch.wait()`), including when the caller's own
+            // chunk panics — so every submitted job has run to
+            // completion before any borrowed data can be invalidated.
+            let job: Job = unsafe { erase_job(job) };
+            submit(pool, job);
         }
-        out
-    })
+        // run the first chunk on the calling thread, marked nested so
+        // f's own par_map calls run serially (exactly as they would on
+        // a pool worker)
+        let mine = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = NestedFlagGuard(INSIDE_PAR_WORKER.with(|flag| flag.replace(true)));
+            chunks[0].iter().map(fref).collect::<Vec<R>>()
+        }));
+        // wait for the pool before touching `outs` or unwinding: jobs
+        // hold borrows into this frame until the latch opens
+        let pool_panic = latch.wait();
+        match mine {
+            Ok(v) => *my_slot = Some(v),
+            Err(p) => resume_unwind(p),
+        }
+        if let Some(p) = pool_panic {
+            resume_unwind(p);
+        }
+    }
+
+    let mut out = Vec::with_capacity(items.len());
+    for v in outs {
+        out.extend(v.expect("every chunk completed"));
+    }
+    out
 }
 
 /// Parallel, order-preserving map over indices `0..count` — handy when
@@ -108,5 +306,70 @@ mod tests {
         });
         let want: Vec<u64> = outer.iter().map(|&o| (0..100u64).map(|i| i * o).sum()).collect();
         assert_eq!(out, want);
+    }
+
+    /// The ROADMAP item this pool exists for: repeated calls must reuse
+    /// one fixed worker set, not spawn fresh threads per call. Fresh
+    /// spawning would accumulate distinct thread ids without bound.
+    #[test]
+    fn pool_threads_are_reused_across_calls() {
+        if threads() <= 1 {
+            return; // serial machines have no pool to observe
+        }
+        use std::collections::HashSet;
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        for _ in 0..25 {
+            let items: Vec<u32> = (0..500).collect();
+            let out = par_map(&items, |&x| {
+                ids.lock().unwrap().insert(std::thread::current().id());
+                x + 1
+            });
+            assert_eq!(out.len(), items.len());
+        }
+        // every executing thread is either a fixed pool worker or one of
+        // the calling threads (this test's thread); 25 × fresh spawns
+        // would blow far past this bound
+        assert!(
+            ids.lock().unwrap().len() <= pool_workers() + 1,
+            "saw {} distinct threads with only {} pool workers",
+            ids.lock().unwrap().len(),
+            pool_workers()
+        );
+    }
+
+    /// A panic in any chunk propagates to the caller, and the pool
+    /// survives it for later calls.
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let items: Vec<u32> = (0..2000).collect();
+        let r = std::panic::catch_unwind(|| {
+            par_map(&items, |&x| {
+                assert!(x != 1717, "injected failure");
+                x
+            })
+        });
+        assert!(r.is_err(), "panic must propagate out of par_map");
+        // the pool still serves correct results afterwards
+        let again = par_map(&items, |&x| x * 2);
+        assert_eq!(again[7], 14);
+        assert_eq!(again.len(), items.len());
+    }
+
+    /// Concurrent par_map calls from independent threads interleave
+    /// their jobs on the shared pool without mixing results.
+    #[test]
+    fn concurrent_calls_do_not_interfere() {
+        let handles: Vec<_> = (0u64..4)
+            .map(|k| {
+                std::thread::spawn(move || {
+                    let items: Vec<u64> = (0..3000).collect();
+                    let out = par_map(&items, |&x| x * 7 + k);
+                    out.iter().zip(&items).all(|(&o, &x)| o == x * 7 + k)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap(), "a concurrent call saw foreign results");
+        }
     }
 }

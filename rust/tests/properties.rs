@@ -6,13 +6,14 @@
 use hetsched::config::schema::PolicyConfig;
 use hetsched::hw::catalog::system_catalog;
 use hetsched::model::llm_catalog;
+use hetsched::perf::cost_table::CostTable;
 use hetsched::perf::energy::{Attribution, EnergyModel};
 use hetsched::perf::model::{Feasibility, PerfModel};
 use hetsched::sched::cost::CostPolicy;
 use hetsched::sched::formation::FormationPolicy;
 use hetsched::sched::policy::Policy as _;
 use hetsched::sched::policy::{build_policy, ClusterView};
-use hetsched::sim::engine::{simulate, BatchingOptions, SimOptions};
+use hetsched::sim::engine::{simulate, BatchingOptions, QueueModel, SimOptions};
 use hetsched::util::quick::{self, Gen};
 use hetsched::workload::generator::{Arrival, TraceGenerator};
 use hetsched::workload::Query;
@@ -159,6 +160,170 @@ fn prop_batched_max_batch_one_is_bit_identical_to_serial() {
             batched.total_dispatches() == queries.len() as u64,
             "max_batch=1 must dispatch one batch per query"
         );
+        Ok(())
+    });
+}
+
+/// ISSUE 4 tentpole property: on clusters where every class has
+/// `count = 1`, the per-worker-queue batched engine is **bit-identical**
+/// to the per-class-queue engine (the pre-refactor layout, kept as
+/// [`QueueModel::PerClass`]) — across policies, arrival rates, batching
+/// knobs, formation policies, and seeds. One queue per class *is* one
+/// queue per node there, so the refactor must not move a single float:
+/// every outcome field, total, and dispatch count has to match exactly.
+#[test]
+fn prop_per_worker_queues_bit_identical_to_per_class_at_count_one() {
+    let systems = system_catalog(); // every catalog class has count = 1
+    let em = energy_model();
+    quick::check(30, |g| {
+        let n = g.usize_in(5..120);
+        let rate = g.f64_in(0.5, 50.0);
+        let trace_seed = g.rng.next_u64();
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, trace_seed).generate(n);
+        let max_batch = g.usize_in(1..9);
+        let linger_s = g.f64_in(0.0, 0.5);
+        let formation = match g.u32_in(0..3) {
+            0 => FormationPolicy::FifoPrefix,
+            1 => FormationPolicy::ShapeAware { n_bins: 1 },
+            _ => FormationPolicy::ShapeAware { n_bins: g.usize_in(2..12) },
+        };
+        let cfg = match g.u32_in(0..5) {
+            0 => PolicyConfig::Threshold {
+                t_in: g.u32_in(0..256),
+                t_out: g.u32_in(0..256),
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            1 => PolicyConfig::Cost { lambda: g.f64_in(0.0, 1.0) },
+            2 => PolicyConfig::RoundRobin,
+            3 => PolicyConfig::AllOn("Swing-A100".into()),
+            _ => PolicyConfig::JoinShortestQueue,
+        };
+        let run = |queues: QueueModel, em: &EnergyModel| {
+            let mut p = build_policy(&cfg, em.clone(), &systems);
+            simulate(
+                &queries,
+                &systems,
+                p.as_mut(),
+                em,
+                &SimOptions {
+                    batching: Some(
+                        BatchingOptions::new(max_batch, linger_s)
+                            .with_formation(formation)
+                            .with_queues(queues),
+                    ),
+                    ..Default::default()
+                },
+            )
+        };
+        let per_worker = run(QueueModel::PerWorker, &em);
+        let per_class = run(QueueModel::PerClass, &em);
+        prop_assert!(
+            per_worker.outcomes.len() == per_class.outcomes.len(),
+            "outcome count diverged"
+        );
+        for (a, b) in per_worker.outcomes.iter().zip(&per_class.outcomes) {
+            prop_assert!(a.query_id == b.query_id, "order diverged at {}", a.query_id);
+            prop_assert!(a.system == b.system, "routing diverged on query {}", a.query_id);
+            prop_assert!(
+                a.start_s == b.start_s && a.finish_s == b.finish_s,
+                "timing diverged on query {}: ({}, {}) vs ({}, {})",
+                a.query_id,
+                a.start_s,
+                a.finish_s,
+                b.start_s,
+                b.finish_s
+            );
+            prop_assert!(
+                a.service_s == b.service_s && a.energy_j == b.energy_j,
+                "cost diverged on query {}",
+                a.query_id
+            );
+        }
+        prop_assert!(
+            per_worker.total_energy_j == per_class.total_energy_j,
+            "total energy diverged"
+        );
+        prop_assert!(
+            per_worker.total_service_s == per_class.total_service_s,
+            "service diverged"
+        );
+        prop_assert!(per_worker.makespan_s == per_class.makespan_s, "makespan diverged");
+        prop_assert!(
+            per_worker.serial_energy_j == per_class.serial_energy_j,
+            "serial-equivalent energy diverged"
+        );
+        prop_assert!(
+            per_worker.routing_counts() == per_class.routing_counts(),
+            "routing counts diverged"
+        );
+        prop_assert!(
+            per_worker.total_dispatches() == per_class.total_dispatches(),
+            "dispatch counts diverged"
+        );
+        prop_assert!(
+            per_worker.total_straggler_steps() == per_class.total_straggler_steps(),
+            "straggler accounting diverged"
+        );
+        Ok(())
+    });
+}
+
+/// ISSUE 4 tentpole property: the (m, n)-deduplicated [`CostTable`]
+/// layout is bit-identical to the dense build on repeated-pair traces —
+/// every cell, every feasibility, every cheapest-feasible fallback —
+/// while storing one row per unique pair.
+#[test]
+fn prop_dedup_cost_table_equals_dense() {
+    let systems = system_catalog();
+    quick::check(20, |g| {
+        let em = energy_model();
+        // draw shapes from a small pool so pairs repeat heavily, the way
+        // Alpaca traces do
+        let pool_n = g.usize_in(1..12);
+        let pool: Vec<(u32, u32)> = (0..pool_n)
+            .map(|_| (g.u32_in(1..2048), g.u32_in(1..512)))
+            .collect();
+        let n = g.usize_in(1..250);
+        let queries: Vec<Query> = (0..n as u64)
+            .map(|id| {
+                let &(m, out) = g.pick(&pool);
+                Query::new(id, m, out)
+            })
+            .collect();
+        let dense = CostTable::build(&queries, &systems, &em);
+        let dedup = CostTable::build_dedup(&queries, &systems, &em);
+        prop_assert!(dedup.n_queries() == dense.n_queries(), "query count diverged");
+        prop_assert!(dedup.n_systems() == dense.n_systems(), "system count diverged");
+        prop_assert!(
+            dedup.n_unique_rows() <= pool_n.min(n),
+            "dedup stored {} rows from a pool of {pool_n}",
+            dedup.n_unique_rows()
+        );
+        for qi in 0..queries.len() {
+            prop_assert!(
+                dedup.cheapest_feasible(qi) == dense.cheapest_feasible(qi),
+                "fallback diverged on query {qi}"
+            );
+            for si in 0..systems.len() {
+                prop_assert!(
+                    dedup.feasibility(qi, si) == dense.feasibility(qi, si),
+                    "feasibility diverged at ({qi}, {si})"
+                );
+                if dense.is_feasible(qi, si) {
+                    prop_assert!(
+                        dedup.energy_j(qi, si).to_bits() == dense.energy_j(qi, si).to_bits(),
+                        "energy cell ({qi}, {si}) not bit-identical"
+                    );
+                    prop_assert!(
+                        dedup.runtime_s(qi, si).to_bits() == dense.runtime_s(qi, si).to_bits(),
+                        "runtime cell ({qi}, {si}) not bit-identical"
+                    );
+                } else {
+                    prop_assert!(dedup.energy_j(qi, si).is_nan(), "infeasible cell not NaN");
+                }
+            }
+        }
         Ok(())
     });
 }
