@@ -175,6 +175,11 @@ pub struct FleetConfig {
     pub queries: usize,
     /// trace seed
     pub seed: u64,
+    /// quantile bins per (m, n) axis for the shared bucketed
+    /// `BatchTable` batched fleet points memoize through (bins are
+    /// derived per rate from that rate's trace); ignored for serial
+    /// sweeps. Default 8.
+    pub bucket_bins: usize,
 }
 
 /// Everything an experiment needs.
@@ -390,7 +395,12 @@ impl ExperimentConfig {
                 Some(v) => require_u64(v, "fleet.seed")?,
                 None => 2024,
             };
-            cfg.fleet = Some(FleetConfig { count_grids, rates, slo_p99_s, queries, seed });
+            let bucket_bins = match t.get("bucket_bins") {
+                Some(v) => require_usize(v, "fleet.bucket_bins")?,
+                None => 8,
+            };
+            cfg.fleet =
+                Some(FleetConfig { count_grids, rates, slo_p99_s, queries, seed, bucket_bins });
         }
 
         cfg.validate()?;
@@ -441,6 +451,9 @@ impl ExperimentConfig {
             }
             if f.queries == 0 {
                 return Err("fleet.queries must be > 0".into());
+            }
+            if f.bucket_bins == 0 {
+                return Err("fleet.bucket_bins must be >= 1".into());
             }
         }
         if let PolicyConfig::Cost { lambda } | PolicyConfig::Oracle { lambda } = self.policy {
@@ -662,7 +675,7 @@ max_batch = 4
     #[test]
     fn fleet_section_round_trips() {
         let cfg = ExperimentConfig::from_toml_str(
-            "[fleet]\ncounts = [[1, 2, 4], [1, 2]]\nrates = [5.0, 20.0]\nslo_p99_s = 2.5\nqueries = 500\nseed = 7\n",
+            "[fleet]\ncounts = [[1, 2, 4], [1, 2]]\nrates = [5.0, 20.0]\nslo_p99_s = 2.5\nqueries = 500\nseed = 7\nbucket_bins = 12\n",
         )
         .unwrap();
         let f = cfg.fleet.expect("fleet section must populate");
@@ -671,6 +684,7 @@ max_batch = 4
         assert_eq!(f.slo_p99_s, Some(2.5));
         assert_eq!(f.queries, 500);
         assert_eq!(f.seed, 7);
+        assert_eq!(f.bucket_bins, 12);
 
         // sparse section takes defaults (default cluster has 2 systems)
         let cfg = ExperimentConfig::from_toml_str("[fleet]\ncounts = [[1], [1, 2]]\n").unwrap();
@@ -679,6 +693,7 @@ max_batch = 4
         assert_eq!(f.slo_p99_s, None);
         assert_eq!(f.queries, 2000);
         assert_eq!(f.seed, 2024);
+        assert_eq!(f.bucket_bins, 8, "bucket_bins defaults to 8");
 
         // absent section stays None
         assert!(ExperimentConfig::from_toml_str("").unwrap().fleet.is_none());
@@ -716,6 +731,10 @@ max_batch = 4
             ("[fleet]\ncounts = [[1], [1]]\nqueries = 0\n", "> 0"),
             ("[fleet]\ncounts = [[1], [1]]\nqueries = 10.5\n", "integer"),
             ("[fleet]\ncounts = [[1], [1]]\nseed = -1\n", ">= 0"),
+            // bucket_bins strict, >= 1
+            ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = 0\n", ">= 1"),
+            ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = 2.5\n", "integer"),
+            ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = -4\n", ">= 0"),
         ] {
             let err = ExperimentConfig::from_toml_str(src).unwrap_err();
             assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");

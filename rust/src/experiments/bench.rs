@@ -1,0 +1,427 @@
+//! `hetsched bench` — the repo's perf trajectory, pinned to a machine-
+//! readable BENCH.json so speedups are *measured* numbers a future PR
+//! can regress against, not changelog claims.
+//!
+//! Four sections, each timed by [`crate::util::benchkit::Bench`]
+//! (median ± MAD over adaptive samples):
+//!
+//! 1. **cost-table build** — [`CostTable::build`] (dense) vs
+//!    [`CostTable::build_dedup`] on an Alpaca-distributed trace; the
+//!    dedup speedup is the trace's pair-repeat factor.
+//! 2. **simulate** — the serial online engine vs the batched engine
+//!    under both queue layouts ([`QueueModel::PerWorker`] /
+//!    [`QueueModel::PerClass`]), over prebuilt shared tables so the
+//!    numbers isolate the engine, not table construction.
+//! 3. **formation** — FIFO-prefix vs shape-aware batched simulation,
+//!    plus the straggler-step delta the shape DP buys (the FIFO side
+//!    reuses section 2's per-worker measurement — same configuration,
+//!    one number, one name).
+//! 4. **contended BatchTable** — `--threads` workers hammering one
+//!    shared table with a hit-heavy composition stream, comparing the
+//!    lock-striped sharded cache against a faithful in-bench
+//!    reimplementation of the pre-PR-5 global-`Mutex<HashMap>` layout
+//!    (`MutexBatchTable`). The reported `speedup` is the acceptance
+//!    number for the sharding refactor.
+//!
+//! The wall-clock numbers depend on the machine; the *counters*
+//! (lookups, hits, evaluations, dispatches, straggler steps, unique
+//! rows) are deterministic for a given config — trajectory comparisons
+//! should lean on counters plus same-machine wall-clock deltas. Pin the
+//! worker-pool width with `HETSCHED_THREADS` (see
+//! [`crate::util::par::threads`]) when comparing across runners.
+
+use crate::config::schema::PolicyConfig;
+use crate::hw::catalog::system_catalog;
+use crate::hw::spec::SystemSpec;
+use crate::model::llm_catalog;
+use crate::perf::cost_table::{BatchTable, BucketSpec, CostTable};
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::{BatchCost, PerfModel};
+use crate::sched::formation::FormationPolicy;
+use crate::sched::policy::build_policy;
+use crate::sim::engine::{
+    simulate_batched_with_tables, simulate_with_table, BatchingOptions, QueueModel, SimOptions,
+};
+use crate::sim::report::SimReport;
+use crate::util::benchkit::{black_box, Bench, BenchReport};
+use crate::util::json::{to_string as json_to_string, Json};
+use crate::util::par::{pool_workers, threads};
+use crate::workload::generator::{Arrival, TraceGenerator};
+use crate::workload::Query;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Knobs for [`run_bench`]. `Default` is the full run; `--smoke` (CI)
+/// shrinks the trace and sample budget to seconds.
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    /// trace length for the table/sim/formation sections
+    pub queries: usize,
+    /// trace seed
+    pub seed: u64,
+    /// Poisson arrival rate of the bench trace (queries/s)
+    pub rate: f64,
+    /// threads hammering the shared BatchTable in the contended section
+    pub contention_threads: usize,
+    /// lookups per thread in the contended section
+    pub contention_ops: usize,
+    /// short samples + tiny budgets (CI smoke)
+    pub smoke: bool,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        Self {
+            queries: 4_000,
+            seed: 2024,
+            rate: 30.0,
+            contention_threads: 8,
+            contention_ops: 200_000,
+            smoke: false,
+        }
+    }
+}
+
+impl BenchOptions {
+    /// The CI smoke configuration: everything small enough to finish in
+    /// seconds while still exercising every section.
+    pub fn smoke() -> Self {
+        Self {
+            queries: 500,
+            contention_ops: 20_000,
+            smoke: true,
+            ..Self::default()
+        }
+    }
+}
+
+/// [`run_bench`]'s result: human-readable report lines plus the
+/// BENCH.json document (compact JSON, schema `hetsched-bench/1`).
+pub struct BenchOutput {
+    pub lines: Vec<String>,
+    pub json: String,
+}
+
+/// A faithful reimplementation of the pre-PR-5 [`BatchTable`] locking
+/// discipline — one global `Mutex<HashMap>`, get-lock / evaluate
+/// unlocked / insert-lock — kept *in the bench* as the baseline the
+/// sharded table is measured against, so "N× faster under contention"
+/// stays a number BENCH.json records rather than a claim the refactor
+/// asserts. (It also inherits the old miss-path race: two threads
+/// missing together both evaluate; the winner's insert sticks.)
+struct MutexBatchTable {
+    energy: EnergyModel,
+    systems: Vec<SystemSpec>,
+    cache: Mutex<HashMap<(usize, Vec<(u32, u32)>), Arc<BatchCost>>>,
+}
+
+impl MutexBatchTable {
+    fn new(energy: EnergyModel, systems: &[SystemSpec]) -> Self {
+        Self { energy, systems: systems.to_vec(), cache: Mutex::new(HashMap::new()) }
+    }
+
+    fn cost(&self, system: usize, members: &[(u32, u32)]) -> Arc<BatchCost> {
+        let key = (system, members.to_vec());
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return hit.clone();
+        }
+        let cost = Arc::new(self.energy.perf.batch_cost(&self.systems[system], &key.1));
+        self.cache.lock().unwrap().entry(key).or_insert(cost).clone()
+    }
+}
+
+/// Spawn `n_threads` workers that each issue `ops` lookups against one
+/// shared table, cycling a prepared composition pool from decorrelated
+/// offsets. Returns when every worker is done; the caller times the
+/// whole call.
+fn hammer<T: Sync>(
+    table: &T,
+    cost: impl Fn(&T, usize, &[(u32, u32)]) -> Arc<BatchCost> + Send + Sync + Copy,
+    pool: &[(usize, Vec<(u32, u32)>)],
+    n_threads: usize,
+    ops: usize,
+) {
+    std::thread::scope(|sc| {
+        for t in 0..n_threads {
+            sc.spawn(move || {
+                let mut idx = t * 31;
+                for _ in 0..ops {
+                    let (sys, members) = &pool[idx % pool.len()];
+                    black_box(cost(table, *sys, members));
+                    idx += 1;
+                }
+            });
+        }
+    });
+}
+
+/// Build the contended section's composition stream: `pool_size`
+/// batches of 1–`max_members` consecutive trace shapes, round-robined
+/// across systems. Small enough that steady-state lookups are
+/// overwhelmingly hits — the regime real sweeps reach through
+/// bucketing, and the one where lock contention, not model evaluation,
+/// dominates.
+fn composition_pool(
+    queries: &[Query],
+    n_systems: usize,
+    pool_size: usize,
+    max_members: usize,
+) -> Vec<(usize, Vec<(u32, u32)>)> {
+    let mut pool = Vec::with_capacity(pool_size);
+    let mut at = 0usize;
+    for k in 0..pool_size {
+        let len = 1 + k % max_members;
+        let members: Vec<(u32, u32)> = (0..len)
+            .map(|j| {
+                let q = &queries[(at + j) % queries.len()];
+                (q.input_tokens, q.output_tokens)
+            })
+            .collect();
+        at = (at + len) % queries.len();
+        pool.push((k % n_systems, members));
+    }
+    pool
+}
+
+fn report_json(r: &BenchReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("median_s".to_string(), Json::Num(r.median_s));
+    m.insert("mad_s".to_string(), Json::Num(r.mad_s));
+    m.insert("mean_s".to_string(), Json::Num(r.mean_s));
+    m.insert("min_s".to_string(), Json::Num(r.min_s));
+    m.insert("samples".to_string(), Json::Num(r.samples as f64));
+    m.insert("iters".to_string(), Json::Num(r.iters as f64));
+    m.insert("per_s".to_string(), Json::Num(r.throughput()));
+    Json::Obj(m)
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// Run every section and assemble the report. Deterministic counters,
+/// machine-dependent wall clocks — see the module docs for how to read
+/// a trajectory.
+pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
+    let harness = if opts.smoke { Bench::quick() } else { Bench::default() };
+    let systems = system_catalog();
+    let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+    let queries =
+        TraceGenerator::new(Arrival::Poisson { rate: opts.rate }, opts.seed).generate(opts.queries);
+    let n = opts.queries as u64;
+    let mut lines = Vec::new();
+    let mut sections = BTreeMap::new();
+    lines.push(format!(
+        "hetsched bench: {} queries (λ={}, seed {}), {} cores ({} pool workers), {} build",
+        opts.queries,
+        opts.rate,
+        opts.seed,
+        threads(),
+        pool_workers(),
+        if cfg!(debug_assertions) { "DEBUG (numbers not meaningful)" } else { "release" }
+    ));
+
+    // ── 1. cost-table build: dense vs (m, n)-dedup ─────────────────────
+    let r_dense = harness.run("cost-table build (dense)", n, || {
+        black_box(CostTable::build(&queries, &systems, &energy));
+    });
+    lines.push(r_dense.line());
+    let r_dedup = harness.run("cost-table build (dedup)", n, || {
+        black_box(CostTable::build_dedup(&queries, &systems, &energy));
+    });
+    lines.push(r_dedup.line());
+    let table = CostTable::build(&queries, &systems, &energy);
+    let unique_rows = CostTable::build_dedup(&queries, &systems, &energy).n_unique_rows();
+    let build_speedup = r_dense.median_s / r_dedup.median_s;
+    lines.push(format!(
+        "  dedup: {unique_rows}/{} unique rows, {build_speedup:.2}x build speedup",
+        opts.queries
+    ));
+    let mut sec = BTreeMap::new();
+    sec.insert("dense".to_string(), report_json(&r_dense));
+    sec.insert("dedup".to_string(), report_json(&r_dedup));
+    sec.insert("unique_rows".to_string(), num(unique_rows as f64));
+    sec.insert("rows_total".to_string(), num(opts.queries as f64));
+    sec.insert("speedup".to_string(), num(build_speedup));
+    sections.insert("cost_table".to_string(), Json::Obj(sec));
+
+    // ── 2. serial vs batched simulate (both queue layouts) ─────────────
+    // shared prebuilt tables isolate the engine; the bucketed batch memo
+    // is warm after the first sample, which is the sweep steady state
+    let buckets = BucketSpec::from_trace(&queries, 8);
+    let batch_table = BatchTable::bucketed(energy.clone(), &systems, buckets);
+    let policy_cfg = PolicyConfig::JoinShortestQueue;
+    let run_batched = |formation: FormationPolicy, queues: QueueModel| -> SimReport {
+        let mut p = build_policy(&policy_cfg, energy.clone(), &systems);
+        simulate_batched_with_tables(
+            &queries,
+            &systems,
+            p.as_mut(),
+            &table,
+            &batch_table,
+            &SimOptions {
+                batching: Some(
+                    BatchingOptions::new(8, 0.1).with_formation(formation).with_queues(queues),
+                ),
+                ..Default::default()
+            },
+        )
+    };
+    let r_serial = harness.run("simulate (serial online)", n, || {
+        let mut p = build_policy(&policy_cfg, energy.clone(), &systems);
+        black_box(simulate_with_table(&queries, &systems, p.as_mut(), &table, &SimOptions::default()));
+    });
+    lines.push(r_serial.line());
+    let r_per_worker = harness.run("simulate (batched, per-worker queues)", n, || {
+        black_box(run_batched(FormationPolicy::FifoPrefix, QueueModel::PerWorker));
+    });
+    lines.push(r_per_worker.line());
+    let r_per_class = harness.run("simulate (batched, per-class queue)", n, || {
+        black_box(run_batched(FormationPolicy::FifoPrefix, QueueModel::PerClass));
+    });
+    lines.push(r_per_class.line());
+    let rep_pw = run_batched(FormationPolicy::FifoPrefix, QueueModel::PerWorker);
+    let mut sec = BTreeMap::new();
+    sec.insert("serial".to_string(), report_json(&r_serial));
+    sec.insert("batched_per_worker".to_string(), report_json(&r_per_worker));
+    sec.insert("batched_per_class".to_string(), report_json(&r_per_class));
+    sec.insert("dispatches".to_string(), num(rep_pw.total_dispatches() as f64));
+    sec.insert("mean_batch_size".to_string(), num(rep_pw.mean_batch_size()));
+    sections.insert("simulate".to_string(), Json::Obj(sec));
+
+    // ── 3. formation: FIFO prefix vs shape-aware window DP ─────────────
+    // the FIFO side of this comparison is exactly section 2's
+    // per-worker batched run (r_per_worker / rep_pw) — reuse it rather
+    // than re-measuring the same configuration under a second name
+    let shape = FormationPolicy::ShapeAware { n_bins: 8 };
+    let r_shape = harness.run("formation (shape:8, incremental window)", n, || {
+        black_box(run_batched(shape, QueueModel::PerWorker));
+    });
+    lines.push(r_shape.line());
+    let rep_shape = run_batched(shape, QueueModel::PerWorker);
+    lines.push(format!(
+        "  straggler steps: fifo {} -> shape {} ({} dispatches each)",
+        rep_pw.total_straggler_steps(),
+        rep_shape.total_straggler_steps(),
+        rep_shape.total_dispatches()
+    ));
+    let mut sec = BTreeMap::new();
+    sec.insert("fifo".to_string(), report_json(&r_per_worker));
+    sec.insert("shape8".to_string(), report_json(&r_shape));
+    sec.insert("straggler_steps_fifo".to_string(), num(rep_pw.total_straggler_steps() as f64));
+    sec.insert("straggler_steps_shape".to_string(), num(rep_shape.total_straggler_steps() as f64));
+    sections.insert("formation".to_string(), Json::Obj(sec));
+
+    // ── 4. contended shared BatchTable: global mutex vs sharded ────────
+    let nt = opts.contention_threads;
+    let ops = opts.contention_ops;
+    let total_ops = (nt * ops) as u64;
+    let pool = composition_pool(&queries, systems.len(), 256, 8);
+    let mutex_table = MutexBatchTable::new(energy.clone(), &systems);
+    let sharded = BatchTable::new(energy.clone(), &systems);
+    let r_mutex =
+        harness.run(&format!("contended lookups (global mutex, {nt} threads)"), total_ops, || {
+            hammer(&mutex_table, |t, s, m| t.cost(s, m), &pool, nt, ops);
+        });
+    lines.push(r_mutex.line());
+    let r_sharded =
+        harness.run(&format!("contended lookups (sharded, {nt} threads)"), total_ops, || {
+            hammer(&sharded, |t, s, m| t.cost(s, m), &pool, nt, ops);
+        });
+    lines.push(r_sharded.line());
+    let speedup = r_mutex.median_s / r_sharded.median_s;
+    lines.push(format!(
+        "  sharded vs mutex speedup: {speedup:.2}x at {nt} threads ({} distinct cells, hit rate {:.2}%)",
+        sharded.evaluations(),
+        100.0 * sharded.hit_rate()
+    ));
+    let mut sec = BTreeMap::new();
+    sec.insert("threads".to_string(), num(nt as f64));
+    sec.insert("ops_per_thread".to_string(), num(ops as f64));
+    sec.insert("pool_compositions".to_string(), num(pool.len() as f64));
+    sec.insert("mutex_baseline".to_string(), report_json(&r_mutex));
+    sec.insert("sharded".to_string(), report_json(&r_sharded));
+    sec.insert("speedup".to_string(), num(speedup));
+    sec.insert("sharded_lookups".to_string(), num(sharded.lookups() as f64));
+    sec.insert("sharded_hit_rate".to_string(), num(sharded.hit_rate()));
+    sec.insert("sharded_evaluations".to_string(), num(sharded.evaluations() as f64));
+    sections.insert("contended_batch_table".to_string(), Json::Obj(sec));
+
+    // ── assemble BENCH.json ────────────────────────────────────────────
+    let mut host = BTreeMap::new();
+    host.insert("cores".to_string(), num(threads() as f64));
+    host.insert("pool_workers".to_string(), num(pool_workers() as f64));
+    host.insert(
+        "build".to_string(),
+        Json::Str(if cfg!(debug_assertions) { "debug" } else { "release" }.to_string()),
+    );
+    let mut config = BTreeMap::new();
+    config.insert("queries".to_string(), num(opts.queries as f64));
+    config.insert("seed".to_string(), num(opts.seed as f64));
+    config.insert("rate".to_string(), num(opts.rate));
+    config.insert("contention_threads".to_string(), num(nt as f64));
+    config.insert("contention_ops".to_string(), num(ops as f64));
+    let mut root = BTreeMap::new();
+    root.insert("schema".to_string(), Json::Str("hetsched-bench/1".to_string()));
+    root.insert("smoke".to_string(), Json::Bool(opts.smoke));
+    root.insert("host".to_string(), Json::Obj(host));
+    root.insert("config".to_string(), Json::Obj(config));
+    root.insert("sections".to_string(), Json::Obj(sections));
+    BenchOutput { lines, json: json_to_string(&Json::Obj(root)) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full smoke path CI runs: every section executes, the JSON
+    /// parses back, and the deterministic counters are present and sane.
+    /// (Tiny sizes — this is a plumbing test, not a measurement.)
+    #[test]
+    fn smoke_bench_emits_parseable_json() {
+        let opts = BenchOptions {
+            queries: 60,
+            seed: 7,
+            rate: 20.0,
+            contention_threads: 2,
+            contention_ops: 300,
+            smoke: true,
+        };
+        let out = run_bench(&opts);
+        assert!(!out.lines.is_empty());
+        let v = Json::parse(&out.json).expect("BENCH.json must parse");
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some("hetsched-bench/1"));
+        assert_eq!(v.get("smoke"), Some(&Json::Bool(true)));
+        let sections = v.get("sections").expect("sections");
+        for key in ["cost_table", "simulate", "formation", "contended_batch_table"] {
+            assert!(sections.get(key).is_some(), "missing section {key}");
+        }
+        let ct = sections.get("cost_table").unwrap();
+        let unique = ct.get("unique_rows").unwrap().as_usize().unwrap();
+        assert!(unique >= 1 && unique <= 60);
+        let cb = sections.get("contended_batch_table").unwrap();
+        assert!(cb.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        let looked = cb.get("sharded_lookups").unwrap().as_f64().unwrap();
+        // warmup + samples each issue threads × ops lookups
+        assert!(looked >= 600.0, "contended section must have run: {looked} lookups");
+        let hit_rate = cb.get("sharded_hit_rate").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&hit_rate));
+        // every timing report carries a positive median
+        let sim = sections.get("simulate").unwrap();
+        for k in ["serial", "batched_per_worker", "batched_per_class"] {
+            let med = sim.get(k).unwrap().get("median_s").unwrap().as_f64().unwrap();
+            assert!(med > 0.0, "{k} median must be positive");
+        }
+    }
+
+    #[test]
+    fn composition_pool_shapes() {
+        let queries: Vec<Query> = (0..10u64).map(|id| Query::new(id, 8 + id as u32, 16)).collect();
+        let pool = composition_pool(&queries, 3, 20, 8);
+        assert_eq!(pool.len(), 20);
+        for (k, (sys, members)) in pool.iter().enumerate() {
+            assert_eq!(*sys, k % 3);
+            assert_eq!(members.len(), 1 + k % 8);
+        }
+    }
+}

@@ -2,11 +2,13 @@
 //! CLI (`hetsched <subcommand>`) and the bench binaries so both always
 //! agree. Each returns render-ready tables plus the raw series.
 
+pub mod bench;
 pub mod figures;
 pub mod headline;
 pub mod runner;
 pub mod sweeps;
 
+pub use bench::{run_bench, BenchOptions, BenchOutput};
 pub use figures::{fig3_alpaca, table1};
 pub use headline::{headline_savings, HeadlineResult};
 pub use runner::{

@@ -369,7 +369,8 @@ pub struct FleetPoint {
 }
 
 /// A [`fleet_sweep`] result: the grid points plus the per-rate best
-/// fleet and the [`CostTable::build_dedup`] sharing statistics.
+/// fleet, the [`CostTable::build_dedup`] sharing statistics, and — for
+/// batched sweeps — the shared bucketed-[`BatchTable`] cache statistics.
 #[derive(Clone, Debug)]
 pub struct FleetSweepResult {
     /// rate-major, then count-grid odometer order (last system's grid
@@ -384,6 +385,29 @@ pub struct FleetSweepResult {
     /// per rate, `(unique (m, n) rows, trace length)` of the shared
     /// deduplicated [`CostTable`] — the build-cost shrink dedup bought
     pub dedup_rows: Vec<(usize, usize)>,
+    /// [`BatchTable`] lookups across every batched fleet point (0 when
+    /// the sweep ran the serial engine)
+    pub batch_table_lookups: u64,
+    /// lookups served from the shared memo
+    pub batch_table_hits: u64,
+    /// distinct (bucket-signature, system) cells actually evaluated
+    pub batch_table_evaluations: u64,
+    /// smallest effective (m, n) quantile-bin counts across the per-rate
+    /// bucket specs (each rate derives its own bins from its own trace);
+    /// `(0, 0)` for serial sweeps
+    pub bucket_bins: (usize, usize),
+}
+
+impl FleetSweepResult {
+    /// Fraction of batch-cost lookups served from the shared memo
+    /// (0 when the sweep ran serial).
+    pub fn batch_table_hit_rate(&self) -> f64 {
+        if self.batch_table_lookups == 0 {
+            0.0
+        } else {
+            self.batch_table_hits as f64 / self.batch_table_lookups as f64
+        }
+    }
 }
 
 /// Enumerate the cartesian product of per-system count grids in
@@ -432,11 +456,17 @@ pub fn count_grid_points(grids: &[Vec<usize>]) -> Vec<Vec<usize>> {
 /// attract the router).
 ///
 /// `batching: Some(..)` runs every fleet point through the **batched**
-/// engine (one shared memoized [`BatchTable`] across the whole grid) so
-/// provisioning decisions reflect the batched deployment a `[batching]`
-/// config describes — fleet-sweep must not silently fall back to serial
-/// numbers the way pre-PR-3 `simulate --config` did. `None` runs the
-/// serial online engine.
+/// engine so provisioning decisions reflect the batched deployment a
+/// `[batching]` config describes — fleet-sweep must not silently fall
+/// back to serial numbers the way pre-PR-3 `simulate --config` did.
+/// `None` runs the serial online engine. Batched fleet points share one
+/// **quantile-bucketed** [`BatchTable`] per rate (`bucket_bins` bins per
+/// axis, derived from that rate's own trace — see [`BucketSpec`]): the
+/// pre-PR-5 grid-wide table was exact-keyed, and exact compositions
+/// almost never repeat on long traces, so its hit rate was ~0 and every
+/// fleet point re-evaluated nearly every batch; bucketing turns the
+/// grid's composition reuse into real sharing, with the hit rate
+/// reported on the result.
 ///
 /// ```
 /// use hetsched::config::schema::PolicyConfig;
@@ -450,7 +480,7 @@ pub fn count_grid_points(grids: &[Vec<usize>]) -> Vec<Vec<usize>> {
 /// let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
 /// let grids = vec![vec![1, 2], vec![1], vec![1]]; // 1 or 2 M1-Pro nodes
 /// let sweep = fleet_sweep(
-///     &systems, &energy, &PolicyConfig::JoinShortestQueue, None,
+///     &systems, &energy, &PolicyConfig::JoinShortestQueue, None, 8,
 ///     &[10.0], &grids, None, 120, 42,
 /// );
 /// assert_eq!(sweep.points.len(), 2);
@@ -463,6 +493,7 @@ pub fn fleet_sweep(
     energy: &EnergyModel,
     policy: &PolicyConfig,
     batching: Option<BatchingOptions>,
+    bucket_bins: usize,
     rates: &[f64],
     count_grids: &[Vec<usize>],
     slo_p99_s: Option<f64>,
@@ -475,19 +506,31 @@ pub fn fleet_sweep(
         count_grids.iter().flatten().all(|&c| c >= 1),
         "fleet counts must be >= 1 (drop a system from the cluster to exclude it)"
     );
+    assert!(bucket_bins >= 1, "bucket_bins must be >= 1");
     let fleets = count_grid_points(count_grids);
-    // one memoized batch table for the whole grid: compositions repeat
-    // across fleet points and rates, and cells are deterministic
-    let batch_table = batching.map(|_| BatchTable::new(energy.clone(), systems));
     let mut points = Vec::with_capacity(rates.len() * fleets.len());
     let mut best_per_rate = Vec::with_capacity(rates.len());
     let mut dedup_rows = Vec::with_capacity(rates.len());
+    let mut bt_lookups = 0u64;
+    let mut bt_hits = 0u64;
+    let mut bt_evaluations = 0u64;
+    let mut bins = (usize::MAX, usize::MAX);
     for &rate in rates {
         let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n_queries);
         // counts never enter E/R cells, so every fleet point of this
         // rate shares one deduplicated table
         let table = CostTable::build_dedup(&queries, systems, energy);
         dedup_rows.push((table.n_unique_rows(), queries.len()));
+        // one bucketed memoized batch table per rate (bins derived from
+        // this rate's trace): compositions repeat across fleet points,
+        // and bucketed cells are deterministic, so every point of the
+        // rate shares the memo
+        let batch_table = batching.map(|_| {
+            let spec = BucketSpec::from_trace(&queries, bucket_bins);
+            let (mb, nb) = spec.bin_counts();
+            bins = (bins.0.min(mb), bins.1.min(nb));
+            BatchTable::bucketed(energy.clone(), systems, spec)
+        });
         let rate_points = par_map(&fleets, |counts| {
             let mut sized: Vec<SystemSpec> = systems.to_vec();
             for (spec, &c) in sized.iter_mut().zip(counts) {
@@ -529,8 +572,25 @@ pub fn fleet_sweep(
         }
         best_per_rate.push(best_rel.map(|i| base + i));
         points.extend(rate_points);
+        if let Some(bt) = &batch_table {
+            bt_lookups += bt.lookups();
+            bt_hits += bt.hits();
+            bt_evaluations += bt.evaluations() as u64;
+        }
     }
-    FleetSweepResult { points, best_per_rate, slo_p99_s, dedup_rows }
+    if bins.0 == usize::MAX {
+        bins = (0, 0); // serial sweep (or no rates): no bucket table
+    }
+    FleetSweepResult {
+        points,
+        best_per_rate,
+        slo_p99_s,
+        dedup_rows,
+        batch_table_lookups: bt_lookups,
+        batch_table_hits: bt_hits,
+        batch_table_evaluations: bt_evaluations,
+        bucket_bins: bins,
+    }
 }
 
 #[cfg(test)]
@@ -765,12 +825,17 @@ mod tests {
             &em,
             &PolicyConfig::JoinShortestQueue,
             None,
+            8,
             &[25.0],
             &grids,
             Some(1e6), // an SLO nothing misses: feasibility plumbing only
             250,
             7,
         );
+        // serial sweep: no batch table in play
+        assert_eq!(sweep.batch_table_lookups, 0);
+        assert_eq!(sweep.batch_table_hit_rate(), 0.0);
+        assert_eq!(sweep.bucket_bins, (0, 0));
         assert_eq!(sweep.points.len(), 2);
         assert_eq!(sweep.points[0].counts, vec![1, 1, 1]);
         assert_eq!(sweep.points[1].counts, vec![2, 1, 1]);
@@ -812,6 +877,7 @@ mod tests {
             &em,
             &PolicyConfig::Cost { lambda: 1.0 },
             None,
+            8,
             &[rate],
             &grids,
             None,
@@ -851,6 +917,7 @@ mod tests {
             &em,
             &PolicyConfig::JoinShortestQueue,
             None,
+            8,
             &[40.0],
             &grids,
             Some(1e-9), // sub-nanosecond p99: unreachable
@@ -864,6 +931,7 @@ mod tests {
             &em,
             &PolicyConfig::JoinShortestQueue,
             None,
+            8,
             &[40.0],
             &grids,
             None,

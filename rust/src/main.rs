@@ -39,6 +39,7 @@ system:
   batching-sweep    batched-sim energy/latency grid over max_batch × linger × λ
   formation-sweep   FIFO vs shape-aware batch formation over max_batch × λ
   fleet-sweep       provisioning grid: node counts × λ over one deduplicated CostTable
+  bench             time the hot paths and write the BENCH.json perf trajectory
   serve             start the live serving demo on the AOT artifacts
   calibrate         fit perf-model constants from a measured sweep
 
@@ -57,6 +58,7 @@ fn main() {
         Some("batching-sweep") => cmd_batching_sweep(&argv[1..]),
         Some("formation-sweep") => cmd_formation_sweep(&argv[1..]),
         Some("fleet-sweep") => cmd_fleet_sweep(&argv[1..]),
+        Some("bench") => cmd_bench(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("calibrate") => cmd_calibrate(&argv[1..]),
         Some("--help") | Some("-h") | None => {
@@ -646,6 +648,7 @@ fn cmd_fleet_sweep(argv: &[String]) -> Result<(), String> {
         .opt("slo", "", "p99 latency SLO in seconds (empty = no SLO filter)")
         .opt("queries", "", "trace length per rate (default 2000)")
         .opt("seed", "", "trace seed (default 2024)")
+        .opt("bucket-bins", "", "quantile bins per (m, n) axis for the batched grid's shared BatchTable (default 8)")
         .flag("csv", "emit CSV")
         .parse(argv)?;
     // the config file (when given) supplies the cluster, the policy, and
@@ -717,6 +720,16 @@ fn cmd_fleet_sweep(argv: &[String]) -> Result<(), String> {
     // configured batched deployment must not be provisioned from serial
     // numbers (the silent-serial bug class `simulate --config` had)
     let batching = cfg.as_ref().and_then(|c| c.batching);
+    let bucket_bins = match args.get("bucket-bins") {
+        "" => fleet.as_ref().map_or(8, |f| f.bucket_bins),
+        _ => {
+            let b = args.get_usize("bucket-bins")?;
+            if b == 0 {
+                return Err("--bucket-bins must be >= 1".into());
+            }
+            b
+        }
+    };
 
     let fleet_points: usize = count_grids.iter().map(Vec::len).product();
     println!(
@@ -737,7 +750,8 @@ fn cmd_fleet_sweep(argv: &[String]) -> Result<(), String> {
         slo.map(|s| format!(", SLO p99 <= {s}s")).unwrap_or_default()
     );
     let sweep = fleet_sweep(
-        &systems, &energy, &policy, batching, &rates, &count_grids, slo, n_queries, seed,
+        &systems, &energy, &policy, batching, bucket_bins, &rates, &count_grids, slo, n_queries,
+        seed,
     );
 
     let mut t = Table::new(&[
@@ -790,6 +804,68 @@ fn cmd_fleet_sweep(argv: &[String]) -> Result<(), String> {
             *total as f64 / (*unique).max(1) as f64
         );
     }
+    if sweep.batch_table_lookups > 0 {
+        println!(
+            "bucketed BatchTable: hit rate {:.1}% over {} lookups, {} cells evaluated, \
+             ({} × {}) bins per rate",
+            100.0 * sweep.batch_table_hit_rate(),
+            sweep.batch_table_lookups,
+            sweep.batch_table_evaluations,
+            sweep.bucket_bins.0,
+            sweep.bucket_bins.1
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("bench")
+        .opt("queries", "4000", "trace length for the table/sim/formation sections")
+        .opt("seed", "2024", "trace seed")
+        .opt("rate", "30", "Poisson arrival rate λ of the bench trace (q/s)")
+        .opt("threads", "8", "threads hammering the shared BatchTable in the contended section")
+        .opt("ops", "200000", "lookups per thread in the contended section")
+        .opt("out", "BENCH.json", "output path for the machine-readable report")
+        .flag("smoke", "tiny trace + short sample budgets (CI smoke: seconds, not minutes; caps --queries at 500 and --ops at 20000)")
+        .parse(argv)?;
+    let smoke = args.get_bool("smoke");
+    let defaults = if smoke { hetsched::experiments::BenchOptions::smoke() } else { Default::default() };
+    let queries = args.get_usize("queries")?;
+    let ops = args.get_usize("ops")?;
+    // --smoke caps the work so a CI job stays in seconds even with the
+    // default flag values; smaller explicit values still apply, and a
+    // capped larger one is announced so BENCH.json's recorded config
+    // can't silently disagree with the invocation
+    if smoke && queries > defaults.queries {
+        println!("--smoke: capping --queries {queries} at {}", defaults.queries);
+    }
+    if smoke && ops > defaults.contention_ops {
+        println!("--smoke: capping --ops {ops} at {}", defaults.contention_ops);
+    }
+    let opts = hetsched::experiments::BenchOptions {
+        queries: if smoke { queries.min(defaults.queries) } else { queries },
+        seed: args.get_u64("seed")?,
+        rate: args.get_f64("rate")?,
+        contention_threads: args.get_usize("threads")?,
+        contention_ops: if smoke { ops.min(defaults.contention_ops) } else { ops },
+        smoke,
+    };
+    if opts.queries == 0 {
+        return Err("--queries must be > 0".into());
+    }
+    if !(opts.rate.is_finite() && opts.rate > 0.0) {
+        return Err(format!("--rate must be positive, got {}", opts.rate));
+    }
+    if opts.contention_threads == 0 || opts.contention_ops == 0 {
+        return Err("--threads and --ops must be >= 1".into());
+    }
+    let out = hetsched::experiments::run_bench(&opts);
+    for line in &out.lines {
+        println!("{line}");
+    }
+    let path = args.get("out");
+    std::fs::write(path, &out.json).map_err(|e| format!("{path}: {e}"))?;
+    println!("wrote {path}");
     Ok(())
 }
 

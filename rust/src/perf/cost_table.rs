@@ -27,8 +27,9 @@ use crate::hw::spec::SystemSpec;
 use crate::util::par::par_map;
 use crate::workload::Query;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Cost of one query on one system. Infeasible cells carry `NaN` costs
 /// and a non-`Ok` feasibility; consumers must check feasibility before
@@ -340,18 +341,56 @@ fn lower_edge(edges: &[u32], v: u32) -> u32 {
 /// [`crate::experiments::runner::batching_sweep`] sharing one table — is
 /// a lookup. [`BatchTable::bucketed`] keys by quantile-bin signature
 /// instead of exact composition (see [`BucketSpec`]), which raises hit
-/// rates from near zero to useful on long traces. Thread-safe: sweep
-/// grid points fan over [`crate::util::par`] against one shared
-/// instance, and bucketed cells are evaluated at the deterministic bin
-/// representative — never at whichever actual composition got there
-/// first — so results are identical at any core count.
+/// rates from near zero to useful on long traces.
+///
+/// ## Concurrency
+///
+/// Sweep grid points fan over [`crate::util::par`] against one shared
+/// instance, so the cache is **lock-striped**: keys hash to one of
+/// [`BATCH_TABLE_SHARDS`] independently locked maps, and a lookup takes
+/// exactly one shard-lock acquisition (the pre-PR-5 layout funneled the
+/// whole worker pool through a single global `Mutex<HashMap>`, which
+/// serialized hit-heavy sweeps — `hetsched bench` measures the
+/// difference). Each cell is an [`OnceLock`] slot, so two workers
+/// missing the same key agree on one slot under the shard lock and only
+/// one of them evaluates the model — the other blocks on the cell
+/// (in-flight de-duplication; the pre-PR-5 miss path evaluated outside
+/// the lock and could run the model twice for the same key, making
+/// [`Self::evaluations`] drift under contention). Bucketed cells are
+/// evaluated at the deterministic bin representative — never at
+/// whichever actual composition got there first — so results are
+/// identical at any core count.
 pub struct BatchTable {
     energy: EnergyModel,
     systems: Vec<SystemSpec>,
     buckets: Option<BucketSpec>,
-    cache: Mutex<HashMap<BatchKey, Arc<BatchCost>>>,
+    /// lock-striped cache: `shards[hash(key) % BATCH_TABLE_SHARDS]`
+    shards: Vec<Shard>,
     lookups: AtomicU64,
     hits: AtomicU64,
+    evaluations: AtomicU64,
+}
+
+/// One memo cell: initialized exactly once, by whichever worker won the
+/// insert; concurrent missers block on it instead of re-evaluating.
+type BatchSlot = Arc<OnceLock<Arc<BatchCost>>>;
+
+/// One lock stripe of the cache.
+type Shard = Mutex<HashMap<BatchKey, BatchSlot>>;
+
+/// Lock stripes of a [`BatchTable`] (power of two: the shard index is a
+/// mask of the key hash). 64 stripes keep the collision probability of
+/// a full worker pool low while staying cache-friendly.
+pub const BATCH_TABLE_SHARDS: usize = 64;
+
+/// Shard index of a key: its hash masked to the stripe count. Uses the
+/// std `DefaultHasher` with a fixed state, so sharding is deterministic
+/// across runs (the per-shard `HashMap`s keep their own randomized
+/// SipHash states — determinism of *results* never depends on layout).
+fn shard_index(key: &BatchKey) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    key.hash(&mut h);
+    (h.finish() as usize) & (BATCH_TABLE_SHARDS - 1)
 }
 
 impl BatchTable {
@@ -362,9 +401,10 @@ impl BatchTable {
             energy,
             systems: systems.to_vec(),
             buckets: None,
-            cache: Mutex::new(HashMap::new()),
+            shards: (0..BATCH_TABLE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
+            evaluations: AtomicU64::new(0),
         }
     }
 
@@ -392,6 +432,12 @@ impl BatchTable {
     /// Deterministic: a hit returns exactly what the miss computed, and
     /// bucketed cells are always evaluated at the bin representative —
     /// independent of which actual composition reached the bucket first.
+    ///
+    /// One shard-lock acquisition per lookup. Two workers missing the
+    /// same key both find (or one inserts, the other finds) a single
+    /// [`OnceLock`] slot under that lock, so the model runs exactly once
+    /// per cell even under contention and [`Self::evaluations`] stays
+    /// exact; the model evaluation itself runs with the lock released.
     pub fn cost(&self, system: usize, members: &[(u32, u32)]) -> Arc<BatchCost> {
         self.lookups.fetch_add(1, Ordering::Relaxed);
         let keyed: Vec<(u32, u32)> = match &self.buckets {
@@ -399,15 +445,30 @@ impl BatchTable {
             Some(b) => members.iter().map(|&(m, n)| b.representative(m, n)).collect(),
         };
         let key: BatchKey = (system, keyed);
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+        let mut shard = self.shards[shard_index(&key)].lock().unwrap();
+        if let Some(slot) = shard.get(&key) {
+            let slot = Arc::clone(slot);
+            drop(shard);
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return hit.clone();
+            // the inserting worker may still be evaluating: get_or_init
+            // blocks until the cell is set (and evaluates here only if
+            // that worker panicked out of the model)
+            return Arc::clone(slot.get_or_init(|| self.evaluate(system, &key.1)));
         }
-        // evaluate outside the lock so concurrent sweeps don't serialize
-        // on the model; a racing duplicate computes the same value and
-        // the first insert wins
-        let cost = Arc::new(self.energy.perf.batch_cost(&self.systems[system], &key.1));
-        self.cache.lock().unwrap().entry(key).or_insert(cost).clone()
+        let pairs = key.1.clone();
+        let slot = Arc::new(OnceLock::new());
+        shard.insert(key, Arc::clone(&slot));
+        drop(shard);
+        // evaluate with the shard unlocked so other keys of this stripe
+        // aren't serialized on the model
+        Arc::clone(slot.get_or_init(|| self.evaluate(system, &pairs)))
+    }
+
+    /// The single model-evaluation path behind every cell, counted
+    /// exactly once per [`OnceLock`] initialization.
+    fn evaluate(&self, system: usize, pairs: &[(u32, u32)]) -> Arc<BatchCost> {
+        self.evaluations.fetch_add(1, Ordering::Relaxed);
+        Arc::new(self.energy.perf.batch_cost(&self.systems[system], pairs))
     }
 
     /// Cache lookups served so far (both modes).
@@ -453,9 +514,12 @@ impl BatchTable {
         k
     }
 
-    /// Distinct (composition, system) buckets evaluated so far.
+    /// Model evaluations performed so far — one per distinct
+    /// (composition, system) cell, **exactly**, even under concurrent
+    /// misses of the same key (the in-flight slot de-duplicates them;
+    /// regression-tested by hammering one key from the whole pool).
     pub fn evaluations(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.evaluations.load(Ordering::Relaxed) as usize
     }
 }
 
@@ -704,6 +768,64 @@ mod tests {
         let uniq: Vec<Query> = (0..50u64).map(|id| Query::new(id, 8 + id as u32, 8)).collect();
         let t = CostTable::build_dedup(&uniq, &systems, &energy);
         assert_eq!(t.n_unique_rows(), 50);
+    }
+
+    /// ISSUE 5 satellite regression: the pre-PR-5 miss path (get-lock,
+    /// evaluate unlocked, insert-lock) could evaluate the same key twice
+    /// when two pool workers missed together. Hammer one key from the
+    /// whole `util::par` worker pool: the in-flight slot must collapse
+    /// every concurrent miss into exactly one evaluation, and the
+    /// counters must be exact — `evaluations == 1`,
+    /// `hits == lookups − 1`.
+    #[test]
+    fn concurrent_misses_on_one_key_evaluate_once() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let t = BatchTable::new(energy.clone(), &systems);
+        let members = [(48u32, 96u32), (16, 512)];
+        let n = 4_000usize;
+        let costs = crate::util::par::par_map_range(n, |_| t.cost(1, &members));
+        assert_eq!(t.evaluations(), 1, "one key must evaluate exactly once");
+        assert_eq!(t.lookups(), n as u64);
+        assert_eq!(t.hits(), n as u64 - 1, "every lookup but the winner is a hit");
+        // every caller got the same cell, bit-identical to direct eval
+        let direct = energy.perf.batch_cost(&systems[1], &members);
+        for c in &costs {
+            assert!(Arc::ptr_eq(c, &costs[0]));
+            assert_eq!(c.energy_j.to_bits(), direct.energy_j.to_bits());
+            assert_eq!(c.runtime_s.to_bits(), direct.runtime_s.to_bits());
+        }
+    }
+
+    /// Sharded cells are bit-identical to direct model evaluation under
+    /// concurrent mixed-key access, and the counters stay exact:
+    /// `evaluations` = distinct keys, `hits + evaluations = lookups`.
+    #[test]
+    fn concurrent_mixed_keys_have_exact_counters() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let t = BatchTable::new(energy.clone(), &systems);
+        // 16 distinct (composition, system) cells, looked up 1000 times
+        // from the pool
+        let pool: Vec<(usize, Vec<(u32, u32)>)> = (0..16u32)
+            .map(|i| (1 + (i as usize % 2), vec![(8 + i, 16 + i), (8, 8 + i % 4)]))
+            .collect();
+        let n = 1_000usize;
+        crate::util::par::par_map_range(n, |i| {
+            let (sys, members) = &pool[i % pool.len()];
+            t.cost(*sys, members)
+        });
+        assert_eq!(t.evaluations(), 16, "one evaluation per distinct (composition, system)");
+        assert_eq!(t.lookups(), n as u64);
+        assert_eq!(t.hits() + t.evaluations() as u64, t.lookups());
+        // and every cell matches direct evaluation exactly
+        for (sys, members) in &pool {
+            let cell = t.cost(*sys, members);
+            let direct = energy.perf.batch_cost(&systems[*sys], members);
+            assert_eq!(cell.energy_j.to_bits(), direct.energy_j.to_bits());
+            assert_eq!(cell.runtime_s.to_bits(), direct.runtime_s.to_bits());
+            assert_eq!(cell.member_finish_s, direct.member_finish_s);
+        }
     }
 
     #[test]

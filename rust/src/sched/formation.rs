@@ -155,70 +155,213 @@ impl FormationPolicy {
     }
 }
 
-/// Drag-minimal consecutive partition over the n-ranked window; returns
-/// the group containing the oldest waiter, as ascending waiting-indices.
-fn select_shape_aware(window: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
-    let w = window.len();
-    let k = max_batch;
-    let groups = w.div_ceil(k);
-    // stable rank by (n, arrival): `order[r]` = waiting-index of rank r
-    let mut order: Vec<usize> = (0..w).collect();
-    order.sort_by_key(|&i| (window[i].1, i));
-    let n_at = |rank: usize| window[order[rank]].1 as u64;
+/// Reusable buffers for the window-partition DP, so the batched
+/// engine's dispatch loop performs no allocations in steady state
+/// ([`SortedWindow::select_drag_minimal`] clears and refills these
+/// every call; capacity is retained across dispatches). A fresh
+/// default-constructed scratch is always valid.
+#[derive(Clone, Debug, Default)]
+pub struct FormationScratch {
+    /// flattened `(groups + 1) × (w + 1)` DP table
+    dp: Vec<u64>,
+    /// flattened cut table matching `dp`
+    cut: Vec<usize>,
+    /// prefix sums of the ranked output lengths
+    prefix: Vec<u64>,
+}
 
-    // dp[g][i]: minimal total drag partitioning ranks [0, i) into g
-    // consecutive groups of size 1..=k. cut[g][i] = start rank of the
-    // last group in the optimum. Deterministic: sizes scanned in fixed
-    // order, strict `<` improvement.
+/// Run the drag-minimal consecutive-partition DP over a ranked window
+/// (`n_at(r)` = the r-th smallest output length, ties already broken by
+/// arrival) and return the rank range `[start, end)` of the group
+/// containing `oldest_rank`. This is the single DP implementation
+/// behind both [`FormationPolicy::select`] (allocating, coordinator
+/// path) and [`SortedWindow::select_drag_minimal`] (incremental,
+/// scratch-backed sim hot path), which is what keeps the two
+/// bit-identical.
+///
+/// `dp[g][i]`: minimal total drag partitioning ranks `[0, i)` into `g`
+/// consecutive groups of size `1..=k`; `cut[g][i]` = start rank of the
+/// last group in the optimum. Deterministic: sizes scanned in fixed
+/// order, strict `<` improvement.
+fn dp_oldest_group<F: Fn(usize) -> u32>(
+    n_at: F,
+    w: usize,
+    k: usize,
+    oldest_rank: usize,
+    scratch: &mut FormationScratch,
+) -> (usize, usize) {
+    let groups = w.div_ceil(k);
     const INF: u64 = u64::MAX;
-    let mut dp = vec![vec![INF; w + 1]; groups + 1];
-    let mut cut = vec![vec![0usize; w + 1]; groups + 1];
-    dp[0][0] = 0;
+    let stride = w + 1;
     // prefix sums of ranked n for O(1) group drag
-    let mut prefix = vec![0u64; w + 1];
+    scratch.prefix.clear();
+    scratch.prefix.resize(w + 1, 0);
     for r in 0..w {
-        prefix[r + 1] = prefix[r] + n_at(r);
+        scratch.prefix[r + 1] = scratch.prefix[r] + n_at(r) as u64;
     }
+    scratch.dp.clear();
+    scratch.dp.resize((groups + 1) * stride, INF);
+    scratch.cut.clear();
+    scratch.cut.resize((groups + 1) * stride, 0);
+    scratch.dp[0] = 0; // dp[0][0]
     for g in 1..=groups {
         for i in 1..=w {
             let mut best = INF;
             let mut best_j = 0;
             for s in 1..=k.min(i) {
                 let j = i - s;
-                if dp[g - 1][j] == INF {
+                let prev = scratch.dp[(g - 1) * stride + j];
+                if prev == INF {
                     continue;
                 }
                 // group of ranks [j, i): max is the last rank (sorted)
-                let drag = s as u64 * n_at(i - 1) - (prefix[i] - prefix[j]);
-                let cost = dp[g - 1][j].saturating_add(drag);
+                let drag = s as u64 * n_at(i - 1) as u64 - (scratch.prefix[i] - scratch.prefix[j]);
+                let cost = prev.saturating_add(drag);
                 if cost < best {
                     best = cost;
                     best_j = j;
                 }
             }
-            dp[g][i] = best;
-            cut[g][i] = best_j;
+            scratch.dp[g * stride + i] = best;
+            scratch.cut[g * stride + i] = best_j;
         }
     }
     debug_assert!(
-        dp[groups][w] != INF,
+        scratch.dp[groups * stride + w] != INF,
         "window of {w} must partition into {groups} groups of <= {k}"
     );
 
-    // walk the cuts back, keeping the group whose members include the
-    // oldest waiter (waiting-index 0)
+    // walk the cuts back to the group whose rank range covers the
+    // oldest waiter
     let mut i = w;
     for g in (1..=groups).rev() {
-        let j = cut[g][i];
-        let members: Vec<usize> = order[j..i].to_vec();
-        if members.contains(&0) {
-            let mut sel = members;
-            sel.sort_unstable();
-            return sel;
+        let j = scratch.cut[g * stride + i];
+        if (j..i).contains(&oldest_rank) {
+            return (j, i);
         }
         i = j;
     }
     unreachable!("the oldest waiter is in exactly one group");
+}
+
+/// Drag-minimal consecutive partition over the n-ranked window; returns
+/// the group containing the oldest waiter, as ascending waiting-indices.
+fn select_shape_aware(window: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
+    let w = window.len();
+    // stable rank by (n, arrival): `order[r]` = waiting-index of rank r
+    let mut order: Vec<usize> = (0..w).collect();
+    order.sort_by_key(|&i| (window[i].1, i));
+    let oldest_rank = order
+        .iter()
+        .position(|&i| i == 0)
+        .expect("non-empty window contains the oldest waiter");
+    let mut scratch = FormationScratch::default();
+    let (j, i) = dp_oldest_group(|r| window[order[r]].1, w, max_batch, oldest_rank, &mut scratch);
+    let mut sel: Vec<usize> = order[j..i].to_vec();
+    sel.sort_unstable();
+    sel
+}
+
+/// Incrementally maintained sorted lookahead window — the structure the
+/// ROADMAP's PR-3 follow-on asked for. The batched sim engine keeps one
+/// per virtual worker queue: members enter as they join the window
+/// (O(log w) search + O(w) shift, amortizing the per-dispatch
+/// O(w log w) re-sort and its allocation away) and leave as they
+/// dispatch, so each dispatch starts from an already-ranked window and
+/// runs only the partition DP over reusable [`FormationScratch`]
+/// buffers.
+///
+/// Keys are `(n, seq)` pairs — output length plus a unique,
+/// arrival-ordered sequence number (the sim uses the trace index) — so
+/// the ranking is exactly [`FormationPolicy::select`]'s stable
+/// (n, arrival) order and [`Self::select_drag_minimal`] is bit-identical
+/// to `select` on the same window contents (pinned by the 200-case
+/// drain test in this module, and end-to-end by
+/// `prop_batched_engine_matches_reference` in
+/// `rust/tests/properties.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct SortedWindow {
+    /// (output length, arrival sequence), ascending; unique by `seq`
+    keys: Vec<(u32, u64)>,
+}
+
+impl SortedWindow {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The ranked `(n, seq)` keys, ascending.
+    pub fn keys(&self) -> &[(u32, u64)] {
+        &self.keys
+    }
+
+    /// Add a member. Panics on a duplicate key (sequence numbers are
+    /// unique by construction, so a duplicate is a caller bug).
+    pub fn insert(&mut self, key: (u32, u64)) {
+        match self.keys.binary_search(&key) {
+            Ok(_) => panic!("duplicate window key {key:?}"),
+            Err(pos) => self.keys.insert(pos, key),
+        }
+    }
+
+    /// Remove a member. Panics if the key is absent.
+    pub fn remove(&mut self, key: (u32, u64)) {
+        match self.keys.binary_search(&key) {
+            Ok(pos) => {
+                self.keys.remove(pos);
+            }
+            Err(_) => panic!("window key {key:?} not present"),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.keys.clear();
+    }
+
+    /// Pick the next batch from this window: the drag-minimal group
+    /// containing `oldest` (the key of the queue's front waiter —
+    /// starvation freedom), written into `out` as ascending sequence
+    /// numbers. Allocation-free in steady state: the DP runs over
+    /// `scratch` and the selection over `out`, both reused across
+    /// dispatches. Bit-identical to [`FormationPolicy::select`] over
+    /// the same window contents in arrival order: a window no larger
+    /// than `max_batch` ships whole, otherwise the shared
+    /// `dp_oldest_group` DP picks the group.
+    pub fn select_drag_minimal(
+        &self,
+        oldest: (u32, u64),
+        max_batch: usize,
+        scratch: &mut FormationScratch,
+        out: &mut Vec<u64>,
+    ) {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        out.clear();
+        let w = self.keys.len();
+        if w == 0 {
+            return;
+        }
+        if w <= max_batch {
+            // one group covers the whole window: nothing to regroup
+            out.extend(self.keys.iter().map(|&(_, seq)| seq));
+            out.sort_unstable();
+            return;
+        }
+        let oldest_rank = self
+            .keys
+            .binary_search(&oldest)
+            .expect("the oldest waiter must be in the window");
+        let (j, i) = dp_oldest_group(|r| self.keys[r].0, w, max_batch, oldest_rank, scratch);
+        out.extend(self.keys[j..i].iter().map(|&(_, seq)| seq));
+        out.sort_unstable();
+    }
 }
 
 #[cfg(test)]
@@ -326,6 +469,118 @@ mod tests {
         assert_eq!(FormationPolicy::straggler_steps(&[]), 0);
         assert_eq!(FormationPolicy::straggler_steps(&[(8, 64)]), 0);
         assert_eq!(FormationPolicy::straggler_steps(&shapes(&[10, 30, 30])), 20 + 0 + 0);
+    }
+
+    /// Maintain a [`SortedWindow`] through the engine's exact
+    /// queue-mutation sequence (insert on arrival, remove on dispatch,
+    /// refill after) and assert its selection equals
+    /// [`FormationPolicy::select`] on the same window contents at every
+    /// dispatch — including trimmed dispatches that ship only a prefix
+    /// of the selection.
+    #[test]
+    fn sorted_window_selection_matches_select_through_a_drain() {
+        let mut state = 0x243F6A8885A308D3u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200 {
+            let max_batch = 2 + (next() % 6) as usize;
+            let n_bins = 2 + (next() % 5) as usize;
+            let policy = FormationPolicy::ShapeAware { n_bins };
+            let cap = policy.candidate_window(max_batch);
+            let n_arrivals = 1 + (next() % 40) as usize;
+            let ns: Vec<u32> = (0..n_arrivals).map(|_| (next() % 700) as u32).collect();
+
+            // the queue: (n, seq) in arrival order; the window mirrors
+            // its first min(cap, len) entries
+            let mut pending: Vec<(u32, u64)> = Vec::new();
+            let mut window = SortedWindow::new();
+            let mut scratch = FormationScratch::default();
+            let mut out: Vec<u64> = Vec::new();
+            let mut arrived = 0usize;
+
+            while arrived < ns.len() || !pending.is_empty() {
+                // interleave arrivals and dispatches pseudo-randomly
+                let arrive = arrived < ns.len() && (pending.is_empty() || next() % 2 == 0);
+                if arrive {
+                    let key = (ns[arrived], arrived as u64);
+                    if pending.len() < cap {
+                        window.insert(key);
+                    }
+                    pending.push(key);
+                    arrived += 1;
+                    continue;
+                }
+
+                // reference: select over the window slice in arrival order
+                let w = cap.min(pending.len());
+                let shapes: Vec<(u32, u32)> = pending[..w].iter().map(|&(n, _)| (32, n)).collect();
+                let want: Vec<u64> =
+                    policy.select(&shapes, max_batch).iter().map(|&i| pending[i].1).collect();
+
+                // incremental: select from the sorted window
+                let oldest = pending[0];
+                window.select_drag_minimal(oldest, max_batch, &mut scratch, &mut out);
+                assert_eq!(out, want, "ns={ns:?} k={max_batch} bins={n_bins}");
+
+                // dispatch a (possibly trimmed) prefix of the selection,
+                // exactly as the engine's feasibility trim does
+                let take = 1 + (next() as usize) % out.len();
+                for &seq in out[..take].iter().rev() {
+                    let pos = pending.iter().position(|&(_, s)| s == seq).unwrap();
+                    let key = pending.remove(pos);
+                    window.remove(key);
+                }
+                while window.len() < cap.min(pending.len()) {
+                    window.insert(pending[window.len()]);
+                }
+            }
+            assert!(window.is_empty());
+        }
+    }
+
+    #[test]
+    fn sorted_window_insert_remove_keep_order() {
+        let mut w = SortedWindow::new();
+        assert!(w.is_empty());
+        w.insert((5, 0));
+        w.insert((3, 1));
+        w.insert((5, 2));
+        w.insert((1, 3));
+        assert_eq!(w.keys(), &[(1, 3), (3, 1), (5, 0), (5, 2)]);
+        w.remove((5, 0));
+        assert_eq!(w.keys(), &[(1, 3), (3, 1), (5, 2)]);
+        assert_eq!(w.len(), 3);
+        w.clear();
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate window key")]
+    fn sorted_window_rejects_duplicates() {
+        let mut w = SortedWindow::new();
+        w.insert((5, 0));
+        w.insert((5, 0));
+    }
+
+    /// A window no larger than `max_batch` ships whole in arrival order,
+    /// matching `select`'s `w <= max_batch` fast path.
+    #[test]
+    fn sorted_window_small_window_ships_whole() {
+        let mut w = SortedWindow::new();
+        w.insert((500, 0));
+        w.insert((8, 1));
+        let mut scratch = FormationScratch::default();
+        let mut out = Vec::new();
+        w.select_drag_minimal((500, 0), 4, &mut scratch, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        // and an empty window selects nothing
+        let empty = SortedWindow::new();
+        empty.select_drag_minimal((0, 0), 4, &mut scratch, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

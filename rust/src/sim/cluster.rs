@@ -105,12 +105,14 @@ impl NodeState {
     /// Schedule one *batch* dispatch starting no earlier than `t`: the
     /// earliest-free node is occupied for `dur` (the whole batch runtime,
     /// amortizing one dispatch), while each member completes at its own
-    /// offset from the batch start. Returns the batch start plus
-    /// per-member finish instants in `member_offsets` order. This is the
+    /// offset from the batch start. Returns the batch start; member
+    /// finish instants are `start + member_offsets[k]` (the engine
+    /// computes them inline rather than receiving a fresh `Vec` per
+    /// dispatch — the batched hot path is allocation-free). This is the
     /// per-class queue discipline: any node of the class may take any
     /// batch. The per-worker-queue engine uses [`Self::schedule_batch_on`]
     /// instead, pinning each virtual worker's batches to its own node.
-    pub fn schedule_batch(&mut self, t: f64, dur: f64, member_offsets: &[f64]) -> (f64, Vec<f64>) {
+    pub fn schedule_batch(&mut self, t: f64, dur: f64, member_offsets: &[f64]) -> f64 {
         let (idx, _) = self
             .node_free_at
             .iter()
@@ -132,17 +134,16 @@ impl NodeState {
         t: f64,
         dur: f64,
         member_offsets: &[f64],
-    ) -> (f64, Vec<f64>) {
+    ) -> f64 {
         let free_at = self.node_free_at[node_idx];
         let start = t.max(free_at);
         self.node_free_at[node_idx] = start + dur;
-        let finishes: Vec<f64> = member_offsets.iter().map(|&off| start + off).collect();
-        for &f in &finishes {
-            self.inflight.push(Reverse(FinishAt(f)));
+        for &off in member_offsets {
+            self.inflight.push(Reverse(FinishAt(start + off)));
         }
         self.busy_s += dur;
         self.queries += member_offsets.len() as u64;
-        (start, finishes)
+        start
     }
 }
 
@@ -230,12 +231,12 @@ mod tests {
         let mut cs = ClusterState::new(&specs);
         let n = cs.get_mut(SystemId(0));
         // batch of 3: members finish at +1, +2, +4; node busy [0, 4)
-        let (start, finishes) = n.schedule_batch(0.0, 4.0, &[1.0, 2.0, 4.0]);
+        let start = n.schedule_batch(0.0, 4.0, &[1.0, 2.0, 4.0]);
         assert_eq!(start, 0.0);
-        assert_eq!(finishes, vec![1.0, 2.0, 4.0]);
         assert_eq!(n.queries, 3);
         assert_eq!(n.busy_s, 4.0);
-        // queue_len counts members, draining as each finishes
+        // queue_len counts members, draining as each finishes at
+        // start + offset (1, 2, 4)
         n.advance_to(0.0);
         assert_eq!(n.queue_len(), 3);
         n.advance_to(1.5);
@@ -243,17 +244,17 @@ mod tests {
         n.advance_to(4.0);
         assert_eq!(n.queue_len(), 0);
         // next batch waits for the node, not for member finishes
-        let (s2, f2) = n.schedule_batch(1.0, 2.0, &[2.0]);
+        let s2 = n.schedule_batch(1.0, 2.0, &[2.0]);
         assert_eq!(s2, 4.0);
-        assert_eq!(f2, vec![6.0]);
+        assert_eq!(n.node_free_at, vec![6.0]);
         // a singleton batch behaves exactly like schedule()
         let mut cs2 = ClusterState::new(&specs);
         let a = cs2.get_mut(SystemId(0));
         let (sa, fa) = a.schedule(3.0, 2.0);
         let mut cs3 = ClusterState::new(&specs);
         let b = cs3.get_mut(SystemId(0));
-        let (sb, fb) = b.schedule_batch(3.0, 2.0, &[2.0]);
-        assert_eq!((sa, fa), (sb, fb[0]));
+        let sb = b.schedule_batch(3.0, 2.0, &[2.0]);
+        assert_eq!((sa, fa), (sb, sb + 2.0));
         assert_eq!(a.busy_s, b.busy_s);
     }
 
@@ -265,14 +266,13 @@ mod tests {
         let n = cs.get_mut(SystemId(0));
         // occupy node 0; a batch pinned to node 0 must wait for it even
         // though node 1 is idle
-        let (s0, _) = n.schedule_batch_on(0, 0.0, 3.0, &[3.0]);
+        let s0 = n.schedule_batch_on(0, 0.0, 3.0, &[3.0]);
         assert_eq!(s0, 0.0);
-        let (s1, f1) = n.schedule_batch_on(0, 1.0, 2.0, &[2.0]);
+        let s1 = n.schedule_batch_on(0, 1.0, 2.0, &[2.0]);
         assert_eq!(s1, 3.0);
-        assert_eq!(f1, vec![5.0]);
         assert_eq!(n.node_free_at, vec![5.0, 0.0]);
         // pinned to the idle node it starts immediately
-        let (s2, _) = n.schedule_batch_on(1, 1.0, 2.0, &[2.0]);
+        let s2 = n.schedule_batch_on(1, 1.0, 2.0, &[2.0]);
         assert_eq!(s2, 1.0);
         assert_eq!(n.queries, 3);
         // with one node, schedule_batch and schedule_batch_on(0) agree
@@ -283,6 +283,7 @@ mod tests {
         let ra = a.get_mut(SystemId(0)).schedule_batch(2.0, 4.0, &[1.0, 4.0]);
         let rb = b.get_mut(SystemId(0)).schedule_batch_on(0, 2.0, 4.0, &[1.0, 4.0]);
         assert_eq!(ra, rb);
+        assert_eq!(a.node_free_at, b.node_free_at);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
-use crate::sched::formation::FormationPolicy;
+use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::Query;
 use std::collections::VecDeque;
@@ -380,9 +380,9 @@ pub fn simulate_with_table(
 /// deterministically. Single-queue layouts skip the scan entirely —
 /// which is what keeps single-node classes bit-identical to the
 /// per-class engine (no extra float arithmetic on that path).
-fn pick_worker_queue(
+fn pick_worker_queue<'a>(
     node: &NodeState,
-    queues: &[VecDeque<usize>],
+    queues: impl ExactSizeIterator<Item = &'a VecDeque<usize>>,
     t: f64,
     table: &CostTable,
     system: usize,
@@ -392,7 +392,7 @@ fn pick_worker_queue(
     }
     let mut best = 0usize;
     let mut best_load = f64::INFINITY;
-    for (w, pq) in queues.iter().enumerate() {
+    for (w, pq) in queues.enumerate() {
         let backlog: f64 = pq.iter().map(|&qi| table.runtime_s(qi, system)).sum();
         let load = (node.node_free_at[w] - t).max(0.0) + backlog;
         if load < best_load {
@@ -401,6 +401,45 @@ fn pick_worker_queue(
         }
     }
     best
+}
+
+/// Per-(system, worker) virtual-queue state of the batched engine,
+/// owned for the whole simulation so the dispatch loop allocates
+/// nothing in its own buffers in steady state (the memo key built
+/// inside [`BatchTable::cost`] remains the one per-dispatch
+/// allocation):
+///
+/// - `pending` — trace indices awaiting dispatch, in arrival order
+///   (ascending, since queries are routed in trace order);
+/// - `window` — the incrementally maintained sorted lookahead window
+///   over the first `min(window_cap, pending.len())` waiters, active
+///   only when the formation policy looks past one batch (see
+///   [`SortedWindow`]; members enter as they join the lookahead range
+///   and leave as they dispatch, amortizing the per-dispatch re-sort
+///   the PR-3 engine paid);
+/// - `sel` / `pairs` / `scratch` — the selection, member-shape, and DP
+///   buffers one dispatch needs, cleared and refilled per dispatch with
+///   capacity retained.
+struct WorkerQueue {
+    pending: VecDeque<usize>,
+    window: SortedWindow,
+    /// selected trace indices, ascending (u64: [`SortedWindow`] keys)
+    sel: Vec<u64>,
+    /// `(m, n)` of the selection, in `sel` order
+    pairs: Vec<(u32, u32)>,
+    scratch: FormationScratch,
+}
+
+impl WorkerQueue {
+    fn new() -> Self {
+        Self {
+            pending: VecDeque::new(),
+            window: SortedWindow::new(),
+            sel: Vec::new(),
+            pairs: Vec::new(),
+            scratch: FormationScratch::default(),
+        }
+    }
 }
 
 /// Batched online simulation over prebuilt tables. Mirrors
@@ -474,15 +513,19 @@ pub fn simulate_batched_with_tables(
 
     let mut cluster = ClusterState::new(systems);
     // virtual worker queues: one per node (PerWorker) or one per class
-    // (PerClass); `pending[s][w]` holds trace indices awaiting dispatch
-    let mut pending: Vec<Vec<VecDeque<usize>>> = systems
+    // (PerClass); `queues[s][w]` owns the pending deque, the sorted
+    // lookahead window, and the dispatch scratch buffers — so the
+    // steady-state dispatch loop allocates nothing in the engine's own
+    // buffers (the PR-4 loop built ~4 fresh `Vec`s per dispatch; the
+    // one remaining allocation is `BatchTable::cost`'s owned memo key)
+    let mut queues: Vec<Vec<WorkerQueue>> = systems
         .iter()
         .map(|spec| {
-            let queues = match bopts.queues {
+            let n = match bopts.queues {
                 QueueModel::PerWorker => spec.count.max(1),
                 QueueModel::PerClass => 1,
             };
-            (0..queues).map(|_| VecDeque::new()).collect()
+            (0..n).map(|_| WorkerQueue::new()).collect()
         })
         .collect();
     // (trace index, outcome): dispatches interleave across systems in
@@ -502,9 +545,19 @@ pub fn simulate_batched_with_tables(
     // (which was `max(arrival, free)` already). Window-less formation
     // (FIFO, or any policy at max_batch = 1) keeps the eager PR-2
     // dispatch instant, preserving the serial engine's exact float
-    // arithmetic for the max_batch = 1 bit-identity property.
-    let hand_off_gated = bopts.max_batch > 1
-        && bopts.formation.candidate_window(bopts.max_batch) > bopts.max_batch;
+    // arithmetic for the max_batch = 1 bit-identity property. A
+    // non-zero `window_cap` also switches on the incremental sorted
+    // window — the two conditions are one and the same: only a
+    // wider-than-one-batch lookahead has anything to rank.
+    let window_cap = {
+        let cap = bopts.formation.candidate_window(bopts.max_batch);
+        if bopts.max_batch > 1 && cap > bopts.max_batch {
+            cap
+        } else {
+            0
+        }
+    };
+    let hand_off_gated = window_cap > 0;
 
     loop {
         let next_arrival = queries.get(next).map_or(f64::INFINITY, |q| q.arrival_s);
@@ -512,9 +565,9 @@ pub fn simulate_batched_with_tables(
         // earliest batch due to dispatch across worker queues (ties:
         // lowest (system, worker) pair, deterministically)
         let mut due: Option<(f64, usize, usize)> = None;
-        for (s, queues) in pending.iter().enumerate() {
-            for (w, pq) in queues.iter().enumerate() {
-                let Some(&front) = pq.front() else { continue };
+        for (s, sys_queues) in queues.iter().enumerate() {
+            for (w, wq) in sys_queues.iter().enumerate() {
+                let Some(&front) = wq.pending.front() else { continue };
                 // the instant this queue's node could take a batch: its
                 // own node under PerWorker, the class-wide earliest-free
                 // node under PerClass (any node may take the batch there)
@@ -522,11 +575,11 @@ pub fn simulate_batched_with_tables(
                     QueueModel::PerWorker => cluster.nodes[s].node_free_at[w],
                     QueueModel::PerClass => cluster.nodes[s].earliest_free(),
                 };
-                let ready = if pq.len() >= bopts.max_batch {
+                let ready = if wq.pending.len() >= bopts.max_batch {
                     // full: due the instant the filling member arrived
                     // (membership additionally waits for a free node when
                     // the formation window needs a backlog — see above)
-                    let filling = queries[pq[bopts.max_batch - 1]].arrival_s;
+                    let filling = queries[wq.pending[bopts.max_batch - 1]].arrival_s;
                     if hand_off_gated {
                         free.max(filling)
                     } else {
@@ -546,9 +599,234 @@ pub fn simulate_batched_with_tables(
             // dispatch everything due before the next arrival; an
             // arrival exactly at the deadline misses the batch
             if ready <= next_arrival {
-                // batch formation over the lookahead window (FIFO prefix,
-                // or shape-aware grouping of near-equal n — one shared
-                // implementation with the coordinator's take_batch)
+                let wq = &mut queues[s][w];
+                // batch membership, into the queue's reusable buffers:
+                // the drag-minimal group from the incrementally sorted
+                // window (the same grouping the coordinator's
+                // take_batch_with computes — see `SortedWindow`), or the
+                // FIFO prefix when the policy never looks past one batch
+                if hand_off_gated {
+                    let front = *wq.pending.front().expect("due queue has a front waiter");
+                    let oldest = (queries[front].output_tokens, front as u64);
+                    wq.window.select_drag_minimal(
+                        oldest,
+                        bopts.max_batch,
+                        &mut wq.scratch,
+                        &mut wq.sel,
+                    );
+                } else {
+                    wq.sel.clear();
+                    wq.sel.extend(wq.pending.iter().take(bopts.max_batch).map(|&qi| qi as u64));
+                }
+                wq.pairs.clear();
+                wq.pairs.extend(wq.sel.iter().map(|&qi| {
+                    let q = &queries[qi as usize];
+                    (q.input_tokens, q.output_tokens)
+                }));
+                // joint-KV feasibility: trim to the longest prefix of the
+                // selection that fits; the tail stays queued for the next
+                // dispatch
+                let take = batch_table.feasible_prefix(s, &wq.pairs);
+                wq.sel.truncate(take);
+                wq.pairs.truncate(take);
+                if hand_off_gated {
+                    // pending is ascending in trace index, so positions
+                    // resolve by binary search; descending removal keeps
+                    // earlier positions stable
+                    for &qi in wq.sel.iter().rev() {
+                        let pos = wq
+                            .pending
+                            .binary_search(&(qi as usize))
+                            .expect("selected member must be pending");
+                        wq.pending.remove(pos);
+                        wq.window.remove((queries[qi as usize].output_tokens, qi));
+                    }
+                    // slide the window forward over the next-oldest
+                    // waiters this dispatch exposed
+                    while wq.window.len() < window_cap.min(wq.pending.len()) {
+                        let qi = wq.pending[wq.window.len()];
+                        wq.window.insert((queries[qi].output_tokens, qi as u64));
+                    }
+                } else {
+                    // window-less selection is always the queue prefix
+                    for _ in 0..take {
+                        wq.pending.pop_front();
+                    }
+                }
+                let cost = batch_table.cost(s, &wq.pairs);
+                debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
+                let e_batch = batch_table.energy_j(&cost);
+                let node = cluster.get_mut(SystemId(s));
+                let start = match bopts.queues {
+                    QueueModel::PerWorker => {
+                        node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
+                    }
+                    QueueModel::PerClass => {
+                        node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s)
+                    }
+                };
+                node.energy_j += e_batch;
+                batches[s].record(
+                    take,
+                    systems[s].dispatch_energy_j(),
+                    FormationPolicy::straggler_steps(&wq.pairs),
+                );
+                let batch_tokens: f64 =
+                    wq.pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
+                for (k, &qi) in wq.sel.iter().enumerate() {
+                    let qi = qi as usize;
+                    let q = &queries[qi];
+                    // attribute batch energy by token share (a singleton
+                    // gets exactly the full batch energy)
+                    let share = (wq.pairs[k].0 + wq.pairs[k].1) as f64 / batch_tokens;
+                    outcomes.push((
+                        qi,
+                        QueryOutcome {
+                            query_id: q.id,
+                            system: s,
+                            arrival_s: q.arrival_s,
+                            start_s: start,
+                            finish_s: start + cost.member_finish_s[k],
+                            service_s: cost.member_finish_s[k],
+                            energy_j: e_batch * share,
+                        },
+                    ));
+                }
+                continue;
+            }
+        }
+
+        // no batch due before the next arrival: route it
+        let Some(q) = queries.get(next) else { break };
+        cluster.advance_to(q.arrival_s);
+        let mut depths = cluster.queue_depths_at(q.arrival_s);
+        let mut lens = cluster.queue_lens();
+        for (s, sys_queues) in queues.iter().enumerate() {
+            for wq in sys_queues {
+                if wq.pending.is_empty() {
+                    continue;
+                }
+                lens[s] += wq.pending.len();
+                depths[s] += wq.pending.iter().map(|&qi| table.runtime_s(qi, s)).sum::<f64>();
+            }
+        }
+        let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+        let sid = route_query(policy, q, next, &view, table, systems, opts.strict, &mut rerouted);
+        let w = pick_worker_queue(
+            &cluster.nodes[sid.0],
+            queues[sid.0].iter().map(|wq| &wq.pending),
+            q.arrival_s,
+            table,
+            sid.0,
+        );
+        let wq = &mut queues[sid.0][w];
+        // the new waiter enters the sorted window iff it lands within
+        // the lookahead cap (deeper waiters enter as dispatches expose
+        // them)
+        if hand_off_gated && wq.pending.len() < window_cap {
+            wq.window.insert((q.output_tokens, next as u64));
+        }
+        wq.pending.push_back(next);
+        next += 1;
+    }
+
+    outcomes.sort_unstable_by_key(|&(qi, _)| qi);
+    // serial-equivalent energy summed in trace order — the same float
+    // accumulation order the serial engine uses, so `max_batch = 1`
+    // stays bit-identical even though dispatches interleave across
+    // systems in `ready` order
+    let serial_energy_j: f64 =
+        outcomes.iter().map(|&(qi, ref o)| table.energy_j(qi, o.system)).sum();
+    let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();
+    finalize_report(policy.name(), &cluster, outcomes, opts, rerouted, batches, serial_energy_j)
+}
+
+/// The PR-4 dispatch loop, kept verbatim as the **reference
+/// implementation** for the allocation-free engine above: membership
+/// through [`FormationPolicy::select`] with fresh candidate/shape/
+/// selection/member vectors every dispatch. The property suite
+/// (`prop_batched_engine_matches_reference` in
+/// `rust/tests/properties.rs`) pins the production engine bit-identical
+/// to this one — batch compositions, outcomes, straggler accounting,
+/// every float — across seeds, queue models, and formation policies.
+/// Not part of the supported API; it exists so "bit-identical to the
+/// previous implementation" stays an executable claim rather than a
+/// changelog assertion.
+#[doc(hidden)]
+pub fn simulate_batched_with_tables_reference(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    table: &CostTable,
+    batch_table: &BatchTable,
+    opts: &SimOptions,
+) -> SimReport {
+    let bopts = opts
+        .batching
+        .expect("simulate_batched_with_tables_reference requires SimOptions::batching");
+    assert!(bopts.max_batch >= 1, "max_batch must be >= 1");
+    assert!(
+        bopts.linger_s >= 0.0 && bopts.linger_s.is_finite(),
+        "linger_s must be finite and non-negative"
+    );
+    assert_sorted(queries);
+    assert_eq!(table.n_queries(), queries.len(), "cost table rows must match the trace");
+    assert_eq!(table.n_systems(), systems.len(), "cost table columns must match the cluster");
+    assert_eq!(batch_table.n_systems(), systems.len(), "batch table must match the cluster");
+    assert_eq!(
+        table.attribution,
+        batch_table.attribution(),
+        "cost and batch tables must use the same energy attribution"
+    );
+
+    let mut cluster = ClusterState::new(systems);
+    let mut pending: Vec<Vec<VecDeque<usize>>> = systems
+        .iter()
+        .map(|spec| {
+            let queues = match bopts.queues {
+                QueueModel::PerWorker => spec.count.max(1),
+                QueueModel::PerClass => 1,
+            };
+            (0..queues).map(|_| VecDeque::new()).collect()
+        })
+        .collect();
+    let mut outcomes: Vec<(usize, QueryOutcome)> = Vec::with_capacity(queries.len());
+    let mut batches: Vec<BatchStats> = vec![BatchStats::default(); systems.len()];
+    let mut rerouted = 0u64;
+    let mut next = 0usize;
+
+    let hand_off_gated = bopts.max_batch > 1
+        && bopts.formation.candidate_window(bopts.max_batch) > bopts.max_batch;
+
+    loop {
+        let next_arrival = queries.get(next).map_or(f64::INFINITY, |q| q.arrival_s);
+
+        let mut due: Option<(f64, usize, usize)> = None;
+        for (s, queues) in pending.iter().enumerate() {
+            for (w, pq) in queues.iter().enumerate() {
+                let Some(&front) = pq.front() else { continue };
+                let free = match bopts.queues {
+                    QueueModel::PerWorker => cluster.nodes[s].node_free_at[w],
+                    QueueModel::PerClass => cluster.nodes[s].earliest_free(),
+                };
+                let ready = if pq.len() >= bopts.max_batch {
+                    let filling = queries[pq[bopts.max_batch - 1]].arrival_s;
+                    if hand_off_gated {
+                        free.max(filling)
+                    } else {
+                        filling
+                    }
+                } else {
+                    free.max(queries[front].arrival_s) + bopts.linger_s
+                };
+                if due.map_or(true, |(t, _, _)| ready < t) {
+                    due = Some((ready, s, w));
+                }
+            }
+        }
+
+        if let Some((ready, s, w)) = due {
+            if ready <= next_arrival {
                 let window =
                     bopts.formation.candidate_window(bopts.max_batch).min(pending[s][w].len());
                 let cand: Vec<usize> = pending[s][w].iter().take(window).copied().collect();
@@ -558,9 +836,6 @@ pub fn simulate_batched_with_tables(
                     .collect();
                 let sel = bopts.formation.select(&shapes, bopts.max_batch);
                 let pairs: Vec<(u32, u32)> = sel.iter().map(|&i| shapes[i]).collect();
-                // joint-KV feasibility: trim to the longest prefix of the
-                // selection that fits; the tail stays queued for the next
-                // dispatch
                 let take = batch_table.feasible_prefix(s, &pairs);
                 let members: Vec<usize> = sel[..take].iter().map(|&i| cand[i]).collect();
                 for &i in sel[..take].iter().rev() {
@@ -571,7 +846,7 @@ pub fn simulate_batched_with_tables(
                 debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
                 let e_batch = batch_table.energy_j(&cost);
                 let node = cluster.get_mut(SystemId(s));
-                let (start, finishes) = match bopts.queues {
+                let start = match bopts.queues {
                     QueueModel::PerWorker => {
                         node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
                     }
@@ -589,8 +864,6 @@ pub fn simulate_batched_with_tables(
                     pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
                 for (k, &qi) in members.iter().enumerate() {
                     let q = &queries[qi];
-                    // attribute batch energy by token share (a singleton
-                    // gets exactly the full batch energy)
                     let share = (pairs[k].0 + pairs[k].1) as f64 / batch_tokens;
                     outcomes.push((
                         qi,
@@ -599,7 +872,7 @@ pub fn simulate_batched_with_tables(
                             system: s,
                             arrival_s: q.arrival_s,
                             start_s: start,
-                            finish_s: finishes[k],
+                            finish_s: start + cost.member_finish_s[k],
                             service_s: cost.member_finish_s[k],
                             energy_j: e_batch * share,
                         },
@@ -609,7 +882,6 @@ pub fn simulate_batched_with_tables(
             }
         }
 
-        // no batch due before the next arrival: route it
         let Some(q) = queries.get(next) else { break };
         cluster.advance_to(q.arrival_s);
         let mut depths = cluster.queue_depths_at(q.arrival_s);
@@ -625,16 +897,18 @@ pub fn simulate_batched_with_tables(
         }
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
         let sid = route_query(policy, q, next, &view, table, systems, opts.strict, &mut rerouted);
-        let w = pick_worker_queue(&cluster.nodes[sid.0], &pending[sid.0], q.arrival_s, table, sid.0);
+        let w = pick_worker_queue(
+            &cluster.nodes[sid.0],
+            pending[sid.0].iter(),
+            q.arrival_s,
+            table,
+            sid.0,
+        );
         pending[sid.0][w].push_back(next);
         next += 1;
     }
 
     outcomes.sort_unstable_by_key(|&(qi, _)| qi);
-    // serial-equivalent energy summed in trace order — the same float
-    // accumulation order the serial engine uses, so `max_batch = 1`
-    // stays bit-identical even though dispatches interleave across
-    // systems in `ready` order
     let serial_energy_j: f64 =
         outcomes.iter().map(|&(qi, ref o)| table.energy_j(qi, o.system)).sum();
     let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();

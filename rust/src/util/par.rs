@@ -164,9 +164,26 @@ impl Drop for NestedFlagGuard {
     }
 }
 
-/// Worker threads to fan across (≥ 1).
+/// Worker threads to fan across (≥ 1). Detected from the machine, or
+/// pinned by the `HETSCHED_THREADS` environment variable (read once, at
+/// first call — the pool is sized from this, so set it before any
+/// parallel work). Pinning exists for `hetsched bench` trajectories:
+/// BENCH.json numbers are only comparable across runs when the fan-out
+/// width is held fixed, not whatever core count the CI runner happens
+/// to have. Invalid or zero values fall back to detection. Results are
+/// bit-identical at any width either way; only wall-clock changes.
 pub fn threads() -> usize {
-    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("HETSCHED_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+    })
 }
 
 /// Long-lived workers backing the pool (0 on single-core machines, where

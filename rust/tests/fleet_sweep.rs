@@ -30,6 +30,7 @@ fn fleet_sweep_on_alpaca_reports_a_best_fleet() {
         &em,
         &PolicyConfig::JoinShortestQueue,
         None,
+        8,
         &rates,
         &grids,
         None,
@@ -85,6 +86,7 @@ fn more_nodes_cut_tail_latency_under_saturation() {
         &em,
         &PolicyConfig::JoinShortestQueue,
         None,
+        8,
         &[40.0], // saturating: queueing dominates
         &grids,
         None,
@@ -120,6 +122,7 @@ fn slo_selects_the_smallest_sufficient_fleet() {
         &em,
         &PolicyConfig::JoinShortestQueue,
         None,
+        8,
         &[rate],
         &grids,
         None,
@@ -139,6 +142,7 @@ fn slo_selects_the_smallest_sufficient_fleet() {
         &em,
         &PolicyConfig::JoinShortestQueue,
         None,
+        8,
         &[rate],
         &grids,
         Some(slo),
@@ -170,12 +174,14 @@ fn fleet_toml_section_drives_a_sweep_end_to_end() {
     .unwrap();
     let fleet = cfg.fleet.expect("fleet section parsed");
     assert!(cfg.batching.is_some(), "batching section parsed");
+    assert_eq!(fleet.bucket_bins, 8, "bucket_bins defaults to 8");
     let em = energy();
     let sweep = fleet_sweep(
         &cfg.cluster.systems,
         &em,
         &cfg.policy,
         cfg.batching,
+        fleet.bucket_bins,
         &fleet.rates,
         &fleet.count_grids,
         fleet.slo_p99_s,
@@ -186,27 +192,36 @@ fn fleet_toml_section_drives_a_sweep_end_to_end() {
     assert!(sweep.best_per_rate[0].is_some());
     assert_eq!(sweep.points[0].counts, vec![1, 1]);
     assert_eq!(sweep.points[1].counts, vec![2, 1]);
+    // the batched grid shares one bucketed table per rate: lookups flow
+    // through it and the bucketing must produce real bins
+    assert!(sweep.batch_table_lookups > 0);
+    assert!(sweep.bucket_bins.0 >= 1 && sweep.bucket_bins.1 >= 1);
 }
 
-/// A batched fleet point equals a direct batched `simulate` run of the
-/// sized cluster: the shared dedup CostTable and the grid-wide memoized
-/// BatchTable change build cost, never results.
+/// A batched fleet point equals a direct batched run of the sized
+/// cluster over an identically constructed bucketed BatchTable: the
+/// shared dedup CostTable and the per-rate memoized table change build
+/// cost, never results (bucketed cells are evaluated at deterministic
+/// bin representatives, so sharing across the grid cannot drift them).
 #[test]
 fn batched_fleet_point_matches_direct_batched_simulation() {
+    use hetsched::perf::cost_table::{BatchTable, BucketSpec};
     use hetsched::sched::policy::build_policy;
-    use hetsched::sim::engine::{simulate, BatchingOptions, SimOptions};
+    use hetsched::sim::engine::{simulate_batched_with_tables, BatchingOptions, SimOptions};
     use hetsched::workload::generator::{Arrival, TraceGenerator};
 
     let systems = system_catalog();
     let em = energy();
     let (rate, seed, n) = (20.0, 9, 200);
     let batching = Some(BatchingOptions::new(4, 0.1));
+    let bins = 8;
     let grids = vec![vec![1], vec![2], vec![1]];
     let sweep = fleet_sweep(
         &systems,
         &em,
         &PolicyConfig::JoinShortestQueue,
         batching,
+        bins,
         &[rate],
         &grids,
         None,
@@ -219,18 +234,64 @@ fn batched_fleet_point_matches_direct_batched_simulation() {
     let mut sized = system_catalog();
     sized[1].count = 2;
     let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n);
+    // the same tables fleet_sweep builds: dedup costs + bucketed batch
+    // memo with bins derived from this rate's trace
+    let table = CostTable::build_dedup(&queries, &sized, &em);
+    let batch_table =
+        BatchTable::bucketed(em.clone(), &sized, BucketSpec::from_trace(&queries, bins));
     let mut p = build_policy(&PolicyConfig::JoinShortestQueue, em.clone(), &sized);
-    let direct = simulate(
+    let direct = simulate_batched_with_tables(
         &queries,
         &sized,
         p.as_mut(),
-        &em,
+        &table,
+        &batch_table,
         &SimOptions { include_idle_energy: true, batching, strict: false },
     );
     assert_eq!(fp.total_energy_j, direct.total_energy_j);
     assert_eq!(fp.idle_energy_j, direct.idle_energy_j);
     assert_eq!(fp.makespan_s, direct.makespan_s);
     assert_eq!(fp.p99_latency_s, direct.p99_latency_s());
+    assert_eq!(fp.rerouted, direct.rerouted);
+}
+
+/// ISSUE 5 satellite acceptance: the bucketed grid-wide BatchTable
+/// turns fleet-point reuse into real cache hits — the exact-keyed
+/// layout it replaces hit ~0% on the same grid, re-evaluating nearly
+/// every batch per fleet point.
+#[test]
+fn bucketed_fleet_batch_table_hits_across_grid_points() {
+    use hetsched::sim::engine::BatchingOptions;
+
+    let systems = system_catalog();
+    let em = energy();
+    let grids = vec![vec![1], vec![1, 2], vec![1]];
+    let sweep = fleet_sweep(
+        &systems,
+        &em,
+        &PolicyConfig::JoinShortestQueue,
+        Some(BatchingOptions::new(4, 0.1)),
+        8,
+        &[25.0],
+        &grids,
+        None,
+        300,
+        2024,
+    );
+    assert_eq!(sweep.points.len(), 2);
+    assert!(sweep.batch_table_lookups > 0);
+    assert!(
+        sweep.batch_table_hit_rate() > 0.0,
+        "bucketed table must hit across shared fleet points (rate {})",
+        sweep.batch_table_hit_rate()
+    );
+    assert!(sweep.batch_table_evaluations <= sweep.batch_table_lookups);
+    assert_eq!(
+        sweep.batch_table_hits + sweep.batch_table_evaluations,
+        sweep.batch_table_lookups,
+        "every lookup is either a hit or the one evaluation of its cell"
+    );
+    assert!(sweep.bucket_bins.0 >= 2 && sweep.bucket_bins.1 >= 2);
 }
 
 /// The dedup acceptance on the bundled sample at scale: a 52K-style

@@ -6,18 +6,24 @@
 use hetsched::config::schema::PolicyConfig;
 use hetsched::hw::catalog::system_catalog;
 use hetsched::model::llm_catalog;
-use hetsched::perf::cost_table::CostTable;
+use hetsched::perf::cost_table::{BatchTable, BucketSpec, CostTable};
 use hetsched::perf::energy::{Attribution, EnergyModel};
-use hetsched::perf::model::{Feasibility, PerfModel};
+use hetsched::perf::model::{BatchCost, Feasibility, PerfModel};
 use hetsched::sched::cost::CostPolicy;
 use hetsched::sched::formation::FormationPolicy;
 use hetsched::sched::policy::Policy as _;
 use hetsched::sched::policy::{build_policy, ClusterView};
-use hetsched::sim::engine::{simulate, BatchingOptions, QueueModel, SimOptions};
+use hetsched::sim::engine::{
+    simulate, simulate_batched_with_tables, simulate_batched_with_tables_reference,
+    BatchingOptions, QueueModel, SimOptions,
+};
+use hetsched::util::par::par_map_range;
 use hetsched::util::quick::{self, Gen};
 use hetsched::workload::generator::{Arrival, TraceGenerator};
 use hetsched::workload::Query;
 use hetsched::{prop_assert, prop_assert_close};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 fn energy_model() -> EnergyModel {
     EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
@@ -264,6 +270,187 @@ fn prop_per_worker_queues_bit_identical_to_per_class_at_count_one() {
         prop_assert!(
             per_worker.total_straggler_steps() == per_class.total_straggler_steps(),
             "straggler accounting diverged"
+        );
+        Ok(())
+    });
+}
+
+/// ISSUE 5 tentpole property: the allocation-free batched engine
+/// (per-worker scratch buffers + incrementally sorted formation
+/// windows) reproduces the PR-4 dispatch loop — kept verbatim as
+/// `simulate_batched_with_tables_reference` — **bit-identically**:
+/// every outcome field, batch composition (via the per-system size
+/// histograms and straggler accounting), system total, and report
+/// aggregate, across random multi-node clusters, seeds, policies,
+/// queue models, formation policies, batching knobs, and both exact
+/// and bucketed batch tables.
+#[test]
+fn prop_batched_engine_matches_reference() {
+    let em = energy_model();
+    quick::check(40, |g| {
+        let mut systems = system_catalog();
+        // multi-node classes exercise per-worker windows and skew
+        for spec in systems.iter_mut() {
+            spec.count = g.usize_in(1..4);
+        }
+        let n = g.usize_in(5..150);
+        let rate = g.f64_in(0.5, 60.0);
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, g.rng.next_u64()).generate(n);
+        let max_batch = g.usize_in(1..9);
+        let linger_s = g.f64_in(0.0, 0.5);
+        let formation = match g.u32_in(0..4) {
+            0 => FormationPolicy::FifoPrefix,
+            1 => FormationPolicy::ShapeAware { n_bins: 1 },
+            2 => FormationPolicy::ShapeAware { n_bins: 2 },
+            _ => FormationPolicy::ShapeAware { n_bins: g.usize_in(2..12) },
+        };
+        let queues = if g.bool() { QueueModel::PerWorker } else { QueueModel::PerClass };
+        let cfg = match g.u32_in(0..5) {
+            0 => PolicyConfig::Threshold {
+                t_in: g.u32_in(0..256),
+                t_out: g.u32_in(0..256),
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            1 => PolicyConfig::Cost { lambda: g.f64_in(0.0, 1.0) },
+            2 => PolicyConfig::RoundRobin,
+            3 => PolicyConfig::AllOn("Swing-A100".into()),
+            _ => PolicyConfig::JoinShortestQueue,
+        };
+        let table = CostTable::build(&queries, &systems, &em);
+        // both engines share one memo (cells are deterministic either
+        // way); bucketed tables also exercise representative keying
+        let batch_table = if g.bool() {
+            let bins = g.usize_in(2..10);
+            BatchTable::bucketed(em.clone(), &systems, BucketSpec::from_trace(&queries, bins))
+        } else {
+            BatchTable::new(em.clone(), &systems)
+        };
+        let opts = SimOptions {
+            batching: Some(
+                BatchingOptions::new(max_batch, linger_s)
+                    .with_formation(formation)
+                    .with_queues(queues),
+            ),
+            include_idle_energy: g.bool(),
+            strict: false,
+        };
+        let mut p1 = build_policy(&cfg, em.clone(), &systems);
+        let new = simulate_batched_with_tables(
+            &queries, &systems, p1.as_mut(), &table, &batch_table, &opts,
+        );
+        let mut p2 = build_policy(&cfg, em.clone(), &systems);
+        let reference = simulate_batched_with_tables_reference(
+            &queries, &systems, p2.as_mut(), &table, &batch_table, &opts,
+        );
+
+        prop_assert!(new.outcomes.len() == reference.outcomes.len(), "outcome count diverged");
+        for (a, b) in new.outcomes.iter().zip(&reference.outcomes) {
+            prop_assert!(a.query_id == b.query_id, "outcome order diverged at {}", a.query_id);
+            prop_assert!(a.system == b.system, "routing diverged on query {}", a.query_id);
+            prop_assert!(
+                a.start_s == b.start_s && a.finish_s == b.finish_s,
+                "timing diverged on query {}: ({}, {}) vs ({}, {})",
+                a.query_id,
+                a.start_s,
+                a.finish_s,
+                b.start_s,
+                b.finish_s
+            );
+            prop_assert!(
+                a.service_s == b.service_s && a.energy_j == b.energy_j,
+                "cost diverged on query {}",
+                a.query_id
+            );
+        }
+        prop_assert!(new.total_energy_j == reference.total_energy_j, "total energy diverged");
+        prop_assert!(new.total_service_s == reference.total_service_s, "service diverged");
+        prop_assert!(new.makespan_s == reference.makespan_s, "makespan diverged");
+        prop_assert!(new.idle_energy_j == reference.idle_energy_j, "idle energy diverged");
+        prop_assert!(new.serial_energy_j == reference.serial_energy_j, "serial-equiv diverged");
+        prop_assert!(new.rerouted == reference.rerouted, "rerouted diverged");
+        prop_assert!(new.routing_counts() == reference.routing_counts(), "routing counts");
+        for (s, (a, b)) in new.batches.iter().zip(&reference.batches).enumerate() {
+            prop_assert!(a.dispatches == b.dispatches, "dispatch count diverged on system {s}");
+            prop_assert!(a.size_hist == b.size_hist, "batch compositions diverged on system {s}");
+            prop_assert!(
+                a.dispatch_energy_j == b.dispatch_energy_j,
+                "dispatch energy diverged on system {s}"
+            );
+            prop_assert!(
+                a.straggler_decode_steps == b.straggler_decode_steps,
+                "straggler accounting diverged on system {s}"
+            );
+        }
+        for (s, (a, b)) in new.systems.iter().zip(&reference.systems).enumerate() {
+            prop_assert!(
+                a.queries == b.queries && a.busy_s == b.busy_s && a.energy_j == b.energy_j,
+                "system totals diverged on system {s}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 5 satellite property: the lock-striped, in-flight-de-duplicated
+/// [`BatchTable`] is bit-identical to a single-map sequential reference
+/// on random compositions under concurrent access from the worker pool
+/// — and its counters are exact: one evaluation per distinct key, every
+/// other lookup a hit.
+#[test]
+fn prop_sharded_batch_table_matches_single_map_reference() {
+    let systems = system_catalog();
+    quick::check(15, |g| {
+        let em = energy_model();
+        let pool_n = g.usize_in(1..24);
+        let pool: Vec<(usize, Vec<(u32, u32)>)> = (0..pool_n)
+            .map(|_| {
+                let len = g.usize_in(1..6);
+                let members =
+                    (0..len).map(|_| (g.u32_in(1..2048), g.u32_in(1..512))).collect();
+                (g.usize_in(0..3), members)
+            })
+            .collect();
+        let t = BatchTable::new(em.clone(), &systems);
+        let n_ops = g.usize_in(1..400);
+        let results = par_map_range(n_ops, |i| {
+            let (sys, members) = &pool[i % pool.len()];
+            t.cost(*sys, members)
+        });
+        // single-map sequential reference through the same model
+        let mut reference: HashMap<(usize, Vec<(u32, u32)>), Arc<BatchCost>> = HashMap::new();
+        for (i, got) in results.iter().enumerate() {
+            let (sys, members) = &pool[i % pool.len()];
+            let want = reference
+                .entry((*sys, members.clone()))
+                .or_insert_with(|| Arc::new(em.perf.batch_cost(&systems[*sys], members)));
+            prop_assert!(got.feasibility == want.feasibility, "feasibility diverged on op {i}");
+            prop_assert!(
+                got.runtime_s.to_bits() == want.runtime_s.to_bits(),
+                "runtime not bit-identical on op {i}"
+            );
+            prop_assert!(
+                got.energy_j.to_bits() == want.energy_j.to_bits(),
+                "energy not bit-identical on op {i}"
+            );
+            prop_assert!(
+                got.member_finish_s.len() == want.member_finish_s.len(),
+                "member count diverged on op {i}"
+            );
+            for (a, b) in got.member_finish_s.iter().zip(&want.member_finish_s) {
+                prop_assert!(a.to_bits() == b.to_bits(), "member finish diverged on op {i}");
+            }
+        }
+        prop_assert!(
+            t.evaluations() == reference.len(),
+            "evaluations {} != distinct keys {} — duplicate or lost evaluation",
+            t.evaluations(),
+            reference.len()
+        );
+        prop_assert!(t.lookups() == n_ops as u64, "lookup counter diverged");
+        prop_assert!(
+            t.hits() + t.evaluations() as u64 == t.lookups(),
+            "every lookup must be either a hit or its cell's one evaluation"
         );
         Ok(())
     });
