@@ -12,6 +12,7 @@ use crate::hw::spec::SystemSpec;
 use crate::sched::formation::FormationPolicy;
 use crate::sim::engine::{BatchingOptions, QueueModel};
 use crate::workload::generator::Arrival;
+use crate::workload::source::{TenantMix, TenantSpec};
 
 /// Strict integer parse for count/seed/cap fields: errors on fractional,
 /// non-finite, or non-numeric values instead of silently truncating them
@@ -32,6 +33,28 @@ fn require_usize(v: &TomlValue, field: &str) -> Result<usize, String> {
 fn require_u32(v: &TomlValue, field: &str) -> Result<u32, String> {
     let x = require_u64(v, field)?;
     u32::try_from(x).map_err(|_| format!("{field} must fit in 32 bits, got {x}"))
+}
+
+/// Strict number parse for the streaming-workload keys (diurnal / MMPP /
+/// tenant mixes): unlike the legacy `poisson`/`bursty` keys, which keep
+/// their lenient `unwrap_or` defaults for compatibility, a missing or
+/// non-numeric value here is an error, not a silent fallback.
+fn require_f64(v: &TomlValue, field: &str) -> Result<f64, String> {
+    v.as_f64().ok_or_else(|| format!("{field} must be a number"))
+}
+
+/// A required key holding a non-empty array of numbers.
+fn require_f64_array(t: &TomlTable, key: &str, field: &str) -> Result<Vec<f64>, String> {
+    match t.get(key) {
+        Some(TomlValue::Arr(vs)) => {
+            if vs.is_empty() {
+                return Err(format!("{field} must be non-empty"));
+            }
+            vs.iter().map(|v| require_f64(v, field)).collect()
+        }
+        Some(_) => Err(format!("{field} must be an array of numbers")),
+        None => Err(format!("{field} is required")),
+    }
 }
 
 /// Which scheduling policy to run (see `sched`).
@@ -114,6 +137,9 @@ pub struct WorkloadConfig {
     /// path to a CSV trace; overrides the generative model when set
     pub trace_path: Option<String>,
     pub llm: String,
+    /// per-tenant `(m, n)` token distributions (`tenant_*` keys);
+    /// `None` = plain Alpaca model
+    pub tenants: Option<TenantMix>,
 }
 
 impl Default for WorkloadConfig {
@@ -124,6 +150,7 @@ impl Default for WorkloadConfig {
             seed: 2024,
             trace_path: None,
             llm: "Llama-2-7B".into(),
+            tenants: None,
         }
     }
 }
@@ -282,8 +309,79 @@ impl ExperimentConfig {
                         let off_s = t.get("off_s").and_then(|v| v.as_f64()).unwrap_or(1.0);
                         Arrival::Bursty { rate, on_s, off_s }
                     }
+                    // The streaming-workload kinds parse strictly: every
+                    // key is required and validated, no silent defaults.
+                    "diurnal" => {
+                        let get = |key: &str| {
+                            t.get(key).ok_or_else(|| {
+                                format!("workload.{key} is required for diurnal arrivals")
+                            })
+                        };
+                        let base_rate = require_f64(get("base_rate")?, "workload.base_rate")?;
+                        let amplitude = require_f64(get("amplitude")?, "workload.amplitude")?;
+                        let period_s = require_f64(get("period_s")?, "workload.period_s")?;
+                        Arrival::Diurnal { base_rate, amplitude, period_s }
+                    }
+                    "mmpp" => {
+                        let pair = |key: &str| -> Result<[f64; 2], String> {
+                            let field = format!("workload.{key}");
+                            let v = require_f64_array(t, key, &field)?;
+                            if v.len() != 2 {
+                                return Err(format!(
+                                    "{field} must have exactly 2 entries (one per MMPP state)"
+                                ));
+                            }
+                            Ok([v[0], v[1]])
+                        };
+                        Arrival::Mmpp {
+                            rates: pair("rates")?,
+                            mean_sojourn_s: pair("mean_sojourn_s")?,
+                        }
+                    }
                     other => return Err(format!("unknown arrival kind '{other}'")),
                 };
+            }
+            // Multi-tenant token mix: five parallel arrays, one entry per
+            // tenant. Any one key present requires all five.
+            let tenant_keys = [
+                "tenant_weights",
+                "tenant_in_mu",
+                "tenant_in_sigma",
+                "tenant_out_mu",
+                "tenant_out_sigma",
+            ];
+            if tenant_keys.iter().any(|k| t.get(k).is_some()) {
+                let tarr = |key: &str| require_f64_array(t, key, &format!("workload.{key}"));
+                let weights = tarr("tenant_weights")?;
+                let in_mu = tarr("tenant_in_mu")?;
+                let in_sigma = tarr("tenant_in_sigma")?;
+                let out_mu = tarr("tenant_out_mu")?;
+                let out_sigma = tarr("tenant_out_sigma")?;
+                let len = weights.len();
+                for (key, arr) in [
+                    ("tenant_in_mu", &in_mu),
+                    ("tenant_in_sigma", &in_sigma),
+                    ("tenant_out_mu", &out_mu),
+                    ("tenant_out_sigma", &out_sigma),
+                ] {
+                    if arr.len() != len {
+                        return Err(format!(
+                            "workload.{key} has {} entries but workload.tenant_weights has {len} \
+                             (the tenant arrays must be the same length)",
+                            arr.len()
+                        ));
+                    }
+                }
+                let tenants = (0..len)
+                    .map(|i| TenantSpec {
+                        weight: weights[i],
+                        in_mu: in_mu[i],
+                        in_sigma: in_sigma[i],
+                        out_mu: out_mu[i],
+                        out_sigma: out_sigma[i],
+                    })
+                    .collect();
+                cfg.workload.tenants = Some(TenantMix { tenants });
             }
         }
 
@@ -411,6 +509,61 @@ impl ExperimentConfig {
         self.cluster.validate()?;
         if self.workload.queries == 0 {
             return Err("workload.queries must be > 0".into());
+        }
+        match self.workload.arrival {
+            Arrival::Diurnal { base_rate, amplitude, period_s } => {
+                if !(base_rate.is_finite() && base_rate > 0.0) {
+                    return Err(format!("workload.base_rate must be positive, got {base_rate}"));
+                }
+                if !(amplitude.is_finite() && (0.0..=1.0).contains(&amplitude)) {
+                    return Err(format!("workload.amplitude must be in [0, 1], got {amplitude}"));
+                }
+                if !(period_s.is_finite() && period_s > 0.0) {
+                    return Err(format!("workload.period_s must be positive, got {period_s}"));
+                }
+            }
+            Arrival::Mmpp { rates, mean_sojourn_s } => {
+                for r in rates {
+                    if !(r.is_finite() && r > 0.0) {
+                        return Err(format!("workload.rates entries must be positive, got {r}"));
+                    }
+                }
+                for s in mean_sojourn_s {
+                    if !(s.is_finite() && s > 0.0) {
+                        return Err(format!(
+                            "workload.mean_sojourn_s entries must be positive, got {s}"
+                        ));
+                    }
+                }
+            }
+            Arrival::Batch | Arrival::Poisson { .. } | Arrival::Bursty { .. } => {}
+        }
+        if let Some(mix) = &self.workload.tenants {
+            if mix.tenants.is_empty() {
+                return Err("workload tenant mix must have at least one tenant".into());
+            }
+            for t in &mix.tenants {
+                if !(t.weight.is_finite() && t.weight > 0.0) {
+                    return Err(format!(
+                        "workload.tenant_weights entries must be positive, got {}",
+                        t.weight
+                    ));
+                }
+                for (key, mu) in [("tenant_in_mu", t.in_mu), ("tenant_out_mu", t.out_mu)] {
+                    if !mu.is_finite() {
+                        return Err(format!("workload.{key} entries must be finite, got {mu}"));
+                    }
+                }
+                for (key, sigma) in
+                    [("tenant_in_sigma", t.in_sigma), ("tenant_out_sigma", t.out_sigma)]
+                {
+                    if !(sigma.is_finite() && sigma >= 0.0) {
+                        return Err(format!(
+                            "workload.{key} entries must be finite and >= 0, got {sigma}"
+                        ));
+                    }
+                }
+            }
         }
         if self.serve.max_batch == 0 || self.serve.queue_cap == 0 {
             return Err("serve.max_batch and serve.queue_cap must be > 0".into());
@@ -735,6 +888,167 @@ max_batch = 4
             ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = 0\n", ">= 1"),
             ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = 2.5\n", "integer"),
             ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = -4\n", ">= 0"),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");
+        }
+    }
+
+    /// ISSUE 6: the streaming arrival kinds round-trip with strict keys.
+    #[test]
+    fn diurnal_and_mmpp_arrivals_round_trip() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[workload]\narrival = \"diurnal\"\nbase_rate = 40.0\namplitude = 0.5\nperiod_s = 60.0\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.workload.arrival,
+            Arrival::Diurnal { base_rate: 40.0, amplitude: 0.5, period_s: 60.0 }
+        );
+
+        let cfg = ExperimentConfig::from_toml_str(
+            "[workload]\narrival = \"mmpp\"\nrates = [5.0, 80.0]\nmean_sojourn_s = [2.0, 0.5]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.workload.arrival,
+            Arrival::Mmpp { rates: [5.0, 80.0], mean_sojourn_s: [2.0, 0.5] }
+        );
+    }
+
+    /// ISSUE 6: the five parallel `tenant_*` arrays build a `TenantMix`;
+    /// absent keys leave the plain Alpaca model in place.
+    #[test]
+    fn tenant_mix_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(concat!(
+            "[workload]\n",
+            "tenant_weights = [3.0, 1.0]\n",
+            "tenant_in_mu = [4.0, 6.0]\n",
+            "tenant_in_sigma = [0.5, 0.8]\n",
+            "tenant_out_mu = [3.5, 5.5]\n",
+            "tenant_out_sigma = [0.4, 0.9]\n",
+        ))
+        .unwrap();
+        let mix = cfg.workload.tenants.expect("tenant keys must populate the mix");
+        assert_eq!(mix.tenants.len(), 2);
+        assert_eq!(mix.tenants[0].weight, 3.0);
+        assert_eq!(mix.tenants[1].in_mu, 6.0);
+        assert_eq!(mix.tenants[1].out_sigma, 0.9);
+        assert!(ExperimentConfig::from_toml_str("").unwrap().workload.tenants.is_none());
+    }
+
+    /// ISSUE 6 satellite: strict error paths for the new `[workload]`
+    /// keys — missing keys, malformed arrays, and out-of-range values
+    /// are named errors, never silent defaults.
+    #[test]
+    fn streaming_workload_error_paths() {
+        for (src, needle) in [
+            // diurnal: all three keys required, validated ranges
+            ("[workload]\narrival = \"diurnal\"\namplitude = 0.5\nperiod_s = 60.0\n", "required"),
+            (
+                "[workload]\narrival = \"diurnal\"\nbase_rate = 40.0\nperiod_s = 60.0\n",
+                "workload.amplitude is required",
+            ),
+            (
+                "[workload]\narrival = \"diurnal\"\nbase_rate = 40.0\namplitude = 0.5\n",
+                "workload.period_s is required",
+            ),
+            (
+                "[workload]\narrival = \"diurnal\"\nbase_rate = \"fast\"\namplitude = 0.5\nperiod_s = 60.0\n",
+                "must be a number",
+            ),
+            (
+                "[workload]\narrival = \"diurnal\"\nbase_rate = 0\namplitude = 0.5\nperiod_s = 60.0\n",
+                "positive",
+            ),
+            (
+                "[workload]\narrival = \"diurnal\"\nbase_rate = 40.0\namplitude = 1.5\nperiod_s = 60.0\n",
+                "[0, 1]",
+            ),
+            (
+                "[workload]\narrival = \"diurnal\"\nbase_rate = 40.0\namplitude = 0.5\nperiod_s = -1.0\n",
+                "positive",
+            ),
+            // mmpp: both arrays required, exactly two positive entries
+            ("[workload]\narrival = \"mmpp\"\nmean_sojourn_s = [1.0, 1.0]\n", "required"),
+            ("[workload]\narrival = \"mmpp\"\nrates = [5.0, 80.0]\n", "required"),
+            (
+                "[workload]\narrival = \"mmpp\"\nrates = [5.0]\nmean_sojourn_s = [1.0, 1.0]\n",
+                "exactly 2",
+            ),
+            (
+                "[workload]\narrival = \"mmpp\"\nrates = [5.0, 8.0, 9.0]\nmean_sojourn_s = [1.0, 1.0]\n",
+                "exactly 2",
+            ),
+            (
+                "[workload]\narrival = \"mmpp\"\nrates = \"fast\"\nmean_sojourn_s = [1.0, 1.0]\n",
+                "array",
+            ),
+            (
+                "[workload]\narrival = \"mmpp\"\nrates = [5.0, 0.0]\nmean_sojourn_s = [1.0, 1.0]\n",
+                "positive",
+            ),
+            (
+                "[workload]\narrival = \"mmpp\"\nrates = [5.0, 80.0]\nmean_sojourn_s = [1.0, -0.5]\n",
+                "positive",
+            ),
+            // tenants: any one key present requires all five, equal lengths
+            ("[workload]\ntenant_weights = [1.0]\n", "required"),
+            (
+                concat!(
+                    "[workload]\n",
+                    "tenant_weights = [1.0, 2.0]\n",
+                    "tenant_in_mu = [4.0]\n",
+                    "tenant_in_sigma = [0.5, 0.5]\n",
+                    "tenant_out_mu = [3.5, 3.5]\n",
+                    "tenant_out_sigma = [0.4, 0.4]\n",
+                ),
+                "same length",
+            ),
+            (
+                concat!(
+                    "[workload]\n",
+                    "tenant_weights = []\n",
+                    "tenant_in_mu = []\n",
+                    "tenant_in_sigma = []\n",
+                    "tenant_out_mu = []\n",
+                    "tenant_out_sigma = []\n",
+                ),
+                "non-empty",
+            ),
+            (
+                concat!(
+                    "[workload]\n",
+                    "tenant_weights = [-1.0]\n",
+                    "tenant_in_mu = [4.0]\n",
+                    "tenant_in_sigma = [0.5]\n",
+                    "tenant_out_mu = [3.5]\n",
+                    "tenant_out_sigma = [0.4]\n",
+                ),
+                "positive",
+            ),
+            (
+                concat!(
+                    "[workload]\n",
+                    "tenant_weights = [1.0]\n",
+                    "tenant_in_mu = [4.0]\n",
+                    "tenant_in_sigma = [-0.5]\n",
+                    "tenant_out_mu = [3.5]\n",
+                    "tenant_out_sigma = [0.4]\n",
+                ),
+                ">= 0",
+            ),
+            (
+                concat!(
+                    "[workload]\n",
+                    "tenant_weights = [\"heavy\"]\n",
+                    "tenant_in_mu = [4.0]\n",
+                    "tenant_in_sigma = [0.5]\n",
+                    "tenant_out_mu = [3.5]\n",
+                    "tenant_out_sigma = [0.4]\n",
+                ),
+                "number",
+            ),
         ] {
             let err = ExperimentConfig::from_toml_str(src).unwrap_err();
             assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");

@@ -22,7 +22,7 @@
 //! shutdown are always handed out, never dropped.
 
 use super::request::Request;
-use crate::sched::formation::FormationPolicy;
+use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -35,16 +35,39 @@ pub enum Rejected {
     ShuttingDown,
 }
 
+/// Reusable buffers for the shape-aware formation step of
+/// [`SystemQueue::take_batch_with`]: the position-keyed
+/// [`SortedWindow`], the partition-DP [`FormationScratch`], and the
+/// selection output. Capacity is retained across dispatches, so
+/// steady-state formation performs no allocations — the same
+/// scratch-backed path the batched simulator's dispatch loop uses.
+#[derive(Default)]
+struct TakeScratch {
+    window: SortedWindow,
+    scratch: FormationScratch,
+    sel: Vec<u64>,
+}
+
 pub struct SystemQueue {
     inner: Mutex<VecDeque<Request>>,
     cv: Condvar,
     cap: usize,
     closing: AtomicBool,
+    /// Locked only inside `take_batch_with`, and only while `inner` is
+    /// already held, so the `inner` → `take_scratch` order is total and
+    /// cannot deadlock.
+    take_scratch: Mutex<TakeScratch>,
 }
 
 impl SystemQueue {
     pub fn new(cap: usize) -> Self {
-        Self { inner: Mutex::new(VecDeque::new()), cv: Condvar::new(), cap, closing: AtomicBool::new(false) }
+        Self {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            cap,
+            closing: AtomicBool::new(false),
+            take_scratch: Mutex::new(TakeScratch::default()),
+        }
     }
 
     /// Admission-controlled enqueue.
@@ -101,6 +124,10 @@ impl SystemQueue {
     /// simulator uses, so the sim validates exactly this grouping). The
     /// oldest waiter is always in the batch (starvation freedom), and the
     /// drain-on-close guarantee is unchanged.
+    ///
+    /// Formation runs over reusable scratch buffers ([`SortedWindow`] +
+    /// [`FormationScratch`]), so in steady state the only allocation per
+    /// call is the returned batch `Vec` itself.
     pub fn take_batch_with(
         &self,
         formation: FormationPolicy,
@@ -145,18 +172,38 @@ impl SystemQueue {
                 continue;
             }
             // phase 3: formation picks which waiters ship
-            let window = formation.candidate_window(max_batch).min(q.len());
-            let shapes: Vec<(u32, u32)> =
-                q.iter().take(window).map(|r| (r.input_tokens(), r.gen_tokens)).collect();
-            let sel = formation.select(&shapes, max_batch);
-            let mut batch = Vec::with_capacity(sel.len());
-            // remove back-to-front so earlier indices stay valid, then
-            // restore arrival order
-            for &i in sel.iter().rev() {
-                batch.push(q.remove(i).expect("selected index in range"));
-            }
-            batch.reverse();
-            return batch;
+            return match formation {
+                FormationPolicy::FifoPrefix => {
+                    // the prefix needs no ranking machinery at all
+                    let take = q.len().min(max_batch);
+                    q.drain(..take).collect()
+                }
+                FormationPolicy::ShapeAware { .. } => {
+                    // scratch-backed formation, allocation-free in steady
+                    // state: key the sorted window by (gen_tokens,
+                    // queue position) — the same stable (n, arrival)
+                    // ranking `FormationPolicy::select` uses, so
+                    // `select_drag_minimal` returns exactly `select`'s
+                    // choice (pinned by the drain test below).
+                    let window = formation.candidate_window(max_batch).min(q.len());
+                    let mut ts = self.take_scratch.lock().unwrap();
+                    let TakeScratch { window: win, scratch, sel } = &mut *ts;
+                    win.clear();
+                    for (pos, r) in q.iter().take(window).enumerate() {
+                        win.insert((r.gen_tokens, pos as u64));
+                    }
+                    let oldest = (q.front().expect("phase 1 ensures work").gen_tokens, 0);
+                    win.select_drag_minimal(oldest, max_batch, scratch, sel);
+                    let mut batch = Vec::with_capacity(sel.len());
+                    // remove back-to-front so earlier positions stay
+                    // valid, then restore arrival order
+                    for &pos in sel.iter().rev() {
+                        batch.push(q.remove(pos as usize).expect("selected position in range"));
+                    }
+                    batch.reverse();
+                    batch
+                }
+            };
         }
     }
 
@@ -247,6 +294,77 @@ mod tests {
         let batch = q.take_batch(4, Duration::from_millis(200));
         let _rx = h.join().unwrap();
         assert_eq!(batch.len(), 2, "late arrival should join the batch");
+    }
+
+    #[test]
+    fn shape_aware_take_batch_groups_near_equal_gens() {
+        let q = SystemQueue::new(8);
+        let mut keep = Vec::new();
+        for (i, g) in [8u32, 512, 8, 512].into_iter().enumerate() {
+            let (mut r, rx) = req(i as u64);
+            r.gen_tokens = g;
+            q.push(r).map_err(|_| ()).unwrap();
+            keep.push(rx);
+        }
+        let f = FormationPolicy::ShapeAware { n_bins: 8 };
+        // the oldest waiter's equal-n partner ships with it, not the
+        // FIFO-adjacent long generation
+        let b = q.take_batch_with(f, 2, Duration::from_millis(1));
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        let b = q.take_batch_with(f, 2, Duration::from_millis(1));
+        assert_eq!(b.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    /// The scratch-backed shape-aware path must hand out exactly what the
+    /// allocating [`FormationPolicy::select`] picks on the same queue
+    /// contents, at every dispatch of a full drain.
+    #[test]
+    fn take_batch_with_matches_allocating_select_through_a_drain() {
+        let mut state = 0x0123_4567_89ab_cdefu64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..50 {
+            let max_batch = 2 + (next() % 4) as usize;
+            let n_bins = 2 + (next() % 4) as usize;
+            let formation = FormationPolicy::ShapeAware { n_bins };
+            let n_reqs = 1 + (next() % 30) as usize;
+            let gens: Vec<u32> = (0..n_reqs).map(|_| 1 + (next() % 500) as u32).collect();
+
+            let q = SystemQueue::new(64);
+            let mut keep = Vec::new();
+            for (i, &g) in gens.iter().enumerate() {
+                let (mut r, rx) = req(i as u64);
+                r.gen_tokens = g;
+                q.push(r).map_err(|_| ()).unwrap();
+                keep.push(rx);
+            }
+
+            // reference model of the queue: (id, gen) in arrival order,
+            // drained through the allocating select
+            let mut pending: Vec<(u64, u32)> =
+                gens.iter().enumerate().map(|(i, &g)| (i as u64, g)).collect();
+            while !pending.is_empty() {
+                let window = formation.candidate_window(max_batch).min(pending.len());
+                let shapes: Vec<(u32, u32)> =
+                    pending[..window].iter().map(|&(_, g)| (2, g)).collect();
+                let want: Vec<u64> =
+                    formation.select(&shapes, max_batch).iter().map(|&i| pending[i].0).collect();
+
+                let batch = q.take_batch_with(formation, max_batch, Duration::from_millis(1));
+                let got: Vec<u64> = batch.iter().map(|r| r.id).collect();
+                assert_eq!(got, want, "gens={gens:?} k={max_batch} bins={n_bins}");
+
+                for id in want {
+                    let pos = pending.iter().position(|&(i, _)| i == id).unwrap();
+                    pending.remove(pos);
+                }
+            }
+            assert!(q.is_empty());
+        }
     }
 
     /// Satellite regression: residual requests at shutdown are drained,

@@ -22,6 +22,14 @@
 //!    reimplementation of the pre-PR-5 global-`Mutex<HashMap>` layout
 //!    (`MutexBatchTable`). The reported `speedup` is the acceptance
 //!    number for the sharding refactor.
+//! 5. **engine** — the event-heap batched engine vs the retained
+//!    O(queues) scan reference (`simulate_batched_with_tables_scan`):
+//!    identical configuration, identical results (bit-identity pinned
+//!    by the property suites), differing only in due-queue discovery —
+//!    the acceptance number for the heap refactor. Plus the streaming
+//!    serial engine over a slice source, with its bounded-memory
+//!    counters (`peak_pending`, `unique_shapes`) recorded alongside
+//!    the wall clock.
 //!
 //! The wall-clock numbers depend on the machine; the *counters*
 //! (lookups, hits, evaluations, dispatches, straggler steps, unique
@@ -40,13 +48,16 @@ use crate::perf::model::{BatchCost, PerfModel};
 use crate::sched::formation::FormationPolicy;
 use crate::sched::policy::build_policy;
 use crate::sim::engine::{
-    simulate_batched_with_tables, simulate_with_table, BatchingOptions, QueueModel, SimOptions,
+    simulate_batched_with_tables, simulate_batched_with_tables_scan, simulate_with_table,
+    BatchingOptions, QueueModel, SimOptions,
 };
 use crate::sim::report::SimReport;
+use crate::sim::stream::{simulate_stream, StreamReport};
 use crate::util::benchkit::{black_box, Bench, BenchReport};
 use crate::util::json::{to_string as json_to_string, Json};
 use crate::util::par::{pool_workers, threads};
 use crate::workload::generator::{Arrival, TraceGenerator};
+use crate::workload::source::SliceSource;
 use crate::workload::Query;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
@@ -347,6 +358,59 @@ pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
     sec.insert("sharded_evaluations".to_string(), num(sharded.evaluations() as f64));
     sections.insert("contended_batch_table".to_string(), Json::Obj(sec));
 
+    // ── 5. engine: event-heap vs scan due-picking, plus streaming ──────
+    // the heap side of this comparison is exactly section 2's
+    // per-worker batched run (r_per_worker): the production engine and
+    // the scan reference share every buffer and differ only in how the
+    // next due queue is found, so the ratio is the heap's own win
+    let run_scan = || -> SimReport {
+        let mut p = build_policy(&policy_cfg, energy.clone(), &systems);
+        simulate_batched_with_tables_scan(
+            &queries,
+            &systems,
+            p.as_mut(),
+            &table,
+            &batch_table,
+            &SimOptions {
+                batching: Some(
+                    BatchingOptions::new(8, 0.1)
+                        .with_formation(FormationPolicy::FifoPrefix)
+                        .with_queues(QueueModel::PerWorker),
+                ),
+                ..Default::default()
+            },
+        )
+    };
+    let r_scan = harness.run("engine (batched, scan due-picking)", n, || {
+        black_box(run_scan());
+    });
+    lines.push(r_scan.line());
+    let run_streaming = || -> StreamReport {
+        let mut p = build_policy(&policy_cfg, energy.clone(), &systems);
+        let mut src = SliceSource::new(&queries);
+        let sopts = SimOptions::default();
+        simulate_stream(&mut src, queries.len(), &systems, p.as_mut(), &energy, &sopts)
+            .expect("a slice source over a sorted trace cannot fail")
+    };
+    let r_stream = harness.run("engine (streaming serial, slice source)", n, || {
+        black_box(run_streaming());
+    });
+    lines.push(r_stream.line());
+    let rep_stream = run_streaming();
+    let heap_vs_scan = r_scan.median_s / r_per_worker.median_s;
+    lines.push(format!(
+        "  heap vs scan speedup: {heap_vs_scan:.2}x; streaming: peak pending {}, {} unique shapes",
+        rep_stream.peak_pending, rep_stream.unique_shapes
+    ));
+    let mut sec = BTreeMap::new();
+    sec.insert("heap".to_string(), report_json(&r_per_worker));
+    sec.insert("scan_baseline".to_string(), report_json(&r_scan));
+    sec.insert("speedup".to_string(), num(heap_vs_scan));
+    sec.insert("streaming_serial".to_string(), report_json(&r_stream));
+    sec.insert("stream_peak_pending".to_string(), num(rep_stream.peak_pending as f64));
+    sec.insert("stream_unique_shapes".to_string(), num(rep_stream.unique_shapes as f64));
+    sections.insert("engine".to_string(), Json::Obj(sec));
+
     // ── assemble BENCH.json ────────────────────────────────────────────
     let mut host = BTreeMap::new();
     host.insert("cores".to_string(), num(threads() as f64));
@@ -393,7 +457,7 @@ mod tests {
         assert_eq!(v.get("schema").and_then(Json::as_str), Some("hetsched-bench/1"));
         assert_eq!(v.get("smoke"), Some(&Json::Bool(true)));
         let sections = v.get("sections").expect("sections");
-        for key in ["cost_table", "simulate", "formation", "contended_batch_table"] {
+        for key in ["cost_table", "simulate", "formation", "contended_batch_table", "engine"] {
             assert!(sections.get(key).is_some(), "missing section {key}");
         }
         let ct = sections.get("cost_table").unwrap();
@@ -406,6 +470,12 @@ mod tests {
         assert!(looked >= 600.0, "contended section must have run: {looked} lookups");
         let hit_rate = cb.get("sharded_hit_rate").unwrap().as_f64().unwrap();
         assert!((0.0..=1.0).contains(&hit_rate));
+        // the engine section carries both speed and memory counters
+        let eng = sections.get("engine").unwrap();
+        assert!(eng.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        let shapes = eng.get("stream_unique_shapes").unwrap().as_usize().unwrap();
+        assert!(shapes >= 1 && shapes <= 60, "unique shapes bounded by the trace: {shapes}");
+        assert!(eng.get("stream_peak_pending").unwrap().as_usize().unwrap() >= 1);
         // every timing report carries a positive median
         let sim = sections.get("simulate").unwrap();
         for k in ["serial", "batched_per_worker", "batched_per_class"] {

@@ -13,7 +13,7 @@ pub use figures::{fig3_alpaca, table1};
 pub use headline::{headline_savings, HeadlineResult};
 pub use runner::{
     batching_sweep, count_grid_points, fleet_sweep, formation_sweep, lambda_sweep,
-    policy_comparison, seed_replicates, BatchingPoint, FleetPoint, FleetSweepResult,
-    FormationPoint, FormationSweep, LambdaPoint,
+    policy_comparison, seed_replicates, stream_policy_comparison, BatchingPoint, FleetPoint,
+    FleetSweepResult, FormationPoint, FormationSweep, LambdaPoint,
 };
 pub use sweeps::{input_sweep, output_sweep, threshold_sweep, SweepRow, ThresholdCurve};

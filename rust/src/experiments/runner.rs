@@ -25,6 +25,7 @@ use crate::sim::engine::{
     simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
 };
 use crate::sim::report::SimReport;
+use crate::sim::stream::{simulate_stream, StreamReport};
 use crate::util::par::par_map;
 use crate::workload::generator::{Arrival, TraceGenerator};
 use crate::workload::Query;
@@ -128,6 +129,32 @@ pub fn policy_comparison(
         let mut p = build_policy(cfg, energy.clone(), systems);
         simulate_with_table(queries, systems, p.as_mut(), &table, &SimOptions::default())
     })
+}
+
+/// The streaming sibling of [`policy_comparison`]: run every policy
+/// over the same *streamed* workload, fanned across cores. Each run
+/// re-streams its own source from the generator config (streams are
+/// stateful, so runs share nothing but the seed) and holds
+/// O(pending + unique shapes) memory instead of a materialized trace,
+/// a per-query cost table, and an outcome vector — which is what lets
+/// a policy comparison run at million-query scale. On any trace the
+/// generator materializes, each report's totals are bit-identical to
+/// the [`policy_comparison`] run of the same policy (the streaming
+/// engine mirrors the materialized one expression-for-expression).
+pub fn stream_policy_comparison(
+    generator: &TraceGenerator,
+    n_queries: usize,
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    cfgs: &[PolicyConfig],
+    opts: &SimOptions,
+) -> Result<Vec<StreamReport>, String> {
+    let results = par_map(cfgs, |cfg| {
+        let mut p = build_policy(cfg, energy.clone(), systems);
+        let mut src = generator.source();
+        simulate_stream(&mut src, n_queries, systems, p.as_mut(), energy, opts)
+    });
+    results.into_iter().collect()
 }
 
 /// Run an experiment once per seed, fanned across cores; results come
@@ -683,6 +710,41 @@ mod tests {
             assert_eq!(rep.total_energy_j, serial.total_energy_j, "{}", serial.policy);
             assert_eq!(rep.total_service_s, serial.total_service_s, "{}", serial.policy);
             assert_eq!(rep.routing_counts(), serial.routing_counts(), "{}", serial.policy);
+        }
+    }
+
+    /// ISSUE 6: the streaming comparison reproduces the materialized
+    /// one bit-for-bit on the same generator config — totals, makespan,
+    /// serial-equivalent energy, routing.
+    #[test]
+    fn stream_policy_comparison_matches_materialized() {
+        let systems = system_catalog();
+        let em = energy();
+        let generator = TraceGenerator::new(Arrival::Poisson { rate: 25.0 }, 17);
+        let queries = generator.generate(500);
+        let cfgs = vec![
+            PolicyConfig::Cost { lambda: 1.0 },
+            PolicyConfig::JoinShortestQueue,
+            PolicyConfig::AllOn("Swing-A100".into()),
+        ];
+        let want = policy_comparison(&queries, &systems, &em, &cfgs);
+        let got = stream_policy_comparison(
+            &generator,
+            queries.len(),
+            &systems,
+            &em,
+            &cfgs,
+            &SimOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.queries, w.outcomes.len() as u64, "{}", w.policy);
+            assert_eq!(g.total_energy_j.to_bits(), w.total_energy_j.to_bits(), "{}", w.policy);
+            assert_eq!(g.total_service_s.to_bits(), w.total_service_s.to_bits(), "{}", w.policy);
+            assert_eq!(g.makespan_s.to_bits(), w.makespan_s.to_bits(), "{}", w.policy);
+            assert_eq!(g.serial_energy_j.to_bits(), w.serial_energy_j.to_bits(), "{}", w.policy);
+            assert_eq!(g.routing_counts(), w.routing_counts(), "{}", w.policy);
         }
     }
 

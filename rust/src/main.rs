@@ -256,23 +256,30 @@ fn cmd_headline(argv: &[String]) -> Result<(), String> {
 fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     let args = Args::new("simulate")
         .opt("config", "", "TOML config path (empty = paper defaults)")
+        .opt("queries", "", "override workload.queries (e.g. 1000000 for a streaming run)")
         .opt("max-batch", "", "dynamic batch size per dispatch (1 = serial; empty = config's [batching])")
         .opt("linger", "", "seconds a partial batch lingers for stragglers (empty = config)")
         .opt("formation", "", "batch formation: fifo | shape | shape:<bins> (empty = config)")
         .opt("queues", "", "batched-queue layout: per-worker | per-class (empty = config)")
         .flag("idle-energy", "charge idle power across the makespan")
+        .flag("stream", "bounded-memory streaming engine: no materialized trace or outcome vector")
         .parse(argv)?;
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         "" => ExperimentConfig::default(),
         path => ExperimentConfig::from_file(path)?,
     };
+    match args.get("queries") {
+        "" => {}
+        _ => {
+            let n = args.get_usize("queries")?;
+            if n == 0 {
+                return Err("--queries must be > 0".into());
+            }
+            cfg.workload.queries = n;
+        }
+    }
     let llm = find_llm(&cfg.workload.llm).ok_or("unknown llm in config")?;
     let energy = EnergyModel::new(PerfModel::new(llm));
-    let queries = match &cfg.workload.trace_path {
-        Some(p) => hetsched::workload::trace::read_csv(std::path::Path::new(p))?,
-        None => hetsched::workload::generator::TraceGenerator::new(cfg.workload.arrival, cfg.workload.seed)
-            .generate(cfg.workload.queries),
-    };
     let mut policy = hetsched::sched::policy::build_policy(&cfg.policy, energy.clone(), &cfg.cluster.systems);
 
     // batching: the config's [batching] section is the baseline (None =
@@ -334,6 +341,13 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         strict: false,
         batching,
     };
+    if args.get_bool("stream") {
+        return run_stream_simulate(&cfg, &energy, policy.as_mut(), &opts);
+    }
+    let queries = match &cfg.workload.trace_path {
+        Some(p) => hetsched::workload::trace::read_csv(std::path::Path::new(p))?,
+        None => trace_generator(&cfg).generate(cfg.workload.queries),
+    };
     let rep = hetsched::sim::engine::simulate(&queries, &cfg.cluster.systems, policy.as_mut(), &energy, &opts);
     println!("policy: {}", rep.policy);
     println!(
@@ -374,6 +388,82 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             }
         }
     }
+    Ok(())
+}
+
+/// The config's trace generator: arrival process, seed, and (when the
+/// `tenant_*` keys are present) the multi-tenant token mix.
+fn trace_generator(cfg: &ExperimentConfig) -> hetsched::workload::generator::TraceGenerator {
+    let mut g = hetsched::workload::generator::TraceGenerator::new(
+        cfg.workload.arrival,
+        cfg.workload.seed,
+    );
+    if let Some(mix) = &cfg.workload.tenants {
+        g = g.with_tenants(mix.clone());
+    }
+    g
+}
+
+/// `simulate --stream`: run the bounded-memory streaming engine over a
+/// CSV or generator source and print the accumulator-backed report.
+fn run_stream_simulate(
+    cfg: &ExperimentConfig,
+    energy: &EnergyModel,
+    policy: &mut dyn hetsched::sched::policy::Policy,
+    opts: &SimOptions,
+) -> Result<(), String> {
+    use hetsched::workload::source::{CsvSource, QuerySource};
+    let mut csv;
+    let mut generated;
+    let source: &mut dyn QuerySource = match &cfg.workload.trace_path {
+        Some(p) => {
+            csv = CsvSource::open(std::path::Path::new(p))?;
+            &mut csv
+        }
+        None => {
+            generated = trace_generator(cfg).source();
+            &mut generated
+        }
+    };
+    let rep = hetsched::sim::simulate_stream(
+        source,
+        cfg.workload.queries,
+        &cfg.cluster.systems,
+        policy,
+        energy,
+        opts,
+    )?;
+    println!("policy: {} (streaming engine)", rep.policy);
+    println!(
+        "queries: {}   energy: {}   service: {}   makespan: {}   rerouted: {}",
+        rep.queries,
+        fmt_joules(rep.total_energy_j),
+        fmt_secs(rep.total_service_s),
+        fmt_secs(rep.makespan_s),
+        rep.rerouted
+    );
+    println!(
+        "latency: mean {}   p99 {} (P² estimate)",
+        fmt_secs(rep.mean_latency_s),
+        fmt_secs(rep.p99_latency_s)
+    );
+    println!(
+        "memory: peak pending {} queries, {} unique (m, n) shapes cached",
+        rep.peak_pending, rep.unique_shapes
+    );
+    let mut t = Table::new(&["system", "queries", "busy", "energy", "dispatches", "mean batch"])
+        .align(0, Align::Left);
+    for (s, b) in rep.systems.iter().zip(&rep.batches) {
+        t.row(&[
+            s.name.clone(),
+            s.queries.to_string(),
+            fmt_secs(s.busy_s),
+            fmt_joules(s.energy_j),
+            b.dispatches.to_string(),
+            format!("{:.2}", b.mean_size()),
+        ]);
+    }
+    print!("{}", t.ascii());
     Ok(())
 }
 

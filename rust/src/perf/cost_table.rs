@@ -243,6 +243,99 @@ impl CostTable {
     }
 }
 
+/// Lazily populated per-shape cost rows — the streaming counterpart of
+/// [`CostTable`]. A [`CostTable`] needs the whole trace up front; a
+/// streaming run (`sim::stream`) sees queries one at a time and cannot
+/// know the shape set in advance. `RowCache` evaluates a row the first
+/// time a `(m, n)` pair appears — through the **same** [`eval_row`] /
+/// [`cheapest_of`] path as both `CostTable` layouts, so cells are
+/// bit-identical to table-backed runs — and every later query with that
+/// shape is a hash lookup. Memory is O(unique shapes × systems),
+/// independent of trace length: the dedup observation that makes
+/// [`CostTable::build_dedup`] cheap is what makes million-query
+/// streaming bounded.
+///
+/// Single-threaded by design (`&mut self`): the streaming engines are
+/// sequential loops, so there is no lock to pay.
+#[derive(Clone, Debug)]
+pub struct RowCache {
+    energy: EnergyModel,
+    systems: Vec<SystemSpec>,
+    shape_row: HashMap<(u32, u32), usize>,
+    /// `n_rows × n_systems` cells, row-major — same layout as
+    /// [`CostTable::cells`]
+    cells: Vec<CostCell>,
+    cheapest: Vec<Option<usize>>,
+}
+
+impl RowCache {
+    pub fn new(energy: EnergyModel, systems: &[SystemSpec]) -> Self {
+        Self {
+            energy,
+            systems: systems.to_vec(),
+            shape_row: HashMap::new(),
+            cells: Vec::new(),
+            cheapest: Vec::new(),
+        }
+    }
+
+    /// Row index for a shape, evaluating the model on first sight.
+    pub fn row(&mut self, m: u32, n: u32) -> usize {
+        if let Some(&r) = self.shape_row.get(&(m, n)) {
+            return r;
+        }
+        let row = eval_row(m, n, &self.systems, &self.energy);
+        let r = self.cheapest.len();
+        self.cheapest.push(cheapest_of(&row));
+        self.cells.extend(row);
+        self.shape_row.insert((m, n), r);
+        r
+    }
+
+    #[inline]
+    pub fn cell(&self, row: usize, system: usize) -> &CostCell {
+        debug_assert!(system < self.systems.len());
+        &self.cells[row * self.systems.len() + system]
+    }
+
+    /// `E(m,n,s)` in joules (NaN when infeasible).
+    #[inline]
+    pub fn energy_j(&self, row: usize, system: usize) -> f64 {
+        self.cell(row, system).energy_j
+    }
+
+    /// `R(m,n,s)` in seconds (NaN when infeasible).
+    #[inline]
+    pub fn runtime_s(&self, row: usize, system: usize) -> f64 {
+        self.cell(row, system).runtime_s
+    }
+
+    #[inline]
+    pub fn is_feasible(&self, row: usize, system: usize) -> bool {
+        self.cell(row, system).feasibility == Feasibility::Ok
+    }
+
+    /// The energy-cheapest feasible system for a row, if any.
+    #[inline]
+    pub fn cheapest_feasible(&self, row: usize) -> Option<usize> {
+        self.cheapest[row]
+    }
+
+    pub fn n_systems(&self) -> usize {
+        self.systems.len()
+    }
+
+    /// Which attribution the energy column carries.
+    pub fn attribution(&self) -> Attribution {
+        self.energy.attribution
+    }
+
+    /// Rows evaluated so far — the cache's whole memory footprint.
+    pub fn n_unique_rows(&self) -> usize {
+        self.cheapest.len()
+    }
+}
+
 /// Composition key of a batch on a system: the member `(m, n)` pairs in
 /// dispatch order (bucket representatives when the table is bucketed).
 type BatchKey = (usize, Vec<(u32, u32)>);
@@ -826,6 +919,62 @@ mod tests {
             assert_eq!(cell.runtime_s.to_bits(), direct.runtime_s.to_bits());
             assert_eq!(cell.member_finish_s, direct.member_finish_s);
         }
+    }
+
+    /// ISSUE 6: the lazy streaming row cache goes through the same
+    /// evaluation path as the table builds, so cells and fallback
+    /// targets are bit-identical and rows are shared across repeated
+    /// shapes.
+    #[test]
+    fn row_cache_matches_cost_table_bitwise() {
+        let queries = AlpacaModel::default().trace(31, 3_000);
+        let systems = system_catalog();
+        for attribution in [Attribution::Total, Attribution::Net] {
+            let energy = EnergyModel::with_attribution(
+                PerfModel::new(llm_catalog()[1].clone()),
+                attribution,
+            );
+            let table = CostTable::build(&queries, &systems, &energy);
+            let mut cache = RowCache::new(energy, &systems);
+            assert_eq!(cache.attribution(), attribution);
+            for (qi, q) in queries.iter().enumerate() {
+                let row = cache.row(q.input_tokens, q.output_tokens);
+                assert_eq!(cache.cheapest_feasible(row), table.cheapest_feasible(qi));
+                for si in 0..systems.len() {
+                    assert_eq!(cache.is_feasible(row, si), table.is_feasible(qi, si));
+                    if table.is_feasible(qi, si) {
+                        assert_eq!(
+                            cache.energy_j(row, si).to_bits(),
+                            table.energy_j(qi, si).to_bits()
+                        );
+                        assert_eq!(
+                            cache.runtime_s(row, si).to_bits(),
+                            table.runtime_s(qi, si).to_bits()
+                        );
+                    } else {
+                        assert!(cache.energy_j(row, si).is_nan());
+                    }
+                }
+            }
+            // lazily discovered rows == the dedup build's unique shapes
+            let dedup = CostTable::build_dedup(&queries, &systems, &cache.energy);
+            assert_eq!(cache.n_unique_rows(), dedup.n_unique_rows());
+            assert!(cache.n_unique_rows() < queries.len());
+        }
+    }
+
+    #[test]
+    fn row_cache_repeated_shape_reuses_row() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        let mut cache = RowCache::new(energy, &systems);
+        let a = cache.row(32, 64);
+        let b = cache.row(16, 32);
+        let c = cache.row(32, 64);
+        assert_eq!(a, c);
+        assert_ne!(a, b);
+        assert_eq!(cache.n_unique_rows(), 2);
+        assert_eq!(cache.n_systems(), systems.len());
     }
 
     #[test]

@@ -31,6 +31,19 @@
 //!   single-node classes the two queue layouts are bit-identical to
 //!   each other (both pinned by property tests).
 //!
+//! The batched engine is **event-driven**: instead of re-scanning every
+//! virtual queue per step to find the earliest due batch (O(Σ queues)
+//! per dispatch), it keeps one lazily invalidated
+//! [`std::collections::BinaryHeap`] of per-queue due events, so each
+//! step costs O(log #queues). Due times are strictly queue-local (a
+//! dispatch moves only its own queue's node availability; an arrival
+//! changes only the queue it joins), so exactly one event is recomputed
+//! per step. The retained scan loop
+//! (`simulate_batched_with_tables_scan`) and the PR-4 allocating loop
+//! (`simulate_batched_with_tables_reference`) pin the heap engine
+//! bit-identical across seeds, policies, queue models, and formation
+//! policies.
+//!
 //! Per-query costs come from a [`CostTable`] built once per trace
 //! ([`simulate`] builds it; [`simulate_with_table`] reuses a shared one
 //! across a sweep grid — see [`crate::experiments::runner`]); batch
@@ -53,7 +66,8 @@ use crate::perf::model::Feasibility;
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::Query;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Which virtual queue layout the batched engine simulates.
 ///
@@ -442,6 +456,476 @@ impl WorkerQueue {
     }
 }
 
+/// The PR-5 dispatch loop, kept verbatim as the **scan reference** for
+/// the event-heap engine below: every outer iteration re-derives each
+/// non-empty queue's due instant and takes the earliest (ties to the
+/// lowest `(system, worker)` pair). Same allocation-free buffers as the
+/// production engine — the two differ *only* in how the next due queue
+/// is found, which is exactly what the bit-identity properties in
+/// `rust/tests/properties.rs` pin. Not part of the supported API; it
+/// exists so "the heap is a pure data-structure swap" stays an
+/// executable claim rather than a changelog assertion.
+#[doc(hidden)]
+pub fn simulate_batched_with_tables_scan(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    table: &CostTable,
+    batch_table: &BatchTable,
+    opts: &SimOptions,
+) -> SimReport {
+    let bopts = opts
+        .batching
+        .expect("simulate_batched_with_tables_scan requires SimOptions::batching");
+    let mut sim = BatchedSim::new(queries, systems, table, batch_table, opts, bopts);
+
+    loop {
+        let next_arrival = sim.next_arrival();
+
+        // earliest batch due to dispatch across worker queues (ties:
+        // lowest (system, worker) pair, deterministically)
+        let mut due: Option<(f64, usize, usize)> = None;
+        for (s, sys_queues) in sim.queues.iter().enumerate() {
+            for (w, wq) in sys_queues.iter().enumerate() {
+                if wq.pending.is_empty() {
+                    continue;
+                }
+                let ready = sim.queue_ready(s, w);
+                if due.map_or(true, |(t, _, _)| ready < t) {
+                    due = Some((ready, s, w));
+                }
+            }
+        }
+
+        if let Some((ready, s, w)) = due {
+            // dispatch everything due before the next arrival; an
+            // arrival exactly at the deadline misses the batch
+            if ready <= next_arrival {
+                sim.dispatch(ready, s, w);
+                continue;
+            }
+        }
+
+        // no batch due before the next arrival: route it
+        if sim.next >= queries.len() {
+            break;
+        }
+        sim.route_next_arrival(policy);
+    }
+
+    sim.finish(policy)
+}
+
+/// Shared per-step machinery of the batched engines: cluster, virtual
+/// worker queues, dispatch, routing, and outcome accumulation. The
+/// production event-heap engine ([`simulate_batched_with_tables`]) and
+/// the retained scan reference (`simulate_batched_with_tables_scan`)
+/// both drive exactly this struct — they differ *only* in how the next
+/// due `(system, worker)` queue is located, which makes their
+/// bit-identity a structural property rather than a re-implementation
+/// claim (and the property suite pins it anyway).
+struct BatchedSim<'a> {
+    queries: &'a [Query],
+    systems: &'a [SystemSpec],
+    table: &'a CostTable,
+    batch_table: &'a BatchTable,
+    opts: &'a SimOptions,
+    bopts: BatchingOptions,
+    /// lookahead width when the formation policy looks past one batch;
+    /// 0 = window-less (FIFO semantics, eager dispatch instants)
+    window_cap: usize,
+    /// full-batch membership decided at hand-off (`window_cap > 0`)
+    hand_off_gated: bool,
+    cluster: ClusterState,
+    /// virtual worker queues: one per node (PerWorker) or one per class
+    /// (PerClass); `queues[s][w]` owns the pending deque, the sorted
+    /// lookahead window, and the dispatch scratch buffers — so the
+    /// steady-state dispatch loop allocates nothing in the engine's own
+    /// buffers (the PR-4 loop built ~4 fresh `Vec`s per dispatch; the
+    /// one remaining allocation is `BatchTable::cost`'s owned memo key)
+    queues: Vec<Vec<WorkerQueue>>,
+    /// (trace index, outcome): dispatches interleave across systems in
+    /// `ready` order, so outcomes are re-sorted to trace order at the
+    /// end to stay comparable with the serial engine's reports
+    outcomes: Vec<(usize, QueryOutcome)>,
+    batches: Vec<BatchStats>,
+    rerouted: u64,
+    /// trace cursor: the next arrival not yet routed
+    next: usize,
+}
+
+impl<'a> BatchedSim<'a> {
+    fn new(
+        queries: &'a [Query],
+        systems: &'a [SystemSpec],
+        table: &'a CostTable,
+        batch_table: &'a BatchTable,
+        opts: &'a SimOptions,
+        bopts: BatchingOptions,
+    ) -> Self {
+        assert!(bopts.max_batch >= 1, "max_batch must be >= 1");
+        assert!(
+            bopts.linger_s >= 0.0 && bopts.linger_s.is_finite(),
+            "linger_s must be finite and non-negative"
+        );
+        assert_sorted(queries);
+        assert_eq!(table.n_queries(), queries.len(), "cost table rows must match the trace");
+        assert_eq!(table.n_systems(), systems.len(), "cost table columns must match the cluster");
+        assert_eq!(batch_table.n_systems(), systems.len(), "batch table must match the cluster");
+        assert_eq!(
+            table.attribution,
+            batch_table.attribution(),
+            "cost and batch tables must use the same energy attribution"
+        );
+
+        // When the formation policy looks past one batch (shape-aware
+        // with n_bins > 1), full-batch *membership* is decided at
+        // hand-off — when the queue's node can actually take the batch —
+        // exactly as the coordinator's workers call take_batch when they
+        // free up. Gating on node availability is what lets a backlog
+        // accumulate for the lookahead window to regroup, and it does
+        // not move the batch start (which was `max(arrival, free)`
+        // already). Window-less formation (FIFO, or any policy at
+        // max_batch = 1) keeps the eager PR-2 dispatch instant,
+        // preserving the serial engine's exact float arithmetic for the
+        // max_batch = 1 bit-identity property. A non-zero `window_cap`
+        // also switches on the incremental sorted window — the two
+        // conditions are one and the same: only a wider-than-one-batch
+        // lookahead has anything to rank.
+        let window_cap = {
+            let cap = bopts.formation.candidate_window(bopts.max_batch);
+            if bopts.max_batch > 1 && cap > bopts.max_batch {
+                cap
+            } else {
+                0
+            }
+        };
+
+        Self {
+            queries,
+            systems,
+            table,
+            batch_table,
+            opts,
+            bopts,
+            window_cap,
+            hand_off_gated: window_cap > 0,
+            cluster: ClusterState::new(systems),
+            queues: systems
+                .iter()
+                .map(|spec| {
+                    let n = match bopts.queues {
+                        QueueModel::PerWorker => spec.count.max(1),
+                        QueueModel::PerClass => 1,
+                    };
+                    (0..n).map(|_| WorkerQueue::new()).collect()
+                })
+                .collect(),
+            outcomes: Vec::with_capacity(queries.len()),
+            batches: vec![BatchStats::default(); systems.len()],
+            rerouted: 0,
+            next: 0,
+        }
+    }
+
+    /// Arrival instant of the next unrouted query (∞ once exhausted).
+    fn next_arrival(&self) -> f64 {
+        self.queries.get(self.next).map_or(f64::INFINITY, |q| q.arrival_s)
+    }
+
+    /// The instant queue `(s, w)`'s batch becomes due. The queue must be
+    /// non-empty. This is the *entire* coupling between a queue and the
+    /// rest of the simulation, and every input is queue-local: its own
+    /// pending members, plus its own node's availability (under
+    /// `PerClass` there is exactly one queue per class, so the
+    /// class-wide `earliest_free` moves only on that queue's own
+    /// dispatches) — which is what lets the event-heap engine re-derive
+    /// only the touched queue's event per step.
+    fn queue_ready(&self, s: usize, w: usize) -> f64 {
+        let wq = &self.queues[s][w];
+        let front = *wq.pending.front().expect("queue_ready needs a non-empty queue");
+        // the instant this queue's node could take a batch: its own
+        // node under PerWorker, the class-wide earliest-free node under
+        // PerClass (any node may take the batch there)
+        let free = match self.bopts.queues {
+            QueueModel::PerWorker => self.cluster.nodes[s].node_free_at[w],
+            QueueModel::PerClass => self.cluster.nodes[s].earliest_free(),
+        };
+        if wq.pending.len() >= self.bopts.max_batch {
+            // full: due the instant the filling member arrived
+            // (membership additionally waits for a free node when the
+            // formation window needs a backlog — see `BatchedSim::new`)
+            let filling = self.queries[wq.pending[self.bopts.max_batch - 1]].arrival_s;
+            if self.hand_off_gated {
+                free.max(filling)
+            } else {
+                filling
+            }
+        } else {
+            // partial: linger from when the node could take it
+            free.max(self.queries[front].arrival_s) + self.bopts.linger_s
+        }
+    }
+
+    /// Dispatch queue `(s, w)`'s due batch at instant `ready`:
+    /// membership into the queue's reusable buffers, joint-KV trim,
+    /// node occupation, per-member outcome attribution.
+    fn dispatch(&mut self, ready: f64, s: usize, w: usize) {
+        let Self {
+            queries,
+            systems,
+            batch_table,
+            bopts,
+            window_cap,
+            hand_off_gated,
+            cluster,
+            queues,
+            outcomes,
+            batches,
+            ..
+        } = self;
+        let (queries, systems, batch_table) = (*queries, *systems, *batch_table);
+        let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let wq = &mut queues[s][w];
+        // batch membership, into the queue's reusable buffers: the
+        // drag-minimal group from the incrementally sorted window (the
+        // same grouping the coordinator's take_batch_with computes —
+        // see `SortedWindow`), or the FIFO prefix when the policy never
+        // looks past one batch
+        if hand_off_gated {
+            let front = *wq.pending.front().expect("due queue has a front waiter");
+            let oldest = (queries[front].output_tokens, front as u64);
+            wq.window.select_drag_minimal(oldest, bopts.max_batch, &mut wq.scratch, &mut wq.sel);
+        } else {
+            wq.sel.clear();
+            wq.sel.extend(wq.pending.iter().take(bopts.max_batch).map(|&qi| qi as u64));
+        }
+        wq.pairs.clear();
+        wq.pairs.extend(wq.sel.iter().map(|&qi| {
+            let q = &queries[qi as usize];
+            (q.input_tokens, q.output_tokens)
+        }));
+        // joint-KV feasibility: trim to the longest prefix of the
+        // selection that fits; the tail stays queued for the next
+        // dispatch
+        let take = batch_table.feasible_prefix(s, &wq.pairs);
+        wq.sel.truncate(take);
+        wq.pairs.truncate(take);
+        if hand_off_gated {
+            // pending is ascending in trace index, so positions resolve
+            // by binary search; descending removal keeps earlier
+            // positions stable
+            for &qi in wq.sel.iter().rev() {
+                let pos = wq
+                    .pending
+                    .binary_search(&(qi as usize))
+                    .expect("selected member must be pending");
+                wq.pending.remove(pos);
+                wq.window.remove((queries[qi as usize].output_tokens, qi));
+            }
+            // slide the window forward over the next-oldest waiters
+            // this dispatch exposed
+            while wq.window.len() < window_cap.min(wq.pending.len()) {
+                let qi = wq.pending[wq.window.len()];
+                wq.window.insert((queries[qi].output_tokens, qi as u64));
+            }
+        } else {
+            // window-less selection is always the queue prefix
+            for _ in 0..take {
+                wq.pending.pop_front();
+            }
+        }
+        let cost = batch_table.cost(s, &wq.pairs);
+        debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
+        let e_batch = batch_table.energy_j(&cost);
+        let node = cluster.get_mut(SystemId(s));
+        let start = match bopts.queues {
+            QueueModel::PerWorker => {
+                node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
+            }
+            QueueModel::PerClass => {
+                node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s)
+            }
+        };
+        node.energy_j += e_batch;
+        batches[s].record(
+            take,
+            systems[s].dispatch_energy_j(),
+            FormationPolicy::straggler_steps(&wq.pairs),
+        );
+        let batch_tokens: f64 = wq.pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
+        for (k, &qi) in wq.sel.iter().enumerate() {
+            let qi = qi as usize;
+            let q = &queries[qi];
+            // attribute batch energy by token share (a singleton gets
+            // exactly the full batch energy)
+            let share = (wq.pairs[k].0 + wq.pairs[k].1) as f64 / batch_tokens;
+            outcomes.push((
+                qi,
+                QueryOutcome {
+                    query_id: q.id,
+                    system: s,
+                    arrival_s: q.arrival_s,
+                    start_s: start,
+                    finish_s: start + cost.member_finish_s[k],
+                    service_s: cost.member_finish_s[k],
+                    energy_j: e_batch * share,
+                },
+            ));
+        }
+    }
+
+    /// Route the next arrival: retire finished work, build the live
+    /// queue view (pending members surface as extra length and serial
+    /// depth), ask the policy, and enqueue on the assigned system's
+    /// least-loaded worker queue. Returns the `(system, worker)` queue
+    /// joined — the one queue whose due event changed.
+    fn route_next_arrival(&mut self, policy: &mut dyn Policy) -> (usize, usize) {
+        let Self {
+            queries,
+            systems,
+            table,
+            opts,
+            bopts,
+            window_cap,
+            hand_off_gated,
+            cluster,
+            queues,
+            rerouted,
+            next,
+            ..
+        } = self;
+        let (queries, systems, table, opts) = (*queries, *systems, *table, *opts);
+        let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let qi = *next;
+        let q = &queries[qi];
+        cluster.advance_to(q.arrival_s);
+        let mut depths = cluster.queue_depths_at(q.arrival_s);
+        let mut lens = cluster.queue_lens();
+        for (s, sys_queues) in queues.iter().enumerate() {
+            for wq in sys_queues {
+                if wq.pending.is_empty() {
+                    continue;
+                }
+                lens[s] += wq.pending.len();
+                depths[s] += wq.pending.iter().map(|&qi| table.runtime_s(qi, s)).sum::<f64>();
+            }
+        }
+        let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+        let sid = route_query(policy, q, qi, &view, table, systems, opts.strict, rerouted);
+        let w = pick_worker_queue(
+            &cluster.nodes[sid.0],
+            queues[sid.0].iter().map(|wq| &wq.pending),
+            q.arrival_s,
+            table,
+            sid.0,
+        );
+        let wq = &mut queues[sid.0][w];
+        // the new waiter enters the sorted window iff it lands within
+        // the lookahead cap (deeper waiters enter as dispatches expose
+        // them)
+        if hand_off_gated && wq.pending.len() < window_cap {
+            wq.window.insert((q.output_tokens, qi as u64));
+        }
+        wq.pending.push_back(qi);
+        *next = qi + 1;
+        (sid.0, w)
+    }
+
+    /// Sort outcomes back to trace order, sum the serial-equivalent
+    /// energy in that order — the same float accumulation order the
+    /// serial engine uses, so `max_batch = 1` stays bit-identical even
+    /// though dispatches interleave across systems in `ready` order —
+    /// and assemble the report.
+    fn finish(self, policy: &mut dyn Policy) -> SimReport {
+        let mut outcomes = self.outcomes;
+        outcomes.sort_unstable_by_key(|&(qi, _)| qi);
+        let serial_energy_j: f64 =
+            outcomes.iter().map(|&(qi, ref o)| self.table.energy_j(qi, o.system)).sum();
+        let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();
+        finalize_report(
+            policy.name(),
+            &self.cluster,
+            outcomes,
+            self.opts,
+            self.rerouted,
+            self.batches,
+            serial_energy_j,
+        )
+    }
+}
+
+/// One "queue `(s, w)`'s batch becomes due at `ready`" entry in the
+/// event heap. Ordering reproduces the scan loop's strict-`<` winner
+/// exactly: earliest `ready` first, ties to the lowest
+/// `(system, worker)` pair — the order the scan encounters queues in.
+/// `stamp` pairs the event with the queue revision it was derived from;
+/// a mismatch against the live stamp marks it stale. Crate-visible so
+/// the streaming engine (`sim::stream`) shares the exact ordering —
+/// one tie-break definition, not two.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct DueEvent {
+    pub(crate) ready: f64,
+    pub(crate) s: u32,
+    pub(crate) w: u32,
+    pub(crate) stamp: u64,
+}
+
+impl PartialEq for DueEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for DueEvent {}
+
+impl PartialOrd for DueEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for DueEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `x + 0.0` maps -0.0 to +0.0 and is the identity on every
+        // other value (due times are finite, never NaN), so `total_cmp`
+        // agrees with the scan's IEEE `<` on every pair of due instants
+        // — without it a -0.0 due time would outrank a +0.0 one that
+        // the scan treats as tied (and resolves by queue order)
+        (self.ready + 0.0)
+            .total_cmp(&(other.ready + 0.0))
+            .then(self.s.cmp(&other.s))
+            .then(self.w.cmp(&other.w))
+            .then(self.stamp.cmp(&other.stamp))
+    }
+}
+
+/// Re-derive queue `(s, w)`'s due event after its inputs changed (a
+/// dispatch from it, or an arrival into it): bump the queue's stamp —
+/// lazily invalidating whatever event the heap still holds for it — and
+/// push a fresh event if the queue still has waiters. Due times are
+/// strictly queue-local (see [`BatchedSim::queue_ready`]), so the one
+/// touched queue is the only one whose event can have changed.
+fn refresh_due_event(
+    sim: &BatchedSim,
+    stamps: &mut [Vec<u64>],
+    heap: &mut BinaryHeap<Reverse<DueEvent>>,
+    s: usize,
+    w: usize,
+) {
+    let stamp = &mut stamps[s][w];
+    *stamp += 1;
+    if sim.queues[s][w].pending.is_empty() {
+        return;
+    }
+    heap.push(Reverse(DueEvent {
+        ready: sim.queue_ready(s, w),
+        s: s as u32,
+        w: w as u32,
+        stamp: *stamp,
+    }));
+}
+
 /// Batched online simulation over prebuilt tables. Mirrors
 /// `SystemQueue::take_batch` in virtual time, per **virtual worker
 /// queue** — by default one queue per node ([`QueueModel::PerWorker`],
@@ -485,6 +969,21 @@ impl WorkerQueue {
 /// are bit-identical (property-tested in `rust/tests/properties.rs`):
 /// one queue per class *is* one queue per node there, and the
 /// single-queue paths do no extra arithmetic.
+///
+/// **Event-driven dispatch** (this PR's tentpole): instead of
+/// re-scanning every virtual queue per step for the earliest due batch
+/// — O(Σ `count`) work per dispatch, which dominates million-query
+/// runs on wide fleets — the engine keeps a min-heap of per-queue
+/// `DueEvent`s with lazy invalidation: each queue carries a revision
+/// stamp, bumped whenever that queue's pending set or node availability
+/// changes, and events whose stamp no longer matches are discarded on
+/// pop. Because a due time depends only on queue-local state (see
+/// `BatchedSim::queue_ready`), exactly one event is re-derived per
+/// dispatch or arrival, so a step costs O(log #queues). The retained
+/// scan loop (`simulate_batched_with_tables_scan`) pins this engine
+/// bit-identical — same winners, same tie-breaks, same floats — across
+/// seeds, policies, queue models, and formation policies
+/// (`rust/tests/properties.rs`).
 pub fn simulate_batched_with_tables(
     queries: &[Query],
     systems: &[SystemSpec],
@@ -496,249 +995,51 @@ pub fn simulate_batched_with_tables(
     let bopts = opts
         .batching
         .expect("simulate_batched_with_tables requires SimOptions::batching");
-    assert!(bopts.max_batch >= 1, "max_batch must be >= 1");
-    assert!(
-        bopts.linger_s >= 0.0 && bopts.linger_s.is_finite(),
-        "linger_s must be finite and non-negative"
-    );
-    assert_sorted(queries);
-    assert_eq!(table.n_queries(), queries.len(), "cost table rows must match the trace");
-    assert_eq!(table.n_systems(), systems.len(), "cost table columns must match the cluster");
-    assert_eq!(batch_table.n_systems(), systems.len(), "batch table must match the cluster");
-    assert_eq!(
-        table.attribution,
-        batch_table.attribution(),
-        "cost and batch tables must use the same energy attribution"
-    );
-
-    let mut cluster = ClusterState::new(systems);
-    // virtual worker queues: one per node (PerWorker) or one per class
-    // (PerClass); `queues[s][w]` owns the pending deque, the sorted
-    // lookahead window, and the dispatch scratch buffers — so the
-    // steady-state dispatch loop allocates nothing in the engine's own
-    // buffers (the PR-4 loop built ~4 fresh `Vec`s per dispatch; the
-    // one remaining allocation is `BatchTable::cost`'s owned memo key)
-    let mut queues: Vec<Vec<WorkerQueue>> = systems
-        .iter()
-        .map(|spec| {
-            let n = match bopts.queues {
-                QueueModel::PerWorker => spec.count.max(1),
-                QueueModel::PerClass => 1,
-            };
-            (0..n).map(|_| WorkerQueue::new()).collect()
-        })
-        .collect();
-    // (trace index, outcome): dispatches interleave across systems in
-    // `ready` order, so outcomes are re-sorted to trace order at the end
-    // to stay comparable with the serial engine's reports
-    let mut outcomes: Vec<(usize, QueryOutcome)> = Vec::with_capacity(queries.len());
-    let mut batches: Vec<BatchStats> = vec![BatchStats::default(); systems.len()];
-    let mut rerouted = 0u64;
-    let mut next = 0usize;
-
-    // When the formation policy looks past one batch (shape-aware with
-    // n_bins > 1), full-batch *membership* is decided at hand-off — when
-    // the queue's node can actually take the batch — exactly as the
-    // coordinator's workers call take_batch when they free up. Gating on
-    // node availability is what lets a backlog accumulate for the
-    // lookahead window to regroup, and it does not move the batch start
-    // (which was `max(arrival, free)` already). Window-less formation
-    // (FIFO, or any policy at max_batch = 1) keeps the eager PR-2
-    // dispatch instant, preserving the serial engine's exact float
-    // arithmetic for the max_batch = 1 bit-identity property. A
-    // non-zero `window_cap` also switches on the incremental sorted
-    // window — the two conditions are one and the same: only a
-    // wider-than-one-batch lookahead has anything to rank.
-    let window_cap = {
-        let cap = bopts.formation.candidate_window(bopts.max_batch);
-        if bopts.max_batch > 1 && cap > bopts.max_batch {
-            cap
-        } else {
-            0
-        }
-    };
-    let hand_off_gated = window_cap > 0;
+    let mut sim = BatchedSim::new(queries, systems, table, batch_table, opts, bopts);
+    // one live revision stamp per queue; an event is current iff its
+    // stamp matches
+    let mut stamps: Vec<Vec<u64>> = sim.queues.iter().map(|sq| vec![0u64; sq.len()]).collect();
+    let mut heap: BinaryHeap<Reverse<DueEvent>> = BinaryHeap::new();
 
     loop {
-        let next_arrival = queries.get(next).map_or(f64::INFINITY, |q| q.arrival_s);
+        let next_arrival = sim.next_arrival();
 
-        // earliest batch due to dispatch across worker queues (ties:
-        // lowest (system, worker) pair, deterministically)
+        // earliest live due event, discarding stale ones lazily; the
+        // heap order matches the scan's (ready, system, worker) winner
         let mut due: Option<(f64, usize, usize)> = None;
-        for (s, sys_queues) in queues.iter().enumerate() {
-            for (w, wq) in sys_queues.iter().enumerate() {
-                let Some(&front) = wq.pending.front() else { continue };
-                // the instant this queue's node could take a batch: its
-                // own node under PerWorker, the class-wide earliest-free
-                // node under PerClass (any node may take the batch there)
-                let free = match bopts.queues {
-                    QueueModel::PerWorker => cluster.nodes[s].node_free_at[w],
-                    QueueModel::PerClass => cluster.nodes[s].earliest_free(),
-                };
-                let ready = if wq.pending.len() >= bopts.max_batch {
-                    // full: due the instant the filling member arrived
-                    // (membership additionally waits for a free node when
-                    // the formation window needs a backlog — see above)
-                    let filling = queries[wq.pending[bopts.max_batch - 1]].arrival_s;
-                    if hand_off_gated {
-                        free.max(filling)
-                    } else {
-                        filling
-                    }
-                } else {
-                    // partial: linger from when the node could take it
-                    free.max(queries[front].arrival_s) + bopts.linger_s
-                };
-                if due.map_or(true, |(t, _, _)| ready < t) {
-                    due = Some((ready, s, w));
-                }
+        while let Some(&Reverse(ev)) = heap.peek() {
+            let (s, w) = (ev.s as usize, ev.w as usize);
+            if ev.stamp != stamps[s][w] {
+                heap.pop();
+                continue;
             }
+            due = Some((ev.ready, s, w));
+            break;
         }
 
         if let Some((ready, s, w)) = due {
             // dispatch everything due before the next arrival; an
             // arrival exactly at the deadline misses the batch
             if ready <= next_arrival {
-                let wq = &mut queues[s][w];
-                // batch membership, into the queue's reusable buffers:
-                // the drag-minimal group from the incrementally sorted
-                // window (the same grouping the coordinator's
-                // take_batch_with computes — see `SortedWindow`), or the
-                // FIFO prefix when the policy never looks past one batch
-                if hand_off_gated {
-                    let front = *wq.pending.front().expect("due queue has a front waiter");
-                    let oldest = (queries[front].output_tokens, front as u64);
-                    wq.window.select_drag_minimal(
-                        oldest,
-                        bopts.max_batch,
-                        &mut wq.scratch,
-                        &mut wq.sel,
-                    );
-                } else {
-                    wq.sel.clear();
-                    wq.sel.extend(wq.pending.iter().take(bopts.max_batch).map(|&qi| qi as u64));
-                }
-                wq.pairs.clear();
-                wq.pairs.extend(wq.sel.iter().map(|&qi| {
-                    let q = &queries[qi as usize];
-                    (q.input_tokens, q.output_tokens)
-                }));
-                // joint-KV feasibility: trim to the longest prefix of the
-                // selection that fits; the tail stays queued for the next
-                // dispatch
-                let take = batch_table.feasible_prefix(s, &wq.pairs);
-                wq.sel.truncate(take);
-                wq.pairs.truncate(take);
-                if hand_off_gated {
-                    // pending is ascending in trace index, so positions
-                    // resolve by binary search; descending removal keeps
-                    // earlier positions stable
-                    for &qi in wq.sel.iter().rev() {
-                        let pos = wq
-                            .pending
-                            .binary_search(&(qi as usize))
-                            .expect("selected member must be pending");
-                        wq.pending.remove(pos);
-                        wq.window.remove((queries[qi as usize].output_tokens, qi));
-                    }
-                    // slide the window forward over the next-oldest
-                    // waiters this dispatch exposed
-                    while wq.window.len() < window_cap.min(wq.pending.len()) {
-                        let qi = wq.pending[wq.window.len()];
-                        wq.window.insert((queries[qi].output_tokens, qi as u64));
-                    }
-                } else {
-                    // window-less selection is always the queue prefix
-                    for _ in 0..take {
-                        wq.pending.pop_front();
-                    }
-                }
-                let cost = batch_table.cost(s, &wq.pairs);
-                debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
-                let e_batch = batch_table.energy_j(&cost);
-                let node = cluster.get_mut(SystemId(s));
-                let start = match bopts.queues {
-                    QueueModel::PerWorker => {
-                        node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
-                    }
-                    QueueModel::PerClass => {
-                        node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s)
-                    }
-                };
-                node.energy_j += e_batch;
-                batches[s].record(
-                    take,
-                    systems[s].dispatch_energy_j(),
-                    FormationPolicy::straggler_steps(&wq.pairs),
-                );
-                let batch_tokens: f64 =
-                    wq.pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
-                for (k, &qi) in wq.sel.iter().enumerate() {
-                    let qi = qi as usize;
-                    let q = &queries[qi];
-                    // attribute batch energy by token share (a singleton
-                    // gets exactly the full batch energy)
-                    let share = (wq.pairs[k].0 + wq.pairs[k].1) as f64 / batch_tokens;
-                    outcomes.push((
-                        qi,
-                        QueryOutcome {
-                            query_id: q.id,
-                            system: s,
-                            arrival_s: q.arrival_s,
-                            start_s: start,
-                            finish_s: start + cost.member_finish_s[k],
-                            service_s: cost.member_finish_s[k],
-                            energy_j: e_batch * share,
-                        },
-                    ));
-                }
+                heap.pop(); // consume the event just peeked
+                sim.dispatch(ready, s, w);
+                // the dispatch changed this queue's pending set and its
+                // node's availability — and, by queue-locality, nothing
+                // any other queue's due time depends on
+                refresh_due_event(&sim, &mut stamps, &mut heap, s, w);
                 continue;
             }
         }
 
         // no batch due before the next arrival: route it
-        let Some(q) = queries.get(next) else { break };
-        cluster.advance_to(q.arrival_s);
-        let mut depths = cluster.queue_depths_at(q.arrival_s);
-        let mut lens = cluster.queue_lens();
-        for (s, sys_queues) in queues.iter().enumerate() {
-            for wq in sys_queues {
-                if wq.pending.is_empty() {
-                    continue;
-                }
-                lens[s] += wq.pending.len();
-                depths[s] += wq.pending.iter().map(|&qi| table.runtime_s(qi, s)).sum::<f64>();
-            }
+        if sim.next >= queries.len() {
+            break;
         }
-        let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
-        let sid = route_query(policy, q, next, &view, table, systems, opts.strict, &mut rerouted);
-        let w = pick_worker_queue(
-            &cluster.nodes[sid.0],
-            queues[sid.0].iter().map(|wq| &wq.pending),
-            q.arrival_s,
-            table,
-            sid.0,
-        );
-        let wq = &mut queues[sid.0][w];
-        // the new waiter enters the sorted window iff it lands within
-        // the lookahead cap (deeper waiters enter as dispatches expose
-        // them)
-        if hand_off_gated && wq.pending.len() < window_cap {
-            wq.window.insert((q.output_tokens, next as u64));
-        }
-        wq.pending.push_back(next);
-        next += 1;
+        let (s, w) = sim.route_next_arrival(policy);
+        refresh_due_event(&sim, &mut stamps, &mut heap, s, w);
     }
 
-    outcomes.sort_unstable_by_key(|&(qi, _)| qi);
-    // serial-equivalent energy summed in trace order — the same float
-    // accumulation order the serial engine uses, so `max_batch = 1`
-    // stays bit-identical even though dispatches interleave across
-    // systems in `ready` order
-    let serial_energy_j: f64 =
-        outcomes.iter().map(|&(qi, ref o)| table.energy_j(qi, o.system)).sum();
-    let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();
-    finalize_report(policy.name(), &cluster, outcomes, opts, rerouted, batches, serial_energy_j)
+    sim.finish(policy)
 }
 
 /// The PR-4 dispatch loop, kept verbatim as the **reference
@@ -1375,5 +1676,71 @@ mod tests {
         assert_eq!(direct.total_service_s, shared.total_service_s);
         assert_eq!(direct.makespan_s, shared.makespan_s);
         assert_eq!(direct.routing_counts(), shared.routing_counts());
+    }
+
+    /// The event-heap engine and the retained scan loop are the same
+    /// computation, bit for bit (the exhaustive randomized pin lives in
+    /// `rust/tests/properties.rs`; this is the fast deterministic
+    /// version that runs in every tier-1 pass).
+    #[test]
+    fn event_heap_matches_scan_engine() {
+        let mut systems = system_catalog();
+        systems[1].count = 2;
+        let em = energy();
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 35.0 }, 11).generate(400);
+        let table = CostTable::build(&queries, &systems, &em);
+        for (formation, queues) in [
+            (FormationPolicy::FifoPrefix, QueueModel::PerWorker),
+            (FormationPolicy::ShapeAware { n_bins: 4 }, QueueModel::PerWorker),
+            (FormationPolicy::ShapeAware { n_bins: 4 }, QueueModel::PerClass),
+        ] {
+            let opts = SimOptions {
+                include_idle_energy: true,
+                batching: Some(
+                    BatchingOptions::new(6, 0.15)
+                        .with_formation(formation)
+                        .with_queues(queues),
+                ),
+                ..Default::default()
+            };
+            let batch_table = BatchTable::new(em.clone(), &systems);
+            let cfg = PolicyConfig::Cost { lambda: 1.0 };
+            let mut p1 = build_policy(&cfg, em.clone(), &systems);
+            let heap = simulate_batched_with_tables(
+                &queries,
+                &systems,
+                p1.as_mut(),
+                &table,
+                &batch_table,
+                &opts,
+            );
+            let mut p2 = build_policy(&cfg, em.clone(), &systems);
+            let scan = simulate_batched_with_tables_scan(
+                &queries,
+                &systems,
+                p2.as_mut(),
+                &table,
+                &batch_table,
+                &opts,
+            );
+            assert_eq!(heap.outcomes.len(), scan.outcomes.len());
+            for (a, b) in heap.outcomes.iter().zip(&scan.outcomes) {
+                assert_eq!(a.query_id, b.query_id);
+                assert_eq!(a.system, b.system);
+                assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+                assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+                assert_eq!(a.service_s.to_bits(), b.service_s.to_bits());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            }
+            assert_eq!(heap.total_energy_j.to_bits(), scan.total_energy_j.to_bits());
+            assert_eq!(heap.idle_energy_j.to_bits(), scan.idle_energy_j.to_bits());
+            assert_eq!(heap.makespan_s.to_bits(), scan.makespan_s.to_bits());
+            assert_eq!(heap.serial_energy_j.to_bits(), scan.serial_energy_j.to_bits());
+            assert_eq!(heap.rerouted, scan.rerouted);
+            for (a, b) in heap.batches.iter().zip(&scan.batches) {
+                assert_eq!(a.dispatches, b.dispatches);
+                assert_eq!(a.size_hist, b.size_hist);
+            }
+        }
     }
 }

@@ -6,9 +6,11 @@ pub mod cluster;
 pub mod queueing;
 pub mod engine;
 pub mod report;
+pub mod stream;
 
 pub use cluster::{ClusterState, NodeState};
 pub use engine::{
     simulate, simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
 };
-pub use report::{BatchStats, SimReport};
+pub use report::{BatchStats, SimReport, StreamingOutcomes};
+pub use stream::{simulate_stream, simulate_stream_with_sink, StreamReport};

@@ -1,6 +1,11 @@
-//! Simulation results: the numbers behind Figs. 4–5 and the headline.
+//! Simulation results: the numbers behind Figs. 4–5 and the headline —
+//! plus the streaming accumulator that derives the same metrics without
+//! retaining per-query outcomes (the memory floor of million-query
+//! runs).
 
-use crate::util::stats::percentile;
+use crate::util::stats::{percentile, P2Quantile};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Per-query outcome.
 #[derive(Clone, Copy, Debug)]
@@ -73,6 +78,131 @@ impl BatchStats {
             return 0.0;
         }
         self.queries() as f64 / self.dispatches as f64
+    }
+}
+
+/// Streaming replacement for everything [`SimReport`] derives from its
+/// retained `outcomes` vector: running sums for the means, a P² marker
+/// estimator ([`P2Quantile`]) for the p99 latency, and an O(in-flight)
+/// reorder buffer that reproduces the materialized engines'
+/// **trace-order** float accumulation of serial-equivalent energy
+/// exactly (dispatches complete out of order; summing them as they
+/// complete would round differently). A 10⁷-query run reports through
+/// this in O(1) + O(pending) memory — see `sim::stream`.
+#[derive(Clone, Debug)]
+pub struct StreamingOutcomes {
+    count: u64,
+    latency_sum: f64,
+    wait_sum: f64,
+    energy_sum: f64,
+    p99: P2Quantile,
+    /// trace-order sums: outcomes arrive keyed by trace sequence
+    /// number, park in a min-heap, and fold into these sums only when
+    /// contiguous from `next_seq` — bit-identical to the materialized
+    /// engines' post-sort accumulation
+    serial_energy_j: f64,
+    service_sum: f64,
+    next_seq: u64,
+    /// parked out-of-order outcomes: `(seq, serial_e bits, service bits)`
+    reorder: BinaryHeap<Reverse<(u64, u64, u64)>>,
+}
+
+impl Default for StreamingOutcomes {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingOutcomes {
+    pub fn new() -> Self {
+        Self {
+            count: 0,
+            latency_sum: 0.0,
+            wait_sum: 0.0,
+            energy_sum: 0.0,
+            p99: P2Quantile::new(0.99),
+            serial_energy_j: 0.0,
+            service_sum: 0.0,
+            next_seq: 0,
+            reorder: BinaryHeap::new(),
+        }
+    }
+
+    /// Fold in one completed outcome. `seq` is the query's trace
+    /// sequence number (0-based, each exactly once, in any order);
+    /// `serial_energy_j` is what the same query would have cost
+    /// dispatched alone (the serial-equivalent component).
+    pub fn push(&mut self, seq: u64, o: &QueryOutcome, serial_energy_j: f64) {
+        self.count += 1;
+        self.latency_sum += o.latency_s();
+        self.wait_sum += o.queue_wait_s();
+        self.energy_sum += o.energy_j;
+        self.p99.push(o.latency_s());
+        // the payloads are finite, so the bits round-trip exactly and
+        // the tuple keeps heap order on seq (seqs are unique)
+        self.reorder.push(Reverse((seq, serial_energy_j.to_bits(), o.service_s.to_bits())));
+        while let Some(&Reverse((s, e_bits, svc_bits))) = self.reorder.peek() {
+            if s != self.next_seq {
+                break;
+            }
+            self.reorder.pop();
+            self.serial_energy_j += f64::from_bits(e_bits);
+            self.service_sum += f64::from_bits(svc_bits);
+            self.next_seq += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.latency_sum / self.count as f64 }
+    }
+
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.wait_sum / self.count as f64 }
+    }
+
+    /// Streaming p99 latency (P² estimate; exact below five outcomes).
+    pub fn p99_latency_s(&self) -> f64 {
+        self.p99.estimate()
+    }
+
+    /// Σ per-outcome energy, in completion order (the conservation
+    /// check's query-side total).
+    pub fn outcome_energy_j(&self) -> f64 {
+        self.energy_sum
+    }
+
+    /// Trace-order serial-equivalent energy. Only meaningful once every
+    /// seq has been pushed — until then the out-of-order tail is still
+    /// parked in the reorder buffer.
+    pub fn serial_energy_j(&self) -> f64 {
+        debug_assert!(
+            self.reorder.is_empty(),
+            "serial_energy_j read with {} outcomes still out of order",
+            self.reorder.len()
+        );
+        self.serial_energy_j
+    }
+
+    /// Σ per-query service time in trace order — bit-identical to
+    /// [`SimReport::total_service_s`]. Same caveat as
+    /// [`Self::serial_energy_j`].
+    pub fn total_service_s(&self) -> f64 {
+        debug_assert!(
+            self.reorder.is_empty(),
+            "total_service_s read with {} outcomes still out of order",
+            self.reorder.len()
+        );
+        self.service_sum
+    }
+
+    /// Outcomes parked awaiting their trace-order turn (0 when every
+    /// pushed seq is contiguous from 0).
+    pub fn reorder_depth(&self) -> usize {
+        self.reorder.len()
     }
 }
 
@@ -215,6 +345,96 @@ mod tests {
         assert!(r.energy_conserved());
         r.systems[0].energy_j = 6.0;
         assert!(!r.energy_conserved());
+    }
+
+    fn outcome(arrival: f64, start: f64, finish: f64, energy: f64) -> QueryOutcome {
+        QueryOutcome {
+            query_id: 0,
+            system: 0,
+            arrival_s: arrival,
+            start_s: start,
+            finish_s: finish,
+            service_s: finish - start,
+            energy_j: energy,
+        }
+    }
+
+    /// The reorder buffer must reproduce the materialized engines'
+    /// trace-order float sum bit-for-bit, no matter the completion
+    /// order of the pushes.
+    #[test]
+    fn streaming_serial_energy_matches_trace_order_sum_bitwise() {
+        // values chosen so summation order changes the rounding
+        let serial: Vec<f64> =
+            (0..200).map(|i| 1.0 + (i as f64) * 1e-3 + ((i * 37 % 11) as f64) * 1e17).collect();
+        let trace_order_sum: f64 = serial.iter().sum();
+
+        // push in a scrambled (but deterministic) completion order
+        let mut order: Vec<usize> = (0..serial.len()).collect();
+        for i in 0..order.len() {
+            order.swap(i, (i * 73 + 11) % serial.len());
+        }
+        let service: Vec<f64> = serial.iter().map(|e| e * 0.37).collect();
+        let service_sum: f64 = service.iter().sum();
+        let mut acc = StreamingOutcomes::new();
+        for &i in &order {
+            acc.push(i as u64, &outcome(0.0, 0.0, service[i], 0.5), serial[i]);
+        }
+        assert_eq!(acc.count(), serial.len() as u64);
+        assert_eq!(acc.reorder_depth(), 0);
+        assert_eq!(acc.serial_energy_j().to_bits(), trace_order_sum.to_bits());
+        assert_eq!(acc.total_service_s().to_bits(), service_sum.to_bits());
+    }
+
+    #[test]
+    fn streaming_means_match_direct_computation() {
+        let outs = [
+            outcome(0.0, 0.5, 2.0, 3.0),
+            outcome(1.0, 1.0, 4.0, 5.0),
+            outcome(2.0, 6.0, 9.0, 1.5),
+        ];
+        let mut acc = StreamingOutcomes::new();
+        for (i, o) in outs.iter().enumerate() {
+            acc.push(i as u64, o, 0.0);
+        }
+        let mean = outs.iter().map(QueryOutcome::latency_s).sum::<f64>() / 3.0;
+        let wait = outs.iter().map(QueryOutcome::queue_wait_s).sum::<f64>() / 3.0;
+        assert!((acc.mean_latency_s() - mean).abs() < 1e-12);
+        assert!((acc.mean_queue_wait_s() - wait).abs() < 1e-12);
+        assert!((acc.outcome_energy_j() - 9.5).abs() < 1e-12);
+        // below five samples the P² estimator is exact
+        assert_eq!(acc.p99_latency_s(), 3.0);
+    }
+
+    #[test]
+    fn streaming_p99_tracks_exact_percentile() {
+        let mut acc = StreamingOutcomes::new();
+        let mut lat = Vec::new();
+        let mut x = 1u64;
+        for i in 0..20_000u64 {
+            // xorshift latencies in (0, 1)
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let l = (x >> 11) as f64 / (1u64 << 53) as f64;
+            lat.push(l);
+            acc.push(i, &outcome(0.0, 0.0, l, 1.0), 0.0);
+        }
+        let exact = percentile(&lat, 99.0);
+        assert!(
+            (acc.p99_latency_s() - exact).abs() < 0.01,
+            "p2={} exact={exact}",
+            acc.p99_latency_s()
+        );
+    }
+
+    #[test]
+    fn streaming_empty_is_all_zero() {
+        let acc = StreamingOutcomes::new();
+        assert_eq!(acc.count(), 0);
+        assert_eq!(acc.mean_latency_s(), 0.0);
+        assert_eq!(acc.p99_latency_s(), 0.0);
+        assert_eq!(acc.serial_energy_j(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,940 @@
+//! Streaming simulation: million-query runs in bounded memory.
+//!
+//! The materialized engines ([`crate::sim::engine`]) hold the whole
+//! trace, a [`crate::perf::cost_table::CostTable`] row per query, and
+//! every [`QueryOutcome`] until the end of the run — three O(n) buffers
+//! that put a 10⁷-query study out of reach. This module runs the *same*
+//! simulation over a [`QuerySource`], holding only:
+//!
+//! - the queries currently resident — in virtual worker queues or in
+//!   flight on a node (O(pending); a one-query lookahead on the source
+//!   is the entire arrival buffer);
+//! - one lazily evaluated cost row per **unique** `(m, n)` shape
+//!   ([`RowCache`] — the dedup observation that makes
+//!   [`crate::perf::cost_table::CostTable::build_dedup`] cheap, applied
+//!   online);
+//! - streaming outcome accumulators ([`StreamingOutcomes`]: running
+//!   sums, a P² p99 estimator, and an O(in-flight) reorder buffer that
+//!   reproduces the materialized engines' trace-order float sums
+//!   bit-for-bit).
+//!
+//! Dispatch uses the same event-heap core as the materialized batched
+//! engine — per-queue [`DueEvent`]s with lazy stamp invalidation — and
+//! every routing, formation, trimming, scheduling, and attribution step
+//! mirrors `engine.rs` expression-for-expression, so a streaming run
+//! over [`crate::workload::source::SliceSource`] is **bit-identical**
+//! to the materialized run on the same trace (per-outcome fields,
+//! makespan, system totals, trace-order sums — pinned by
+//! `rust/tests/stream_sim.rs`). What the streaming report gives up is
+//! only what fundamentally needs the full outcome vector: the exact p99
+//! becomes a P² estimate, and per-query outcomes flow through the sink
+//! callback instead of a returned `Vec`.
+//!
+//! One caveat worth knowing: batched mode memoizes batch compositions
+//! in a [`BatchTable`], whose exact-key cache grows with the number of
+//! *distinct* compositions encountered — heavy-tailed traces keep
+//! minting new ones. Serial mode (`opts.batching = None`) is strictly
+//! O(pending + unique shapes) and is what the CI bounded-memory smoke
+//! test runs.
+
+use super::cluster::{ClusterState, NodeState};
+use super::engine::{BatchingOptions, DueEvent, QueueModel, SimOptions};
+use super::report::{BatchStats, QueryOutcome, StreamingOutcomes, SystemTotals};
+use crate::hw::catalog::SystemId;
+use crate::hw::spec::SystemSpec;
+use crate::perf::cost_table::{BatchTable, RowCache};
+use crate::perf::energy::EnergyModel;
+use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
+use crate::sched::policy::{ClusterView, Policy};
+use crate::workload::source::QuerySource;
+use crate::workload::Query;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// What a streaming run reports: everything [`crate::sim::SimReport`]
+/// derives without its outcome vector, computed from running
+/// accumulators. Fields named like their `SimReport` counterparts are
+/// bit-identical to them on the same trace (the p99 is the P² estimate,
+/// the means accumulate in completion order — those two are
+/// approximate).
+#[derive(Clone, Debug)]
+pub struct StreamReport {
+    pub policy: String,
+    /// queries simulated (the source may end before the requested limit)
+    pub queries: u64,
+    pub systems: Vec<SystemTotals>,
+    pub makespan_s: f64,
+    /// Σ per-query service time, accumulated in trace order —
+    /// bit-identical to [`crate::sim::SimReport::total_service_s`]
+    pub total_service_s: f64,
+    pub total_energy_j: f64,
+    pub idle_energy_j: f64,
+    pub rerouted: u64,
+    pub batches: Vec<BatchStats>,
+    /// serial-equivalent energy of the realized routing, accumulated in
+    /// trace order — bit-identical to
+    /// [`crate::sim::SimReport::serial_energy_j`]
+    pub serial_energy_j: f64,
+    /// Σ per-outcome energy (completion order) — the query side of the
+    /// conservation check
+    pub outcome_energy_j: f64,
+    pub mean_latency_s: f64,
+    pub mean_queue_wait_s: f64,
+    /// streaming p99 latency (P² estimate; exact below five queries)
+    pub p99_latency_s: f64,
+    /// distinct `(m, n)` shapes seen — the [`RowCache`]'s entire
+    /// footprint
+    pub unique_shapes: usize,
+    /// most queries resident at once (in flight on nodes + waiting in
+    /// virtual queues), sampled at each arrival — the O(pending) term
+    /// of the memory bound
+    pub peak_pending: usize,
+}
+
+impl StreamReport {
+    pub fn energy_per_query(&self) -> f64 {
+        if self.queries == 0 {
+            return 0.0;
+        }
+        self.total_energy_j / self.queries as f64
+    }
+
+    /// conservation check: Σ query energy == Σ system energy
+    pub fn energy_conserved(&self) -> bool {
+        let by_system: f64 = self.systems.iter().map(|s| s.energy_j).sum();
+        (self.outcome_energy_j - by_system).abs() <= 1e-6 * by_system.max(1.0)
+    }
+
+    /// queries routed to each system, in system order
+    pub fn routing_counts(&self) -> Vec<u64> {
+        self.systems.iter().map(|s| s.queries).collect()
+    }
+
+    /// total batches dispatched across systems
+    pub fn total_dispatches(&self) -> u64 {
+        self.batches.iter().map(|b| b.dispatches).sum()
+    }
+}
+
+/// Run a streaming simulation, pulling at most `limit` queries from the
+/// source (fewer if it ends first). Serial when `opts.batching` is
+/// `None`, batched otherwise — the same mode split as
+/// [`crate::sim::engine::simulate`]. Arrivals must be non-decreasing;
+/// a misordered source is an `Err` (streams are user data — a CSV —
+/// where the materialized engines' assert would be a panic on input).
+pub fn simulate_stream(
+    source: &mut dyn QuerySource,
+    limit: usize,
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    energy: &EnergyModel,
+    opts: &SimOptions,
+) -> Result<StreamReport, String> {
+    simulate_stream_with_sink(source, limit, systems, policy, energy, opts, &mut |_, _| {})
+}
+
+/// [`simulate_stream`] with a per-outcome callback: `sink(seq, outcome)`
+/// fires once per query, in completion order, with `seq` the query's
+/// 0-based trace sequence number. This is how equivalence tests compare
+/// streaming outcomes field-for-field against materialized runs without
+/// the streaming path ever retaining them.
+pub fn simulate_stream_with_sink(
+    source: &mut dyn QuerySource,
+    limit: usize,
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    energy: &EnergyModel,
+    opts: &SimOptions,
+    sink: &mut dyn FnMut(u64, &QueryOutcome),
+) -> Result<StreamReport, String> {
+    let mut cache = RowCache::new(energy.clone(), systems);
+    match opts.batching {
+        None => stream_serial(source, limit, systems, policy, &mut cache, opts, sink),
+        Some(bopts) => {
+            let batch_table = BatchTable::new(energy.clone(), systems);
+            StreamSim::new(systems, batch_table, opts, bopts)
+                .run(source, limit, policy, &mut cache, sink)
+        }
+    }
+}
+
+fn check_sorted(q: &Query, last_arrival: f64, seq: u64) -> Result<(), String> {
+    if q.arrival_s < last_arrival {
+        return Err(format!(
+            "stream not sorted by arrival: query #{seq} (id {}) arrives at {} after {}",
+            q.id, q.arrival_s, last_arrival
+        ));
+    }
+    Ok(())
+}
+
+/// The running state both streaming modes share: cluster, outcome
+/// accumulators, batch stats, and the reroute counter.
+struct StreamTotals {
+    cluster: ClusterState,
+    acc: StreamingOutcomes,
+    batches: Vec<BatchStats>,
+    rerouted: u64,
+    peak_pending: usize,
+}
+
+impl StreamTotals {
+    fn new(systems: &[SystemSpec]) -> Self {
+        Self {
+            cluster: ClusterState::new(systems),
+            acc: StreamingOutcomes::new(),
+            batches: vec![BatchStats::default(); systems.len()],
+            rerouted: 0,
+            peak_pending: 0,
+        }
+    }
+
+    /// Policy assignment + feasibility fallback — the streaming mirror
+    /// of `engine::route_query`, against [`RowCache`] rows instead of
+    /// table rows (same checks, same panic messages, same fallback
+    /// tie-break via [`RowCache::cheapest_feasible`]).
+    fn route(
+        &mut self,
+        policy: &mut dyn Policy,
+        q: &Query,
+        row: usize,
+        view: &ClusterView,
+        cache: &RowCache,
+        strict: bool,
+    ) -> SystemId {
+        let (m, n) = (q.input_tokens, q.output_tokens);
+        let mut sid = policy.assign(q, view);
+        assert!(sid.0 < self.cluster.nodes.len(), "policy returned out-of-range system");
+        if !cache.is_feasible(row, sid.0) {
+            if strict {
+                panic!(
+                    "policy '{}' routed infeasible query (m={m}, n={n}) to {}",
+                    policy.name(),
+                    self.cluster.nodes[sid.0].spec.name
+                );
+            }
+            sid = SystemId(
+                cache
+                    .cheapest_feasible(row)
+                    .unwrap_or_else(|| panic!("query (m={m},n={n}) feasible nowhere")),
+            );
+            self.rerouted += 1;
+        }
+        sid
+    }
+
+    /// Makespan/idle accounting + report assembly — the streaming
+    /// mirror of `engine::finalize_report`, with the outcome-derived
+    /// numbers read off the accumulators.
+    fn finish(self, policy_name: String, opts: &SimOptions, unique_shapes: usize) -> StreamReport {
+        let makespan = self.cluster.makespan();
+        let idle_energy: f64 = if opts.include_idle_energy {
+            self.cluster
+                .nodes
+                .iter()
+                .map(|node| {
+                    let spec = &node.spec;
+                    let capacity_s = makespan * spec.count as f64;
+                    debug_assert!(
+                        node.busy_s <= capacity_s + 1e-9 * capacity_s.max(1.0),
+                        "{}: busy_s {} exceeds makespan × count = {} — scheduling accounting bug",
+                        spec.name,
+                        node.busy_s,
+                        capacity_s
+                    );
+                    spec.idle_w * (capacity_s - node.busy_s).max(0.0)
+                })
+                .sum()
+        } else {
+            0.0
+        };
+        let total_energy: f64 =
+            self.cluster.nodes.iter().map(|n| n.energy_j).sum::<f64>() + idle_energy;
+
+        StreamReport {
+            policy: policy_name,
+            queries: self.acc.count(),
+            systems: self
+                .cluster
+                .nodes
+                .iter()
+                .map(|n| SystemTotals {
+                    name: n.spec.name.to_string(),
+                    queries: n.queries,
+                    busy_s: n.busy_s,
+                    energy_j: n.energy_j,
+                })
+                .collect(),
+            makespan_s: makespan,
+            total_service_s: self.acc.total_service_s(),
+            total_energy_j: total_energy,
+            idle_energy_j: idle_energy,
+            rerouted: self.rerouted,
+            batches: self.batches,
+            serial_energy_j: self.acc.serial_energy_j(),
+            outcome_energy_j: self.acc.outcome_energy_j(),
+            mean_latency_s: self.acc.mean_latency_s(),
+            mean_queue_wait_s: self.acc.mean_queue_wait_s(),
+            p99_latency_s: self.acc.p99_latency_s(),
+            unique_shapes,
+            peak_pending: self.peak_pending,
+        }
+    }
+}
+
+/// Serial streaming loop — the [`crate::sim::simulate_with_table`] loop
+/// over a source, with [`RowCache`] rows in place of table rows. Every
+/// expression mirrors the materialized loop, so outcomes are
+/// bit-identical on the same trace.
+fn stream_serial(
+    source: &mut dyn QuerySource,
+    limit: usize,
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    cache: &mut RowCache,
+    opts: &SimOptions,
+    sink: &mut dyn FnMut(u64, &QueryOutcome),
+) -> Result<StreamReport, String> {
+    let mut st = StreamTotals::new(systems);
+    let mut last_arrival = f64::NEG_INFINITY;
+    let mut seq = 0u64;
+    while (seq as usize) < limit {
+        let Some(q) = source.next_query()? else { break };
+        check_sorted(&q, last_arrival, seq)?;
+        last_arrival = q.arrival_s;
+        let row = cache.row(q.input_tokens, q.output_tokens);
+        st.cluster.advance_to(q.arrival_s);
+        let depths = st.cluster.queue_depths_at(q.arrival_s);
+        let lens = st.cluster.queue_lens();
+        st.peak_pending = st.peak_pending.max(lens.iter().sum::<usize>() + 1);
+        let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+        let sid = st.route(policy, &q, row, &view, cache, opts.strict);
+
+        let service = cache.runtime_s(row, sid.0);
+        let e_j = cache.energy_j(row, sid.0);
+        let node = st.cluster.get_mut(sid);
+        let (start, finish) = node.schedule(q.arrival_s, service);
+        node.energy_j += e_j;
+        st.batches[sid.0].record(1, systems[sid.0].dispatch_energy_j(), 0);
+        let o = QueryOutcome {
+            query_id: q.id,
+            system: sid.0,
+            arrival_s: q.arrival_s,
+            start_s: start,
+            finish_s: finish,
+            service_s: service,
+            energy_j: e_j,
+        };
+        st.acc.push(seq, &o, e_j);
+        sink(seq, &o);
+        seq += 1;
+    }
+    Ok(st.finish(policy.name(), opts, cache.n_unique_rows()))
+}
+
+/// One resident waiter of a streaming virtual queue: everything the
+/// batched loop ever reads about a query after routing — so the `Query`
+/// itself (and its cost row) can be dropped the moment its outcome is
+/// attributed.
+#[derive(Clone, Copy, Debug)]
+struct PendingQuery {
+    /// 0-based trace sequence number (the reorder key and window id)
+    seq: u64,
+    id: u64,
+    arrival_s: f64,
+    m: u32,
+    n: u32,
+    /// this shape's [`RowCache`] row
+    row: usize,
+}
+
+/// Streaming sibling of the materialized engine's `WorkerQueue`: the
+/// pending deque owns [`PendingQuery`] values (there is no trace to
+/// index into), plus the same reusable window/selection/scratch buffers
+/// — and a `members` buffer holding the dispatching batch's waiters,
+/// since they leave the queue before their outcomes are attributed.
+struct StreamWorkerQueue {
+    /// waiting queries in arrival order (ascending `seq`)
+    pending: VecDeque<PendingQuery>,
+    window: SortedWindow,
+    /// selected seqs, ascending ([`SortedWindow`] keys)
+    sel: Vec<u64>,
+    /// `(m, n)` of the selection, in `sel` order
+    pairs: Vec<(u32, u32)>,
+    /// the selected waiters, in `sel` order
+    members: Vec<PendingQuery>,
+    scratch: FormationScratch,
+}
+
+impl StreamWorkerQueue {
+    fn new() -> Self {
+        Self {
+            pending: VecDeque::new(),
+            window: SortedWindow::new(),
+            sel: Vec::new(),
+            pairs: Vec::new(),
+            members: Vec::new(),
+            scratch: FormationScratch::default(),
+        }
+    }
+}
+
+/// Batched streaming engine: the event-heap dispatch loop of
+/// `engine::simulate_batched_with_tables` over a source. Same due-time
+/// expressions, same formation/trim/removal order, same scheduling and
+/// attribution arithmetic — the only structural differences are that
+/// queues own their waiters' data and outcomes flow through the
+/// accumulator/sink instead of a vector.
+struct StreamSim<'a> {
+    systems: &'a [SystemSpec],
+    batch_table: BatchTable,
+    opts: &'a SimOptions,
+    bopts: BatchingOptions,
+    /// lookahead width when the formation policy looks past one batch;
+    /// 0 = window-less (FIFO semantics, eager dispatch instants)
+    window_cap: usize,
+    /// full-batch membership decided at hand-off (`window_cap > 0`)
+    hand_off_gated: bool,
+    queues: Vec<Vec<StreamWorkerQueue>>,
+    totals: StreamTotals,
+}
+
+impl<'a> StreamSim<'a> {
+    fn new(
+        systems: &'a [SystemSpec],
+        batch_table: BatchTable,
+        opts: &'a SimOptions,
+        bopts: BatchingOptions,
+    ) -> Self {
+        assert!(bopts.max_batch >= 1, "max_batch must be >= 1");
+        assert!(
+            bopts.linger_s >= 0.0 && bopts.linger_s.is_finite(),
+            "linger_s must be finite and non-negative"
+        );
+        assert_eq!(batch_table.n_systems(), systems.len(), "batch table must match the cluster");
+        // same hand-off gating rule as the materialized engine — see
+        // `BatchedSim::new` for the full rationale
+        let window_cap = {
+            let cap = bopts.formation.candidate_window(bopts.max_batch);
+            if bopts.max_batch > 1 && cap > bopts.max_batch {
+                cap
+            } else {
+                0
+            }
+        };
+        Self {
+            systems,
+            batch_table,
+            opts,
+            bopts,
+            window_cap,
+            hand_off_gated: window_cap > 0,
+            queues: systems
+                .iter()
+                .map(|spec| {
+                    let n = match bopts.queues {
+                        QueueModel::PerWorker => spec.count.max(1),
+                        QueueModel::PerClass => 1,
+                    };
+                    (0..n).map(|_| StreamWorkerQueue::new()).collect()
+                })
+                .collect(),
+            totals: StreamTotals::new(systems),
+        }
+    }
+
+    /// The instant queue `(s, w)`'s batch becomes due — identical
+    /// expressions to `BatchedSim::queue_ready`, with arrivals read off
+    /// the owned waiters instead of the trace.
+    fn queue_ready(&self, s: usize, w: usize) -> f64 {
+        let wq = &self.queues[s][w];
+        let front = wq.pending.front().expect("queue_ready needs a non-empty queue");
+        let free = match self.bopts.queues {
+            QueueModel::PerWorker => self.totals.cluster.nodes[s].node_free_at[w],
+            QueueModel::PerClass => self.totals.cluster.nodes[s].earliest_free(),
+        };
+        if wq.pending.len() >= self.bopts.max_batch {
+            let filling = wq.pending[self.bopts.max_batch - 1].arrival_s;
+            if self.hand_off_gated {
+                free.max(filling)
+            } else {
+                filling
+            }
+        } else {
+            free.max(front.arrival_s) + self.bopts.linger_s
+        }
+    }
+
+    /// Re-derive queue `(s, w)`'s due event after its inputs changed —
+    /// the streaming twin of `engine::refresh_due_event`, sharing
+    /// [`DueEvent`]'s ordering.
+    fn refresh(
+        &self,
+        stamps: &mut [Vec<u64>],
+        heap: &mut BinaryHeap<Reverse<DueEvent>>,
+        s: usize,
+        w: usize,
+    ) {
+        let stamp = &mut stamps[s][w];
+        *stamp += 1;
+        if self.queues[s][w].pending.is_empty() {
+            return;
+        }
+        heap.push(Reverse(DueEvent {
+            ready: self.queue_ready(s, w),
+            s: s as u32,
+            w: w as u32,
+            stamp: *stamp,
+        }));
+    }
+
+    /// Dispatch queue `(s, w)`'s due batch at instant `ready` —
+    /// `BatchedSim::dispatch` step-for-step, with member data copied
+    /// into the queue's `members` buffer before removal so outcomes can
+    /// be attributed after the waiters leave.
+    fn dispatch(
+        &mut self,
+        ready: f64,
+        s: usize,
+        w: usize,
+        cache: &RowCache,
+        sink: &mut dyn FnMut(u64, &QueryOutcome),
+    ) {
+        let Self {
+            systems,
+            batch_table,
+            bopts,
+            window_cap,
+            hand_off_gated,
+            queues,
+            totals,
+            ..
+        } = self;
+        let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let wq = &mut queues[s][w];
+        if hand_off_gated {
+            let front = wq.pending.front().expect("due queue has a front waiter");
+            let oldest = (front.n, front.seq);
+            wq.window.select_drag_minimal(oldest, bopts.max_batch, &mut wq.scratch, &mut wq.sel);
+            wq.members.clear();
+            for &sq in wq.sel.iter() {
+                let pos = wq
+                    .pending
+                    .binary_search_by_key(&sq, |p| p.seq)
+                    .expect("selected member must be pending");
+                wq.members.push(wq.pending[pos]);
+            }
+        } else {
+            wq.members.clear();
+            wq.members.extend(wq.pending.iter().take(bopts.max_batch).copied());
+        }
+        wq.pairs.clear();
+        wq.pairs.extend(wq.members.iter().map(|p| (p.m, p.n)));
+        // joint-KV feasibility: trim to the longest feasible prefix of
+        // the selection; the tail stays queued
+        let take = batch_table.feasible_prefix(s, &wq.pairs);
+        wq.members.truncate(take);
+        wq.pairs.truncate(take);
+        if hand_off_gated {
+            // descending removal keeps earlier positions stable
+            for k in (0..take).rev() {
+                let p = wq.members[k];
+                let pos = wq
+                    .pending
+                    .binary_search_by_key(&p.seq, |x| x.seq)
+                    .expect("selected member must be pending");
+                wq.pending.remove(pos);
+                wq.window.remove((p.n, p.seq));
+            }
+            // slide the window forward over the next-oldest waiters
+            // this dispatch exposed
+            while wq.window.len() < window_cap.min(wq.pending.len()) {
+                let p = wq.pending[wq.window.len()];
+                wq.window.insert((p.n, p.seq));
+            }
+        } else {
+            for _ in 0..take {
+                wq.pending.pop_front();
+            }
+        }
+        let cost = batch_table.cost(s, &wq.pairs);
+        debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
+        let e_batch = batch_table.energy_j(&cost);
+        let node = totals.cluster.get_mut(SystemId(s));
+        let start = match bopts.queues {
+            QueueModel::PerWorker => {
+                node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
+            }
+            QueueModel::PerClass => {
+                node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s)
+            }
+        };
+        node.energy_j += e_batch;
+        totals.batches[s].record(
+            take,
+            systems[s].dispatch_energy_j(),
+            FormationPolicy::straggler_steps(&wq.pairs),
+        );
+        let batch_tokens: f64 = wq.pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
+        for (k, p) in wq.members.iter().enumerate() {
+            // attribute batch energy by token share (a singleton gets
+            // exactly the full batch energy)
+            let share = (wq.pairs[k].0 + wq.pairs[k].1) as f64 / batch_tokens;
+            let o = QueryOutcome {
+                query_id: p.id,
+                system: s,
+                arrival_s: p.arrival_s,
+                start_s: start,
+                finish_s: start + cost.member_finish_s[k],
+                service_s: cost.member_finish_s[k],
+                energy_j: e_batch * share,
+            };
+            totals.acc.push(p.seq, &o, cache.energy_j(p.row, s));
+            sink(p.seq, &o);
+        }
+    }
+
+    /// Route one arrival — `BatchedSim::route_next_arrival` over owned
+    /// waiters. Returns the `(system, worker)` queue joined.
+    fn route_arrival(
+        &mut self,
+        policy: &mut dyn Policy,
+        seq: u64,
+        q: &Query,
+        cache: &mut RowCache,
+    ) -> (usize, usize) {
+        let systems = self.systems;
+        let strict = self.opts.strict;
+        let row = cache.row(q.input_tokens, q.output_tokens);
+        self.totals.cluster.advance_to(q.arrival_s);
+        let mut depths = self.totals.cluster.queue_depths_at(q.arrival_s);
+        let mut lens = self.totals.cluster.queue_lens();
+        for (s, sys_queues) in self.queues.iter().enumerate() {
+            for wq in sys_queues {
+                if wq.pending.is_empty() {
+                    continue;
+                }
+                lens[s] += wq.pending.len();
+                depths[s] += wq.pending.iter().map(|p| cache.runtime_s(p.row, s)).sum::<f64>();
+            }
+        }
+        self.totals.peak_pending =
+            self.totals.peak_pending.max(lens.iter().sum::<usize>() + 1);
+        let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+        let sid = self.totals.route(policy, q, row, &view, cache, strict);
+        let w = pick_stream_queue(
+            &self.totals.cluster.nodes[sid.0],
+            &self.queues[sid.0],
+            q.arrival_s,
+            cache,
+            sid.0,
+        );
+        let wq = &mut self.queues[sid.0][w];
+        // the new waiter enters the sorted window iff it lands within
+        // the lookahead cap (deeper waiters enter as dispatches expose
+        // them)
+        if self.hand_off_gated && wq.pending.len() < self.window_cap {
+            wq.window.insert((q.output_tokens, seq));
+        }
+        wq.pending.push_back(PendingQuery {
+            seq,
+            id: q.id,
+            arrival_s: q.arrival_s,
+            m: q.input_tokens,
+            n: q.output_tokens,
+            row,
+        });
+        (sid.0, w)
+    }
+
+    /// The event-heap main loop over the source: one-query lookahead on
+    /// arrivals, lazy-stamp due events for dispatches — the same
+    /// control flow as `engine::simulate_batched_with_tables`.
+    fn run(
+        mut self,
+        source: &mut dyn QuerySource,
+        limit: usize,
+        policy: &mut dyn Policy,
+        cache: &mut RowCache,
+        sink: &mut dyn FnMut(u64, &QueryOutcome),
+    ) -> Result<StreamReport, String> {
+        let mut stamps: Vec<Vec<u64>> =
+            self.queues.iter().map(|sq| vec![0u64; sq.len()]).collect();
+        let mut heap: BinaryHeap<Reverse<DueEvent>> = BinaryHeap::new();
+        let mut upcoming: Option<(u64, Query)> = None;
+        let mut pulled = 0usize;
+        let mut last_arrival = f64::NEG_INFINITY;
+
+        loop {
+            // keep exactly one arrival buffered
+            if upcoming.is_none() && pulled < limit {
+                match source.next_query()? {
+                    Some(q) => {
+                        let seq = pulled as u64;
+                        check_sorted(&q, last_arrival, seq)?;
+                        last_arrival = q.arrival_s;
+                        upcoming = Some((seq, q));
+                        pulled += 1;
+                    }
+                    // source ended early: stop pulling, drain the queues
+                    None => pulled = limit,
+                }
+            }
+            let next_arrival = upcoming.as_ref().map_or(f64::INFINITY, |(_, q)| q.arrival_s);
+
+            // earliest live due event, discarding stale ones lazily
+            let mut due: Option<(f64, usize, usize)> = None;
+            while let Some(&Reverse(ev)) = heap.peek() {
+                let (s, w) = (ev.s as usize, ev.w as usize);
+                if ev.stamp != stamps[s][w] {
+                    heap.pop();
+                    continue;
+                }
+                due = Some((ev.ready, s, w));
+                break;
+            }
+
+            if let Some((ready, s, w)) = due {
+                // dispatch everything due before the next arrival; an
+                // arrival exactly at the deadline misses the batch
+                if ready <= next_arrival {
+                    heap.pop();
+                    self.dispatch(ready, s, w, cache, sink);
+                    self.refresh(&mut stamps, &mut heap, s, w);
+                    continue;
+                }
+            }
+
+            // no batch due before the next arrival: route it
+            let Some((seq, q)) = upcoming.take() else { break };
+            let (s, w) = self.route_arrival(policy, seq, &q, cache);
+            self.refresh(&mut stamps, &mut heap, s, w);
+        }
+
+        let Self { opts, totals, .. } = self;
+        Ok(totals.finish(policy.name(), opts, cache.n_unique_rows()))
+    }
+}
+
+/// Which worker queue a routed query joins — `engine::pick_worker_queue`
+/// over streaming queues: least load (node's remaining busy time plus
+/// queued serial runtimes), index order, strict `<`, single-queue
+/// layouts skip the scan (and its float arithmetic) entirely.
+fn pick_stream_queue(
+    node: &NodeState,
+    queues: &[StreamWorkerQueue],
+    t: f64,
+    cache: &RowCache,
+    system: usize,
+) -> usize {
+    if queues.len() == 1 {
+        return 0;
+    }
+    let mut best = 0usize;
+    let mut best_load = f64::INFINITY;
+    for (w, wq) in queues.iter().enumerate() {
+        let backlog: f64 = wq.pending.iter().map(|p| cache.runtime_s(p.row, system)).sum();
+        let load = (node.node_free_at[w] - t).max(0.0) + backlog;
+        if load < best_load {
+            best_load = load;
+            best = w;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::PolicyConfig;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::perf::cost_table::CostTable;
+    use crate::perf::model::PerfModel;
+    use crate::sched::policy::build_policy;
+    use crate::sim::engine::{simulate, simulate_with_table};
+    use crate::workload::generator::{Arrival, TraceGenerator};
+    use crate::workload::source::SliceSource;
+
+    fn energy() -> EnergyModel {
+        EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+    }
+
+    fn trace(n: usize) -> Vec<Query> {
+        TraceGenerator::new(Arrival::Poisson { rate: 30.0 }, 13).generate(n)
+    }
+
+    /// Serial streaming is bit-identical to the materialized serial
+    /// engine: every outcome field, every report total.
+    #[test]
+    fn serial_stream_matches_materialized_engine_bitwise() {
+        let queries = trace(600);
+        let systems = system_catalog();
+        let em = energy();
+        let opts = SimOptions { include_idle_energy: true, ..Default::default() };
+
+        let table = CostTable::build(&queries, &systems, &em);
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let want = simulate_with_table(&queries, &systems, p.as_mut(), &table, &opts);
+
+        let mut streamed: Vec<(u64, QueryOutcome)> = Vec::new();
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let got = simulate_stream_with_sink(
+            &mut SliceSource::new(&queries),
+            queries.len(),
+            &systems,
+            p.as_mut(),
+            &em,
+            &opts,
+            &mut |seq, o| streamed.push((seq, *o)),
+        )
+        .unwrap();
+
+        assert_eq!(got.queries, want.outcomes.len() as u64);
+        assert_eq!(streamed.len(), want.outcomes.len());
+        for (seq, o) in &streamed {
+            let w = &want.outcomes[*seq as usize];
+            assert_eq!(o.query_id, w.query_id);
+            assert_eq!(o.system, w.system);
+            assert_eq!(o.start_s.to_bits(), w.start_s.to_bits());
+            assert_eq!(o.finish_s.to_bits(), w.finish_s.to_bits());
+            assert_eq!(o.service_s.to_bits(), w.service_s.to_bits());
+            assert_eq!(o.energy_j.to_bits(), w.energy_j.to_bits());
+        }
+        assert_eq!(got.makespan_s.to_bits(), want.makespan_s.to_bits());
+        assert_eq!(got.total_service_s.to_bits(), want.total_service_s.to_bits());
+        assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits());
+        assert_eq!(got.idle_energy_j.to_bits(), want.idle_energy_j.to_bits());
+        assert_eq!(got.serial_energy_j.to_bits(), want.serial_energy_j.to_bits());
+        assert_eq!(got.rerouted, want.rerouted);
+        for (gs, ws) in got.systems.iter().zip(&want.systems) {
+            assert_eq!(gs.queries, ws.queries);
+            assert_eq!(gs.busy_s.to_bits(), ws.busy_s.to_bits());
+            assert_eq!(gs.energy_j.to_bits(), ws.energy_j.to_bits());
+        }
+        assert!((got.mean_latency_s - want.mean_latency_s()).abs() < 1e-9);
+        assert!(got.energy_conserved());
+        assert!(got.unique_shapes > 0 && got.unique_shapes <= queries.len());
+        assert!(got.peak_pending >= 1);
+    }
+
+    /// Batched streaming is bit-identical to the materialized event-heap
+    /// engine, across formation policies and queue models.
+    #[test]
+    fn batched_stream_matches_materialized_engine_bitwise() {
+        let queries = trace(400);
+        let mut systems = system_catalog();
+        systems[1].count = 2;
+        let em = energy();
+        for (formation, queues) in [
+            (FormationPolicy::FifoPrefix, QueueModel::PerWorker),
+            (FormationPolicy::ShapeAware { n_bins: 4 }, QueueModel::PerWorker),
+            (FormationPolicy::ShapeAware { n_bins: 4 }, QueueModel::PerClass),
+        ] {
+            let opts = SimOptions {
+                include_idle_energy: true,
+                batching: Some(
+                    BatchingOptions::new(6, 0.15).with_formation(formation).with_queues(queues),
+                ),
+                ..Default::default()
+            };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let want = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+
+            let mut streamed: Vec<(u64, QueryOutcome)> = Vec::new();
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let got = simulate_stream_with_sink(
+                &mut SliceSource::new(&queries),
+                queries.len(),
+                &systems,
+                p.as_mut(),
+                &em,
+                &opts,
+                &mut |seq, o| streamed.push((seq, *o)),
+            )
+            .unwrap();
+
+            assert_eq!(streamed.len(), want.outcomes.len(), "{formation:?}/{queues:?}");
+            streamed.sort_unstable_by_key(|&(seq, _)| seq);
+            for (seq, o) in &streamed {
+                let w = &want.outcomes[*seq as usize];
+                assert_eq!(o.query_id, w.query_id);
+                assert_eq!(o.system, w.system);
+                assert_eq!(o.start_s.to_bits(), w.start_s.to_bits());
+                assert_eq!(o.finish_s.to_bits(), w.finish_s.to_bits());
+                assert_eq!(o.energy_j.to_bits(), w.energy_j.to_bits());
+            }
+            assert_eq!(got.makespan_s.to_bits(), want.makespan_s.to_bits());
+            assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits());
+            assert_eq!(got.total_service_s.to_bits(), want.total_service_s.to_bits());
+            assert_eq!(got.serial_energy_j.to_bits(), want.serial_energy_j.to_bits());
+            assert_eq!(got.rerouted, want.rerouted);
+            for (s, (gb, wb)) in got.batches.iter().zip(&want.batches).enumerate() {
+                assert_eq!(gb.dispatches, wb.dispatches, "system {s}");
+                assert_eq!(gb.size_hist, wb.size_hist, "system {s}");
+                assert_eq!(gb.straggler_decode_steps, wb.straggler_decode_steps);
+            }
+            assert!(got.energy_conserved());
+        }
+    }
+
+    #[test]
+    fn limit_caps_the_pull() {
+        let queries = trace(200);
+        let systems = system_catalog();
+        let em = energy();
+        let mut p = build_policy(&PolicyConfig::RoundRobin, em.clone(), &systems);
+        let r = simulate_stream(
+            &mut SliceSource::new(&queries),
+            50,
+            &systems,
+            p.as_mut(),
+            &em,
+            &SimOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(r.queries, 50);
+    }
+
+    #[test]
+    fn source_ending_before_limit_is_fine() {
+        let queries = trace(30);
+        let systems = system_catalog();
+        let em = energy();
+        let opts =
+            SimOptions { batching: Some(BatchingOptions::new(4, 0.1)), ..Default::default() };
+        let mut p = build_policy(&PolicyConfig::RoundRobin, em.clone(), &systems);
+        let r = simulate_stream(
+            &mut SliceSource::new(&queries),
+            1_000_000,
+            &systems,
+            p.as_mut(),
+            &em,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r.queries, 30);
+        assert_eq!(r.routing_counts().iter().sum::<u64>(), 30);
+    }
+
+    #[test]
+    fn unsorted_stream_is_an_error() {
+        let queries = vec![
+            Query { id: 0, arrival_s: 1.0, input_tokens: 8, output_tokens: 8 },
+            Query { id: 1, arrival_s: 0.5, input_tokens: 8, output_tokens: 8 },
+        ];
+        let systems = system_catalog();
+        let em = energy();
+        let mut p = build_policy(&PolicyConfig::RoundRobin, em.clone(), &systems);
+        let err = simulate_stream(
+            &mut SliceSource::new(&queries),
+            2,
+            &systems,
+            p.as_mut(),
+            &em,
+            &SimOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.contains("not sorted"), "{err}");
+    }
+}

@@ -57,6 +57,18 @@ impl Xoshiro256 {
         Self::seed_from(self.next_u64())
     }
 
+    /// Snapshot of the 256-bit state, for checkpointing a stream
+    /// mid-flight (see `workload::source`). Restoring via
+    /// [`Self::from_state`] resumes the exact output sequence.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Self::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     /// Uniform in [0, 1) with 53-bit resolution.
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)

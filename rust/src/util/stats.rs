@@ -79,6 +79,136 @@ impl Welford {
     }
 }
 
+/// P² (Jain–Chlamtac 1985) streaming quantile estimator: tracks one
+/// quantile of an unbounded stream with five markers — O(1) memory,
+/// O(1) per observation — by nudging the middle markers toward their
+/// desired rank positions with a piecewise-parabolic height update.
+///
+/// This is what lets a 10⁷-query streaming simulation report a p99
+/// latency without retaining 10⁷ outcomes; the error against the exact
+/// sorted-copy [`percentile`] is bounded by tests on uniform,
+/// log-normal, and simulated-latency streams. Below five observations
+/// the estimate is exact (the markers aren't initialized yet, so the
+/// buffered samples are consulted directly).
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    /// target quantile in (0, 1), e.g. 0.99
+    p: f64,
+    /// marker heights (after initialization: q[0] = min, q[4] = max)
+    q: [f64; 5],
+    /// actual marker positions, 1-based ranks
+    pos: [f64; 5],
+    /// desired marker positions
+    des: [f64; 5],
+    /// per-observation desired-position increments
+    inc: [f64; 5],
+    /// total observations
+    n: u64,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0, 1), got {p}");
+        Self {
+            p,
+            q: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            des: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            inc: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            n: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.n < 5 {
+            // bootstrap: the first five samples become the markers
+            self.q[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                self.q.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.n += 1;
+
+        // cell k: number of markers at or below x, clamped so the
+        // extreme markers keep tracking min/max
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && self.q[k + 1] <= x {
+                k += 1;
+            }
+            k
+        };
+
+        for p in self.pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for (d, i) in self.des.iter_mut().zip(self.inc) {
+            *d += i;
+        }
+
+        // nudge interior markers toward their desired ranks
+        for i in 1..4 {
+            let d = self.des[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let candidate = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < candidate && candidate < self.q[i + 1] {
+                    candidate
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic (P²) height prediction for marker `i` moved
+    /// by `d` ∈ {−1, +1}.
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let q = &self.q;
+        let n = &self.pos;
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    /// Linear fallback when the parabola would break marker
+    /// monotonicity.
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = (i as isize + d as isize) as usize;
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate of the tracked quantile. Exact below five
+    /// observations; 0.0 before the first (mirroring how empty reports
+    /// read as zero latency).
+    pub fn estimate(&self) -> f64 {
+        match self.n {
+            0 => 0.0,
+            1..=4 => {
+                let mut v = self.q[..self.n as usize].to_vec();
+                v.sort_by(f64::total_cmp);
+                percentile(&v, self.p * 100.0)
+            }
+            _ => self.q[2],
+        }
+    }
+}
+
 /// Percentile over a sorted copy (exact, fine for post-hoc reporting).
 ///
 /// NaN-safe: `total_cmp` orders NaNs after every real value instead of
@@ -344,5 +474,78 @@ mod tests {
     fn mad_robust_to_outlier() {
         let xs = [1.0, 1.1, 0.9, 1.05, 0.95, 100.0];
         assert!(mad(&xs) < 0.2);
+    }
+
+    #[test]
+    fn p2_exact_below_five_samples() {
+        let mut est = P2Quantile::new(0.5);
+        assert_eq!(est.estimate(), 0.0);
+        est.push(3.0);
+        assert_eq!(est.estimate(), 3.0);
+        est.push(1.0);
+        est.push(2.0);
+        // exact interpolated median of {1, 2, 3}
+        assert!((est.estimate() - 2.0).abs() < 1e-12);
+        assert_eq!(est.count(), 3);
+    }
+
+    /// ISSUE 6: the streaming p99 must stay close to the exact
+    /// sorted-copy percentile — uniform stream, tight absolute bound.
+    #[test]
+    fn p2_tracks_uniform_p99() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from(42);
+        let mut est = P2Quantile::new(0.99);
+        let mut xs = Vec::new();
+        for _ in 0..50_000 {
+            let x = rng.f64();
+            est.push(x);
+            xs.push(x);
+        }
+        let exact = percentile(&xs, 99.0);
+        let got = est.estimate();
+        assert!((got - exact).abs() < 0.01, "p2={got} exact={exact}");
+        // the estimate is bracketed by the observed extremes
+        assert!(got > 0.9 && got < 1.0);
+    }
+
+    /// Heavy-tailed (log-normal) stream — the shape simulated latencies
+    /// actually have; relative error bound.
+    #[test]
+    fn p2_tracks_lognormal_p99_within_relative_bound() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from(7);
+        let mut est = P2Quantile::new(0.99);
+        let mut xs = Vec::new();
+        for _ in 0..50_000 {
+            let x = rng.lognormal(0.0, 1.0);
+            est.push(x);
+            xs.push(x);
+        }
+        let exact = percentile(&xs, 99.0);
+        let got = est.estimate();
+        assert!(
+            (got - exact).abs() <= 0.10 * exact,
+            "p2={got} exact={exact} (rel err {})",
+            ((got - exact) / exact).abs()
+        );
+    }
+
+    /// Different quantiles of the same stream stay ordered.
+    #[test]
+    fn p2_quantiles_are_ordered() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from(12);
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p90 = P2Quantile::new(0.9);
+        let mut p99 = P2Quantile::new(0.99);
+        for _ in 0..20_000 {
+            let x = rng.exponential(2.0);
+            p50.push(x);
+            p90.push(x);
+            p99.push(x);
+        }
+        assert!(p50.estimate() < p90.estimate());
+        assert!(p90.estimate() < p99.estimate());
     }
 }

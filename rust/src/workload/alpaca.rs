@@ -60,14 +60,17 @@ impl AlpacaModel {
 
     /// The deterministic 52K-query "Alpaca trace" used by every
     /// threshold experiment (batch workload: all arrivals at t=0, like
-    /// the paper's simulation).
+    /// the paper's simulation). A thin adapter over the streaming
+    /// [`crate::workload::source::AlpacaSource`], so the `Vec` is
+    /// bit-identical to the stream.
     pub fn trace(&self, seed: u64, size: usize) -> Vec<Query> {
-        let mut rng = Xoshiro256::seed_from(seed);
-        (0..size as u64)
-            .map(|id| {
-                let m = self.sample_input(&mut rng);
-                let n = self.sample_output(&mut rng);
-                Query::new(id, m, n)
+        use crate::workload::source::QuerySource;
+        let mut src = crate::workload::source::AlpacaSource::new(self.clone(), seed);
+        (0..size)
+            .map(|_| {
+                src.next_query()
+                    .expect("alpaca source is infallible")
+                    .expect("alpaca source is unbounded")
             })
             .collect()
     }
@@ -120,6 +123,15 @@ mod tests {
 
     fn trace() -> Vec<Query> {
         AlpacaModel::default().trace(2024, ALPACA_SIZE)
+    }
+
+    #[test]
+    fn trace_is_bit_identical_to_streaming_source() {
+        use crate::workload::source::{collect_n, AlpacaSource};
+        let m = AlpacaModel::default();
+        let a = m.trace(7, 500);
+        let b = collect_n(&mut AlpacaSource::new(m.clone(), 7), 500).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

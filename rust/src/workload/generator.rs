@@ -1,10 +1,16 @@
 //! Synthetic trace generators: fixed sweeps (the §5.2 experiment grids)
-//! and online arrival processes (Poisson / bursty) for the live serving
-//! experiments the paper's batch simulation doesn't cover.
+//! and online arrival processes (Poisson / bursty / diurnal / MMPP) for
+//! the live serving experiments the paper's batch simulation doesn't
+//! cover.
+//!
+//! The `Vec`-returning [`TraceGenerator::generate`] is a thin adapter
+//! over the streaming [`crate::workload::source::GeneratorSource`]: both
+//! consume the identical RNG sequence, so a materialized trace and the
+//! stream it came from are bit-identical by construction.
 
 use super::alpaca::AlpacaModel;
+use super::source::{GeneratorSource, QuerySource, TenantMix};
 use super::Query;
-use crate::util::rng::Xoshiro256;
 
 /// §5.2.1 grid: input sizes 8..=2048 (powers of two), fixed n = 32.
 pub fn input_sweep_points() -> Vec<(u32, u32)> {
@@ -31,53 +37,50 @@ pub enum Arrival {
     Poisson { rate: f64 },
     /// on/off bursts: Poisson at `rate` for `on_s`, silent for `off_s`
     Bursty { rate: f64, on_s: f64, off_s: f64 },
+    /// sinusoidal day curve: rate λ(t) = base·(1 + a·sin(2πt/period)),
+    /// sampled exactly by Lewis–Shedler thinning (amplitude a ∈ [0, 1])
+    Diurnal { base_rate: f64, amplitude: f64, period_s: f64 },
+    /// two-state Markov-modulated Poisson process: Poisson at
+    /// `rates[k]` while in state k, exponential sojourns with the given
+    /// means — heavy-tailed burstiness beyond the on/off model
+    Mmpp { rates: [f64; 2], mean_sojourn_s: [f64; 2] },
 }
 
-/// Trace generator: token sizes from the Alpaca model, arrivals from the
-/// chosen process.
+/// Trace generator: token sizes from the Alpaca model (optionally a
+/// multi-tenant mix), arrivals from the chosen process.
 #[derive(Clone, Debug)]
 pub struct TraceGenerator {
     pub model: AlpacaModel,
     pub arrival: Arrival,
     pub seed: u64,
+    /// per-tenant `(m, n)` distributions; `None` = plain Alpaca model
+    pub tenants: Option<TenantMix>,
 }
 
 impl TraceGenerator {
     pub fn new(arrival: Arrival, seed: u64) -> Self {
-        Self { model: AlpacaModel::default(), arrival, seed }
+        Self { model: AlpacaModel::default(), arrival, seed, tenants: None }
     }
 
+    pub fn with_tenants(mut self, tenants: TenantMix) -> Self {
+        self.tenants = Some(tenants);
+        self
+    }
+
+    /// The streaming source this generator materializes from.
+    pub fn source(&self) -> GeneratorSource {
+        GeneratorSource::from_generator(self)
+    }
+
+    /// Materialize `count` queries — a thin adapter over
+    /// [`Self::source`], so the `Vec` is bit-identical to the stream.
     pub fn generate(&self, count: usize) -> Vec<Query> {
-        let mut rng = Xoshiro256::seed_from(self.seed);
-        let mut arr_rng = rng.fork();
-        let mut t = 0.0f64;
-        let mut window_left = match self.arrival {
-            Arrival::Bursty { on_s, .. } => on_s,
-            _ => f64::INFINITY,
-        };
-        (0..count as u64)
-            .map(|id| {
-                let m = self.model.sample_input(&mut rng);
-                let n = self.model.sample_output(&mut rng);
-                let arrival_s = match self.arrival {
-                    Arrival::Batch => 0.0,
-                    Arrival::Poisson { rate } => {
-                        t += arr_rng.exponential(rate);
-                        t
-                    }
-                    Arrival::Bursty { rate, on_s, off_s } => {
-                        let mut gap = arr_rng.exponential(rate);
-                        while gap > window_left {
-                            gap -= window_left;
-                            t += window_left + off_s;
-                            window_left = on_s;
-                        }
-                        window_left -= gap;
-                        t += gap;
-                        t
-                    }
-                };
-                Query { id, arrival_s, input_tokens: m, output_tokens: n }
+        let mut src = self.source();
+        (0..count)
+            .map(|_| {
+                src.next_query()
+                    .expect("generator source is infallible")
+                    .expect("generator source is unbounded")
             })
             .collect()
     }
@@ -133,5 +136,44 @@ mod tests {
         let a = TraceGenerator::new(Arrival::Poisson { rate: 5.0 }, 9).generate(50);
         let b = TraceGenerator::new(Arrival::Poisson { rate: 5.0 }, 9).generate(50);
         assert_eq!(a, b);
+    }
+
+    /// ISSUE 6 satellite: the materialized `Vec` and the stream it
+    /// adapts are the same bytes, for every arrival process.
+    #[test]
+    fn generate_is_bit_identical_to_streaming_source() {
+        use crate::workload::source::collect_n;
+        for arrival in [
+            Arrival::Batch,
+            Arrival::Poisson { rate: 25.0 },
+            Arrival::Bursty { rate: 60.0, on_s: 0.4, off_s: 1.5 },
+            Arrival::Diurnal { base_rate: 10.0, amplitude: 0.6, period_s: 30.0 },
+            Arrival::Mmpp { rates: [3.0, 90.0], mean_sojourn_s: [1.5, 0.3] },
+        ] {
+            let g = TraceGenerator::new(arrival, 41);
+            let materialized = g.generate(300);
+            let streamed = collect_n(&mut g.source(), 300).unwrap();
+            for (a, b) in materialized.iter().zip(&streamed) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.input_tokens, b.input_tokens);
+                assert_eq!(a.output_tokens, b.output_tokens);
+                assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits(), "{arrival:?}");
+            }
+            assert_eq!(materialized.len(), streamed.len());
+        }
+    }
+
+    #[test]
+    fn new_arrival_processes_are_deterministic_and_sorted() {
+        for arrival in [
+            Arrival::Diurnal { base_rate: 10.0, amplitude: 1.0, period_s: 20.0 },
+            Arrival::Mmpp { rates: [2.0, 50.0], mean_sojourn_s: [1.0, 0.5] },
+        ] {
+            let a = TraceGenerator::new(arrival, 6).generate(400);
+            let b = TraceGenerator::new(arrival, 6).generate(400);
+            assert_eq!(a, b);
+            assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+            assert!(a.last().unwrap().arrival_s > 0.0);
+        }
     }
 }

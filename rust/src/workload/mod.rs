@@ -3,6 +3,7 @@
 
 pub mod alpaca;
 pub mod generator;
+pub mod source;
 pub mod trace;
 
 /// One inference request: the paper's `(m, n)` pair plus arrival time.

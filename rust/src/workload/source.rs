@@ -1,0 +1,604 @@
+//! Streaming query sources: iterate workloads without materializing
+//! them.
+//!
+//! Every upstream layer historically assumed the whole trace fits in a
+//! `Vec<Query>`; at the ROADMAP's million-query scale that is the
+//! dominant allocation. A [`QuerySource`] yields queries one at a time
+//! (or in caller-sized chunks via [`QuerySource::fill`]) in O(1) state,
+//! and can snapshot that state into a [`SourceCheckpoint`] — a handful
+//! of `u64` words — so long runs can pause, persist, and resume
+//! mid-stream without replaying the prefix.
+//!
+//! Implementations:
+//!
+//! - [`GeneratorSource`] — the streaming form of
+//!   [`crate::workload::generator::TraceGenerator`]: Alpaca token
+//!   sampling (optionally per-tenant via [`TenantMix`]) plus an
+//!   arrival process (batch, Poisson, bursty, diurnal, MMPP). The
+//!   `Vec`-returning `generate` routes through this source, so sampled
+//!   streams and materialized traces are bit-identical by construction.
+//! - [`AlpacaSource`] — the streaming form of
+//!   [`AlpacaModel::trace`] (batch arrivals at t = 0).
+//! - [`CsvSource`] — a chunked trace-file reader sharing the exact
+//!   parse/validation semantics of [`crate::workload::trace::read_csv`];
+//!   its checkpoint is a byte offset, so restore is a file seek.
+//! - [`SliceSource`] — thin adapter over an already-materialized trace.
+//!
+//! Checkpoint format: `SourceCheckpoint { next_id, words }` where
+//! `words` is an implementation-defined fixed-length `u64` vector
+//! (RNG state words and `f64::to_bits` of clock state, documented per
+//! source). A checkpoint restores only into the *same* source
+//! configuration; sources reject word vectors of the wrong arity.
+
+use super::alpaca::AlpacaModel;
+use super::generator::{Arrival, TraceGenerator};
+use super::trace::parse_row;
+use super::Query;
+use crate::util::rng::Xoshiro256;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// Snapshot of a source's position and internal state. `next_id` is the
+/// id the next emitted query will carry; `words` is the source-specific
+/// state vector (see each source's docs for its layout).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SourceCheckpoint {
+    pub next_id: u64,
+    pub words: Vec<u64>,
+}
+
+/// A streaming, seekable, checkpointable iterator of queries.
+///
+/// `next_query` returns `Ok(None)` at end-of-stream (generative sources
+/// are unbounded and never return `None`). Errors are `String`s carrying
+/// the same diagnostics the materialized paths produce (e.g. CSV line
+/// numbers).
+pub trait QuerySource {
+    /// The next query, `Ok(None)` at end-of-stream.
+    fn next_query(&mut self) -> Result<Option<Query>, String>;
+
+    /// Append up to `chunk` queries to `buf`; returns how many were
+    /// appended (fewer only at end-of-stream). The chunked entry point
+    /// for callers that amortize per-query dispatch.
+    fn fill(&mut self, buf: &mut Vec<Query>, chunk: usize) -> Result<usize, String> {
+        let before = buf.len();
+        while buf.len() - before < chunk {
+            match self.next_query()? {
+                Some(q) => buf.push(q),
+                None => break,
+            }
+        }
+        Ok(buf.len() - before)
+    }
+
+    /// Snapshot the stream state (cheap: a few words).
+    fn checkpoint(&self) -> SourceCheckpoint;
+
+    /// Seek to a previously captured checkpoint of this source
+    /// configuration. The resumed stream is bit-identical to the one
+    /// the checkpoint was taken from.
+    fn restore(&mut self, ck: &SourceCheckpoint) -> Result<(), String>;
+}
+
+/// Collect exactly `n` queries from a source (fewer at end-of-stream).
+pub fn collect_n(source: &mut dyn QuerySource, n: usize) -> Result<Vec<Query>, String> {
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    source.fill(&mut out, n)?;
+    Ok(out)
+}
+
+/// One tenant of a multi-tenant mix: a selection weight plus its own
+/// log-normal `(m, n)` token distributions (underlying-normal mu/sigma,
+/// like [`AlpacaModel`]). Token counts are clamped to the base model's
+/// `in_max`/`out_max`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub weight: f64,
+    pub in_mu: f64,
+    pub in_sigma: f64,
+    pub out_mu: f64,
+    pub out_sigma: f64,
+}
+
+/// A weighted mixture of tenant token distributions. Each query first
+/// draws a tenant (categorical over weights, one uniform draw), then
+/// its `(m, n)` pair from that tenant's distributions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantMix {
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantMix {
+    /// Draw one `(m, n)` pair: tenant choice (same algorithm as
+    /// [`Xoshiro256::categorical`]: one uniform draw, linear scan over
+    /// weights), then the tenant's truncated log-normals.
+    pub fn sample(&self, model: &AlpacaModel, rng: &mut Xoshiro256) -> (u32, u32) {
+        debug_assert!(!self.tenants.is_empty());
+        let total: f64 = self.tenants.iter().map(|t| t.weight).sum();
+        let mut x = rng.f64() * total;
+        let mut idx = self.tenants.len() - 1;
+        for (i, t) in self.tenants.iter().enumerate() {
+            x -= t.weight;
+            if x <= 0.0 {
+                idx = i;
+                break;
+            }
+        }
+        let t = &self.tenants[idx];
+        let m = (rng.lognormal(t.in_mu, t.in_sigma).round().max(1.0) as u32).clamp(1, model.in_max);
+        let n =
+            (rng.lognormal(t.out_mu, t.out_sigma).round().max(1.0) as u32).clamp(1, model.out_max);
+        (m, n)
+    }
+}
+
+/// Streaming trace generator: token sizes from the Alpaca model (or a
+/// [`TenantMix`]), arrivals from the chosen [`Arrival`] process.
+/// Unbounded — `next_query` never returns `None`; take as many queries
+/// as the run needs.
+///
+/// RNG discipline (must match `TraceGenerator::generate` exactly, which
+/// is what makes the `Vec` path a thin adapter): one token RNG seeded
+/// from the seed, an arrival RNG forked from it *before any sampling*,
+/// then per query `m`, `n` from the token RNG followed by the arrival
+/// draw.
+///
+/// Checkpoint `words` layout (11 words): token RNG state (4), arrival
+/// RNG state (4), `t.to_bits()`, `window_left.to_bits()` (bursty
+/// on-window remainder / MMPP sojourn remainder), MMPP state index.
+#[derive(Clone, Debug)]
+pub struct GeneratorSource {
+    model: AlpacaModel,
+    arrival: Arrival,
+    tenants: Option<TenantMix>,
+    rng: Xoshiro256,
+    arr_rng: Xoshiro256,
+    /// arrival-process clock (time of the last emitted arrival)
+    t: f64,
+    /// bursty: remaining on-window; MMPP: remaining sojourn in the
+    /// current state; infinite otherwise
+    window_left: f64,
+    /// current MMPP modulating state (0 or 1)
+    mmpp_state: usize,
+    next_id: u64,
+}
+
+impl GeneratorSource {
+    pub fn new(model: AlpacaModel, arrival: Arrival, tenants: Option<TenantMix>, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut arr_rng = rng.fork();
+        let mut window_left = match arrival {
+            Arrival::Bursty { on_s, .. } => on_s,
+            _ => f64::INFINITY,
+        };
+        let mut mmpp_state = 0usize;
+        if let Arrival::Mmpp { mean_sojourn_s, .. } = arrival {
+            mmpp_state = 0;
+            window_left = arr_rng.exponential(1.0 / mean_sojourn_s[0]);
+        }
+        Self { model, arrival, tenants, rng, arr_rng, t: 0.0, window_left, mmpp_state, next_id: 0 }
+    }
+
+    /// The source behind a [`TraceGenerator`] (same seed, same stream).
+    pub fn from_generator(g: &TraceGenerator) -> Self {
+        Self::new(g.model.clone(), g.arrival, g.tenants.clone(), g.seed)
+    }
+
+    fn next_arrival(&mut self) -> f64 {
+        match self.arrival {
+            Arrival::Batch => 0.0,
+            Arrival::Poisson { rate } => {
+                self.t += self.arr_rng.exponential(rate);
+                self.t
+            }
+            Arrival::Bursty { rate, on_s, off_s } => {
+                let mut gap = self.arr_rng.exponential(rate);
+                while gap > self.window_left {
+                    gap -= self.window_left;
+                    self.t += self.window_left + off_s;
+                    self.window_left = on_s;
+                }
+                self.window_left -= gap;
+                self.t += gap;
+                self.t
+            }
+            Arrival::Diurnal { base_rate, amplitude, period_s } => {
+                // Lewis–Shedler thinning against the peak rate: propose
+                // exponential gaps at λ_max, accept with probability
+                // λ(t)/λ_max where λ(t) follows a sinusoidal day curve.
+                let lam_max = base_rate * (1.0 + amplitude);
+                loop {
+                    self.t += self.arr_rng.exponential(lam_max);
+                    let phase = std::f64::consts::TAU * (self.t / period_s);
+                    let lam = base_rate * (1.0 + amplitude * phase.sin());
+                    if self.arr_rng.f64() * lam_max <= lam {
+                        break;
+                    }
+                }
+                self.t
+            }
+            Arrival::Mmpp { rates, mean_sojourn_s } => {
+                // Exact two-state MMPP: in state k, the next arrival is
+                // Exp(rates[k]) away; if it falls past the remaining
+                // sojourn, advance to the state switch and redraw
+                // (memorylessness makes the redraw exact).
+                loop {
+                    let gap = self.arr_rng.exponential(rates[self.mmpp_state]);
+                    if gap <= self.window_left {
+                        self.window_left -= gap;
+                        self.t += gap;
+                        break;
+                    }
+                    self.t += self.window_left;
+                    self.mmpp_state ^= 1;
+                    self.window_left =
+                        self.arr_rng.exponential(1.0 / mean_sojourn_s[self.mmpp_state]);
+                }
+                self.t
+            }
+        }
+    }
+}
+
+impl QuerySource for GeneratorSource {
+    fn next_query(&mut self) -> Result<Option<Query>, String> {
+        let (m, n) = match &self.tenants {
+            None => (self.model.sample_input(&mut self.rng), self.model.sample_output(&mut self.rng)),
+            Some(mix) => mix.sample(&self.model, &mut self.rng),
+        };
+        let arrival_s = self.next_arrival();
+        let id = self.next_id;
+        self.next_id += 1;
+        Ok(Some(Query { id, arrival_s, input_tokens: m, output_tokens: n }))
+    }
+
+    fn checkpoint(&self) -> SourceCheckpoint {
+        let mut words = Vec::with_capacity(11);
+        words.extend_from_slice(&self.rng.state());
+        words.extend_from_slice(&self.arr_rng.state());
+        words.push(self.t.to_bits());
+        words.push(self.window_left.to_bits());
+        words.push(self.mmpp_state as u64);
+        SourceCheckpoint { next_id: self.next_id, words }
+    }
+
+    fn restore(&mut self, ck: &SourceCheckpoint) -> Result<(), String> {
+        if ck.words.len() != 11 {
+            return Err(format!(
+                "generator checkpoint needs 11 state words, got {}",
+                ck.words.len()
+            ));
+        }
+        self.rng = Xoshiro256::from_state([ck.words[0], ck.words[1], ck.words[2], ck.words[3]]);
+        self.arr_rng = Xoshiro256::from_state([ck.words[4], ck.words[5], ck.words[6], ck.words[7]]);
+        self.t = f64::from_bits(ck.words[8]);
+        self.window_left = f64::from_bits(ck.words[9]);
+        self.mmpp_state = ck.words[10] as usize;
+        self.next_id = ck.next_id;
+        Ok(())
+    }
+}
+
+/// Streaming form of [`AlpacaModel::trace`]: batch arrivals (t = 0),
+/// token pairs from the Alpaca model. Unbounded.
+///
+/// Checkpoint `words` layout (4 words): token RNG state.
+#[derive(Clone, Debug)]
+pub struct AlpacaSource {
+    model: AlpacaModel,
+    rng: Xoshiro256,
+    next_id: u64,
+}
+
+impl AlpacaSource {
+    pub fn new(model: AlpacaModel, seed: u64) -> Self {
+        Self { model, rng: Xoshiro256::seed_from(seed), next_id: 0 }
+    }
+}
+
+impl QuerySource for AlpacaSource {
+    fn next_query(&mut self) -> Result<Option<Query>, String> {
+        let m = self.model.sample_input(&mut self.rng);
+        let n = self.model.sample_output(&mut self.rng);
+        let id = self.next_id;
+        self.next_id += 1;
+        Ok(Some(Query::new(id, m, n)))
+    }
+
+    fn checkpoint(&self) -> SourceCheckpoint {
+        SourceCheckpoint { next_id: self.next_id, words: self.rng.state().to_vec() }
+    }
+
+    fn restore(&mut self, ck: &SourceCheckpoint) -> Result<(), String> {
+        if ck.words.len() != 4 {
+            return Err(format!("alpaca checkpoint needs 4 state words, got {}", ck.words.len()));
+        }
+        self.rng = Xoshiro256::from_state([ck.words[0], ck.words[1], ck.words[2], ck.words[3]]);
+        self.next_id = ck.next_id;
+        Ok(())
+    }
+}
+
+/// Chunked CSV trace reader: one buffered line at a time, never the
+/// whole file. Parse and validation semantics (header/comment handling,
+/// error strings with line numbers, `input_tokens >= 1`,
+/// `arrival_s >= 0`) are shared with
+/// [`crate::workload::trace::read_csv`] via the same row parser, so the
+/// two paths accept and reject exactly the same files.
+///
+/// Checkpoint `words` layout (2 words): byte offset, line number.
+/// Restore seeks the file, so resuming costs O(1) I/O.
+#[derive(Debug)]
+pub struct CsvSource {
+    path: PathBuf,
+    reader: BufReader<File>,
+    byte_pos: u64,
+    lineno: usize,
+    next_id: u64,
+    line: String,
+}
+
+impl CsvSource {
+    pub fn open(path: &Path) -> Result<Self, String> {
+        let f = File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            reader: BufReader::new(f),
+            byte_pos: 0,
+            lineno: 0,
+            next_id: 0,
+            line: String::new(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl QuerySource for CsvSource {
+    fn next_query(&mut self) -> Result<Option<Query>, String> {
+        loop {
+            self.line.clear();
+            let n = self
+                .reader
+                .read_line(&mut self.line)
+                .map_err(|e| format!("line {}: {e}", self.lineno + 1))?;
+            if n == 0 {
+                return Ok(None);
+            }
+            let lineno = self.lineno;
+            self.lineno += 1;
+            self.byte_pos += n as u64;
+            let line = self.line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if lineno == 0 && line.to_ascii_lowercase().starts_with("arrival") {
+                continue; // header
+            }
+            let q = parse_row(line, lineno, self.next_id)?;
+            self.next_id += 1;
+            return Ok(Some(q));
+        }
+    }
+
+    fn checkpoint(&self) -> SourceCheckpoint {
+        SourceCheckpoint { next_id: self.next_id, words: vec![self.byte_pos, self.lineno as u64] }
+    }
+
+    fn restore(&mut self, ck: &SourceCheckpoint) -> Result<(), String> {
+        if ck.words.len() != 2 {
+            return Err(format!("csv checkpoint needs 2 state words, got {}", ck.words.len()));
+        }
+        self.reader
+            .seek(SeekFrom::Start(ck.words[0]))
+            .map_err(|e| format!("{}: seek: {e}", self.path.display()))?;
+        self.byte_pos = ck.words[0];
+        self.lineno = ck.words[1] as usize;
+        self.next_id = ck.next_id;
+        Ok(())
+    }
+}
+
+/// Thin adapter over an already-materialized trace.
+///
+/// Checkpoint `words` layout (1 word): cursor position.
+#[derive(Clone, Debug)]
+pub struct SliceSource<'a> {
+    queries: &'a [Query],
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(queries: &'a [Query]) -> Self {
+        Self { queries, pos: 0 }
+    }
+}
+
+impl QuerySource for SliceSource<'_> {
+    fn next_query(&mut self) -> Result<Option<Query>, String> {
+        match self.queries.get(self.pos) {
+            Some(&q) => {
+                self.pos += 1;
+                Ok(Some(q))
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn checkpoint(&self) -> SourceCheckpoint {
+        SourceCheckpoint {
+            next_id: self.queries.get(self.pos).map_or(self.queries.len() as u64, |q| q.id),
+            words: vec![self.pos as u64],
+        }
+    }
+
+    fn restore(&mut self, ck: &SourceCheckpoint) -> Result<(), String> {
+        if ck.words.len() != 1 {
+            return Err(format!("slice checkpoint needs 1 state word, got {}", ck.words.len()));
+        }
+        let pos = ck.words[0] as usize;
+        if pos > self.queries.len() {
+            return Err(format!("slice checkpoint position {pos} out of range"));
+        }
+        self.pos = pos;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_gen() -> GeneratorSource {
+        GeneratorSource::new(AlpacaModel::default(), Arrival::Poisson { rate: 20.0 }, None, 7)
+    }
+
+    #[test]
+    fn fill_appends_chunks() {
+        let mut src = poisson_gen();
+        let mut buf = Vec::new();
+        assert_eq!(src.fill(&mut buf, 16).unwrap(), 16);
+        assert_eq!(src.fill(&mut buf, 16).unwrap(), 16);
+        assert_eq!(buf.len(), 32);
+        // ids are sequential across chunks
+        assert!(buf.iter().enumerate().all(|(i, q)| q.id == i as u64));
+        // arrivals are nondecreasing
+        assert!(buf.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+    }
+
+    #[test]
+    fn generator_checkpoint_resumes_exact_stream() {
+        for arrival in [
+            Arrival::Batch,
+            Arrival::Poisson { rate: 12.0 },
+            Arrival::Bursty { rate: 40.0, on_s: 0.5, off_s: 2.0 },
+            Arrival::Diurnal { base_rate: 15.0, amplitude: 0.8, period_s: 60.0 },
+            Arrival::Mmpp { rates: [5.0, 80.0], mean_sojourn_s: [2.0, 0.5] },
+        ] {
+            let mut a = GeneratorSource::new(AlpacaModel::default(), arrival, None, 11);
+            let _ = collect_n(&mut a, 100).unwrap();
+            let ck = a.checkpoint();
+            let tail_a = collect_n(&mut a, 200).unwrap();
+            let mut b = GeneratorSource::new(AlpacaModel::default(), arrival, None, 999);
+            b.restore(&ck).unwrap();
+            let tail_b = collect_n(&mut b, 200).unwrap();
+            assert_eq!(tail_a, tail_b, "{arrival:?}");
+        }
+    }
+
+    #[test]
+    fn alpaca_checkpoint_resumes_exact_stream() {
+        let mut a = AlpacaSource::new(AlpacaModel::default(), 3);
+        let _ = collect_n(&mut a, 50).unwrap();
+        let ck = a.checkpoint();
+        let tail_a = collect_n(&mut a, 100).unwrap();
+        let mut b = AlpacaSource::new(AlpacaModel::default(), 3);
+        b.restore(&ck).unwrap();
+        assert_eq!(tail_a, collect_n(&mut b, 100).unwrap());
+    }
+
+    #[test]
+    fn restore_rejects_wrong_arity() {
+        let mut g = poisson_gen();
+        let bad = SourceCheckpoint { next_id: 0, words: vec![1, 2, 3] };
+        assert!(g.restore(&bad).unwrap_err().contains("11 state words"));
+        let mut a = AlpacaSource::new(AlpacaModel::default(), 1);
+        assert!(a.restore(&bad).unwrap_err().contains("4 state words"));
+    }
+
+    #[test]
+    fn diurnal_rate_modulates_arrivals() {
+        // amplitude 1.0: the trough rate is ~0, so inter-arrival gaps
+        // must vary far more than a flat Poisson's at the same mean.
+        let mut src = GeneratorSource::new(
+            AlpacaModel::default(),
+            Arrival::Diurnal { base_rate: 20.0, amplitude: 1.0, period_s: 40.0 },
+            None,
+            5,
+        );
+        let qs = collect_n(&mut src, 4000).unwrap();
+        assert!(qs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        // count arrivals in peak-phase vs trough-phase halves of each period
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for q in &qs {
+            let phase = (q.arrival_s / 40.0).fract();
+            if phase < 0.5 {
+                peak += 1; // sin > 0 half
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 2.0 * trough as f64,
+            "diurnal peak half must dominate: peak={peak} trough={trough}"
+        );
+    }
+
+    #[test]
+    fn mmpp_switches_between_rates() {
+        let mut src = GeneratorSource::new(
+            AlpacaModel::default(),
+            Arrival::Mmpp { rates: [2.0, 200.0], mean_sojourn_s: [1.0, 1.0] },
+            None,
+            9,
+        );
+        let qs = collect_n(&mut src, 3000).unwrap();
+        assert!(qs.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        let gaps: Vec<f64> =
+            qs.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+        // the two regimes must both be visible: some dense sub-5ms gaps
+        // (fast state) and some beyond 100ms (slow state)
+        let dense = gaps.iter().filter(|g| **g < 0.005).count();
+        let sparse = gaps.iter().filter(|g| **g > 0.1).count();
+        assert!(dense > 100, "fast-state gaps missing: {dense}");
+        assert!(sparse > 10, "slow-state gaps missing: {sparse}");
+    }
+
+    #[test]
+    fn tenant_mix_shifts_token_distributions() {
+        let heavy = TenantSpec { weight: 1.0, in_mu: 6.0, in_sigma: 0.1, out_mu: 6.0, out_sigma: 0.1 };
+        let light = TenantSpec { weight: 1.0, in_mu: 2.0, in_sigma: 0.1, out_mu: 2.0, out_sigma: 0.1 };
+        let mix = TenantMix { tenants: vec![light.clone(), heavy.clone()] };
+        let mut src = GeneratorSource::new(
+            AlpacaModel::default(),
+            Arrival::Poisson { rate: 10.0 },
+            Some(mix),
+            13,
+        );
+        let qs = collect_n(&mut src, 2000).unwrap();
+        // e^2 ≈ 7 vs e^6 ≈ 403: the mixture must be visibly bimodal
+        let small = qs.iter().filter(|q| q.input_tokens < 30).count();
+        let large = qs.iter().filter(|q| q.input_tokens > 100).count();
+        assert!(small > 600 && large > 600, "small={small} large={large}");
+        // clamps still apply
+        assert!(qs.iter().all(|q| q.input_tokens <= 2048 && q.output_tokens <= 1024));
+        // checkpoint/restore works with tenants too
+        let ck = src.checkpoint();
+        let tail_a = collect_n(&mut src, 50).unwrap();
+        let mut b = GeneratorSource::new(
+            AlpacaModel::default(),
+            Arrival::Poisson { rate: 10.0 },
+            Some(TenantMix { tenants: vec![light, heavy] }),
+            13,
+        );
+        b.restore(&ck).unwrap();
+        assert_eq!(tail_a, collect_n(&mut b, 50).unwrap());
+    }
+
+    #[test]
+    fn slice_source_round_trips() {
+        let qs: Vec<Query> = (0..10u64).map(|i| Query::new(i, 8 + i as u32, 8)).collect();
+        let mut src = SliceSource::new(&qs);
+        let first = collect_n(&mut src, 4).unwrap();
+        assert_eq!(first, qs[..4]);
+        let ck = src.checkpoint();
+        let rest = collect_n(&mut src, 100).unwrap();
+        assert_eq!(rest, qs[4..]);
+        src.restore(&ck).unwrap();
+        assert_eq!(collect_n(&mut src, 100).unwrap(), qs[4..]);
+        assert!(src.next_query().unwrap().is_none());
+    }
+}

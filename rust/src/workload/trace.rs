@@ -35,33 +35,41 @@ pub fn parse_csv<R: BufRead>(reader: R) -> Result<Vec<Query>, String> {
         if lineno == 0 && line.to_ascii_lowercase().starts_with("arrival") {
             continue; // header
         }
-        let mut parts = line.split(',').map(str::trim);
-        let err = |what: &str| format!("line {}: bad {what}: '{line}'", lineno + 1);
-        let arrival_s: f64 = parts
-            .next()
-            .ok_or_else(|| err("row"))?
-            .parse()
-            .map_err(|_| err("arrival_s"))?;
-        let input_tokens: u32 = parts
-            .next()
-            .ok_or_else(|| err("row"))?
-            .parse()
-            .map_err(|_| err("input_tokens"))?;
-        let output_tokens: u32 = parts
-            .next()
-            .ok_or_else(|| err("row"))?
-            .parse()
-            .map_err(|_| err("output_tokens"))?;
-        if input_tokens == 0 {
-            return Err(err("input_tokens (must be >= 1)"));
-        }
-        if arrival_s < 0.0 {
-            return Err(err("arrival_s (must be >= 0)"));
-        }
-        out.push(Query { id, arrival_s, input_tokens, output_tokens });
+        out.push(parse_row(line, lineno, id)?);
         id += 1;
     }
     Ok(out)
+}
+
+/// Parse one data row — the single validation path shared by
+/// [`parse_csv`] and the chunked [`crate::workload::source::CsvSource`],
+/// so both accept/reject identical files with identical diagnostics.
+/// `lineno` is 0-based (errors report it 1-based).
+pub(crate) fn parse_row(line: &str, lineno: usize, id: u64) -> Result<Query, String> {
+    let mut parts = line.split(',').map(str::trim);
+    let err = |what: &str| format!("line {}: bad {what}: '{line}'", lineno + 1);
+    let arrival_s: f64 = parts
+        .next()
+        .ok_or_else(|| err("row"))?
+        .parse()
+        .map_err(|_| err("arrival_s"))?;
+    let input_tokens: u32 = parts
+        .next()
+        .ok_or_else(|| err("row"))?
+        .parse()
+        .map_err(|_| err("input_tokens"))?;
+    let output_tokens: u32 = parts
+        .next()
+        .ok_or_else(|| err("row"))?
+        .parse()
+        .map_err(|_| err("output_tokens"))?;
+    if input_tokens == 0 {
+        return Err(err("input_tokens (must be >= 1)"));
+    }
+    if arrival_s < 0.0 {
+        return Err(err("arrival_s (must be >= 0)"));
+    }
+    Ok(Query { id, arrival_s, input_tokens, output_tokens })
 }
 
 #[cfg(test)]

@@ -15,11 +15,13 @@ use hetsched::sched::policy::Policy as _;
 use hetsched::sched::policy::{build_policy, ClusterView};
 use hetsched::sim::engine::{
     simulate, simulate_batched_with_tables, simulate_batched_with_tables_reference,
-    BatchingOptions, QueueModel, SimOptions,
+    simulate_batched_with_tables_scan, BatchingOptions, QueueModel, SimOptions,
 };
+use hetsched::sim::stream::simulate_stream;
 use hetsched::util::par::par_map_range;
 use hetsched::util::quick::{self, Gen};
 use hetsched::workload::generator::{Arrival, TraceGenerator};
+use hetsched::workload::source::SliceSource;
 use hetsched::workload::Query;
 use hetsched::{prop_assert, prop_assert_close};
 use std::collections::HashMap;
@@ -388,6 +390,204 @@ fn prop_batched_engine_matches_reference() {
                 "system totals diverged on system {s}"
             );
         }
+        Ok(())
+    });
+}
+
+/// ISSUE 6 tentpole property: the event-heap batched engine is
+/// **bit-identical** to the retained O(queues) scan loop
+/// (`simulate_batched_with_tables_scan`, the PR-5 due-picking kept
+/// verbatim). The heap changes only how the next due queue is found,
+/// so every outcome field, batch histogram, system total, and report
+/// aggregate must match exactly — across random multi-node clusters,
+/// seeds, policies, queue models, formation policies, batching knobs,
+/// and both exact and bucketed batch tables.
+#[test]
+fn prop_event_heap_matches_scan_due_picking() {
+    let em = energy_model();
+    quick::check(40, |g| {
+        let mut systems = system_catalog();
+        for spec in systems.iter_mut() {
+            spec.count = g.usize_in(1..4);
+        }
+        let n = g.usize_in(5..150);
+        let rate = g.f64_in(0.5, 60.0);
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, g.rng.next_u64()).generate(n);
+        let max_batch = g.usize_in(1..9);
+        let linger_s = g.f64_in(0.0, 0.5);
+        let formation = match g.u32_in(0..3) {
+            0 => FormationPolicy::FifoPrefix,
+            1 => FormationPolicy::ShapeAware { n_bins: 1 },
+            _ => FormationPolicy::ShapeAware { n_bins: g.usize_in(2..12) },
+        };
+        let queues = if g.bool() { QueueModel::PerWorker } else { QueueModel::PerClass };
+        let cfg = match g.u32_in(0..5) {
+            0 => PolicyConfig::Threshold {
+                t_in: g.u32_in(0..256),
+                t_out: g.u32_in(0..256),
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            1 => PolicyConfig::Cost { lambda: g.f64_in(0.0, 1.0) },
+            2 => PolicyConfig::RoundRobin,
+            3 => PolicyConfig::AllOn("Swing-A100".into()),
+            _ => PolicyConfig::JoinShortestQueue,
+        };
+        let table = CostTable::build(&queries, &systems, &em);
+        let batch_table = if g.bool() {
+            let bins = g.usize_in(2..10);
+            BatchTable::bucketed(em.clone(), &systems, BucketSpec::from_trace(&queries, bins))
+        } else {
+            BatchTable::new(em.clone(), &systems)
+        };
+        let opts = SimOptions {
+            batching: Some(
+                BatchingOptions::new(max_batch, linger_s)
+                    .with_formation(formation)
+                    .with_queues(queues),
+            ),
+            include_idle_energy: g.bool(),
+            strict: false,
+        };
+        let mut p1 = build_policy(&cfg, em.clone(), &systems);
+        let heap = simulate_batched_with_tables(
+            &queries, &systems, p1.as_mut(), &table, &batch_table, &opts,
+        );
+        let mut p2 = build_policy(&cfg, em.clone(), &systems);
+        let scan = simulate_batched_with_tables_scan(
+            &queries, &systems, p2.as_mut(), &table, &batch_table, &opts,
+        );
+
+        prop_assert!(heap.outcomes.len() == scan.outcomes.len(), "outcome count diverged");
+        for (a, b) in heap.outcomes.iter().zip(&scan.outcomes) {
+            prop_assert!(a.query_id == b.query_id, "outcome order diverged at {}", a.query_id);
+            prop_assert!(a.system == b.system, "routing diverged on query {}", a.query_id);
+            prop_assert!(
+                a.start_s == b.start_s && a.finish_s == b.finish_s,
+                "timing diverged on query {}: ({}, {}) vs ({}, {})",
+                a.query_id,
+                a.start_s,
+                a.finish_s,
+                b.start_s,
+                b.finish_s
+            );
+            prop_assert!(
+                a.service_s == b.service_s && a.energy_j == b.energy_j,
+                "cost diverged on query {}",
+                a.query_id
+            );
+        }
+        prop_assert!(heap.total_energy_j == scan.total_energy_j, "total energy diverged");
+        prop_assert!(heap.total_service_s == scan.total_service_s, "service diverged");
+        prop_assert!(heap.makespan_s == scan.makespan_s, "makespan diverged");
+        prop_assert!(heap.idle_energy_j == scan.idle_energy_j, "idle energy diverged");
+        prop_assert!(heap.serial_energy_j == scan.serial_energy_j, "serial-equiv diverged");
+        prop_assert!(heap.rerouted == scan.rerouted, "rerouted diverged");
+        prop_assert!(heap.routing_counts() == scan.routing_counts(), "routing counts");
+        for (s, (a, b)) in heap.batches.iter().zip(&scan.batches).enumerate() {
+            prop_assert!(a.dispatches == b.dispatches, "dispatch count diverged on system {s}");
+            prop_assert!(a.size_hist == b.size_hist, "batch compositions diverged on system {s}");
+            prop_assert!(
+                a.straggler_decode_steps == b.straggler_decode_steps,
+                "straggler accounting diverged on system {s}"
+            );
+        }
+        for (s, (a, b)) in heap.systems.iter().zip(&scan.systems).enumerate() {
+            prop_assert!(
+                a.queries == b.queries && a.busy_s == b.busy_s && a.energy_j == b.energy_j,
+                "system totals diverged on system {s}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 6 tentpole property: the bounded-memory streaming engine over
+/// a slice source reproduces the materialized engine **bit-identically**
+/// — serial and batched, across random clusters, policies, queue
+/// models, and batching knobs — while its memory counters stay bounded
+/// by the trace.
+#[test]
+fn prop_streaming_engine_matches_materialized() {
+    let em = energy_model();
+    quick::check(30, |g| {
+        let mut systems = system_catalog();
+        for spec in systems.iter_mut() {
+            spec.count = g.usize_in(1..3);
+        }
+        let n = g.usize_in(5..120);
+        let rate = g.f64_in(0.5, 50.0);
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, g.rng.next_u64()).generate(n);
+        let cfg = match g.u32_in(0..5) {
+            0 => PolicyConfig::Threshold {
+                t_in: g.u32_in(0..256),
+                t_out: g.u32_in(0..256),
+                small: "M1-Pro".into(),
+                big: "Swing-A100".into(),
+            },
+            1 => PolicyConfig::Cost { lambda: g.f64_in(0.0, 1.0) },
+            2 => PolicyConfig::RoundRobin,
+            3 => PolicyConfig::AllOn("Swing-A100".into()),
+            _ => PolicyConfig::JoinShortestQueue,
+        };
+        let batching = if g.bool() {
+            let formation = if g.bool() {
+                FormationPolicy::FifoPrefix
+            } else {
+                FormationPolicy::ShapeAware { n_bins: g.usize_in(1..10) }
+            };
+            let queues = if g.bool() { QueueModel::PerWorker } else { QueueModel::PerClass };
+            Some(
+                BatchingOptions::new(g.usize_in(1..9), g.f64_in(0.0, 0.5))
+                    .with_formation(formation)
+                    .with_queues(queues),
+            )
+        } else {
+            None
+        };
+        let opts = SimOptions { batching, include_idle_energy: g.bool(), strict: false };
+        let mut p1 = build_policy(&cfg, em.clone(), &systems);
+        let materialized = simulate(&queries, &systems, p1.as_mut(), &em, &opts);
+        let mut p2 = build_policy(&cfg, em.clone(), &systems);
+        let mut src = SliceSource::new(&queries);
+        let stream = simulate_stream(&mut src, queries.len(), &systems, p2.as_mut(), &em, &opts)?;
+
+        prop_assert!(stream.queries == queries.len() as u64, "query count diverged");
+        prop_assert!(
+            stream.total_energy_j.to_bits() == materialized.total_energy_j.to_bits(),
+            "total energy not bit-identical"
+        );
+        prop_assert!(
+            stream.total_service_s.to_bits() == materialized.total_service_s.to_bits(),
+            "total service not bit-identical"
+        );
+        prop_assert!(
+            stream.makespan_s.to_bits() == materialized.makespan_s.to_bits(),
+            "makespan not bit-identical"
+        );
+        prop_assert!(
+            stream.serial_energy_j.to_bits() == materialized.serial_energy_j.to_bits(),
+            "serial-equivalent energy not bit-identical"
+        );
+        prop_assert!(
+            stream.idle_energy_j.to_bits() == materialized.idle_energy_j.to_bits(),
+            "idle energy not bit-identical"
+        );
+        prop_assert!(stream.rerouted == materialized.rerouted, "rerouted diverged");
+        prop_assert!(
+            stream.routing_counts() == materialized.routing_counts(),
+            "routing counts diverged"
+        );
+        prop_assert!(
+            stream.total_dispatches() == materialized.total_dispatches(),
+            "dispatch counts diverged"
+        );
+        for (s, (a, b)) in stream.batches.iter().zip(&materialized.batches).enumerate() {
+            prop_assert!(a.size_hist == b.size_hist, "batch compositions diverged on system {s}");
+        }
+        prop_assert!(stream.energy_conserved(), "stream energy not conserved");
+        prop_assert!(stream.peak_pending <= queries.len(), "pending exceeds trace size");
+        prop_assert!(stream.unique_shapes <= queries.len(), "more unique shapes than queries");
         Ok(())
     });
 }
