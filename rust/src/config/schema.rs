@@ -10,7 +10,7 @@ use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::hw::catalog::{extended_catalog, find_system};
 use crate::hw::spec::SystemSpec;
 use crate::sched::formation::FormationPolicy;
-use crate::sim::engine::{BatchingOptions, QueueModel};
+use crate::sim::engine::{BatchMode, BatchingOptions, QueueModel};
 use crate::workload::generator::Arrival;
 use crate::workload::source::{TenantMix, TenantSpec};
 
@@ -168,6 +168,12 @@ pub struct ServeConfig {
     pub gen_tokens: u32,
     /// how workers pick batch members ("fifo" | "shape" | "shape:<bins>")
     pub formation: FormationPolicy,
+    /// iteration-level serving: workers top the in-flight batch up from
+    /// the queue after each member completes, under the same admission
+    /// policy the sim's continuous mode applies at decode-step boundaries
+    pub continuous: bool,
+    /// live-set cap for continuous serving (0 = `max_batch`)
+    pub max_live: usize,
     pub artifacts_dir: String,
 }
 
@@ -179,6 +185,8 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             gen_tokens: 32,
             formation: FormationPolicy::FifoPrefix,
+            continuous: false,
+            max_live: 0,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -403,6 +411,13 @@ impl ExperimentConfig {
                     FormationPolicy::parse(v.as_str().ok_or("serve.formation must be a string")?)
                         .map_err(|e| format!("serve.formation: {e}"))?;
             }
+            if let Some(v) = t.get("continuous") {
+                cfg.serve.continuous =
+                    v.as_bool().ok_or("serve.continuous must be a boolean")?;
+            }
+            if let Some(v) = t.get("max_live") {
+                cfg.serve.max_live = require_usize(v, "serve.max_live")?;
+            }
             if let Some(v) = t.get("artifacts_dir") {
                 cfg.serve.artifacts_dir = v.as_str().ok_or("serve.artifacts_dir must be a string")?.into();
             }
@@ -433,11 +448,45 @@ impl ExperimentConfig {
                 }
                 None => QueueModel::PerWorker,
             };
-            cfg.batching = Some(
-                BatchingOptions::new(max_batch, linger_s)
-                    .with_formation(formation)
-                    .with_queues(queues),
-            );
+            let mut b = BatchingOptions::new(max_batch, linger_s)
+                .with_formation(formation)
+                .with_queues(queues);
+            match t.get("mode") {
+                Some(v) => match v.as_str().ok_or("batching.mode must be a string")? {
+                    "static" => {
+                        if t.get("max_live").is_some() {
+                            return Err(
+                                "batching.max_live requires mode = \"continuous\"".into()
+                            );
+                        }
+                    }
+                    "continuous" => {
+                        let max_live = match t.get("max_live") {
+                            Some(v) => require_usize(v, "batching.max_live")?,
+                            None => 0,
+                        };
+                        b = b.with_continuous(max_live);
+                    }
+                    other => {
+                        return Err(format!(
+                            "unknown batching.mode '{other}' (expected \"static\" or \
+                             \"continuous\")"
+                        ))
+                    }
+                },
+                None => {
+                    if t.get("max_live").is_some() {
+                        return Err("batching.max_live requires mode = \"continuous\"".into());
+                    }
+                }
+            }
+            if let Some(v) = t.get("dispatch_cost") {
+                b = b.with_dispatch_cost(require_u64(v, "batching.dispatch_cost")?);
+            }
+            if let Some(v) = t.get("memo_capacity") {
+                b = b.with_memo_capacity(require_usize(v, "batching.memo_capacity")?);
+            }
+            cfg.batching = Some(b);
         }
 
         // [fleet]: fleet-sizing sweep (nested `counts` arrays — one count
@@ -578,6 +627,15 @@ impl ExperimentConfig {
             if let FormationPolicy::ShapeAware { n_bins } = b.formation {
                 if n_bins == 0 {
                     return Err("batching.formation shape: n_bins must be >= 1".into());
+                }
+            }
+            if let BatchMode::Continuous { max_live } = b.mode {
+                if max_live != 0 && max_live < b.max_batch {
+                    return Err(format!(
+                        "batching.max_live ({max_live}) must be 0 (= max_batch) or >= \
+                         batching.max_batch ({}): a founding batch is itself a live set",
+                        b.max_batch
+                    ));
                 }
             }
         }
@@ -1053,6 +1111,91 @@ max_batch = 4
             let err = ExperimentConfig::from_toml_str(src).unwrap_err();
             assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");
         }
+    }
+
+    /// ISSUE 7: `[batching] mode` selects static vs continuous dispatch,
+    /// `max_live` caps the continuous live set, and the `dispatch_cost`
+    /// / `memo_capacity` satellites round-trip. Strict error paths.
+    #[test]
+    fn batching_mode_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[batching]\nmax_batch = 8\nmode = \"continuous\"\nmax_live = 12\n",
+        )
+        .unwrap();
+        let b = cfg.batching.unwrap();
+        assert_eq!(b.mode, BatchMode::Continuous { max_live: 12 });
+        assert_eq!(b.mode.name(), "continuous");
+
+        // max_live defaults to 0 (= max_batch) in continuous mode
+        let cfg =
+            ExperimentConfig::from_toml_str("[batching]\nmax_batch = 8\nmode = \"continuous\"\n")
+                .unwrap();
+        assert_eq!(cfg.batching.unwrap().mode, BatchMode::Continuous { max_live: 0 });
+
+        // explicit and implicit static agree
+        for src in ["[batching]\nmax_batch = 8\nmode = \"static\"\n", "[batching]\nmax_batch = 8\n"]
+        {
+            let b = ExperimentConfig::from_toml_str(src).unwrap().batching.unwrap();
+            assert_eq!(b.mode, BatchMode::Static);
+            assert_eq!(b.dispatch_cost_steps, 0);
+            assert_eq!(b.memo_capacity, 0);
+        }
+
+        // satellites: dispatch_cost and memo_capacity thread through
+        let cfg = ExperimentConfig::from_toml_str(
+            "[batching]\nmax_batch = 4\ndispatch_cost = 3\nmemo_capacity = 512\n",
+        )
+        .unwrap();
+        let b = cfg.batching.unwrap();
+        assert_eq!(b.dispatch_cost_steps, 3);
+        assert_eq!(b.memo_capacity, 512);
+
+        for (src, needle) in [
+            // unknown mode is a named error
+            ("[batching]\nmax_batch = 4\nmode = \"orca\"\n", "unknown batching.mode"),
+            ("[batching]\nmax_batch = 4\nmode = 7\n", "must be a string"),
+            // max_live without continuous mode is a mistake, not a no-op
+            ("[batching]\nmax_batch = 4\nmax_live = 8\n", "requires mode"),
+            ("[batching]\nmax_batch = 4\nmode = \"static\"\nmax_live = 8\n", "requires mode"),
+            // a positive cap below max_batch would silently shrink foundings
+            (
+                "[batching]\nmax_batch = 8\nmode = \"continuous\"\nmax_live = 4\n",
+                "batching.max_live",
+            ),
+            // strict integers throughout
+            (
+                "[batching]\nmax_batch = 4\nmode = \"continuous\"\nmax_live = 2.5\n",
+                "integer",
+            ),
+            ("[batching]\nmax_batch = 4\ndispatch_cost = -1\n", ">= 0"),
+            ("[batching]\nmax_batch = 4\nmemo_capacity = 1.5\n", "integer"),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");
+        }
+    }
+
+    /// ISSUE 7: `[serve] continuous` / `max_live` reach the coordinator's
+    /// worker config; defaults keep the historical static serving.
+    #[test]
+    fn serve_continuous_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[serve]\nmax_batch = 8\ncontinuous = true\nmax_live = 16\n",
+        )
+        .unwrap();
+        assert!(cfg.serve.continuous);
+        assert_eq!(cfg.serve.max_live, 16);
+
+        let cfg = ExperimentConfig::from_toml_str("").unwrap();
+        assert!(!cfg.serve.continuous);
+        assert_eq!(cfg.serve.max_live, 0);
+
+        assert!(ExperimentConfig::from_toml_str("[serve]\ncontinuous = \"yes\"\n")
+            .unwrap_err()
+            .contains("boolean"));
+        assert!(ExperimentConfig::from_toml_str("[serve]\nmax_live = -1\n")
+            .unwrap_err()
+            .contains(">= 0"));
     }
 
     /// `[batching] queues` selects the simulated queue layout; the

@@ -22,6 +22,9 @@
 //! shutdown are always handed out, never dropped.
 
 use super::request::Request;
+use crate::hw::spec::SystemSpec;
+use crate::perf::model::PerfModel;
+use crate::sched::admission;
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -205,6 +208,39 @@ impl SystemQueue {
                 }
             };
         }
+    }
+
+    /// Step-boundary admission for continuous (iteration-level) serving:
+    /// hand out the longest FIFO prefix of the waiting requests whose
+    /// joint KV footprint fits alongside the worker's current `live`
+    /// set — the same [`crate::sched::admission`] policy the simulator's
+    /// continuous engine applies at decode-step boundaries, so the sim
+    /// validates exactly this admission rule. Non-blocking and
+    /// linger-free: a boundary admits whoever is already waiting, it
+    /// never waits for stragglers. Returns an empty vec when nobody is
+    /// waiting, nothing fits, or `max_admit` is 0.
+    ///
+    /// Works during shutdown on purpose: residual requests may still be
+    /// admitted into an in-flight batch — that's drained work, exactly
+    /// what the close protocol promises.
+    pub fn top_up(
+        &self,
+        perf: &PerfModel,
+        spec: &SystemSpec,
+        live: &[(u32, u32)],
+        max_admit: usize,
+    ) -> Vec<Request> {
+        if max_admit == 0 {
+            return Vec::new();
+        }
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            return Vec::new();
+        }
+        let candidates: Vec<(u32, u32)> =
+            q.iter().take(max_admit).map(|r| (r.input_tokens(), r.gen_tokens)).collect();
+        let k = admission::admit_prefix(perf, spec, live, &candidates, max_admit);
+        q.drain(..k).collect()
     }
 
     /// Begin shutdown: no new work; wake all waiters. The flag flips

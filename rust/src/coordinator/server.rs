@@ -69,6 +69,8 @@ impl Server {
             systems.iter().map(|_| Arc::new(SystemQueue::new(cfg.serve.queue_cap))).collect();
 
         let policy = build_policy(&cfg.policy, energy.clone(), &systems);
+        // shared by workers for the continuous-admission feasibility check
+        let perf = Arc::new(energy.perf.clone());
         let mut workers = Vec::new();
         for (i, spec) in systems.iter().enumerate() {
             // one worker thread per node of the system class
@@ -80,6 +82,9 @@ impl Server {
                     max_wait: Duration::from_secs_f64(cfg.serve.max_wait_s),
                     formation: cfg.serve.formation,
                     sampling: SamplingParams::default(),
+                    continuous: cfg.serve.continuous,
+                    max_live: cfg.serve.max_live,
+                    perf: perf.clone(),
                 };
                 let q = queues[i].clone();
                 let f = factory.clone();

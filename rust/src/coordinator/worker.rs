@@ -8,6 +8,7 @@ use super::energy_acct;
 use super::request::{Request, Response};
 use crate::hw::spec::SystemSpec;
 use crate::metrics::Registry;
+use crate::perf::model::PerfModel;
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::engine::SamplingParams;
 use crate::sched::formation::FormationPolicy;
@@ -31,6 +32,15 @@ pub struct WorkerConfig {
     /// which waiting requests form each batch (shared with the sim)
     pub formation: FormationPolicy,
     pub sampling: SamplingParams,
+    /// iteration-level serving: between member completions the worker
+    /// tops the in-flight batch up from the queue
+    /// ([`SystemQueue::top_up`] — the same admission policy the sim's
+    /// `BatchMode::Continuous` applies at decode-step boundaries)
+    pub continuous: bool,
+    /// live-set cap for continuous serving (0 = `max_batch`)
+    pub max_live: usize,
+    /// perf model backing the joint-KV admission feasibility check
+    pub perf: Arc<PerfModel>,
 }
 
 /// Run the worker loop until the queue closes and drains. Every request
@@ -73,7 +83,10 @@ pub fn run_worker(
     let served = metrics.counter(&format!("worker.{}.served", cfg.spec.name));
     let errors = metrics.counter(&format!("worker.{}.errors", cfg.spec.name));
     let batches = metrics.counter(&format!("worker.{}.batches", cfg.spec.name));
+    let admissions = metrics.counter(&format!("worker.{}.admissions", cfg.spec.name));
     let latency = metrics.histo(&format!("worker.{}.latency", cfg.spec.name));
+    let continuous = cfg.continuous && cfg.max_batch > 1;
+    let max_live = if cfg.max_live == 0 { cfg.max_batch } else { cfg.max_live };
 
     loop {
         let batch = queue.take_batch_with(cfg.formation, cfg.max_batch, cfg.max_wait);
@@ -84,9 +97,34 @@ pub fn run_worker(
             continue;
         }
         batches.inc();
-        let batch_size = batch.len();
-        for req in batch {
+        if !continuous {
+            let batch_size = batch.len();
+            for req in batch {
+                serve_one(&cfg, req, batch_size, engine.as_ref(), &served, &errors, &latency);
+            }
+            continue;
+        }
+        // Iteration-level serving: members retire in generation-length
+        // order (the sim's step-boundary model), and each retirement
+        // frees a slot that is topped up from the queue under the same
+        // joint-KV admission policy the sim applies.
+        let mut live = batch;
+        live.sort_by_key(|r| r.gen_tokens);
+        while !live.is_empty() {
+            let req = live.remove(0);
+            let batch_size = live.len() + 1;
             serve_one(&cfg, req, batch_size, engine.as_ref(), &served, &errors, &latency);
+            let room = max_live.saturating_sub(live.len());
+            if room == 0 {
+                continue;
+            }
+            let live_mn: Vec<(u32, u32)> =
+                live.iter().map(|r| (r.input_tokens(), r.gen_tokens)).collect();
+            for r in queue.top_up(&cfg.perf, &cfg.spec, &live_mn, room) {
+                admissions.inc();
+                let at = live.partition_point(|x| x.gen_tokens <= r.gen_tokens);
+                live.insert(at, r);
+            }
         }
     }
 }

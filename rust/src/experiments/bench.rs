@@ -402,6 +402,40 @@ pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
         "  heap vs scan speedup: {heap_vs_scan:.2}x; streaming: peak pending {}, {} unique shapes",
         rep_stream.peak_pending, rep_stream.unique_shapes
     ));
+    // static vs continuous dispatch: same trace, same shared tables, same
+    // per-worker FIFO configuration — the static side is section 2's
+    // per-worker run (r_per_worker / rep_pw), so the pair times the
+    // iteration-level machinery itself and the energy delta is pure
+    // dispatch-mode effect
+    let run_continuous = || -> SimReport {
+        let mut p = build_policy(&policy_cfg, energy.clone(), &systems);
+        simulate_batched_with_tables(
+            &queries,
+            &systems,
+            p.as_mut(),
+            &table,
+            &batch_table,
+            &SimOptions {
+                batching: Some(
+                    BatchingOptions::new(8, 0.1)
+                        .with_formation(FormationPolicy::FifoPrefix)
+                        .with_queues(QueueModel::PerWorker)
+                        .with_continuous(0),
+                ),
+                ..Default::default()
+            },
+        )
+    };
+    let r_continuous = harness.run("engine (batched, continuous dispatch)", n, || {
+        black_box(run_continuous());
+    });
+    lines.push(r_continuous.line());
+    let rep_ct = run_continuous();
+    let continuous_delta_j = rep_pw.total_energy_j - rep_ct.total_energy_j;
+    lines.push(format!(
+        "  continuous vs static: energy delta {continuous_delta_j:+.1} J, straggler steps recovered {}",
+        rep_pw.total_straggler_steps().saturating_sub(rep_ct.total_straggler_steps())
+    ));
     let mut sec = BTreeMap::new();
     sec.insert("heap".to_string(), report_json(&r_per_worker));
     sec.insert("scan_baseline".to_string(), report_json(&r_scan));
@@ -409,6 +443,12 @@ pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
     sec.insert("streaming_serial".to_string(), report_json(&r_stream));
     sec.insert("stream_peak_pending".to_string(), num(rep_stream.peak_pending as f64));
     sec.insert("stream_unique_shapes".to_string(), num(rep_stream.unique_shapes as f64));
+    sec.insert("continuous".to_string(), report_json(&r_continuous));
+    sec.insert("continuous_energy_delta_j".to_string(), num(continuous_delta_j));
+    sec.insert(
+        "straggler_steps_recovered".to_string(),
+        num(rep_pw.total_straggler_steps().saturating_sub(rep_ct.total_straggler_steps()) as f64),
+    );
     sections.insert("engine".to_string(), Json::Obj(sec));
 
     // ── assemble BENCH.json ────────────────────────────────────────────
@@ -476,6 +516,11 @@ mod tests {
         let shapes = eng.get("stream_unique_shapes").unwrap().as_usize().unwrap();
         assert!(shapes >= 1 && shapes <= 60, "unique shapes bounded by the trace: {shapes}");
         assert!(eng.get("stream_peak_pending").unwrap().as_usize().unwrap() >= 1);
+        // the static-vs-continuous pair: a timed continuous run plus the
+        // dispatch-mode deltas against the static per-worker baseline
+        assert!(eng.get("continuous").unwrap().get("median_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(eng.get("continuous_energy_delta_j").unwrap().as_f64().is_some());
+        assert!(eng.get("straggler_steps_recovered").unwrap().as_f64().unwrap() >= 0.0);
         // every timing report carries a positive median
         let sim = sections.get("simulate").unwrap();
         for k in ["serial", "batched_per_worker", "batched_per_class"] {

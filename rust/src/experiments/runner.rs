@@ -22,7 +22,7 @@ use crate::perf::model::Feasibility;
 use crate::sched::formation::FormationPolicy;
 use crate::sched::policy::build_policy;
 use crate::sim::engine::{
-    simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
+    simulate_batched_with_tables, simulate_with_table, BatchMode, BatchingOptions, SimOptions,
 };
 use crate::sim::report::SimReport;
 use crate::sim::stream::{simulate_stream, StreamReport};
@@ -175,7 +175,15 @@ pub struct BatchingPoint {
     pub rate: f64,
     pub max_batch: usize,
     pub linger_s: f64,
+    /// static (batch-atomic) or continuous (iteration-level) dispatch
+    pub mode: BatchMode,
     pub total_energy_j: f64,
+    /// per-system energy (J) in catalog order — static-vs-continuous
+    /// deltas are read off per system from paired points
+    pub system_energy_j: Vec<f64>,
+    /// Σ over batches of Σ members `max(n) − n` — 0 by construction in
+    /// continuous mode (every recorded step is recovered by admission)
+    pub straggler_steps: u64,
     /// Σ dispatch-overhead energy — the component batching amortizes
     pub dispatch_energy_j: f64,
     /// energy saved vs one-query-per-dispatch execution of the same
@@ -190,12 +198,16 @@ pub struct BatchingPoint {
     pub size_hist: Vec<Vec<u64>>,
 }
 
-/// Sweep the dynamic-batching grid: `max_batch × linger_s` per arrival
-/// rate λ, fanned over [`crate::util::par`]. Per rate the trace, the
-/// [`CostTable`], and one shared memoized [`BatchTable`] are built once;
-/// each grid point is then pure simulation (`max_batch = 1` points
+/// Sweep the dynamic-batching grid: `max_batch × linger_s × mode` per
+/// arrival rate λ, fanned over [`crate::util::par`]. Per rate the trace,
+/// the [`CostTable`], and one shared memoized [`BatchTable`] are built
+/// once; each grid point is then pure simulation (`max_batch = 1` points
 /// reproduce the serial engine exactly, so the sweep embeds its own
-/// baseline). Points come back rate-major in grid order.
+/// baseline; static points pair with their continuous siblings so the
+/// iteration-level energy/p99 delta and the straggler steps recovered
+/// are read off adjacent points). Points come back rate-major in grid
+/// order, mode varying fastest.
+#[allow(clippy::too_many_arguments)]
 pub fn batching_sweep(
     systems: &[SystemSpec],
     energy: &EnergyModel,
@@ -203,24 +215,29 @@ pub fn batching_sweep(
     rates: &[f64],
     max_batches: &[usize],
     lingers: &[f64],
+    modes: &[BatchMode],
     n_queries: usize,
     seed: u64,
 ) -> Vec<BatchingPoint> {
-    let mut out = Vec::with_capacity(rates.len() * max_batches.len() * lingers.len());
+    let mut out =
+        Vec::with_capacity(rates.len() * max_batches.len() * lingers.len() * modes.len());
     for &rate in rates {
         let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n_queries);
         let table = CostTable::build(&queries, systems, energy);
         let batch_table = BatchTable::new(energy.clone(), systems);
-        let grid: Vec<(usize, f64)> = max_batches
+        let grid: Vec<(usize, f64, BatchMode)> = max_batches
             .iter()
-            .flat_map(|&mb| lingers.iter().map(move |&lg| (mb, lg)))
+            .flat_map(|&mb| {
+                lingers
+                    .iter()
+                    .flat_map(move |&lg| modes.iter().map(move |&md| (mb, lg, md)))
+            })
             .collect();
-        let points = par_map(&grid, |&(max_batch, linger_s)| {
+        let points = par_map(&grid, |&(max_batch, linger_s, mode)| {
             let mut p = build_policy(policy, energy.clone(), systems);
-            let opts = SimOptions {
-                batching: Some(BatchingOptions::new(max_batch, linger_s)),
-                ..Default::default()
-            };
+            let mut bopts = BatchingOptions::new(max_batch, linger_s);
+            bopts.mode = mode;
+            let opts = SimOptions { batching: Some(bopts), ..Default::default() };
             let rep = simulate_batched_with_tables(
                 &queries,
                 systems,
@@ -233,7 +250,10 @@ pub fn batching_sweep(
                 rate,
                 max_batch,
                 linger_s,
+                mode,
                 total_energy_j: rep.total_energy_j,
+                system_energy_j: rep.systems.iter().map(|s| s.energy_j).collect(),
+                straggler_steps: rep.total_straggler_steps(),
                 dispatch_energy_j: rep.dispatch_energy_j(),
                 batching_delta_j: rep.batching_energy_delta_j(),
                 dispatches: rep.total_dispatches(),
@@ -257,6 +277,8 @@ pub struct FormationPoint {
     pub rate: f64,
     pub max_batch: usize,
     pub formation: FormationPolicy,
+    /// static (batch-atomic) or continuous (iteration-level) dispatch
+    pub mode: BatchMode,
     pub total_energy_j: f64,
     /// per-system energy (J) in catalog order — the FIFO-vs-shape-aware
     /// energy delta *per system* is read off pairs of points
@@ -290,12 +312,14 @@ pub struct FormationSweep {
     pub bucket_bins: (usize, usize),
 }
 
-/// Sweep batch formation: `formation × max_batch` per arrival rate λ,
-/// fanned over [`crate::util::par`]. Per rate the trace, the
+/// Sweep batch formation: `formation × max_batch × mode` per arrival
+/// rate λ, fanned over [`crate::util::par`]. Per rate the trace, the
 /// [`CostTable`], and one shared quantile-bucketed [`BatchTable`] (bins
 /// derived once from that rate's trace) are built once; every grid point
 /// then reuses them, so FIFO and shape-aware points are costed through
-/// the exact same cells and their energy delta is pure formation effect.
+/// the exact same cells and their energy delta is pure formation effect
+/// — and static/continuous siblings likewise differ only in dispatch
+/// mode (mode varies fastest in grid order).
 #[allow(clippy::too_many_arguments)]
 pub fn formation_sweep(
     systems: &[SystemSpec],
@@ -304,12 +328,14 @@ pub fn formation_sweep(
     rates: &[f64],
     max_batches: &[usize],
     formations: &[FormationPolicy],
+    modes: &[BatchMode],
     linger_s: f64,
     n_queries: usize,
     seed: u64,
     bucket_bins: usize,
 ) -> FormationSweep {
-    let mut points = Vec::with_capacity(rates.len() * max_batches.len() * formations.len());
+    let mut points =
+        Vec::with_capacity(rates.len() * max_batches.len() * formations.len() * modes.len());
     let mut lookups = 0u64;
     let mut hits = 0u64;
     let mut evaluations = 0usize;
@@ -321,16 +347,19 @@ pub fn formation_sweep(
         let (mb, nb) = spec.bin_counts();
         bins = (bins.0.min(mb), bins.1.min(nb));
         let batch_table = BatchTable::bucketed(energy.clone(), systems, spec);
-        let grid: Vec<(usize, FormationPolicy)> = max_batches
+        let grid: Vec<(usize, FormationPolicy, BatchMode)> = max_batches
             .iter()
-            .flat_map(|&mb| formations.iter().map(move |&f| (mb, f)))
+            .flat_map(|&mb| {
+                formations
+                    .iter()
+                    .flat_map(move |&f| modes.iter().map(move |&md| (mb, f, md)))
+            })
             .collect();
-        let rate_points = par_map(&grid, |&(max_batch, formation)| {
+        let rate_points = par_map(&grid, |&(max_batch, formation, mode)| {
             let mut p = build_policy(policy, energy.clone(), systems);
-            let opts = SimOptions {
-                batching: Some(BatchingOptions::new(max_batch, linger_s).with_formation(formation)),
-                ..Default::default()
-            };
+            let mut bopts = BatchingOptions::new(max_batch, linger_s).with_formation(formation);
+            bopts.mode = mode;
+            let opts = SimOptions { batching: Some(bopts), ..Default::default() };
             let rep = simulate_batched_with_tables(
                 &queries,
                 systems,
@@ -343,6 +372,7 @@ pub fn formation_sweep(
                 rate,
                 max_batch,
                 formation,
+                mode,
                 total_energy_j: rep.total_energy_j,
                 system_energy_j: rep.systems.iter().map(|s| s.energy_j).collect(),
                 straggler_steps: rep.total_straggler_steps(),
@@ -759,6 +789,7 @@ mod tests {
             &[20.0],
             &[1, 4],
             &[0.0, 0.2],
+            &[BatchMode::Static],
             150,
             11,
         );
@@ -789,6 +820,7 @@ mod tests {
             &[30.0],
             &[1, 2, 4, 8],
             &[0.25],
+            &[BatchMode::Static],
             300,
             2024,
         );
@@ -826,6 +858,7 @@ mod tests {
             &[25.0],
             &[4, 8],
             &formations,
+            &[BatchMode::Static],
             0.25,
             300,
             2024,
@@ -863,6 +896,51 @@ mod tests {
         );
         assert!(sweep.batch_table_evaluations as u64 <= sweep.batch_table_lookups);
         assert!(sweep.bucket_bins.0 >= 2 && sweep.bucket_bins.1 >= 2);
+    }
+
+    /// ISSUE 7 acceptance: on a saturating Alpaca trace, continuous
+    /// dispatch recovers every straggler decode step the static sibling
+    /// spends (its own straggler count is 0 by construction) and never
+    /// spends more energy — adjacent mode-paired points, same trace,
+    /// same shared tables.
+    #[test]
+    fn batching_sweep_continuous_recovers_stragglers() {
+        let systems = system_catalog();
+        let em = energy();
+        let pts = batching_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::AllOn("Swing-A100".into()),
+            &[30.0],
+            &[4, 8],
+            &[0.25],
+            &[BatchMode::Static, BatchMode::Continuous { max_live: 0 }],
+            300,
+            2024,
+        );
+        assert_eq!(pts.len(), 4, "max_batch × mode grid, mode fastest");
+        for pair in pts.chunks(2) {
+            let (st, ct) = (&pair[0], &pair[1]);
+            assert_eq!(st.mode, BatchMode::Static);
+            assert_eq!(ct.mode, BatchMode::Continuous { max_live: 0 });
+            assert_eq!(st.max_batch, ct.max_batch);
+            assert_eq!(ct.straggler_steps, 0, "continuous admits at every boundary");
+            assert!(
+                st.straggler_steps > 0,
+                "static at max_batch {} must strand decode steps under overload",
+                st.max_batch
+            );
+            assert!(
+                ct.total_energy_j <= st.total_energy_j,
+                "continuous spent {} J > static {} J at max_batch {}",
+                ct.total_energy_j,
+                st.total_energy_j,
+                st.max_batch
+            );
+            // per-system energy stays a partition of the total
+            let sum: f64 = ct.system_energy_j.iter().sum();
+            assert!((sum - ct.total_energy_j).abs() <= 1e-6 * ct.total_energy_j.max(1.0));
+        }
     }
 
     #[test]

@@ -14,7 +14,10 @@ use hetsched::model::{find_llm, llm_catalog};
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
 use hetsched::sched::formation::FormationPolicy;
-use hetsched::sim::engine::{BatchingOptions, QueueModel, SimOptions};
+use hetsched::perf::cost_table::{BatchTable, CostTable};
+use hetsched::sim::engine::{
+    simulate_batched_with_tables, BatchMode, BatchingOptions, QueueModel, SimOptions,
+};
 use hetsched::util::cli::Args;
 use hetsched::util::tablefmt::{fmt_joules, fmt_secs, Align, Table};
 use hetsched::workload::alpaca::{AlpacaModel, ALPACA_SIZE};
@@ -261,6 +264,9 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         .opt("linger", "", "seconds a partial batch lingers for stragglers (empty = config)")
         .opt("formation", "", "batch formation: fifo | shape | shape:<bins> (empty = config)")
         .opt("queues", "", "batched-queue layout: per-worker | per-class (empty = config)")
+        .opt("max-live", "", "continuous live-set cap (0 = max_batch; implies --continuous)")
+        .opt("memo-cap", "", "bound on the batch-cost memo (entries; 0 = unbounded)")
+        .flag("continuous", "iteration-level batching: members join at decode-step boundaries")
         .flag("idle-energy", "charge idle power across the makespan")
         .flag("stream", "bounded-memory streaming engine: no materialized trace or outcome vector")
         .parse(argv)?;
@@ -336,6 +342,26 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             }
         }
     }
+    if args.get_bool("continuous") || !args.get("max-live").is_empty() {
+        let max_live = match args.get("max-live") {
+            "" => 0,
+            _ => args.get_usize("max-live")?,
+        };
+        match &mut batching {
+            Some(b) => b.mode = BatchMode::Continuous { max_live },
+            None => return Err("--continuous needs batching (--max-batch > 1 or a [batching] config section)".into()),
+        }
+    }
+    match args.get("memo-cap") {
+        "" => {}
+        _ => {
+            let cap = args.get_usize("memo-cap")?;
+            match &mut batching {
+                Some(b) => b.memo_capacity = cap,
+                None => return Err("--memo-cap needs batching (--max-batch > 1 or a [batching] config section)".into()),
+            }
+        }
+    }
     let opts = SimOptions {
         include_idle_energy: args.get_bool("idle-energy"),
         strict: false,
@@ -348,7 +374,38 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         Some(p) => hetsched::workload::trace::read_csv(std::path::Path::new(p))?,
         None => trace_generator(&cfg).generate(cfg.workload.queries),
     };
-    let rep = hetsched::sim::engine::simulate(&queries, &cfg.cluster.systems, policy.as_mut(), &energy, &opts);
+    // batched runs build the tables here so the memo statistics (hits,
+    // evictions under --memo-cap) survive into the report below
+    let mut memo_stats = None;
+    let rep = match &opts.batching {
+        Some(b) => {
+            let table = CostTable::build(&queries, &cfg.cluster.systems, &energy);
+            let batch_table =
+                BatchTable::new(energy.clone(), &cfg.cluster.systems).with_capacity(b.memo_capacity);
+            let rep = simulate_batched_with_tables(
+                &queries,
+                &cfg.cluster.systems,
+                policy.as_mut(),
+                &table,
+                &batch_table,
+                &opts,
+            );
+            memo_stats = Some((
+                batch_table.lookups(),
+                batch_table.hits(),
+                batch_table.evictions(),
+                batch_table.memo_capacity(),
+            ));
+            rep
+        }
+        None => hetsched::sim::engine::simulate(
+            &queries,
+            &cfg.cluster.systems,
+            policy.as_mut(),
+            &energy,
+            &opts,
+        ),
+    };
     println!("policy: {}", rep.policy);
     println!(
         "queries: {}   energy: {}   service: {}   makespan: {}   rerouted: {}",
@@ -374,7 +431,8 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     print!("{}", t.ascii());
     if let Some(b) = &opts.batching {
         println!(
-            "batching: formation {}   queues {}   mean size {:.2}   dispatch energy {}   straggler steps {}   saved vs serial dispatch {}",
+            "batching: mode {}   formation {}   queues {}   mean size {:.2}   dispatch energy {}   straggler steps {}   saved vs serial dispatch {}",
+            b.mode.name(),
             b.formation.name(),
             b.queues.name(),
             rep.mean_batch_size(),
@@ -382,6 +440,15 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             rep.total_straggler_steps(),
             fmt_joules(rep.batching_energy_delta_j())
         );
+        if let Some((lookups, hits, evictions, cap)) = memo_stats {
+            println!(
+                "batch-cost memo: {} lookups, {} hits, {} evictions ({})",
+                lookups,
+                hits,
+                evictions,
+                if cap == 0 { "unbounded".to_string() } else { format!("capacity {cap}") }
+            );
+        }
         for (s, b) in rep.systems.iter().zip(&rep.batches) {
             if b.dispatches > 0 {
                 println!("  {} batch sizes (1..): {:?}", s.name, b.size_hist);
@@ -479,6 +546,33 @@ where
     Ok(vals)
 }
 
+/// Parse a `--modes` list: `static`, `continuous`, or
+/// `continuous:<max_live>`, comma-separated.
+fn parse_modes_flag(spec: &str) -> Result<Vec<BatchMode>, String> {
+    let modes: Vec<BatchMode> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| match s {
+            "static" => Ok(BatchMode::Static),
+            "continuous" => Ok(BatchMode::Continuous { max_live: 0 }),
+            other => match other.strip_prefix("continuous:") {
+                Some(cap) => cap
+                    .parse::<usize>()
+                    .map(|max_live| BatchMode::Continuous { max_live })
+                    .map_err(|e| format!("--modes: bad live cap in '{other}': {e}")),
+                None => Err(format!(
+                    "--modes entries must be static | continuous | continuous:<max_live>, got '{other}'"
+                )),
+            },
+        })
+        .collect::<Result<_, _>>()?;
+    if modes.is_empty() {
+        return Err("--modes: needs at least one value".into());
+    }
+    Ok(modes)
+}
+
 /// Map a `--policy` shortcut to a [`PolicyConfig`]; a catalog system
 /// name selects the all-on baseline for it.
 fn parse_policy_flag(name: &str) -> Result<PolicyConfig, String> {
@@ -511,6 +605,7 @@ fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
         .opt("rates", "5,20,50", "Poisson arrival rates λ (q/s), comma-separated")
         .opt("max-batch", "1,2,4,8", "max batch sizes, comma-separated")
         .opt("linger", "0,0.1,0.25", "linger windows (s), comma-separated")
+        .opt("modes", "static", "dispatch modes (static | continuous | continuous:<max_live>), comma-separated")
         .opt("queries", "2000", "trace length per rate")
         .opt("seed", "2024", "trace seed")
         .flag("csv", "emit CSV")
@@ -525,10 +620,11 @@ fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
         return Err("--max-batch values must be >= 1".into());
     }
     let lingers = required_list::<f64>(&args, "linger")?;
+    let modes = parse_modes_flag(args.get("modes"))?;
     let n_queries = args.get_usize("queries")?;
     let seed = args.get_u64("seed")?;
     let pts = batching_sweep(
-        &systems, &energy, &policy, &rates, &max_batches, &lingers, n_queries, seed,
+        &systems, &energy, &policy, &rates, &max_batches, &lingers, &modes, n_queries, seed,
     );
     println!(
         "dynamic-batching sweep: policy {}, {} queries per rate, seed {}",
@@ -540,9 +636,11 @@ fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
         "rate",
         "max_batch",
         "linger",
+        "mode",
         "energy",
         "saved",
         "dispatch J",
+        "stragglers",
         "batches",
         "mean size",
         "mean lat",
@@ -553,9 +651,11 @@ fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
             format!("{:.1}", p.rate),
             p.max_batch.to_string(),
             format!("{:.2}", p.linger_s),
+            p.mode.name().into(),
             fmt_joules(p.total_energy_j),
             fmt_joules(p.batching_delta_j),
             fmt_joules(p.dispatch_energy_j),
+            p.straggler_steps.to_string(),
             p.dispatches.to_string(),
             format!("{:.2}", p.mean_batch_size),
             fmt_secs(p.mean_latency_s),
@@ -563,7 +663,58 @@ fn cmd_batching_sweep(argv: &[String]) -> Result<(), String> {
         ]);
     }
     print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+    print_mode_deltas(
+        &systems,
+        pts.iter().map(|p| {
+            (
+                p.mode,
+                format!("λ={:.1} b={} linger={:.2}", p.rate, p.max_batch, p.linger_s),
+                p.total_energy_j,
+                p.system_energy_j.clone(),
+                p.p99_latency_s,
+                p.straggler_steps,
+            )
+        }),
+    );
     Ok(())
+}
+
+/// Report static→continuous deltas from mode-paired sweep points (mode
+/// varies fastest in grid order, so a static point's continuous siblings
+/// follow it directly): per-system energy, p99, and the straggler decode
+/// steps the iteration-level engine recovered.
+#[allow(clippy::type_complexity)]
+fn print_mode_deltas(
+    systems: &[SystemSpec],
+    points: impl Iterator<Item = (BatchMode, String, f64, Vec<f64>, f64, u64)>,
+) {
+    let pts: Vec<_> = points.collect();
+    let names: Vec<&str> = systems.iter().map(|s| s.name).collect();
+    let mut last_static: Option<usize> = None;
+    for i in 0..pts.len() {
+        match pts[i].0 {
+            BatchMode::Static => last_static = Some(i),
+            BatchMode::Continuous { .. } => {
+                let Some(s) = last_static else { continue };
+                let (_, ref label, st_e, ref st_sys, st_p99, st_straggler) = pts[s];
+                let (_, _, ct_e, ref ct_sys, ct_p99, ct_straggler) = pts[i];
+                let parts: Vec<String> = names
+                    .iter()
+                    .zip(st_sys.iter().zip(ct_sys))
+                    .filter(|(_, (a, b))| **a != 0.0 || **b != 0.0)
+                    .map(|(name, (a, b))| format!("{name} {}", fmt_joules(a - b)))
+                    .collect();
+                println!(
+                    "{label}: static − continuous = {} ({:+.2}%)   p99 {:+.3}s   straggler steps recovered {}   per system: {}",
+                    fmt_joules(st_e - ct_e),
+                    100.0 * (st_e - ct_e) / st_e.max(f64::MIN_POSITIVE),
+                    ct_p99 - st_p99,
+                    st_straggler.saturating_sub(ct_straggler),
+                    parts.join("   ")
+                );
+            }
+        }
+    }
 }
 
 fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
@@ -573,6 +724,7 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
         .opt("rates", "10,25", "Poisson arrival rates λ (q/s), comma-separated")
         .opt("max-batch", "4,8", "max batch sizes, comma-separated")
         .opt("formations", "fifo,shape", "formation policies (fifo | shape | shape:<bins>), comma-separated")
+        .opt("modes", "static", "dispatch modes (static | continuous | continuous:<max_live>), comma-separated")
         .opt("linger", "0.25", "linger window (s)")
         .opt("queries", "2000", "trace length per rate")
         .opt("seed", "2024", "trace seed")
@@ -598,6 +750,7 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
     if formations.is_empty() {
         return Err("--formations: needs at least one value".into());
     }
+    let modes = parse_modes_flag(args.get("modes"))?;
     let linger_s = args.get_f64("linger")?;
     if !(linger_s.is_finite() && linger_s >= 0.0) {
         return Err(format!("--linger must be finite and >= 0, got {linger_s}"));
@@ -609,8 +762,8 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
         return Err("--bins must be >= 1".into());
     }
     let sweep = formation_sweep(
-        &systems, &energy, &policy, &rates, &max_batches, &formations, linger_s, n_queries,
-        seed, bins,
+        &systems, &energy, &policy, &rates, &max_batches, &formations, &modes, linger_s,
+        n_queries, seed, bins,
     );
     println!(
         "batch-formation sweep: policy {}, linger {:.2}s, {} queries per rate, seed {}",
@@ -623,6 +776,7 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
         "rate",
         "max_batch",
         "formation",
+        "mode",
         "energy",
         "straggler steps",
         "batches",
@@ -635,6 +789,7 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
             format!("{:.1}", p.rate),
             p.max_batch.to_string(),
             p.formation.name(),
+            p.mode.name().into(),
             fmt_joules(p.total_energy_j),
             p.straggler_steps.to_string(),
             p.dispatches.to_string(),
@@ -644,6 +799,19 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
         ]);
     }
     print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+    print_mode_deltas(
+        &systems,
+        sweep.points.iter().map(|p| {
+            (
+                p.mode,
+                format!("λ={:.1} b={} {}", p.rate, p.max_batch, p.formation.name()),
+                p.total_energy_j,
+                p.system_energy_j.clone(),
+                p.p99_latency_s,
+                p.straggler_steps,
+            )
+        }),
+    );
 
     // FIFO-vs-alternative energy delta, per system, at each grid point
     let names: Vec<&str> = systems.iter().map(|s| s.name).collect();
@@ -652,6 +820,7 @@ fn cmd_formation_sweep(argv: &[String]) -> Result<(), String> {
             p.formation != FormationPolicy::FifoPrefix
                 && p.rate == fifo.rate
                 && p.max_batch == fifo.max_batch
+                && p.mode == fifo.mode
         }) {
             let total = fifo.total_energy_j - other.total_energy_j;
             let parts: Vec<String> = names
@@ -965,6 +1134,8 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         .opt("artifacts", "artifacts", "AOT artifacts directory")
         .opt("requests", "32", "demo requests to push through")
         .opt("gen", "16", "tokens to generate per request")
+        .opt("max-live", "", "continuous live-set cap (0 = max_batch; implies --continuous)")
+        .flag("continuous", "iteration-level serving: workers top batches up between completions")
         .parse(argv)?;
     let mut cfg = match args.get("config") {
         "" => ExperimentConfig::default(),
@@ -972,6 +1143,13 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
     };
     cfg.serve.artifacts_dir = args.get("artifacts").to_string();
     cfg.serve.gen_tokens = args.get_u64("gen")? as u32;
+    if args.get_bool("continuous") || !args.get("max-live").is_empty() {
+        cfg.serve.continuous = true;
+        cfg.serve.max_live = match args.get("max-live") {
+            "" => 0,
+            _ => args.get_usize("max-live")?,
+        };
+    }
     let n_requests = args.get_usize("requests")?;
 
     // PJRT artifacts when available (feature "pjrt"), sim backend otherwise

@@ -453,23 +453,86 @@ fn lower_edge(edges: &[u32], v: u32) -> u32 {
 /// evaluated at the deterministic bin representative — never at
 /// whichever actual composition got there first — so results are
 /// identical at any core count.
+///
+/// ## Bounded memoization
+///
+/// Batch compositions are data-dependent, so on long streaming traces
+/// the exact-key memo grows with the number of *distinct* compositions
+/// seen — unbounded in trace length. [`Self::with_capacity`] bounds
+/// residency with a per-shard **clock** (second-chance) eviction: every
+/// hit sets a referenced bit, every insert past capacity sweeps the
+/// shard's ring, clearing bits until it finds an unreferenced victim.
+/// Eviction never changes *values* — a re-miss of an evicted key
+/// re-evaluates through the identical path and lands bit-identical —
+/// only the hit/evaluation trajectory. The capacity is split evenly
+/// across the [`BATCH_TABLE_SHARDS`] stripes (rounded up, minimum one
+/// cell per shard), so the global bound is approximate by at most one
+/// ring slot per shard.
 pub struct BatchTable {
     energy: EnergyModel,
     systems: Vec<SystemSpec>,
     buckets: Option<BucketSpec>,
     /// lock-striped cache: `shards[hash(key) % BATCH_TABLE_SHARDS]`
     shards: Vec<Shard>,
+    /// resident-cell bound per shard; 0 = unbounded (the default)
+    shard_capacity: usize,
+    /// the user-facing total capacity `with_capacity` was given
+    capacity: usize,
     lookups: AtomicU64,
     hits: AtomicU64,
     evaluations: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// One memo cell: initialized exactly once, by whichever worker won the
 /// insert; concurrent missers block on it instead of re-evaluating.
 type BatchSlot = Arc<OnceLock<Arc<BatchCost>>>;
 
-/// One lock stripe of the cache.
-type Shard = Mutex<HashMap<BatchKey, BatchSlot>>;
+/// One resident cell plus its clock (second-chance) bit.
+struct ShardEntry {
+    slot: BatchSlot,
+    /// set on every hit, cleared by the sweeping clock hand; a cell is
+    /// evicted only after a full hand pass without a hit
+    referenced: bool,
+}
+
+/// One lock stripe of the cache: the resident map plus the clock ring
+/// of resident keys (`ring`/`hand` stay empty in unbounded mode).
+struct ShardState {
+    map: HashMap<BatchKey, ShardEntry>,
+    /// resident keys in insertion-slot order — the clock's sweep ring
+    ring: Vec<BatchKey>,
+    /// next ring position the clock hand examines
+    hand: usize,
+}
+
+type Shard = Mutex<ShardState>;
+
+impl ShardState {
+    fn new() -> Self {
+        Self { map: HashMap::new(), ring: Vec::new(), hand: 0 }
+    }
+
+    /// Clock sweep: advance the hand, giving referenced cells a second
+    /// chance, until an unreferenced victim is found; remove it from the
+    /// map and return its ring slot for reuse. Terminates within two
+    /// passes (the first pass clears every referenced bit).
+    fn evict_one(&mut self) -> usize {
+        loop {
+            let entry =
+                self.map.get_mut(&self.ring[self.hand]).expect("ring keys stay resident");
+            if entry.referenced {
+                entry.referenced = false;
+                self.hand = (self.hand + 1) % self.ring.len();
+            } else {
+                self.map.remove(&self.ring[self.hand]);
+                let slot = self.hand;
+                self.hand = (self.hand + 1) % self.ring.len();
+                return slot;
+            }
+        }
+    }
+}
 
 /// Lock stripes of a [`BatchTable`] (power of two: the shard index is a
 /// mask of the key hash). 64 stripes keep the collision probability of
@@ -494,10 +557,13 @@ impl BatchTable {
             energy,
             systems: systems.to_vec(),
             buckets: None,
-            shards: (0..BATCH_TABLE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..BATCH_TABLE_SHARDS).map(|_| Mutex::new(ShardState::new())).collect(),
+            shard_capacity: 0,
+            capacity: 0,
             lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             evaluations: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -505,6 +571,24 @@ impl BatchTable {
     /// each member's bucket representative.
     pub fn bucketed(energy: EnergyModel, systems: &[SystemSpec], buckets: BucketSpec) -> Self {
         Self { buckets: Some(buckets), ..Self::new(energy, systems) }
+    }
+
+    /// Bound resident cells to roughly `capacity` across all shards with
+    /// clock (second-chance) eviction; `0` leaves the memo unbounded.
+    /// This is what makes batched streaming truly
+    /// O(pending + unique shapes): without it the exact-composition memo
+    /// grows with every distinct composition the trace produces.
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity;
+        self.shard_capacity =
+            if capacity == 0 { 0 } else { capacity.div_ceil(BATCH_TABLE_SHARDS).max(1) };
+        self
+    }
+
+    /// The total-capacity bound [`Self::with_capacity`] was given
+    /// (0 = unbounded).
+    pub fn memo_capacity(&self) -> usize {
+        self.capacity
     }
 
     pub fn is_bucketed(&self) -> bool {
@@ -518,6 +602,20 @@ impl BatchTable {
 
     pub fn n_systems(&self) -> usize {
         self.systems.len()
+    }
+
+    /// The energy model behind every cell. The continuous engine prices
+    /// decode-step spans and step-boundary admissions through this exact
+    /// model so episode costs stay consistent with the memoized static
+    /// costs.
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.energy
+    }
+
+    /// The spec of system `idx` (panics when out of range, like
+    /// [`Self::cost`]).
+    pub fn system_spec(&self, idx: usize) -> &SystemSpec {
+        &self.systems[idx]
     }
 
     /// Cost of dispatching `members` as one batch on `system`, memoized
@@ -539,8 +637,9 @@ impl BatchTable {
         };
         let key: BatchKey = (system, keyed);
         let mut shard = self.shards[shard_index(&key)].lock().unwrap();
-        if let Some(slot) = shard.get(&key) {
-            let slot = Arc::clone(slot);
+        if let Some(entry) = shard.map.get_mut(&key) {
+            entry.referenced = true;
+            let slot = Arc::clone(&entry.slot);
             drop(shard);
             self.hits.fetch_add(1, Ordering::Relaxed);
             // the inserting worker may still be evaluating: get_or_init
@@ -550,7 +649,18 @@ impl BatchTable {
         }
         let pairs = key.1.clone();
         let slot = Arc::new(OnceLock::new());
-        shard.insert(key, Arc::clone(&slot));
+        if self.shard_capacity > 0 && shard.ring.len() >= self.shard_capacity {
+            // at capacity: the clock hand picks a victim and its ring
+            // slot is reused for the incoming key
+            let reuse = shard.evict_one();
+            shard.ring[reuse] = key.clone();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        } else if self.shard_capacity > 0 {
+            shard.ring.push(key.clone());
+        }
+        // new cells start unreferenced: a cell that is never hit again is
+        // the first to go once the hand comes around
+        shard.map.insert(key, ShardEntry { slot: Arc::clone(&slot), referenced: false });
         drop(shard);
         // evaluate with the shard unlocked so other keys of this stripe
         // aren't serialized on the model
@@ -611,8 +721,19 @@ impl BatchTable {
     /// (composition, system) cell, **exactly**, even under concurrent
     /// misses of the same key (the in-flight slot de-duplicates them;
     /// regression-tested by hammering one key from the whole pool).
+    /// Under a [`Self::with_capacity`] bound, a key evicted and
+    /// re-missed evaluates again, so `evaluations` can exceed the
+    /// distinct-key count by up to [`Self::evictions`].
     pub fn evaluations(&self) -> usize {
         self.evaluations.load(Ordering::Relaxed) as usize
+    }
+
+    /// Cells evicted by the clock hand so far (0 when unbounded).
+    /// Reported by the sweeps alongside [`Self::hits`] /
+    /// [`Self::lookups`]: a high eviction rate at a given capacity means
+    /// the working set of distinct compositions does not fit.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 }
 
@@ -975,6 +1096,68 @@ mod tests {
         assert_ne!(a, b);
         assert_eq!(cache.n_unique_rows(), 2);
         assert_eq!(cache.n_systems(), systems.len());
+    }
+
+    /// ISSUE 7 satellite: a capacity-bounded table stays bit-identical
+    /// to the unbounded one on every returned cost — eviction only
+    /// changes the hit/evaluation trajectory — while holding residency
+    /// at the per-shard bound and counting every eviction.
+    #[test]
+    fn bounded_memo_evicts_but_stays_bit_identical() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        // tiny bound: one resident cell per shard
+        let bounded = BatchTable::new(energy.clone(), &systems).with_capacity(1);
+        assert_eq!(bounded.memo_capacity(), 1);
+        let unbounded = BatchTable::new(energy, &systems);
+        assert_eq!(unbounded.memo_capacity(), 0);
+        // far more distinct compositions than capacity, revisited twice
+        let pool: Vec<Vec<(u32, u32)>> =
+            (0..400u32).map(|i| vec![(8 + i % 97, 16 + i % 53), (8 + i % 13, 8)]).collect();
+        for pass in 0..2 {
+            for members in &pool {
+                let a = bounded.cost(1, members);
+                let b = unbounded.cost(1, members);
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "pass {pass}");
+                assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits(), "pass {pass}");
+                assert_eq!(a.member_finish_s, b.member_finish_s);
+            }
+        }
+        assert!(bounded.evictions() > 0, "400 keys through 64 cells must evict");
+        // residency respects the bound: re-missed evictions re-evaluate
+        assert!(bounded.evaluations() > unbounded.evaluations());
+        assert_eq!(
+            bounded.hits() + bounded.evaluations() as u64,
+            bounded.lookups(),
+            "every lookup is a hit or an evaluation"
+        );
+        assert_eq!(unbounded.evictions(), 0);
+    }
+
+    /// Clock second-chance: with capacity for the working set, a
+    /// hot key keeps its referenced bit set and is never evicted even as
+    /// cold keys churn past it.
+    #[test]
+    fn clock_eviction_gives_hot_keys_a_second_chance() {
+        let systems = system_catalog();
+        let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+        // capacity 128 = 2 cells per shard: one slot for the hot key,
+        // one for churn that lands in the same shard
+        let t = BatchTable::new(energy, &systems).with_capacity(128);
+        let hot = [(32u32, 64u32)];
+        let _ = t.cost(1, &hot);
+        let evals_after_hot = t.evaluations();
+        for i in 0..300u32 {
+            // touch the hot key between cold misses so its bit stays set
+            let _ = t.cost(1, &[(100 + i, 16)]);
+            let _ = t.cost(1, &hot);
+        }
+        // the hot key was evaluated exactly once: every later lookup hit
+        let cold_evals = t.evaluations() - evals_after_hot;
+        assert!(cold_evals >= 300 - 64, "cold keys churned: {cold_evals}");
+        let lookups = t.lookups();
+        assert_eq!(lookups, 601);
+        assert!(t.hits() >= 300, "hot key must keep hitting, got {}", t.hits());
     }
 
     #[test]

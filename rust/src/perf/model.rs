@@ -187,6 +187,60 @@ impl PerfModel {
         }
     }
 
+    /// Wall time to decode the absolute step span `[start, end)` with a
+    /// **fixed live set**, accumulated onto `onto` — the per-decode-step
+    /// cost that iteration-level (continuous) batching schedules by.
+    ///
+    /// Each live member is `(m, joined)`: its prompt length and the
+    /// absolute decode step at which it was admitted, so its context at
+    /// step `s` is `m + (s - joined)`. Every step streams the weights
+    /// **once** for the whole live set, reads every member's KV cache,
+    /// and spends every member's FLOPs; the step is throttled by the
+    /// longest live context. Integration runs in the same 16-step blocks
+    /// as [`Self::decode_time`].
+    ///
+    /// Returning `onto + span` (with the blocks added one at a time onto
+    /// `onto`) rather than the bare span is what lets callers chain
+    /// segments — admissions and retirements at step boundaries — and
+    /// land on *bit-identical* totals to one fused loop over the same
+    /// segments: float addition is not associative, so summing a segment
+    /// locally and then adding it would round differently. With every
+    /// member joined at step 0 this is exactly the historical inner loop
+    /// of [`Self::batch_cost`] (`mid - 0.0 == mid` bitwise), which is
+    /// how the static batch cost becomes the closed-form sum of step
+    /// costs over retirement segments — pinned by
+    /// `batch_cost_matches_pre_factoring_reference` below.
+    pub fn decode_span_time(
+        &self,
+        spec: &SystemSpec,
+        live: &[(u32, u64)],
+        start: u64,
+        end: u64,
+        onto: f64,
+    ) -> f64 {
+        let mut t = onto;
+        let mut i = start;
+        while i < end {
+            let block = 16u64.min(end - i);
+            let mid = i as f64 + block as f64 / 2.0;
+            let mut bytes = self.llm.weight_bytes(); // streamed once per step
+            let mut flops = 0.0f64;
+            let mut max_ctx = 0.0f64;
+            for &(m, joined) in live {
+                let ctx = m as f64 + (mid - joined as f64);
+                bytes += self.llm.kv_bytes_per_token() * self.llm.effective_ctx(ctx);
+                flops += self.llm.decode_flops(ctx);
+                max_ctx = max_ctx.max(ctx);
+            }
+            let per_step = (bytes / spec.mem_bw)
+                .max(flops / spec.compute_flops)
+                * spec.throttle_factor(max_ctx);
+            t += per_step * block as f64;
+            i += block;
+        }
+        t
+    }
+
     /// Batch feasibility: every member must pass its per-query checks
     /// (generation caps, MPS compatibility) *and* the summed footprint —
     /// weights once plus every member's KV cache and scratch — must fit
@@ -244,11 +298,17 @@ impl PerfModel {
 
         let prefill_s: f64 = members.iter().map(|&(m, _)| self.prefill_time(spec, m)).sum();
 
-        // Decode: walk steps in retirement segments. `order` sorts member
-        // indices by ascending n; within a segment all members of the
-        // live suffix decode together.
+        // Decode: the closed-form sum of per-step span costs
+        // ([`Self::decode_span_time`]) over retirement segments. `order`
+        // sorts member indices by ascending n; within a segment all
+        // members of the live suffix decode together, and every member
+        // joined at step 0 (static membership — continuous admission is
+        // the engines' business, chaining the same span primitive from
+        // nonzero `joined` offsets).
         let mut order: Vec<usize> = (0..members.len()).collect();
         order.sort_by_key(|&i| members[i].1);
+        let joined: Vec<(u32, u64)> =
+            order.iter().map(|&i| (members[i].0, 0u64)).collect();
         let max_n = members.iter().map(|&(_, n)| n).max().unwrap() as u64;
         let mut decode_done = vec![0.0f64; members.len()];
         let mut t = 0.0f64; // cumulative decode seconds
@@ -261,13 +321,102 @@ impl PerfModel {
                 retired += 1;
             }
             let seg_end = members[order[retired]].1 as u64; // > step
+            t = self.decode_span_time(spec, &joined[retired..], step, seg_end, t);
+            step = seg_end;
+        }
+        while retired < order.len() {
+            decode_done[order[retired]] = t;
+            retired += 1;
+        }
+        let decode_s = t;
+
+        // Energy through the same phase-resolved power model as
+        // query_cost: one overhead phase for the whole batch.
+        let mut phases = Vec::with_capacity(3);
+        if spec.overhead_s > 0.0 {
+            phases.push(Phase { dur_s: spec.overhead_s, util: 0.05, host_active: true });
+        }
+        if prefill_s > 0.0 {
+            phases.push(Phase { dur_s: prefill_s, util: spec.util_prefill, host_active: true });
+        }
+        if decode_s > 0.0 {
+            phases.push(Phase { dur_s: decode_s, util: spec.util_decode, host_active: true });
+        }
+        let pm = PowerModel { phases };
+        BatchCost {
+            runtime_s: pm.total_time(),
+            energy_j: pm.total_energy(spec),
+            net_energy_j: pm.net_energy(spec),
+            prefill_s,
+            decode_s,
+            overhead_s: spec.overhead_s,
+            feasibility,
+            member_finish_s: decode_done
+                .iter()
+                .map(|&d| spec.overhead_s + prefill_s + d)
+                .collect(),
+        }
+    }
+
+    /// The pre-factoring [`Self::batch_cost`] with its decode loop
+    /// inlined, kept verbatim as the **reference implementation** for
+    /// the per-step-span factoring above: the property suite pins
+    /// `batch_cost` bit-identical to this on every field, so "batch cost
+    /// = sum of step-span costs over retirement segments" stays an
+    /// executable claim and nothing downstream of `BatchTable` changes
+    /// meaning. Not part of the supported API.
+    #[doc(hidden)]
+    pub fn batch_cost_reference(&self, spec: &SystemSpec, members: &[(u32, u32)]) -> BatchCost {
+        assert!(!members.is_empty(), "batch_cost needs at least one member");
+        if members.len() == 1 {
+            let (m, n) = members[0];
+            let c = self.query_cost(spec, m, n);
+            return BatchCost {
+                runtime_s: c.runtime_s,
+                energy_j: c.energy_j,
+                net_energy_j: c.net_energy_j,
+                prefill_s: c.prefill_s,
+                decode_s: c.decode_s,
+                overhead_s: c.overhead_s,
+                feasibility: c.feasibility,
+                member_finish_s: vec![c.runtime_s],
+            };
+        }
+        let feasibility = self.batch_feasibility(spec, members);
+        if feasibility != Feasibility::Ok {
+            return BatchCost {
+                runtime_s: f64::NAN,
+                energy_j: f64::NAN,
+                net_energy_j: f64::NAN,
+                prefill_s: f64::NAN,
+                decode_s: f64::NAN,
+                overhead_s: spec.overhead_s,
+                feasibility,
+                member_finish_s: vec![f64::NAN; members.len()],
+            };
+        }
+
+        let prefill_s: f64 = members.iter().map(|&(m, _)| self.prefill_time(spec, m)).sum();
+
+        let mut order: Vec<usize> = (0..members.len()).collect();
+        order.sort_by_key(|&i| members[i].1);
+        let max_n = members.iter().map(|&(_, n)| n).max().unwrap() as u64;
+        let mut decode_done = vec![0.0f64; members.len()];
+        let mut t = 0.0f64;
+        let mut step = 0u64;
+        let mut retired = 0usize;
+        while step < max_n {
+            while retired < order.len() && members[order[retired]].1 as u64 <= step {
+                decode_done[order[retired]] = t;
+                retired += 1;
+            }
+            let seg_end = members[order[retired]].1 as u64;
             let live = &order[retired..];
-            // blocked integration (same 16-step blocks as decode_time)
             let mut i = step;
             while i < seg_end {
                 let block = 16u64.min(seg_end - i);
                 let mid = i as f64 + block as f64 / 2.0;
-                let mut bytes = self.llm.weight_bytes(); // streamed once per step
+                let mut bytes = self.llm.weight_bytes();
                 let mut flops = 0.0f64;
                 let mut max_ctx = 0.0f64;
                 for &j in live {
@@ -290,8 +439,6 @@ impl PerfModel {
         }
         let decode_s = t;
 
-        // Energy through the same phase-resolved power model as
-        // query_cost: one overhead phase for the whole batch.
         let mut phases = Vec::with_capacity(3);
         if spec.overhead_s > 0.0 {
             phases.push(Phase { dur_s: spec.overhead_s, util: 0.05, host_active: true });
@@ -555,6 +702,84 @@ mod tests {
                 spec.dispatch_energy_j(),
                 phase_j
             );
+        }
+    }
+
+    #[test]
+    fn batch_cost_matches_pre_factoring_reference() {
+        // the per-step-span factoring must not move a single bit on any
+        // field: batch cost IS the sum of span costs over retirement
+        // segments
+        let (pm, specs) = setup();
+        let cases: Vec<Vec<(u32, u32)>> = vec![
+            vec![(64, 64)],
+            vec![(64, 64); 4],
+            vec![(32, 8), (32, 256), (32, 64)],
+            vec![(8, 1), (2048, 512), (100, 100), (7, 33), (512, 17)],
+            vec![(16, 40), (16, 40), (90, 40), (90, 3)],
+            vec![(1, 1), (1, 2), (1, 3), (1, 4), (1, 5), (1, 6), (1, 7)],
+        ];
+        for spec in &specs {
+            for members in &cases {
+                let a = pm.batch_cost(spec, members);
+                let b = pm.batch_cost_reference(spec, members);
+                assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits(), "{}", spec.name);
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{}", spec.name);
+                assert_eq!(a.net_energy_j.to_bits(), b.net_energy_j.to_bits(), "{}", spec.name);
+                assert_eq!(a.prefill_s.to_bits(), b.prefill_s.to_bits());
+                assert_eq!(a.decode_s.to_bits(), b.decode_s.to_bits());
+                assert_eq!(a.overhead_s.to_bits(), b.overhead_s.to_bits());
+                assert_eq!(a.feasibility, b.feasibility);
+                assert_eq!(a.member_finish_s.len(), b.member_finish_s.len());
+                for (x, y) in a.member_finish_s.iter().zip(&b.member_finish_s) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_span_is_join_offset_invariant() {
+        // a member admitted at step j decoding [j, j+n) costs exactly
+        // what it would from step 0 — contexts depend only on steps
+        // decoded since admission (integers stay exact in f64 here)
+        let (pm, specs) = setup();
+        for spec in &specs {
+            for &(m, n, j) in &[(64u32, 120u64, 37u64), (8, 500, 3), (300, 40, 1000)] {
+                let from_zero = pm.decode_span_time(spec, &[(m, 0)], 0, n, 0.0);
+                let shifted = pm.decode_span_time(spec, &[(m, j)], j, j + n, 0.0);
+                assert_eq!(from_zero.to_bits(), shifted.to_bits(), "{}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_span_chaining_is_bit_stable() {
+        // chaining spans through `onto` equals one fused span over the
+        // same live set — the invariant continuous episodes lean on
+        let (pm, specs) = setup();
+        let spec = &specs[SystemId::SWING_A100.0];
+        let live = [(64u32, 0u64), (200, 0), (16, 0)];
+        let fused = pm.decode_span_time(spec, &live, 0, 100, 0.0);
+        let mut t = 0.0;
+        for (a, b) in [(0u64, 13u64), (13, 16), (16, 48), (48, 99), (99, 100)] {
+            t = pm.decode_span_time(spec, &live, a, b, t);
+        }
+        assert_eq!(fused.to_bits(), t.to_bits());
+    }
+
+    #[test]
+    fn joint_decode_step_cheaper_than_separate_streams() {
+        // the continuous-batching payoff at the step level: one merged
+        // live set streams the weights once, two separate batches twice
+        let (pm, specs) = setup();
+        for spec in &specs {
+            let joint = pm.decode_span_time(spec, &[(64, 0), (128, 0)], 0, 32, 0.0);
+            let a = pm.decode_span_time(spec, &[(64, 0)], 0, 32, 0.0);
+            let b = pm.decode_span_time(spec, &[(128, 0)], 0, 32, 0.0);
+            assert!(joint < a + b, "{}: {joint} !< {}", spec.name, a + b);
+            // and no cheaper than either alone
+            assert!(joint > a.max(b), "{}", spec.name);
         }
     }
 

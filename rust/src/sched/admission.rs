@@ -1,0 +1,124 @@
+//! Step-boundary admission for continuous (iteration-level) batching —
+//! the one policy implementation shared by the simulator's continuous
+//! engine and the coordinator's `SystemQueue::top_up`, the same way
+//! [`super::formation`] is shared by both dispatch paths.
+//!
+//! The policy is a **FIFO prefix**: candidates are considered strictly
+//! in queue order and admission stops at the first one that does not
+//! fit, so no member can be overtaken indefinitely by later arrivals —
+//! the same starvation-free guarantee the formation DP keeps via its
+//! oldest-member rule. "Fits" means the joint batch feasibility of
+//! [`crate::perf::model::PerfModel::batch_feasibility`]: every member
+//! individually feasible *and* weights-once plus every member's full
+//! `(m, n)` KV/scratch footprint within VRAM. Live members are checked
+//! at their full footprint (not their current context), so a member
+//! admitted now can never OOM the set later in its own decode — the
+//! live-set invariant the continuous engine relies on.
+
+use crate::hw::spec::SystemSpec;
+use crate::perf::model::{Feasibility, PerfModel};
+
+/// Longest admissible FIFO prefix of `candidates` joining `live`,
+/// capped at `max_admit`. Returns `k`: admit `candidates[..k]`.
+///
+/// `live` holds the `(m, n)` of every member currently decoding;
+/// `candidates` the pending queries in arrival order. `scratch` is
+/// caller-owned to keep the per-boundary cost allocation-free; it is
+/// cleared and left holding `live ++ candidates[..k]`.
+pub fn admit_prefix_with(
+    perf: &PerfModel,
+    spec: &SystemSpec,
+    live: &[(u32, u32)],
+    candidates: &[(u32, u32)],
+    max_admit: usize,
+    scratch: &mut Vec<(u32, u32)>,
+) -> usize {
+    scratch.clear();
+    scratch.extend_from_slice(live);
+    let mut k = 0usize;
+    while k < candidates.len() && k < max_admit {
+        scratch.push(candidates[k]);
+        if perf.batch_feasibility(spec, scratch) != Feasibility::Ok {
+            scratch.pop();
+            break;
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Allocating convenience wrapper around [`admit_prefix_with`].
+pub fn admit_prefix(
+    perf: &PerfModel,
+    spec: &SystemSpec,
+    live: &[(u32, u32)],
+    candidates: &[(u32, u32)],
+    max_admit: usize,
+) -> usize {
+    let mut scratch = Vec::with_capacity(live.len() + candidates.len().min(max_admit));
+    admit_prefix_with(perf, spec, live, candidates, max_admit, &mut scratch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::{system_catalog, SystemId};
+    use crate::model::llm_catalog;
+
+    fn perf() -> PerfModel {
+        PerfModel::new(llm_catalog()[1].clone())
+    }
+
+    #[test]
+    fn admits_fifo_prefix_up_to_cap() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::SWING_A100.0];
+        let live = [(64u32, 64u32)];
+        let cands = [(32u32, 32u32), (16, 16), (8, 8)];
+        assert_eq!(admit_prefix(&p, spec, &live, &cands, 2), 2);
+        assert_eq!(admit_prefix(&p, spec, &live, &cands, 0), 0);
+        assert_eq!(admit_prefix(&p, spec, &live, &cands, 8), 3);
+    }
+
+    #[test]
+    fn stops_at_first_misfit_without_skipping() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::M1_PRO.0];
+        // second candidate breaks the M1 generation cap; the third would
+        // fit but FIFO order must not skip past a blocked head
+        let cands = [(32u32, 32u32), (32, 4096), (8, 8)];
+        assert_eq!(admit_prefix(&p, spec, &[], &cands, 8), 1);
+    }
+
+    #[test]
+    fn joint_footprint_limits_admission() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::M1_PRO.0];
+        // each fits alone but a pile of them exhausts VRAM jointly:
+        // admission must stop strictly before the joint check fails
+        let big = (2048u32, 512u32);
+        let cands = vec![big; 64];
+        let k = admit_prefix(&p, spec, &[], &cands, 64);
+        assert!(k < 64, "64 joint members should not fit M1 VRAM");
+        let mut members = vec![big; k.max(1)];
+        if k > 0 {
+            assert_eq!(p.batch_feasibility(spec, &members), Feasibility::Ok);
+        }
+        members.push(big);
+        assert_ne!(p.batch_feasibility(spec, &members), Feasibility::Ok);
+    }
+
+    #[test]
+    fn scratch_variant_matches_and_reuses() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::SWING_A100.0];
+        let live = [(128u32, 128u32), (64, 64)];
+        let cands = [(32u32, 64u32), (512, 128), (8, 8)];
+        let mut scratch = Vec::new();
+        for cap in 0..=4 {
+            let k = admit_prefix_with(&p, spec, &live, &cands, cap, &mut scratch);
+            assert_eq!(k, admit_prefix(&p, spec, &live, &cands, cap));
+            assert_eq!(scratch.len(), live.len() + k);
+        }
+    }
+}

@@ -32,7 +32,11 @@
 //! Because the group count is the minimum that covers the window, group
 //! sizes are forced near-full, so shape-aware draining issues exactly as
 //! many dispatches as FIFO — it never trades drag for extra dispatch
-//! overhead.
+//! overhead. [`FormationPolicy::select_with_cost`] relaxes exactly that:
+//! given a per-dispatch overhead in straggler-step units, the DP explores
+//! larger group counts and splits below `max_batch` precisely where the
+//! drag saved exceeds the extra dispatch's cost (the PR-3 carry-over).
+//! At `dispatch_cost = 0` the two are bit-identical.
 //!
 //! ## Invariant (pinned by `rust/tests/properties.rs`)
 //!
@@ -129,6 +133,25 @@ impl FormationPolicy {
     /// input, always containing index 0 (the oldest waiter — starvation
     /// freedom), and never longer than `max_batch`.
     pub fn select(&self, waiting: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
+        self.select_with_cost(waiting, max_batch, 0)
+    }
+
+    /// [`Self::select`] with the per-dispatch overhead folded into the
+    /// `ShapeAware` window DP: `dispatch_cost` is the overhead of one
+    /// dispatch expressed in straggler-decode-step units, so the
+    /// partition count is costed, not just drag — the DP splits below
+    /// `max_batch` only where the drag saved exceeds the extra
+    /// dispatch's cost. `dispatch_cost = 0` is exactly [`Self::select`]
+    /// (the minimal group count is forced, bit-identically to the
+    /// historic DP). `FifoPrefix` ignores the cost — it never regroups.
+    /// The starvation-free guarantee is unchanged: the returned group
+    /// always contains index 0.
+    pub fn select_with_cost(
+        &self,
+        waiting: &[(u32, u32)],
+        max_batch: usize,
+        dispatch_cost: u64,
+    ) -> Vec<usize> {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         if waiting.is_empty() {
             return Vec::new();
@@ -137,11 +160,13 @@ impl FormationPolicy {
             FormationPolicy::FifoPrefix => (0..waiting.len().min(max_batch)).collect(),
             FormationPolicy::ShapeAware { n_bins } => {
                 let w = waiting.len().min(n_bins.max(1) * max_batch);
-                if w <= max_batch {
-                    // one group covers the whole window: nothing to regroup
+                if w <= max_batch && dispatch_cost == 0 {
+                    // one free group covers the whole window: nothing to
+                    // regroup (with costed dispatches even a window that
+                    // fits one batch may profitably split, so the DP runs)
                     return (0..w).collect();
                 }
-                select_shape_aware(&waiting[..w], max_batch)
+                select_shape_aware(&waiting[..w], max_batch, dispatch_cost)
             }
         }
     }
@@ -183,14 +208,27 @@ pub struct FormationScratch {
 /// consecutive groups of size `1..=k`; `cut[g][i]` = start rank of the
 /// last group in the optimum. Deterministic: sizes scanned in fixed
 /// order, strict `<` improvement.
+///
+/// `dispatch_cost` (straggler-step units) is the ISSUE-7 objective
+/// extension: each group the partition creates costs `dispatch_cost` on
+/// top of its drag, so the DP explores group counts from the minimum
+/// cover `ceil(w/k)` upward and picks the count minimizing
+/// `drag + dispatch_cost × groups` (strict `<` with counts scanned
+/// ascending, so ties keep the fewest dispatches). At `dispatch_cost =
+/// 0` only the minimal layer is built and chosen — exactly the historic
+/// drag-only DP, bit-for-bit — which is what keeps the engine's pinned
+/// reference properties intact.
 fn dp_oldest_group<F: Fn(usize) -> u32>(
     n_at: F,
     w: usize,
     k: usize,
     oldest_rank: usize,
+    dispatch_cost: u64,
     scratch: &mut FormationScratch,
 ) -> (usize, usize) {
-    let groups = w.div_ceil(k);
+    let g_min = w.div_ceil(k);
+    // splitting below size k only ever pays when dispatches are costed
+    let g_max = if dispatch_cost == 0 { g_min } else { w };
     const INF: u64 = u64::MAX;
     let stride = w + 1;
     // prefix sums of ranked n for O(1) group drag
@@ -200,11 +238,13 @@ fn dp_oldest_group<F: Fn(usize) -> u32>(
         scratch.prefix[r + 1] = scratch.prefix[r] + n_at(r) as u64;
     }
     scratch.dp.clear();
-    scratch.dp.resize((groups + 1) * stride, INF);
+    scratch.dp.resize((g_max + 1) * stride, INF);
     scratch.cut.clear();
-    scratch.cut.resize((groups + 1) * stride, 0);
+    scratch.cut.resize((g_max + 1) * stride, 0);
     scratch.dp[0] = 0; // dp[0][0]
-    for g in 1..=groups {
+    let mut best_g = 0usize;
+    let mut best_total = INF;
+    for g in 1..=g_max {
         for i in 1..=w {
             let mut best = INF;
             let mut best_j = 0;
@@ -225,16 +265,30 @@ fn dp_oldest_group<F: Fn(usize) -> u32>(
             scratch.dp[g * stride + i] = best;
             scratch.cut[g * stride + i] = best_j;
         }
+        if g >= g_min {
+            let drag = scratch.dp[g * stride + w];
+            if drag != INF {
+                let total = drag.saturating_add(dispatch_cost.saturating_mul(g as u64));
+                if total < best_total {
+                    best_total = total;
+                    best_g = g;
+                }
+                if drag == 0 {
+                    // zero drag: further splits only add dispatch cost
+                    break;
+                }
+            }
+        }
     }
     debug_assert!(
-        scratch.dp[groups * stride + w] != INF,
-        "window of {w} must partition into {groups} groups of <= {k}"
+        best_g >= g_min,
+        "window of {w} must partition into {g_min} groups of <= {k}"
     );
 
     // walk the cuts back to the group whose rank range covers the
     // oldest waiter
     let mut i = w;
-    for g in (1..=groups).rev() {
+    for g in (1..=best_g).rev() {
         let j = scratch.cut[g * stride + i];
         if (j..i).contains(&oldest_rank) {
             return (j, i);
@@ -246,7 +300,7 @@ fn dp_oldest_group<F: Fn(usize) -> u32>(
 
 /// Drag-minimal consecutive partition over the n-ranked window; returns
 /// the group containing the oldest waiter, as ascending waiting-indices.
-fn select_shape_aware(window: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
+fn select_shape_aware(window: &[(u32, u32)], max_batch: usize, dispatch_cost: u64) -> Vec<usize> {
     let w = window.len();
     // stable rank by (n, arrival): `order[r]` = waiting-index of rank r
     let mut order: Vec<usize> = (0..w).collect();
@@ -256,7 +310,14 @@ fn select_shape_aware(window: &[(u32, u32)], max_batch: usize) -> Vec<usize> {
         .position(|&i| i == 0)
         .expect("non-empty window contains the oldest waiter");
     let mut scratch = FormationScratch::default();
-    let (j, i) = dp_oldest_group(|r| window[order[r]].1, w, max_batch, oldest_rank, &mut scratch);
+    let (j, i) = dp_oldest_group(
+        |r| window[order[r]].1,
+        w,
+        max_batch,
+        oldest_rank,
+        dispatch_cost,
+        &mut scratch,
+    );
     let mut sel: Vec<usize> = order[j..i].to_vec();
     sel.sort_unstable();
     sel
@@ -342,14 +403,29 @@ impl SortedWindow {
         scratch: &mut FormationScratch,
         out: &mut Vec<u64>,
     ) {
+        self.select_drag_minimal_with_cost(oldest, max_batch, 0, scratch, out);
+    }
+
+    /// [`Self::select_drag_minimal`] with per-dispatch overhead folded
+    /// into the DP objective (see
+    /// [`FormationPolicy::select_with_cost`]); `dispatch_cost = 0` is
+    /// bit-identical to the drag-only selection.
+    pub fn select_drag_minimal_with_cost(
+        &self,
+        oldest: (u32, u64),
+        max_batch: usize,
+        dispatch_cost: u64,
+        scratch: &mut FormationScratch,
+        out: &mut Vec<u64>,
+    ) {
         assert!(max_batch >= 1, "max_batch must be >= 1");
         out.clear();
         let w = self.keys.len();
         if w == 0 {
             return;
         }
-        if w <= max_batch {
-            // one group covers the whole window: nothing to regroup
+        if w <= max_batch && dispatch_cost == 0 {
+            // one free group covers the whole window: nothing to regroup
             out.extend(self.keys.iter().map(|&(_, seq)| seq));
             out.sort_unstable();
             return;
@@ -358,7 +434,8 @@ impl SortedWindow {
             .keys
             .binary_search(&oldest)
             .expect("the oldest waiter must be in the window");
-        let (j, i) = dp_oldest_group(|r| self.keys[r].0, w, max_batch, oldest_rank, scratch);
+        let (j, i) =
+            dp_oldest_group(|r| self.keys[r].0, w, max_batch, oldest_rank, dispatch_cost, scratch);
         out.extend(self.keys[j..i].iter().map(|&(_, seq)| seq));
         out.sort_unstable();
     }
@@ -461,6 +538,126 @@ mod tests {
             let (drag, dispatches, _) = drain(p, &[7, 300, 12, 9], 1);
             assert_eq!(drag, 0);
             assert_eq!(dispatches, 4);
+        }
+    }
+
+    /// Drain with the costed objective, mirroring `drain` above.
+    fn drain_with_cost(
+        policy: FormationPolicy,
+        ns: &[u32],
+        max_batch: usize,
+        cost: u64,
+    ) -> (u64, usize) {
+        let mut waiting = shapes(ns);
+        let mut drag = 0u64;
+        let mut dispatches = 0usize;
+        while !waiting.is_empty() {
+            let window = policy.candidate_window(max_batch).min(waiting.len());
+            let sel = policy.select_with_cost(&waiting[..window], max_batch, cost);
+            assert!(!sel.is_empty() && sel[0] == 0, "selection must include the oldest waiter");
+            assert!(sel.len() <= max_batch);
+            let members: Vec<(u32, u32)> = sel.iter().map(|&i| waiting[i]).collect();
+            drag += FormationPolicy::straggler_steps(&members);
+            dispatches += 1;
+            for &i in sel.iter().rev() {
+                waiting.remove(i);
+            }
+        }
+        (drag, dispatches)
+    }
+
+    /// ISSUE 7 satellite: a profitable split — a short and a long
+    /// generation fit one batch, but at a dispatch cost far below the
+    /// drag, the DP ships them separately (and still leads with the
+    /// oldest waiter).
+    #[test]
+    fn costed_dp_splits_where_drag_exceeds_dispatch_cost() {
+        let p = FormationPolicy::ShapeAware { n_bins: 8 };
+        let window = shapes(&[8, 512]);
+        // free dispatches: one batch, 504 steps of drag
+        assert_eq!(p.select(&window, 2), vec![0, 1]);
+        // costed dispatches: splitting saves 504 − 10 steps
+        assert_eq!(p.select_with_cost(&window, 2, 10), vec![0]);
+        // a cost above the drag keeps the batch whole
+        assert_eq!(p.select_with_cost(&window, 2, 600), vec![0, 1]);
+        // FIFO ignores the cost entirely
+        assert_eq!(FormationPolicy::FifoPrefix.select_with_cost(&window, 2, 10), vec![0, 1]);
+    }
+
+    /// With a dispatch cost above any achievable drag saving, the costed
+    /// DP picks the minimal group count — the same layer, cuts, and
+    /// groups as the historic drag-only DP, batch for batch.
+    #[test]
+    fn huge_dispatch_cost_degenerates_to_drag_only() {
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..100 {
+            let n_members = 1 + (next() % 17) as usize;
+            let k = 1 + (next() % 5) as usize;
+            let n_bins = 1 + (next() % 4) as usize;
+            let p = FormationPolicy::ShapeAware { n_bins };
+            let ns: Vec<u32> = (0..n_members).map(|_| (next() % 600) as u32).collect();
+            let (d0, b0, _) = drain(p, &ns, k);
+            let (dc, bc) = drain_with_cost(p, &ns, k, 1u64 << 40);
+            assert_eq!((d0, b0), (dc, bc), "ns={ns:?} k={k} bins={n_bins}");
+        }
+    }
+
+    /// With a window covering the whole waiting set, draining the costed
+    /// shape-aware policy never exceeds FIFO's total objective
+    /// `drag + cost × dispatches`: the FIFO chunking is always a
+    /// candidate partition, and removing the oldest group leaves a
+    /// feasible partition of the remainder, so the bound telescopes.
+    #[test]
+    fn costed_objective_never_exceeds_fifo_over_full_window() {
+        let mut state = 0x0badC0de1234_5678u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..200 {
+            let n_members = 1 + (next() % 17) as usize;
+            let k = 1 + (next() % 5) as usize;
+            let cost = [0u64, 1, 5, 50, 500][(next() % 5) as usize];
+            // n_bins sized so the window always covers the waiting set
+            let p = FormationPolicy::ShapeAware { n_bins: n_members };
+            let ns: Vec<u32> = (0..n_members).map(|_| (next() % 600) as u32).collect();
+            let (fifo_drag, fifo_b) = drain_with_cost(FormationPolicy::FifoPrefix, &ns, k, cost);
+            let (drag, b) = drain_with_cost(p, &ns, k, cost);
+            let shape_obj = drag + cost * b as u64;
+            let fifo_obj = fifo_drag + cost * fifo_b as u64;
+            assert!(
+                shape_obj <= fifo_obj,
+                "shape {shape_obj} > fifo {fifo_obj} on ns={ns:?} k={k} cost={cost}"
+            );
+        }
+    }
+
+    /// The incremental window selection with cost matches the allocating
+    /// `select_with_cost` over identical window contents.
+    #[test]
+    fn sorted_window_costed_selection_matches_select_with_cost() {
+        let p = FormationPolicy::ShapeAware { n_bins: 8 };
+        let ns = [8u32, 512, 9, 500, 256, 8];
+        for cost in [0u64, 10, 200, 1 << 40] {
+            let shapes: Vec<(u32, u32)> = ns.iter().map(|&n| (32, n)).collect();
+            let want: Vec<u64> =
+                p.select_with_cost(&shapes, 2, cost).iter().map(|&i| i as u64).collect();
+            let mut w = SortedWindow::new();
+            for (i, &n) in ns.iter().enumerate() {
+                w.insert((n, i as u64));
+            }
+            let mut scratch = FormationScratch::default();
+            let mut out = Vec::new();
+            w.select_drag_minimal_with_cost((ns[0], 0), 2, cost, &mut scratch, &mut out);
+            assert_eq!(out, want, "cost={cost}");
         }
     }
 

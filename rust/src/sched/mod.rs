@@ -3,6 +3,7 @@
 //! compares against and an offline oracle lower bound.
 
 pub mod adaptive;
+pub mod admission;
 pub mod baselines;
 pub mod carbon;
 pub mod cost;

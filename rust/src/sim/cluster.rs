@@ -145,6 +145,31 @@ impl NodeState {
         self.queries += member_offsets.len() as u64;
         start
     }
+
+    /// Continuous-batching support: re-book an in-flight episode on
+    /// `node_idx` after a step-boundary admission. The node's free
+    /// instant moves to the episode's new projected end, `extra_busy_s`
+    /// extends the busy total by the projection delta, and each newly
+    /// admitted member registers its finish instant *as projected at
+    /// admission* for `queue_len` accounting. Projected finishes are an
+    /// approximation: a later admission slows earlier members' steps, so
+    /// their heap entries can drain slightly early — episode outcomes
+    /// (latency, energy) are computed exactly by the engine and never
+    /// read from this heap.
+    pub fn extend_batch_on(
+        &mut self,
+        node_idx: usize,
+        new_free_at: f64,
+        extra_busy_s: f64,
+        member_finishes: &[f64],
+    ) {
+        self.node_free_at[node_idx] = new_free_at;
+        self.busy_s += extra_busy_s;
+        self.queries += member_finishes.len() as u64;
+        for &f in member_finishes {
+            self.inflight.push(Reverse(FinishAt(f)));
+        }
+    }
 }
 
 /// The cluster: all system states, indexable by `SystemId`.

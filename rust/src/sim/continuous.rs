@@ -1,0 +1,412 @@
+//! Iteration-level (continuous) batching episodes — the sim-side state
+//! behind `BatchingOptions::mode = Continuous` (Orca/vLLM-style
+//! scheduling, the regime the static batch model predates).
+//!
+//! An **episode** is one node's uninterrupted run of merged decoding:
+//! it is *founded* by an ordinary static dispatch (same formation, same
+//! joint-KV trim, same memoized [`BatchCost`]), and then — at **step
+//! boundaries** only — admits waiting queries into its live set and
+//! retires members at their own `n`. The decode timeline is priced by
+//! [`PerfModel::decode_span_time`]: weights stream once per step across
+//! the current live set, each segment chained onto the accumulator so
+//! segment splits never change the float result.
+//!
+//! Live-set invariants:
+//! - `live` is sorted by retire step (stable on ties), so `live[0]`
+//!   always carries the next boundary and every decode segment sums
+//!   members in the same order [`PerfModel::batch_cost`] uses for its
+//!   retirement suffixes — an episode that never admits anyone replays
+//!   the founding batch's closed-form cost **bit-identically** (tested
+//!   below, and finalized straight from `founding_cost` in the engine).
+//! - members are admitted at their full `(m, n)` footprint
+//!   ([`crate::sched::admission`]), so no admission can OOM the set
+//!   later in its own decode.
+//! - admissions happen only when `live` shrinks strictly below the
+//!   configured cap, and only at boundaries — never mid-step.
+//!
+//! Episode **energy** uses the same three-phase construction as
+//! [`PerfModel::batch_cost`] (overhead at 5% util, prefill, decode):
+//! phase energy is a duration-weighted sum, so merging each kind of
+//! phase into one is exact no matter how admissions interleaved them.
+
+use crate::hw::power::{Phase, PowerModel};
+use crate::hw::spec::SystemSpec;
+use crate::perf::energy::Attribution;
+use crate::perf::model::{BatchCost, PerfModel};
+use std::sync::Arc;
+
+/// One member currently decoding in an episode.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveMember {
+    /// trace index
+    pub qi: usize,
+    pub m: u32,
+    pub n: u32,
+    /// absolute decode step at which the member joined the live set
+    /// (0 for founding members)
+    pub joined: u64,
+    /// wall-clock instant service began: episode start for founders,
+    /// the admission boundary for step-boundary admissions
+    pub admit_s: f64,
+}
+
+impl LiveMember {
+    /// The absolute decode step at which this member retires.
+    pub fn retire_step(&self) -> u64 {
+        self.joined + self.n as u64
+    }
+}
+
+/// A member that has retired from the live set.
+#[derive(Clone, Copy, Debug)]
+pub struct RetiredMember {
+    pub qi: usize,
+    pub m: u32,
+    pub n: u32,
+    pub admit_s: f64,
+    /// finish offset from episode start: overhead + prefill + decode
+    /// seconds accumulated at the member's retirement boundary
+    pub finish_rel: f64,
+}
+
+/// One node's continuous-batching run: founded by a static dispatch,
+/// admitting at step boundaries, retiring members at their own `n`.
+/// Owned by the batched engines as `episodes[system][node]`.
+#[derive(Clone, Debug)]
+pub struct Episode {
+    /// node index within the system class
+    pub node: usize,
+    /// wall-clock instant the founding batch started
+    pub start_s: f64,
+    /// accumulated dispatch-overhead seconds: one per founding plus one
+    /// per admission *event* (a boundary admitting k members pays one
+    /// dispatch, exactly like a k-member batch)
+    pub overhead_s: f64,
+    /// accumulated prefill seconds across every member admitted so far
+    pub prefill_s: f64,
+    /// chained decode-span accumulator (seconds completed so far)
+    pub decode_s: f64,
+    /// decode steps completed so far
+    pub step: u64,
+    /// currently decoding members, sorted by retire step (stable)
+    pub live: Vec<LiveMember>,
+    /// retired members with their exact finish offsets
+    pub done: Vec<RetiredMember>,
+    /// whether any step-boundary admission has happened — when false the
+    /// episode finalizes straight from `founding_cost`, bit-identical to
+    /// the static dispatch it started as
+    pub admitted_any: bool,
+    /// founding members `(qi, m, n)` in selection order (the order
+    /// `founding_cost.member_finish_s` is indexed by)
+    pub founding: Vec<(usize, u32, u32)>,
+    /// the founding batch's memoized static cost
+    pub founding_cost: Arc<BatchCost>,
+    /// wall-clock instant of the next step-boundary event (the earliest
+    /// live retirement); refreshed after every boundary and admission
+    pub next_boundary_s: f64,
+    /// runtime currently booked on the node (founding runtime at
+    /// creation, the latest projection after an admission)
+    pub booked_runtime_s: f64,
+    /// energy currently booked on the node
+    pub booked_energy_j: f64,
+}
+
+impl Episode {
+    /// Found an episode from a static dispatch: `members` are
+    /// `(qi, m, n)` in selection order, `cost` their memoized batch
+    /// cost, `start_s` the batch start the node booked. The live set is
+    /// re-sorted by ascending `n` (stable), matching `batch_cost`'s
+    /// retirement order. The caller refreshes `next_boundary_s` before
+    /// relying on it.
+    pub fn found(
+        node: usize,
+        start_s: f64,
+        members: &[(usize, u32, u32)],
+        cost: Arc<BatchCost>,
+        booked_energy_j: f64,
+    ) -> Self {
+        let mut live: Vec<LiveMember> = members
+            .iter()
+            .map(|&(qi, m, n)| LiveMember { qi, m, n, joined: 0, admit_s: start_s })
+            .collect();
+        live.sort_by_key(|lm| lm.n);
+        Self {
+            node,
+            start_s,
+            overhead_s: cost.overhead_s,
+            prefill_s: cost.prefill_s,
+            decode_s: 0.0,
+            step: 0,
+            live,
+            done: Vec::new(),
+            admitted_any: false,
+            founding: members.to_vec(),
+            booked_runtime_s: cost.runtime_s,
+            founding_cost: cost,
+            next_boundary_s: f64::INFINITY,
+            booked_energy_j,
+        }
+    }
+
+    /// Advance decode through the next retirement boundary: extend the
+    /// chained span accumulator to `live[0]`'s retire step and move
+    /// every member retiring there from `live` to `done` (recording
+    /// exact finish offsets). Returns how many retired. The caller
+    /// admits/refreshes/finalizes afterwards. `pairs` is reusable
+    /// scratch for the `(m, joined)` live view.
+    pub fn advance_retirement(
+        &mut self,
+        perf: &PerfModel,
+        spec: &SystemSpec,
+        pairs: &mut Vec<(u32, u64)>,
+    ) -> usize {
+        let end = self.live[0].retire_step();
+        pairs.clear();
+        pairs.extend(self.live.iter().map(|lm| (lm.m, lm.joined)));
+        self.decode_s = perf.decode_span_time(spec, pairs, self.step, end, self.decode_s);
+        self.step = end;
+        let mut retired = 0;
+        while !self.live.is_empty() && self.live[0].retire_step() <= self.step {
+            let lm = self.live.remove(0);
+            self.done.push(RetiredMember {
+                qi: lm.qi,
+                m: lm.m,
+                n: lm.n,
+                admit_s: lm.admit_s,
+                finish_rel: self.overhead_s + self.prefill_s + self.decode_s,
+            });
+            retired += 1;
+        }
+        retired
+    }
+
+    /// Insert an admitted member, keeping `live` sorted by retire step
+    /// (stable: ties go after existing members) and marking the episode
+    /// as admission-bearing.
+    pub fn admit(&mut self, member: LiveMember) {
+        let pos = self.live.partition_point(|x| x.retire_step() <= member.retire_step());
+        self.live.insert(pos, member);
+        self.admitted_any = true;
+    }
+
+    /// Recompute `next_boundary_s` by previewing the next decode segment
+    /// — the same chained [`PerfModel::decode_span_time`] call the
+    /// matching [`Self::advance_retirement`] will make, so the boundary
+    /// instant and the advance land on identical floats. Requires a
+    /// non-empty live set.
+    pub fn refresh_next_boundary(
+        &mut self,
+        perf: &PerfModel,
+        spec: &SystemSpec,
+        pairs: &mut Vec<(u32, u64)>,
+    ) {
+        let end = self.live[0].retire_step();
+        pairs.clear();
+        pairs.extend(self.live.iter().map(|lm| (lm.m, lm.joined)));
+        let d = perf.decode_span_time(spec, pairs, self.step, end, self.decode_s);
+        self.next_boundary_s = self.start_s + self.overhead_s + self.prefill_s + d;
+    }
+
+    /// Project the remaining decode assuming no further admissions:
+    /// chained spans over the retirement segments of the current live
+    /// set — exactly the spans later [`Self::advance_retirement`] calls
+    /// will accumulate, so if no admission intervenes the projection is
+    /// bit-identical to what actually happens. Returns total decode
+    /// seconds at episode end; `finish_rel[i]` gets `live[i]`'s
+    /// projected finish offset (under the *current* overhead/prefill
+    /// totals).
+    pub fn project_decode(
+        &self,
+        perf: &PerfModel,
+        spec: &SystemSpec,
+        pairs: &mut Vec<(u32, u64)>,
+        finish_rel: &mut Vec<f64>,
+    ) -> f64 {
+        finish_rel.clear();
+        finish_rel.resize(self.live.len(), 0.0);
+        let mut acc = self.decode_s;
+        let mut step = self.step;
+        let mut i = 0;
+        while i < self.live.len() {
+            let end = self.live[i].retire_step();
+            pairs.clear();
+            pairs.extend(self.live[i..].iter().map(|lm| (lm.m, lm.joined)));
+            acc = perf.decode_span_time(spec, pairs, step, end, acc);
+            step = end;
+            while i < self.live.len() && self.live[i].retire_step() <= step {
+                finish_rel[i] = self.overhead_s + self.prefill_s + acc;
+                i += 1;
+            }
+        }
+        acc
+    }
+
+    /// Σ `(m + n)` over everyone ever in the episode (token-share
+    /// denominator for energy attribution), summed in retirement order
+    /// then live order — deterministic.
+    pub fn total_tokens(&self) -> f64 {
+        let done: f64 = self.done.iter().map(|d| (d.m + d.n) as f64).sum();
+        let live: f64 = self.live.iter().map(|l| (l.m + l.n) as f64).sum();
+        done + live
+    }
+}
+
+/// Episode energy through the same phase construction as
+/// [`PerfModel::batch_cost`]: one merged overhead phase at 5% util, one
+/// merged prefill phase, one merged decode phase. Phase energy is
+/// `power(util) × duration` summed over phases, so merging every phase
+/// of a kind is exact regardless of how admissions interleaved them —
+/// and an episode whose durations equal a static batch's has exactly
+/// that batch's energy (tested below).
+pub fn episode_energy(
+    spec: &SystemSpec,
+    overhead_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+    attribution: Attribution,
+) -> f64 {
+    let mut phases = Vec::with_capacity(3);
+    if overhead_s > 0.0 {
+        phases.push(Phase { dur_s: overhead_s, util: 0.05, host_active: true });
+    }
+    if prefill_s > 0.0 {
+        phases.push(Phase { dur_s: prefill_s, util: spec.util_prefill, host_active: true });
+    }
+    if decode_s > 0.0 {
+        phases.push(Phase { dur_s: decode_s, util: spec.util_decode, host_active: true });
+    }
+    let pm = PowerModel { phases };
+    match attribution {
+        Attribution::Total => pm.total_energy(spec),
+        Attribution::Net => pm.net_energy(spec),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::{system_catalog, SystemId};
+    use crate::model::llm_catalog;
+
+    fn perf() -> PerfModel {
+        PerfModel::new(llm_catalog()[1].clone())
+    }
+
+    fn founded(members: &[(usize, u32, u32)], perf: &PerfModel, spec: &SystemSpec) -> Episode {
+        let pairs: Vec<(u32, u32)> = members.iter().map(|&(_, m, n)| (m, n)).collect();
+        let cost = Arc::new(perf.batch_cost(spec, &pairs));
+        assert!(cost.is_feasible());
+        Episode::found(0, 0.0, members, cost, 0.0)
+    }
+
+    /// An episode that never admits anyone replays the founding batch's
+    /// closed-form decode and per-member finishes bit-for-bit: same
+    /// segment ends, same suffix order, same chained accumulator.
+    #[test]
+    fn admissionless_episode_replays_batch_cost_bitwise() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::SWING_A100.0];
+        let members = [(0usize, 32u32, 8u32), (1, 300, 64), (2, 64, 8), (3, 128, 200)];
+        let mut ep = founded(&members, &p, spec);
+        let cost = Arc::clone(&ep.founding_cost);
+        let mut pairs = Vec::new();
+        while !ep.live.is_empty() {
+            ep.refresh_next_boundary(&p, spec, &mut pairs);
+            let before = ep.next_boundary_s;
+            ep.advance_retirement(&p, spec, &mut pairs);
+            // the boundary preview and the advance land on the same floats
+            let at = ep.start_s + ep.overhead_s + ep.prefill_s + ep.decode_s;
+            assert_eq!(before.to_bits(), at.to_bits());
+        }
+        assert!(!ep.admitted_any);
+        assert_eq!(ep.decode_s.to_bits(), cost.decode_s.to_bits());
+        // every member's episode finish offset == batch_cost's
+        for d in &ep.done {
+            let k = members.iter().position(|&(qi, _, _)| qi == d.qi).unwrap();
+            assert_eq!(
+                d.finish_rel.to_bits(),
+                cost.member_finish_s[k].to_bits(),
+                "member {k} finish mismatch"
+            );
+        }
+        // and the merged-phase energy equals the batch's
+        let e = episode_energy(spec, ep.overhead_s, ep.prefill_s, ep.decode_s, Attribution::Total);
+        assert_eq!(e.to_bits(), cost.energy_j.to_bits());
+        let net = episode_energy(spec, ep.overhead_s, ep.prefill_s, ep.decode_s, Attribution::Net);
+        assert_eq!(net.to_bits(), cost.net_energy_j.to_bits());
+    }
+
+    /// `project_decode` is a faithful preview: advancing boundary by
+    /// boundary lands on exactly the projected totals and finishes when
+    /// no admission intervenes — the property the engine's node
+    /// re-booking depends on.
+    #[test]
+    fn projection_matches_actual_advance_bitwise() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::SWING_A100.0];
+        let members = [(0usize, 64u32, 16u32), (1, 200, 120), (2, 32, 48)];
+        let mut ep = founded(&members, &p, spec);
+        // stir in one admission so the replayed path is the general one
+        let mut pairs = Vec::new();
+        ep.refresh_next_boundary(&p, spec, &mut pairs);
+        ep.advance_retirement(&p, spec, &mut pairs);
+        ep.overhead_s += spec.overhead_s;
+        ep.prefill_s += p.prefill_time(spec, 80);
+        ep.admit(LiveMember { qi: 9, m: 80, n: 64, joined: ep.step, admit_s: ep.next_boundary_s });
+
+        let mut finish = Vec::new();
+        let projected_decode = ep.project_decode(&p, spec, &mut pairs, &mut finish);
+        let projected: Vec<(usize, u64)> =
+            ep.live.iter().zip(&finish).map(|(lm, f)| (lm.qi, f.to_bits())).collect();
+
+        while !ep.live.is_empty() {
+            ep.advance_retirement(&p, spec, &mut pairs);
+        }
+        assert_eq!(ep.decode_s.to_bits(), projected_decode.to_bits());
+        for (qi, fbits) in projected {
+            let d = ep.done.iter().find(|d| d.qi == qi).unwrap();
+            assert_eq!(d.finish_rel.to_bits(), fbits, "member {qi} projected finish drifted");
+        }
+    }
+
+    /// Admission keeps the live set sorted by retire step and joint
+    /// decoding of the merged set is cheaper than two separate tails —
+    /// the weight stream is shared.
+    #[test]
+    fn admitted_member_sorts_by_retire_step_and_merging_saves_decode() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::SWING_A100.0];
+        let members = [(0usize, 64u32, 100u32), (1, 64, 200)];
+        let mut ep = founded(&members, &p, spec);
+        ep.admit(LiveMember { qi: 2, m: 64, n: 100, joined: 50, admit_s: 1.0 });
+        let steps: Vec<u64> = ep.live.iter().map(LiveMember::retire_step).collect();
+        assert_eq!(steps, vec![100, 150, 200]);
+        assert!(ep.admitted_any);
+
+        // merged decode of the two overlapping members over [50, 100)
+        let mut pairs = Vec::new();
+        pairs.extend([(64u32, 0u64), (64, 50)]);
+        let merged = p.decode_span_time(spec, &pairs, 50, 100, 0.0);
+        let alone_a = p.decode_span_time(spec, &[(64, 0)], 50, 100, 0.0);
+        let alone_b = p.decode_span_time(spec, &[(64, 50)], 50, 100, 0.0);
+        assert!(
+            merged < alone_a + alone_b,
+            "merged {merged} should undercut separate {}",
+            alone_a + alone_b
+        );
+    }
+
+    #[test]
+    fn total_tokens_counts_done_and_live() {
+        let p = perf();
+        let spec = &system_catalog()[SystemId::SWING_A100.0];
+        let members = [(0usize, 10u32, 5u32), (1, 20, 8)];
+        let mut ep = founded(&members, &p, spec);
+        assert_eq!(ep.total_tokens(), 43.0);
+        let mut pairs = Vec::new();
+        ep.advance_retirement(&p, spec, &mut pairs);
+        assert_eq!(ep.total_tokens(), 43.0);
+        ep.admit(LiveMember { qi: 5, m: 7, n: 3, joined: ep.step, admit_s: 0.5 });
+        assert_eq!(ep.total_tokens(), 53.0);
+    }
+}

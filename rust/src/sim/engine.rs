@@ -57,17 +57,20 @@
 //! is noise next to the simulation itself.
 
 use super::cluster::{ClusterState, NodeState};
+use super::continuous::{episode_energy, Episode, LiveMember};
 use super::report::{BatchStats, QueryOutcome, SimReport, SystemTotals};
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
+use crate::sched::admission;
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::Query;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 /// Which virtual queue layout the batched engine simulates.
 ///
@@ -121,10 +124,44 @@ impl QueueModel {
     }
 }
 
+/// Static (batch-atomic) vs continuous (iteration-level) dispatch.
+///
+/// `Static` is the historical regime: a batch decodes at its longest
+/// member's pace and admits nobody until it retires. `Continuous` is
+/// the Orca/vLLM-style regime: a dispatch *founds* an episode whose
+/// members retire at their own `n`, and waiting queries join the live
+/// set at decode-step boundaries (FIFO prefix, joint-KV checked —
+/// [`crate::sched::admission`]). Continuous requires `max_batch > 1`:
+/// with `max_batch = 1` (or admission frozen) the engine runs the
+/// static path wholesale, which is what keeps the `max_batch = 1` ≡
+/// serial and frozen ≡ static bit-identity properties true by
+/// construction rather than by float coincidence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BatchMode {
+    /// batch = atomic dispatch unit (the paper-era model)
+    #[default]
+    Static,
+    /// decode step = scheduling unit; members join at step boundaries
+    Continuous {
+        /// live-set size cap; 0 means "use `max_batch`"
+        max_live: usize,
+    },
+}
+
+impl BatchMode {
+    /// Canonical spelling (used by reports and config files).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Static => "static",
+            BatchMode::Continuous { .. } => "continuous",
+        }
+    }
+}
+
 /// Dynamic-batching knobs for the simulator — the virtual-time analogue
 /// of the coordinator's `(max_batch, max_wait)` pair, plus the shared
-/// batch-formation policy ([`crate::sched::formation`]) and the virtual
-/// queue layout ([`QueueModel`]).
+/// batch-formation policy ([`crate::sched::formation`]), the virtual
+/// queue layout ([`QueueModel`]), and the dispatch mode ([`BatchMode`]).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BatchingOptions {
     /// dispatch as soon as this many queries are waiting (≥ 1)
@@ -137,16 +174,36 @@ pub struct BatchingOptions {
     pub formation: FormationPolicy,
     /// one virtual queue per node (default) or per system class
     pub queues: QueueModel,
+    /// static (batch-atomic) or continuous (iteration-level) dispatch
+    pub mode: BatchMode,
+    /// per-dispatch overhead in straggler-step units for the costed
+    /// `ShapeAware` window DP ([`crate::sched::formation`]): a split is
+    /// taken only when the drag it removes exceeds this. 0 (default)
+    /// keeps the historical drag-only objective bit-identically.
+    pub dispatch_cost_steps: u64,
+    /// bound on the batch-cost memo the engine builds its [`BatchTable`]
+    /// with (total cached entries across shards, clock-evicted); 0
+    /// (default) keeps the memo unbounded
+    pub memo_capacity: usize,
+    /// test hook: run continuous mode with admission frozen at dispatch
+    /// — behaviorally the static engine (property-pinned bit-identical)
+    #[doc(hidden)]
+    pub freeze_admission: bool,
 }
 
 impl BatchingOptions {
-    /// FIFO-prefix, per-worker-queue batching with the given knobs.
+    /// FIFO-prefix, per-worker-queue, static batching with the given
+    /// knobs.
     pub fn new(max_batch: usize, linger_s: f64) -> Self {
         Self {
             max_batch,
             linger_s,
             formation: FormationPolicy::FifoPrefix,
             queues: QueueModel::PerWorker,
+            mode: BatchMode::Static,
+            dispatch_cost_steps: 0,
+            memo_capacity: 0,
+            freeze_admission: false,
         }
     }
 
@@ -157,6 +214,34 @@ impl BatchingOptions {
 
     pub fn with_queues(mut self, queues: QueueModel) -> Self {
         self.queues = queues;
+        self
+    }
+
+    /// Iteration-level (continuous) batching with the given live-set
+    /// cap (0 = cap at `max_batch`).
+    pub fn with_continuous(mut self, max_live: usize) -> Self {
+        self.mode = BatchMode::Continuous { max_live };
+        self
+    }
+
+    /// Per-dispatch overhead (straggler-step units) folded into the
+    /// shape-aware formation objective.
+    pub fn with_dispatch_cost(mut self, steps: u64) -> Self {
+        self.dispatch_cost_steps = steps;
+        self
+    }
+
+    /// Bound the engine-built batch-cost memo (0 = unbounded).
+    pub fn with_memo_capacity(mut self, capacity: usize) -> Self {
+        self.memo_capacity = capacity;
+        self
+    }
+
+    /// Continuous mode with admission frozen at dispatch — the
+    /// degenerate case the property suite pins bit-identical to static.
+    #[doc(hidden)]
+    pub fn with_frozen_admission(mut self) -> Self {
+        self.freeze_admission = true;
         self
     }
 }
@@ -217,8 +302,9 @@ pub fn simulate(
     opts: &SimOptions,
 ) -> SimReport {
     let table = CostTable::build(queries, systems, energy);
-    if opts.batching.is_some() {
-        let batch_table = BatchTable::new(energy.clone(), systems);
+    if let Some(bopts) = &opts.batching {
+        let batch_table =
+            BatchTable::new(energy.clone(), systems).with_capacity(bopts.memo_capacity);
         simulate_batched_with_tables(queries, systems, policy, &table, &batch_table, opts)
     } else {
         simulate_with_table(queries, systems, policy, &table, opts)
@@ -552,6 +638,27 @@ struct BatchedSim<'a> {
     rerouted: u64,
     /// trace cursor: the next arrival not yet routed
     next: usize,
+    /// `Some(cap)` iff iteration-level admission is actually live:
+    /// `mode = Continuous`, admission not frozen, and `max_batch > 1`.
+    /// `None` runs the historical static path byte-for-byte — which is
+    /// what makes the frozen ≡ static and `max_batch = 1` ≡ serial
+    /// properties structural rather than numeric.
+    live_cap: Option<usize>,
+    /// `episodes[s][node]`: the in-flight continuous episode on that
+    /// node, if any (empty and unused when `live_cap` is `None`)
+    episodes: Vec<Vec<Option<Episode>>>,
+    /// scratch: `(m, joined)` pairs for decode-span pricing
+    ep_pairs: Vec<(u32, u64)>,
+    /// scratch: live `(m, n)` pairs for the admission check
+    ep_live_mn: Vec<(u32, u32)>,
+    /// scratch: candidate `(m, n)` pairs for the admission check
+    ep_cand: Vec<(u32, u32)>,
+    /// scratch: admission working set (live ++ admitted)
+    ep_admit: Vec<(u32, u32)>,
+    /// scratch: projected per-live-member relative finishes
+    ep_finish: Vec<f64>,
+    /// scratch: projected absolute finishes of newly admitted members
+    ep_new_finish: Vec<f64>,
 }
 
 impl<'a> BatchedSim<'a> {
@@ -601,6 +708,22 @@ impl<'a> BatchedSim<'a> {
             }
         };
 
+        // Iteration-level admission is live only when it can actually
+        // admit someone: continuous mode, not frozen, and batches wider
+        // than one. Every degenerate configuration takes the static
+        // code path wholesale.
+        let live_cap = match bopts.mode {
+            BatchMode::Continuous { max_live } if !bopts.freeze_admission && bopts.max_batch > 1 => {
+                Some(if max_live == 0 { bopts.max_batch } else { max_live })
+            }
+            _ => None,
+        };
+        let episodes = if live_cap.is_some() {
+            systems.iter().map(|spec| (0..spec.count.max(1)).map(|_| None).collect()).collect()
+        } else {
+            Vec::new()
+        };
+
         Self {
             queries,
             systems,
@@ -625,6 +748,14 @@ impl<'a> BatchedSim<'a> {
             batches: vec![BatchStats::default(); systems.len()],
             rerouted: 0,
             next: 0,
+            live_cap,
+            episodes,
+            ep_pairs: Vec::new(),
+            ep_live_mn: Vec::new(),
+            ep_cand: Vec::new(),
+            ep_admit: Vec::new(),
+            ep_finish: Vec::new(),
+            ep_new_finish: Vec::new(),
         }
     }
 
@@ -633,15 +764,56 @@ impl<'a> BatchedSim<'a> {
         self.queries.get(self.next).map_or(f64::INFINITY, |q| q.arrival_s)
     }
 
-    /// The instant queue `(s, w)`'s batch becomes due. The queue must be
-    /// non-empty. This is the *entire* coupling between a queue and the
-    /// rest of the simulation, and every input is queue-local: its own
-    /// pending members, plus its own node's availability (under
-    /// `PerClass` there is exactly one queue per class, so the
-    /// class-wide `earliest_free` moves only on that queue's own
-    /// dispatches) — which is what lets the event-heap engine re-derive
-    /// only the touched queue's event per step.
+    /// The instant queue `(s, w)` next needs service. The queue must be
+    /// non-empty. Static mode: the founding instant below. Continuous
+    /// mode: the earlier of the founding instant and the next decode
+    /// step boundary of an episode this queue feeds — waiters admitted
+    /// at a boundary leave the queue there, so a boundary earlier than
+    /// the founding instant *is* the queue's due event. Boundaries on
+    /// queues with nobody pending are advanced lazily instead
+    /// (`catch_up` at arrival routing, `drain_episodes` at finish), so
+    /// this stays strictly queue-local — the property that lets the
+    /// event-heap engine re-derive only the touched queue's event per
+    /// step.
     fn queue_ready(&self, s: usize, w: usize) -> f64 {
+        let founding = self.founding_ready(s, w);
+        match self.earliest_boundary(s, w) {
+            Some((b, _)) if b <= founding => b,
+            _ => founding,
+        }
+    }
+
+    /// The next decode-step boundary among episodes queue `(s, w)`
+    /// feeds: its own node's under `PerWorker`, the earliest across the
+    /// class under `PerClass` (ties to the lowest node, matching the
+    /// scan order). `None` when admission is off or no episode is live.
+    fn earliest_boundary(&self, s: usize, w: usize) -> Option<(f64, usize)> {
+        self.live_cap?;
+        match self.bopts.queues {
+            QueueModel::PerWorker => {
+                self.episodes[s][w].as_ref().map(|ep| (ep.next_boundary_s, w))
+            }
+            QueueModel::PerClass => {
+                let mut best: Option<(f64, usize)> = None;
+                for (node, slot) in self.episodes[s].iter().enumerate() {
+                    if let Some(ep) = slot {
+                        if best.map_or(true, |(t, _)| ep.next_boundary_s < t) {
+                            best = Some((ep.next_boundary_s, node));
+                        }
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// The instant queue `(s, w)`'s *founding* batch becomes due — the
+    /// historical static due time. The queue must be non-empty. Every
+    /// input is queue-local: its own pending members, plus its own
+    /// node's availability (under `PerClass` there is exactly one queue
+    /// per class, so the class-wide `earliest_free` moves only on that
+    /// queue's own dispatches).
+    fn founding_ready(&self, s: usize, w: usize) -> f64 {
         let wq = &self.queues[s][w];
         let front = *wq.pending.front().expect("queue_ready needs a non-empty queue");
         // the instant this queue's node could take a batch: its own
@@ -654,9 +826,13 @@ impl<'a> BatchedSim<'a> {
         if wq.pending.len() >= self.bopts.max_batch {
             // full: due the instant the filling member arrived
             // (membership additionally waits for a free node when the
-            // formation window needs a backlog — see `BatchedSim::new`)
+            // formation window needs a backlog — see `BatchedSim::new`).
+            // Continuous mode also gates on the node: while an episode
+            // runs there, waiters join it at step boundaries — which
+            // sort ahead of foundings at the same instant — so a
+            // founding only ever lands on an episode-free node.
             let filling = self.queries[wq.pending[self.bopts.max_batch - 1]].arrival_s;
-            if self.hand_off_gated {
+            if self.hand_off_gated || self.live_cap.is_some() {
                 free.max(filling)
             } else {
                 filling
@@ -667,10 +843,35 @@ impl<'a> BatchedSim<'a> {
         }
     }
 
-    /// Dispatch queue `(s, w)`'s due batch at instant `ready`:
-    /// membership into the queue's reusable buffers, joint-KV trim,
-    /// node occupation, per-member outcome attribution.
+    /// Service queue `(s, w)` at its due instant `ready`: in continuous
+    /// mode, when a decode-step boundary is what made the queue due,
+    /// advance that episode (retire + admit); otherwise found a new
+    /// batch. A boundary tied with the founding instant wins — admit
+    /// into the running episode before starting a new one, which is
+    /// also what keeps a sparse trace (episodes always retire fully
+    /// before the next founding) byte-identical to static.
     fn dispatch(&mut self, ready: f64, s: usize, w: usize) {
+        if self.live_cap.is_some() {
+            if let Some((b, node)) = self.earliest_boundary(s, w) {
+                if b <= self.founding_ready(s, w) {
+                    debug_assert_eq!(
+                        b.to_bits(),
+                        ready.to_bits(),
+                        "a boundary-due queue must be serviced at that boundary"
+                    );
+                    self.advance_boundary(s, w, node);
+                    return;
+                }
+            }
+        }
+        self.found_batch(ready, s, w);
+    }
+
+    /// Found queue `(s, w)`'s due batch at instant `ready`: membership
+    /// into the queue's reusable buffers, joint-KV trim, node
+    /// occupation, then per-member outcome attribution (static) or
+    /// episode founding (continuous).
+    fn found_batch(&mut self, ready: f64, s: usize, w: usize) {
         let Self {
             queries,
             systems,
@@ -682,23 +883,36 @@ impl<'a> BatchedSim<'a> {
             queues,
             outcomes,
             batches,
+            live_cap,
+            episodes,
+            ep_pairs,
             ..
         } = self;
         let (queries, systems, batch_table) = (*queries, *systems, *batch_table);
         let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let live_cap = *live_cap;
         let wq = &mut queues[s][w];
         // batch membership, into the queue's reusable buffers: the
         // drag-minimal group from the incrementally sorted window (the
         // same grouping the coordinator's take_batch_with computes —
         // see `SortedWindow`), or the FIFO prefix when the policy never
         // looks past one batch
+        // a founding batch may not exceed the live-set cap either — the
+        // episode it founds *is* the initial live set
+        let found_cap = live_cap.map_or(bopts.max_batch, |c| bopts.max_batch.min(c));
         if hand_off_gated {
             let front = *wq.pending.front().expect("due queue has a front waiter");
             let oldest = (queries[front].output_tokens, front as u64);
-            wq.window.select_drag_minimal(oldest, bopts.max_batch, &mut wq.scratch, &mut wq.sel);
+            wq.window.select_drag_minimal_with_cost(
+                oldest,
+                found_cap,
+                bopts.dispatch_cost_steps,
+                &mut wq.scratch,
+                &mut wq.sel,
+            );
         } else {
             wq.sel.clear();
-            wq.sel.extend(wq.pending.iter().take(bopts.max_batch).map(|&qi| qi as u64));
+            wq.sel.extend(wq.pending.iter().take(found_cap).map(|&qi| qi as u64));
         }
         wq.pairs.clear();
         wq.pairs.extend(wq.sel.iter().map(|&qi| {
@@ -739,20 +953,58 @@ impl<'a> BatchedSim<'a> {
         debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
         let e_batch = batch_table.energy_j(&cost);
         let node = cluster.get_mut(SystemId(s));
-        let start = match bopts.queues {
+        let (start, node_idx) = match bopts.queues {
             QueueModel::PerWorker => {
-                node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
+                (node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s), w)
+            }
+            QueueModel::PerClass if live_cap.is_some() => {
+                // continuous mode needs to know *which* node hosts the
+                // episode, so resolve `schedule_batch`'s earliest-free
+                // pick (ties to the lowest index) explicitly and book
+                // through the same per-node path — identical arithmetic
+                let idx = node
+                    .node_free_at
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .expect("system has at least one node");
+                (node.schedule_batch_on(idx, ready, cost.runtime_s, &cost.member_finish_s), idx)
             }
             QueueModel::PerClass => {
-                node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s)
+                (node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s), 0)
             }
         };
         node.energy_j += e_batch;
         batches[s].record(
             take,
             systems[s].dispatch_energy_j(),
-            FormationPolicy::straggler_steps(&wq.pairs),
+            // continuous episodes have no stragglers by construction:
+            // members retire at their own n
+            if live_cap.is_some() { 0 } else { FormationPolicy::straggler_steps(&wq.pairs) },
         );
+        if live_cap.is_some() {
+            // continuous: the batch founds an episode; outcomes are
+            // attributed when the episode retires its members. Founding
+            // is gated on node availability and boundaries sort ahead
+            // of foundings (see `founding_ready`), so the node's
+            // previous episode — if any — has always fully retired and
+            // finalized by now.
+            debug_assert!(
+                episodes[s][node_idx].is_none(),
+                "a founding lands only on an episode-free node"
+            );
+            let members: Vec<(usize, u32, u32)> = wq
+                .sel
+                .iter()
+                .zip(wq.pairs.iter())
+                .map(|(&qi, &(m, n))| (qi as usize, m, n))
+                .collect();
+            let mut ep = Episode::found(node_idx, start, &members, Arc::clone(&cost), e_batch);
+            ep.refresh_next_boundary(&batch_table.energy_model().perf, &systems[s], ep_pairs);
+            episodes[s][node_idx] = Some(ep);
+            return;
+        }
         let batch_tokens: f64 = wq.pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
         for (k, &qi) in wq.sel.iter().enumerate() {
             let qi = qi as usize;
@@ -775,34 +1027,181 @@ impl<'a> BatchedSim<'a> {
         }
     }
 
+    /// Advance the episode on `(s, node)` to its next decode-step
+    /// boundary: retire every member whose `n` is spent, then admit the
+    /// longest feasible FIFO prefix of queue `(s, w)`'s waiters into the
+    /// freed live slots (joint-KV checked against the surviving live
+    /// footprint — the shared [`crate::sched::admission`] policy). An
+    /// admission re-prices the episode's remaining decode through
+    /// [`PerfModel::decode_span_time`](crate::perf::model::PerfModel)
+    /// and re-books the node's occupation and energy by the exact
+    /// delta. When the last member retires, the episode finalizes into
+    /// per-member outcomes.
+    fn advance_boundary(&mut self, s: usize, w: usize, node: usize) {
+        let Self {
+            queries,
+            systems,
+            batch_table,
+            bopts,
+            window_cap,
+            hand_off_gated,
+            cluster,
+            queues,
+            outcomes,
+            batches,
+            live_cap,
+            episodes,
+            ep_pairs,
+            ep_live_mn,
+            ep_cand,
+            ep_admit,
+            ep_finish,
+            ep_new_finish,
+            ..
+        } = self;
+        let (queries, systems, batch_table) = (*queries, *systems, *batch_table);
+        let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let live_cap = live_cap.expect("advance_boundary requires continuous mode");
+        let perf = &batch_table.energy_model().perf;
+        let spec = &systems[s];
+        let ep = episodes[s][node].as_mut().expect("advance_boundary needs a live episode");
+        let t_boundary = ep.next_boundary_s;
+        let retired = ep.advance_retirement(perf, spec, ep_pairs);
+        debug_assert!(retired > 0, "a boundary event must retire at least one member");
+
+        // admit the longest feasible FIFO prefix into the freed slots
+        let wq = &mut queues[s][w];
+        let room = live_cap.saturating_sub(ep.live.len());
+        if room > 0 && !wq.pending.is_empty() {
+            ep_cand.clear();
+            ep_cand.extend(wq.pending.iter().take(room).map(|&qi| {
+                let q = &queries[qi];
+                (q.input_tokens, q.output_tokens)
+            }));
+            ep_live_mn.clear();
+            ep_live_mn.extend(ep.live.iter().map(|lm| (lm.m, lm.n)));
+            let k = admission::admit_prefix_with(perf, spec, ep_live_mn, ep_cand, room, ep_admit);
+            if k > 0 {
+                // each admission event pays one dispatch overhead and
+                // the newcomers' prefills, exactly as a founding would
+                ep.overhead_s += spec.overhead_s;
+                for _ in 0..k {
+                    let qi = wq.pending.pop_front().expect("admitted member must be pending");
+                    let q = &queries[qi];
+                    if hand_off_gated {
+                        wq.window.remove((q.output_tokens, qi as u64));
+                    }
+                    ep.prefill_s += perf.prefill_time(spec, q.input_tokens);
+                    ep.admit(LiveMember {
+                        qi,
+                        m: q.input_tokens,
+                        n: q.output_tokens,
+                        joined: ep.step,
+                        admit_s: t_boundary,
+                    });
+                }
+                while wq.window.len() < window_cap.min(wq.pending.len()) {
+                    let qi = wq.pending[wq.window.len()];
+                    wq.window.insert((queries[qi].output_tokens, qi as u64));
+                }
+                batches[s].record(k, spec.dispatch_energy_j(), 0);
+                // re-book the node: the episode's projected end and
+                // energy moved; `project_decode` chains the same
+                // decode-span segments later boundaries will price, so
+                // absent further admissions the booking is exact
+                let decode_total = ep.project_decode(perf, spec, ep_pairs, ep_finish);
+                let runtime = ep.overhead_s + ep.prefill_s + decode_total;
+                let energy = episode_energy(
+                    spec,
+                    ep.overhead_s,
+                    ep.prefill_s,
+                    decode_total,
+                    batch_table.attribution(),
+                );
+                ep_new_finish.clear();
+                for (lm, &f) in ep.live.iter().zip(ep_finish.iter()) {
+                    if lm.joined == ep.step {
+                        ep_new_finish.push(ep.start_s + f);
+                    }
+                }
+                let node_state = cluster.get_mut(SystemId(s));
+                node_state.extend_batch_on(
+                    node,
+                    ep.start_s + runtime,
+                    runtime - ep.booked_runtime_s,
+                    ep_new_finish,
+                );
+                node_state.energy_j += energy - ep.booked_energy_j;
+                ep.booked_runtime_s = runtime;
+                ep.booked_energy_j = energy;
+            }
+        }
+
+        if ep.live.is_empty() {
+            let ep = episodes[s][node].take().expect("episode was live above");
+            emit_episode_outcomes(batch_table, s, queries, outcomes, ep);
+        } else {
+            ep.refresh_next_boundary(perf, spec, ep_pairs);
+        }
+    }
+
+    /// Lazily advance every boundary of queue `(s, w)`'s episodes that
+    /// fell at or before `t`. Called when an arrival routes into the
+    /// queue: while the queue sat empty its boundaries carried no
+    /// admission decision (nobody was waiting), so advancing them on
+    /// demand is observationally identical to advancing them on time —
+    /// and an arrival exactly at a boundary misses it, mirroring the
+    /// arrival-at-deadline rule for founding batches.
+    fn catch_up(&mut self, s: usize, w: usize, t: f64) {
+        loop {
+            match self.earliest_boundary(s, w) {
+                Some((b, node)) if b <= t => {
+                    debug_assert!(self.queues[s][w].pending.is_empty());
+                    self.advance_boundary(s, w, node)
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Run every remaining episode to retirement. Called once at
+    /// `finish`: both engine loops exit only when every pending queue
+    /// is empty, so no admission decision remains and the boundaries
+    /// can be replayed without consulting the clock.
+    fn drain_episodes(&mut self) {
+        if self.live_cap.is_none() {
+            return;
+        }
+        for s in 0..self.systems.len() {
+            for node in 0..self.episodes[s].len() {
+                while self.episodes[s][node].is_some() {
+                    let w = match self.bopts.queues {
+                        QueueModel::PerWorker => node,
+                        QueueModel::PerClass => 0,
+                    };
+                    debug_assert!(
+                        self.queues[s][w].pending.is_empty(),
+                        "finish() drains only after every waiter was serviced"
+                    );
+                    self.advance_boundary(s, w, node);
+                }
+            }
+        }
+    }
+
     /// Route the next arrival: retire finished work, build the live
     /// queue view (pending members surface as extra length and serial
     /// depth), ask the policy, and enqueue on the assigned system's
     /// least-loaded worker queue. Returns the `(system, worker)` queue
     /// joined — the one queue whose due event changed.
     fn route_next_arrival(&mut self, policy: &mut dyn Policy) -> (usize, usize) {
-        let Self {
-            queries,
-            systems,
-            table,
-            opts,
-            bopts,
-            window_cap,
-            hand_off_gated,
-            cluster,
-            queues,
-            rerouted,
-            next,
-            ..
-        } = self;
-        let (queries, systems, table, opts) = (*queries, *systems, *table, *opts);
-        let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
-        let qi = *next;
+        let (queries, systems, table) = (self.queries, self.systems, self.table);
+        let qi = self.next;
         let q = &queries[qi];
-        cluster.advance_to(q.arrival_s);
-        let mut depths = cluster.queue_depths_at(q.arrival_s);
-        let mut lens = cluster.queue_lens();
-        for (s, sys_queues) in queues.iter().enumerate() {
+        self.cluster.advance_to(q.arrival_s);
+        let mut depths = self.cluster.queue_depths_at(q.arrival_s);
+        let mut lens = self.cluster.queue_lens();
+        for (s, sys_queues) in self.queues.iter().enumerate() {
             for wq in sys_queues {
                 if wq.pending.is_empty() {
                     continue;
@@ -812,15 +1211,25 @@ impl<'a> BatchedSim<'a> {
             }
         }
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
-        let sid = route_query(policy, q, qi, &view, table, systems, opts.strict, rerouted);
+        let sid =
+            route_query(policy, q, qi, &view, table, systems, self.opts.strict, &mut self.rerouted);
         let w = pick_worker_queue(
-            &cluster.nodes[sid.0],
-            queues[sid.0].iter().map(|wq| &wq.pending),
+            &self.cluster.nodes[sid.0],
+            self.queues[sid.0].iter().map(|wq| &wq.pending),
             q.arrival_s,
             table,
             sid.0,
         );
-        let wq = &mut queues[sid.0][w];
+        // replay any step boundaries this queue's episodes passed while
+        // nobody was waiting — they carried no admission decision, so
+        // advancing them now is identical to advancing them on time
+        // (and an arrival exactly at a boundary misses it, like the
+        // arrival-at-deadline rule for founding batches)
+        if self.live_cap.is_some() {
+            self.catch_up(sid.0, w, q.arrival_s);
+        }
+        let (window_cap, hand_off_gated) = (self.window_cap, self.hand_off_gated);
+        let wq = &mut self.queues[sid.0][w];
         // the new waiter enters the sorted window iff it lands within
         // the lookahead cap (deeper waiters enter as dispatches expose
         // them)
@@ -828,7 +1237,7 @@ impl<'a> BatchedSim<'a> {
             wq.window.insert((q.output_tokens, qi as u64));
         }
         wq.pending.push_back(qi);
-        *next = qi + 1;
+        self.next = qi + 1;
         (sid.0, w)
     }
 
@@ -837,7 +1246,8 @@ impl<'a> BatchedSim<'a> {
     /// serial engine uses, so `max_batch = 1` stays bit-identical even
     /// though dispatches interleave across systems in `ready` order —
     /// and assemble the report.
-    fn finish(self, policy: &mut dyn Policy) -> SimReport {
+    fn finish(mut self, policy: &mut dyn Policy) -> SimReport {
+        self.drain_episodes();
         let mut outcomes = self.outcomes;
         outcomes.sort_unstable_by_key(|&(qi, _)| qi);
         let serial_energy_j: f64 =
@@ -852,6 +1262,67 @@ impl<'a> BatchedSim<'a> {
             self.batches,
             serial_energy_j,
         )
+    }
+}
+
+/// Finalize a fully retired episode into per-member outcomes.
+///
+/// An episode nobody joined replays the static attribution verbatim
+/// from its founding [`crate::perf::model::BatchCost`] — byte-identical
+/// outcomes, which is what pins sparse continuous traces (episodes that
+/// always retire before the next founding) to the static engine
+/// bitwise. An episode with admissions attributes its booked
+/// merged-phase energy by token share over everyone it served; each
+/// member's clock runs from its own admission instant to its own
+/// retirement boundary.
+fn emit_episode_outcomes(
+    batch_table: &BatchTable,
+    s: usize,
+    queries: &[Query],
+    outcomes: &mut Vec<(usize, QueryOutcome)>,
+    ep: Episode,
+) {
+    debug_assert!(ep.live.is_empty(), "finalize only fully retired episodes");
+    if !ep.admitted_any {
+        let cost = &ep.founding_cost;
+        let e_batch = batch_table.energy_j(cost);
+        let batch_tokens: f64 = ep.founding.iter().map(|&(_, m, n)| (m + n) as f64).sum();
+        for (k, &(qi, m, n)) in ep.founding.iter().enumerate() {
+            let q = &queries[qi];
+            let share = (m + n) as f64 / batch_tokens;
+            outcomes.push((
+                qi,
+                QueryOutcome {
+                    query_id: q.id,
+                    system: s,
+                    arrival_s: q.arrival_s,
+                    start_s: ep.start_s,
+                    finish_s: ep.start_s + cost.member_finish_s[k],
+                    service_s: cost.member_finish_s[k],
+                    energy_j: e_batch * share,
+                },
+            ));
+        }
+        return;
+    }
+    let total = ep.booked_energy_j;
+    let tokens = ep.total_tokens();
+    for d in &ep.done {
+        let q = &queries[d.qi];
+        let share = (d.m + d.n) as f64 / tokens;
+        let finish = ep.start_s + d.finish_rel;
+        outcomes.push((
+            d.qi,
+            QueryOutcome {
+                query_id: q.id,
+                system: s,
+                arrival_s: q.arrival_s,
+                start_s: d.admit_s,
+                finish_s: finish,
+                service_s: finish - d.admit_s,
+                energy_j: total * share,
+            },
+        ));
     }
 }
 
@@ -1078,6 +1549,10 @@ pub fn simulate_batched_with_tables_reference(
         table.attribution,
         batch_table.attribution(),
         "cost and batch tables must use the same energy attribution"
+    );
+    assert!(
+        bopts.mode == BatchMode::Static && bopts.dispatch_cost_steps == 0,
+        "the reference engine implements only static, zero-dispatch-cost batching"
     );
 
     let mut cluster = ClusterState::new(systems);

@@ -3,6 +3,7 @@
 //! and the headline result.
 
 pub mod cluster;
+pub mod continuous;
 pub mod queueing;
 pub mod engine;
 pub mod report;
@@ -10,7 +11,8 @@ pub mod stream;
 
 pub use cluster::{ClusterState, NodeState};
 pub use engine::{
-    simulate, simulate_batched_with_tables, simulate_with_table, BatchingOptions, SimOptions,
+    simulate, simulate_batched_with_tables, simulate_with_table, BatchMode, BatchingOptions,
+    SimOptions,
 };
 pub use report::{BatchStats, SimReport, StreamingOutcomes};
 pub use stream::{simulate_stream, simulate_stream_with_sink, StreamReport};

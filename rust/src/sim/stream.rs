@@ -38,18 +38,21 @@
 //! test runs.
 
 use super::cluster::{ClusterState, NodeState};
-use super::engine::{BatchingOptions, DueEvent, QueueModel, SimOptions};
+use super::continuous::{episode_energy, Episode, LiveMember};
+use super::engine::{BatchMode, BatchingOptions, DueEvent, QueueModel, SimOptions};
 use super::report::{BatchStats, QueryOutcome, StreamingOutcomes, SystemTotals};
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, RowCache};
 use crate::perf::energy::EnergyModel;
+use crate::sched::admission;
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::source::QuerySource;
 use crate::workload::Query;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
 
 /// What a streaming run reports: everything [`crate::sim::SimReport`]
 /// derives without its outcome vector, computed from running
@@ -151,7 +154,8 @@ pub fn simulate_stream_with_sink(
     match opts.batching {
         None => stream_serial(source, limit, systems, policy, &mut cache, opts, sink),
         Some(bopts) => {
-            let batch_table = BatchTable::new(energy.clone(), systems);
+            let batch_table =
+                BatchTable::new(energy.clone(), systems).with_capacity(bopts.memo_capacity);
             StreamSim::new(systems, batch_table, opts, bopts)
                 .run(source, limit, policy, &mut cache, sink)
         }
@@ -397,6 +401,23 @@ struct StreamSim<'a> {
     hand_off_gated: bool,
     queues: Vec<Vec<StreamWorkerQueue>>,
     totals: StreamTotals,
+    /// `Some(cap)` iff iteration-level admission is live — same
+    /// derivation as `BatchedSim::live_cap`
+    live_cap: Option<usize>,
+    /// `episodes[s][node]`: the in-flight continuous episode there
+    episodes: Vec<Vec<Option<Episode>>>,
+    /// members resident in episodes, keyed by trace sequence number —
+    /// everything needed to attribute their outcomes at retirement
+    /// (episodes index members by `seq`, the streaming stand-in for the
+    /// materialized engine's trace index)
+    ep_resident: HashMap<u64, PendingQuery>,
+    /// scratch buffers mirroring `BatchedSim`'s
+    ep_pairs: Vec<(u32, u64)>,
+    ep_live_mn: Vec<(u32, u32)>,
+    ep_cand: Vec<(u32, u32)>,
+    ep_admit: Vec<(u32, u32)>,
+    ep_finish: Vec<f64>,
+    ep_new_finish: Vec<f64>,
 }
 
 impl<'a> StreamSim<'a> {
@@ -422,6 +443,19 @@ impl<'a> StreamSim<'a> {
                 0
             }
         };
+        // same derivation as `BatchedSim::new`: every degenerate
+        // configuration takes the static code path wholesale
+        let live_cap = match bopts.mode {
+            BatchMode::Continuous { max_live } if !bopts.freeze_admission && bopts.max_batch > 1 => {
+                Some(if max_live == 0 { bopts.max_batch } else { max_live })
+            }
+            _ => None,
+        };
+        let episodes = if live_cap.is_some() {
+            systems.iter().map(|spec| (0..spec.count.max(1)).map(|_| None).collect()).collect()
+        } else {
+            Vec::new()
+        };
         Self {
             systems,
             batch_table,
@@ -440,13 +474,54 @@ impl<'a> StreamSim<'a> {
                 })
                 .collect(),
             totals: StreamTotals::new(systems),
+            live_cap,
+            episodes,
+            ep_resident: HashMap::new(),
+            ep_pairs: Vec::new(),
+            ep_live_mn: Vec::new(),
+            ep_cand: Vec::new(),
+            ep_admit: Vec::new(),
+            ep_finish: Vec::new(),
+            ep_new_finish: Vec::new(),
         }
     }
 
-    /// The instant queue `(s, w)`'s batch becomes due — identical
-    /// expressions to `BatchedSim::queue_ready`, with arrivals read off
-    /// the owned waiters instead of the trace.
+    /// The instant queue `(s, w)` next needs service — identical
+    /// expressions to `BatchedSim::queue_ready`: the earlier of the
+    /// founding instant and (in continuous mode) the next step boundary
+    /// of an episode this queue feeds.
     fn queue_ready(&self, s: usize, w: usize) -> f64 {
+        let founding = self.founding_ready(s, w);
+        match self.earliest_boundary(s, w) {
+            Some((b, _)) if b <= founding => b,
+            _ => founding,
+        }
+    }
+
+    /// Streaming twin of `BatchedSim::earliest_boundary`.
+    fn earliest_boundary(&self, s: usize, w: usize) -> Option<(f64, usize)> {
+        self.live_cap?;
+        match self.bopts.queues {
+            QueueModel::PerWorker => {
+                self.episodes[s][w].as_ref().map(|ep| (ep.next_boundary_s, w))
+            }
+            QueueModel::PerClass => {
+                let mut best: Option<(f64, usize)> = None;
+                for (node, slot) in self.episodes[s].iter().enumerate() {
+                    if let Some(ep) = slot {
+                        if best.map_or(true, |(t, _)| ep.next_boundary_s < t) {
+                            best = Some((ep.next_boundary_s, node));
+                        }
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Streaming twin of `BatchedSim::founding_ready`, with arrivals
+    /// read off the owned waiters instead of the trace.
+    fn founding_ready(&self, s: usize, w: usize) -> f64 {
         let wq = &self.queues[s][w];
         let front = wq.pending.front().expect("queue_ready needs a non-empty queue");
         let free = match self.bopts.queues {
@@ -455,7 +530,7 @@ impl<'a> StreamSim<'a> {
         };
         if wq.pending.len() >= self.bopts.max_batch {
             let filling = wq.pending[self.bopts.max_batch - 1].arrival_s;
-            if self.hand_off_gated {
+            if self.hand_off_gated || self.live_cap.is_some() {
                 free.max(filling)
             } else {
                 filling
@@ -488,11 +563,39 @@ impl<'a> StreamSim<'a> {
         }));
     }
 
-    /// Dispatch queue `(s, w)`'s due batch at instant `ready` —
-    /// `BatchedSim::dispatch` step-for-step, with member data copied
+    /// Service queue `(s, w)` at its due instant `ready` —
+    /// `BatchedSim::dispatch` step-for-step: advance the due step
+    /// boundary in continuous mode (boundaries win ties), otherwise
+    /// found a batch.
+    fn dispatch(
+        &mut self,
+        ready: f64,
+        s: usize,
+        w: usize,
+        cache: &RowCache,
+        sink: &mut dyn FnMut(u64, &QueryOutcome),
+    ) {
+        if self.live_cap.is_some() {
+            if let Some((b, node)) = self.earliest_boundary(s, w) {
+                if b <= self.founding_ready(s, w) {
+                    debug_assert_eq!(
+                        b.to_bits(),
+                        ready.to_bits(),
+                        "a boundary-due queue must be serviced at that boundary"
+                    );
+                    self.advance_boundary(s, w, node, cache, sink);
+                    return;
+                }
+            }
+        }
+        self.found_batch(ready, s, w, cache, sink);
+    }
+
+    /// Found queue `(s, w)`'s due batch at instant `ready` —
+    /// `BatchedSim::found_batch` step-for-step, with member data copied
     /// into the queue's `members` buffer before removal so outcomes can
     /// be attributed after the waiters leave.
-    fn dispatch(
+    fn found_batch(
         &mut self,
         ready: f64,
         s: usize,
@@ -508,14 +611,26 @@ impl<'a> StreamSim<'a> {
             hand_off_gated,
             queues,
             totals,
+            live_cap,
+            episodes,
+            ep_resident,
+            ep_pairs,
             ..
         } = self;
         let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let live_cap = *live_cap;
         let wq = &mut queues[s][w];
+        let found_cap = live_cap.map_or(bopts.max_batch, |c| bopts.max_batch.min(c));
         if hand_off_gated {
             let front = wq.pending.front().expect("due queue has a front waiter");
             let oldest = (front.n, front.seq);
-            wq.window.select_drag_minimal(oldest, bopts.max_batch, &mut wq.scratch, &mut wq.sel);
+            wq.window.select_drag_minimal_with_cost(
+                oldest,
+                found_cap,
+                bopts.dispatch_cost_steps,
+                &mut wq.scratch,
+                &mut wq.sel,
+            );
             wq.members.clear();
             for &sq in wq.sel.iter() {
                 let pos = wq
@@ -526,7 +641,7 @@ impl<'a> StreamSim<'a> {
             }
         } else {
             wq.members.clear();
-            wq.members.extend(wq.pending.iter().take(bopts.max_batch).copied());
+            wq.members.extend(wq.pending.iter().take(found_cap).copied());
         }
         wq.pairs.clear();
         wq.pairs.extend(wq.members.iter().map(|p| (p.m, p.n)));
@@ -561,20 +676,53 @@ impl<'a> StreamSim<'a> {
         debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
         let e_batch = batch_table.energy_j(&cost);
         let node = totals.cluster.get_mut(SystemId(s));
-        let start = match bopts.queues {
+        let (start, node_idx) = match bopts.queues {
             QueueModel::PerWorker => {
-                node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s)
+                (node.schedule_batch_on(w, ready, cost.runtime_s, &cost.member_finish_s), w)
+            }
+            QueueModel::PerClass if live_cap.is_some() => {
+                // resolve `schedule_batch`'s earliest-free pick (ties to
+                // the lowest index) explicitly — identical arithmetic,
+                // but continuous mode needs the hosting node's index
+                let idx = node
+                    .node_free_at
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .expect("system has at least one node");
+                (node.schedule_batch_on(idx, ready, cost.runtime_s, &cost.member_finish_s), idx)
             }
             QueueModel::PerClass => {
-                node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s)
+                (node.schedule_batch(ready, cost.runtime_s, &cost.member_finish_s), 0)
             }
         };
         node.energy_j += e_batch;
         totals.batches[s].record(
             take,
             systems[s].dispatch_energy_j(),
-            FormationPolicy::straggler_steps(&wq.pairs),
+            if live_cap.is_some() { 0 } else { FormationPolicy::straggler_steps(&wq.pairs) },
         );
+        if live_cap.is_some() {
+            // continuous: found an episode; outcomes are attributed at
+            // retirement, so park the member data in `ep_resident`
+            debug_assert!(
+                episodes[s][node_idx].is_none(),
+                "a founding lands only on an episode-free node"
+            );
+            let members: Vec<(usize, u32, u32)> = wq
+                .members
+                .iter()
+                .map(|p| {
+                    ep_resident.insert(p.seq, *p);
+                    (p.seq as usize, p.m, p.n)
+                })
+                .collect();
+            let mut ep = Episode::found(node_idx, start, &members, Arc::clone(&cost), e_batch);
+            ep.refresh_next_boundary(&batch_table.energy_model().perf, &systems[s], ep_pairs);
+            episodes[s][node_idx] = Some(ep);
+            return;
+        }
         let batch_tokens: f64 = wq.pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
         for (k, p) in wq.members.iter().enumerate() {
             // attribute batch energy by token share (a singleton gets
@@ -594,6 +742,156 @@ impl<'a> StreamSim<'a> {
         }
     }
 
+    /// Streaming twin of `BatchedSim::advance_boundary`: retire members
+    /// whose `n` is spent, admit the longest feasible FIFO prefix of the
+    /// queue's waiters, re-book the node by the projection delta, and
+    /// finalize the episode when its last member retires.
+    fn advance_boundary(
+        &mut self,
+        s: usize,
+        w: usize,
+        node: usize,
+        cache: &RowCache,
+        sink: &mut dyn FnMut(u64, &QueryOutcome),
+    ) {
+        let Self {
+            systems,
+            batch_table,
+            bopts,
+            window_cap,
+            hand_off_gated,
+            queues,
+            totals,
+            live_cap,
+            episodes,
+            ep_resident,
+            ep_pairs,
+            ep_live_mn,
+            ep_cand,
+            ep_admit,
+            ep_finish,
+            ep_new_finish,
+            ..
+        } = self;
+        let (bopts, window_cap, hand_off_gated) = (*bopts, *window_cap, *hand_off_gated);
+        let live_cap = live_cap.expect("advance_boundary requires continuous mode");
+        let perf = &batch_table.energy_model().perf;
+        let spec = &systems[s];
+        let ep = episodes[s][node].as_mut().expect("advance_boundary needs a live episode");
+        let t_boundary = ep.next_boundary_s;
+        let retired = ep.advance_retirement(perf, spec, ep_pairs);
+        debug_assert!(retired > 0, "a boundary event must retire at least one member");
+
+        let wq = &mut queues[s][w];
+        let room = live_cap.saturating_sub(ep.live.len());
+        if room > 0 && !wq.pending.is_empty() {
+            ep_cand.clear();
+            ep_cand.extend(wq.pending.iter().take(room).map(|p| (p.m, p.n)));
+            ep_live_mn.clear();
+            ep_live_mn.extend(ep.live.iter().map(|lm| (lm.m, lm.n)));
+            let k = admission::admit_prefix_with(perf, spec, ep_live_mn, ep_cand, room, ep_admit);
+            if k > 0 {
+                ep.overhead_s += spec.overhead_s;
+                for _ in 0..k {
+                    let p = wq.pending.pop_front().expect("admitted member must be pending");
+                    if hand_off_gated {
+                        wq.window.remove((p.n, p.seq));
+                    }
+                    ep.prefill_s += perf.prefill_time(spec, p.m);
+                    ep.admit(LiveMember {
+                        qi: p.seq as usize,
+                        m: p.m,
+                        n: p.n,
+                        joined: ep.step,
+                        admit_s: t_boundary,
+                    });
+                    ep_resident.insert(p.seq, p);
+                }
+                while wq.window.len() < window_cap.min(wq.pending.len()) {
+                    let p = wq.pending[wq.window.len()];
+                    wq.window.insert((p.n, p.seq));
+                }
+                totals.batches[s].record(k, spec.dispatch_energy_j(), 0);
+                let decode_total = ep.project_decode(perf, spec, ep_pairs, ep_finish);
+                let runtime = ep.overhead_s + ep.prefill_s + decode_total;
+                let energy = episode_energy(
+                    spec,
+                    ep.overhead_s,
+                    ep.prefill_s,
+                    decode_total,
+                    batch_table.attribution(),
+                );
+                ep_new_finish.clear();
+                for (lm, &f) in ep.live.iter().zip(ep_finish.iter()) {
+                    if lm.joined == ep.step {
+                        ep_new_finish.push(ep.start_s + f);
+                    }
+                }
+                let node_state = totals.cluster.get_mut(SystemId(s));
+                node_state.extend_batch_on(
+                    node,
+                    ep.start_s + runtime,
+                    runtime - ep.booked_runtime_s,
+                    ep_new_finish,
+                );
+                node_state.energy_j += energy - ep.booked_energy_j;
+                ep.booked_runtime_s = runtime;
+                ep.booked_energy_j = energy;
+            }
+        }
+
+        if ep.live.is_empty() {
+            let ep = episodes[s][node].take().expect("episode was live above");
+            emit_stream_episode(batch_table, s, totals, ep_resident, cache, sink, ep);
+        } else {
+            ep.refresh_next_boundary(perf, spec, ep_pairs);
+        }
+    }
+
+    /// Streaming twin of `BatchedSim::catch_up`: replay boundaries that
+    /// fell at or before `t` while queue `(s, w)` sat empty.
+    fn catch_up(
+        &mut self,
+        s: usize,
+        w: usize,
+        t: f64,
+        cache: &RowCache,
+        sink: &mut dyn FnMut(u64, &QueryOutcome),
+    ) {
+        loop {
+            match self.earliest_boundary(s, w) {
+                Some((b, node)) if b <= t => {
+                    debug_assert!(self.queues[s][w].pending.is_empty());
+                    self.advance_boundary(s, w, node, cache, sink)
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// Streaming twin of `BatchedSim::drain_episodes`, run once before
+    /// the report is assembled.
+    fn drain_episodes(&mut self, cache: &RowCache, sink: &mut dyn FnMut(u64, &QueryOutcome)) {
+        if self.live_cap.is_none() {
+            return;
+        }
+        for s in 0..self.systems.len() {
+            for node in 0..self.episodes[s].len() {
+                while self.episodes[s][node].is_some() {
+                    let w = match self.bopts.queues {
+                        QueueModel::PerWorker => node,
+                        QueueModel::PerClass => 0,
+                    };
+                    debug_assert!(
+                        self.queues[s][w].pending.is_empty(),
+                        "drain only runs after every waiter was serviced"
+                    );
+                    self.advance_boundary(s, w, node, cache, sink);
+                }
+            }
+        }
+    }
+
     /// Route one arrival — `BatchedSim::route_next_arrival` over owned
     /// waiters. Returns the `(system, worker)` queue joined.
     fn route_arrival(
@@ -602,6 +900,7 @@ impl<'a> StreamSim<'a> {
         seq: u64,
         q: &Query,
         cache: &mut RowCache,
+        sink: &mut dyn FnMut(u64, &QueryOutcome),
     ) -> (usize, usize) {
         let systems = self.systems;
         let strict = self.opts.strict;
@@ -629,6 +928,11 @@ impl<'a> StreamSim<'a> {
             cache,
             sid.0,
         );
+        // replay step boundaries this queue's episodes passed while it
+        // sat empty — see `BatchedSim::route_next_arrival`
+        if self.live_cap.is_some() {
+            self.catch_up(sid.0, w, q.arrival_s, cache, sink);
+        }
         let wq = &mut self.queues[sid.0][w];
         // the new waiter enters the sorted window iff it lands within
         // the lookahead cap (deeper waiters enter as dispatches expose
@@ -707,12 +1011,74 @@ impl<'a> StreamSim<'a> {
 
             // no batch due before the next arrival: route it
             let Some((seq, q)) = upcoming.take() else { break };
-            let (s, w) = self.route_arrival(policy, seq, &q, cache);
+            let (s, w) = self.route_arrival(policy, seq, &q, cache, sink);
             self.refresh(&mut stamps, &mut heap, s, w);
         }
 
+        // run any still-live episodes to retirement (every queue is
+        // empty now, so their boundaries carry no admission decisions)
+        self.drain_episodes(cache, sink);
+        debug_assert!(self.ep_resident.is_empty(), "every episode member must be attributed");
+
         let Self { opts, totals, .. } = self;
         Ok(totals.finish(policy.name(), opts, cache.n_unique_rows()))
+    }
+}
+
+/// Streaming twin of `engine::emit_episode_outcomes`: finalize a fully
+/// retired episode, reclaiming each member's parked [`PendingQuery`]
+/// for outcome attribution. Admissionless episodes replay the static
+/// attribution verbatim from their founding cost (bit-identical to a
+/// static dispatch); episodes with admissions attribute the booked
+/// merged-phase energy by token share.
+fn emit_stream_episode(
+    batch_table: &BatchTable,
+    s: usize,
+    totals: &mut StreamTotals,
+    ep_resident: &mut HashMap<u64, PendingQuery>,
+    cache: &RowCache,
+    sink: &mut dyn FnMut(u64, &QueryOutcome),
+    ep: Episode,
+) {
+    debug_assert!(ep.live.is_empty(), "finalize only fully retired episodes");
+    if !ep.admitted_any {
+        let cost = &ep.founding_cost;
+        let e_batch = batch_table.energy_j(cost);
+        let batch_tokens: f64 = ep.founding.iter().map(|&(_, m, n)| (m + n) as f64).sum();
+        for (k, &(seq, m, n)) in ep.founding.iter().enumerate() {
+            let p = ep_resident.remove(&(seq as u64)).expect("episode member is resident");
+            let share = (m + n) as f64 / batch_tokens;
+            let o = QueryOutcome {
+                query_id: p.id,
+                system: s,
+                arrival_s: p.arrival_s,
+                start_s: ep.start_s,
+                finish_s: ep.start_s + cost.member_finish_s[k],
+                service_s: cost.member_finish_s[k],
+                energy_j: e_batch * share,
+            };
+            totals.acc.push(p.seq, &o, cache.energy_j(p.row, s));
+            sink(p.seq, &o);
+        }
+        return;
+    }
+    let total = ep.booked_energy_j;
+    let tokens = ep.total_tokens();
+    for d in &ep.done {
+        let p = ep_resident.remove(&(d.qi as u64)).expect("episode member is resident");
+        let share = (d.m + d.n) as f64 / tokens;
+        let finish = ep.start_s + d.finish_rel;
+        let o = QueryOutcome {
+            query_id: p.id,
+            system: s,
+            arrival_s: p.arrival_s,
+            start_s: d.admit_s,
+            finish_s: finish,
+            service_s: finish - d.admit_s,
+            energy_j: total * share,
+        };
+        totals.acc.push(p.seq, &o, cache.energy_j(p.row, s));
+        sink(p.seq, &o);
     }
 }
 
