@@ -20,16 +20,30 @@
 //! [`SystemQueue::take_batch`] returns an empty vec only when the queue
 //! is *both* closing and empty: residual requests enqueued before
 //! shutdown are always handed out, never dropped.
+//!
+//! ## Lock order
+//!
+//! `inner` strictly before `take_scratch`, never the reverse. The order
+//! is machine-checked three ways: [`SystemQueue::lock_scratch`] demands
+//! a live `inner` guard at compile time, a debug assertion in
+//! [`SystemQueue::lock_inner`] catches any future inverted acquisition
+//! at runtime, and the model-check suite (`rust/tests/model_check.rs`)
+//! explores the interleavings exhaustively — all synchronization here
+//! goes through the [`crate::util::check`] shims (plain `std::sync`
+//! re-exports in normal builds), including the two linger-deadline
+//! clock reads, which use `check::time::now` so the straggler wait runs
+//! on the checker's virtual clock under `--features model-check`.
 
 use super::request::Request;
 use crate::hw::spec::SystemSpec;
 use crate::perf::model::PerfModel;
 use crate::sched::admission;
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
+use crate::util::check::atomic::{AtomicBool, Ordering};
+use crate::util::check::{time as vtime, Condvar, Mutex, MutexGuard};
+use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Why an enqueue was refused.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,6 +63,38 @@ struct TakeScratch {
     window: SortedWindow,
     scratch: FormationScratch,
     sel: Vec<u64>,
+}
+
+thread_local! {
+    /// How many `take_scratch` guards this thread currently holds; the
+    /// debug assertion in [`SystemQueue::lock_inner`] uses it to reject
+    /// an inverted `take_scratch` → `inner` acquisition at runtime.
+    static SCRATCH_HELD: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Guard for [`SystemQueue::lock_scratch`]; maintains the thread-local
+/// lock-order counter.
+struct ScratchGuard<'a> {
+    guard: MutexGuard<'a, TakeScratch>,
+}
+
+impl std::ops::Deref for ScratchGuard<'_> {
+    type Target = TakeScratch;
+    fn deref(&self) -> &TakeScratch {
+        &self.guard
+    }
+}
+
+impl std::ops::DerefMut for ScratchGuard<'_> {
+    fn deref_mut(&mut self) -> &mut TakeScratch {
+        &mut self.guard
+    }
+}
+
+impl Drop for ScratchGuard<'_> {
+    fn drop(&mut self) {
+        SCRATCH_HELD.with(|c| c.set(c.get() - 1));
+    }
 }
 
 pub struct SystemQueue {
@@ -73,13 +119,37 @@ impl SystemQueue {
         }
     }
 
+    /// Acquire the queue mutex. Debug-asserts the documented lock
+    /// order: `inner` is never acquired while `take_scratch` is held.
+    fn lock_inner(&self) -> MutexGuard<'_, VecDeque<Request>> {
+        debug_assert_eq!(
+            SCRATCH_HELD.with(|c| c.get()),
+            0,
+            "lock-order violation: inner must be acquired before take_scratch"
+        );
+        self.inner.lock().unwrap()
+    }
+
+    /// Acquire the formation scratch. Demanding a live `inner` guard
+    /// makes the documented `inner` → `take_scratch` order a
+    /// compile-time fact at every call site; the returned guard also
+    /// bumps the thread-local counter [`lock_inner`](Self::lock_inner)
+    /// debug-asserts against.
+    fn lock_scratch<'a>(
+        &'a self,
+        _inner: &MutexGuard<'_, VecDeque<Request>>,
+    ) -> ScratchGuard<'a> {
+        SCRATCH_HELD.with(|c| c.set(c.get() + 1));
+        ScratchGuard { guard: self.take_scratch.lock().unwrap() }
+    }
+
     /// Admission-controlled enqueue.
     pub fn push(&self, req: Request) -> Result<(), (Request, Rejected)> {
         // fast-path reject without the lock…
         if self.closing.load(Ordering::Acquire) {
             return Err((req, Rejected::ShuttingDown));
         }
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.lock_inner();
         // …then re-check under it: `close()` flips the flag while holding
         // this mutex, so an accepted push is ordered strictly before the
         // close and can never be stranded behind exiting workers
@@ -96,7 +166,7 @@ impl SystemQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.lock_inner().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -137,7 +207,7 @@ impl SystemQueue {
         max_batch: usize,
         max_wait: Duration,
     ) -> Vec<Request> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.lock_inner();
         loop {
             // phase 1: wait for the first request. The emptiness check
             // comes *before* the closing check: at shutdown the residual
@@ -159,9 +229,9 @@ impl SystemQueue {
             // phase 2: linger for batchmates until the batch is full, the
             // deadline passes, or the queue starts closing (shutdown
             // drains what is queued and only skips the straggler wait).
-            let deadline = Instant::now() + max_wait;
+            let deadline = vtime::now() + max_wait;
             while q.len() < max_batch {
-                let now = Instant::now();
+                let now = vtime::now();
                 if now >= deadline || self.closing.load(Ordering::Acquire) {
                     break;
                 }
@@ -189,7 +259,7 @@ impl SystemQueue {
                     // `select_drag_minimal` returns exactly `select`'s
                     // choice (pinned by the drain test below).
                     let window = formation.candidate_window(max_batch).min(q.len());
-                    let mut ts = self.take_scratch.lock().unwrap();
+                    let mut ts = self.lock_scratch(&q);
                     let TakeScratch { window: win, scratch, sel } = &mut *ts;
                     win.clear();
                     for (pos, r) in q.iter().take(window).enumerate() {
@@ -233,7 +303,7 @@ impl SystemQueue {
         if max_admit == 0 {
             return Vec::new();
         }
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.lock_inner();
         if q.is_empty() {
             return Vec::new();
         }
@@ -247,7 +317,7 @@ impl SystemQueue {
     /// under the queue mutex so it totally orders against every
     /// [`Self::push`] — see the module docs for the drain guarantee.
     pub fn close(&self) {
-        let _guard = self.inner.lock().unwrap();
+        let _guard = self.lock_inner();
         self.closing.store(true, Ordering::Release);
         drop(_guard);
         self.cv.notify_all();
@@ -263,6 +333,7 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
     use std::sync::Arc;
+    use std::time::Instant;
 
     fn req(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
         let (tx, rx) = mpsc::channel();
@@ -431,14 +502,20 @@ mod tests {
     }
 
     /// Satellite regression, loom-style: race {push} × {close} × {worker}
-    /// across many interleavings. Invariant: a push racing close() either
-    /// returns ShuttingDown or its request is drained by the worker —
-    /// never accepted-then-lost. (The seed checked `closing` only before
-    /// taking the lock, so a push could slip in after the worker had
-    /// drained-and-exited.)
+    /// across OS-scheduled interleavings. Invariant: a push racing
+    /// close() either returns ShuttingDown or its request is drained by
+    /// the worker — never accepted-then-lost. (The seed checked
+    /// `closing` only before taking the lock, so a push could slip in
+    /// after the worker had drained-and-exited.)
+    ///
+    /// This sleep/yield-varied version is kept as a cheap smoke test;
+    /// the *exhaustive* form of the same race lives in
+    /// `rust/tests/model_check.rs` (`push_close_worker_*`), which
+    /// explores every interleaving up to the preemption bound under
+    /// `--features model-check`, so the round count here is modest.
     #[test]
     fn close_push_race_never_loses_requests() {
-        for round in 0..200u64 {
+        for round in 0..50u64 {
             let q = Arc::new(SystemQueue::new(8));
             let drained: Arc<std::sync::Mutex<Vec<u64>>> = Arc::default();
             let worker = {

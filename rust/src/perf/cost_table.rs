@@ -24,12 +24,13 @@
 use super::energy::{Attribution, EnergyModel};
 use super::model::{BatchCost, Feasibility};
 use crate::hw::spec::SystemSpec;
+use crate::util::check::atomic::{AtomicU64, Ordering};
+use crate::util::check::{Mutex, OnceLock};
 use crate::util::par::par_map;
 use crate::workload::Query;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::Arc;
 
 /// Cost of one query on one system. Infeasible cells carry `NaN` costs
 /// and a non-`Ok` feasibility; consumers must check feasibility before
@@ -452,7 +453,11 @@ fn lower_edge(edges: &[u32], v: u32) -> u32 {
 /// [`Self::evaluations`] drift under contention). Bucketed cells are
 /// evaluated at the deterministic bin representative — never at
 /// whichever actual composition got there first — so results are
-/// identical at any core count.
+/// identical at any core count. The shard mutexes, in-flight slots, and
+/// statistics counters all come from [`crate::util::check`] (plain
+/// `std::sync` re-exports in normal builds), so the whole
+/// miss/hit/dedup protocol is exhaustively explored by the model-check
+/// suite (`rust/tests/model_check.rs`) under `--features model-check`.
 ///
 /// ## Bounded memoization
 ///

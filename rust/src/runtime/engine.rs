@@ -74,6 +74,9 @@ impl InferenceEngine {
 
     /// Generate up to `gen_tokens` tokens after `prompt` (token ids incl.
     /// BOS). Stops early only at cache capacity.
+    // Sanctioned wall-clock: times real PJRT device execution (see
+    // clippy.toml `disallowed-methods`).
+    #[allow(clippy::disallowed_methods)]
     pub fn generate(&self, prompt: &[i32], gen_tokens: u32, sp: SamplingParams) -> Result<GenerationResult> {
         if prompt.is_empty() {
             bail!("empty prompt");

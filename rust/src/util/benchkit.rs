@@ -61,6 +61,9 @@ impl Bench {
     }
 
     /// Time `f`, which performs `iters` work units per call.
+    // Sanctioned wall-clock: benches measure real elapsed time by design
+    // (see clippy.toml `disallowed-methods`).
+    #[allow(clippy::disallowed_methods)]
     pub fn run<F: FnMut()>(&self, name: &str, iters: u64, mut f: F) -> BenchReport {
         for _ in 0..self.warmup {
             f();

@@ -1,0 +1,840 @@
+//! The controlling scheduler behind the `model-check` shims.
+//!
+//! One global [`Kernel`] serializes every synchronization operation of a
+//! model run: model threads are real OS threads, but only the one named
+//! by `running` may proceed past a yield point — everyone else is
+//! parked on the kernel's condvar. At each **scheduling point** (mutex
+//! acquire/release, condvar wait/notify, non-relaxed atomic op,
+//! `OnceLock` init, spawn/join) the running thread calls back into the
+//! kernel, which picks the next thread to run from the deterministic
+//! candidate list. Whenever more than one candidate exists, the pick is
+//! a **branching decision**: recorded in the execution's trace, forced
+//! by the DFS prefix on replay, and serialized into the schedule string
+//! a failure prints.
+//!
+//! ## Exploration
+//!
+//! [`explore`] enumerates interleavings by bounded exhaustive DFS over
+//! those branching decisions (the classic stateless-model-checking
+//! loop: run, then backtrack the deepest decision with an untried
+//! alternative and re-run with that forced prefix). Two knobs bound the
+//! walk:
+//!
+//! - [`ExploreOptions::preemption_bound`] — CHESS-style iterative
+//!   context bounding: once an execution has spent its budget of
+//!   *preemptive* switches (switching away from a thread that could
+//!   have kept running), the current thread keeps running until it
+//!   blocks. Forced switches (current thread blocked) stay free, so
+//!   every execution still terminates and the bounded space covers all
+//!   races expressible with that many preemptions.
+//! - [`ExploreOptions::random_walk`] — for state spaces too large to
+//!   exhaust, sample schedules uniformly at each branch instead of
+//!   enumerating (seeded, so a sweep is reproducible end-to-end).
+//!
+//! ## Determinism and replay
+//!
+//! Candidate lists are derived purely from kernel state in thread-id
+//! order, and checked code must be deterministic between yield points,
+//! so a schedule (the sequence of branch picks) identifies an
+//! interleaving exactly. A failing exploration prints
+//! `HETSCHED_CHECK_SCHEDULE=<scenario>:<picks>`; setting that variable
+//! makes [`explore`] re-run just that interleaving, turning any finding
+//! into a deterministic regression test. [`replay`] is the programmatic
+//! form.
+//!
+//! ## Virtual time
+//!
+//! Timed condvar waits park with an absolute deadline on a **virtual
+//! clock** that advances only when every thread is blocked (maximal
+//! progress): the earliest deadline then fires and that waiter resumes
+//! with `timed_out = true`. `check::time::now()` reads the same clock,
+//! so deadline arithmetic like the batcher's linger loop terminates
+//! under the checker without wall-clock sleeps. The abstraction this
+//! buys — timeouts never race with runnable threads — is deliberate: it
+//! keeps the state space finite and executions deterministic, at the
+//! cost of not exploring "deadline expired mid-race" schedules.
+//!
+//! ## Failure handling
+//!
+//! A panic escaping the scenario closure, a deadlock (all threads
+//! blocked, no timed waiter), or a livelock (step budget exceeded) ends
+//! the execution as a failure. Threads still parked at that point are
+//! abandoned — they wait on an epoch that will never run again — which
+//! leaks a few OS threads exactly once, on the way to the test harness
+//! reporting the schedule string. Model-level state never carries over:
+//! each execution starts from a fresh epoch with empty tables.
+
+use crate::util::rng::Xoshiro256;
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, OnceLock as StdOnceLock};
+
+thread_local! {
+    /// `(epoch, tid)` of the model run this OS thread belongs to; `None`
+    /// on ordinary threads (whose shim operations pass straight through
+    /// to std).
+    static MODEL_TID: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+}
+
+/// Thread id of the calling thread inside the current model run, or
+/// `None` when the caller is not a model thread.
+pub(crate) fn model_tid() -> Option<usize> {
+    MODEL_TID.with(|c| c.get()).map(|(_, tid)| tid)
+}
+
+fn model_epoch_tid() -> (u64, usize) {
+    MODEL_TID.with(|c| c.get()).expect("caller verified it is a model thread")
+}
+
+/// What a model thread is currently blocked on (or not).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    /// waiting to acquire the mutex at this address
+    Mutex(usize),
+    /// parked on a condvar; `deadline` is virtual-clock ns for timed
+    /// waits; `seq` orders waiters FIFO for `notify_one`
+    Cond { cv: usize, deadline: Option<u64>, seq: u64 },
+    /// waiting for another thread's `OnceLock` initialization
+    Once(usize),
+    /// waiting for thread `tid` to finish
+    Join(usize),
+    Finished,
+}
+
+struct TState {
+    status: Status,
+    /// set when a timed condvar wait was woken by the virtual clock
+    /// rather than a notification
+    timed_out: bool,
+}
+
+/// Tracks whether a `OnceLock` cell is mid-initialization or ready.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum OnceState {
+    Initializing,
+    Ready,
+}
+
+enum Strategy {
+    /// DFS: default pick is candidate 0; the forced prefix steers
+    Dfs,
+    /// uniform pick at every branch
+    Random(Xoshiro256),
+}
+
+struct KState {
+    /// bumped per execution; parked threads resume only when
+    /// `(epoch, running)` names them, so threads abandoned by a failed
+    /// execution can never wake into a later one
+    epoch: u64,
+    threads: Vec<TState>,
+    running: usize,
+    live: usize,
+    /// mutex object address → holding tid
+    held: HashMap<usize, usize>,
+    onces: HashMap<usize, OnceState>,
+    virtual_ns: u64,
+    wait_seq: u64,
+    steps: usize,
+    max_steps: usize,
+    /// branching decisions made this execution: (chosen index, #candidates)
+    trace: Vec<(u32, u32)>,
+    /// forced choice prefix (DFS backtrack stack or replay schedule)
+    prefix: Vec<u32>,
+    strategy: Strategy,
+    preemptions: usize,
+    preemption_bound: Option<usize>,
+    failure: Option<String>,
+    done: bool,
+}
+
+impl KState {
+    fn new() -> Self {
+        Self {
+            epoch: 0,
+            threads: Vec::new(),
+            running: 0,
+            live: 0,
+            held: HashMap::new(),
+            onces: HashMap::new(),
+            virtual_ns: 0,
+            wait_seq: 0,
+            steps: 0,
+            max_steps: 0,
+            trace: Vec::new(),
+            prefix: Vec::new(),
+            strategy: Strategy::Dfs,
+            preemptions: 0,
+            preemption_bound: None,
+            failure: None,
+            done: false,
+        }
+    }
+
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+        self.done = true;
+    }
+
+    /// Pick index `0..n` at a branching decision: forced by the prefix
+    /// while it lasts, then strategy-driven. Every decision is appended
+    /// to the trace.
+    fn choose(&mut self, n: usize) -> usize {
+        debug_assert!(n >= 1);
+        let at = self.trace.len();
+        let pick = if at < self.prefix.len() {
+            // a stale replay schedule may name an out-of-range branch;
+            // clamping keeps replay robust instead of panicking the
+            // checker itself
+            (self.prefix[at] as usize).min(n - 1)
+        } else {
+            match &mut self.strategy {
+                Strategy::Dfs => 0,
+                Strategy::Random(rng) => (rng.next_u64() % n as u64) as usize,
+            }
+        };
+        self.trace.push((pick as u32, n as u32));
+        pick
+    }
+
+    /// Deterministic candidate list: runnable tids in id order.
+    fn runnable(&self) -> Vec<usize> {
+        self.threads
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.status == Status::Runnable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Pick who runs next. Called (with the kernel lock held) by the
+    /// running thread `me` after it has updated its own status — the
+    /// single place scheduling decisions happen.
+    fn reschedule(&mut self, me: usize) {
+        if self.done {
+            return;
+        }
+        self.steps += 1;
+        if self.steps > self.max_steps {
+            self.fail(format!(
+                "livelock: execution exceeded {} scheduling steps",
+                self.max_steps
+            ));
+            return;
+        }
+        loop {
+            let cands = self.runnable();
+            if cands.is_empty() {
+                if self.live == 0 {
+                    self.done = true;
+                    return;
+                }
+                // all live threads blocked: fire the earliest virtual
+                // timeout if one exists, else it's a real deadlock
+                let next_deadline = self
+                    .threads
+                    .iter()
+                    .filter_map(|t| match t.status {
+                        Status::Cond { deadline: Some(d), .. } => Some(d),
+                        _ => None,
+                    })
+                    .min();
+                match next_deadline {
+                    Some(d) => {
+                        self.virtual_ns = self.virtual_ns.max(d);
+                        for t in &mut self.threads {
+                            if let Status::Cond { deadline: Some(dl), .. } = t.status {
+                                if dl <= self.virtual_ns {
+                                    t.status = Status::Runnable;
+                                    t.timed_out = true;
+                                }
+                            }
+                        }
+                        continue; // re-derive candidates
+                    }
+                    None => {
+                        let blocked: Vec<String> = self
+                            .threads
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, t)| t.status != Status::Finished)
+                            .map(|(i, t)| format!("t{i}: {:?}", t.status))
+                            .collect();
+                        self.fail(format!("deadlock: [{}]", blocked.join(", ")));
+                        return;
+                    }
+                }
+            }
+            let me_runnable = self
+                .threads
+                .get(me)
+                .map(|t| t.status == Status::Runnable)
+                .unwrap_or(false);
+            // preemption budget spent: a runnable current thread keeps
+            // running (forced switches below stay free)
+            let cands = if me_runnable
+                && self.preemption_bound.is_some_and(|b| self.preemptions >= b)
+            {
+                vec![me]
+            } else {
+                cands
+            };
+            let next = if cands.len() == 1 { cands[0] } else { cands[self.choose(cands.len())] };
+            if me_runnable && next != me {
+                self.preemptions += 1;
+            }
+            self.running = next;
+            return;
+        }
+    }
+}
+
+pub(crate) struct Kernel {
+    state: StdMutex<KState>,
+    /// model threads park here until `(epoch, running)` names them
+    sched_cv: StdCondvar,
+    /// the explore driver parks here until the execution ends
+    done_cv: StdCondvar,
+}
+
+fn kernel() -> &'static Kernel {
+    static KERNEL: StdOnceLock<Kernel> = StdOnceLock::new();
+    KERNEL.get_or_init(|| Kernel {
+        state: StdMutex::new(KState::new()),
+        sched_cv: StdCondvar::new(),
+        done_cv: StdCondvar::new(),
+    })
+}
+
+/// One model run at a time, process-wide (libtest runs tests on many
+/// threads; exploration must own the kernel).
+static RUN_LOCK: StdMutex<()> = StdMutex::new(());
+
+impl Kernel {
+    fn lock(&self) -> std::sync::MutexGuard<'_, KState> {
+        // the kernel lock is never held across a panic; recover anyway
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Park until this thread is scheduled. A thread of a finished or
+    /// superseded epoch never resumes (abandoned-execution leak — see
+    /// module docs).
+    fn park<'a>(
+        &'a self,
+        mut st: std::sync::MutexGuard<'a, KState>,
+        epoch: u64,
+        me: usize,
+    ) -> std::sync::MutexGuard<'a, KState> {
+        loop {
+            if st.epoch == epoch && !st.done && st.running == me {
+                return st;
+            }
+            st = self.sched_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// A plain scheduling point: give the scheduler the chance to run
+    /// somebody else before the caller's next operation.
+    pub(crate) fn yield_op(&self) {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        st.reschedule(me);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+        let st = self.park(st, epoch, me);
+        drop(st);
+    }
+
+    /// Model-level mutex acquire (blocking). `pre_yield` inserts a
+    /// scheduling point before the acquire — the branch that explores
+    /// "who gets the lock first".
+    pub(crate) fn mutex_lock(&self, addr: usize, pre_yield: bool) {
+        if pre_yield {
+            self.yield_op();
+        }
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        loop {
+            if !st.held.contains_key(&addr) {
+                st.held.insert(addr, me);
+                return;
+            }
+            st.threads[me].status = Status::Mutex(addr);
+            st.reschedule(me);
+            self.sched_cv.notify_all();
+            self.done_cv.notify_all();
+            st = self.park(st, epoch, me);
+            // released in the meantime — but a sibling waiter may have
+            // been scheduled first and re-taken it: loop
+        }
+    }
+
+    /// Model-level mutex release; a scheduling point (waiters become
+    /// runnable and may be picked before the releaser continues).
+    pub(crate) fn mutex_unlock(&self, addr: usize) {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        let holder = st.held.remove(&addr);
+        debug_assert_eq!(holder, Some(me), "unlock by non-holder");
+        for t in &mut st.threads {
+            if t.status == Status::Mutex(addr) {
+                t.status = Status::Runnable;
+            }
+        }
+        st.reschedule(me);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+        let st = self.park(st, epoch, me);
+        drop(st);
+    }
+
+    /// Condvar wait: atomically release the mutex and park on the
+    /// condvar (with an optional virtual-clock deadline). Returns
+    /// whether the wake was a timeout. The caller re-acquires the mutex
+    /// itself afterwards.
+    pub(crate) fn cond_wait(&self, cv: usize, mutex: usize, timeout_ns: Option<u64>) -> bool {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        let holder = st.held.remove(&mutex);
+        debug_assert_eq!(holder, Some(me), "wait with mutex not held");
+        for t in &mut st.threads {
+            if t.status == Status::Mutex(mutex) {
+                t.status = Status::Runnable;
+            }
+        }
+        let seq = st.wait_seq;
+        st.wait_seq += 1;
+        let deadline = timeout_ns.map(|d| st.virtual_ns.saturating_add(d));
+        st.threads[me].status = Status::Cond { cv, deadline, seq };
+        st.threads[me].timed_out = false;
+        st.reschedule(me);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+        let mut st = self.park(st, epoch, me);
+        let timed_out = st.threads[me].timed_out;
+        st.threads[me].timed_out = false;
+        drop(st);
+        timed_out
+    }
+
+    /// Wake one condvar waiter (FIFO by wait order; when several wait,
+    /// which one wakes is a branching decision). A scheduling point.
+    pub(crate) fn notify_one(&self, cv: usize) {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        let mut waiters: Vec<(u64, usize)> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| match t.status {
+                Status::Cond { cv: c, seq, .. } if c == cv => Some((seq, i)),
+                _ => None,
+            })
+            .collect();
+        waiters.sort_unstable();
+        if !waiters.is_empty() {
+            let pick = if waiters.len() == 1 { 0 } else { st.choose(waiters.len()) };
+            let tid = waiters[pick].1;
+            st.threads[tid].status = Status::Runnable;
+            st.threads[tid].timed_out = false;
+        }
+        st.reschedule(me);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+        let st = self.park(st, epoch, me);
+        drop(st);
+    }
+
+    /// Wake every condvar waiter. A scheduling point.
+    pub(crate) fn notify_all(&self, cv: usize) {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        for t in &mut st.threads {
+            if matches!(t.status, Status::Cond { cv: c, .. } if c == cv) {
+                t.status = Status::Runnable;
+                t.timed_out = false;
+            }
+        }
+        st.reschedule(me);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+        let st = self.park(st, epoch, me);
+        drop(st);
+    }
+
+    /// `OnceLock` protocol. Returns `true` when the caller must run the
+    /// initializer (it won the race); `false` when the cell is ready.
+    pub(crate) fn once_try_claim(&self, addr: usize) -> bool {
+        self.yield_op();
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        loop {
+            match st.onces.get(&addr) {
+                Some(OnceState::Ready) => return false,
+                Some(OnceState::Initializing) => {
+                    st.threads[me].status = Status::Once(addr);
+                    st.reschedule(me);
+                    self.sched_cv.notify_all();
+                    self.done_cv.notify_all();
+                    st = self.park(st, epoch, me);
+                }
+                None => {
+                    st.onces.insert(addr, OnceState::Initializing);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Initialization finished: mark ready and wake blocked readers. A
+    /// scheduling point.
+    pub(crate) fn once_ready(&self, addr: usize) {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        st.onces.insert(addr, OnceState::Ready);
+        for t in &mut st.threads {
+            if t.status == Status::Once(addr) {
+                t.status = Status::Runnable;
+            }
+        }
+        st.reschedule(me);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+        let st = self.park(st, epoch, me);
+        drop(st);
+    }
+
+    /// Register a child thread (immediately schedulable) and return its
+    /// tid. The real OS thread gates on the scheduler before running.
+    pub(crate) fn register_child(&self) -> (u64, usize) {
+        let mut st = self.lock();
+        let tid = st.threads.len();
+        st.threads.push(TState { status: Status::Runnable, timed_out: false });
+        st.live += 1;
+        (st.epoch, tid)
+    }
+
+    /// Block until thread `tid` finishes (its result is delivered out of
+    /// band by the shim).
+    pub(crate) fn join(&self, tid: usize) {
+        let (epoch, me) = model_epoch_tid();
+        let mut st = self.lock();
+        loop {
+            if st.threads[tid].status == Status::Finished {
+                return;
+            }
+            st.threads[me].status = Status::Join(tid);
+            st.reschedule(me);
+            self.sched_cv.notify_all();
+            self.done_cv.notify_all();
+            st = self.park(st, epoch, me);
+        }
+    }
+
+    /// Current virtual-clock reading (ns since execution start).
+    pub(crate) fn virtual_now(&self) -> u64 {
+        self.lock().virtual_ns
+    }
+
+    /// Entry gate + exit protocol shared by the scenario root and every
+    /// spawned model thread. `f`'s panic (root thread only) fails the
+    /// execution; child panics are delivered to joiners by the shim.
+    fn run_thread(&self, epoch: u64, tid: usize, f: impl FnOnce(), root: bool) {
+        MODEL_TID.with(|c| c.set(Some((epoch, tid))));
+        {
+            let st = self.lock();
+            let st = self.park(st, epoch, tid);
+            drop(st);
+        }
+        let result = catch_unwind(AssertUnwindSafe(f));
+        MODEL_TID.with(|c| c.set(None));
+        let mut st = self.lock();
+        if st.epoch != epoch {
+            return; // execution already abandoned
+        }
+        st.threads[tid].status = Status::Finished;
+        st.live -= 1;
+        if let Err(p) = result {
+            if root {
+                st.fail(panic_message(&p));
+            }
+            // child panics surface through join (std semantics); if the
+            // execution then wedges, deadlock detection reports it
+        }
+        for t in &mut st.threads {
+            if t.status == Status::Join(tid) {
+                t.status = Status::Runnable;
+            }
+        }
+        st.reschedule(tid);
+        self.sched_cv.notify_all();
+        self.done_cv.notify_all();
+    }
+
+    /// Spawn + gate a child model thread around `f`.
+    pub(crate) fn spawn_child(&self, f: impl FnOnce() + Send + 'static) -> usize {
+        let (epoch, tid) = self.register_child();
+        let k: &'static Kernel = kernel();
+        std::thread::Builder::new()
+            .name(format!("model-t{tid}"))
+            .spawn(move || k.run_thread(epoch, tid, f, false))
+            .expect("spawn model thread");
+        tid
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+pub(crate) fn with_kernel<R>(f: impl FnOnce(&'static Kernel) -> R) -> R {
+    f(kernel())
+}
+
+/// Result of one execution, harvested by the driver.
+struct ExecResult {
+    trace: Vec<(u32, u32)>,
+    failure: Option<String>,
+}
+
+/// Run one execution of `scenario` under the given forced prefix and
+/// strategy; blocks the driver until every model thread finished (or
+/// the execution failed).
+fn run_one(
+    scenario: &std::sync::Arc<dyn Fn() + Send + Sync>,
+    prefix: Vec<u32>,
+    strategy: Strategy,
+    max_steps: usize,
+    preemption_bound: Option<usize>,
+) -> ExecResult {
+    let k = kernel();
+    let epoch;
+    {
+        let mut st = k.lock();
+        st.epoch += 1;
+        epoch = st.epoch;
+        st.threads.clear();
+        st.threads.push(TState { status: Status::Runnable, timed_out: false });
+        st.running = 0;
+        st.live = 1;
+        st.held.clear();
+        st.onces.clear();
+        st.virtual_ns = 0;
+        st.wait_seq = 0;
+        st.steps = 0;
+        st.max_steps = max_steps;
+        st.trace.clear();
+        st.prefix = prefix;
+        st.strategy = strategy;
+        st.preemptions = 0;
+        st.preemption_bound = preemption_bound;
+        st.failure = None;
+        st.done = false;
+    }
+    let scenario = std::sync::Arc::clone(scenario);
+    std::thread::Builder::new()
+        .name("model-t0".into())
+        .spawn(move || kernel().run_thread(epoch, 0, move || scenario(), true))
+        .expect("spawn model root thread");
+    let mut st = k.lock();
+    while !st.done {
+        st = k.done_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+    }
+    ExecResult { trace: std::mem::take(&mut st.trace), failure: st.failure.take() }
+}
+
+/// Knobs for [`explore`].
+pub struct ExploreOptions {
+    /// Names the scenario in schedule strings
+    /// (`HETSCHED_CHECK_SCHEDULE=<name>:<picks>`).
+    pub name: &'static str,
+    /// CHESS-style preemptive-context-switch budget per execution
+    /// (`None` = unbounded — full DFS).
+    pub preemption_bound: Option<usize>,
+    /// Safety valve on DFS size: stop (with `complete = false`) after
+    /// this many executions.
+    pub max_interleavings: usize,
+    /// Per-execution scheduling-step budget (livelock guard).
+    pub max_steps: usize,
+    /// `Some((iterations, seed))` switches from DFS to seeded uniform
+    /// random-walk sampling — the fallback for state spaces too large
+    /// to exhaust.
+    pub random_walk: Option<(usize, u64)>,
+}
+
+impl Default for ExploreOptions {
+    fn default() -> Self {
+        Self {
+            name: "scenario",
+            preemption_bound: Some(2),
+            max_interleavings: 200_000,
+            max_steps: 20_000,
+            random_walk: None,
+        }
+    }
+}
+
+/// A failing interleaving: the invariant message plus the schedule that
+/// reproduces it.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    /// `<picks>` part of the schedule string (dot-separated branch
+    /// choices)
+    pub schedule: String,
+    pub message: String,
+}
+
+/// Outcome of an exploration.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Executions actually run. Under DFS these are **distinct**
+    /// interleavings by construction (each has a unique branch-choice
+    /// sequence); a random walk may repeat schedules.
+    pub interleavings: usize,
+    /// DFS exhausted the (preemption-bounded) space. Always `false` for
+    /// random walks and failed runs.
+    pub complete: bool,
+    pub failure: Option<Failure>,
+}
+
+impl Report {
+    /// Panic (with the replayable schedule) if any interleaving failed.
+    pub fn expect_pass(&self, name: &str) -> &Report {
+        if let Some(f) = &self.failure {
+            panic!(
+                "model check '{name}' failed after {} interleavings: {}\n  replay: \
+                 HETSCHED_CHECK_SCHEDULE={name}:{} cargo test --release --features \
+                 model-check --test model_check",
+                self.interleavings, f.message, f.schedule
+            );
+        }
+        self
+    }
+
+    /// Panic unless some interleaving failed — for pinning that the
+    /// checker actually catches seeded bugs.
+    pub fn expect_failure(&self, name: &str) -> &Failure {
+        self.failure.as_ref().unwrap_or_else(|| {
+            panic!(
+                "model check '{name}' explored {} interleavings without finding the \
+                 seeded bug",
+                self.interleavings
+            )
+        })
+    }
+}
+
+fn format_schedule(trace: &[(u32, u32)]) -> String {
+    trace.iter().map(|(c, _)| c.to_string()).collect::<Vec<_>>().join(".")
+}
+
+fn parse_schedule(s: &str) -> Vec<u32> {
+    s.split('.').filter_map(|p| p.trim().parse::<u32>().ok()).collect()
+}
+
+/// Explore interleavings of `scenario` and report. See the module docs
+/// for the exploration model. When the `HETSCHED_CHECK_SCHEDULE`
+/// environment variable is set to `<name>:<picks>` with a matching
+/// name, only that schedule is run (deterministic replay of a recorded
+/// failure).
+pub fn explore(opts: ExploreOptions, scenario: impl Fn() + Send + Sync + 'static) -> Report {
+    let scenario: std::sync::Arc<dyn Fn() + Send + Sync> = std::sync::Arc::new(scenario);
+    if let Ok(v) = std::env::var("HETSCHED_CHECK_SCHEDULE") {
+        if let Some((name, sched)) = v.split_once(':') {
+            if name == opts.name {
+                return replay_arc(opts.name, sched, &scenario, opts.max_steps);
+            }
+        }
+    }
+    let _run = RUN_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+
+    if let Some((iters, seed)) = opts.random_walk {
+        let mut master = Xoshiro256::seed_from(seed);
+        for i in 0..iters {
+            let res = run_one(
+                &scenario,
+                Vec::new(),
+                Strategy::Random(master.fork()),
+                opts.max_steps,
+                opts.preemption_bound,
+            );
+            if let Some(msg) = res.failure {
+                return report_failure(opts.name, i + 1, &res.trace, msg);
+            }
+        }
+        return Report { interleavings: iters, complete: false, failure: None };
+    }
+
+    let mut prefix: Vec<u32> = Vec::new();
+    let mut count = 0usize;
+    loop {
+        let res = run_one(
+            &scenario,
+            prefix.clone(),
+            Strategy::Dfs,
+            opts.max_steps,
+            opts.preemption_bound,
+        );
+        count += 1;
+        if let Some(msg) = res.failure {
+            return report_failure(opts.name, count, &res.trace, msg);
+        }
+        // backtrack: deepest decision with an untried alternative
+        let mut trace = res.trace;
+        loop {
+            match trace.pop() {
+                None => return Report { interleavings: count, complete: true, failure: None },
+                Some((c, n)) if c + 1 < n => {
+                    trace.push((c + 1, n));
+                    break;
+                }
+                Some(_) => {}
+            }
+        }
+        if count >= opts.max_interleavings {
+            return Report { interleavings: count, complete: false, failure: None };
+        }
+        prefix = trace.iter().map(|(c, _)| *c).collect();
+    }
+}
+
+fn report_failure(name: &str, count: usize, trace: &[(u32, u32)], message: String) -> Report {
+    let schedule = format_schedule(trace);
+    eprintln!(
+        "model check '{name}' FAILED after {count} interleavings: {message}\n  replay: \
+         HETSCHED_CHECK_SCHEDULE={name}:{schedule} cargo test --release --features \
+         model-check --test model_check"
+    );
+    Report { interleavings: count, complete: false, failure: Some(Failure { schedule, message }) }
+}
+
+/// Re-run exactly one recorded interleaving of `scenario` — the
+/// programmatic form of `HETSCHED_CHECK_SCHEDULE`.
+pub fn replay(name: &str, schedule: &str, scenario: impl Fn() + Send + Sync + 'static) -> Report {
+    let scenario: std::sync::Arc<dyn Fn() + Send + Sync> = std::sync::Arc::new(scenario);
+    replay_arc(name, schedule, &scenario, ExploreOptions::default().max_steps)
+}
+
+fn replay_arc(
+    name: &str,
+    schedule: &str,
+    scenario: &std::sync::Arc<dyn Fn() + Send + Sync>,
+    max_steps: usize,
+) -> Report {
+    let _run = RUN_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let res = run_one(scenario, parse_schedule(schedule), Strategy::Dfs, max_steps, None);
+    match res.failure {
+        Some(msg) => report_failure(name, 1, &res.trace, msg),
+        None => Report { interleavings: 1, complete: false, failure: None },
+    }
+}

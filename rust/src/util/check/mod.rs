@@ -1,0 +1,280 @@
+//! Deterministic concurrency model checking for the repo's
+//! concurrency-bearing subsystems.
+//!
+//! The coordinator's `SystemQueue`, the sharded `BatchTable`, and the
+//! `util::par` worker pool import their synchronization primitives from
+//! this module instead of `std::sync`. What those names resolve to
+//! depends on the `model-check` feature:
+//!
+//! - **Normal builds** (`model-check` off — the default): pure
+//!   re-exports of the real `std::sync` / `std::thread` /
+//!   `std::time` types. Zero cost, zero behavior change; `time::now()`
+//!   is a `#[inline]` wrapper over `Instant::now`.
+//! - **`--features model-check`**: instrumented shims that route every
+//!   synchronization operation through a controlling scheduler. Inside
+//!   an `explore` scenario, threads run one at a time and the scheduler
+//!   enumerates interleavings by bounded exhaustive DFS over the
+//!   scheduling points (with a CHESS-style preemption bound and a
+//!   seeded random-walk fallback). Outside a scenario the shims
+//!   delegate to std, so the whole normal test suite still passes with
+//!   the feature enabled.
+//!
+//! Every failing exploration prints a replayable schedule string; set
+//! `HETSCHED_CHECK_SCHEDULE=<scenario>:<picks>` to re-run exactly that
+//! interleaving. The checked scenarios live in
+//! `rust/tests/model_check.rs` (release-gated in CI like the property
+//! suites); `docs/ARCHITECTURE.md` ("Concurrency model checking")
+//! documents the scheduler algorithm, the schedule-string format, and
+//! how to add a scenario.
+
+#[cfg(feature = "model-check")]
+mod kernel;
+#[cfg(feature = "model-check")]
+mod shim;
+
+#[cfg(feature = "model-check")]
+pub use kernel::{explore, replay, ExploreOptions, Failure, Report};
+#[cfg(feature = "model-check")]
+pub use shim::{atomic, thread, time, Condvar, Mutex, MutexGuard, OnceLock, WaitTimeoutResult};
+
+#[cfg(not(feature = "model-check"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, OnceLock, WaitTimeoutResult};
+
+/// Passthrough to `std::sync::atomic` in normal builds.
+#[cfg(not(feature = "model-check"))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Passthrough to `std::thread` in normal builds.
+#[cfg(not(feature = "model-check"))]
+pub mod thread {
+    pub use std::thread::{spawn, JoinHandle};
+}
+
+/// Passthrough to `std::time` in normal builds.
+#[cfg(not(feature = "model-check"))]
+pub mod time {
+    pub use std::time::{Duration, Instant};
+
+    /// The current time — the only sanctioned `Instant::now` call site
+    /// in code that is model-checked (the raw call is banned by
+    /// `clippy.toml` so checked code can't accidentally bypass the
+    /// virtual clock).
+    #[allow(clippy::disallowed_methods)] // the one sanctioned wall-clock read
+    #[inline]
+    pub fn now() -> Instant {
+        Instant::now()
+    }
+}
+
+#[cfg(all(test, feature = "model-check"))]
+mod tests {
+    use super::atomic::{AtomicU64, Ordering};
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_protected_counter_always_sums() {
+        let report = explore(
+            ExploreOptions { name: "unit-mutex-counter", ..Default::default() },
+            || {
+                let n = Arc::new(Mutex::new(0u64));
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let n = Arc::clone(&n);
+                        thread::spawn(move || {
+                            let mut g = n.lock().unwrap();
+                            *g += 1;
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                assert_eq!(*n.lock().unwrap(), 2);
+            },
+        );
+        report.expect_pass("unit-mutex-counter");
+        assert!(report.complete, "two-thread mutex counter should exhaust");
+        assert!(report.interleavings >= 2, "lock order must branch");
+    }
+
+    #[test]
+    fn seqcst_read_modify_write_race_is_caught() {
+        let report = explore(
+            ExploreOptions { name: "unit-lost-update", ..Default::default() },
+            || {
+                let n = Arc::new(AtomicU64::new(0));
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let n = Arc::clone(&n);
+                        thread::spawn(move || {
+                            let v = n.load(Ordering::SeqCst);
+                            n.store(v + 1, Ordering::SeqCst);
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+            },
+        );
+        let failure = report.expect_failure("unit-lost-update");
+        assert!(failure.message.contains("lost update"));
+
+        // the printed schedule replays to the same failure
+        let replayed = replay("unit-lost-update", &failure.schedule, || {
+            let n = Arc::new(AtomicU64::new(0));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = Arc::clone(&n);
+                    thread::spawn(move || {
+                        let v = n.load(Ordering::SeqCst);
+                        n.store(v + 1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+        });
+        assert!(replayed.failure.is_some(), "replay must reproduce the failure");
+    }
+
+    #[test]
+    fn condvar_handoff_with_virtual_timeout() {
+        let report = explore(
+            ExploreOptions { name: "unit-condvar", ..Default::default() },
+            || {
+                let state = Arc::new((Mutex::new(false), Condvar::new()));
+                let s2 = Arc::clone(&state);
+                let setter = thread::spawn(move || {
+                    let (m, cv) = &*s2;
+                    *m.lock().unwrap() = true;
+                    cv.notify_one();
+                });
+                let (m, cv) = &*state;
+                let mut g = m.lock().unwrap();
+                let mut timeouts = 0u32;
+                while !*g {
+                    let (ng, r) =
+                        cv.wait_timeout(g, time::Duration::from_millis(10)).unwrap();
+                    g = ng;
+                    if r.timed_out() {
+                        timeouts += 1;
+                        assert!(timeouts < 100, "timed wait livelocked");
+                    }
+                }
+                drop(g);
+                setter.join().unwrap();
+            },
+        );
+        report.expect_pass("unit-condvar");
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn virtual_clock_advances_on_timeout() {
+        let report = explore(
+            ExploreOptions { name: "unit-vclock", ..Default::default() },
+            || {
+                let start = time::now();
+                let m = Mutex::new(());
+                let cv = Condvar::new();
+                let g = m.lock().unwrap();
+                let (_g, r) = cv.wait_timeout(g, time::Duration::from_millis(5)).unwrap();
+                assert!(r.timed_out(), "nobody notifies: must time out");
+                let waited = time::now() - start;
+                assert!(waited >= time::Duration::from_millis(5));
+            },
+        );
+        report.expect_pass("unit-vclock");
+    }
+
+    #[test]
+    fn once_lock_races_initialize_exactly_once() {
+        let report = explore(
+            ExploreOptions { name: "unit-once", ..Default::default() },
+            || {
+                let cell: Arc<OnceLock<u64>> = Arc::new(OnceLock::new());
+                let runs = Arc::new(AtomicU64::new(0));
+                let handles: Vec<_> = (0..2)
+                    .map(|i| {
+                        let cell = Arc::clone(&cell);
+                        let runs = Arc::clone(&runs);
+                        thread::spawn(move || {
+                            *cell.get_or_init(|| {
+                                runs.fetch_add(1, Ordering::Relaxed);
+                                10 + i
+                            })
+                        })
+                    })
+                    .collect();
+                let vals: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+                assert_eq!(runs.load(Ordering::Relaxed), 1, "initializer ran more than once");
+                assert_eq!(vals[0], vals[1], "racing getters saw different values");
+            },
+        );
+        report.expect_pass("unit-once");
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn deadlock_is_detected_and_replayable() {
+        let scenario = || {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t = thread::spawn(move || {
+                let _ga = a2.lock().unwrap();
+                let _gb = b2.lock().unwrap();
+            });
+            {
+                let _gb = b.lock().unwrap();
+                let _ga = a.lock().unwrap();
+            }
+            t.join().unwrap();
+        };
+        let report = explore(
+            ExploreOptions { name: "unit-abba", ..Default::default() },
+            scenario,
+        );
+        let failure = report.expect_failure("unit-abba");
+        assert!(failure.message.contains("deadlock"), "got: {}", failure.message);
+        let replayed = replay("unit-abba", &failure.schedule, scenario);
+        assert!(
+            replayed.failure.is_some_and(|f| f.message.contains("deadlock")),
+            "replay must hit the same deadlock"
+        );
+    }
+
+    #[test]
+    fn random_walk_samples_without_exhausting() {
+        let report = explore(
+            ExploreOptions {
+                name: "unit-random-walk",
+                random_walk: Some((50, 0xA5A5_5A5A)),
+                ..Default::default()
+            },
+            || {
+                let n = Arc::new(Mutex::new(0u64));
+                let handles: Vec<_> = (0..3)
+                    .map(|_| {
+                        let n = Arc::clone(&n);
+                        thread::spawn(move || *n.lock().unwrap() += 1)
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                assert_eq!(*n.lock().unwrap(), 3);
+            },
+        );
+        report.expect_pass("unit-random-walk");
+        assert_eq!(report.interleavings, 50);
+        assert!(!report.complete);
+    }
+}

@@ -1,0 +1,573 @@
+//! Instrumented drop-in replacements for the `std::sync` types used by
+//! the checked subsystems.
+//!
+//! Each type wraps its std counterpart and adds a kernel callback at
+//! every scheduling point — but **only when the calling thread belongs
+//! to a model run** (tracked in TLS by the kernel). On ordinary threads
+//! the shims delegate straight to std, so a `--features model-check`
+//! build still runs the entire normal test suite correctly; the model
+//! behavior activates exclusively inside [`super::explore`] scenarios.
+//!
+//! Under a model run:
+//! - [`Mutex::lock`] yields before acquiring (the "who gets the lock
+//!   first" branch) and registers the hold with the kernel; the guard's
+//!   drop is a scheduling point. The *real* std mutex underneath is
+//!   only ever taken while the kernel-level lock is held, so it never
+//!   contends.
+//! - [`Condvar`] waits park in the kernel (the std condvar is bypassed
+//!   entirely): no spurious wakeups, `notify_one` branches over which
+//!   waiter wakes, and `wait_timeout` deadlines live on the virtual
+//!   clock (they fire only when nothing else can run).
+//! - [`OnceLock::get_or_init`] runs the kernel's claim/ready protocol,
+//!   so N racing initializers explore every claim order while exactly
+//!   one closure runs.
+//! - Atomics yield before any **non-`Relaxed`** operation. `Relaxed`
+//!   ops (statistics counters) are deliberately invisible to the
+//!   scheduler — they are not synchronization, and skipping them keeps
+//!   the interleaving space focused on the ops that are.
+//! - [`thread::spawn`] registers a model thread; `join` parks in the
+//!   kernel and relays the child's result or panic payload like std.
+//!
+//! The model executes under sequential consistency (one thread runs at
+//! a time, each op completes before the next), so weaker-ordering bugs
+//! (`Relaxed`/`Acquire`/`Release` misuse) are out of scope — that is
+//! what the ThreadSanitizer CI job is for.
+
+use super::kernel::{model_tid, with_kernel};
+use std::mem::ManuallyDrop;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{
+    Condvar as StdCondvar, LockResult, Mutex as StdMutex, OnceLock as StdOnceLock, PoisonError,
+};
+
+// ---------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------
+
+/// Model-checked [`std::sync::Mutex`].
+pub struct Mutex<T: ?Sized> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Self {
+        Self { inner: StdMutex::new(value) }
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn addr(&self) -> usize {
+        self as *const _ as *const () as usize
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if model_tid().is_some() {
+            with_kernel(|k| k.mutex_lock(self.addr(), true));
+            // the kernel-level lock is exclusive, so this never blocks;
+            // model runs ignore poisoning (each execution is fresh)
+            let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            Ok(MutexGuard { lock: self, inner: ManuallyDrop::new(g), model: true })
+        } else {
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: ManuallyDrop::new(g), model: false }),
+                Err(e) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: ManuallyDrop::new(e.into_inner()),
+                    model: false,
+                })),
+            }
+        }
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Guard for [`Mutex`]; releasing it is a scheduling point in model
+/// runs.
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: ManuallyDrop<std::sync::MutexGuard<'a, T>>,
+    model: bool,
+}
+
+impl<'a, T: ?Sized> MutexGuard<'a, T> {
+    /// Drop the std guard without the kernel release (condvar wait
+    /// hand-off), returning the owning lock.
+    fn dissolve(mut self) -> &'a Mutex<T> {
+        let lock = self.lock;
+        unsafe { ManuallyDrop::drop(&mut self.inner) };
+        std::mem::forget(self);
+        lock
+    }
+
+    /// Extract the std guard (non-model delegation to std condvar).
+    fn into_std(mut self) -> (&'a Mutex<T>, std::sync::MutexGuard<'a, T>) {
+        let lock = self.lock;
+        let g = unsafe { ManuallyDrop::take(&mut self.inner) };
+        std::mem::forget(self);
+        (lock, g)
+    }
+
+    fn wrap(lock: &'a Mutex<T>, g: std::sync::MutexGuard<'a, T>, model: bool) -> Self {
+        Self { lock, inner: ManuallyDrop::new(g), model }
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // release the data lock before the kernel-level release makes
+        // the mutex acquirable by other model threads
+        unsafe { ManuallyDrop::drop(&mut self.inner) };
+        if self.model {
+            with_kernel(|k| k.mutex_unlock(self.lock.addr()));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------
+
+/// Result of [`Condvar::wait_timeout`]; mirrors
+/// [`std::sync::WaitTimeoutResult`] (which has no public constructor,
+/// so the model build defines its own).
+#[derive(Clone, Copy, Debug)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-checked [`std::sync::Condvar`]. Model waiters park in the
+/// kernel (no spurious wakeups; timed waits use the virtual clock).
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Self { inner: StdCondvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        if guard.model {
+            Ok(self.model_wait(guard, None).0)
+        } else {
+            let (lock, g) = guard.into_std();
+            match self.inner.wait(g) {
+                Ok(g) => Ok(MutexGuard::wrap(lock, g, false)),
+                Err(e) => Err(PoisonError::new(MutexGuard::wrap(lock, e.into_inner(), false))),
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: std::time::Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        if guard.model {
+            let ns = u64::try_from(dur.as_nanos()).unwrap_or(u64::MAX);
+            let (g, timed_out) = self.model_wait(guard, Some(ns));
+            Ok((g, WaitTimeoutResult(timed_out)))
+        } else {
+            let (lock, g) = guard.into_std();
+            match self.inner.wait_timeout(g, dur) {
+                Ok((g, r)) => {
+                    Ok((MutexGuard::wrap(lock, g, false), WaitTimeoutResult(r.timed_out())))
+                }
+                Err(e) => {
+                    let (g, r) = e.into_inner();
+                    Err(PoisonError::new((
+                        MutexGuard::wrap(lock, g, false),
+                        WaitTimeoutResult(r.timed_out()),
+                    )))
+                }
+            }
+        }
+    }
+
+    fn model_wait<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        timeout_ns: Option<u64>,
+    ) -> (MutexGuard<'a, T>, bool) {
+        let lock = guard.dissolve();
+        let timed_out =
+            with_kernel(|k| k.cond_wait(self.addr(), lock.addr(), timeout_ns));
+        // re-acquire without a pre-yield: the wake itself was the
+        // scheduling point, and the kernel lock loop still branches if
+        // several threads contend for the mutex here
+        with_kernel(|k| k.mutex_lock(lock.addr(), false));
+        let g = lock.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        (MutexGuard::wrap(lock, g, true), timed_out)
+    }
+
+    pub fn notify_one(&self) {
+        if model_tid().is_some() {
+            with_kernel(|k| k.notify_one(self.addr()));
+        } else {
+            self.inner.notify_one();
+        }
+    }
+
+    pub fn notify_all(&self) {
+        if model_tid().is_some() {
+            with_kernel(|k| k.notify_all(self.addr()));
+        } else {
+            self.inner.notify_all();
+        }
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+// ---------------------------------------------------------------------
+// OnceLock
+// ---------------------------------------------------------------------
+
+/// Model-checked [`std::sync::OnceLock`]. In model runs,
+/// `get_or_init` runs the kernel claim/ready protocol so racing
+/// initializers are explored while exactly one closure executes. A
+/// panicking initializer wedges its waiters (reported as a deadlock by
+/// the checker) rather than re-arming the cell.
+pub struct OnceLock<T> {
+    inner: StdOnceLock<T>,
+}
+
+impl<T> Default for OnceLock<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OnceLock<T> {
+    pub const fn new() -> Self {
+        Self { inner: StdOnceLock::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const _ as usize
+    }
+
+    pub fn get(&self) -> Option<&T> {
+        self.inner.get()
+    }
+
+    pub fn set(&self, value: T) -> Result<(), T> {
+        if model_tid().is_some() {
+            let claimed = with_kernel(|k| k.once_try_claim(self.addr()));
+            if claimed {
+                let r = self.inner.set(value);
+                with_kernel(|k| k.once_ready(self.addr()));
+                r
+            } else {
+                Err(value)
+            }
+        } else {
+            self.inner.set(value)
+        }
+    }
+
+    pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+        if model_tid().is_some() {
+            let addr = self.addr();
+            let claimed = with_kernel(|k| k.once_try_claim(addr));
+            if claimed {
+                // the cell may have been filled before the model run
+                // started (e.g. a pre-warmed cache handed to a scenario)
+                if self.inner.get().is_none() {
+                    let value = f();
+                    let _ = self.inner.set(value);
+                }
+                with_kernel(|k| k.once_ready(addr));
+            }
+            self.inner.get().expect("ready OnceLock holds a value")
+        } else {
+            self.inner.get_or_init(f)
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OnceLock<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------
+
+/// Model-checked atomics. Every non-`Relaxed` operation is a scheduling
+/// point; `Relaxed` ops (pure statistics) stay invisible to keep the
+/// interleaving space small.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use super::{model_tid, with_kernel};
+
+    fn pre(order: Ordering) {
+        if order != Ordering::Relaxed && model_tid().is_some() {
+            with_kernel(|k| k.yield_op());
+        }
+    }
+
+    macro_rules! model_int_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            #[doc = concat!("Model-checked [`std::sync::atomic::", stringify!($name), "`].")]
+            #[derive(Debug, Default)]
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> Self {
+                    Self { inner: <$std>::new(v) }
+                }
+
+                pub fn load(&self, order: Ordering) -> $prim {
+                    pre(order);
+                    self.inner.load(order)
+                }
+
+                pub fn store(&self, v: $prim, order: Ordering) {
+                    pre(order);
+                    self.inner.store(v, order)
+                }
+
+                pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                    pre(order);
+                    self.inner.swap(v, order)
+                }
+
+                pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                    pre(order);
+                    self.inner.fetch_add(v, order)
+                }
+
+                pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                    pre(order);
+                    self.inner.fetch_sub(v, order)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $prim,
+                    new: $prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$prim, $prim> {
+                    pre(success);
+                    self.inner.compare_exchange(current, new, success, failure)
+                }
+            }
+        };
+    }
+
+    model_int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    model_int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+
+    /// Model-checked [`std::sync::atomic::AtomicBool`].
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self { inner: std::sync::atomic::AtomicBool::new(v) }
+        }
+
+        pub fn load(&self, order: Ordering) -> bool {
+            pre(order);
+            self.inner.load(order)
+        }
+
+        pub fn store(&self, v: bool, order: Ordering) {
+            pre(order);
+            self.inner.store(v, order)
+        }
+
+        pub fn swap(&self, v: bool, order: Ordering) -> bool {
+            pre(order);
+            self.inner.swap(v, order)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------
+
+/// Model-checked thread spawn/join.
+pub mod thread {
+    use std::sync::{Arc, Mutex as StdMutex, PoisonError};
+
+    use super::{catch_unwind, model_tid, with_kernel, AssertUnwindSafe};
+
+    enum Inner<T> {
+        Std(std::thread::JoinHandle<T>),
+        Model {
+            tid: usize,
+            result: Arc<StdMutex<Option<std::thread::Result<T>>>>,
+        },
+    }
+
+    /// Handle returned by [`spawn`]; mirrors
+    /// [`std::thread::JoinHandle`].
+    pub struct JoinHandle<T>(Inner<T>);
+
+    impl<T> JoinHandle<T> {
+        /// Wait for the thread to finish; `Err` carries its panic
+        /// payload, like std.
+        pub fn join(self) -> std::thread::Result<T> {
+            match self.0 {
+                Inner::Std(h) => h.join(),
+                Inner::Model { tid, result } => {
+                    with_kernel(|k| k.join(tid));
+                    result
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .take()
+                        .expect("joined model thread left a result")
+                }
+            }
+        }
+    }
+
+    /// Spawn a thread. Inside a model run the child becomes a model
+    /// thread of the same execution (scheduled one-at-a-time like every
+    /// other); outside, this is exactly [`std::thread::spawn`].
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        if model_tid().is_some() {
+            let result = Arc::new(StdMutex::new(None));
+            let slot = Arc::clone(&result);
+            let tid = with_kernel(|k| {
+                k.spawn_child(move || {
+                    let r = catch_unwind(AssertUnwindSafe(f));
+                    *slot.lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
+                })
+            });
+            JoinHandle(Inner::Model { tid, result })
+        } else {
+            JoinHandle(Inner::Std(std::thread::spawn(f)))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Time
+// ---------------------------------------------------------------------
+
+/// Virtual-clock time for model runs.
+///
+/// [`now`] reads the kernel's virtual clock (ns since execution start)
+/// on model threads and falls back to the real clock elsewhere, so
+/// deadline arithmetic like the batcher's linger loop works unchanged
+/// under the checker. The virtual clock only advances when every model
+/// thread is blocked (maximal progress — see the kernel docs).
+pub mod time {
+    pub use std::time::Duration;
+
+    use super::{model_tid, with_kernel};
+
+    /// A point in time: real [`std::time::Instant`] on ordinary
+    /// threads, virtual-clock ns inside model runs. The two kinds never
+    /// mix within one code path (comparing them is a bug and panics).
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Instant {
+        Real(std::time::Instant),
+        Virtual(u64),
+    }
+
+    /// The current time — the only sanctioned clock read in checked
+    /// code (raw `Instant::now` is banned by `clippy.toml`).
+    #[allow(clippy::disallowed_methods)] // the one sanctioned wall-clock read
+    pub fn now() -> Instant {
+        if model_tid().is_some() {
+            Instant::Virtual(with_kernel(|k| k.virtual_now()))
+        } else {
+            Instant::Real(std::time::Instant::now())
+        }
+    }
+
+    impl Ord for Instant {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            match (self, other) {
+                (Instant::Real(a), Instant::Real(b)) => a.cmp(b),
+                (Instant::Virtual(a), Instant::Virtual(b)) => a.cmp(b),
+                _ => panic!("compared a real instant with a virtual one"),
+            }
+        }
+    }
+
+    impl PartialOrd for Instant {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    impl std::ops::Add<Duration> for Instant {
+        type Output = Instant;
+        fn add(self, d: Duration) -> Instant {
+            match self {
+                Instant::Real(i) => Instant::Real(i + d),
+                Instant::Virtual(ns) => {
+                    Instant::Virtual(ns.saturating_add(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)))
+                }
+            }
+        }
+    }
+
+    impl std::ops::Sub<Instant> for Instant {
+        type Output = Duration;
+        fn sub(self, other: Instant) -> Duration {
+            match (self, other) {
+                (Instant::Real(a), Instant::Real(b)) => a.saturating_duration_since(b),
+                (Instant::Virtual(a), Instant::Virtual(b)) => {
+                    Duration::from_nanos(a.saturating_sub(b))
+                }
+                _ => panic!("subtracted a real instant from a virtual one"),
+            }
+        }
+    }
+}

@@ -3,6 +3,7 @@
 //! crate set has no rand/serde/clap/criterion/proptest — see DESIGN.md.
 
 pub mod benchkit;
+pub mod check;
 pub mod cli;
 pub mod error;
 pub mod json;

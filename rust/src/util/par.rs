@@ -29,13 +29,26 @@
 //! submitted has finished running, so no job can outlive the frame it
 //! borrows from. Panics inside chunks are caught, carried through the
 //! latch, and re-raised on the caller.
+//!
+//! The queue mutex, the two condvars, and the closing flag come from
+//! [`crate::util::check`] (plain `std::sync` re-exports in normal
+//! builds), and [`ScopedPool`] runs the *same* `worker_loop`/`run_map`/
+//! [`Latch`] code over a joinable worker set — which is how the
+//! model-check suite (`rust/tests/model_check.rs`) explores the job
+//! queue, the latch (including the panic path), and shutdown
+//! exhaustively under `--features model-check`. The process-wide
+//! [`par_map`] pool itself must **not** be used inside a model-check
+//! scenario: its workers are ordinary OS threads, invisible to the
+//! checker's scheduler — scenarios go through [`ScopedPool`].
 
+use crate::util::check::atomic::{AtomicBool, Ordering};
+use crate::util::check::{thread as vthread, Condvar, Mutex};
 use std::any::Any;
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::num::NonZeroUsize;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 thread_local! {
     /// Set on pool workers (permanently) and on the caller while it runs
@@ -54,6 +67,20 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 struct PoolState {
     jobs: Mutex<VecDeque<Job>>,
     available: Condvar,
+    /// Flipped (under the `jobs` mutex) by [`ScopedPool::shutdown`] so
+    /// scoped workers drain the queue and exit; never set for the
+    /// process-wide pool, whose workers live until process exit.
+    closing: AtomicBool,
+}
+
+impl PoolState {
+    fn new() -> Self {
+        Self {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            closing: AtomicBool::new(false),
+        }
+    }
 }
 
 struct Pool {
@@ -68,10 +95,7 @@ static POOL: OnceLock<Pool> = OnceLock::new();
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| {
         let workers = threads().saturating_sub(1);
-        let state = Arc::new(PoolState {
-            jobs: Mutex::new(VecDeque::new()),
-            available: Condvar::new(),
-        });
+        let state = Arc::new(PoolState::new());
         for i in 0..workers {
             let state = Arc::clone(&state);
             std::thread::Builder::new()
@@ -83,9 +107,12 @@ fn pool() -> &'static Pool {
     })
 }
 
-/// Pool workers live for the process: block for a job, run it, repeat.
-/// The nested flag stays set for the thread's whole life — anything
-/// running on a pool worker is by definition inside a parallel region.
+/// Pool workers block for a job, run it, repeat — until `closing` is
+/// observed with the queue drained (job claiming and the closing check
+/// happen under the same mutex, so a job submitted before shutdown is
+/// never stranded). The nested flag stays set for the thread's whole
+/// life — anything running on a pool worker is by definition inside a
+/// parallel region.
 fn worker_loop(state: &PoolState) {
     INSIDE_PAR_WORKER.with(|flag| flag.set(true));
     loop {
@@ -95,6 +122,9 @@ fn worker_loop(state: &PoolState) {
                 if let Some(job) = q.pop_front() {
                     break job;
                 }
+                if state.closing.load(Ordering::Acquire) {
+                    return;
+                }
                 q = state.available.wait(q).unwrap();
             }
         };
@@ -102,11 +132,11 @@ fn worker_loop(state: &PoolState) {
     }
 }
 
-fn submit(pool: &Pool, job: Job) {
-    let mut q = pool.state.jobs.lock().unwrap();
+fn submit(state: &PoolState, job: Job) {
+    let mut q = state.jobs.lock().unwrap();
     q.push_back(job);
     drop(q);
-    pool.state.available.notify_one();
+    state.available.notify_one();
 }
 
 /// Completion latch for one `par_map` call: counts outstanding pool jobs
@@ -212,8 +242,23 @@ where
     if pool.workers == 0 {
         return items.iter().map(f).collect();
     }
+    run_map(&pool.state, n, items, f)
+}
 
-    let chunk = items.len().div_ceil(n);
+/// The fan-out/fan-in core shared by [`par_map`] (over the process-wide
+/// pool) and [`ScopedPool::par_map`]: split `items` into `width`
+/// contiguous chunks, hand chunks `1..` to the pool's job queue, run
+/// chunk `0` on the caller (marked nested), then block on the call's
+/// [`Latch`] before touching the outputs or unwinding. Identical
+/// chunking and concatenation to a serial map, so results are
+/// bit-identical regardless of worker count.
+fn run_map<T, R, F>(state: &PoolState, width: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let chunk = items.len().div_ceil(width);
     let chunks: Vec<&[T]> = items.chunks(chunk).collect();
     let mut outs: Vec<Option<Vec<R>>> = Vec::with_capacity(chunks.len());
     outs.resize_with(chunks.len(), || None);
@@ -243,7 +288,7 @@ where
             // chunk panics — so every submitted job has run to
             // completion before any borrowed data can be invalidated.
             let job: Job = unsafe { erase_job(job) };
-            submit(pool, job);
+            submit(state, job);
         }
         // run the first chunk on the calling thread, marked nested so
         // f's own par_map calls run serially (exactly as they would on
@@ -269,6 +314,65 @@ where
         out.extend(v.expect("every chunk completed"));
     }
     out
+}
+
+/// A private, joinable worker pool running the **same**
+/// [`worker_loop`] / [`run_map`] / [`Latch`] machinery as the
+/// process-wide pool, but with an owned worker set and an explicit
+/// [`ScopedPool::shutdown`]. This exists for the model-check suite:
+/// the checker's scheduler can only see threads it spawned, so
+/// scenarios build a `ScopedPool` (whose workers go through
+/// [`crate::util::check::thread::spawn`]) and drive the real pool code
+/// under exhaustive interleaving — which is why this type is `pub` but
+/// hidden: it is test infrastructure, not a public API. Normal code
+/// uses [`par_map`].
+#[doc(hidden)]
+pub struct ScopedPool {
+    state: Arc<PoolState>,
+    workers: Vec<vthread::JoinHandle<()>>,
+}
+
+impl ScopedPool {
+    /// Spawn `workers` pool threads (0 is fine: every map runs serially
+    /// on the caller).
+    pub fn new(workers: usize) -> Self {
+        let state = Arc::new(PoolState::new());
+        let handles = (0..workers)
+            .map(|_| {
+                let state = Arc::clone(&state);
+                vthread::spawn(move || worker_loop(&state))
+            })
+            .collect();
+        Self { state, workers: handles }
+    }
+
+    /// [`par_map`] over this pool's workers plus the calling thread.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        if self.workers.is_empty() || items.len() <= 1 {
+            return items.iter().map(f).collect();
+        }
+        run_map(&self.state, self.workers.len() + 1, items, f)
+    }
+
+    /// Drain-and-join shutdown: workers finish any queued jobs, observe
+    /// `closing` under the queue mutex, and exit; then every worker is
+    /// joined. (`par_map` has already waited on its latch before this
+    /// can run, so no live borrows remain in the queue.)
+    pub fn shutdown(self) {
+        {
+            let _q = self.state.jobs.lock().unwrap();
+            self.state.closing.store(true, Ordering::Release);
+        }
+        self.state.available.notify_all();
+        for h in self.workers {
+            h.join().expect("pool worker panicked");
+        }
+    }
 }
 
 /// Parallel, order-preserving map over indices `0..count` — handy when
@@ -370,6 +474,33 @@ mod tests {
         let again = par_map(&items, |&x| x * 2);
         assert_eq!(again[7], 14);
         assert_eq!(again.len(), items.len());
+    }
+
+    /// The scoped pool drives the same run_map/latch machinery as the
+    /// global pool: bit-identical results, panic propagation with the
+    /// pool surviving, serial fallback at width 0, and a clean
+    /// drain-and-join shutdown.
+    #[test]
+    fn scoped_pool_matches_serial_and_shuts_down() {
+        let pool = ScopedPool::new(3);
+        let items: Vec<u64> = (0..5000).collect();
+        let want: Vec<u64> = items.iter().map(|&x| x * 2 + 1).collect();
+        assert_eq!(pool.par_map(&items, |&x| x * 2 + 1), want);
+        // panic path: caught, propagated, pool still usable afterwards
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.par_map(&items, |&x| {
+                assert!(x != 999, "injected failure");
+                x
+            })
+        }));
+        assert!(r.is_err(), "panic must propagate out of the scoped pool");
+        let again = pool.par_map(&items, |&x| x + 1);
+        assert_eq!(again[10], 11);
+        pool.shutdown();
+
+        let empty = ScopedPool::new(0);
+        assert_eq!(empty.par_map(&items[..3], |&x| x), vec![0, 1, 2]);
+        empty.shutdown();
     }
 
     /// Concurrent par_map calls from independent threads interleave

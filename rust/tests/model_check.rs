@@ -1,0 +1,503 @@
+//! Exhaustive concurrency checks for the coordinator queue, the sharded
+//! batch-cost cache, and the worker pool, driven by the deterministic
+//! model checker in `hetsched::util::check` (see docs/ARCHITECTURE.md,
+//! "Concurrency model checking").
+//!
+//! Only built with `--features model-check` (wired through the
+//! `[[test]]` target's `required-features`); CI runs it in release mode
+//! like the property suites. Every failing exploration prints a
+//! `HETSCHED_CHECK_SCHEDULE=<scenario>:<picks>` line that re-runs
+//! exactly the failing interleaving.
+//!
+//! Scenario rules:
+//! - All scenario threads go through `check::thread::spawn` (or
+//!   [`ScopedPool`], whose workers do). The process-wide `par_map` pool
+//!   must never be touched inside a scenario: its workers are ordinary
+//!   OS threads the checker cannot schedule.
+//! - Scenarios are `fn` items (capture nothing), so one scenario can be
+//!   passed to `explore` and `replay` repeatedly.
+//! - Result plumbing goes through join-handle return values, not shared
+//!   shim types, so bookkeeping adds no scheduling points and the
+//!   explored state space stays the algorithm's own.
+
+use hetsched::coordinator::batcher::{Rejected, SystemQueue};
+use hetsched::coordinator::request::Request;
+use hetsched::hw::catalog::{system_catalog, SystemId};
+use hetsched::model::llm_catalog;
+use hetsched::perf::cost_table::BatchTable;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::{Feasibility, PerfModel};
+use hetsched::util::check::atomic::{AtomicUsize, Ordering};
+use hetsched::util::check::{explore, replay, thread as vthread, ExploreOptions};
+use hetsched::util::par::ScopedPool;
+use std::panic::AssertUnwindSafe;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+fn req(id: u64) -> Request {
+    let (tx, _rx) = mpsc::channel();
+    Request { id, prompt: vec![0, 1], gen_tokens: 1, submitted: Instant::now(), respond: tx }
+}
+
+/// A request big enough that four of them jointly OOM the V100 while
+/// each fits alone (pinned by `feasible_prefix_trims_joint_oom`).
+fn big_req(id: u64) -> Request {
+    let (tx, _rx) = mpsc::channel();
+    Request { id, prompt: vec![0; 32], gen_tokens: 1024, submitted: Instant::now(), respond: tx }
+}
+
+/// Silence the default panic hook while `f` runs. Scenarios that panic
+/// by design (seeded bugs, injected pool panics) would otherwise print
+/// one "thread panicked" line per explored execution; the checker
+/// catches and reports those panics itself.
+fn with_quiet_panics<R>(f: impl FnOnce() -> R) -> R {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let r = f();
+    std::panic::set_hook(prev);
+    r
+}
+
+// ---------------------------------------------------------------------
+// SystemQueue: push × close × worker
+// ---------------------------------------------------------------------
+
+/// The race the shutdown protocol exists for (and the exhaustive form of
+/// batcher.rs's `close_push_race_never_loses_requests` smoke test): a
+/// push racing `close()` is either refused with `ShuttingDown` or its
+/// request is drained by the worker — never accepted-then-lost.
+fn push_close_worker_scenario() {
+    let q = Arc::new(SystemQueue::new(4));
+    let worker = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || {
+            let mut drained: Vec<u64> = Vec::new();
+            loop {
+                let b = q.take_batch(2, Duration::from_millis(1));
+                if b.is_empty() {
+                    // the take_batch contract: empty means closing AND
+                    // fully drained
+                    assert!(
+                        q.is_closing() && q.is_empty(),
+                        "empty batch before shutdown completed"
+                    );
+                    return drained;
+                }
+                drained.extend(b.iter().map(|r| r.id));
+            }
+        })
+    };
+    let pusher = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || match q.push(req(7)) {
+            Ok(()) => true,
+            Err((_, Rejected::ShuttingDown)) => false,
+            Err((_, Rejected::QueueFull)) => panic!("cap-4 queue cannot fill"),
+        })
+    };
+    let closer = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || q.close())
+    };
+    let accepted = pusher.join().unwrap();
+    closer.join().unwrap();
+    let drained = worker.join().unwrap();
+    if accepted {
+        assert_eq!(drained, vec![7], "accepted push was lost at shutdown");
+    } else {
+        assert!(drained.is_empty(), "refused push must not be drained");
+    }
+    // close() has returned: every later push is refused
+    assert!(matches!(q.push(req(8)), Err((_, Rejected::ShuttingDown))));
+    assert!(q.is_empty());
+}
+
+/// Tentpole acceptance: exhaustively explore push × close × worker.
+/// Escalates the CHESS preemption bound until the exploration reports
+/// at least 10^4 distinct interleavings (DFS interleavings are distinct
+/// by construction — each has a unique branch-choice sequence).
+#[test]
+fn push_close_worker_exhaustive() {
+    let mut reported = 0usize;
+    let mut any_complete = false;
+    for bound in [Some(2), Some(3), Some(4), None] {
+        let report = explore(
+            ExploreOptions {
+                name: "push-close-worker",
+                preemption_bound: bound,
+                max_interleavings: 60_000,
+                ..Default::default()
+            },
+            push_close_worker_scenario,
+        );
+        report.expect_pass("push-close-worker");
+        any_complete |= report.complete;
+        reported = report.interleavings;
+        eprintln!(
+            "push-close-worker @ preemption bound {bound:?}: {reported} interleavings \
+             (complete: {})",
+            report.complete
+        );
+        if reported >= 10_000 {
+            break;
+        }
+    }
+    assert!(any_complete, "at least one preemption bound must exhaust its space");
+    assert!(
+        reported >= 10_000,
+        "acceptance floor: explored only {reported} interleavings"
+    );
+}
+
+/// Drain-on-close completeness with two racing pushers: whatever subset
+/// of pushes was accepted is exactly what the worker drains.
+fn two_pushers_drain_scenario() {
+    let q = Arc::new(SystemQueue::new(4));
+    let worker = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || {
+            let mut drained: Vec<u64> = Vec::new();
+            loop {
+                let b = q.take_batch(2, Duration::from_millis(1));
+                if b.is_empty() {
+                    assert!(q.is_closing() && q.is_empty());
+                    return drained;
+                }
+                drained.extend(b.iter().map(|r| r.id));
+            }
+        })
+    };
+    let pushers: Vec<_> = (1..=2u64)
+        .map(|id| {
+            let q = Arc::clone(&q);
+            vthread::spawn(move || match q.push(req(id)) {
+                Ok(()) => Some(id),
+                Err((_, Rejected::ShuttingDown)) => None,
+                Err((_, Rejected::QueueFull)) => panic!("cap-4 queue cannot fill"),
+            })
+        })
+        .collect();
+    let closer = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || q.close())
+    };
+    let mut accepted: Vec<u64> =
+        pushers.into_iter().filter_map(|h| h.join().unwrap()).collect();
+    closer.join().unwrap();
+    let mut drained = worker.join().unwrap();
+    accepted.sort_unstable();
+    drained.sort_unstable();
+    assert_eq!(drained, accepted, "drain-on-close must hand out exactly the accepted set");
+}
+
+#[test]
+fn push_close_worker_two_pushers_drain_on_close() {
+    let report = explore(
+        ExploreOptions {
+            name: "two-pushers-drain",
+            preemption_bound: Some(2),
+            max_interleavings: 25_000,
+            ..Default::default()
+        },
+        two_pushers_drain_scenario,
+    );
+    report.expect_pass("two-pushers-drain");
+    assert!(report.interleavings >= 200, "five-thread race must branch substantially");
+}
+
+/// Random-walk fallback on the same scenario: seeded uniform sampling
+/// for spaces too large to exhaust. The sample count is exact and the
+/// run never claims completeness.
+#[test]
+fn push_close_worker_random_walk() {
+    let report = explore(
+        ExploreOptions {
+            name: "push-close-worker-walk",
+            random_walk: Some((200, 0x5EED_CAFE)),
+            ..Default::default()
+        },
+        push_close_worker_scenario,
+    );
+    report.expect_pass("push-close-worker-walk");
+    assert_eq!(report.interleavings, 200);
+    assert!(!report.complete);
+}
+
+// ---------------------------------------------------------------------
+// SystemQueue::top_up: joint-KV admission
+// ---------------------------------------------------------------------
+
+/// Step-boundary admission racing a pusher: every admitted set must be
+/// jointly feasible with the caller's live set (never past the joint-KV
+/// budget), admission is a FIFO prefix, and no request is ever lost or
+/// duplicated between concurrent top_up calls and the final drain.
+fn top_up_joint_kv_scenario() {
+    let perf = PerfModel::new(llm_catalog()[1].clone());
+    let spec = system_catalog()[SystemId::PALMETTO_V100.0].clone();
+    let q = Arc::new(SystemQueue::new(8));
+    for id in 0..2u64 {
+        q.push(big_req(id)).map_err(|_| "seed push refused").unwrap();
+    }
+    let pusher = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || {
+            for id in 2..4u64 {
+                q.push(big_req(id)).map_err(|_| "push refused").unwrap();
+            }
+        })
+    };
+    let admitter = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || {
+            let first = q.top_up(&perf, &spec, &[], 4);
+            assert!(!first.is_empty(), "a pre-seeded queue must admit at least one");
+            let live: Vec<(u32, u32)> =
+                first.iter().map(|r| (r.input_tokens(), r.gen_tokens)).collect();
+            assert_eq!(
+                perf.batch_feasibility(&spec, &live),
+                Feasibility::Ok,
+                "admitted batch must be jointly feasible"
+            );
+            // a second boundary with the first admission as the live
+            // set: the combined footprint must still fit
+            let second = q.top_up(&perf, &spec, &live, 4);
+            let mut combined = live.clone();
+            combined.extend(second.iter().map(|r| (r.input_tokens(), r.gen_tokens)));
+            assert_eq!(
+                perf.batch_feasibility(&spec, &combined),
+                Feasibility::Ok,
+                "top_up admitted past the live set's joint-KV budget"
+            );
+            assert!(
+                combined.len() < 4,
+                "four (32, 1024) members can never fit jointly on the V100"
+            );
+            let first_ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+            let second_ids: Vec<u64> = second.iter().map(|r| r.id).collect();
+            (first_ids, second_ids)
+        })
+    };
+    pusher.join().unwrap();
+    let (first, second) = admitter.join().unwrap();
+    q.close();
+    let mut drained: Vec<u64> = Vec::new();
+    loop {
+        let b = q.take_batch(4, Duration::from_millis(1));
+        if b.is_empty() {
+            break;
+        }
+        drained.extend(b.iter().map(|r| r.id));
+    }
+    // the admitter is the only consumer and pushes only append, so both
+    // admissions are FIFO prefixes: first ++ second ++ drained must
+    // reassemble the arrival order exactly
+    let mut all = first;
+    all.extend(second);
+    all.extend(drained);
+    assert_eq!(
+        all,
+        (0..4u64).collect::<Vec<u64>>(),
+        "requests lost, duplicated, or reordered across top_up and the drain"
+    );
+    assert!(q.is_empty());
+}
+
+#[test]
+fn top_up_never_admits_past_joint_kv() {
+    let report = explore(
+        ExploreOptions {
+            name: "top-up-joint-kv",
+            preemption_bound: Some(2),
+            max_interleavings: 25_000,
+            ..Default::default()
+        },
+        top_up_joint_kv_scenario,
+    );
+    report.expect_pass("top-up-joint-kv");
+    assert!(report.interleavings >= 2, "pusher × admitter must branch");
+}
+
+// ---------------------------------------------------------------------
+// BatchTable: racing misses on one key
+// ---------------------------------------------------------------------
+
+/// Three threads miss the same key together: the shard-lock + in-flight
+/// `OnceLock` protocol must collapse them into exactly one model
+/// evaluation on every interleaving, with exact counters and one shared
+/// cell.
+fn batch_table_racing_misses_scenario() {
+    let systems = system_catalog();
+    let energy = EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()));
+    let t = Arc::new(BatchTable::new(energy, &systems));
+    let members = [(48u32, 96u32), (16, 512)];
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let t = Arc::clone(&t);
+            vthread::spawn(move || t.cost(1, &members))
+        })
+        .collect();
+    let costs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(t.evaluations(), 1, "racing misses must collapse to one evaluation");
+    assert_eq!(t.lookups(), 3);
+    assert_eq!(t.hits(), 2, "every lookup but the winner is a hit");
+    for c in &costs {
+        assert!(Arc::ptr_eq(c, &costs[0]), "all racers must share one cell");
+    }
+}
+
+#[test]
+fn batch_table_racing_misses_evaluate_once() {
+    let report = explore(
+        ExploreOptions {
+            name: "batch-table-miss-race",
+            preemption_bound: Some(3),
+            max_interleavings: 25_000,
+            ..Default::default()
+        },
+        batch_table_racing_misses_scenario,
+    );
+    report.expect_pass("batch-table-miss-race");
+    assert!(report.interleavings >= 6, "three racers must explore claim orders");
+}
+
+// ---------------------------------------------------------------------
+// util::par: job queue, latch, shutdown
+// ---------------------------------------------------------------------
+
+/// The pool's fan-out/latch/drain protocol under every interleaving of
+/// worker and caller: correct in-order results, then a clean
+/// drain-and-join shutdown. A lost latch or shutdown wakeup shows up as
+/// a deadlock (all threads blocked, no timeout), which the checker
+/// reports with a schedule.
+fn scoped_pool_map_scenario() {
+    let pool = ScopedPool::new(1);
+    let items = [1u64, 2, 3];
+    let out = pool.par_map(&items, |&x| x * 10);
+    assert_eq!(out, vec![10, 20, 30]);
+    pool.shutdown();
+}
+
+#[test]
+fn pool_latch_releases_on_normal_path() {
+    let report = explore(
+        ExploreOptions {
+            name: "pool-map-shutdown",
+            preemption_bound: Some(2),
+            max_interleavings: 25_000,
+            ..Default::default()
+        },
+        scoped_pool_map_scenario,
+    );
+    report.expect_pass("pool-map-shutdown");
+    assert!(report.interleavings >= 2, "caller × worker must branch");
+}
+
+/// The latch's panic path: a chunk panicking on a pool worker must still
+/// release the caller's latch (carrying the payload), leave the pool
+/// usable, and shut down cleanly afterwards.
+fn scoped_pool_panic_scenario() {
+    let pool = ScopedPool::new(1);
+    let items = [0u64, 1];
+    let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        pool.par_map(&items, |&x| {
+            assert!(x != 1, "injected pool panic");
+            x
+        })
+    }));
+    assert!(r.is_err(), "pool-chunk panic must propagate through the latch");
+    // the latch released with the payload and the worker survived: the
+    // pool still serves correct results
+    assert_eq!(pool.par_map(&items, |&x| x + 1), vec![1, 2]);
+    pool.shutdown();
+}
+
+#[test]
+fn pool_latch_releases_on_panic_path() {
+    let report = with_quiet_panics(|| {
+        explore(
+            ExploreOptions {
+                name: "pool-panic-latch",
+                preemption_bound: Some(2),
+                max_interleavings: 25_000,
+                ..Default::default()
+            },
+            scoped_pool_panic_scenario,
+        )
+    });
+    report.expect_pass("pool-panic-latch");
+    assert!(report.interleavings >= 2);
+}
+
+// ---------------------------------------------------------------------
+// The checker catches seeded bugs and replays them
+// ---------------------------------------------------------------------
+
+/// Deliberately racy toy: a two-thread read-modify-write on a shared
+/// counter without a lock. Some interleaving loses an update; the
+/// checker must find it.
+fn lost_update_scenario() {
+    let n = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let n = Arc::clone(&n);
+            vthread::spawn(move || {
+                let v = n.load(Ordering::SeqCst);
+                n.store(v + 1, Ordering::SeqCst);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+}
+
+#[test]
+fn lost_update_toy_is_caught_and_replays_deterministically() {
+    let report = with_quiet_panics(|| {
+        explore(
+            ExploreOptions { name: "toy-lost-update", ..Default::default() },
+            lost_update_scenario,
+        )
+    });
+    let failure = report.expect_failure("toy-lost-update").clone();
+    assert!(failure.message.contains("lost update"), "got: {}", failure.message);
+    assert!(!failure.schedule.is_empty(), "failure must carry a replayable schedule");
+    // the recorded schedule pins the interleaving: replaying it (twice)
+    // reproduces the identical failure
+    for _ in 0..2 {
+        let replayed = with_quiet_panics(|| {
+            replay("toy-lost-update", &failure.schedule, lost_update_scenario)
+        });
+        let rf = replayed.failure.expect("replay must reproduce the failure");
+        assert_eq!(rf.message, failure.message, "replay diverged from the schedule");
+    }
+}
+
+/// The `HETSCHED_CHECK_SCHEDULE=<name>:<picks>` environment variable —
+/// what a failing CI log tells you to set — runs exactly the named
+/// interleaving instead of exploring.
+#[test]
+fn env_schedule_string_replays_exactly_one_interleaving() {
+    let report = with_quiet_panics(|| {
+        explore(
+            ExploreOptions { name: "env-lost-update", ..Default::default() },
+            lost_update_scenario,
+        )
+    });
+    let failure = report.expect_failure("env-lost-update").clone();
+    std::env::set_var(
+        "HETSCHED_CHECK_SCHEDULE",
+        format!("env-lost-update:{}", failure.schedule),
+    );
+    let replayed = with_quiet_panics(|| {
+        explore(
+            ExploreOptions { name: "env-lost-update", ..Default::default() },
+            lost_update_scenario,
+        )
+    });
+    std::env::remove_var("HETSCHED_CHECK_SCHEDULE");
+    assert_eq!(replayed.interleavings, 1, "env replay must run exactly one schedule");
+    let rf = replayed.failure.expect("env replay must reproduce the failure");
+    assert_eq!(rf.message, failure.message);
+}
