@@ -10,6 +10,7 @@ use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::hw::catalog::{extended_catalog, find_system};
 use crate::hw::spec::SystemSpec;
 use crate::sched::formation::FormationPolicy;
+use crate::sched::overload::AdmissionConfig;
 use crate::sim::engine::{BatchMode, BatchingOptions, QueueModel};
 use crate::workload::generator::Arrival;
 use crate::workload::source::{TenantMix, TenantSpec};
@@ -232,6 +233,12 @@ pub struct ExperimentConfig {
     /// fleet-sizing sweep description (`[fleet]`): `None` unless the
     /// config file carries the section
     pub fleet: Option<FleetConfig>,
+    /// SLO-aware admission / load-shedding knobs (`[admission]`): the
+    /// shared [`crate::sched::overload::OverloadPolicy`] consumed by the
+    /// serving router and both simulator engines. `None` disables
+    /// admission everywhere and every report stays bit-identical to the
+    /// historical no-shedding path.
+    pub admission: Option<AdmissionConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -248,6 +255,7 @@ impl Default for ExperimentConfig {
             serve: ServeConfig::default(),
             batching: None,
             fleet: None,
+            admission: None,
         }
     }
 }
@@ -550,6 +558,50 @@ impl ExperimentConfig {
                 Some(FleetConfig { count_grids, rates, slo_p99_s, queries, seed, bucket_bins });
         }
 
+        // [admission]: SLO-aware admission & load shedding — the shared
+        // overload policy (sched::overload) consumed by the serving
+        // router and both simulator engines. Strict: every shedding knob
+        // requires `enabled = true`, so a section that configures a shed
+        // budget but forgets the switch is an error, not a silent no-op.
+        if let Some(t) = doc.section("admission") {
+            let enabled = match t.get("enabled") {
+                Some(v) => v.as_bool().ok_or("admission.enabled must be a boolean")?,
+                None => false,
+            };
+            let knobs =
+                ["queue_budget", "default_slo_s", "tenant_slo_s", "tenant_rate", "tenant_burst"];
+            if !enabled {
+                if let Some(key) = knobs.iter().find(|k| t.get(k).is_some()) {
+                    return Err(format!(
+                        "admission.{key} requires admission.enabled = true (an [admission] \
+                         section without the switch never sheds)"
+                    ));
+                }
+            } else {
+                let mut a = AdmissionConfig::default();
+                if let Some(v) = t.get("queue_budget") {
+                    a.queue_budget = require_usize(v, "admission.queue_budget")?;
+                }
+                if let Some(v) = t.get("default_slo_s") {
+                    a.default_slo_s = require_f64(v, "admission.default_slo_s")?;
+                }
+                if t.get("tenant_slo_s").is_some() {
+                    a.tenant_slo_s = require_f64_array(t, "tenant_slo_s", "admission.tenant_slo_s")?;
+                }
+                if t.get("tenant_rate").is_some() {
+                    a.tenant_rate = require_f64_array(t, "tenant_rate", "admission.tenant_rate")?;
+                }
+                if t.get("tenant_burst").is_some() {
+                    a.tenant_burst = require_f64_array(t, "tenant_burst", "admission.tenant_burst")?;
+                }
+                // burst defaults to one query per configured bucket
+                if a.tenant_burst.is_empty() && !a.tenant_rate.is_empty() {
+                    a.tenant_burst = vec![1.0; a.tenant_rate.len()];
+                }
+                cfg.admission = Some(a);
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -665,6 +717,63 @@ impl ExperimentConfig {
             }
             if f.bucket_bins == 0 {
                 return Err("fleet.bucket_bins must be >= 1".into());
+            }
+        }
+        if let Some(a) = &self.admission {
+            // zero, negatives, and NaN are all rejected; INFINITY (the
+            // programmatic "no deadline") passes.
+            if a.default_slo_s.is_nan() || a.default_slo_s <= 0.0 {
+                return Err(format!(
+                    "admission.default_slo_s must be positive, got {}",
+                    a.default_slo_s
+                ));
+            }
+            for &s in &a.tenant_slo_s {
+                if s.is_nan() || s <= 0.0 {
+                    return Err(format!(
+                        "admission.tenant_slo_s entries must be positive, got {s}"
+                    ));
+                }
+            }
+            for &r in &a.tenant_rate {
+                if !(r.is_finite() && r > 0.0) {
+                    return Err(format!(
+                        "admission.tenant_rate entries must be positive, got {r}"
+                    ));
+                }
+            }
+            if a.tenant_burst.len() != a.tenant_rate.len() {
+                return Err(format!(
+                    "admission.tenant_burst has {} entries but admission.tenant_rate has {} \
+                     (one bucket capacity per configured rate)",
+                    a.tenant_burst.len(),
+                    a.tenant_rate.len()
+                ));
+            }
+            for &b in &a.tenant_burst {
+                if !(b.is_finite() && b >= 1.0) {
+                    return Err(format!(
+                        "admission.tenant_burst entries must be >= 1 (a bucket must hold at \
+                         least one query), got {b}"
+                    ));
+                }
+            }
+            // Per-tenant arrays index by Query::tenant, which the
+            // workload draws from its tenant mix — an entry past the mix
+            // is an unknown tenant reference, not headroom.
+            let n_tenants = self.workload.tenants.as_ref().map_or(1, |m| m.tenants.len());
+            for (key, len) in [
+                ("tenant_slo_s", a.tenant_slo_s.len()),
+                ("tenant_rate", a.tenant_rate.len()),
+            ] {
+                if len > n_tenants {
+                    return Err(format!(
+                        "admission.{key} references unknown tenant {} (the workload defines \
+                         {n_tenants} tenant{})",
+                        len - 1,
+                        if n_tenants == 1 { "" } else { "s" }
+                    ));
+                }
             }
         }
         if let PolicyConfig::Cost { lambda } | PolicyConfig::Oracle { lambda } = self.policy {
@@ -946,6 +1055,95 @@ max_batch = 4
             ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = 0\n", ">= 1"),
             ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = 2.5\n", "integer"),
             ("[fleet]\ncounts = [[1], [1]]\nbucket_bins = -4\n", ">= 0"),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");
+        }
+    }
+
+    /// Overload PR: the `[admission]` section round-trips into the
+    /// shared `AdmissionConfig`, strictly gated on `enabled = true`.
+    #[test]
+    fn admission_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(concat!(
+            "[workload]\n",
+            "tenant_weights = [3.0, 1.0]\n",
+            "tenant_in_mu = [4.0, 6.0]\n",
+            "tenant_in_sigma = [0.5, 0.8]\n",
+            "tenant_out_mu = [3.5, 5.5]\n",
+            "tenant_out_sigma = [0.4, 0.9]\n",
+            "[admission]\n",
+            "enabled = true\n",
+            "queue_budget = 16\n",
+            "default_slo_s = 30.0\n",
+            "tenant_slo_s = [5.0, 60.0]\n",
+            "tenant_rate = [100.0, 10.0]\n",
+            "tenant_burst = [20.0, 5.0]\n",
+        ))
+        .unwrap();
+        let a = cfg.admission.expect("enabled = true must populate the config");
+        assert_eq!(a.queue_budget, 16);
+        assert_eq!(a.default_slo_s, 30.0);
+        assert_eq!(a.tenant_slo_s, vec![5.0, 60.0]);
+        assert_eq!(a.tenant_rate, vec![100.0, 10.0]);
+        assert_eq!(a.tenant_burst, vec![20.0, 5.0]);
+
+        // enabled with no knobs: the vacuous config (admits everything)
+        let cfg = ExperimentConfig::from_toml_str("[admission]\nenabled = true\n").unwrap();
+        assert_eq!(cfg.admission.expect("vacuous but enabled"), AdmissionConfig::default());
+
+        // burst defaults to one query per configured rate
+        let cfg =
+            ExperimentConfig::from_toml_str("[admission]\nenabled = true\ntenant_rate = [50.0]\n")
+                .unwrap();
+        assert_eq!(cfg.admission.expect("rate-only bucket").tenant_burst, vec![1.0]);
+
+        // absent section and an explicit `enabled = false` both stay None
+        assert!(ExperimentConfig::from_toml_str("").unwrap().admission.is_none());
+        assert!(ExperimentConfig::from_toml_str("[admission]\nenabled = false\n")
+            .unwrap()
+            .admission
+            .is_none());
+    }
+
+    /// Overload PR satellite: strict `[admission]` error paths — zero or
+    /// negative SLOs, unknown tenant references, and shedding knobs
+    /// without `enabled = true` are named errors, never silent defaults.
+    #[test]
+    fn admission_error_paths() {
+        for (src, needle) in [
+            // a shed budget without the enable switch is a mistake
+            ("[admission]\nqueue_budget = 8\n", "requires admission.enabled"),
+            (
+                "[admission]\nenabled = false\ndefault_slo_s = 1.0\n",
+                "requires admission.enabled",
+            ),
+            ("[admission]\nenabled = \"yes\"\n", "boolean"),
+            // SLOs must be positive
+            ("[admission]\nenabled = true\ndefault_slo_s = 0\n", "positive"),
+            ("[admission]\nenabled = true\ndefault_slo_s = -2.5\n", "positive"),
+            ("[admission]\nenabled = true\ndefault_slo_s = \"fast\"\n", "number"),
+            ("[admission]\nenabled = true\ntenant_slo_s = [-1.0]\n", "positive"),
+            ("[admission]\nenabled = true\ntenant_slo_s = [0.0]\n", "positive"),
+            // queue budget: strict integer, no sign-saturation
+            ("[admission]\nenabled = true\nqueue_budget = 2.5\n", "integer"),
+            ("[admission]\nenabled = true\nqueue_budget = -1\n", ">= 0"),
+            // token buckets: positive rates, capacity >= 1, arity-matched
+            ("[admission]\nenabled = true\ntenant_rate = [0.0]\n", "positive"),
+            ("[admission]\nenabled = true\ntenant_rate = [-5.0]\n", "positive"),
+            (
+                "[admission]\nenabled = true\ntenant_rate = [10.0]\ntenant_burst = [0.5]\n",
+                ">= 1",
+            ),
+            ("[admission]\nenabled = true\ntenant_burst = [4.0]\n", "tenant_rate"),
+            (
+                "[admission]\nenabled = true\ntenant_rate = [10.0]\ntenant_burst = [2.0, 2.0]\n",
+                "tenant_rate",
+            ),
+            // per-tenant arrays past the workload's mix reference a
+            // tenant that cannot arrive (default workload: 1 tenant)
+            ("[admission]\nenabled = true\ntenant_slo_s = [1.0, 2.0]\n", "unknown tenant"),
+            ("[admission]\nenabled = true\ntenant_rate = [10.0, 10.0]\n", "unknown tenant"),
         ] {
             let err = ExperimentConfig::from_toml_str(src).unwrap_err();
             assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");

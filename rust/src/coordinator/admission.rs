@@ -46,6 +46,27 @@ impl SloAdmission {
         view.queue_depth_s[sid] + self.energy.runtime(spec, q.input_tokens, q.output_tokens)
     }
 
+    /// [`Self::eta_s`] for callers whose queue view counts *requests*
+    /// rather than seconds (the serving router's [`crate::coordinator::batcher::SystemQueue`]
+    /// exposes only a length): each request ahead is modeled as costing
+    /// this query's own service time, so the estimate is
+    /// `(queue_len + 1) × runtime` — deliberately simple, and exactly
+    /// the estimator the server feeds the shared
+    /// [`crate::sched::overload::OverloadPolicy`].
+    pub fn eta_from_len(
+        &self,
+        systems: &[SystemSpec],
+        q: &Query,
+        sid: usize,
+        queue_len: usize,
+    ) -> f64 {
+        let spec: &SystemSpec = &systems[sid];
+        if self.energy.perf.feasibility(spec, q.input_tokens, q.output_tokens) != Feasibility::Ok {
+            return f64::INFINITY;
+        }
+        (queue_len as f64 + 1.0) * self.energy.runtime(spec, q.input_tokens, q.output_tokens)
+    }
+
     /// Decide for a request routed to `chosen` with deadline `slo_s`.
     pub fn admit(&self, view: &ClusterView, q: &Query, chosen: SystemId, slo_s: Option<f64>) -> Verdict {
         let Some(slo) = slo_s else { return Verdict::Keep(chosen) };
@@ -150,6 +171,19 @@ mod tests {
             Verdict::Upgrade { to, .. } => assert_eq!(to, SystemId::PALMETTO_V100),
             other => panic!("expected upgrade to V100, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn eta_from_len_scales_with_backlog() {
+        let (adm, systems) = setup();
+        let q = Query::new(0, 64, 32);
+        let empty = adm.eta_from_len(&systems, &q, 1, 0);
+        let backlogged = adm.eta_from_len(&systems, &q, 1, 9);
+        assert!(empty.is_finite() && empty > 0.0);
+        assert!((backlogged - 10.0 * empty).abs() <= 1e-9 * backlogged);
+        // infeasible stays infinite regardless of backlog
+        let big = Query::new(1, 8, 4096);
+        assert!(adm.eta_from_len(&systems, &big, 0, 0).is_infinite());
     }
 
     #[test]

@@ -50,6 +50,10 @@ use std::time::Duration;
 pub enum Rejected {
     QueueFull,
     ShuttingDown,
+    /// reject-on-arrival by the shared overload policy
+    /// ([`crate::sched::overload::OverloadPolicy`]): the request never
+    /// reached a queue
+    Shed(crate::sched::overload::ShedReason),
 }
 
 /// Reusable buffers for the shape-aware formation step of
@@ -338,7 +342,15 @@ mod tests {
     fn req(id: u64) -> (Request, mpsc::Receiver<super::super::request::Response>) {
         let (tx, rx) = mpsc::channel();
         (
-            Request { id, prompt: vec![0, 1], gen_tokens: 1, submitted: Instant::now(), respond: tx },
+            Request {
+                id,
+                prompt: vec![0, 1],
+                gen_tokens: 1,
+                tenant: 0,
+                slo_s: f64::INFINITY,
+                submitted: Instant::now(),
+                respond: tx,
+            },
             rx,
         )
     }
@@ -544,7 +556,7 @@ mod tests {
                     match q.push(r) {
                         Ok(()) => Some(rx),
                         Err((_, Rejected::ShuttingDown)) => None,
-                        Err((_, Rejected::QueueFull)) => panic!("cap 8 queue cannot be full"),
+                        Err((_, why)) => panic!("cap 8 queue cannot reject with {why:?}"),
                     }
                 })
             };

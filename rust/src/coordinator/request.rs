@@ -9,6 +9,12 @@ pub struct Request {
     /// token ids including BOS
     pub prompt: Vec<i32>,
     pub gen_tokens: u32,
+    /// tenant identity for per-tenant admission accounting (0 = the
+    /// default tenant; same convention as [`crate::workload::Query`])
+    pub tenant: u32,
+    /// end-to-end latency SLO in seconds (`f64::INFINITY` = none) —
+    /// consulted by the router's reject-on-arrival admission check
+    pub slo_s: f64,
     pub submitted: Instant,
     /// where the worker sends the response
     pub respond: mpsc::Sender<Response>,
@@ -57,7 +63,15 @@ mod tests {
     #[test]
     fn request_m_is_prompt_len() {
         let (tx, _rx) = mpsc::channel();
-        let r = Request { id: 1, prompt: vec![0, 5, 9], gen_tokens: 4, submitted: Instant::now(), respond: tx };
+        let r = Request {
+            id: 1,
+            prompt: vec![0, 5, 9],
+            gen_tokens: 4,
+            tenant: 0,
+            slo_s: f64::INFINITY,
+            submitted: Instant::now(),
+            respond: tx,
+        };
         assert_eq!(r.input_tokens(), 3);
     }
 

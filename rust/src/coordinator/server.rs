@@ -5,16 +5,19 @@
 //! response arrives on). Shutdown is graceful: queues close, workers
 //! drain, threads join.
 
+use super::admission::SloAdmission;
 use super::batcher::{Rejected, SystemQueue};
 use super::request::{Request, Response};
 use crate::anyhow;
 use crate::config::schema::ExperimentConfig;
+use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
 use crate::metrics::Registry;
 use crate::model::find_llm;
 use crate::perf::energy::EnergyModel;
-use crate::perf::model::PerfModel;
+use crate::perf::model::{Feasibility, PerfModel};
 use crate::runtime::engine::SamplingParams;
+use crate::sched::overload::{AdmitDecision, OverloadPolicy, ShedReason};
 use crate::sched::policy::{build_policy, ClusterView, Policy};
 use crate::util::error::Result;
 use crate::workload::Query;
@@ -43,6 +46,15 @@ struct Inner {
     next_id: AtomicU64,
     metrics: Arc<Registry>,
     default_gen: u32,
+    /// completion-time estimator the router feeds the overload policy
+    slo_eta: SloAdmission,
+    /// shared admission policy, live iff `[admission]` was configured —
+    /// the same implementation both simulator engines run, so serving
+    /// and sim cannot drift
+    overload: Option<Mutex<OverloadPolicy>>,
+    /// the server's epoch: token-bucket refill times are seconds since
+    /// this instant
+    started: Instant,
 }
 
 /// Point-in-time server statistics.
@@ -50,6 +62,10 @@ struct Inner {
 pub struct ServerStats {
     pub submitted: u64,
     pub rejected: u64,
+    /// rejections decided by the overload policy on arrival (a subset
+    /// of `rejected`), split by reason in the metrics registry
+    /// (`router.shed.{rate_limit,queue,slo}`)
+    pub shed: u64,
     pub queue_lens: Vec<usize>,
 }
 
@@ -102,10 +118,13 @@ impl Server {
             policy: Mutex::new(policy),
             queues: queues.clone(),
             systems,
+            slo_eta: SloAdmission::new(energy.clone()),
             energy,
             next_id: AtomicU64::new(0),
             metrics,
             default_gen: cfg.serve.gen_tokens,
+            overload: cfg.admission.clone().map(|a| Mutex::new(OverloadPolicy::new(a))),
+            started: serving_epoch(),
         });
         Ok(Server { handle: ServerHandle { inner }, queues, workers })
     }
@@ -180,31 +199,114 @@ impl Server {
     }
 }
 
+/// Sanctioned wall-clock: the server's epoch anchors token-bucket
+/// refill to real arrival time observed at the serving boundary, never
+/// inside sim/perf (see clippy.toml `disallowed-methods`).
+#[allow(clippy::disallowed_methods)]
+fn serving_epoch() -> Instant {
+    Instant::now()
+}
+
 impl ServerHandle {
-    /// Submit a request; returns the response channel, or the rejection
-    /// reason under backpressure.
+    /// Submit a request for the default tenant with no deadline;
+    /// returns the response channel, or the rejection reason under
+    /// backpressure. See [`Self::submit_with`] for tenant/SLO-aware
+    /// submission.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: Option<u32>,
+    ) -> Result<mpsc::Receiver<Response>, Rejected> {
+        self.submit_with(prompt, gen_tokens, 0, None)
+    }
+
+    /// Submit a request carrying a tenant identity and an optional
+    /// end-to-end latency SLO. When the server was configured with an
+    /// `[admission]` section, the shared overload policy
+    /// ([`crate::sched::overload::OverloadPolicy`] — the same
+    /// implementation both simulator engines run) may reject on arrival
+    /// with [`Rejected::Shed`]: per-tenant token-bucket rate limiting,
+    /// queue-budget backpressure, or an unmeetable deadline. An SLO may
+    /// also *upgrade* the routing to a faster system than the policy's
+    /// energy-optimal pick.
     // Sanctioned wall-clock: the submission timestamp is a real arrival
     // time observed at the serving boundary, never inside sim/perf (see
     // clippy.toml `disallowed-methods`).
     #[allow(clippy::disallowed_methods)]
-    pub fn submit(&self, prompt: Vec<i32>, gen_tokens: Option<u32>) -> Result<mpsc::Receiver<Response>, Rejected> {
+    pub fn submit_with(
+        &self,
+        prompt: Vec<i32>,
+        gen_tokens: Option<u32>,
+        tenant: u32,
+        slo_s: Option<f64>,
+    ) -> Result<mpsc::Receiver<Response>, Rejected> {
         let inner = &self.inner;
         let gen = gen_tokens.unwrap_or(inner.default_gen);
         let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        let req = Request { id, prompt, gen_tokens: gen, submitted: Instant::now(), respond: tx };
+        let req = Request {
+            id,
+            prompt,
+            gen_tokens: gen,
+            tenant,
+            slo_s: slo_s.unwrap_or(f64::INFINITY),
+            submitted: Instant::now(),
+            respond: tx,
+        };
 
         // route: policy sees (m, n) and live queue state — exactly the
         // paper's decision inputs plus load
         let depths: Vec<f64> = inner.queues.iter().map(|q| q.depth() as f64).collect();
         let lens: Vec<usize> = inner.queues.iter().map(|q| q.len()).collect();
-        let q = Query::new(id, req.input_tokens(), gen);
-        let sid = {
+        let q = Query::new(id, req.input_tokens(), gen)
+            .with_tenant(tenant)
+            .with_slo(slo_s.unwrap_or(f64::INFINITY));
+        let mut sid = {
             let mut policy = inner.policy.lock().unwrap();
             let view = ClusterView { systems: &inner.systems, queue_depth_s: &depths, queue_len: &lens };
             policy.assign(&q, &view)
         };
         inner.metrics.counter("router.submitted").inc();
+
+        // reject-on-arrival via the shared overload policy, strictly
+        // after `policy.assign` so shed submissions still advance policy
+        // state — the same ordering invariant both simulator engines
+        // keep
+        if let Some(ov) = &inner.overload {
+            let now_s = inner.started.elapsed().as_secs_f64();
+            let mut eta = |s: usize| inner.slo_eta.eta_from_len(&inner.systems, &q, s, lens[s]);
+            let decision = ov.lock().unwrap().decide(&q, now_s, sid.0, &lens, &mut eta);
+            match decision {
+                AdmitDecision::Admit(s2) => {
+                    // never upgrade onto an infeasible system (only
+                    // reachable for deadline-free requests when every
+                    // eligible system is infeasible)
+                    if s2 != sid.0
+                        && inner.energy.perf.feasibility(
+                            &inner.systems[s2],
+                            q.input_tokens,
+                            q.output_tokens,
+                        ) == Feasibility::Ok
+                    {
+                        inner.metrics.counter("router.upgraded").inc();
+                        sid = SystemId(s2);
+                    }
+                }
+                AdmitDecision::Shed(reason) => {
+                    inner
+                        .metrics
+                        .counter(match reason {
+                            ShedReason::RateLimit => "router.shed.rate_limit",
+                            ShedReason::QueueFull => "router.shed.queue",
+                            ShedReason::SloBust => "router.shed.slo",
+                        })
+                        .inc();
+                    inner.metrics.counter("router.shed").inc();
+                    inner.metrics.counter("router.rejected").inc();
+                    return Err(Rejected::Shed(reason));
+                }
+            }
+        }
         inner.metrics.counter(&format!("router.to.{}", inner.systems[sid.0].name)).inc();
 
         match inner.queues[sid.0].push(req) {
@@ -220,6 +322,7 @@ impl ServerHandle {
         ServerStats {
             submitted: self.inner.metrics.counter("router.submitted").get(),
             rejected: self.inner.metrics.counter("router.rejected").get(),
+            shed: self.inner.metrics.counter("router.shed").get(),
             queue_lens: self.inner.queues.iter().map(|q| q.len()).collect(),
         }
     }

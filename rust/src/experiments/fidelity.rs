@@ -1,0 +1,526 @@
+//! `hetsched fidelity` — the sim-vs-serving fidelity harness that pins
+//! the overload story end to end: the *same trace* is driven through
+//! the real coordinator (`Server` over [`SimBackend`], wall-clock
+//! compressed by `time_scale`) and through the batched simulator under
+//! both queue models, with the *same* shared admission policy
+//! ([`crate::sched::overload::OverloadPolicy`]) live in both stacks.
+//! The result is a machine-readable divergence report (FIDELITY.json,
+//! schema `hetsched-fidelity/1`) asserted by `rust/tests/fidelity.rs`
+//! and uploaded as a CI artifact next to BENCH.json.
+//!
+//! What "fidelity" means here, per axis:
+//!
+//! - **Energy** — serving charges each request
+//!   [`crate::coordinator::energy_acct::attribute`] over the backend's
+//!   *modeled* phase times; the sim charges the same phase-power model
+//!   through its batch cost. The serving total must land inside (or
+//!   within [`FidelityReport::ENERGY_REL_TOL`] of) the bracket the two
+//!   sim queue models span.
+//! - **p99 latency** — serving latencies are measured wall clock and
+//!   rescaled by `1 / time_scale` back into modeled seconds; the
+//!   tolerance ([`FidelityReport::P99_REL_TOL`]) is loose because real
+//!   dispatch overhead and scheduler jitter ride on top of the model.
+//! - **Shed rate** — both stacks run the identical admission config, so
+//!   their shed *rates* must agree within
+//!   [`FidelityReport::SHED_RATE_ABS_TOL`] even though individual shed
+//!   decisions depend on instantaneous queue state and cannot match
+//!   query for query.
+//! - **Batch composition** — mean realized batch size, report-only
+//!   (serving's linger clock is real time, so sizes are noisier).
+//!
+//! Token-bucket rates are deliberately absent from the default
+//! harness config: bucket refill runs on *real* seconds in the server
+//! and *modeled* seconds in the sim, so under wall-clock compression a
+//! rate-limited comparison would need `tenant_rate / time_scale`
+//! rescaling on the serving side. Queue budgets and SLOs are timeless
+//! or modeled-time quantities and compare directly.
+
+use crate::config::schema::{ExperimentConfig, PolicyConfig, ServeConfig};
+use crate::coordinator::batcher::Rejected;
+use crate::coordinator::server::Server;
+use crate::model::find_llm;
+use crate::perf::cost_table::{BatchTable, CostTable};
+use crate::perf::energy::EnergyModel;
+use crate::perf::model::PerfModel;
+use crate::sched::overload::AdmissionConfig;
+use crate::sched::policy::build_policy;
+use crate::sim::engine::{simulate_batched_with_tables, BatchingOptions, QueueModel, SimOptions};
+use crate::sim::report::SimReport;
+use crate::util::json::{to_string as json_to_string, Json};
+use crate::util::stats::percentile;
+use crate::workload::generator::{Arrival, TraceGenerator};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs for [`run_fidelity`]. `Default` is the full harness;
+/// [`FidelityOptions::smoke`] (CI) compresses harder and shortens the
+/// trace so the whole run finishes in a few seconds.
+#[derive(Clone, Debug)]
+pub struct FidelityOptions {
+    /// trace length driven through both stacks
+    pub queries: usize,
+    /// trace seed
+    pub seed: u64,
+    /// Poisson arrival rate λ (queries/s, modeled time)
+    pub rate: f64,
+    /// dynamic-batching cap, mirrored into `serve.max_batch`
+    pub max_batch: usize,
+    /// batching linger in *modeled* seconds; the server waits
+    /// `linger_s × time_scale` of real time
+    pub linger_s: f64,
+    /// wall-clock compression: one modeled second costs `time_scale`
+    /// real seconds in the serving run (must be > 0)
+    pub time_scale: f64,
+    /// shared admission config, live in both stacks (`None` = off —
+    /// the harness then pins fidelity of the un-shed path)
+    pub admission: Option<AdmissionConfig>,
+}
+
+impl Default for FidelityOptions {
+    fn default() -> Self {
+        Self {
+            queries: 240,
+            seed: 2024,
+            rate: 40.0,
+            max_batch: 4,
+            linger_s: 0.05,
+            time_scale: 0.01,
+            admission: Some(AdmissionConfig { queue_budget: 48, ..AdmissionConfig::default() }),
+        }
+    }
+}
+
+impl FidelityOptions {
+    /// The CI smoke configuration: short trace, harder compression —
+    /// seconds of wall clock, every divergence axis still exercised.
+    pub fn smoke() -> Self {
+        Self { queries: 120, time_scale: 0.005, ..Self::default() }
+    }
+}
+
+/// Per-system divergence row of a [`FidelityReport`].
+#[derive(Clone, Debug)]
+pub struct SystemFidelity {
+    pub name: String,
+    /// requests the serving run completed on this system
+    pub serve_queries: u64,
+    /// Σ serving-attributed energy (J)
+    pub serve_energy_j: f64,
+    /// sim queries per queue model `[PerWorker, PerClass]`
+    pub sim_queries: [u64; 2],
+    /// sim energy per queue model (J)
+    pub sim_energy_j: [f64; 2],
+}
+
+/// The divergence report: serving measurements against the
+/// `[PerWorker, PerClass]` sim bracket, plus pass/fail against the
+/// documented tolerances. `to_json` is the FIDELITY.json document.
+#[derive(Clone, Debug)]
+pub struct FidelityReport {
+    pub queries: usize,
+    pub seed: u64,
+    pub rate: f64,
+    pub time_scale: f64,
+    /// whether the shared admission policy was live
+    pub admission: bool,
+    pub systems: Vec<SystemFidelity>,
+    pub serve_total_energy_j: f64,
+    /// sim totals `[PerWorker, PerClass]`
+    pub sim_total_energy_j: [f64; 2],
+    /// relative distance of the serving total to the sim bracket
+    /// (0 when inside)
+    pub energy_bracket_err: f64,
+    /// serving p99 in modeled seconds (wall clock ÷ `time_scale`)
+    pub serve_p99_s: f64,
+    pub sim_p99_s: [f64; 2],
+    pub p99_bracket_err: f64,
+    pub serve_served: u64,
+    pub serve_shed: u64,
+    pub serve_shed_rate: f64,
+    pub sim_shed_rate: [f64; 2],
+    /// min absolute shed-rate gap to either sim point
+    pub shed_rate_abs_err: f64,
+    /// mean realized batch size (report-only axis)
+    pub serve_mean_batch: f64,
+    pub sim_mean_batch: [f64; 2],
+    /// serving makespan in modeled seconds
+    pub serve_makespan_s: f64,
+    pub sim_makespan_s: [f64; 2],
+}
+
+impl FidelityReport {
+    /// Documented divergence thresholds — `rust/tests/fidelity.rs`
+    /// asserts against exactly these, and FIDELITY.json records them
+    /// next to the measurements so the artifact is self-describing.
+    pub const ENERGY_REL_TOL: f64 = 0.30;
+    pub const P99_REL_TOL: f64 = 1.5;
+    pub const SHED_RATE_ABS_TOL: f64 = 0.20;
+
+    pub fn energy_ok(&self) -> bool {
+        self.energy_bracket_err <= Self::ENERGY_REL_TOL
+    }
+
+    pub fn p99_ok(&self) -> bool {
+        self.p99_bracket_err <= Self::P99_REL_TOL
+    }
+
+    pub fn shed_ok(&self) -> bool {
+        self.shed_rate_abs_err <= Self::SHED_RATE_ABS_TOL
+    }
+
+    pub fn passes(&self) -> bool {
+        self.energy_ok() && self.p99_ok() && self.shed_ok()
+    }
+
+    /// Human-readable summary lines (the CLI prints these; the JSON is
+    /// the artifact).
+    pub fn lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(format!(
+            "fidelity: {} queries (λ={}, seed {}), time_scale {}, admission {}",
+            self.queries,
+            self.rate,
+            self.seed,
+            self.time_scale,
+            if self.admission { "on" } else { "off" }
+        ));
+        out.push(format!(
+            "  energy: serve {:.1} J vs sim [{:.1}, {:.1}] J -> bracket err {:.3} (tol {}) {}",
+            self.serve_total_energy_j,
+            self.sim_total_energy_j[0],
+            self.sim_total_energy_j[1],
+            self.energy_bracket_err,
+            Self::ENERGY_REL_TOL,
+            if self.energy_ok() { "OK" } else { "DIVERGED" }
+        ));
+        out.push(format!(
+            "  p99: serve {:.2} s vs sim [{:.2}, {:.2}] s -> bracket err {:.3} (tol {}) {}",
+            self.serve_p99_s,
+            self.sim_p99_s[0],
+            self.sim_p99_s[1],
+            self.p99_bracket_err,
+            Self::P99_REL_TOL,
+            if self.p99_ok() { "OK" } else { "DIVERGED" }
+        ));
+        out.push(format!(
+            "  shed rate: serve {:.3} ({} shed / {} served) vs sim [{:.3}, {:.3}] -> abs err {:.3} (tol {}) {}",
+            self.serve_shed_rate,
+            self.serve_shed,
+            self.serve_served,
+            self.sim_shed_rate[0],
+            self.sim_shed_rate[1],
+            self.shed_rate_abs_err,
+            Self::SHED_RATE_ABS_TOL,
+            if self.shed_ok() { "OK" } else { "DIVERGED" }
+        ));
+        out.push(format!(
+            "  batch size (report-only): serve {:.2} vs sim [{:.2}, {:.2}]; makespan serve {:.1} s vs sim [{:.1}, {:.1}] s",
+            self.serve_mean_batch,
+            self.sim_mean_batch[0],
+            self.sim_mean_batch[1],
+            self.serve_makespan_s,
+            self.sim_makespan_s[0],
+            self.sim_makespan_s[1],
+        ));
+        for row in &self.systems {
+            out.push(format!(
+                "  {}: serve {} q / {:.1} J vs sim [{} q / {:.1} J, {} q / {:.1} J]",
+                row.name,
+                row.serve_queries,
+                row.serve_energy_j,
+                row.sim_queries[0],
+                row.sim_energy_j[0],
+                row.sim_queries[1],
+                row.sim_energy_j[1],
+            ));
+        }
+        out
+    }
+
+    /// The FIDELITY.json document (compact, schema `hetsched-fidelity/1`).
+    pub fn to_json(&self) -> String {
+        let num = Json::Num;
+        let pair = |p: [f64; 2]| Json::Arr(vec![Json::Num(p[0]), Json::Num(p[1])]);
+        let mut config = BTreeMap::new();
+        config.insert("queries".into(), num(self.queries as f64));
+        config.insert("seed".into(), num(self.seed as f64));
+        config.insert("rate".into(), num(self.rate));
+        config.insert("time_scale".into(), num(self.time_scale));
+        config.insert("admission".into(), Json::Bool(self.admission));
+        let mut tol = BTreeMap::new();
+        tol.insert("energy_rel".into(), num(Self::ENERGY_REL_TOL));
+        tol.insert("p99_rel".into(), num(Self::P99_REL_TOL));
+        tol.insert("shed_rate_abs".into(), num(Self::SHED_RATE_ABS_TOL));
+        let mut div = BTreeMap::new();
+        div.insert("serve_total_energy_j".into(), num(self.serve_total_energy_j));
+        div.insert("sim_total_energy_j".into(), pair(self.sim_total_energy_j));
+        div.insert("energy_bracket_err".into(), num(self.energy_bracket_err));
+        div.insert("serve_p99_s".into(), num(self.serve_p99_s));
+        div.insert("sim_p99_s".into(), pair(self.sim_p99_s));
+        div.insert("p99_bracket_err".into(), num(self.p99_bracket_err));
+        div.insert("serve_served".into(), num(self.serve_served as f64));
+        div.insert("serve_shed".into(), num(self.serve_shed as f64));
+        div.insert("serve_shed_rate".into(), num(self.serve_shed_rate));
+        div.insert("sim_shed_rate".into(), pair(self.sim_shed_rate));
+        div.insert("shed_rate_abs_err".into(), num(self.shed_rate_abs_err));
+        div.insert("serve_mean_batch".into(), num(self.serve_mean_batch));
+        div.insert("sim_mean_batch".into(), pair(self.sim_mean_batch));
+        div.insert("serve_makespan_s".into(), num(self.serve_makespan_s));
+        div.insert("sim_makespan_s".into(), pair(self.sim_makespan_s));
+        let systems: Vec<Json> = self
+            .systems
+            .iter()
+            .map(|row| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(row.name.clone()));
+                m.insert("serve_queries".into(), num(row.serve_queries as f64));
+                m.insert("serve_energy_j".into(), num(row.serve_energy_j));
+                m.insert(
+                    "sim_queries".into(),
+                    pair([row.sim_queries[0] as f64, row.sim_queries[1] as f64]),
+                );
+                m.insert("sim_energy_j".into(), pair(row.sim_energy_j));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str("hetsched-fidelity/1".into()));
+        root.insert("config".into(), Json::Obj(config));
+        root.insert("tolerances".into(), Json::Obj(tol));
+        root.insert("divergence".into(), Json::Obj(div));
+        root.insert("systems".into(), Json::Arr(systems));
+        root.insert("pass".into(), Json::Bool(self.passes()));
+        json_to_string(&Json::Obj(root))
+    }
+}
+
+/// Relative distance of `x` to the closed interval spanned by `pair`
+/// (0 inside; distance over the nearest edge outside). Degenerate
+/// edges at 0 never divide by zero.
+fn bracket_err(x: f64, pair: [f64; 2]) -> f64 {
+    let lo = pair[0].min(pair[1]);
+    let hi = pair[0].max(pair[1]);
+    if x < lo {
+        if lo > 0.0 {
+            (lo - x) / lo
+        } else {
+            0.0
+        }
+    } else if x > hi {
+        if hi > 0.0 {
+            (x - hi) / hi
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        0.0
+    }
+}
+
+// Sanctioned wall-clock: pacing trace arrivals into real submissions
+// happens at the serving boundary, never inside sim/perf (see
+// clippy.toml `disallowed-methods`).
+#[allow(clippy::disallowed_methods)]
+fn harness_epoch() -> Instant {
+    Instant::now()
+}
+
+/// Drive the identical trace through the serving coordinator (over the
+/// model-driven [`crate::runtime::backend::SimBackend`], wall clock
+/// compressed by `time_scale`) and through the batched simulator under
+/// both queue models, and measure the divergence. The energy-optimal
+/// Cost(λ=1) policy routes in both stacks — it is stateless in queue
+/// state, so routing is identical and the measured divergence isolates
+/// timing, batching, and admission dynamics.
+pub fn run_fidelity(opts: &FidelityOptions) -> Result<FidelityReport, String> {
+    if !(opts.time_scale.is_finite() && opts.time_scale > 0.0) {
+        return Err(format!("fidelity time_scale must be > 0, got {}", opts.time_scale));
+    }
+    if opts.queries == 0 {
+        return Err("fidelity queries must be > 0".into());
+    }
+    let policy_cfg = PolicyConfig::Cost { lambda: 1.0 };
+
+    // one serving config is the single source of both stacks' shape:
+    // cluster systems, batching knobs, and the admission section
+    let cfg = ExperimentConfig {
+        policy: policy_cfg.clone(),
+        serve: ServeConfig {
+            max_batch: opts.max_batch,
+            max_wait_s: opts.linger_s * opts.time_scale,
+            // the sim has no queue-cap rejection; keep the server's cap
+            // out of the way so the only reject path is the shared
+            // admission policy
+            queue_cap: opts.queries.max(1024),
+            ..ServeConfig::default()
+        },
+        admission: opts.admission.clone(),
+        ..ExperimentConfig::default()
+    };
+    let systems = cfg.cluster.systems.clone();
+    let llm = find_llm(&cfg.workload.llm)
+        .ok_or_else(|| format!("unknown llm '{}'", cfg.workload.llm))?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+
+    let queries = TraceGenerator::new(Arrival::Poisson { rate: opts.rate }, opts.seed)
+        .generate(opts.queries);
+
+    // ── sim side: both queue models over shared tables ─────────────────
+    let table = CostTable::build(&queries, &systems, &energy);
+    let batch_table = BatchTable::new(energy.clone(), &systems);
+    let sim_run = |qm: QueueModel| -> SimReport {
+        let mut p = build_policy(&policy_cfg, energy.clone(), &systems);
+        let sopts = SimOptions {
+            batching: Some(
+                BatchingOptions::new(opts.max_batch, opts.linger_s).with_queues(qm),
+            ),
+            admission: opts.admission.clone(),
+            ..Default::default()
+        };
+        simulate_batched_with_tables(&queries, &systems, p.as_mut(), &table, &batch_table, &sopts)
+    };
+    let sims = [sim_run(QueueModel::PerWorker), sim_run(QueueModel::PerClass)];
+
+    // ── serving side: real coordinator over the sim backend ────────────
+    let scale = opts.time_scale;
+    let perf = energy.perf.clone();
+    let factory: crate::coordinator::worker::EngineFactory = Arc::new(move |spec| {
+        use crate::runtime::backend::{InferenceBackend, SimBackend};
+        Ok(Box::new(SimBackend::new(spec.clone(), perf.clone()).with_time_scale(scale))
+            as Box<dyn InferenceBackend>)
+    });
+    let server = Server::start(&cfg, factory).map_err(|e| format!("server start: {e:#}"))?;
+    let handle = server.handle();
+    let start = harness_epoch();
+    let mut receivers = Vec::with_capacity(queries.len());
+    let mut serve_shed = 0u64;
+    for q in &queries {
+        let target = q.arrival_s * scale;
+        let elapsed = start.elapsed().as_secs_f64();
+        if target > elapsed {
+            std::thread::sleep(Duration::from_secs_f64(target - elapsed));
+        }
+        let prompt = vec![0i32; q.input_tokens.max(1) as usize];
+        let slo = if q.slo_s.is_finite() { Some(q.slo_s) } else { None };
+        match handle.submit_with(prompt, Some(q.output_tokens), q.tenant, slo) {
+            Ok(rx) => receivers.push(rx),
+            Err(Rejected::Shed(_)) => serve_shed += 1,
+            Err(other) => return Err(format!("unexpected rejection: {other:?}")),
+        }
+    }
+    let mut responses = Vec::with_capacity(receivers.len());
+    for rx in receivers {
+        responses.push(rx.recv().map_err(|_| "worker dropped a response".to_string())?);
+    }
+    let serve_makespan_s = start.elapsed().as_secs_f64() / scale;
+    server.shutdown();
+
+    // ── aggregate + divergence ─────────────────────────────────────────
+    let mut rows: Vec<SystemFidelity> = systems
+        .iter()
+        .enumerate()
+        .map(|(i, s)| SystemFidelity {
+            name: s.name.to_string(),
+            serve_queries: 0,
+            serve_energy_j: 0.0,
+            sim_queries: [sims[0].systems[i].queries, sims[1].systems[i].queries],
+            sim_energy_j: [sims[0].systems[i].energy_j, sims[1].systems[i].energy_j],
+        })
+        .collect();
+    let mut latencies = Vec::with_capacity(responses.len());
+    let mut serve_total_energy_j = 0.0;
+    let mut batch_sum = 0u64;
+    for r in &responses {
+        rows[r.system].serve_queries += 1;
+        rows[r.system].serve_energy_j += r.energy_j;
+        serve_total_energy_j += r.energy_j;
+        latencies.push(r.latency_s / scale);
+        batch_sum += r.batch_size as u64;
+    }
+    let serve_served = responses.len() as u64;
+    let serve_p99_s = if latencies.is_empty() { 0.0 } else { percentile(&latencies, 99.0) };
+    let serve_mean_batch =
+        if serve_served == 0 { 0.0 } else { batch_sum as f64 / serve_served as f64 };
+    let serve_shed_rate = serve_shed as f64 / queries.len() as f64;
+
+    let sim_total_energy_j = [sims[0].total_energy_j, sims[1].total_energy_j];
+    let sim_p99_s = [sims[0].p99_latency_s(), sims[1].p99_latency_s()];
+    let sim_shed_rate = [sims[0].shed_rate(), sims[1].shed_rate()];
+    let sim_mean_batch = [sims[0].mean_batch_size(), sims[1].mean_batch_size()];
+    let sim_makespan_s = [sims[0].makespan_s, sims[1].makespan_s];
+    let shed_rate_abs_err = sim_shed_rate
+        .iter()
+        .map(|s| (serve_shed_rate - s).abs())
+        .fold(f64::INFINITY, f64::min);
+
+    Ok(FidelityReport {
+        queries: opts.queries,
+        seed: opts.seed,
+        rate: opts.rate,
+        time_scale: opts.time_scale,
+        admission: opts.admission.is_some(),
+        systems: rows,
+        serve_total_energy_j,
+        sim_total_energy_j,
+        energy_bracket_err: bracket_err(serve_total_energy_j, sim_total_energy_j),
+        serve_p99_s,
+        sim_p99_s,
+        p99_bracket_err: bracket_err(serve_p99_s, sim_p99_s),
+        serve_served,
+        serve_shed,
+        serve_shed_rate,
+        sim_shed_rate,
+        shed_rate_abs_err,
+        serve_mean_batch,
+        sim_mean_batch,
+        serve_makespan_s,
+        sim_makespan_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bracket_err_geometry() {
+        assert_eq!(bracket_err(5.0, [4.0, 6.0]), 0.0);
+        assert_eq!(bracket_err(5.0, [6.0, 4.0]), 0.0);
+        assert!((bracket_err(3.0, [4.0, 6.0]) - 0.25).abs() < 1e-12);
+        assert!((bracket_err(9.0, [4.0, 6.0]) - 0.5).abs() < 1e-12);
+        assert_eq!(bracket_err(0.0, [0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn rejects_degenerate_options() {
+        let bad_scale = FidelityOptions { time_scale: 0.0, ..FidelityOptions::default() };
+        assert!(run_fidelity(&bad_scale).is_err());
+        let no_queries = FidelityOptions { queries: 0, ..FidelityOptions::default() };
+        assert!(run_fidelity(&no_queries).is_err());
+    }
+
+    /// Tiny end-to-end pass: both stacks run, the report serializes,
+    /// and conservation holds on the serving side. (The divergence
+    /// thresholds themselves are asserted by `rust/tests/fidelity.rs`
+    /// at the smoke size; this is a plumbing test.)
+    #[test]
+    fn tiny_fidelity_round_trips() {
+        let opts = FidelityOptions {
+            queries: 40,
+            rate: 60.0,
+            time_scale: 0.002,
+            ..FidelityOptions::default()
+        };
+        let rep = run_fidelity(&opts).expect("harness must run");
+        assert_eq!(rep.serve_served + rep.serve_shed, 40);
+        assert!(rep.serve_total_energy_j > 0.0);
+        assert!(!rep.lines().is_empty());
+        let v = Json::parse(&rep.to_json()).expect("FIDELITY.json must parse");
+        assert_eq!(v.get("schema").and_then(Json::as_str), Some("hetsched-fidelity/1"));
+        assert!(v.get("divergence").is_some());
+        assert!(v.get("pass").is_some());
+        let sys = v.get("systems").unwrap().as_arr().unwrap();
+        assert_eq!(sys.len(), rep.systems.len());
+    }
+}

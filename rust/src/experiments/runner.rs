@@ -20,14 +20,16 @@ use crate::perf::cost_table::{BatchTable, BucketSpec, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
 use crate::sched::formation::FormationPolicy;
+use crate::sched::overload::AdmissionConfig;
 use crate::sched::policy::build_policy;
 use crate::sim::engine::{
     simulate_batched_with_tables, simulate_with_table, BatchMode, BatchingOptions, SimOptions,
 };
-use crate::sim::report::SimReport;
+use crate::sim::report::{ShedStats, SimReport};
 use crate::sim::stream::{simulate_stream, StreamReport};
 use crate::util::par::par_map;
 use crate::workload::generator::{Arrival, TraceGenerator};
+use crate::workload::source::TenantMix;
 use crate::workload::Query;
 
 /// One λ point of the Eq. 1 trade-off frontier.
@@ -594,7 +596,8 @@ pub fn fleet_sweep(
                 spec.count = c;
             }
             let mut p = build_policy(policy, energy.clone(), &sized);
-            let opts = SimOptions { include_idle_energy: true, batching, strict: false };
+            let opts =
+                SimOptions { include_idle_energy: true, batching, ..Default::default() };
             let rep = match &batch_table {
                 Some(bt) => {
                     simulate_batched_with_tables(&queries, &sized, p.as_mut(), &table, bt, &opts)
@@ -648,6 +651,114 @@ pub fn fleet_sweep(
         batch_table_evaluations: bt_evaluations,
         bucket_bins: bins,
     }
+}
+
+/// One (rate, admission on/off) point of an [`overload_sweep`]: the
+/// shed-rate × energy × tail-latency trade the admission policy buys
+/// under overload, read against its disabled sibling on the same trace.
+#[derive(Clone, Debug)]
+pub struct OverloadPoint {
+    /// Poisson arrival rate λ of the trace (queries/s)
+    pub rate: f64,
+    /// `false` = baseline sibling (admission disabled, identical trace)
+    pub admission: bool,
+    /// queries in the trace (arrivals seen by the router)
+    pub arrived: u64,
+    /// queries admitted and completed (`arrived` when admission is off)
+    pub served: u64,
+    /// queries shed across all tenants and reasons
+    pub shed: u64,
+    /// `shed / arrived`
+    pub shed_rate: f64,
+    pub shed_rate_limit: u64,
+    pub shed_queue: u64,
+    pub shed_slo: u64,
+    /// admitted on a faster system than the routing policy chose
+    pub upgraded: u64,
+    /// cluster energy actually spent (J) — shed queries cost nothing
+    pub total_energy_j: f64,
+    /// `total_energy_j / served` (J/query; 0 when nothing served)
+    pub energy_per_served_j: f64,
+    /// mean/p99 latency over the *served* queries only
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub makespan_s: f64,
+    /// per-tenant accounting rows (empty on the disabled sibling)
+    pub per_tenant: Vec<ShedStats>,
+}
+
+impl OverloadPoint {
+    fn from_report(rate: f64, admission: bool, arrived: u64, rep: &SimReport) -> Self {
+        let served = rep.outcomes.len() as u64;
+        let shed = rep.total_shed();
+        Self {
+            rate,
+            admission,
+            arrived,
+            served,
+            shed,
+            shed_rate: if arrived == 0 { 0.0 } else { shed as f64 / arrived as f64 },
+            shed_rate_limit: rep.shed.iter().map(|s| s.shed_rate_limit).sum(),
+            shed_queue: rep.shed.iter().map(|s| s.shed_queue).sum(),
+            shed_slo: rep.shed.iter().map(|s| s.shed_slo).sum(),
+            upgraded: rep.shed.iter().map(|s| s.upgraded).sum(),
+            total_energy_j: rep.total_energy_j,
+            energy_per_served_j: if served == 0 {
+                0.0
+            } else {
+                rep.total_energy_j / served as f64
+            },
+            mean_latency_s: rep.mean_latency_s(),
+            p99_latency_s: rep.p99_latency_s(),
+            makespan_s: rep.makespan_s,
+            per_tenant: rep.shed.clone(),
+        }
+    }
+}
+
+/// Sweep overload: per arrival rate λ, run the same trace through the
+/// simulator twice — admission disabled (the historical path) and
+/// admission enabled with `admission` — over one shared [`CostTable`],
+/// so each enabled point reads its energy/p99/shed trade directly
+/// against its baseline sibling. Points come back rate-major, the
+/// disabled sibling first. Multi-tenant traces (tag arrivals through
+/// `tenants`) exercise the per-tenant token buckets and SLO overrides;
+/// without a mix every query is tenant 0.
+#[allow(clippy::too_many_arguments)]
+pub fn overload_sweep(
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    policy: &PolicyConfig,
+    admission: &AdmissionConfig,
+    rates: &[f64],
+    tenants: Option<&TenantMix>,
+    batching: Option<BatchingOptions>,
+    n_queries: usize,
+    seed: u64,
+) -> Vec<OverloadPoint> {
+    let mut out = Vec::with_capacity(rates.len() * 2);
+    for &rate in rates {
+        let mut generator = TraceGenerator::new(Arrival::Poisson { rate }, seed);
+        if let Some(mix) = tenants {
+            generator = generator.with_tenants(mix.clone());
+        }
+        let queries = generator.generate(n_queries);
+        let table = CostTable::build(&queries, systems, energy);
+        let batch_table = batching.map(|_| BatchTable::new(energy.clone(), systems));
+        let pair = par_map(&[None, Some(admission.clone())], |adm| {
+            let mut p = build_policy(policy, energy.clone(), systems);
+            let opts = SimOptions { admission: adm.clone(), batching, ..Default::default() };
+            let rep = match &batch_table {
+                Some(bt) => {
+                    simulate_batched_with_tables(&queries, systems, p.as_mut(), &table, bt, &opts)
+                }
+                None => simulate_with_table(&queries, systems, p.as_mut(), &table, &opts),
+            };
+            OverloadPoint::from_report(rate, adm.is_some(), queries.len() as u64, &rep)
+        });
+        out.extend(pair);
+    }
+    out
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@
 use hetsched::config::schema::{ExperimentConfig, PolicyConfig};
 use hetsched::experiments::{
     batching_sweep, fig3_alpaca, fleet_sweep, formation_sweep, headline_savings, input_sweep,
-    output_sweep, table1, threshold_sweep,
+    output_sweep, overload_sweep, run_fidelity, table1, threshold_sweep, FidelityOptions,
 };
 use hetsched::hw::catalog::{find_system, system_catalog, SystemId};
 use hetsched::hw::spec::SystemSpec;
@@ -14,6 +14,8 @@ use hetsched::model::{find_llm, llm_catalog};
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
 use hetsched::sched::formation::FormationPolicy;
+use hetsched::sched::overload::AdmissionConfig;
+use hetsched::sim::report::ShedStats;
 use hetsched::perf::cost_table::{BatchTable, CostTable};
 use hetsched::sim::engine::{
     simulate_batched_with_tables, BatchMode, BatchingOptions, QueueModel, SimOptions,
@@ -42,6 +44,8 @@ system:
   batching-sweep    batched-sim energy/latency grid over max_batch × linger × λ
   formation-sweep   FIFO vs shape-aware batch formation over max_batch × λ
   fleet-sweep       provisioning grid: node counts × λ over one deduplicated CostTable
+  overload-sweep    paired admission-off/on runs over λ: shed accounting under overload
+  fidelity          one trace through serving stack AND simulator; write FIDELITY.json
   bench             time the hot paths and write the BENCH.json perf trajectory
   serve             start the live serving demo on the AOT artifacts
   calibrate         fit perf-model constants from a measured sweep
@@ -61,6 +65,8 @@ fn main() {
         Some("batching-sweep") => cmd_batching_sweep(&argv[1..]),
         Some("formation-sweep") => cmd_formation_sweep(&argv[1..]),
         Some("fleet-sweep") => cmd_fleet_sweep(&argv[1..]),
+        Some("overload-sweep") => cmd_overload_sweep(&argv[1..]),
+        Some("fidelity") => cmd_fidelity(&argv[1..]),
         Some("bench") => cmd_bench(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
         Some("calibrate") => cmd_calibrate(&argv[1..]),
@@ -366,6 +372,7 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         include_idle_energy: args.get_bool("idle-energy"),
         strict: false,
         batching,
+        admission: cfg.admission.clone(),
     };
     if args.get_bool("stream") {
         return run_stream_simulate(&cfg, &energy, policy.as_mut(), &opts);
@@ -455,7 +462,40 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             }
         }
     }
+    if opts.admission.is_some() {
+        print_shed(&rep.shed);
+    }
     Ok(())
+}
+
+/// Per-tenant admission accounting lines shared by `simulate` and
+/// `simulate --stream` (printed only when an `[admission]` section is
+/// active — the ledger is empty otherwise).
+fn print_shed(shed: &[ShedStats]) {
+    let arrived: u64 = shed.iter().map(|s| s.arrived).sum();
+    let served: u64 = shed.iter().map(|s| s.served).sum();
+    let total: u64 = shed.iter().map(ShedStats::shed_total).sum();
+    let upgraded: u64 = shed.iter().map(|s| s.upgraded).sum();
+    let rate = if arrived == 0 { 0.0 } else { total as f64 / arrived as f64 };
+    println!(
+        "admission: {arrived} arrived, {served} served, {total} shed ({:.1}%), {upgraded} upgraded",
+        100.0 * rate
+    );
+    if shed.len() > 1 {
+        for s in shed {
+            println!(
+                "  tenant {}: arrived {} served {} shed {} (bucket {} / queue {} / slo {}) upgraded {}",
+                s.tenant,
+                s.arrived,
+                s.served,
+                s.shed_total(),
+                s.shed_rate_limit,
+                s.shed_queue,
+                s.shed_slo,
+                s.upgraded
+            );
+        }
+    }
 }
 
 /// The config's trace generator: arrival process, seed, and (when the
@@ -531,6 +571,9 @@ fn run_stream_simulate(
         ]);
     }
     print!("{}", t.ascii());
+    if opts.admission.is_some() {
+        print_shed(&rep.shed);
+    }
     Ok(())
 }
 
@@ -1073,6 +1116,190 @@ fn cmd_fleet_sweep(argv: &[String]) -> Result<(), String> {
             sweep.bucket_bins.0,
             sweep.bucket_bins.1
         );
+    }
+    Ok(())
+}
+
+fn cmd_overload_sweep(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("overload-sweep")
+        .opt("config", "", "TOML config path (its [admission]/[workload] sections seed the sweep; flags override)")
+        .opt("model", "", "LLM for the energy model (default: config's workload.llm, else Llama-2-7B)")
+        .opt("policy", "", "cost | jsq | round-robin | threshold | <system name> (default: config's [policy], else cost)")
+        .opt("rates", "20,40,80", "Poisson arrival rates λ (q/s), comma-separated")
+        .opt("queue-budget", "", "per-system backlog cap, 0 = unbounded (default: config's admission.queue_budget, else 32)")
+        .opt("slo", "", "default SLO deadline in modeled seconds (default: config's admission.default_slo_s, else none)")
+        .opt("queries", "2000", "trace length per rate")
+        .opt("seed", "2024", "trace seed")
+        .flag("csv", "emit CSV")
+        .parse(argv)?;
+    let cfg = match args.get("config") {
+        "" => None,
+        path => Some(ExperimentConfig::from_file(path)?),
+    };
+    let systems: Vec<SystemSpec> =
+        cfg.as_ref().map_or_else(system_catalog, |c| c.cluster.systems.clone());
+    let model_name = match args.get("model") {
+        "" => cfg.as_ref().map_or("Llama-2-7B", |c| c.workload.llm.as_str()),
+        name => name,
+    };
+    let llm = find_llm(model_name).ok_or_else(|| format!("unknown model '{model_name}'"))?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let policy = match args.get("policy") {
+        "" => cfg
+            .as_ref()
+            .map(|c| c.policy.clone())
+            .unwrap_or(PolicyConfig::Cost { lambda: 1.0 }),
+        name => parse_policy_flag(name)?,
+    };
+    let mut admission = cfg
+        .as_ref()
+        .and_then(|c| c.admission.clone())
+        .unwrap_or_else(|| AdmissionConfig { queue_budget: 32, ..AdmissionConfig::default() });
+    match args.get("queue-budget") {
+        "" => {}
+        _ => admission.queue_budget = args.get_usize("queue-budget")?,
+    }
+    match args.get("slo") {
+        "" => {}
+        _ => {
+            let s = args.get_f64("slo")?;
+            if s.is_nan() || s <= 0.0 {
+                return Err(format!("--slo must be positive, got {s}"));
+            }
+            admission.default_slo_s = s;
+        }
+    }
+    let rates = required_list::<f64>(&args, "rates")?;
+    if rates.iter().any(|r| !(r.is_finite() && *r > 0.0)) {
+        return Err("--rates entries must be positive".into());
+    }
+    let n_queries = args.get_usize("queries")?;
+    if n_queries == 0 {
+        return Err("--queries must be > 0".into());
+    }
+    let seed = args.get_u64("seed")?;
+    let tenants = cfg.as_ref().and_then(|c| c.workload.tenants.clone());
+    let batching = cfg.as_ref().and_then(|c| c.batching);
+    let pts = overload_sweep(
+        &systems,
+        &energy,
+        &policy,
+        &admission,
+        &rates,
+        tenants.as_ref(),
+        batching,
+        n_queries,
+        seed,
+    );
+    println!(
+        "overload sweep: policy {}, engine {}, {} queries per rate, seed {} — queue budget {}, default SLO {}",
+        policy.name(),
+        batching.map_or("serial".to_string(), |b| format!("batched (max_batch {})", b.max_batch)),
+        n_queries,
+        seed,
+        if admission.queue_budget == 0 { "unbounded".to_string() } else { admission.queue_budget.to_string() },
+        if admission.default_slo_s.is_finite() { format!("{:.3}s", admission.default_slo_s) } else { "none".to_string() },
+    );
+    let mut t = Table::new(&[
+        "rate", "admission", "served", "shed", "shed%", "bucket", "queue", "slo", "upgraded",
+        "energy", "J/served", "mean lat", "p99 lat", "makespan",
+    ]);
+    for p in &pts {
+        t.row(&[
+            format!("{:.1}", p.rate),
+            if p.admission { "on" } else { "off" }.into(),
+            p.served.to_string(),
+            p.shed.to_string(),
+            format!("{:.1}%", 100.0 * p.shed_rate),
+            p.shed_rate_limit.to_string(),
+            p.shed_queue.to_string(),
+            p.shed_slo.to_string(),
+            p.upgraded.to_string(),
+            fmt_joules(p.total_energy_j),
+            fmt_joules(p.energy_per_served_j),
+            fmt_secs(p.mean_latency_s),
+            fmt_secs(p.p99_latency_s),
+            fmt_secs(p.makespan_s),
+        ]);
+    }
+    print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+    // each rate yields an [off, on] pair — report what shedding bought
+    for pair in pts.chunks(2) {
+        if let [off, on] = pair {
+            println!(
+                "λ={:.1}: admission p99 {:+.3}s, energy {} ({:+.2}%), shed {} of {} arrivals ({:.1}%)",
+                off.rate,
+                on.p99_latency_s - off.p99_latency_s,
+                fmt_joules(on.total_energy_j - off.total_energy_j),
+                100.0 * (on.total_energy_j - off.total_energy_j)
+                    / off.total_energy_j.max(f64::MIN_POSITIVE),
+                on.shed,
+                on.arrived,
+                100.0 * on.shed_rate
+            );
+        }
+    }
+    for p in pts.iter().filter(|p| p.admission && p.per_tenant.len() > 1) {
+        println!("λ={:.1} per-tenant accounting:", p.rate);
+        print_shed(&p.per_tenant);
+    }
+    Ok(())
+}
+
+fn cmd_fidelity(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("fidelity")
+        .opt("queries", "", "trace length through both stacks (default 240; 120 with --smoke)")
+        .opt("seed", "", "trace seed (default 2024)")
+        .opt("rate", "", "Poisson arrival rate λ in modeled q/s (default 40)")
+        .opt("time-scale", "", "real seconds per modeled second in the serving run (default 0.01; 0.005 with --smoke)")
+        .opt("queue-budget", "", "shared admission backlog cap; 0 disables admission in both stacks (default 48)")
+        .opt("out", "FIDELITY.json", "output path for the machine-readable divergence report")
+        .flag("smoke", "short trace + harder wall-clock compression (CI smoke: seconds)")
+        .parse(argv)?;
+    let mut opts =
+        if args.get_bool("smoke") { FidelityOptions::smoke() } else { FidelityOptions::default() };
+    match args.get("queries") {
+        "" => {}
+        _ => opts.queries = args.get_usize("queries")?,
+    }
+    match args.get("seed") {
+        "" => {}
+        _ => opts.seed = args.get_u64("seed")?,
+    }
+    match args.get("rate") {
+        "" => {}
+        _ => {
+            let r = args.get_f64("rate")?;
+            if !(r.is_finite() && r > 0.0) {
+                return Err(format!("--rate must be positive, got {r}"));
+            }
+            opts.rate = r;
+        }
+    }
+    match args.get("time-scale") {
+        "" => {}
+        _ => opts.time_scale = args.get_f64("time-scale")?,
+    }
+    match args.get("queue-budget") {
+        "" => {}
+        _ => {
+            let b = args.get_usize("queue-budget")?;
+            opts.admission = if b == 0 {
+                None
+            } else {
+                Some(AdmissionConfig { queue_budget: b, ..AdmissionConfig::default() })
+            };
+        }
+    }
+    let rep = run_fidelity(&opts)?;
+    for line in rep.lines() {
+        println!("{line}");
+    }
+    let path = args.get("out");
+    std::fs::write(path, rep.to_json()).map_err(|e| format!("{path}: {e}"))?;
+    println!("wrote {path}");
+    if !rep.passes() {
+        return Err("fidelity divergence exceeds the documented tolerances (see report above)".into());
     }
     Ok(())
 }

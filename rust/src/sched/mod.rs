@@ -9,11 +9,13 @@ pub mod carbon;
 pub mod cost;
 pub mod formation;
 pub mod oracle;
+pub mod overload;
 pub mod policy;
 pub mod threshold;
 
 pub use cost::CostPolicy;
 pub use formation::FormationPolicy;
 pub use oracle::oracle_assign;
+pub use overload::{AdmissionConfig, AdmitDecision, OverloadPolicy, ShedReason};
 pub use policy::{build_policy, ClusterView, Policy};
 pub use threshold::ThresholdPolicy;

@@ -1,0 +1,313 @@
+//! SLO-aware admission and per-tenant load shedding — the one policy
+//! implementation shared by the serving coordinator (`Server` rejects
+//! on arrival), the serial/batched engine (`sim::engine`), and the
+//! streaming engine (`sim::stream`), the same way [`super::admission`]
+//! is shared by the continuous-batching paths. Keeping the decision
+//! logic here is what makes "the sim predicts the coordinator's shed
+//! rate" a testable claim: the two stacks cannot drift.
+//!
+//! The decision is reject-on-arrival, in three stages:
+//!
+//! 1. **Per-tenant token bucket** — tenants with a configured finite
+//!    rate refill `min(burst, tokens + Δt·rate)` and pay one token per
+//!    query; an empty bucket sheds with [`ShedReason::RateLimit`]. This
+//!    is the fairness stage: one tenant flooding the cluster cannot
+//!    starve the others of admission headroom.
+//! 2. **Queue budget** — a system whose backlog has reached
+//!    `queue_budget` pending queries is ineligible; if no system is
+//!    eligible the query sheds with [`ShedReason::QueueFull`].
+//! 3. **SLO check** — if the query carries a deadline (its own `slo_s`,
+//!    else its tenant's, else the config default), the estimated
+//!    completion time on the routing policy's chosen system must meet
+//!    it; otherwise the minimum-ETA eligible system is tried (an
+//!    *upgrade*, mirroring `coordinator::admission`'s verdicts) and the
+//!    query sheds with [`ShedReason::SloBust`] only when no system can
+//!    make the deadline.
+//!
+//! ETA estimation is caller-supplied (a closure from system index to
+//! estimated completion seconds) because the three consumers measure
+//! backlog differently — virtual-time queue depths in the engines, a
+//! count × mean-runtime estimate in the coordinator. Queries without a
+//! deadline admit without ever invoking the estimator, so an
+//! enabled-but-vacuous config (no budget, no SLOs, no rates) performs
+//! zero new float operations on the admit path — the property suite
+//! pins disabled ≡ enabled-vacuous ≡ pre-PR bitwise.
+
+use crate::workload::Query;
+
+/// Admission/shedding knobs — the `[admission]` TOML section.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    /// per-system pending-query budget; 0 = unlimited
+    pub queue_budget: usize,
+    /// SLO applied to queries with no per-query or per-tenant deadline;
+    /// `f64::INFINITY` = none
+    pub default_slo_s: f64,
+    /// per-tenant SLO override (s); `f64::INFINITY` = none. Indexed by
+    /// `Query::tenant`; tenants past the end fall back to the default.
+    pub tenant_slo_s: Vec<f64>,
+    /// per-tenant token-bucket refill rate (queries/s); non-finite or
+    /// `<= 0` = unlimited. Same length as `tenant_burst`.
+    pub tenant_rate: Vec<f64>,
+    /// per-tenant token-bucket capacity (queries)
+    pub tenant_burst: Vec<f64>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self {
+            queue_budget: 0,
+            default_slo_s: f64::INFINITY,
+            tenant_slo_s: Vec::new(),
+            tenant_rate: Vec::new(),
+            tenant_burst: Vec::new(),
+        }
+    }
+}
+
+/// Why a query was shed (one counter per reason in `ShedStats`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// the tenant's token bucket was empty
+    RateLimit,
+    /// every system's backlog was at the queue budget
+    QueueFull,
+    /// no eligible system could meet the deadline
+    SloBust,
+}
+
+/// Outcome of [`OverloadPolicy::decide`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// admit on this system (may differ from the routing policy's
+    /// choice — an SLO-driven upgrade)
+    Admit(usize),
+    Shed(ShedReason),
+}
+
+#[derive(Clone, Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last_s: f64,
+}
+
+/// Stateful shared admission policy: the config plus per-tenant bucket
+/// levels. One instance per run; `decide` is called once per arrival in
+/// arrival order (`now_s` must be non-decreasing).
+#[derive(Clone, Debug)]
+pub struct OverloadPolicy {
+    cfg: AdmissionConfig,
+    buckets: Vec<TokenBucket>,
+}
+
+impl OverloadPolicy {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        debug_assert_eq!(cfg.tenant_rate.len(), cfg.tenant_burst.len());
+        let buckets = cfg
+            .tenant_burst
+            .iter()
+            .map(|&b| TokenBucket { tokens: b, last_s: 0.0 })
+            .collect();
+        Self { cfg, buckets }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// The deadline governing `q`: its own `slo_s` if finite, else its
+    /// tenant's, else the config default (`INFINITY` = none).
+    pub fn slo_for(&self, q: &Query) -> f64 {
+        if q.slo_s.is_finite() {
+            return q.slo_s;
+        }
+        if let Some(&s) = self.cfg.tenant_slo_s.get(q.tenant as usize) {
+            if s.is_finite() {
+                return s;
+            }
+        }
+        self.cfg.default_slo_s
+    }
+
+    /// Admit or shed one arrival. `chosen` is the routing policy's
+    /// assignment, `queue_len[s]` the pending-query count per system,
+    /// and `eta_s(s)` the caller's estimated completion time (s from
+    /// now) were the query to run on system `s` — only invoked when a
+    /// deadline is in play.
+    pub fn decide(
+        &mut self,
+        q: &Query,
+        now_s: f64,
+        chosen: usize,
+        queue_len: &[usize],
+        eta_s: &mut dyn FnMut(usize) -> f64,
+    ) -> AdmitDecision {
+        // stage 1: per-tenant token bucket
+        let t = q.tenant as usize;
+        if let Some(b) = self.buckets.get_mut(t) {
+            let rate = self.cfg.tenant_rate[t];
+            if rate.is_finite() && rate > 0.0 {
+                b.tokens = self.cfg.tenant_burst[t].min(b.tokens + (now_s - b.last_s) * rate);
+                b.last_s = now_s;
+                if b.tokens >= 1.0 {
+                    b.tokens -= 1.0;
+                } else {
+                    return AdmitDecision::Shed(ShedReason::RateLimit);
+                }
+            }
+        }
+
+        // stage 2 + 3: queue budget and SLO, preferring the routing
+        // policy's choice so admission is invisible when it passes
+        let budget = self.cfg.queue_budget;
+        let eligible = |s: usize| budget == 0 || queue_len[s] < budget;
+        let slo = self.slo_for(q);
+        if eligible(chosen) {
+            if slo.is_infinite() {
+                // no deadline: admit without touching the estimator
+                return AdmitDecision::Admit(chosen);
+            }
+            if eta_s(chosen) <= slo {
+                return AdmitDecision::Admit(chosen);
+            }
+        }
+        // chosen is over budget or busts the deadline: minimum-ETA scan
+        // over the eligible systems (strict `<`, ties to lowest index)
+        let mut best: Option<(usize, f64)> = None;
+        for s in 0..queue_len.len() {
+            if !eligible(s) {
+                continue;
+            }
+            let e = eta_s(s);
+            match best {
+                None => best = Some((s, e)),
+                Some((_, be)) if e < be => best = Some((s, e)),
+                _ => {}
+            }
+        }
+        match best {
+            None => AdmitDecision::Shed(ShedReason::QueueFull),
+            // NB: `INFINITY <= INFINITY` is true — a query with no
+            // deadline admits even when every ETA is infinite (engine
+            // rerouting handles per-system infeasibility separately)
+            Some((s, e)) if e <= slo => AdmitDecision::Admit(s),
+            Some(_) => AdmitDecision::Shed(ShedReason::SloBust),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(tenant: u32) -> Query {
+        Query::new(0, 32, 32).with_tenant(tenant)
+    }
+
+    fn never(_: usize) -> f64 {
+        panic!("estimator must not run for deadline-free admits")
+    }
+
+    #[test]
+    fn vacuous_config_admits_without_estimating() {
+        let mut p = OverloadPolicy::new(AdmissionConfig::default());
+        let mut eta = never;
+        assert_eq!(
+            p.decide(&q(0), 0.0, 1, &[5, 5, 5], &mut eta),
+            AdmitDecision::Admit(1)
+        );
+    }
+
+    #[test]
+    fn queue_budget_sheds_when_all_full() {
+        let cfg = AdmissionConfig { queue_budget: 4, ..AdmissionConfig::default() };
+        let mut p = OverloadPolicy::new(cfg);
+        let mut eta = never;
+        // chosen full, another eligible: admit there (no deadline)
+        assert_eq!(
+            p.decide(&q(0), 0.0, 0, &[4, 2], &mut |_| 1.0),
+            AdmitDecision::Admit(1)
+        );
+        // all full: shed
+        assert_eq!(
+            p.decide(&q(0), 0.0, 0, &[4, 4], &mut eta),
+            AdmitDecision::Shed(ShedReason::QueueFull)
+        );
+    }
+
+    #[test]
+    fn slo_upgrade_and_bust() {
+        let cfg = AdmissionConfig { default_slo_s: 2.0, ..AdmissionConfig::default() };
+        let mut p = OverloadPolicy::new(cfg);
+        let etas = [5.0, 1.5, 3.0];
+        let mut eta = |s: usize| etas[s];
+        // chosen (0) busts, system 1 makes it: upgrade
+        assert_eq!(
+            p.decide(&q(0), 0.0, 0, &[0, 0, 0], &mut eta),
+            AdmitDecision::Admit(1)
+        );
+        // chosen already meets the deadline: keep it
+        assert_eq!(
+            p.decide(&q(0), 0.0, 1, &[0, 0, 0], &mut eta),
+            AdmitDecision::Admit(1)
+        );
+        // nobody makes a 1.0 s deadline: shed
+        let qd = q(0).with_slo(1.0);
+        assert_eq!(
+            p.decide(&qd, 0.0, 0, &[0, 0, 0], &mut eta),
+            AdmitDecision::Shed(ShedReason::SloBust)
+        );
+    }
+
+    #[test]
+    fn per_query_slo_overrides_tenant_overrides_default() {
+        let cfg = AdmissionConfig {
+            default_slo_s: 10.0,
+            tenant_slo_s: vec![f64::INFINITY, 3.0],
+            ..AdmissionConfig::default()
+        };
+        let p = OverloadPolicy::new(cfg);
+        assert_eq!(p.slo_for(&q(0)), 10.0, "tenant 0 has no override");
+        assert_eq!(p.slo_for(&q(1)), 3.0, "tenant 1 override");
+        assert_eq!(p.slo_for(&q(2)), 10.0, "past-the-end falls back");
+        assert_eq!(p.slo_for(&q(1).with_slo(0.5)), 0.5, "query wins");
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate() {
+        let cfg = AdmissionConfig {
+            tenant_rate: vec![1.0],
+            tenant_burst: vec![2.0],
+            ..AdmissionConfig::default()
+        };
+        let mut p = OverloadPolicy::new(cfg);
+        let mut eta = never;
+        let admit = AdmitDecision::Admit(0);
+        let shed = AdmitDecision::Shed(ShedReason::RateLimit);
+        // burst of 2 admits, third at t=0 sheds
+        assert_eq!(p.decide(&q(0), 0.0, 0, &[0], &mut eta), admit);
+        assert_eq!(p.decide(&q(0), 0.0, 0, &[0], &mut eta), admit);
+        assert_eq!(p.decide(&q(0), 0.0, 0, &[0], &mut eta), shed);
+        // one second refills one token
+        assert_eq!(p.decide(&q(0), 1.0, 0, &[0], &mut eta), admit);
+        assert_eq!(p.decide(&q(0), 1.0, 0, &[0], &mut eta), shed);
+        // a long gap caps at burst, not unbounded credit
+        assert_eq!(p.decide(&q(0), 100.0, 0, &[0], &mut eta), admit);
+        assert_eq!(p.decide(&q(0), 100.0, 0, &[0], &mut eta), admit);
+        assert_eq!(p.decide(&q(0), 100.0, 0, &[0], &mut eta), shed);
+        // other tenants are unlimited (no bucket configured)
+        assert_eq!(p.decide(&q(1), 0.0, 0, &[0], &mut eta), admit);
+    }
+
+    #[test]
+    fn infinite_etas_admit_deadline_free_queries() {
+        let cfg = AdmissionConfig { queue_budget: 1, ..AdmissionConfig::default() };
+        let mut p = OverloadPolicy::new(cfg);
+        // chosen over budget; the scan sees only infinite ETAs, but a
+        // deadline-free query still admits (INF <= INF)
+        assert_eq!(
+            p.decide(&q(0), 0.0, 0, &[1, 0], &mut |_| f64::INFINITY),
+            AdmitDecision::Admit(1)
+        );
+    }
+}

@@ -58,7 +58,7 @@
 
 use super::cluster::{ClusterState, NodeState};
 use super::continuous::{episode_energy, Episode, LiveMember};
-use super::report::{BatchStats, QueryOutcome, SimReport, SystemTotals};
+use super::report::{BatchStats, QueryOutcome, ShedLedger, ShedStats, SimReport, SystemTotals};
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, CostTable};
@@ -66,6 +66,7 @@ use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
 use crate::sched::admission;
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
+use crate::sched::overload::{AdmissionConfig, AdmitDecision, OverloadPolicy};
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::Query;
 use std::cmp::Reverse;
@@ -288,6 +289,11 @@ pub struct SimOptions {
     pub strict: bool,
     /// `Some` enables batched online mode (see module docs)
     pub batching: Option<BatchingOptions>,
+    /// `Some` enables SLO-aware admission and per-tenant load shedding
+    /// — the shared [`crate::sched::overload`] policy, identical to the
+    /// serving coordinator's. `None` runs the historical
+    /// admit-everything path byte-for-byte (property-pinned).
+    pub admission: Option<AdmissionConfig>,
 }
 
 /// Run the simulation, evaluating the perf/energy model through a
@@ -363,6 +369,7 @@ fn finalize_report(
     rerouted: u64,
     batches: Vec<BatchStats>,
     serial_energy_j: f64,
+    shed: Vec<ShedStats>,
 ) -> SimReport {
     let makespan = cluster.makespan();
     let idle_energy: f64 = if opts.include_idle_energy {
@@ -413,6 +420,7 @@ fn finalize_report(
         rerouted,
         batches,
         serial_energy_j,
+        shed,
     }
 }
 
@@ -441,6 +449,8 @@ pub fn simulate_with_table(
     let mut batches: Vec<BatchStats> = vec![BatchStats::default(); systems.len()];
     let mut serial_energy_j = 0.0f64;
     let mut rerouted = 0u64;
+    let mut overload = opts.admission.clone().map(OverloadPolicy::new);
+    let mut ledger = ShedLedger::new();
 
     for (qi, q) in queries.iter().enumerate() {
         // retire finished work, then view queue state at the arrival
@@ -449,7 +459,43 @@ pub fn simulate_with_table(
         let depths = cluster.queue_depths_at(q.arrival_s);
         let lens = cluster.queue_lens();
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
-        let sid = route_query(policy, q, qi, &view, table, systems, opts.strict, &mut rerouted);
+        let mut sid = route_query(policy, q, qi, &view, table, systems, opts.strict, &mut rerouted);
+
+        // reject-on-arrival: the shared overload policy sees the same
+        // live depths/lengths the routing policy saw. ETA on a system
+        // is its serial backlog plus this query's runtime there
+        // (infeasible systems estimate to ∞, so an upgrade can never
+        // land on one unless the query carries no deadline — guarded
+        // below). Runs strictly after `policy.assign`, so shed queries
+        // still advance policy state (RoundRobin sequences stay aligned
+        // between admission-on and -off runs).
+        if let Some(ov) = overload.as_mut() {
+            ledger.arrive(q.tenant);
+            let mut eta = |s: usize| {
+                if table.feasibility(qi, s) == Feasibility::Ok {
+                    depths[s] + table.runtime_s(qi, s)
+                } else {
+                    f64::INFINITY
+                }
+            };
+            match ov.decide(q, q.arrival_s, sid.0, &lens, &mut eta) {
+                AdmitDecision::Admit(s2) => {
+                    // an upgrade onto an infeasible system (possible
+                    // only for deadline-free queries when every
+                    // eligible system is infeasible) falls back to the
+                    // routed — feasible — system
+                    if s2 != sid.0 && table.feasibility(qi, s2) == Feasibility::Ok {
+                        ledger.upgrade(q.tenant);
+                        sid = SystemId(s2);
+                    }
+                    ledger.serve(q.tenant);
+                }
+                AdmitDecision::Shed(reason) => {
+                    ledger.shed(q.tenant, reason);
+                    continue;
+                }
+            }
+        }
 
         let service = table.runtime_s(qi, sid.0);
         let e_j = table.energy_j(qi, sid.0);
@@ -469,7 +515,16 @@ pub fn simulate_with_table(
         });
     }
 
-    finalize_report(policy.name(), &cluster, outcomes, opts, rerouted, batches, serial_energy_j)
+    finalize_report(
+        policy.name(),
+        &cluster,
+        outcomes,
+        opts,
+        rerouted,
+        batches,
+        serial_energy_j,
+        ledger.into_stats(),
+    )
 }
 
 /// Which of a system's virtual worker queues a newly routed query
@@ -596,7 +651,8 @@ pub fn simulate_batched_with_tables_scan(
         if sim.next >= queries.len() {
             break;
         }
-        sim.route_next_arrival(policy);
+        // a shed arrival (`None`) changed no queue — nothing to re-scan
+        let _ = sim.route_next_arrival(policy);
     }
 
     sim.finish(policy)
@@ -659,6 +715,12 @@ struct BatchedSim<'a> {
     ep_finish: Vec<f64>,
     /// scratch: projected absolute finishes of newly admitted members
     ep_new_finish: Vec<f64>,
+    /// `Some` iff SLO-aware admission is enabled — the shared
+    /// [`crate::sched::overload`] policy, applied at arrival routing
+    /// (reject-on-arrival, before the query ever joins a queue)
+    overload: Option<OverloadPolicy>,
+    /// per-tenant arrive/serve/shed accounting (empty when disabled)
+    ledger: ShedLedger,
 }
 
 impl<'a> BatchedSim<'a> {
@@ -756,6 +818,8 @@ impl<'a> BatchedSim<'a> {
             ep_admit: Vec::new(),
             ep_finish: Vec::new(),
             ep_new_finish: Vec::new(),
+            overload: opts.admission.clone().map(OverloadPolicy::new),
+            ledger: ShedLedger::new(),
         }
     }
 
@@ -1193,8 +1257,10 @@ impl<'a> BatchedSim<'a> {
     /// queue view (pending members surface as extra length and serial
     /// depth), ask the policy, and enqueue on the assigned system's
     /// least-loaded worker queue. Returns the `(system, worker)` queue
-    /// joined — the one queue whose due event changed.
-    fn route_next_arrival(&mut self, policy: &mut dyn Policy) -> (usize, usize) {
+    /// joined — the one queue whose due event changed — or `None` when
+    /// the shared admission policy shed the query (the trace cursor
+    /// still advances; no queue changed).
+    fn route_next_arrival(&mut self, policy: &mut dyn Policy) -> Option<(usize, usize)> {
         let (queries, systems, table) = (self.queries, self.systems, self.table);
         let qi = self.next;
         let q = &queries[qi];
@@ -1211,8 +1277,39 @@ impl<'a> BatchedSim<'a> {
             }
         }
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
-        let sid =
+        let mut sid =
             route_query(policy, q, qi, &view, table, systems, self.opts.strict, &mut self.rerouted);
+
+        // reject-on-arrival over the same live view the routing policy
+        // saw (queued runtime plus this query's own), strictly after
+        // `policy.assign` so shed queries still advance policy state
+        if let Some(ov) = self.overload.as_mut() {
+            self.ledger.arrive(q.tenant);
+            let mut eta = |s: usize| {
+                if table.feasibility(qi, s) == Feasibility::Ok {
+                    depths[s] + table.runtime_s(qi, s)
+                } else {
+                    f64::INFINITY
+                }
+            };
+            match ov.decide(q, q.arrival_s, sid.0, &lens, &mut eta) {
+                AdmitDecision::Admit(s2) => {
+                    // never upgrade onto an infeasible system (only
+                    // reachable for deadline-free queries when every
+                    // eligible system is infeasible)
+                    if s2 != sid.0 && table.feasibility(qi, s2) == Feasibility::Ok {
+                        self.ledger.upgrade(q.tenant);
+                        sid = SystemId(s2);
+                    }
+                    self.ledger.serve(q.tenant);
+                }
+                AdmitDecision::Shed(reason) => {
+                    self.ledger.shed(q.tenant, reason);
+                    self.next = qi + 1;
+                    return None;
+                }
+            }
+        }
         let w = pick_worker_queue(
             &self.cluster.nodes[sid.0],
             self.queues[sid.0].iter().map(|wq| &wq.pending),
@@ -1238,7 +1335,7 @@ impl<'a> BatchedSim<'a> {
         }
         wq.pending.push_back(qi);
         self.next = qi + 1;
-        (sid.0, w)
+        Some((sid.0, w))
     }
 
     /// Sort outcomes back to trace order, sum the serial-equivalent
@@ -1261,6 +1358,7 @@ impl<'a> BatchedSim<'a> {
             self.rerouted,
             self.batches,
             serial_energy_j,
+            self.ledger.into_stats(),
         )
     }
 }
@@ -1506,8 +1604,11 @@ pub fn simulate_batched_with_tables(
         if sim.next >= queries.len() {
             break;
         }
-        let (s, w) = sim.route_next_arrival(policy);
-        refresh_due_event(&sim, &mut stamps, &mut heap, s, w);
+        // a shed arrival returns `None`: no queue changed, no event to
+        // refresh — the trace cursor advanced and the loop continues
+        if let Some((s, w)) = sim.route_next_arrival(policy) {
+            refresh_due_event(&sim, &mut stamps, &mut heap, s, w);
+        }
     }
 
     sim.finish(policy)
@@ -1553,6 +1654,10 @@ pub fn simulate_batched_with_tables_reference(
     assert!(
         bopts.mode == BatchMode::Static && bopts.dispatch_cost_steps == 0,
         "the reference engine implements only static, zero-dispatch-cost batching"
+    );
+    assert!(
+        opts.admission.is_none(),
+        "the reference engine predates admission; compare admission-free configs only"
     );
 
     let mut cluster = ClusterState::new(systems);
@@ -1688,7 +1793,16 @@ pub fn simulate_batched_with_tables_reference(
     let serial_energy_j: f64 =
         outcomes.iter().map(|&(qi, ref o)| table.energy_j(qi, o.system)).sum();
     let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();
-    finalize_report(policy.name(), &cluster, outcomes, opts, rerouted, batches, serial_energy_j)
+    finalize_report(
+        policy.name(),
+        &cluster,
+        outcomes,
+        opts,
+        rerouted,
+        batches,
+        serial_energy_j,
+        Vec::new(),
+    )
 }
 
 #[cfg(test)]
@@ -1796,6 +1910,78 @@ mod tests {
         assert!(r.outcomes.iter().any(|o| o.queue_wait_s() > 0.0));
         // a feasible-everywhere workload never triggers the fallback
         assert_eq!(r.rerouted, 0);
+    }
+
+    /// Tentpole smoke: overload with a queue budget sheds in both the
+    /// serial and batched engines, and the per-tenant ledger conserves
+    /// arrivals exactly (`arrived == outcomes + shed`, u64).
+    #[test]
+    fn admission_conserves_and_sheds_under_overload() {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 500.0 }, 7).generate(2000);
+        let systems = system_catalog();
+        let em = energy();
+        let adm = AdmissionConfig { queue_budget: 8, ..AdmissionConfig::default() };
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let r = simulate(
+            &queries,
+            &systems,
+            p.as_mut(),
+            &em,
+            &SimOptions { admission: Some(adm.clone()), ..Default::default() },
+        );
+        let arrived: u64 = r.shed.iter().map(|s| s.arrived).sum();
+        assert_eq!(arrived, queries.len() as u64);
+        assert_eq!(r.outcomes.len() as u64 + r.total_shed(), queries.len() as u64);
+        assert!(r.total_shed() > 0, "500 q/s must overload an 8-deep budget");
+        assert!(r.energy_conserved());
+
+        let mut p2 = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let rb = simulate(
+            &queries,
+            &systems,
+            p2.as_mut(),
+            &em,
+            &SimOptions {
+                admission: Some(adm),
+                batching: Some(BatchingOptions::new(4, 0.05)),
+                ..Default::default()
+            },
+        );
+        assert_eq!(rb.outcomes.len() as u64 + rb.total_shed(), queries.len() as u64);
+        assert!(rb.total_shed() > 0);
+        assert!(rb.energy_conserved());
+    }
+
+    /// A deadline no system can meet sheds everything with `SloBust`;
+    /// a generous one admits everything (reports empty-shed totals).
+    #[test]
+    fn slo_deadlines_shed_or_admit() {
+        let queries: Vec<Query> = (0..20u64).map(|id| Query::new(id, 64, 64)).collect();
+        let systems = system_catalog();
+        let em = energy();
+        let tight = AdmissionConfig { default_slo_s: 1e-9, ..AdmissionConfig::default() };
+        let mut p = build_policy(&PolicyConfig::RoundRobin, em.clone(), &systems);
+        let r = simulate(
+            &queries,
+            &systems,
+            p.as_mut(),
+            &em,
+            &SimOptions { admission: Some(tight), ..Default::default() },
+        );
+        assert_eq!(r.outcomes.len(), 0);
+        assert_eq!(r.shed.iter().map(|s| s.shed_slo).sum::<u64>(), 20);
+
+        let loose = AdmissionConfig { default_slo_s: 1e9, ..AdmissionConfig::default() };
+        let mut p2 = build_policy(&PolicyConfig::RoundRobin, em.clone(), &systems);
+        let r2 = simulate(
+            &queries,
+            &systems,
+            p2.as_mut(),
+            &em,
+            &SimOptions { admission: Some(loose), ..Default::default() },
+        );
+        assert_eq!(r2.outcomes.len(), 20);
+        assert_eq!(r2.total_shed(), 0);
     }
 
     #[test]

@@ -14,5 +14,5 @@ pub use engine::{
     simulate, simulate_batched_with_tables, simulate_with_table, BatchMode, BatchingOptions,
     SimOptions,
 };
-pub use report::{BatchStats, SimReport, StreamingOutcomes};
+pub use report::{BatchStats, ShedLedger, ShedStats, SimReport, StreamingOutcomes};
 pub use stream::{simulate_stream, simulate_stream_with_sink, StreamReport};

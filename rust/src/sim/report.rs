@@ -3,6 +3,7 @@
 //! retaining per-query outcomes (the memory floor of million-query
 //! runs).
 
+use crate::sched::overload::ShedReason;
 use crate::util::stats::{percentile, P2Quantile};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -81,6 +82,109 @@ impl BatchStats {
     }
 }
 
+/// Per-tenant admission accounting under overload — one row per tenant
+/// on [`SimReport::shed`] / `StreamReport::shed` (empty when admission
+/// is disabled). The conservation invariant the property suite pins:
+/// `arrived == served + shed_total() + pending()` per tenant, exactly
+/// (u64 counters, no floats).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShedStats {
+    pub tenant: u32,
+    /// queries that arrived tagged with this tenant
+    pub arrived: u64,
+    /// queries admitted and completed
+    pub served: u64,
+    /// shed by the tenant token bucket
+    pub shed_rate_limit: u64,
+    /// shed because every system's backlog was at the queue budget
+    pub shed_queue: u64,
+    /// shed because no eligible system could meet the deadline
+    pub shed_slo: u64,
+    /// admitted on a different system than the routing policy chose
+    /// (SLO-driven upgrade; these are also counted in `served`)
+    pub upgraded: u64,
+}
+
+impl ShedStats {
+    pub fn shed_total(&self) -> u64 {
+        self.shed_rate_limit + self.shed_queue + self.shed_slo
+    }
+
+    /// arrived but neither served nor shed (0 once a sim run drains;
+    /// nonzero mid-run or for coordinator snapshots)
+    pub fn pending(&self) -> u64 {
+        self.arrived - self.served - self.shed_total()
+    }
+
+    /// fraction of this tenant's arrivals that were shed
+    pub fn shed_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.shed_total() as f64 / self.arrived as f64
+        }
+    }
+}
+
+/// Grow-on-demand per-tenant ledger behind [`ShedStats`] — the one
+/// accounting implementation shared by both engines and the fidelity
+/// harness so the conservation property means the same thing
+/// everywhere. Integer counters only: recording never perturbs float
+/// state, which is what lets an enabled-but-vacuous admission config
+/// stay bit-identical to disabled.
+#[derive(Clone, Debug, Default)]
+pub struct ShedLedger {
+    per_tenant: Vec<ShedStats>,
+}
+
+impl ShedLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn slot(&mut self, tenant: u32) -> &mut ShedStats {
+        let i = tenant as usize;
+        while self.per_tenant.len() <= i {
+            let t = self.per_tenant.len() as u32;
+            self.per_tenant.push(ShedStats { tenant: t, ..ShedStats::default() });
+        }
+        &mut self.per_tenant[i]
+    }
+
+    pub fn arrive(&mut self, tenant: u32) {
+        self.slot(tenant).arrived += 1;
+    }
+
+    pub fn serve(&mut self, tenant: u32) {
+        self.slot(tenant).served += 1;
+    }
+
+    pub fn shed(&mut self, tenant: u32, reason: ShedReason) {
+        let s = self.slot(tenant);
+        match reason {
+            ShedReason::RateLimit => s.shed_rate_limit += 1,
+            ShedReason::QueueFull => s.shed_queue += 1,
+            ShedReason::SloBust => s.shed_slo += 1,
+        }
+    }
+
+    pub fn upgrade(&mut self, tenant: u32) {
+        self.slot(tenant).upgraded += 1;
+    }
+
+    pub fn total_shed(&self) -> u64 {
+        self.per_tenant.iter().map(ShedStats::shed_total).sum()
+    }
+
+    pub fn stats(&self) -> &[ShedStats] {
+        &self.per_tenant
+    }
+
+    pub fn into_stats(self) -> Vec<ShedStats> {
+        self.per_tenant
+    }
+}
+
 /// Streaming replacement for everything [`SimReport`] derives from its
 /// retained `outcomes` vector: running sums for the means, a P² marker
 /// estimator ([`P2Quantile`]) for the p99 latency, and an O(in-flight)
@@ -105,6 +209,10 @@ pub struct StreamingOutcomes {
     next_seq: u64,
     /// parked out-of-order outcomes: `(seq, serial_e bits, service bits)`
     reorder: BinaryHeap<Reverse<(u64, u64, u64)>>,
+    /// shed trace seqs awaiting their turn: they advance `next_seq`
+    /// without touching any float sum (a skipped seq must contribute
+    /// *nothing*, not `+ 0.0`, to stay bit-identical)
+    skipped: BinaryHeap<Reverse<u64>>,
 }
 
 impl Default for StreamingOutcomes {
@@ -125,7 +233,41 @@ impl StreamingOutcomes {
             service_sum: 0.0,
             next_seq: 0,
             reorder: BinaryHeap::new(),
+            skipped: BinaryHeap::new(),
         }
+    }
+
+    /// Fold contiguous-from-`next_seq` entries out of both heaps:
+    /// completed outcomes add to the trace-order sums, skipped (shed)
+    /// seqs just advance the cursor.
+    fn drain_contiguous(&mut self) {
+        loop {
+            if let Some(&Reverse(s)) = self.skipped.peek() {
+                if s == self.next_seq {
+                    self.skipped.pop();
+                    self.next_seq += 1;
+                    continue;
+                }
+            }
+            if let Some(&Reverse((s, e_bits, svc_bits))) = self.reorder.peek() {
+                if s == self.next_seq {
+                    self.reorder.pop();
+                    self.serial_energy_j += f64::from_bits(e_bits);
+                    self.service_sum += f64::from_bits(svc_bits);
+                    self.next_seq += 1;
+                    continue;
+                }
+            }
+            break;
+        }
+    }
+
+    /// Mark `seq` as shed: it will never be pushed, so the trace-order
+    /// cursor must step over it (contributing nothing to any sum) for
+    /// the outcomes behind it to fold in.
+    pub fn skip(&mut self, seq: u64) {
+        self.skipped.push(Reverse(seq));
+        self.drain_contiguous();
     }
 
     /// Fold in one completed outcome. `seq` is the query's trace
@@ -141,15 +283,7 @@ impl StreamingOutcomes {
         // the payloads are finite, so the bits round-trip exactly and
         // the tuple keeps heap order on seq (seqs are unique)
         self.reorder.push(Reverse((seq, serial_energy_j.to_bits(), o.service_s.to_bits())));
-        while let Some(&Reverse((s, e_bits, svc_bits))) = self.reorder.peek() {
-            if s != self.next_seq {
-                break;
-            }
-            self.reorder.pop();
-            self.serial_energy_j += f64::from_bits(e_bits);
-            self.service_sum += f64::from_bits(svc_bits);
-            self.next_seq += 1;
-        }
+        self.drain_contiguous();
     }
 
     pub fn count(&self) -> u64 {
@@ -180,9 +314,9 @@ impl StreamingOutcomes {
     /// parked in the reorder buffer.
     pub fn serial_energy_j(&self) -> f64 {
         debug_assert!(
-            self.reorder.is_empty(),
+            self.reorder.is_empty() && self.skipped.is_empty(),
             "serial_energy_j read with {} outcomes still out of order",
-            self.reorder.len()
+            self.reorder.len() + self.skipped.len()
         );
         self.serial_energy_j
     }
@@ -192,17 +326,17 @@ impl StreamingOutcomes {
     /// [`Self::serial_energy_j`].
     pub fn total_service_s(&self) -> f64 {
         debug_assert!(
-            self.reorder.is_empty(),
+            self.reorder.is_empty() && self.skipped.is_empty(),
             "total_service_s read with {} outcomes still out of order",
-            self.reorder.len()
+            self.reorder.len() + self.skipped.len()
         );
         self.service_sum
     }
 
-    /// Outcomes parked awaiting their trace-order turn (0 when every
-    /// pushed seq is contiguous from 0).
+    /// Outcomes (and skipped seqs) parked awaiting their trace-order
+    /// turn (0 when every pushed/skipped seq is contiguous from 0).
     pub fn reorder_depth(&self) -> usize {
-        self.reorder.len()
+        self.reorder.len() + self.skipped.len()
     }
 }
 
@@ -231,6 +365,10 @@ pub struct SimReport {
     /// excluded). Equals `total_energy_j − idle_energy_j` in serial
     /// mode; the gap to it is the energy batching saved.
     pub serial_energy_j: f64,
+    /// per-tenant admission accounting; empty when admission is
+    /// disabled (shed queries appear here and nowhere else — they have
+    /// no outcome, no energy, no latency)
+    pub shed: Vec<ShedStats>,
 }
 
 impl SimReport {
@@ -299,6 +437,21 @@ impl SimReport {
     pub fn batching_energy_delta_j(&self) -> f64 {
         self.serial_energy_j - (self.total_energy_j - self.idle_energy_j)
     }
+
+    /// total queries shed across tenants (0 when admission is disabled)
+    pub fn total_shed(&self) -> u64 {
+        self.shed.iter().map(ShedStats::shed_total).sum()
+    }
+
+    /// shed fraction over all arrivals (served + shed)
+    pub fn shed_rate(&self) -> f64 {
+        let arrived: u64 = self.shed.iter().map(|s| s.arrived).sum();
+        if arrived == 0 {
+            0.0
+        } else {
+            self.total_shed() as f64 / arrived as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +494,7 @@ mod tests {
             rerouted: 0,
             batches: vec![BatchStats::default()],
             serial_energy_j: 5.0,
+            shed: Vec::new(),
         };
         assert!(r.energy_conserved());
         r.systems[0].energy_j = 6.0;
@@ -435,6 +589,58 @@ mod tests {
         assert_eq!(acc.mean_latency_s(), 0.0);
         assert_eq!(acc.p99_latency_s(), 0.0);
         assert_eq!(acc.serial_energy_j(), 0.0);
+    }
+
+    /// Skipped (shed) seqs must advance the trace-order cursor without
+    /// perturbing the float sums: the result is bit-identical to a run
+    /// where the shed queries never existed in the trace at all.
+    #[test]
+    fn skipped_seqs_advance_cursor_without_touching_sums() {
+        let serial = [1.25f64, 2.5, 3.75, 5.0, 6.125];
+        // shed seqs 1 and 3; survivors 0, 2, 4 sum in trace order
+        let survivor_sum = serial[0] + serial[2] + serial[4];
+        let mut acc = StreamingOutcomes::new();
+        // deliver wildly out of order: 4, skip 3, 2, skip 1, 0
+        acc.push(4, &outcome(0.0, 0.0, 1.0, 0.0), serial[4]);
+        acc.skip(3);
+        acc.push(2, &outcome(0.0, 0.0, 1.0, 0.0), serial[2]);
+        assert!(acc.reorder_depth() > 0);
+        acc.skip(1);
+        acc.push(0, &outcome(0.0, 0.0, 1.0, 0.0), serial[0]);
+        assert_eq!(acc.reorder_depth(), 0);
+        assert_eq!(acc.count(), 3);
+        assert_eq!(acc.serial_energy_j().to_bits(), survivor_sum.to_bits());
+    }
+
+    #[test]
+    fn shed_ledger_conserves_per_tenant() {
+        let mut l = ShedLedger::new();
+        for _ in 0..5 {
+            l.arrive(0);
+        }
+        for _ in 0..3 {
+            l.arrive(2);
+        }
+        l.serve(0);
+        l.serve(0);
+        l.shed(0, ShedReason::RateLimit);
+        l.shed(0, ShedReason::SloBust);
+        l.serve(2);
+        l.shed(2, ShedReason::QueueFull);
+        l.upgrade(2);
+        assert_eq!(l.total_shed(), 3);
+        let stats = l.into_stats();
+        assert_eq!(stats.len(), 3, "tenant 1 gets a zero row");
+        assert_eq!(stats[1], ShedStats { tenant: 1, ..ShedStats::default() });
+        for s in &stats {
+            assert_eq!(s.arrived, s.served + s.shed_total() + s.pending());
+        }
+        assert_eq!(stats[0].pending(), 1);
+        assert_eq!(stats[0].shed_rate_limit, 1);
+        assert_eq!(stats[0].shed_slo, 1);
+        assert_eq!(stats[2].shed_queue, 1);
+        assert_eq!(stats[2].upgraded, 1);
+        assert!((stats[0].shed_rate() - 0.4).abs() < 1e-12);
     }
 
     #[test]

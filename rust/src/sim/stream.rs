@@ -40,12 +40,15 @@
 use super::cluster::{ClusterState, NodeState};
 use super::continuous::{episode_energy, Episode, LiveMember};
 use super::engine::{BatchMode, BatchingOptions, DueEvent, QueueModel, SimOptions};
-use super::report::{BatchStats, QueryOutcome, StreamingOutcomes, SystemTotals};
+use super::report::{
+    BatchStats, QueryOutcome, ShedLedger, ShedStats, StreamingOutcomes, SystemTotals,
+};
 use crate::hw::catalog::SystemId;
 use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, RowCache};
 use crate::perf::energy::EnergyModel;
 use crate::sched::admission;
+use crate::sched::overload::{AdmitDecision, OverloadPolicy};
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::policy::{ClusterView, Policy};
 use crate::workload::source::QuerySource;
@@ -92,6 +95,9 @@ pub struct StreamReport {
     /// virtual queues), sampled at each arrival — the O(pending) term
     /// of the memory bound
     pub peak_pending: usize,
+    /// per-tenant admission outcomes — empty when `opts.admission` is
+    /// `None` (same semantics as [`crate::sim::SimReport::shed`])
+    pub shed: Vec<ShedStats>,
 }
 
 impl StreamReport {
@@ -116,6 +122,21 @@ impl StreamReport {
     /// total batches dispatched across systems
     pub fn total_dispatches(&self) -> u64 {
         self.batches.iter().map(|b| b.dispatches).sum()
+    }
+
+    /// total queries shed across tenants (0 when admission is disabled)
+    pub fn total_shed(&self) -> u64 {
+        self.shed.iter().map(ShedStats::shed_total).sum()
+    }
+
+    /// shed fraction over all arrivals (served + shed)
+    pub fn shed_rate(&self) -> f64 {
+        let arrived: u64 = self.shed.iter().map(|s| s.arrived).sum();
+        if arrived == 0 {
+            0.0
+        } else {
+            self.total_shed() as f64 / arrived as f64
+        }
     }
 }
 
@@ -180,16 +201,21 @@ struct StreamTotals {
     batches: Vec<BatchStats>,
     rerouted: u64,
     peak_pending: usize,
+    /// shared admission policy, live iff `opts.admission` is `Some`
+    overload: Option<OverloadPolicy>,
+    ledger: ShedLedger,
 }
 
 impl StreamTotals {
-    fn new(systems: &[SystemSpec]) -> Self {
+    fn new(systems: &[SystemSpec], opts: &SimOptions) -> Self {
         Self {
             cluster: ClusterState::new(systems),
             acc: StreamingOutcomes::new(),
             batches: vec![BatchStats::default(); systems.len()],
             rerouted: 0,
             peak_pending: 0,
+            overload: opts.admission.clone().map(OverloadPolicy::new),
+            ledger: ShedLedger::new(),
         }
     }
 
@@ -225,6 +251,51 @@ impl StreamTotals {
             self.rerouted += 1;
         }
         sid
+    }
+
+    /// Reject-on-arrival for a routed query — the streaming mirror of
+    /// the materialized engines' admission block (same decision inputs,
+    /// same feasibility-guarded SLO upgrade), strictly after
+    /// [`StreamTotals::route`] so shed queries still advance policy
+    /// state. On shed the sequence number is [`StreamingOutcomes::skip`]ped
+    /// so the reorder cursor steps over it, and `None` comes back.
+    fn admit(
+        &mut self,
+        q: &Query,
+        seq: u64,
+        row: usize,
+        mut sid: SystemId,
+        depths: &[f64],
+        lens: &[usize],
+        cache: &RowCache,
+    ) -> Option<SystemId> {
+        let Some(ov) = self.overload.as_mut() else { return Some(sid) };
+        self.ledger.arrive(q.tenant);
+        let mut eta = |s: usize| {
+            if cache.is_feasible(row, s) {
+                depths[s] + cache.runtime_s(row, s)
+            } else {
+                f64::INFINITY
+            }
+        };
+        match ov.decide(q, q.arrival_s, sid.0, lens, &mut eta) {
+            AdmitDecision::Admit(s2) => {
+                // never upgrade onto an infeasible system (only
+                // reachable for deadline-free queries when every
+                // eligible system is infeasible)
+                if s2 != sid.0 && cache.is_feasible(row, s2) {
+                    self.ledger.upgrade(q.tenant);
+                    sid = SystemId(s2);
+                }
+                self.ledger.serve(q.tenant);
+                Some(sid)
+            }
+            AdmitDecision::Shed(reason) => {
+                self.ledger.shed(q.tenant, reason);
+                self.acc.skip(seq);
+                None
+            }
+        }
     }
 
     /// Makespan/idle accounting + report assembly — the streaming
@@ -282,6 +353,7 @@ impl StreamTotals {
             p99_latency_s: self.acc.p99_latency_s(),
             unique_shapes,
             peak_pending: self.peak_pending,
+            shed: self.ledger.into_stats(),
         }
     }
 }
@@ -299,7 +371,7 @@ fn stream_serial(
     opts: &SimOptions,
     sink: &mut dyn FnMut(u64, &QueryOutcome),
 ) -> Result<StreamReport, String> {
-    let mut st = StreamTotals::new(systems);
+    let mut st = StreamTotals::new(systems, opts);
     let mut last_arrival = f64::NEG_INFINITY;
     let mut seq = 0u64;
     while (seq as usize) < limit {
@@ -313,6 +385,10 @@ fn stream_serial(
         st.peak_pending = st.peak_pending.max(lens.iter().sum::<usize>() + 1);
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
         let sid = st.route(policy, &q, row, &view, cache, opts.strict);
+        let Some(sid) = st.admit(&q, seq, row, sid, &depths, &lens, cache) else {
+            seq += 1;
+            continue;
+        };
 
         let service = cache.runtime_s(row, sid.0);
         let e_j = cache.energy_j(row, sid.0);
@@ -473,7 +549,7 @@ impl<'a> StreamSim<'a> {
                     (0..n).map(|_| StreamWorkerQueue::new()).collect()
                 })
                 .collect(),
-            totals: StreamTotals::new(systems),
+            totals: StreamTotals::new(systems, opts),
             live_cap,
             episodes,
             ep_resident: HashMap::new(),
@@ -893,7 +969,9 @@ impl<'a> StreamSim<'a> {
     }
 
     /// Route one arrival — `BatchedSim::route_next_arrival` over owned
-    /// waiters. Returns the `(system, worker)` queue joined.
+    /// waiters. Returns the `(system, worker)` queue joined, or `None`
+    /// when admission shed the query on arrival (it joins no queue; its
+    /// sequence number is skipped in the accumulators).
     fn route_arrival(
         &mut self,
         policy: &mut dyn Policy,
@@ -901,7 +979,7 @@ impl<'a> StreamSim<'a> {
         q: &Query,
         cache: &mut RowCache,
         sink: &mut dyn FnMut(u64, &QueryOutcome),
-    ) -> (usize, usize) {
+    ) -> Option<(usize, usize)> {
         let systems = self.systems;
         let strict = self.opts.strict;
         let row = cache.row(q.input_tokens, q.output_tokens);
@@ -921,6 +999,7 @@ impl<'a> StreamSim<'a> {
             self.totals.peak_pending.max(lens.iter().sum::<usize>() + 1);
         let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
         let sid = self.totals.route(policy, q, row, &view, cache, strict);
+        let sid = self.totals.admit(q, seq, row, sid, &depths, &lens, cache)?;
         let w = pick_stream_queue(
             &self.totals.cluster.nodes[sid.0],
             &self.queues[sid.0],
@@ -948,7 +1027,7 @@ impl<'a> StreamSim<'a> {
             n: q.output_tokens,
             row,
         });
-        (sid.0, w)
+        Some((sid.0, w))
     }
 
     /// The event-heap main loop over the source: one-query lookahead on
@@ -1009,10 +1088,12 @@ impl<'a> StreamSim<'a> {
                 }
             }
 
-            // no batch due before the next arrival: route it
+            // no batch due before the next arrival: route it (a shed
+            // arrival joins no queue, so there is nothing to refresh)
             let Some((seq, q)) = upcoming.take() else { break };
-            let (s, w) = self.route_arrival(policy, seq, &q, cache, sink);
-            self.refresh(&mut stamps, &mut heap, s, w);
+            if let Some((s, w)) = self.route_arrival(policy, seq, &q, cache, sink) {
+                self.refresh(&mut stamps, &mut heap, s, w);
+            }
         }
 
         // run any still-live episodes to retirement (every queue is
@@ -1117,6 +1198,7 @@ mod tests {
     use crate::model::llm_catalog;
     use crate::perf::cost_table::CostTable;
     use crate::perf::model::PerfModel;
+    use crate::sched::overload::AdmissionConfig;
     use crate::sched::policy::build_policy;
     use crate::sim::engine::{simulate, simulate_with_table};
     use crate::workload::generator::{Arrival, TraceGenerator};
@@ -1283,11 +1365,54 @@ mod tests {
         assert_eq!(r.routing_counts().iter().sum::<u64>(), 30);
     }
 
+    /// Streaming admission mirrors the materialized engines
+    /// decision-for-decision: identical per-tenant shed ledgers,
+    /// bit-identical totals, and arrivals are conserved
+    /// (served + shed == pulled).
+    #[test]
+    fn admission_stream_matches_materialized_and_conserves() {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 500.0 }, 7).generate(2000);
+        let systems = system_catalog();
+        let em = energy();
+        let admission = AdmissionConfig { queue_budget: 8, ..AdmissionConfig::default() };
+        for batching in [None, Some(BatchingOptions::new(4, 0.05))] {
+            let opts = SimOptions {
+                include_idle_energy: true,
+                batching,
+                admission: Some(admission.clone()),
+                ..Default::default()
+            };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let want = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let got = simulate_stream(
+                &mut SliceSource::new(&queries),
+                queries.len(),
+                &systems,
+                p.as_mut(),
+                &em,
+                &opts,
+            )
+            .unwrap();
+
+            assert_eq!(got.shed, want.shed, "batching={batching:?}");
+            assert!(got.total_shed() > 0, "an overloaded trace must shed");
+            assert_eq!(got.queries + got.total_shed(), queries.len() as u64);
+            assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits());
+            assert_eq!(got.makespan_s.to_bits(), want.makespan_s.to_bits());
+            assert_eq!(got.serial_energy_j.to_bits(), want.serial_energy_j.to_bits());
+            assert_eq!(got.total_service_s.to_bits(), want.total_service_s.to_bits());
+            assert!(got.energy_conserved());
+            assert!(got.shed_rate() > 0.0 && got.shed_rate() < 1.0);
+        }
+    }
+
     #[test]
     fn unsorted_stream_is_an_error() {
         let queries = vec![
-            Query { id: 0, arrival_s: 1.0, input_tokens: 8, output_tokens: 8 },
-            Query { id: 1, arrival_s: 0.5, input_tokens: 8, output_tokens: 8 },
+            Query { arrival_s: 1.0, ..Query::new(0, 8, 8) },
+            Query { arrival_s: 0.5, ..Query::new(1, 8, 8) },
         ];
         let systems = system_catalog();
         let em = energy();

@@ -6,7 +6,8 @@ pub mod generator;
 pub mod source;
 pub mod trace;
 
-/// One inference request: the paper's `(m, n)` pair plus arrival time.
+/// One inference request: the paper's `(m, n)` pair plus arrival time,
+/// tenant identity, and (optionally) an SLO deadline for admission.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Query {
     pub id: u64,
@@ -16,11 +17,37 @@ pub struct Query {
     pub input_tokens: u32,
     /// output (generated) tokens — the paper's `n`
     pub output_tokens: u32,
+    /// tenant index into the workload's tenant mix (0 for single-tenant
+    /// workloads — every query belongs to *some* tenant)
+    pub tenant: u32,
+    /// per-query completion SLO (s from arrival); `f64::INFINITY` means
+    /// "no deadline" and is the default, so the field never changes
+    /// behavior unless admission is enabled
+    pub slo_s: f64,
 }
 
 impl Query {
     pub fn new(id: u64, input_tokens: u32, output_tokens: u32) -> Self {
-        Self { id, arrival_s: 0.0, input_tokens, output_tokens }
+        Self {
+            id,
+            arrival_s: 0.0,
+            input_tokens,
+            output_tokens,
+            tenant: 0,
+            slo_s: f64::INFINITY,
+        }
+    }
+
+    /// Builder: tag the query with a tenant index.
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Builder: attach a per-query completion SLO (s from arrival).
+    pub fn with_slo(mut self, slo_s: f64) -> Self {
+        self.slo_s = slo_s;
+        self
     }
 
     pub fn total_tokens(&self) -> u32 {
@@ -37,5 +64,14 @@ mod tests {
         let q = Query::new(1, 10, 20);
         assert_eq!(q.total_tokens(), 30);
         assert_eq!(q.arrival_s, 0.0);
+        assert_eq!(q.tenant, 0);
+        assert!(q.slo_s.is_infinite());
+    }
+
+    #[test]
+    fn builders_set_tenant_and_slo() {
+        let q = Query::new(2, 8, 8).with_tenant(3).with_slo(1.5);
+        assert_eq!(q.tenant, 3);
+        assert_eq!(q.slo_s, 1.5);
     }
 }

@@ -114,6 +114,18 @@ impl TenantMix {
     /// [`Xoshiro256::categorical`]: one uniform draw, linear scan over
     /// weights), then the tenant's truncated log-normals.
     pub fn sample(&self, model: &AlpacaModel, rng: &mut Xoshiro256) -> (u32, u32) {
+        let (_, m, n) = self.sample_indexed(model, rng);
+        (m, n)
+    }
+
+    /// [`Self::sample`] plus the chosen tenant index (identical draw
+    /// sequence — `sample` delegates here), so callers can stamp
+    /// [`Query::tenant`].
+    pub fn sample_indexed(
+        &self,
+        model: &AlpacaModel,
+        rng: &mut Xoshiro256,
+    ) -> (usize, u32, u32) {
         debug_assert!(!self.tenants.is_empty());
         let total: f64 = self.tenants.iter().map(|t| t.weight).sum();
         let mut x = rng.f64() * total;
@@ -129,7 +141,7 @@ impl TenantMix {
         let m = (rng.lognormal(t.in_mu, t.in_sigma).round().max(1.0) as u32).clamp(1, model.in_max);
         let n =
             (rng.lognormal(t.out_mu, t.out_sigma).round().max(1.0) as u32).clamp(1, model.out_max);
-        (m, n)
+        (idx, m, n)
     }
 }
 
@@ -243,14 +255,25 @@ impl GeneratorSource {
 
 impl QuerySource for GeneratorSource {
     fn next_query(&mut self) -> Result<Option<Query>, String> {
-        let (m, n) = match &self.tenants {
-            None => (self.model.sample_input(&mut self.rng), self.model.sample_output(&mut self.rng)),
-            Some(mix) => mix.sample(&self.model, &mut self.rng),
+        let (tenant, m, n) = match &self.tenants {
+            None => {
+                let m = self.model.sample_input(&mut self.rng);
+                let n = self.model.sample_output(&mut self.rng);
+                (0, m, n)
+            }
+            Some(mix) => mix.sample_indexed(&self.model, &mut self.rng),
         };
         let arrival_s = self.next_arrival();
         let id = self.next_id;
         self.next_id += 1;
-        Ok(Some(Query { id, arrival_s, input_tokens: m, output_tokens: n }))
+        Ok(Some(Query {
+            id,
+            arrival_s,
+            input_tokens: m,
+            output_tokens: n,
+            tenant: tenant as u32,
+            slo_s: f64::INFINITY,
+        }))
     }
 
     fn checkpoint(&self) -> SourceCheckpoint {

@@ -69,7 +69,7 @@ pub(crate) fn parse_row(line: &str, lineno: usize, id: u64) -> Result<Query, Str
     if arrival_s < 0.0 {
         return Err(err("arrival_s (must be >= 0)"));
     }
-    Ok(Query { id, arrival_s, input_tokens, output_tokens })
+    Ok(Query { id, arrival_s, input_tokens, output_tokens, tenant: 0, slo_s: f64::INFINITY })
 }
 
 #[cfg(test)]
@@ -83,8 +83,8 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.csv");
         let trace = vec![
-            Query { id: 0, arrival_s: 0.0, input_tokens: 8, output_tokens: 32 },
-            Query { id: 1, arrival_s: 1.5, input_tokens: 100, output_tokens: 7 },
+            Query::new(0, 8, 32),
+            Query { arrival_s: 1.5, ..Query::new(1, 100, 7) },
         ];
         write_csv(&path, &trace).unwrap();
         let got = read_csv(&path).unwrap();

@@ -1,0 +1,94 @@
+//! Sim-vs-serving fidelity gate: the same trace driven through the real
+//! coordinator (over the model-driven `SimBackend`) and through the
+//! batched simulator under both queue models must land within the
+//! documented divergence tolerances. This is the test that pins the
+//! simulator's claim to speak for the serving stack — CI runs the same
+//! harness as a release job (`fidelity-smoke`) and archives the
+//! FIDELITY.json artifact it emits.
+
+use hetsched::experiments::{run_fidelity, FidelityOptions, FidelityReport};
+use hetsched::util::json::Json;
+
+/// The smoke-sized harness run: serving measurements must sit inside
+/// (or within tolerance of) the `[PerWorker, PerClass]` sim bracket on
+/// every asserted axis, and conservation must hold on the serving side.
+#[test]
+fn fidelity_smoke_within_documented_tolerances() {
+    let opts = FidelityOptions::smoke();
+    let queries = opts.queries as u64;
+    let rep = run_fidelity(&opts).expect("fidelity harness must run");
+
+    // serving-side conservation: every submitted query was either
+    // answered or shed by the shared admission policy
+    assert_eq!(rep.serve_served + rep.serve_shed, queries);
+    assert!(rep.serve_served > 0, "the smoke run must serve most of the trace");
+    assert!(rep.serve_total_energy_j > 0.0);
+    assert!(rep.admission, "the smoke harness runs with admission live");
+
+    // the documented tolerances, axis by axis — failure messages carry
+    // the measured divergence so a CI failure is directly actionable
+    assert!(
+        rep.energy_ok(),
+        "energy bracket err {:.3} exceeds tol {} (serve {:.1} J vs sim [{:.1}, {:.1}] J)",
+        rep.energy_bracket_err,
+        FidelityReport::ENERGY_REL_TOL,
+        rep.serve_total_energy_j,
+        rep.sim_total_energy_j[0],
+        rep.sim_total_energy_j[1],
+    );
+    assert!(
+        rep.p99_ok(),
+        "p99 bracket err {:.3} exceeds tol {} (serve {:.2} s vs sim [{:.2}, {:.2}] s)",
+        rep.p99_bracket_err,
+        FidelityReport::P99_REL_TOL,
+        rep.serve_p99_s,
+        rep.sim_p99_s[0],
+        rep.sim_p99_s[1],
+    );
+    assert!(
+        rep.shed_ok(),
+        "shed-rate abs err {:.3} exceeds tol {} (serve {:.3} vs sim [{:.3}, {:.3}])",
+        rep.shed_rate_abs_err,
+        FidelityReport::SHED_RATE_ABS_TOL,
+        rep.serve_shed_rate,
+        rep.sim_shed_rate[0],
+        rep.sim_shed_rate[1],
+    );
+    assert!(rep.passes(), "passes() must agree with the per-axis gates");
+
+    // both sim bracket edges actually ran and produced work
+    for i in 0..2 {
+        assert!(rep.sim_total_energy_j[i] > 0.0, "sim edge {i} produced no energy");
+        assert!(rep.sim_makespan_s[i] > 0.0, "sim edge {i} produced no makespan");
+    }
+
+    // the machine-readable artifact round-trips and is self-describing
+    let json = rep.to_json();
+    let v = Json::parse(&json).expect("FIDELITY.json must parse");
+    assert_eq!(v.get("schema").and_then(Json::as_str), Some("hetsched-fidelity/1"));
+    assert!(matches!(v.get("pass"), Some(Json::Bool(true))), "report must record the pass");
+    let tol = v.get("tolerances").expect("tolerances are part of the artifact");
+    assert_eq!(tol.get("energy_rel").and_then(Json::as_f64), Some(FidelityReport::ENERGY_REL_TOL));
+    let div = v.get("divergence").expect("divergence block");
+    assert_eq!(div.get("serve_served").and_then(Json::as_u64), Some(rep.serve_served));
+    let systems = v.get("systems").and_then(Json::as_arr).expect("systems array");
+    assert_eq!(systems.len(), rep.systems.len());
+
+    // per-system accounting sums back to the totals
+    let serve_by_system: u64 = rep.systems.iter().map(|s| s.serve_queries).sum();
+    assert_eq!(serve_by_system, rep.serve_served);
+}
+
+/// With admission disabled the harness still runs end-to-end and the
+/// serving stack answers everything — the shed axis degenerates to an
+/// exact 0-vs-0 match, so divergence on it must be zero.
+#[test]
+fn fidelity_without_admission_serves_everything() {
+    let opts = FidelityOptions { admission: None, ..FidelityOptions::smoke() };
+    let rep = run_fidelity(&opts).expect("fidelity harness must run");
+    assert!(!rep.admission);
+    assert_eq!(rep.serve_shed, 0, "nothing sheds without an admission policy");
+    assert_eq!(rep.serve_served, opts.queries as u64);
+    assert_eq!(rep.shed_rate_abs_err, 0.0);
+    assert!(rep.shed_ok());
+}

@@ -85,6 +85,8 @@ fn request(id: u64, m: u32, n: u32) -> (Request, ResponseRx) {
             id,
             prompt: vec![0; m as usize],
             gen_tokens: n,
+            tenant: 0,
+            slo_s: f64::INFINITY,
             submitted: Instant::now(),
             respond: tx,
         },

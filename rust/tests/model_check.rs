@@ -27,23 +27,41 @@ use hetsched::model::llm_catalog;
 use hetsched::perf::cost_table::BatchTable;
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::{Feasibility, PerfModel};
+use hetsched::sched::overload::{AdmissionConfig, AdmitDecision, OverloadPolicy, ShedReason};
 use hetsched::util::check::atomic::{AtomicUsize, Ordering};
-use hetsched::util::check::{explore, replay, thread as vthread, ExploreOptions};
+use hetsched::util::check::{explore, replay, thread as vthread, ExploreOptions, Mutex};
 use hetsched::util::par::ScopedPool;
+use hetsched::workload::Query;
 use std::panic::AssertUnwindSafe;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 fn req(id: u64) -> Request {
     let (tx, _rx) = mpsc::channel();
-    Request { id, prompt: vec![0, 1], gen_tokens: 1, submitted: Instant::now(), respond: tx }
+    Request {
+        id,
+        prompt: vec![0, 1],
+        gen_tokens: 1,
+        tenant: 0,
+        slo_s: f64::INFINITY,
+        submitted: Instant::now(),
+        respond: tx,
+    }
 }
 
 /// A request big enough that four of them jointly OOM the V100 while
 /// each fits alone (pinned by `feasible_prefix_trims_joint_oom`).
 fn big_req(id: u64) -> Request {
     let (tx, _rx) = mpsc::channel();
-    Request { id, prompt: vec![0; 32], gen_tokens: 1024, submitted: Instant::now(), respond: tx }
+    Request {
+        id,
+        prompt: vec![0; 32],
+        gen_tokens: 1024,
+        tenant: 0,
+        slo_s: f64::INFINITY,
+        submitted: Instant::now(),
+        respond: tx,
+    }
 }
 
 /// Silence the default panic hook while `f` runs. Scenarios that panic
@@ -92,7 +110,7 @@ fn push_close_worker_scenario() {
         vthread::spawn(move || match q.push(req(7)) {
             Ok(()) => true,
             Err((_, Rejected::ShuttingDown)) => false,
-            Err((_, Rejected::QueueFull)) => panic!("cap-4 queue cannot fill"),
+            Err((_, why)) => panic!("cap-4 raw queue cannot refuse with {why:?}"),
         })
     };
     let closer = {
@@ -173,7 +191,7 @@ fn two_pushers_drain_scenario() {
             vthread::spawn(move || match q.push(req(id)) {
                 Ok(()) => Some(id),
                 Err((_, Rejected::ShuttingDown)) => None,
-                Err((_, Rejected::QueueFull)) => panic!("cap-4 queue cannot fill"),
+                Err((_, why)) => panic!("cap-4 raw queue cannot refuse with {why:?}"),
             })
         })
         .collect();
@@ -221,6 +239,111 @@ fn push_close_worker_random_walk() {
     report.expect_pass("push-close-worker-walk");
     assert_eq!(report.interleavings, 200);
     assert!(!report.complete);
+}
+
+// ---------------------------------------------------------------------
+// Overload admission: submit × shed × close × worker
+// ---------------------------------------------------------------------
+
+/// The serving router's reject-on-arrival path under every interleaving
+/// of two submitters, a closer, and a draining worker, sharing one
+/// [`OverloadPolicy`] exactly as `ServerHandle::submit_with` does:
+/// snapshot the queue length, decide under the shared policy lock, push
+/// only when admitted. Invariants: every submission resolves to exactly
+/// one of {admitted, shed, refused-at-shutdown}; a shed request is never
+/// drained (shed ∩ served = ∅); drain-on-close hands out exactly the
+/// admitted set, so the per-outcome counters are exact on every
+/// interleaving.
+fn overload_shed_close_worker_scenario() {
+    let q = Arc::new(SystemQueue::new(4));
+    let policy = Arc::new(Mutex::new(OverloadPolicy::new(AdmissionConfig {
+        queue_budget: 1,
+        ..AdmissionConfig::default()
+    })));
+    let worker = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || {
+            let mut drained: Vec<u64> = Vec::new();
+            loop {
+                let b = q.take_batch(2, Duration::from_millis(1));
+                if b.is_empty() {
+                    assert!(q.is_closing() && q.is_empty());
+                    return drained;
+                }
+                drained.extend(b.iter().map(|r| r.id));
+            }
+        })
+    };
+    let submitters: Vec<_> = (1..=2u64)
+        .map(|id| {
+            let q = Arc::clone(&q);
+            let policy = Arc::clone(&policy);
+            vthread::spawn(move || {
+                let lens = [q.len()];
+                let query = Query::new(id, 32, 32);
+                let decision =
+                    policy.lock().unwrap().decide(&query, 0.0, 0, &lens, &mut |_| 0.0);
+                match decision {
+                    AdmitDecision::Admit(s) => {
+                        assert_eq!(s, 0, "a one-system cluster cannot upgrade");
+                        match q.push(req(id)) {
+                            Ok(()) => (Some(id), false),
+                            Err((_, Rejected::ShuttingDown)) => (None, false),
+                            Err((_, why)) => panic!("cap-4 queue refused with {why:?}"),
+                        }
+                    }
+                    AdmitDecision::Shed(reason) => {
+                        assert_eq!(
+                            reason,
+                            ShedReason::QueueFull,
+                            "a budget-only config sheds only on the queue budget"
+                        );
+                        (None, true)
+                    }
+                }
+            })
+        })
+        .collect();
+    let closer = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || q.close())
+    };
+    let results: Vec<(Option<u64>, bool)> =
+        submitters.into_iter().map(|h| h.join().unwrap()).collect();
+    closer.join().unwrap();
+    let mut drained = worker.join().unwrap();
+    let mut admitted: Vec<u64> = results.iter().filter_map(|&(a, _)| a).collect();
+    let shed: Vec<u64> = results
+        .iter()
+        .zip(1..=2u64)
+        .filter_map(|(&(_, s), id)| s.then_some(id))
+        .collect();
+    admitted.sort_unstable();
+    drained.sort_unstable();
+    assert!(
+        admitted.len() + shed.len() <= 2,
+        "a submission counted as both admitted and shed"
+    );
+    for id in &shed {
+        assert!(!drained.contains(id), "request {id} was both shed and served");
+    }
+    assert_eq!(drained, admitted, "drain-on-close must serve exactly the admitted set");
+    assert!(q.is_empty());
+}
+
+#[test]
+fn overload_shed_never_loses_or_double_counts() {
+    let report = explore(
+        ExploreOptions {
+            name: "overload-shed-close-worker",
+            preemption_bound: Some(2),
+            max_interleavings: 25_000,
+            ..Default::default()
+        },
+        overload_shed_close_worker_scenario,
+    );
+    report.expect_pass("overload-shed-close-worker");
+    assert!(report.interleavings >= 2, "submitters × closer × worker must branch");
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,358 @@
+//! Overload conservation properties: the shared admission policy
+//! ([`hetsched::sched::overload`]) must account for every arrival in
+//! every engine and every dispatch mode — nothing lost, nothing double
+//! counted — and a vacuous (all-defaults) admission section must
+//! reproduce today's admission-free reports bit-identically. These are
+//! the release gates for the overload scenario; CI runs this suite in
+//! the `release-properties` job next to the engine-equivalence
+//! properties.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::llm_catalog;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::overload::AdmissionConfig;
+use hetsched::sched::policy::build_policy;
+use hetsched::sim::engine::{
+    simulate, BatchMode, BatchingOptions, QueueModel, SimOptions,
+};
+use hetsched::sim::report::{ShedStats, SimReport};
+use hetsched::sim::stream::{simulate_stream, StreamReport};
+use hetsched::workload::generator::{Arrival, TraceGenerator};
+use hetsched::workload::source::{SliceSource, TenantMix, TenantSpec};
+use hetsched::workload::Query;
+
+fn energy_model() -> EnergyModel {
+    EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+}
+
+/// Three tenants with distinct token shapes so per-tenant ledgers are
+/// exercised with genuinely different traffic, not three copies of one
+/// distribution.
+fn tenant_mix() -> TenantMix {
+    TenantMix {
+        tenants: vec![
+            TenantSpec { weight: 0.5, in_mu: 4.0, in_sigma: 0.6, out_mu: 4.5, out_sigma: 0.7 },
+            TenantSpec { weight: 0.3, in_mu: 5.5, in_sigma: 0.4, out_mu: 5.0, out_sigma: 0.5 },
+            TenantSpec { weight: 0.2, in_mu: 3.0, in_sigma: 0.5, out_mu: 3.5, out_sigma: 0.4 },
+        ],
+    }
+}
+
+/// An overloaded multi-tenant trace: arrivals far faster than the
+/// cluster drains, so a finite queue budget must shed.
+fn overloaded_trace(n: usize) -> Vec<Query> {
+    TraceGenerator::new(Arrival::Poisson { rate: 300.0 }, 11)
+        .with_tenants(tenant_mix())
+        .generate(n)
+}
+
+/// The conservation invariant, exact in u64 per tenant: after a drained
+/// run every arrival is either served or shed (no pending), ledger
+/// totals match the report's own counts, and upgrades never exceed
+/// serves (an upgraded query is a served query).
+fn assert_conserved(shed: &[ShedStats], arrivals: u64, served: u64, label: &str) {
+    let ledger_arrived: u64 = shed.iter().map(|s| s.arrived).sum();
+    assert_eq!(ledger_arrived, arrivals, "{label}: ledger must see every arrival");
+    let ledger_served: u64 = shed.iter().map(|s| s.served).sum();
+    assert_eq!(ledger_served, served, "{label}: ledger served != report served");
+    for s in shed {
+        assert_eq!(
+            s.arrived,
+            s.served + s.shed_total(),
+            "{label}: tenant {} leaked queries (arrived {}, served {}, shed {})",
+            s.tenant,
+            s.arrived,
+            s.served,
+            s.shed_total()
+        );
+        assert_eq!(s.pending(), 0, "{label}: tenant {} still pending after drain", s.tenant);
+        assert!(
+            s.upgraded <= s.served,
+            "{label}: tenant {} upgraded {} > served {}",
+            s.tenant,
+            s.upgraded,
+            s.served
+        );
+    }
+}
+
+/// Every simulator engine × dispatch mode the crate ships, one
+/// admission config: serial, batched static under both queue models,
+/// continuous, and the streaming engine in serial/static/continuous
+/// regimes. Each run must conserve arrivals per tenant and actually
+/// shed (the trace is overloaded by construction).
+#[test]
+fn conservation_across_every_engine_and_mode() {
+    let queries = overloaded_trace(1200);
+    let systems = system_catalog();
+    let em = energy_model();
+    let admission = AdmissionConfig { queue_budget: 6, ..AdmissionConfig::default() };
+
+    let per_class = BatchingOptions::new(4, 0.05).with_queues(QueueModel::PerClass);
+    let mut continuous = BatchingOptions::new(4, 0.05);
+    continuous.mode = BatchMode::Continuous { max_live: 8 };
+    let modes: [(&str, Option<BatchingOptions>); 4] = [
+        ("serial", None),
+        ("static/per-worker", Some(BatchingOptions::new(4, 0.05))),
+        ("static/per-class", Some(per_class)),
+        ("continuous", Some(continuous)),
+    ];
+
+    for (label, batching) in modes {
+        let opts = SimOptions {
+            batching,
+            admission: Some(admission.clone()),
+            ..Default::default()
+        };
+
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let r: SimReport = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+        assert_conserved(&r.shed, queries.len() as u64, r.outcomes.len() as u64, label);
+        assert!(r.total_shed() > 0, "{label}: an overloaded trace must shed");
+        assert!(!r.outcomes.is_empty(), "{label}: a 6-deep budget must not shed everything");
+        assert!(r.energy_conserved(), "{label}");
+        assert!(r.shed.len() >= 2, "{label}: the tenant mix must reach the ledger");
+
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let s: StreamReport = simulate_stream(
+            &mut SliceSource::new(&queries),
+            queries.len(),
+            &systems,
+            p.as_mut(),
+            &em,
+            &opts,
+        )
+        .unwrap();
+        let stream_label = format!("stream {label}");
+        assert_conserved(&s.shed, queries.len() as u64, s.queries, &stream_label);
+        assert!(s.total_shed() > 0, "{stream_label}: must shed");
+
+        // the streaming engine makes decision-for-decision identical
+        // calls into the shared policy: identical per-tenant ledgers
+        assert_eq!(s.shed, r.shed, "{label}: stream and materialized ledgers diverged");
+        assert_eq!(s.queries, r.outcomes.len() as u64, "{label}");
+        assert_eq!(s.total_energy_j.to_bits(), r.total_energy_j.to_bits(), "{label}");
+        assert_eq!(s.makespan_s.to_bits(), r.makespan_s.to_bits(), "{label}");
+    }
+}
+
+/// Shedding disabled must reproduce today's reports bit-identically —
+/// both spellings of "disabled": no admission section at all, and a
+/// vacuous all-defaults section (unbounded budget, no deadline, no
+/// rate). The vacuous run's ledger must show pure pass-through:
+/// everything arrived, everything served, zero shed.
+#[test]
+fn vacuous_admission_is_bit_identical_to_disabled() {
+    let queries = overloaded_trace(800);
+    let systems = system_catalog();
+    let em = energy_model();
+
+    let per_class = BatchingOptions::new(4, 0.05).with_queues(QueueModel::PerClass);
+    let mut continuous = BatchingOptions::new(4, 0.05);
+    continuous.mode = BatchMode::Continuous { max_live: 8 };
+    let modes: [(&str, Option<BatchingOptions>); 4] = [
+        ("serial", None),
+        ("static/per-worker", Some(BatchingOptions::new(4, 0.05))),
+        ("static/per-class", Some(per_class)),
+        ("continuous", Some(continuous)),
+    ];
+
+    for (label, batching) in modes {
+        let run = |admission: Option<AdmissionConfig>| -> SimReport {
+            let opts = SimOptions { batching, admission, ..Default::default() };
+            let mut p =
+                build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            simulate(&queries, &systems, p.as_mut(), &em, &opts)
+        };
+        let off = run(None);
+        let vacuous = run(Some(AdmissionConfig::default()));
+
+        assert_eq!(off.total_energy_j.to_bits(), vacuous.total_energy_j.to_bits(), "{label}");
+        assert_eq!(off.makespan_s.to_bits(), vacuous.makespan_s.to_bits(), "{label}");
+        assert_eq!(off.total_service_s.to_bits(), vacuous.total_service_s.to_bits(), "{label}");
+        assert_eq!(off.serial_energy_j.to_bits(), vacuous.serial_energy_j.to_bits(), "{label}");
+        assert_eq!(off.idle_energy_j.to_bits(), vacuous.idle_energy_j.to_bits(), "{label}");
+        assert_eq!(off.rerouted, vacuous.rerouted, "{label}");
+        assert_eq!(off.outcomes.len(), vacuous.outcomes.len(), "{label}");
+        for (a, b) in off.outcomes.iter().zip(&vacuous.outcomes) {
+            assert_eq!(a.query_id, b.query_id, "{label}");
+            assert_eq!(a.system, b.system, "{label}");
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits(), "{label}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}");
+        }
+
+        // disabled reports stay exactly as they always were: no ledger
+        assert!(off.shed.is_empty(), "{label}: admission off must not grow a ledger");
+        assert_eq!(off.total_shed(), 0, "{label}");
+        // the vacuous ledger is pure pass-through
+        assert_eq!(vacuous.total_shed(), 0, "{label}: a vacuous config must never shed");
+        assert_conserved(&vacuous.shed, queries.len() as u64, vacuous.outcomes.len() as u64, label);
+
+        // and the same equivalence through the streaming engine
+        let stream = |admission: Option<AdmissionConfig>| -> StreamReport {
+            let opts = SimOptions { batching, admission, ..Default::default() };
+            let mut p =
+                build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            simulate_stream(
+                &mut SliceSource::new(&queries),
+                queries.len(),
+                &systems,
+                p.as_mut(),
+                &em,
+                &opts,
+            )
+            .unwrap()
+        };
+        let s_off = stream(None);
+        let s_vac = stream(Some(AdmissionConfig::default()));
+        assert_eq!(s_off.total_energy_j.to_bits(), s_vac.total_energy_j.to_bits(), "{label}");
+        assert_eq!(s_off.makespan_s.to_bits(), s_vac.makespan_s.to_bits(), "{label}");
+        assert_eq!(s_off.queries, s_vac.queries, "{label}");
+        assert!(s_off.shed.is_empty(), "{label}");
+        assert_eq!(s_vac.total_shed(), 0, "{label}");
+    }
+}
+
+/// Each shed reason is attributed to exactly the knob that caused it:
+/// a rate-only config sheds only `RateLimit`, a budget-only config only
+/// `QueueFull`, a deadline-only config only `SloBust`.
+#[test]
+fn shed_reasons_attribute_to_their_knob() {
+    let queries = overloaded_trace(600);
+    let systems = system_catalog();
+    let em = energy_model();
+
+    let run = |admission: AdmissionConfig| -> SimReport {
+        let opts = SimOptions { admission: Some(admission), ..Default::default() };
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        simulate(&queries, &systems, p.as_mut(), &em, &opts)
+    };
+
+    // rate only: tenant 0 gets a 2 q/s bucket; tenants past the array
+    // end are unlimited and must sail through untouched
+    let rate_only = run(AdmissionConfig {
+        tenant_rate: vec![2.0],
+        tenant_burst: vec![2.0],
+        ..AdmissionConfig::default()
+    });
+    let t0 = rate_only.shed.iter().find(|s| s.tenant == 0).unwrap();
+    assert!(t0.shed_rate_limit > 0, "a 2 q/s bucket under ~150 q/s must shed");
+    for s in &rate_only.shed {
+        assert_eq!(s.shed_queue, 0, "tenant {}: no budget, no queue sheds", s.tenant);
+        assert_eq!(s.shed_slo, 0, "tenant {}: no deadline, no SLO sheds", s.tenant);
+        if s.tenant != 0 {
+            assert_eq!(s.shed_rate_limit, 0, "tenant {} has no bucket", s.tenant);
+            assert_eq!(s.served, s.arrived, "tenant {} must be untouched", s.tenant);
+        }
+    }
+
+    // budget only
+    let budget_only = run(AdmissionConfig { queue_budget: 4, ..AdmissionConfig::default() });
+    assert!(budget_only.shed.iter().map(|s| s.shed_queue).sum::<u64>() > 0);
+    for s in &budget_only.shed {
+        assert_eq!(s.shed_rate_limit, 0, "tenant {}", s.tenant);
+        assert_eq!(s.shed_slo, 0, "tenant {}", s.tenant);
+    }
+
+    // deadline only: a deadline no system can meet sheds every single
+    // arrival as SloBust, through the batched streaming path too
+    let slo = AdmissionConfig { default_slo_s: 1e-9, ..AdmissionConfig::default() };
+    let opts = SimOptions {
+        batching: Some(BatchingOptions::new(4, 0.05)),
+        admission: Some(slo),
+        ..Default::default()
+    };
+    let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+    let r = simulate_stream(
+        &mut SliceSource::new(&queries),
+        queries.len(),
+        &systems,
+        p.as_mut(),
+        &em,
+        &opts,
+    )
+    .unwrap();
+    assert_eq!(r.queries, 0, "nothing meets a 1 ns deadline");
+    assert_eq!(r.shed.iter().map(|s| s.shed_slo).sum::<u64>(), queries.len() as u64);
+    assert_eq!(r.shed.iter().map(|s| s.shed_rate_limit + s.shed_queue).sum::<u64>(), 0);
+}
+
+/// Per-tenant SLO arrays isolate tenants: an impossible deadline for
+/// tenant 1 starves only tenant 1, while tenant 0 (explicit ∞) and
+/// tenant 2 (past the array end, falls back to the ∞ default) are
+/// served in full.
+#[test]
+fn tenant_slo_arrays_isolate_tenants() {
+    let queries = overloaded_trace(600);
+    let systems = system_catalog();
+    let em = energy_model();
+    let admission = AdmissionConfig {
+        tenant_slo_s: vec![f64::INFINITY, 1e-9],
+        ..AdmissionConfig::default()
+    };
+    let opts = SimOptions { admission: Some(admission), ..Default::default() };
+    let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+    let r = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+
+    assert_conserved(&r.shed, queries.len() as u64, r.outcomes.len() as u64, "slo-isolation");
+    let stats = |tenant: u32| r.shed.iter().find(|s| s.tenant == tenant).unwrap();
+    let t1 = stats(1);
+    assert!(t1.arrived > 0, "the mix must route traffic to tenant 1");
+    assert_eq!(t1.served, 0, "tenant 1's deadline is unmeetable");
+    assert_eq!(t1.shed_slo, t1.arrived, "every tenant-1 arrival sheds as SloBust");
+    assert_eq!(t1.upgraded, 0, "nothing feasible, nothing to upgrade to");
+    for t in [0u32, 2] {
+        let s = stats(t);
+        assert!(s.arrived > 0, "the mix must route traffic to tenant {t}");
+        assert_eq!(s.served, s.arrived, "tenant {t} has no deadline and must be untouched");
+        assert_eq!(s.shed_total(), 0, "tenant {t}");
+    }
+}
+
+/// The full combined config — budget, per-tenant deadlines, and a rate
+/// limit at once — still conserves per tenant and still matches
+/// decision-for-decision between the materialized and streaming
+/// engines.
+#[test]
+fn combined_knobs_conserve_and_match_across_engines() {
+    let queries = overloaded_trace(1000);
+    let systems = system_catalog();
+    let em = energy_model();
+    let admission = AdmissionConfig {
+        queue_budget: 8,
+        default_slo_s: 30.0,
+        tenant_slo_s: vec![f64::INFINITY, 20.0],
+        tenant_rate: vec![40.0],
+        tenant_burst: vec![8.0],
+    };
+    for batching in [None, Some(BatchingOptions::new(4, 0.05))] {
+        let opts =
+            SimOptions { batching, admission: Some(admission.clone()), ..Default::default() };
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let want = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+        assert_conserved(
+            &want.shed,
+            queries.len() as u64,
+            want.outcomes.len() as u64,
+            "combined",
+        );
+        assert!(want.total_shed() > 0, "the combined config must bite under overload");
+
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let got = simulate_stream(
+            &mut SliceSource::new(&queries),
+            queries.len(),
+            &systems,
+            p.as_mut(),
+            &em,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(got.shed, want.shed, "batching={batching:?}");
+        assert_eq!(got.queries + got.total_shed(), queries.len() as u64);
+        assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits());
+    }
+}

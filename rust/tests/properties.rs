@@ -899,7 +899,14 @@ fn prop_trace_round_trip() {
         let queries: Vec<Query> = (0..n as u64)
             .map(|id| {
                 t += g.f64_in(0.0, 10.0);
-                Query { id, arrival_s: t, input_tokens: g.u32_in(1..4096), output_tokens: g.u32_in(0..4096) }
+                Query {
+                    id,
+                    arrival_s: t,
+                    input_tokens: g.u32_in(1..4096),
+                    output_tokens: g.u32_in(0..4096),
+                    tenant: 0,
+                    slo_s: f64::INFINITY,
+                }
             })
             .collect();
         let mut csv = String::from("arrival_s,input_tokens,output_tokens\n");
