@@ -9,6 +9,7 @@
 use super::toml::{TomlDoc, TomlTable, TomlValue};
 use crate::hw::catalog::{extended_catalog, find_system};
 use crate::hw::spec::SystemSpec;
+use crate::sched::faults::FaultConfig;
 use crate::sched::formation::FormationPolicy;
 use crate::sched::overload::AdmissionConfig;
 use crate::sim::engine::{BatchMode, BatchingOptions, QueueModel};
@@ -239,6 +240,13 @@ pub struct ExperimentConfig {
     /// admission everywhere and every report stays bit-identical to the
     /// historical no-shedding path.
     pub admission: Option<AdmissionConfig>,
+    /// deterministic fault injection (`[faults]`): node crash/repair
+    /// and slowdown schedules plus the retry/backoff policy — the
+    /// shared [`crate::sched::faults`] scenario consumed by both
+    /// simulator engines and `hetsched fault-sweep`. `None` (or a
+    /// disabled config) keeps every engine on its historical fault-free
+    /// path bit-identically.
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -256,6 +264,7 @@ impl Default for ExperimentConfig {
             batching: None,
             fleet: None,
             admission: None,
+            faults: None,
         }
     }
 }
@@ -602,6 +611,79 @@ impl ExperimentConfig {
             }
         }
 
+        // [faults]: deterministic fault injection — node crash/repair
+        // and slowdown schedules plus retry/backoff (sched::faults),
+        // consumed by both simulator engines and `hetsched fault-sweep`.
+        // Strict like [admission]: every knob requires `enabled = true`,
+        // and an enabled section must configure at least one failure
+        // process (mtbf_s or slow_mtbf_s) — a switch that injects
+        // nothing is an error, not a silent no-op.
+        if let Some(t) = doc.section("faults") {
+            let enabled = match t.get("enabled") {
+                Some(v) => v.as_bool().ok_or("faults.enabled must be a boolean")?,
+                None => false,
+            };
+            let knobs = [
+                "mtbf_s",
+                "mttr_s",
+                "slow_mtbf_s",
+                "slow_duration_s",
+                "slow_factor",
+                "seed",
+                "retry_max_attempts",
+                "retry_base_backoff_s",
+                "retry_max_backoff_s",
+                "retry_other_system",
+            ];
+            if !enabled {
+                if let Some(key) = knobs.iter().find(|k| t.get(k).is_some()) {
+                    return Err(format!(
+                        "faults.{key} requires faults.enabled = true (a [faults] section \
+                         without the switch never injects)"
+                    ));
+                }
+            } else {
+                let mut f = FaultConfig::default();
+                if let Some(v) = t.get("mtbf_s") {
+                    f.mtbf_s = require_f64(v, "faults.mtbf_s")?;
+                }
+                if let Some(v) = t.get("mttr_s") {
+                    f.mttr_s = require_f64(v, "faults.mttr_s")?;
+                }
+                if let Some(v) = t.get("slow_mtbf_s") {
+                    f.slow_mtbf_s = require_f64(v, "faults.slow_mtbf_s")?;
+                }
+                if let Some(v) = t.get("slow_duration_s") {
+                    f.slow_duration_s = require_f64(v, "faults.slow_duration_s")?;
+                }
+                if let Some(v) = t.get("slow_factor") {
+                    f.slow_factor = require_f64(v, "faults.slow_factor")?;
+                }
+                if let Some(v) = t.get("seed") {
+                    f.seed = require_u64(v, "faults.seed")?;
+                }
+                if let Some(v) = t.get("retry_max_attempts") {
+                    f.retry.max_attempts = require_u32(v, "faults.retry_max_attempts")?;
+                }
+                if let Some(v) = t.get("retry_base_backoff_s") {
+                    f.retry.base_backoff_s = require_f64(v, "faults.retry_base_backoff_s")?;
+                }
+                if let Some(v) = t.get("retry_max_backoff_s") {
+                    f.retry.max_backoff_s = require_f64(v, "faults.retry_max_backoff_s")?;
+                }
+                if let Some(v) = t.get("retry_other_system") {
+                    f.retry.retry_other_system =
+                        v.as_bool().ok_or("faults.retry_other_system must be a boolean")?;
+                }
+                if !f.enabled() {
+                    return Err("faults.enabled = true requires a failure process: set a \
+                                finite, positive mtbf_s (crashes) or slow_mtbf_s (slowdowns)"
+                        .into());
+                }
+                cfg.faults = Some(f);
+            }
+        }
+
         cfg.validate()?;
         Ok(cfg)
     }
@@ -775,6 +857,9 @@ impl ExperimentConfig {
                     ));
                 }
             }
+        }
+        if let Some(f) = &self.faults {
+            f.validate()?;
         }
         if let PolicyConfig::Cost { lambda } | PolicyConfig::Oracle { lambda } = self.policy {
             if !(0.0..=1.0).contains(&lambda) {
@@ -1144,6 +1229,107 @@ max_batch = 4
             // tenant that cannot arrive (default workload: 1 tenant)
             ("[admission]\nenabled = true\ntenant_slo_s = [1.0, 2.0]\n", "unknown tenant"),
             ("[admission]\nenabled = true\ntenant_rate = [10.0, 10.0]\n", "unknown tenant"),
+        ] {
+            let err = ExperimentConfig::from_toml_str(src).unwrap_err();
+            assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");
+        }
+    }
+
+    /// Faults PR: the `[faults]` section round-trips into the shared
+    /// `FaultConfig`, strictly gated on `enabled = true`.
+    #[test]
+    fn faults_section_round_trips() {
+        let cfg = ExperimentConfig::from_toml_str(concat!(
+            "[faults]\n",
+            "enabled = true\n",
+            "mtbf_s = 120.0\n",
+            "mttr_s = 15.0\n",
+            "slow_mtbf_s = 300.0\n",
+            "slow_duration_s = 20.0\n",
+            "slow_factor = 2.5\n",
+            "seed = 99\n",
+            "retry_max_attempts = 4\n",
+            "retry_base_backoff_s = 0.25\n",
+            "retry_max_backoff_s = 4.0\n",
+            "retry_other_system = false\n",
+        ))
+        .unwrap();
+        let f = cfg.faults.expect("enabled = true must populate the config");
+        assert_eq!(f.mtbf_s, 120.0);
+        assert_eq!(f.mttr_s, 15.0);
+        assert_eq!(f.slow_mtbf_s, 300.0);
+        assert_eq!(f.slow_duration_s, 20.0);
+        assert_eq!(f.slow_factor, 2.5);
+        assert_eq!(f.seed, 99);
+        assert_eq!(f.retry.max_attempts, 4);
+        assert_eq!(f.retry.base_backoff_s, 0.25);
+        assert_eq!(f.retry.max_backoff_s, 4.0);
+        assert!(!f.retry.retry_other_system);
+        assert!(f.enabled() && f.crashes_enabled() && f.slowdowns_enabled());
+
+        // crash-only config: slowdown process stays off
+        let cfg =
+            ExperimentConfig::from_toml_str("[faults]\nenabled = true\nmtbf_s = 60.0\n").unwrap();
+        let f = cfg.faults.unwrap();
+        assert!(f.crashes_enabled() && !f.slowdowns_enabled());
+
+        // absent section and an explicit `enabled = false` both stay None
+        assert!(ExperimentConfig::from_toml_str("").unwrap().faults.is_none());
+        assert!(ExperimentConfig::from_toml_str("[faults]\nenabled = false\n")
+            .unwrap()
+            .faults
+            .is_none());
+    }
+
+    /// Faults PR satellite: strict `[faults]` error paths — knobs
+    /// without the switch, an enabled-but-inert section, and values
+    /// rejected by `FaultConfig::validate` are named errors.
+    #[test]
+    fn faults_error_paths() {
+        for (src, needle) in [
+            // a failure knob without the enable switch is a mistake
+            ("[faults]\nmtbf_s = 60.0\n", "requires faults.enabled"),
+            (
+                "[faults]\nenabled = false\nretry_max_attempts = 2\n",
+                "requires faults.enabled",
+            ),
+            ("[faults]\nenabled = \"yes\"\n", "boolean"),
+            // enabled with no failure process injects nothing — reject
+            ("[faults]\nenabled = true\n", "failure process"),
+            ("[faults]\nenabled = true\nseed = 7\n", "failure process"),
+            // a zero or negative MTBF is no failure process either
+            ("[faults]\nenabled = true\nmtbf_s = 0.0\n", "failure process"),
+            ("[faults]\nenabled = true\nmtbf_s = -5.0\n", "failure process"),
+            // validate(): repair times and durations must be positive
+            ("[faults]\nenabled = true\nmtbf_s = 60.0\nmttr_s = 0.0\n", "faults.mttr_s"),
+            (
+                "[faults]\nenabled = true\nslow_mtbf_s = 60.0\nslow_duration_s = 0.0\n",
+                "faults.slow_duration_s",
+            ),
+            // a slowdown that speeds things up is a sign error
+            (
+                "[faults]\nenabled = true\nslow_mtbf_s = 60.0\nslow_factor = 0.5\n",
+                "faults.slow_factor",
+            ),
+            // retries: at least the first attempt, non-negative backoff
+            (
+                "[faults]\nenabled = true\nmtbf_s = 60.0\nretry_max_attempts = 0\n",
+                "faults.retry_max_attempts",
+            ),
+            (
+                "[faults]\nenabled = true\nmtbf_s = 60.0\nretry_base_backoff_s = -1.0\n",
+                "faults.retry_base_backoff_s",
+            ),
+            (
+                "[faults]\nenabled = true\nmtbf_s = 60.0\nretry_max_backoff_s = -1.0\n",
+                "faults.retry_max_backoff_s",
+            ),
+            // strict integer parsing carries over
+            ("[faults]\nenabled = true\nmtbf_s = 60.0\nseed = -1\n", ">= 0"),
+            (
+                "[faults]\nenabled = true\nmtbf_s = 60.0\nretry_max_attempts = 2.5\n",
+                "integer",
+            ),
         ] {
             let err = ExperimentConfig::from_toml_str(src).unwrap_err();
             assert!(err.contains(needle), "{src}: error '{err}' should contain '{needle}'");

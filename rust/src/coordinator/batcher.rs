@@ -284,6 +284,23 @@ impl SystemQueue {
         }
     }
 
+    /// Return an already-admitted request to the *front* of the queue —
+    /// the recovery path after a worker panic ([`crate::coordinator::health`]).
+    /// Deliberately bypasses both the capacity cap and the closing gate:
+    /// admission control ran at the original [`Self::push`], and the
+    /// drain guarantee ("accepted work is always completed") must keep
+    /// covering a request whose worker crashed under it — rejecting the
+    /// re-queue would turn a contained panic into a lost request. Safe
+    /// at shutdown because the panicking worker re-queues *before*
+    /// re-entering its drain loop, so at least one worker is still
+    /// alive to batch the request back out.
+    pub fn requeue(&self, req: Request) {
+        let mut q = self.lock_inner();
+        q.push_front(req);
+        drop(q);
+        self.cv.notify_one();
+    }
+
     /// Step-boundary admission for continuous (iteration-level) serving:
     /// hand out the longest FIFO prefix of the waiting requests whose
     /// joint KV footprint fits alongside the worker's current `live`

@@ -1,0 +1,201 @@
+//! Fleet health for the serving coordinator: worker panic containment
+//! bookkeeping, quarantine backoff, and degraded-capacity reporting.
+//!
+//! The simulator's fault engines model crashes analytically
+//! ([`crate::sched::faults::FaultPlan`]); the live coordinator faces the
+//! real thing — a backend panicking mid-batch. Both sides share one
+//! [`RetryPolicy`]: the worker charges each panicked request an attempt
+//! and re-queues it until `max_attempts` is exhausted, and the panicking
+//! worker itself sits out a capped-exponential quarantine
+//! (`RetryPolicy::backoff_s` over its consecutive-panic count) before
+//! re-admission. While quarantined the system's healthy-worker count
+//! drops, and the router's overload ETA is scaled by
+//! [`FleetHealth::degradation_factor`] so admission control sees the
+//! degraded fleet — shedding earlier instead of promising capacity that
+//! is sitting in a corner.
+
+use crate::sched::faults::RetryPolicy;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What to do with a request whose serving attempt panicked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureVerdict {
+    /// attempts remain: re-queue it (front — it was already admitted)
+    Retry { attempts_so_far: u32 },
+    /// the retry budget is spent: answer with an error response
+    Abandon { attempts: u32 },
+}
+
+struct SystemHealth {
+    /// workers started for this system class (one per node)
+    total: usize,
+    /// workers currently serving (total minus quarantined)
+    healthy: AtomicUsize,
+    /// consecutive panics on this system since the last clean serve;
+    /// drives the quarantine backoff exponent
+    consecutive_panics: AtomicU32,
+}
+
+/// Shared health state for the whole worker fleet.
+pub struct FleetHealth {
+    systems: Vec<SystemHealth>,
+    retry: RetryPolicy,
+    /// failed attempts per request id, across workers and systems (a
+    /// re-queued request may crash again on a different worker)
+    attempts: Mutex<HashMap<u64, u32>>,
+}
+
+impl FleetHealth {
+    /// `totals[s]` = number of worker threads for system class `s`.
+    pub fn new(totals: &[usize], retry: RetryPolicy) -> Self {
+        Self {
+            systems: totals
+                .iter()
+                .map(|&t| SystemHealth {
+                    total: t,
+                    healthy: AtomicUsize::new(t),
+                    consecutive_panics: AtomicU32::new(0),
+                })
+                .collect(),
+            retry,
+            attempts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn retry_policy(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    pub fn total(&self, system: usize) -> usize {
+        self.systems[system].total
+    }
+
+    /// Workers currently serving `system` (not quarantined).
+    pub fn healthy(&self, system: usize) -> usize {
+        self.systems[system].healthy.load(Ordering::Acquire)
+    }
+
+    /// Multiplier for the router's completion-time estimate: `total /
+    /// healthy` (1.0 at full strength, 2.0 with half the workers
+    /// quarantined, `inf` when none are serving). The overload policy's
+    /// ETA oracle applies this so SLO-based shedding sees degraded
+    /// capacity instead of the nameplate fleet.
+    pub fn degradation_factor(&self, system: usize) -> f64 {
+        let h = self.healthy(system);
+        if h == 0 {
+            f64::INFINITY
+        } else {
+            self.systems[system].total as f64 / h as f64
+        }
+    }
+
+    /// Charge `request` one failed attempt and decide its fate under
+    /// the shared retry budget (`max_attempts` counts total attempts,
+    /// so the budget is spent once `max_attempts` have failed).
+    pub fn record_failure(&self, request: u64) -> FailureVerdict {
+        let mut map = self.attempts.lock().unwrap();
+        let n = map.entry(request).or_insert(0);
+        *n += 1;
+        if *n < self.retry.max_attempts {
+            FailureVerdict::Retry { attempts_so_far: *n }
+        } else {
+            let attempts = *n;
+            map.remove(&request);
+            FailureVerdict::Abandon { attempts }
+        }
+    }
+
+    /// Forget a request's failure history (it was served).
+    pub fn clear(&self, request: u64) {
+        self.attempts.lock().unwrap().remove(&request);
+    }
+
+    /// A worker on `system` panicked and is entering quarantine: drop
+    /// it from the healthy count and return how long it must sit out
+    /// (capped exponential in the system's consecutive-panic count).
+    pub fn quarantine_begin(&self, system: usize) -> Duration {
+        let sh = &self.systems[system];
+        // never underflow if begin/end calls race pathologically
+        let _ = sh.healthy.fetch_update(Ordering::AcqRel, Ordering::Acquire, |h| {
+            h.checked_sub(1)
+        });
+        let k = sh.consecutive_panics.fetch_add(1, Ordering::AcqRel) + 1;
+        Duration::from_secs_f64(self.retry.backoff_s(k))
+    }
+
+    /// The quarantined worker is re-admitted to service.
+    pub fn quarantine_end(&self, system: usize) {
+        let sh = &self.systems[system];
+        let _ = sh.healthy.fetch_update(Ordering::AcqRel, Ordering::Acquire, |h| {
+            (h < sh.total).then_some(h + 1)
+        });
+    }
+
+    /// A clean serve on `system`: reset its quarantine backoff.
+    pub fn note_success(&self, system: usize) {
+        self.systems[system].consecutive_panics.store(0, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn health() -> FleetHealth {
+        FleetHealth::new(
+            &[2, 1],
+            RetryPolicy { max_attempts: 3, base_backoff_s: 0.5, max_backoff_s: 2.0, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn degradation_tracks_quarantine() {
+        let h = health();
+        assert_eq!(h.degradation_factor(0), 1.0);
+        let _ = h.quarantine_begin(0);
+        assert_eq!(h.healthy(0), 1);
+        assert_eq!(h.degradation_factor(0), 2.0);
+        let _ = h.quarantine_begin(1);
+        assert!(h.degradation_factor(1).is_infinite(), "no healthy workers = no capacity");
+        h.quarantine_end(0);
+        h.quarantine_end(1);
+        assert_eq!(h.degradation_factor(0), 1.0);
+        assert_eq!(h.degradation_factor(1), 1.0);
+        // re-admission never exceeds the fleet size
+        h.quarantine_end(0);
+        assert_eq!(h.healthy(0), 2);
+    }
+
+    #[test]
+    fn quarantine_backoff_grows_then_resets() {
+        let h = health();
+        let d1 = h.quarantine_begin(0);
+        h.quarantine_end(0);
+        let d2 = h.quarantine_begin(0);
+        h.quarantine_end(0);
+        let d3 = h.quarantine_begin(0);
+        h.quarantine_end(0);
+        assert_eq!(d1, Duration::from_secs_f64(0.5));
+        assert_eq!(d2, Duration::from_secs_f64(1.0));
+        assert_eq!(d3, Duration::from_secs_f64(2.0), "capped at max_backoff_s");
+        h.note_success(0);
+        assert_eq!(h.quarantine_begin(0), Duration::from_secs_f64(0.5), "clean serve resets");
+        h.quarantine_end(0);
+    }
+
+    #[test]
+    fn retry_budget_counts_total_attempts() {
+        let h = health();
+        // max_attempts = 3: two failures retry, the third abandons
+        assert_eq!(h.record_failure(7), FailureVerdict::Retry { attempts_so_far: 1 });
+        assert_eq!(h.record_failure(7), FailureVerdict::Retry { attempts_so_far: 2 });
+        assert_eq!(h.record_failure(7), FailureVerdict::Abandon { attempts: 3 });
+        // the abandon cleared the slate — a reused id starts over
+        assert_eq!(h.record_failure(7), FailureVerdict::Retry { attempts_so_far: 1 });
+        h.clear(7);
+        assert_eq!(h.record_failure(7), FailureVerdict::Retry { attempts_so_far: 1 });
+    }
+}

@@ -16,9 +16,11 @@
 pub mod admission;
 pub mod batcher;
 pub mod energy_acct;
+pub mod health;
 pub mod request;
 pub mod server;
 pub mod worker;
 
+pub use health::FleetHealth;
 pub use request::{Request, Response};
 pub use server::{Server, ServerHandle, ServerStats};

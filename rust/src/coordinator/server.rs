@@ -7,6 +7,7 @@
 
 use super::admission::SloAdmission;
 use super::batcher::{Rejected, SystemQueue};
+use super::health::FleetHealth;
 use super::request::{Request, Response};
 use crate::anyhow;
 use crate::config::schema::ExperimentConfig;
@@ -55,6 +56,9 @@ struct Inner {
     /// the server's epoch: token-bucket refill times are seconds since
     /// this instant
     started: Instant,
+    /// shared fleet health: workers report panics/quarantines here and
+    /// the router scales its overload ETA by the degraded capacity
+    health: Arc<FleetHealth>,
 }
 
 /// Point-in-time server statistics.
@@ -67,6 +71,9 @@ pub struct ServerStats {
     /// (`router.shed.{rate_limit,queue,slo}`)
     pub shed: u64,
     pub queue_lens: Vec<usize>,
+    /// healthy (non-quarantined) workers per system class — equal to
+    /// the fleet size unless panic containment has benched someone
+    pub healthy_workers: Vec<usize>,
 }
 
 impl Server {
@@ -87,6 +94,12 @@ impl Server {
         let policy = build_policy(&cfg.policy, energy.clone(), &systems);
         // shared by workers for the continuous-admission feasibility check
         let perf = Arc::new(energy.perf.clone());
+        // panic containment is always on; the retry budget and
+        // quarantine backoff come from `[faults]` when configured (the
+        // same RetryPolicy the simulator's fault engines apply)
+        let totals: Vec<usize> = systems.iter().map(|s| s.count.max(1)).collect();
+        let retry = cfg.faults.as_ref().map(|f| f.retry.clone()).unwrap_or_default();
+        let health = Arc::new(FleetHealth::new(&totals, retry));
         let mut workers = Vec::new();
         for (i, spec) in systems.iter().enumerate() {
             // one worker thread per node of the system class
@@ -101,6 +114,7 @@ impl Server {
                     continuous: cfg.serve.continuous,
                     max_live: cfg.serve.max_live,
                     perf: perf.clone(),
+                    health: health.clone(),
                 };
                 let q = queues[i].clone();
                 let f = factory.clone();
@@ -125,6 +139,7 @@ impl Server {
             default_gen: cfg.serve.gen_tokens,
             overload: cfg.admission.clone().map(|a| Mutex::new(OverloadPolicy::new(a))),
             started: serving_epoch(),
+            health,
         });
         Ok(Server { handle: ServerHandle { inner }, queues, workers })
     }
@@ -274,7 +289,15 @@ impl ServerHandle {
         // keep
         if let Some(ov) = &inner.overload {
             let now_s = inner.started.elapsed().as_secs_f64();
-            let mut eta = |s: usize| inner.slo_eta.eta_from_len(&inner.systems, &q, s, lens[s]);
+            // the ETA oracle sees the *degraded* fleet: quarantined
+            // workers scale the estimate by total/healthy (infinite
+            // when a system class has no healthy workers), so
+            // SLO-based shedding reacts to faults instead of promising
+            // nameplate capacity
+            let mut eta = |s: usize| {
+                inner.slo_eta.eta_from_len(&inner.systems, &q, s, lens[s])
+                    * inner.health.degradation_factor(s)
+            };
             let decision = ov.lock().unwrap().decide(&q, now_s, sid.0, &lens, &mut eta);
             match decision {
                 AdmitDecision::Admit(s2) => {
@@ -324,7 +347,16 @@ impl ServerHandle {
             rejected: self.inner.metrics.counter("router.rejected").get(),
             shed: self.inner.metrics.counter("router.shed").get(),
             queue_lens: self.inner.queues.iter().map(|q| q.len()).collect(),
+            healthy_workers: (0..self.inner.systems.len())
+                .map(|s| self.inner.health.healthy(s))
+                .collect(),
         }
+    }
+
+    /// The shared fleet-health tracker (panic containment bookkeeping,
+    /// degraded-capacity reporting). Exposed for tests and operators.
+    pub fn health(&self) -> Arc<FleetHealth> {
+        self.inner.health.clone()
     }
 
     pub fn metrics_json(&self) -> String {

@@ -2,17 +2,32 @@
 //! queue in dynamic batches and executing each request on an inference
 //! backend (real PJRT under `--features pjrt`, the model-driven
 //! [`crate::runtime::SimBackend`] otherwise).
+//!
+//! ## Panic containment
+//!
+//! A panic inside the backend's `generate` call is a node fault, not a
+//! server fault: the worker catches it, charges the in-flight request
+//! one attempt under the shared [`crate::sched::faults::RetryPolicy`]
+//! (re-queue at the front, or an error response once the budget is
+//! spent), returns the batch's untouched members to the queue, and sits
+//! out a capped-exponential quarantine tracked by
+//! [`super::health::FleetHealth`] before taking work again. The engine
+//! instance is reused after the panic — backends are stateless per call
+//! by contract (`generate(&self, ...)`).
 
 use super::batcher::SystemQueue;
 use super::energy_acct;
+use super::health::{FailureVerdict, FleetHealth};
 use super::request::{Request, Response};
 use crate::hw::spec::SystemSpec;
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Registry};
 use crate::perf::model::PerfModel;
 use crate::runtime::backend::InferenceBackend;
 use crate::runtime::engine::SamplingParams;
 use crate::sched::formation::FormationPolicy;
 use crate::util::error::Result;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -41,6 +56,17 @@ pub struct WorkerConfig {
     pub max_live: usize,
     /// perf model backing the joint-KV admission feasibility check
     pub perf: Arc<PerfModel>,
+    /// shared fleet health: panic containment bookkeeping, quarantine
+    /// backoff, degraded-capacity reporting to the router
+    pub health: Arc<FleetHealth>,
+}
+
+/// Per-worker fault metrics, threaded through the containment path.
+struct FaultCounters {
+    panics: Arc<Counter>,
+    requeued: Arc<Counter>,
+    quarantines: Arc<Counter>,
+    errors: Arc<Counter>,
 }
 
 /// Run the worker loop until the queue closes and drains. Every request
@@ -85,6 +111,12 @@ pub fn run_worker(
     let batches = metrics.counter(&format!("worker.{}.batches", cfg.spec.name));
     let admissions = metrics.counter(&format!("worker.{}.admissions", cfg.spec.name));
     let latency = metrics.histo(&format!("worker.{}.latency", cfg.spec.name));
+    let fc = FaultCounters {
+        panics: metrics.counter(&format!("worker.{}.panics", cfg.spec.name)),
+        requeued: metrics.counter(&format!("worker.{}.requeued", cfg.spec.name)),
+        quarantines: metrics.counter(&format!("worker.{}.quarantines", cfg.spec.name)),
+        errors: errors.clone(),
+    };
     let continuous = cfg.continuous && cfg.max_batch > 1;
     let max_live = if cfg.max_live == 0 { cfg.max_batch } else { cfg.max_live };
 
@@ -99,8 +131,21 @@ pub fn run_worker(
         batches.inc();
         if !continuous {
             let batch_size = batch.len();
-            for req in batch {
-                serve_one(&cfg, req, batch_size, engine.as_ref(), &served, &errors, &latency);
+            let mut rest: VecDeque<Request> = batch.into();
+            while let Some(req) = rest.pop_front() {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    serve_one(&cfg, &req, batch_size, engine.as_ref(), &served, &errors, &latency)
+                }));
+                match outcome {
+                    Ok(()) => {
+                        cfg.health.note_success(cfg.system_index);
+                        cfg.health.clear(req.id);
+                    }
+                    Err(_) => {
+                        contain_panic(&cfg, req, &mut rest, &queue, &fc);
+                        break;
+                    }
+                }
             }
             continue;
         }
@@ -113,7 +158,20 @@ pub fn run_worker(
         while !live.is_empty() {
             let req = live.remove(0);
             let batch_size = live.len() + 1;
-            serve_one(&cfg, req, batch_size, engine.as_ref(), &served, &errors, &latency);
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                serve_one(&cfg, &req, batch_size, engine.as_ref(), &served, &errors, &latency)
+            }));
+            match outcome {
+                Ok(()) => {
+                    cfg.health.note_success(cfg.system_index);
+                    cfg.health.clear(req.id);
+                }
+                Err(_) => {
+                    let mut rest: VecDeque<Request> = std::mem::take(&mut live).into();
+                    contain_panic(&cfg, req, &mut rest, &queue, &fc);
+                    break;
+                }
+            }
             let room = max_live.saturating_sub(live.len());
             if room == 0 {
                 continue;
@@ -129,13 +187,66 @@ pub fn run_worker(
     }
 }
 
-fn serve_one(
+/// The recovery path after a backend panic: settle the failed request
+/// under the retry budget, hand the batch's untouched members back to
+/// the queue, and quarantine this worker.
+fn contain_panic(
     cfg: &WorkerConfig,
     req: Request,
+    rest: &mut VecDeque<Request>,
+    queue: &SystemQueue,
+    fc: &FaultCounters,
+) {
+    fc.panics.inc();
+    match cfg.health.record_failure(req.id) {
+        FailureVerdict::Retry { .. } => {
+            // re-queue the failed request *first*, so the innocents
+            // re-queued below land ahead of it at the queue front —
+            // a crashing request cannot starve its batchmates
+            queue.requeue(req);
+            fc.requeued.inc();
+        }
+        FailureVerdict::Abandon { attempts } => {
+            fc.errors.inc();
+            let _ = req.respond.send(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                system: cfg.system_index,
+                system_name: format!(
+                    "{} (worker panicked; gave up after {attempts} attempts)",
+                    cfg.spec.name
+                ),
+                prefill_s: 0.0,
+                decode_s: 0.0,
+                latency_s: req.submitted.elapsed().as_secs_f64(),
+                energy_j: 0.0,
+                batch_size: 1,
+            });
+        }
+    }
+    // back-to-front so the remainder keeps its order at the queue front
+    while let Some(r) = rest.pop_back() {
+        queue.requeue(r);
+    }
+    // quarantine: sit out the backoff in small slices, re-checking the
+    // shutdown flag so a closing queue is drained without the full wait
+    fc.quarantines.inc();
+    let mut left = cfg.health.quarantine_begin(cfg.system_index);
+    while !left.is_zero() && !queue.is_closing() {
+        let nap = left.min(Duration::from_millis(10));
+        std::thread::sleep(nap);
+        left = left.saturating_sub(nap);
+    }
+    cfg.health.quarantine_end(cfg.system_index);
+}
+
+fn serve_one(
+    cfg: &WorkerConfig,
+    req: &Request,
     batch_size: usize,
     engine: &dyn InferenceBackend,
-    served: &crate::metrics::Counter,
-    errors: &crate::metrics::Counter,
+    served: &Counter,
+    errors: &Counter,
     latency: &crate::metrics::LatencyHisto,
 ) {
     let id = req.id;
@@ -177,5 +288,160 @@ fn serve_one(
                 batch_size,
             });
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::catalog::system_catalog;
+    use crate::model::llm_catalog;
+    use crate::runtime::backend::{GenerationResult, SimBackend};
+    use crate::sched::faults::RetryPolicy;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    /// Panics the first `panics_left` times a magic prompt is served;
+    /// delegates everything else (and later magic attempts) to the sim
+    /// backend. Models a transiently faulty node.
+    struct PanickyBackend {
+        inner: SimBackend,
+        panics_left: AtomicU32,
+    }
+
+    const MAGIC: i32 = -7;
+
+    impl InferenceBackend for PanickyBackend {
+        fn generate(
+            &self,
+            prompt: &[i32],
+            gen_tokens: u32,
+            sp: SamplingParams,
+        ) -> crate::util::error::Result<GenerationResult> {
+            if prompt.contains(&MAGIC) {
+                let left = self.panics_left.load(Ordering::Acquire);
+                if left > 0 {
+                    self.panics_left.store(left - 1, Ordering::Release);
+                    panic!("injected node fault");
+                }
+            }
+            self.inner.generate(prompt, gen_tokens, sp)
+        }
+    }
+
+    fn worker_setup(
+        retry: RetryPolicy,
+        panics: u32,
+    ) -> (WorkerConfig, Arc<SystemQueue>, Arc<Registry>, EngineFactory) {
+        let spec = system_catalog()[1].clone();
+        let perf = Arc::new(PerfModel::new(llm_catalog()[1].clone()));
+        let health = Arc::new(FleetHealth::new(&[1], retry));
+        let cfg = WorkerConfig {
+            system_index: 0,
+            spec: spec.clone(),
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            formation: FormationPolicy::FifoPrefix,
+            sampling: SamplingParams::default(),
+            continuous: false,
+            max_live: 0,
+            perf: perf.clone(),
+            health,
+        };
+        let queue = Arc::new(SystemQueue::new(16));
+        let metrics = Arc::new(Registry::default());
+        let factory: EngineFactory = Arc::new(move |spec: &SystemSpec| {
+            Ok(Box::new(PanickyBackend {
+                inner: SimBackend::new(spec.clone(), PerfModel::new(llm_catalog()[1].clone())),
+                panics_left: AtomicU32::new(panics),
+            }) as Box<dyn InferenceBackend>)
+        });
+        (cfg, queue, metrics, factory)
+    }
+
+    fn req(id: u64, prompt: Vec<i32>) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                prompt,
+                gen_tokens: 2,
+                tenant: 0,
+                slo_s: f64::INFINITY,
+                submitted: Instant::now(),
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    /// A single transient panic: the batch's other members still get
+    /// real responses, the crashed request is re-queued and served on
+    /// the retry, and the worker thread survives to drain the queue.
+    #[test]
+    fn panic_mid_batch_retries_and_serves_everyone() {
+        let retry =
+            RetryPolicy { max_attempts: 3, base_backoff_s: 0.01, ..RetryPolicy::default() };
+        let (cfg, queue, metrics, factory) = worker_setup(retry, 1);
+        let health = cfg.health.clone();
+        let mut rxs = Vec::new();
+        for (id, prompt) in [(0, vec![1, 2]), (1, vec![MAGIC, 2]), (2, vec![3, 4])] {
+            let (r, rx) = req(id, prompt);
+            queue.push(r).map_err(|_| ()).unwrap();
+            rxs.push((id, rx));
+        }
+        let q2 = queue.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || run_worker(cfg, q2, factory, m2));
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(20)).expect("response must arrive");
+            assert_eq!(resp.id, id);
+            assert!(
+                !resp.tokens.is_empty(),
+                "request {id} must be served for real, got '{}'",
+                resp.system_name
+            );
+        }
+        queue.close();
+        h.join().expect("worker must survive the contained panic");
+        let name = &system_catalog()[1].name;
+        assert_eq!(metrics.counter(&format!("worker.{name}.panics")).get(), 1);
+        assert_eq!(metrics.counter(&format!("worker.{name}.requeued")).get(), 1);
+        assert_eq!(metrics.counter(&format!("worker.{name}.quarantines")).get(), 1);
+        assert_eq!(metrics.counter(&format!("worker.{name}.errors")).get(), 0);
+        assert_eq!(health.healthy(0), 1, "quarantine must end in re-admission");
+    }
+
+    /// Panics beyond the retry budget: the request gets an error
+    /// response (never a hang), everyone else is served, and the
+    /// attempt count in the response matches the policy.
+    #[test]
+    fn panic_past_budget_abandons_with_error_response() {
+        let retry =
+            RetryPolicy { max_attempts: 2, base_backoff_s: 0.01, ..RetryPolicy::default() };
+        let (cfg, queue, metrics, factory) = worker_setup(retry, u32::MAX);
+        let (good, good_rx) = req(0, vec![1, 2]);
+        let (bad, bad_rx) = req(1, vec![MAGIC]);
+        queue.push(bad).map_err(|_| ()).unwrap();
+        queue.push(good).map_err(|_| ()).unwrap();
+        let q2 = queue.clone();
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || run_worker(cfg, q2, factory, m2));
+        let resp = bad_rx.recv_timeout(Duration::from_secs(20)).expect("abandon must respond");
+        assert!(resp.tokens.is_empty());
+        assert!(
+            resp.system_name.contains("gave up after 2 attempts"),
+            "got '{}'",
+            resp.system_name
+        );
+        let resp = good_rx.recv_timeout(Duration::from_secs(20)).expect("batchmate must be served");
+        assert!(!resp.tokens.is_empty(), "got '{}'", resp.system_name);
+        queue.close();
+        h.join().expect("worker must survive repeated panics");
+        let name = &system_catalog()[1].name;
+        assert_eq!(metrics.counter(&format!("worker.{name}.panics")).get(), 2);
+        assert_eq!(metrics.counter(&format!("worker.{name}.requeued")).get(), 1);
+        assert_eq!(metrics.counter(&format!("worker.{name}.errors")).get(), 1);
     }
 }

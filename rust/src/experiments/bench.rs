@@ -346,6 +346,31 @@ pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
         sharded.evaluations(),
         100.0 * sharded.hit_rate()
     ));
+    // thread-count scaling curve: the same hammer at 1/2/4/8 threads
+    // over the same (warm) tables and pool, fixed per-thread work — the
+    // curve shows where the global mutex stops scaling while the
+    // sharded table keeps going, not just the single headline ratio
+    let mut scaling = Vec::new();
+    for &snt in &[1usize, 2, 4, 8] {
+        let r_m = harness
+            .run(&format!("contended scaling (global mutex, {snt} threads)"), (snt * ops) as u64, || {
+                hammer(&mutex_table, |t, s, m| t.cost(s, m), &pool, snt, ops);
+            });
+        lines.push(r_m.line());
+        let r_s = harness
+            .run(&format!("contended scaling (sharded, {snt} threads)"), (snt * ops) as u64, || {
+                hammer(&sharded, |t, s, m| t.cost(s, m), &pool, snt, ops);
+            });
+        lines.push(r_s.line());
+        let sp = r_m.median_s / r_s.median_s;
+        lines.push(format!("  scaling @{snt} threads: sharded vs mutex {sp:.2}x"));
+        let mut point = BTreeMap::new();
+        point.insert("threads".to_string(), num(snt as f64));
+        point.insert("mutex".to_string(), report_json(&r_m));
+        point.insert("sharded".to_string(), report_json(&r_s));
+        point.insert("speedup".to_string(), num(sp));
+        scaling.push(Json::Obj(point));
+    }
     let mut sec = BTreeMap::new();
     sec.insert("threads".to_string(), num(nt as f64));
     sec.insert("ops_per_thread".to_string(), num(ops as f64));
@@ -356,6 +381,7 @@ pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
     sec.insert("sharded_lookups".to_string(), num(sharded.lookups() as f64));
     sec.insert("sharded_hit_rate".to_string(), num(sharded.hit_rate()));
     sec.insert("sharded_evaluations".to_string(), num(sharded.evaluations() as f64));
+    sec.insert("scaling".to_string(), Json::Arr(scaling));
     sections.insert("contended_batch_table".to_string(), Json::Obj(sec));
 
     // ── 5. engine: event-heap vs scan due-picking, plus streaming ──────
@@ -474,6 +500,80 @@ pub fn run_bench(opts: &BenchOptions) -> BenchOutput {
     BenchOutput { lines, json: json_to_string(&Json::Obj(root)) }
 }
 
+/// The outcome of [`bench_diff`]: a rendered line per compared timing
+/// entry, plus the subset that regressed beyond the noise gate.
+pub struct BenchDiff {
+    /// one line per timing entry present in both documents
+    pub lines: Vec<String>,
+    /// the entries whose median slowed beyond the gate (empty = pass)
+    pub regressions: Vec<String>,
+    /// timing entries compared (0 when the baseline's sections are
+    /// empty — the honest cross-machine baseline)
+    pub compared: usize,
+}
+
+/// Compare two BENCH.json documents entry-by-entry, MAD-aware. A timing
+/// entry (any section member carrying `median_s`/`mad_s`) present in
+/// *both* documents regresses when the new median exceeds the old by
+/// more than `max(rel_tol · old_median, mad_k · (old_mad + new_mad))` —
+/// the relative floor absorbs clock granularity, the MAD term absorbs
+/// each run's own measured noise, so a flaky entry needs a real shift
+/// to fail the gate. Entries present in only one document (new
+/// sections, renamed benches) are skipped: the diff gates the *common*
+/// trajectory, never punishes growth. Deterministic counters are not
+/// compared — they are pinned by tests, not by the bench.
+pub fn bench_diff(old: &str, new: &str, rel_tol: f64, mad_k: f64) -> Result<BenchDiff, String> {
+    let old = Json::parse(old).map_err(|e| format!("old BENCH.json: {e}"))?;
+    let new = Json::parse(new).map_err(|e| format!("new BENCH.json: {e}"))?;
+    for (doc, name) in [(&old, "old"), (&new, "new")] {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some("hetsched-bench/1") => {}
+            other => return Err(format!("{name} BENCH.json: unsupported schema {other:?}")),
+        }
+    }
+    let mut out = BenchDiff { lines: Vec::new(), regressions: Vec::new(), compared: 0 };
+    if old.get("smoke") != new.get("smoke") {
+        out.lines.push(
+            "note: comparing a smoke run against a full run — medians use different budgets"
+                .to_string(),
+        );
+    }
+    let old_secs = old.req("sections")?.as_obj().ok_or("old sections must be an object")?;
+    let new_secs = new.req("sections")?.as_obj().ok_or("new sections must be an object")?;
+    for (sname, osec) in old_secs {
+        let (Some(omap), Some(nmap)) =
+            (osec.as_obj(), new_secs.get(sname).and_then(Json::as_obj))
+        else {
+            continue;
+        };
+        for (ename, oent) in omap {
+            let timing = |e: &Json| {
+                Some((e.get("median_s")?.as_f64()?, e.get("mad_s")?.as_f64()?))
+            };
+            let (Some((om, omad)), Some((nm, nmad))) =
+                (timing(oent), nmap.get(ename).and_then(|e| timing(e)))
+            else {
+                continue;
+            };
+            out.compared += 1;
+            let gate = (rel_tol * om).max(mad_k * (omad + nmad));
+            let delta_pct = if om > 0.0 { 100.0 * (nm - om) / om } else { 0.0 };
+            let regressed = nm - om > gate;
+            let line = format!(
+                "{sname}.{ename}: {:.3} ms -> {:.3} ms ({delta_pct:+.1}%){}",
+                om * 1e3,
+                nm * 1e3,
+                if regressed { "  REGRESSION" } else { "" }
+            );
+            if regressed {
+                out.regressions.push(line.clone());
+            }
+            out.lines.push(line);
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -510,6 +610,13 @@ mod tests {
         assert!(looked >= 600.0, "contended section must have run: {looked} lookups");
         let hit_rate = cb.get("sharded_hit_rate").unwrap().as_f64().unwrap();
         assert!((0.0..=1.0).contains(&hit_rate));
+        let scaling = cb.get("scaling").unwrap().as_arr().unwrap();
+        assert_eq!(scaling.len(), 4, "1/2/4/8 thread-count curve");
+        for (p, want) in scaling.iter().zip([1.0, 2.0, 4.0, 8.0]) {
+            assert_eq!(p.get("threads").unwrap().as_f64(), Some(want));
+            assert!(p.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+            assert!(p.get("sharded").unwrap().get("median_s").unwrap().as_f64().unwrap() > 0.0);
+        }
         // the engine section carries both speed and memory counters
         let eng = sections.get("engine").unwrap();
         assert!(eng.get("speedup").unwrap().as_f64().unwrap() > 0.0);
@@ -527,6 +634,42 @@ mod tests {
             let med = sim.get(k).unwrap().get("median_s").unwrap().as_f64().unwrap();
             assert!(med > 0.0, "{k} median must be positive");
         }
+    }
+
+    /// The diff gate: small drift and honest noise pass, real slowdowns
+    /// fail, the empty-sections baseline compares nothing, and a foreign
+    /// schema is an error — the exact semantics `bench --diff` ships.
+    #[test]
+    fn bench_diff_flags_only_real_regressions() {
+        let doc = |med: f64, mad: f64| {
+            format!(
+                r#"{{"schema":"hetsched-bench/1","smoke":true,"sections":{{"simulate":{{"serial":{{"median_s":{med},"mad_s":{mad},"mean_s":{med},"min_s":{med},"samples":5,"iters":1,"per_s":0}},"dispatches":42}}}}}}"#
+            )
+        };
+        // +1 % sits inside the 5 % relative floor
+        let d = bench_diff(&doc(1.0, 0.01), &doc(1.01, 0.01), 0.05, 3.0).unwrap();
+        assert_eq!(d.compared, 1);
+        assert!(d.regressions.is_empty(), "{:?}", d.regressions);
+        // +50 % on a quiet entry is a regression
+        let d = bench_diff(&doc(1.0, 0.01), &doc(1.5, 0.01), 0.05, 3.0).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert!(d.regressions[0].contains("simulate.serial"), "{}", d.regressions[0]);
+        // the same +50 % inside a wide measured noise band is not:
+        // 3 · (0.5 + 0.5) swallows the shift
+        let d = bench_diff(&doc(1.0, 0.5), &doc(1.5, 0.5), 0.05, 3.0).unwrap();
+        assert!(d.regressions.is_empty());
+        // a faster run never regresses
+        let d = bench_diff(&doc(1.0, 0.01), &doc(0.5, 0.01), 0.05, 3.0).unwrap();
+        assert!(d.regressions.is_empty());
+        // the honest cross-machine baseline: empty sections, nothing
+        // compared, gate passes while new sections are ignored
+        let empty = r#"{"schema":"hetsched-bench/1","smoke":false,"sections":{}}"#;
+        let d = bench_diff(empty, &doc(1.0, 0.01), 0.05, 3.0).unwrap();
+        assert_eq!(d.compared, 0);
+        assert!(d.regressions.is_empty());
+        // foreign schemas and garbage are errors, not silent passes
+        assert!(bench_diff(r#"{"schema":"other/9","sections":{}}"#, empty, 0.05, 3.0).is_err());
+        assert!(bench_diff("not json", empty, 0.05, 3.0).is_err());
     }
 
     #[test]

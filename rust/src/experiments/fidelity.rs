@@ -28,12 +28,14 @@
 //! - **Batch composition** — mean realized batch size, report-only
 //!   (serving's linger clock is real time, so sizes are noisier).
 //!
-//! Token-bucket rates are deliberately absent from the default
-//! harness config: bucket refill runs on *real* seconds in the server
-//! and *modeled* seconds in the sim, so under wall-clock compression a
-//! rate-limited comparison would need `tenant_rate / time_scale`
-//! rescaling on the serving side. Queue budgets and SLOs are timeless
-//! or modeled-time quantities and compare directly.
+//! Token-bucket rates need one translation the other admission knobs
+//! don't: bucket refill runs on *real* seconds in the server and
+//! *modeled* seconds in the sim, so under wall-clock compression the
+//! harness rescales each finite per-tenant rate to
+//! `tenant_rate / time_scale` on the serving side — both stacks then
+//! grant tokens at the same *modeled* rate and rate-limited configs
+//! compare like any other. Queue budgets, bursts, and SLOs are
+//! timeless or modeled-time quantities and carry over unchanged.
 
 use crate::config::schema::{ExperimentConfig, PolicyConfig, ServeConfig};
 use crate::coordinator::batcher::Rejected;
@@ -342,6 +344,19 @@ pub fn run_fidelity(opts: &FidelityOptions) -> Result<FidelityReport, String> {
     }
     let policy_cfg = PolicyConfig::Cost { lambda: 1.0 };
 
+    // the serving bucket refills on *real* seconds while the sim's
+    // refills on modeled seconds: rescale each finite per-tenant rate
+    // by 1/time_scale so both stacks grant tokens at the same *modeled*
+    // rate (bursts are token counts, not rates — they carry unchanged)
+    let serve_admission = opts.admission.clone().map(|mut a| {
+        for r in &mut a.tenant_rate {
+            if r.is_finite() && *r > 0.0 {
+                *r /= opts.time_scale;
+            }
+        }
+        a
+    });
+
     // one serving config is the single source of both stacks' shape:
     // cluster systems, batching knobs, and the admission section
     let cfg = ExperimentConfig {
@@ -355,7 +370,7 @@ pub fn run_fidelity(opts: &FidelityOptions) -> Result<FidelityReport, String> {
             queue_cap: opts.queries.max(1024),
             ..ServeConfig::default()
         },
-        admission: opts.admission.clone(),
+        admission: serve_admission,
         ..ExperimentConfig::default()
     };
     let systems = cfg.cluster.systems.clone();

@@ -9,13 +9,14 @@ pub mod headline;
 pub mod runner;
 pub mod sweeps;
 
-pub use bench::{run_bench, BenchOptions, BenchOutput};
+pub use bench::{bench_diff, run_bench, BenchDiff, BenchOptions, BenchOutput};
 pub use fidelity::{run_fidelity, FidelityOptions, FidelityReport};
 pub use figures::{fig3_alpaca, table1};
 pub use headline::{headline_savings, HeadlineResult};
 pub use runner::{
-    batching_sweep, count_grid_points, fleet_sweep, formation_sweep, lambda_sweep,
+    batching_sweep, count_grid_points, fault_sweep, fleet_sweep, formation_sweep, lambda_sweep,
     overload_sweep, policy_comparison, seed_replicates, stream_policy_comparison, BatchingPoint,
-    FleetPoint, FleetSweepResult, FormationPoint, FormationSweep, LambdaPoint, OverloadPoint,
+    FaultPoint, FleetPoint, FleetSweepResult, FormationPoint, FormationSweep, LambdaPoint,
+    OverloadPoint,
 };
 pub use sweeps::{input_sweep, output_sweep, threshold_sweep, SweepRow, ThresholdCurve};

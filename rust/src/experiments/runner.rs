@@ -19,6 +19,7 @@ use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, BucketSpec, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
+use crate::sched::faults::FaultConfig;
 use crate::sched::formation::FormationPolicy;
 use crate::sched::overload::AdmissionConfig;
 use crate::sched::policy::build_policy;
@@ -761,6 +762,128 @@ pub fn overload_sweep(
     out
 }
 
+/// One (rate, MTBF) point of a [`fault_sweep`]: the completion × energy
+/// trade a fault process (and the retry policy that answers it) imposes,
+/// read against its fault-free sibling on the same trace — the *energy
+/// of resilience*.
+#[derive(Clone, Debug)]
+pub struct FaultPoint {
+    /// Poisson arrival rate λ of the trace (queries/s)
+    pub rate: f64,
+    /// node MTBF of this point's crash process (s);
+    /// `f64::INFINITY` marks the fault-free baseline sibling
+    pub mtbf_s: f64,
+    /// queries in the trace
+    pub arrived: u64,
+    /// queries that produced an outcome
+    pub served: u64,
+    /// queries dropped after exhausting their retry budget
+    pub abandoned: u64,
+    /// retry attempts scheduled across all systems
+    pub retries: u64,
+    /// `served / arrived`
+    pub completion_rate: f64,
+    /// nines of completion: `-log10(1 - completion)` (`inf` at 100 %)
+    pub nines: f64,
+    /// cluster energy actually spent (J), crashed attempts included
+    pub total_energy_j: f64,
+    /// the component of `total_energy_j` burned by crashed attempts
+    /// that produced no outcome
+    pub wasted_energy_j: f64,
+    /// `total_energy_j` minus the fault-free sibling's on the same
+    /// trace (J; 0 on the baseline itself). Can run negative when
+    /// abandonment drops more work than retries re-spend.
+    pub extra_energy_j: f64,
+    /// `total_energy_j / served` (J/query; 0 when nothing served)
+    pub energy_per_served_j: f64,
+    /// mean/p99 latency over the *served* queries only
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub makespan_s: f64,
+}
+
+impl FaultPoint {
+    fn from_report(rate: f64, mtbf_s: f64, arrived: u64, rep: &SimReport) -> Self {
+        let served = rep.outcomes.len() as u64;
+        let completion = rep.completion_rate();
+        Self {
+            rate,
+            mtbf_s,
+            arrived,
+            served,
+            abandoned: rep.total_abandoned(),
+            retries: rep.total_retries(),
+            completion_rate: completion,
+            nines: if completion >= 1.0 { f64::INFINITY } else { -(1.0 - completion).log10() },
+            total_energy_j: rep.total_energy_j,
+            wasted_energy_j: rep.wasted_energy_j,
+            extra_energy_j: 0.0, // filled in against the baseline sibling
+            energy_per_served_j: if served == 0 {
+                0.0
+            } else {
+                rep.total_energy_j / served as f64
+            },
+            mean_latency_s: rep.mean_latency_s(),
+            p99_latency_s: rep.p99_latency_s(),
+            makespan_s: rep.makespan_s,
+        }
+    }
+}
+
+/// Sweep fault intensity: per arrival rate λ, run the same trace through
+/// the simulator once fault-free and once per MTBF in `mtbfs` (each a
+/// copy of `faults` with `mtbf_s` overridden), all over one shared
+/// [`CostTable`], so every faulted point reads its completion loss and
+/// resilience energy directly against its baseline sibling. Points come
+/// back rate-major, the fault-free sibling first, then `mtbfs` order.
+/// The retry budget in `faults.retry` is what turns crashes into
+/// retries instead of losses — sweeping MTBF with it fixed maps the
+/// *extra joules per nine of completion* the policy buys.
+pub fn fault_sweep(
+    systems: &[SystemSpec],
+    energy: &EnergyModel,
+    policy: &PolicyConfig,
+    faults: &FaultConfig,
+    mtbfs: &[f64],
+    rates: &[f64],
+    n_queries: usize,
+    seed: u64,
+) -> Vec<FaultPoint> {
+    assert!(
+        mtbfs.iter().all(|m| m.is_finite() && *m > 0.0),
+        "fault-sweep MTBFs must be finite and positive (the infinite baseline is implicit)"
+    );
+    let mut out = Vec::with_capacity(rates.len() * (mtbfs.len() + 1));
+    for &rate in rates {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n_queries);
+        let table = CostTable::build(&queries, systems, energy);
+        let grid: Vec<Option<f64>> =
+            std::iter::once(None).chain(mtbfs.iter().copied().map(Some)).collect();
+        let mut pts = par_map(&grid, |&mtbf| {
+            let mut p = build_policy(policy, energy.clone(), systems);
+            let fcfg = mtbf.map(|m| {
+                let mut c = faults.clone();
+                c.mtbf_s = m;
+                c
+            });
+            let opts = SimOptions { faults: fcfg, ..Default::default() };
+            let rep = simulate_with_table(&queries, systems, p.as_mut(), &table, &opts);
+            FaultPoint::from_report(
+                rate,
+                mtbf.unwrap_or(f64::INFINITY),
+                queries.len() as u64,
+                &rep,
+            )
+        });
+        let baseline_j = pts[0].total_energy_j;
+        for p in pts.iter_mut().skip(1) {
+            p.extra_energy_j = p.total_energy_j - baseline_j;
+        }
+        out.extend(pts);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1190,6 +1313,64 @@ mod tests {
             11,
         );
         assert_eq!(lax.best_per_rate, vec![Some(0)]);
+    }
+
+    /// The fault sweep pairs every MTBF with a fault-free sibling on
+    /// the same trace and table: the baseline completes everything for
+    /// free (no retries, no waste), the faulted point conserves queries
+    /// exactly, and its resilience energy is read off the pair.
+    #[test]
+    fn fault_sweep_pairs_baseline_and_conserves_queries() {
+        let systems = system_catalog();
+        let em = energy();
+        let fcfg = FaultConfig { mttr_s: 5.0, seed: 7, ..Default::default() };
+        let pts = fault_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::Cost { lambda: 1.0 },
+            &fcfg,
+            &[2.0], // dense crashes relative to the ~12 s arrival span
+            &[25.0],
+            300,
+            2024,
+        );
+        assert_eq!(pts.len(), 2, "baseline + one MTBF per rate");
+        let (base, faulted) = (&pts[0], &pts[1]);
+        assert!(base.mtbf_s.is_infinite());
+        assert_eq!(base.arrived, 300);
+        assert_eq!(base.served, 300);
+        assert_eq!(base.abandoned, 0);
+        assert_eq!(base.retries, 0);
+        assert_eq!(base.completion_rate, 1.0);
+        assert!(base.nines.is_infinite());
+        assert_eq!(base.wasted_energy_j.to_bits(), 0.0f64.to_bits());
+        assert_eq!(base.extra_energy_j.to_bits(), 0.0f64.to_bits());
+        assert_eq!(faulted.mtbf_s, 2.0);
+        assert_eq!(faulted.arrived, 300);
+        // u64-exact conservation: every arrival is served or abandoned
+        assert_eq!(faulted.served + faulted.abandoned, faulted.arrived);
+        assert!(faulted.retries > 0, "dense crashes must hit in-flight work");
+        assert!(faulted.wasted_energy_j > 0.0, "crashed attempts burn real joules");
+        assert!(faulted.completion_rate > 0.0 && faulted.completion_rate <= 1.0);
+        assert_eq!(
+            faulted.extra_energy_j.to_bits(),
+            (faulted.total_energy_j - base.total_energy_j).to_bits(),
+            "resilience energy is the paired delta"
+        );
+        // the sweep is deterministic: same inputs, bit-identical points
+        let again = fault_sweep(
+            &systems,
+            &em,
+            &PolicyConfig::Cost { lambda: 1.0 },
+            &fcfg,
+            &[2.0],
+            &[25.0],
+            300,
+            2024,
+        );
+        assert_eq!(again[1].total_energy_j.to_bits(), faulted.total_energy_j.to_bits());
+        assert_eq!(again[1].served, faulted.served);
+        assert_eq!(again[1].retries, faulted.retries);
     }
 
     #[test]

@@ -5,14 +5,16 @@
 
 use hetsched::config::schema::{ExperimentConfig, PolicyConfig};
 use hetsched::experiments::{
-    batching_sweep, fig3_alpaca, fleet_sweep, formation_sweep, headline_savings, input_sweep,
-    output_sweep, overload_sweep, run_fidelity, table1, threshold_sweep, FidelityOptions,
+    batching_sweep, bench_diff, fault_sweep, fig3_alpaca, fleet_sweep, formation_sweep,
+    headline_savings, input_sweep, output_sweep, overload_sweep, run_fidelity, table1,
+    threshold_sweep, FidelityOptions,
 };
 use hetsched::hw::catalog::{find_system, system_catalog, SystemId};
 use hetsched::hw::spec::SystemSpec;
 use hetsched::model::{find_llm, llm_catalog};
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
+use hetsched::sched::faults::{FaultConfig, RetryPolicy};
 use hetsched::sched::formation::FormationPolicy;
 use hetsched::sched::overload::AdmissionConfig;
 use hetsched::sim::report::ShedStats;
@@ -45,8 +47,10 @@ system:
   formation-sweep   FIFO vs shape-aware batch formation over max_batch × λ
   fleet-sweep       provisioning grid: node counts × λ over one deduplicated CostTable
   overload-sweep    paired admission-off/on runs over λ: shed accounting under overload
+  fault-sweep       paired fault-free/faulted runs over MTBF × λ: the energy of resilience
   fidelity          one trace through serving stack AND simulator; write FIDELITY.json
   bench             time the hot paths and write the BENCH.json perf trajectory
+                    (bench --diff old.json new.json gates a run against a baseline)
   serve             start the live serving demo on the AOT artifacts
   calibrate         fit perf-model constants from a measured sweep
 
@@ -66,6 +70,7 @@ fn main() {
         Some("formation-sweep") => cmd_formation_sweep(&argv[1..]),
         Some("fleet-sweep") => cmd_fleet_sweep(&argv[1..]),
         Some("overload-sweep") => cmd_overload_sweep(&argv[1..]),
+        Some("fault-sweep") => cmd_fault_sweep(&argv[1..]),
         Some("fidelity") => cmd_fidelity(&argv[1..]),
         Some("bench") => cmd_bench(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
@@ -272,6 +277,9 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
         .opt("queues", "", "batched-queue layout: per-worker | per-class (empty = config)")
         .opt("max-live", "", "continuous live-set cap (0 = max_batch; implies --continuous)")
         .opt("memo-cap", "", "bound on the batch-cost memo (entries; 0 = unbounded)")
+        .opt("fault-mtbf", "", "mean time between node crashes, seconds (empty = config's [faults])")
+        .opt("fault-mttr", "", "mean time to recover a crashed node, seconds (needs a fault process)")
+        .opt("fault-seed", "", "failure-process RNG seed (needs a fault process)")
         .flag("continuous", "iteration-level batching: members join at decode-step boundaries")
         .flag("idle-energy", "charge idle power across the makespan")
         .flag("stream", "bounded-memory streaming engine: no materialized trace or outcome vector")
@@ -368,11 +376,49 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
             }
         }
     }
+    // faults: the config's [faults] section is the baseline; CLI flags
+    // override field-wise, and --fault-mtbf alone is enough to start a
+    // failure process on a fault-free config
+    let mut faults = cfg.faults.clone();
+    match args.get("fault-mtbf") {
+        "" => {}
+        _ => {
+            let mtbf = args.get_f64("fault-mtbf")?;
+            if !(mtbf.is_finite() && mtbf > 0.0) {
+                return Err(format!("--fault-mtbf must be finite and > 0, got {mtbf}"));
+            }
+            faults.get_or_insert_with(FaultConfig::default).mtbf_s = mtbf;
+        }
+    }
+    match args.get("fault-mttr") {
+        "" => {}
+        _ => {
+            let mttr = args.get_f64("fault-mttr")?;
+            match &mut faults {
+                Some(f) => f.mttr_s = mttr,
+                None => return Err("--fault-mttr needs a fault process (--fault-mtbf or a [faults] config section)".into()),
+            }
+        }
+    }
+    match args.get("fault-seed") {
+        "" => {}
+        _ => {
+            let seed = args.get_u64("fault-seed")?;
+            match &mut faults {
+                Some(f) => f.seed = seed,
+                None => return Err("--fault-seed needs a fault process (--fault-mtbf or a [faults] config section)".into()),
+            }
+        }
+    }
+    if let Some(f) = &faults {
+        f.validate()?;
+    }
     let opts = SimOptions {
         include_idle_energy: args.get_bool("idle-energy"),
         strict: false,
         batching,
         admission: cfg.admission.clone(),
+        faults,
     };
     if args.get_bool("stream") {
         return run_stream_simulate(&cfg, &energy, policy.as_mut(), &opts);
@@ -465,7 +511,51 @@ fn cmd_simulate(argv: &[String]) -> Result<(), String> {
     if opts.admission.is_some() {
         print_shed(&rep.shed);
     }
+    if let Some(f) = opts.faults.as_ref().filter(|f| f.enabled()) {
+        print_faults(
+            f,
+            rep.total_retries(),
+            rep.total_abandoned(),
+            rep.completion_rate(),
+            rep.wasted_energy_j,
+            &rep.retries,
+            &rep.systems.iter().map(|s| s.name.clone()).collect::<Vec<_>>(),
+        );
+    }
     Ok(())
+}
+
+/// Failure-process accounting lines shared by `simulate` and
+/// `simulate --stream` (printed only when a fault process is live).
+fn print_faults(
+    f: &FaultConfig,
+    retries: u64,
+    abandoned: u64,
+    completion: f64,
+    wasted_j: f64,
+    per_system: &[u64],
+    names: &[String],
+) {
+    let mut process = format!("crash mtbf {} mttr {}", fmt_secs(f.mtbf_s), fmt_secs(f.mttr_s));
+    if f.slowdowns_enabled() {
+        process.push_str(&format!(
+            "   slowdown mtbf {} x{:.2} for {}",
+            fmt_secs(f.slow_mtbf_s),
+            f.slow_factor,
+            fmt_secs(f.slow_duration_s)
+        ));
+    }
+    println!("faults: {process}   seed {}", f.seed);
+    println!(
+        "  retries {retries}   abandoned {abandoned}   completion {:.3}%   wasted {}",
+        100.0 * completion,
+        fmt_joules(wasted_j)
+    );
+    for (name, &r) in names.iter().zip(per_system) {
+        if r > 0 {
+            println!("  {name}: {r} retries");
+        }
+    }
 }
 
 /// Per-tenant admission accounting lines shared by `simulate` and
@@ -573,6 +663,17 @@ fn run_stream_simulate(
     print!("{}", t.ascii());
     if opts.admission.is_some() {
         print_shed(&rep.shed);
+    }
+    if let Some(f) = opts.faults.as_ref().filter(|f| f.enabled()) {
+        print_faults(
+            f,
+            rep.total_retries(),
+            rep.total_abandoned(),
+            rep.completion_rate(),
+            rep.wasted_energy_j,
+            &rep.retries,
+            &rep.systems.iter().map(|s| s.name.clone()).collect::<Vec<_>>(),
+        );
     }
     Ok(())
 }
@@ -1246,6 +1347,147 @@ fn cmd_overload_sweep(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_fault_sweep(argv: &[String]) -> Result<(), String> {
+    let args = Args::new("fault-sweep")
+        .opt("config", "", "TOML config path (cluster/model/policy/faults; empty = paper defaults)")
+        .opt("model", "", "LLM name (default: config's workload.llm, else Llama-2-7B)")
+        .opt("policy", "", "cost | jsq | rr | threshold | <system name> (default: config's [policy], else cost)")
+        .opt("mtbf", "10,30,120", "crash MTBFs to sweep, seconds (the fault-free baseline is implicit)")
+        .opt("mttr", "", "mean time to recover, seconds (default: config's faults.mttr_s, else 10)")
+        .opt("retries", "", "retry budget per query, total attempts (default: config's faults.retry, else 3)")
+        .opt("fault-seed", "", "failure-process RNG seed (default: config's faults.seed, else 2024)")
+        .opt("rates", "10,25", "Poisson arrival rates λ to sweep (q/s)")
+        .opt("queries", "2000", "trace length per rate")
+        .opt("seed", "2024", "trace seed")
+        .flag("csv", "emit CSV")
+        .parse(argv)?;
+    let cfg = match args.get("config") {
+        "" => None,
+        path => Some(ExperimentConfig::from_file(path)?),
+    };
+    let systems: Vec<SystemSpec> =
+        cfg.as_ref().map_or_else(system_catalog, |c| c.cluster.systems.clone());
+    let model_name = match args.get("model") {
+        "" => cfg.as_ref().map_or("Llama-2-7B", |c| c.workload.llm.as_str()),
+        name => name,
+    };
+    let llm = find_llm(model_name).ok_or_else(|| format!("unknown model '{model_name}'"))?;
+    let energy = EnergyModel::new(PerfModel::new(llm));
+    let policy = match args.get("policy") {
+        "" => cfg
+            .as_ref()
+            .map(|c| c.policy.clone())
+            .unwrap_or(PolicyConfig::Cost { lambda: 1.0 }),
+        name => parse_policy_flag(name)?,
+    };
+    // the config's [faults] section (when present) seeds mttr / retry /
+    // seed; the swept mtbf_s is overwritten per grid point either way
+    let mut faults = cfg.as_ref().and_then(|c| c.faults.clone()).unwrap_or_else(|| FaultConfig {
+        mttr_s: 10.0,
+        seed: 2024,
+        retry: RetryPolicy::default(),
+        ..FaultConfig::default()
+    });
+    match args.get("mttr") {
+        "" => {}
+        _ => {
+            let mttr = args.get_f64("mttr")?;
+            if !(mttr.is_finite() && mttr >= 0.0) {
+                return Err(format!("--mttr must be finite and >= 0, got {mttr}"));
+            }
+            faults.mttr_s = mttr;
+        }
+    }
+    match args.get("retries") {
+        "" => {}
+        _ => {
+            let n = args.get_u64("retries")?;
+            if n == 0 || n > u64::from(u32::MAX) {
+                return Err("--retries must be >= 1 (total attempts, including the first)".into());
+            }
+            faults.retry.max_attempts = n as u32;
+        }
+    }
+    match args.get("fault-seed") {
+        "" => {}
+        _ => faults.seed = args.get_u64("fault-seed")?,
+    }
+    let mtbfs = required_list::<f64>(&args, "mtbf")?;
+    if mtbfs.iter().any(|m| !(m.is_finite() && *m > 0.0)) {
+        return Err("--mtbf entries must be finite and positive".into());
+    }
+    let rates = required_list::<f64>(&args, "rates")?;
+    if rates.iter().any(|r| !(r.is_finite() && *r > 0.0)) {
+        return Err("--rates entries must be positive".into());
+    }
+    let n_queries = args.get_usize("queries")?;
+    if n_queries == 0 {
+        return Err("--queries must be > 0".into());
+    }
+    let seed = args.get_u64("seed")?;
+    {
+        let mut probe = faults.clone();
+        probe.mtbf_s = mtbfs[0];
+        probe.validate()?;
+    }
+    let pts = fault_sweep(&systems, &energy, &policy, &faults, &mtbfs, &rates, n_queries, seed);
+    println!(
+        "fault sweep: policy {}, {} queries per rate, trace seed {} — mttr {}, retry budget {} attempts, fault seed {}",
+        policy.name(),
+        n_queries,
+        seed,
+        fmt_secs(faults.mttr_s),
+        faults.retry.max_attempts,
+        faults.seed,
+    );
+    let mut t = Table::new(&[
+        "rate", "mtbf", "served", "abandoned", "retries", "completion", "nines", "energy",
+        "wasted", "extra", "J/nine", "p99 lat", "makespan",
+    ]);
+    for p in &pts {
+        let mtbf = if p.mtbf_s.is_finite() { format!("{:.0}s", p.mtbf_s) } else { "inf".into() };
+        let nines = if p.nines.is_finite() { format!("{:.2}", p.nines) } else { "inf".into() };
+        let j_per_nine = if p.mtbf_s.is_finite() && p.nines.is_finite() && p.nines > 0.0 {
+            fmt_joules(p.extra_energy_j / p.nines)
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            format!("{:.1}", p.rate),
+            mtbf,
+            p.served.to_string(),
+            p.abandoned.to_string(),
+            p.retries.to_string(),
+            format!("{:.2}%", 100.0 * p.completion_rate),
+            nines,
+            fmt_joules(p.total_energy_j),
+            fmt_joules(p.wasted_energy_j),
+            fmt_joules(p.extra_energy_j),
+            j_per_nine,
+            fmt_secs(p.p99_latency_s),
+            fmt_secs(p.makespan_s),
+        ]);
+    }
+    print!("{}", if args.get_bool("csv") { t.csv() } else { t.ascii() });
+    // each rate yields [baseline, mtbf...] — report the energy of
+    // resilience: what the failure process cost on top of fault-free
+    for chunk in pts.chunks(mtbfs.len() + 1) {
+        let Some((base, faulted)) = chunk.split_first() else { continue };
+        for p in faulted {
+            println!(
+                "λ={:.1} mtbf={:.0}s: completion {:.2}%, retries {}, resilience energy {} ({:+.2}% vs fault-free)",
+                p.rate,
+                p.mtbf_s,
+                100.0 * p.completion_rate,
+                p.retries,
+                fmt_joules(p.extra_energy_j),
+                100.0 * p.extra_energy_j / base.total_energy_j.max(f64::MIN_POSITIVE),
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_fidelity(argv: &[String]) -> Result<(), String> {
     let args = Args::new("fidelity")
         .opt("queries", "", "trace length through both stacks (default 240; 120 with --smoke)")
@@ -1312,8 +1554,41 @@ fn cmd_bench(argv: &[String]) -> Result<(), String> {
         .opt("threads", "8", "threads hammering the shared BatchTable in the contended section")
         .opt("ops", "200000", "lookups per thread in the contended section")
         .opt("out", "BENCH.json", "output path for the machine-readable report")
+        .opt("rel-tol", "0.25", "with --diff: relative slowdown floor before a regression fires")
+        .opt("mad-k", "4", "with --diff: noise band, in summed MADs, added to the gate")
         .flag("smoke", "tiny trace + short sample budgets (CI smoke: seconds, not minutes; caps --queries at 500 and --ops at 20000)")
+        .flag("diff", "compare two BENCH.json files (old new) instead of running: nonzero exit on regression")
         .parse(argv)?;
+    if args.get_bool("diff") {
+        let [old_path, new_path] = args.positional() else {
+            return Err("bench --diff needs exactly two positional paths: old.json new.json".into());
+        };
+        let rel_tol = args.get_f64("rel-tol")?;
+        let mad_k = args.get_f64("mad-k")?;
+        if !(rel_tol.is_finite() && rel_tol >= 0.0 && mad_k.is_finite() && mad_k >= 0.0) {
+            return Err("--rel-tol and --mad-k must be finite and >= 0".into());
+        }
+        let old = std::fs::read_to_string(old_path).map_err(|e| format!("{old_path}: {e}"))?;
+        let new = std::fs::read_to_string(new_path).map_err(|e| format!("{new_path}: {e}"))?;
+        let d = bench_diff(&old, &new, rel_tol, mad_k)?;
+        for line in &d.lines {
+            println!("{line}");
+        }
+        println!(
+            "bench diff: {} timing entries compared, {} regression(s) (gate: max({:.0}% rel, {} MADs))",
+            d.compared,
+            d.regressions.len(),
+            100.0 * rel_tol,
+            mad_k
+        );
+        if !d.regressions.is_empty() {
+            return Err(format!(
+                "bench regression vs {old_path}: {}",
+                d.regressions.join("; ")
+            ));
+        }
+        return Ok(());
+    }
     let smoke = args.get_bool("smoke");
     let defaults = if smoke { hetsched::experiments::BenchOptions::smoke() } else { Default::default() };
     let queries = args.get_usize("queries")?;

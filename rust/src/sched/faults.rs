@@ -1,0 +1,725 @@
+//! Fault injection and retry — the one failure model shared by the
+//! serial/batched engines (`sim::engine`), the streaming engine
+//! (`sim::stream`), and the serving coordinator, the same way
+//! [`super::overload`] unified admission. Keeping the crash/recover
+//! schedule and the retry/backoff policy here is what makes "the sim
+//! predicts the coordinator's degraded-fleet behaviour" a testable
+//! claim: the stacks consume one implementation and cannot drift.
+//!
+//! The model is per-node and fully deterministic from a seed:
+//!
+//! - **Crashes**: each node alternates up-time drawn `Exp(1/mtbf_s)`
+//!   and repair time drawn `Exp(1/mttr_s)`, producing a sorted list of
+//!   down intervals materialized lazily as simulation time advances
+//!   ([`FaultPlan`]). Work committed across a crash instant fails at
+//!   the crash: the partial runtime and energy burned up to the crash
+//!   are real (accounted as *wasted* energy — the R/E framing of
+//!   Wilkins et al. extends to re-executed work), the members are
+//!   requeued through [`RetryPolicy`], and the node is unavailable
+//!   until its repair completes.
+//! - **Slowdowns**: independently, nodes enter degraded windows
+//!   (onset `Exp(1/slow_mtbf_s)`, fixed `slow_duration_s`) during which
+//!   dispatched work runs `slow_factor`× longer and burns
+//!   proportionally more energy. The factor is sampled at span start
+//!   and held for the span (a documented approximation for spans that
+//!   straddle a window edge).
+//! - **Retries**: a failed attempt re-enters the pipeline after a
+//!   capped exponential backoff, up to `max_attempts` total attempts;
+//!   exhaustion *abandons* the query (a first-class terminal outcome:
+//!   `arrived == served + shed + abandoned` stays u64-exact). Retries
+//!   may run on a different system (`retry_other_system`, mirroring
+//!   `OverloadPolicy`'s upgrade path) picked by minimum estimated
+//!   completion time over the feasible systems.
+//!
+//! Fault-free configs take the pre-existing code paths wholesale —
+//! every engine is property-pinned bit-identical to its historical
+//! output when `[faults]` is absent or disabled
+//! (`rust/tests/fault_properties.rs`).
+
+use crate::util::rng::{SplitMix64, Xoshiro256};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Retry/backoff knobs — the `retry_*` keys of the `[faults]` TOML
+/// section. `max_attempts` counts *total* attempts including the
+/// first, so `1` disables retries entirely (failures abandon at once).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// total attempts per query, including the first; >= 1
+    pub max_attempts: u32,
+    /// backoff before retry k is `min(base · 2^(k-1), max)` seconds
+    pub base_backoff_s: f64,
+    /// backoff cap (s)
+    pub max_backoff_s: f64,
+    /// allow a retry to run on a different system than the failed
+    /// attempt (minimum-ETA over feasible systems, ties to lowest
+    /// index — the upgrade shape `OverloadPolicy` uses)
+    pub retry_other_system: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_backoff_s: 0.5,
+            max_backoff_s: 8.0,
+            retry_other_system: true,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `failures` (1-based count of
+    /// attempts that have already failed): capped exponential.
+    pub fn backoff_s(&self, failures: u32) -> f64 {
+        let exp = failures.saturating_sub(1).min(52);
+        (self.base_backoff_s * (1u64 << exp) as f64).min(self.max_backoff_s)
+    }
+}
+
+/// Fault-injection knobs — the `[faults]` TOML section. A non-finite
+/// or non-positive `mtbf_s` disables crashes; likewise `slow_mtbf_s`
+/// for slowdowns. With both disabled the config is inert and every
+/// engine takes its historical code path unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// mean up-time between node crashes (s); `inf` or `<= 0` = never
+    pub mtbf_s: f64,
+    /// mean repair time after a crash (s)
+    pub mttr_s: f64,
+    /// mean time between slowdown onsets (s); `inf` or `<= 0` = never
+    pub slow_mtbf_s: f64,
+    /// duration of each slowdown window (s)
+    pub slow_duration_s: f64,
+    /// runtime/energy multiplier while slowed; >= 1
+    pub slow_factor: f64,
+    /// seed for the per-node fault schedules
+    pub seed: u64,
+    pub retry: RetryPolicy,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            mtbf_s: f64::INFINITY,
+            mttr_s: 10.0,
+            slow_mtbf_s: f64::INFINITY,
+            slow_duration_s: 30.0,
+            slow_factor: 2.0,
+            seed: 2024,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+impl FaultConfig {
+    pub fn crashes_enabled(&self) -> bool {
+        self.mtbf_s.is_finite() && self.mtbf_s > 0.0
+    }
+
+    pub fn slowdowns_enabled(&self) -> bool {
+        self.slow_mtbf_s.is_finite() && self.slow_mtbf_s > 0.0
+    }
+
+    /// Whether the config injects anything at all. Engines treat a
+    /// disabled config exactly like an absent one.
+    pub fn enabled(&self) -> bool {
+        self.crashes_enabled() || self.slowdowns_enabled()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.mtbf_s.is_nan() {
+            return Err("faults.mtbf_s must not be NaN".into());
+        }
+        if self.crashes_enabled() && !(self.mttr_s.is_finite() && self.mttr_s > 0.0) {
+            return Err(format!("faults.mttr_s must be positive, got {}", self.mttr_s));
+        }
+        if self.slow_mtbf_s.is_nan() {
+            return Err("faults.slow_mtbf_s must not be NaN".into());
+        }
+        if self.slowdowns_enabled() {
+            if !(self.slow_duration_s.is_finite() && self.slow_duration_s > 0.0) {
+                return Err(format!(
+                    "faults.slow_duration_s must be positive, got {}",
+                    self.slow_duration_s
+                ));
+            }
+            if !(self.slow_factor.is_finite() && self.slow_factor >= 1.0) {
+                return Err(format!(
+                    "faults.slow_factor must be >= 1, got {}",
+                    self.slow_factor
+                ));
+            }
+        }
+        if self.retry.max_attempts == 0 {
+            return Err("faults.retry_max_attempts must be >= 1".into());
+        }
+        for (key, v) in [
+            ("retry_base_backoff_s", self.retry.base_backoff_s),
+            ("retry_max_backoff_s", self.retry.max_backoff_s),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                return Err(format!("faults.{key} must be finite and >= 0, got {v}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One node's lazily materialized schedule of intervals. `intervals`
+/// holds `[start, end)` pairs, sorted and non-overlapping; generation
+/// has covered every interval starting at or before `covered_s`.
+#[derive(Clone, Debug)]
+struct Timeline {
+    rng: Xoshiro256,
+    intervals: Vec<(f64, f64)>,
+    /// end of the last generated interval — the next one starts after
+    cursor_s: f64,
+    /// all intervals starting <= covered_s have been generated
+    covered_s: f64,
+    /// Exp rate for the gap before each interval (1/mtbf)
+    gap_lambda: f64,
+    /// fixed duration (slowdowns) or Exp rate for duration (crashes)
+    dur: Dur,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Dur {
+    Exp(f64),
+    Fixed(f64),
+}
+
+impl Timeline {
+    fn new(seed: u64, gap_mean_s: f64, dur: Dur) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from(seed),
+            intervals: Vec::new(),
+            cursor_s: 0.0,
+            covered_s: 0.0,
+            gap_lambda: 1.0 / gap_mean_s,
+            dur,
+        }
+    }
+
+    /// Generate until every interval starting at or before `t` exists.
+    fn ensure(&mut self, t: f64) {
+        while self.covered_s <= t {
+            let gap = self.rng.exponential(self.gap_lambda);
+            let start = self.cursor_s + gap;
+            let len = match self.dur {
+                Dur::Exp(lambda) => self.rng.exponential(lambda),
+                Dur::Fixed(d) => d,
+            };
+            self.intervals.push((start, start + len));
+            self.cursor_s = start + len;
+            // no further interval can start at or before `start`
+            self.covered_s = start;
+        }
+    }
+
+    /// The interval containing `t`, if any.
+    fn containing(&mut self, t: f64) -> Option<(f64, f64)> {
+        self.ensure(t);
+        let idx = self.intervals.partition_point(|&(s, _)| s <= t);
+        if idx == 0 {
+            return None;
+        }
+        let (s, e) = self.intervals[idx - 1];
+        (t < e).then_some((s, e))
+    }
+
+    /// First interval start strictly inside `(t0, t1]`.
+    fn first_start_in(&mut self, t0: f64, t1: f64) -> Option<f64> {
+        self.ensure(t1);
+        let idx = self.intervals.partition_point(|&(s, _)| s <= t0);
+        match self.intervals.get(idx) {
+            Some(&(s, _)) if s <= t1 => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// How one committed span of work plays out against the fault
+/// schedule: the fault-adjusted start (the node must be up), the
+/// slowdown factor sampled at that start, the scaled duration, and —
+/// if the node crashes mid-span — the crash instant.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanAttempt {
+    /// fault-adjusted start (>= the requested earliest start)
+    pub start_s: f64,
+    /// slowdown multiplier sampled at `start_s` (1.0 = nominal)
+    pub factor: f64,
+    /// scaled duration (base duration × factor)
+    pub dur_s: f64,
+    /// crash instant strictly inside `(start_s, start_s + dur_s]`,
+    /// if the node fails mid-span
+    pub crash_s: Option<f64>,
+}
+
+impl SpanAttempt {
+    pub fn completes(&self) -> bool {
+        self.crash_s.is_none()
+    }
+
+    /// Fraction of the span actually executed before the crash
+    /// (1.0 when the span completes).
+    pub fn executed_fraction(&self) -> f64 {
+        match self.crash_s {
+            Some(c) if self.dur_s > 0.0 => ((c - self.start_s) / self.dur_s).clamp(0.0, 1.0),
+            Some(_) => 0.0,
+            None => 1.0,
+        }
+    }
+}
+
+/// Deterministic, seeded per-node crash/recover and slowdown schedule.
+/// Timelines are derived lazily per `(system, node)` from the config
+/// seed, so two consumers walking the same config observe the same
+/// schedule regardless of query order or node count.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// derivation base: one SplitMix64 draw over the config seed, so
+    /// plan streams are decorrelated from workload streams on the
+    /// same seed
+    base: u64,
+    down: HashMap<(usize, usize), Timeline>,
+    slow: HashMap<(usize, usize), Timeline>,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: &FaultConfig) -> Self {
+        let base = SplitMix64::new(cfg.seed ^ 0xFA17_FA17_FA17_FA17).next_u64();
+        Self { cfg: cfg.clone(), base, down: HashMap::new(), slow: HashMap::new() }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    fn stream_seed(&self, s: usize, node: usize, which: u64) -> u64 {
+        let mut sm = SplitMix64::new(
+            self.base ^ ((s as u64) << 40) ^ ((node as u64) << 8) ^ which,
+        );
+        sm.next_u64()
+    }
+
+    fn down_timeline(&mut self, s: usize, node: usize) -> Option<&mut Timeline> {
+        if !self.cfg.crashes_enabled() {
+            return None;
+        }
+        let seed = self.stream_seed(s, node, 1);
+        let (mtbf, mttr) = (self.cfg.mtbf_s, self.cfg.mttr_s);
+        Some(
+            self.down
+                .entry((s, node))
+                .or_insert_with(|| Timeline::new(seed, mtbf, Dur::Exp(1.0 / mttr))),
+        )
+    }
+
+    fn slow_timeline(&mut self, s: usize, node: usize) -> Option<&mut Timeline> {
+        if !self.cfg.slowdowns_enabled() {
+            return None;
+        }
+        let seed = self.stream_seed(s, node, 2);
+        let (mtbf, dur) = (self.cfg.slow_mtbf_s, self.cfg.slow_duration_s);
+        Some(
+            self.slow
+                .entry((s, node))
+                .or_insert_with(|| Timeline::new(seed, mtbf, Dur::Fixed(dur))),
+        )
+    }
+
+    /// Earliest instant at or after `t` when node `(s, node)` is up.
+    pub fn up_at(&mut self, s: usize, node: usize, t: f64) -> f64 {
+        match self.down_timeline(s, node) {
+            Some(tl) => match tl.containing(t) {
+                // down intervals never touch (an up gap > 0 separates
+                // them), so one bump out suffices
+                Some((_, end)) => end,
+                None => t,
+            },
+            None => t,
+        }
+    }
+
+    /// First crash instant strictly inside `(t0, t1]`, if any.
+    /// Idempotent and order-insensitive: repeated queries over growing
+    /// windows see the same schedule.
+    pub fn crash_in(&mut self, s: usize, node: usize, t0: f64, t1: f64) -> Option<f64> {
+        self.down_timeline(s, node)?.first_start_in(t0, t1)
+    }
+
+    /// Slowdown multiplier in effect at instant `t` (1.0 = nominal).
+    pub fn slow_factor_at(&mut self, s: usize, node: usize, t: f64) -> f64 {
+        match self.slow_timeline(s, node) {
+            Some(tl) if tl.containing(t).is_some() => self.cfg.slow_factor,
+            _ => 1.0,
+        }
+    }
+
+    /// Play one committed span of work against the schedule: bump the
+    /// start out of any down interval, sample the slowdown factor at
+    /// the adjusted start, scale the duration, and find the first
+    /// crash inside the span.
+    pub fn attempt_span(
+        &mut self,
+        s: usize,
+        node: usize,
+        earliest_s: f64,
+        base_dur_s: f64,
+    ) -> SpanAttempt {
+        let start_s = self.up_at(s, node, earliest_s);
+        let factor = self.slow_factor_at(s, node, start_s);
+        let dur_s = base_dur_s * factor;
+        let crash_s = self.crash_in(s, node, start_s, start_s + dur_s);
+        SpanAttempt { start_s, factor, dur_s, crash_s }
+    }
+}
+
+/// A failed attempt waiting out its backoff in the retry heap. Carries
+/// everything an engine needs to re-dispatch without re-reading the
+/// original trace entry: the original query key (trace index or stream
+/// sequence number), the cost-table row, the shape, the tenant, and
+/// the *original* arrival time (so the final outcome's latency spans
+/// every attempt and backoff).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryAttempt {
+    /// instant the retry becomes dispatchable
+    pub due_s: f64,
+    /// original query key (trace index / stream sequence)
+    pub orig: u64,
+    /// system the failed attempt ran on
+    pub system: usize,
+    pub id: u64,
+    /// original arrival time
+    pub arrival_s: f64,
+    pub m: u32,
+    pub n: u32,
+    /// cost-table row of the original query
+    pub row: usize,
+    pub tenant: u32,
+}
+
+/// Heap key: earliest due first, ties to the lowest original key —
+/// deterministic regardless of insertion order.
+#[derive(Clone, Copy, Debug)]
+struct DueRetry(RetryAttempt);
+
+impl PartialEq for DueRetry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for DueRetry {}
+
+impl PartialOrd for DueRetry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for DueRetry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // due times are finite, never NaN; `+ 0.0` folds -0.0 into +0.0
+        (self.0.due_s + 0.0)
+            .total_cmp(&(other.0.due_s + 0.0))
+            .then(self.0.orig.cmp(&other.0.orig))
+    }
+}
+
+/// Per-run fault bookkeeping shared by every engine: the schedule, the
+/// retry policy, the backoff heap, per-query attempt counts, and the
+/// counters that land on the reports (`retries` per system, wasted
+/// joules, abandoned queries).
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    pub retry: RetryPolicy,
+    heap: BinaryHeap<Reverse<DueRetry>>,
+    /// failed-attempt count per original query key
+    attempts: HashMap<u64, u32>,
+    /// retries scheduled, attributed to the system whose failure
+    /// caused them
+    pub retries_by_system: Vec<u64>,
+    /// joules burned by attempts that did not produce an outcome
+    /// (partial work up to each crash instant)
+    pub wasted_energy_j: f64,
+    /// queries that exhausted `max_attempts`
+    pub abandoned: u64,
+}
+
+impl FaultState {
+    pub fn new(cfg: &FaultConfig, n_systems: usize) -> Self {
+        Self {
+            plan: FaultPlan::new(cfg),
+            retry: cfg.retry.clone(),
+            heap: BinaryHeap::new(),
+            attempts: HashMap::new(),
+            retries_by_system: vec![0; n_systems],
+            wasted_energy_j: 0.0,
+            abandoned: 0,
+        }
+    }
+
+    /// Record a failed attempt at `now_s`. Returns the due time of the
+    /// scheduled retry, or `None` when the query has exhausted its
+    /// attempts and is abandoned (the caller records the abandonment
+    /// in its shed ledger).
+    pub fn fail(&mut self, mut a: RetryAttempt, now_s: f64) -> Option<f64> {
+        let failures = self.attempts.entry(a.orig).or_insert(0);
+        *failures += 1;
+        if *failures >= self.retry.max_attempts {
+            self.attempts.remove(&a.orig);
+            self.abandoned += 1;
+            return None;
+        }
+        let due = now_s + self.retry.backoff_s(*failures);
+        self.retries_by_system[a.system] += 1;
+        a.due_s = due;
+        self.heap.push(Reverse(DueRetry(a)));
+        Some(due)
+    }
+
+    /// A retried query finally served — drop its attempt count.
+    pub fn served(&mut self, orig: u64) {
+        self.attempts.remove(&orig);
+    }
+
+    /// Earliest retry due time, if any retry is pending.
+    pub fn next_due(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(DueRetry(a))| a.due_s)
+    }
+
+    /// Pop the earliest pending retry.
+    pub fn pop_due(&mut self) -> Option<RetryAttempt> {
+        self.heap.pop().map(|Reverse(DueRetry(a))| a)
+    }
+
+    pub fn pending_retries(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crashy(seed: u64) -> FaultConfig {
+        FaultConfig {
+            mtbf_s: 50.0,
+            mttr_s: 5.0,
+            slow_mtbf_s: 80.0,
+            slow_duration_s: 10.0,
+            slow_factor: 2.0,
+            seed,
+            retry: RetryPolicy::default(),
+        }
+    }
+
+    #[test]
+    fn disabled_config_is_inert() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        cfg.validate().unwrap();
+        let mut plan = FaultPlan::new(&cfg);
+        assert_eq!(plan.up_at(0, 0, 3.5), 3.5);
+        assert_eq!(plan.crash_in(0, 0, 0.0, 1e9), None);
+        assert_eq!(plan.slow_factor_at(1, 2, 123.0), 1.0);
+        let a = plan.attempt_span(0, 0, 7.0, 3.0);
+        assert_eq!((a.start_s, a.factor, a.dur_s), (7.0, 1.0, 3.0));
+        assert!(a.completes());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        for (mutate, needle) in [
+            (
+                Box::new(|c: &mut FaultConfig| c.mtbf_s = f64::NAN) as Box<dyn Fn(&mut FaultConfig)>,
+                "NaN",
+            ),
+            (Box::new(|c: &mut FaultConfig| { c.mtbf_s = 10.0; c.mttr_s = 0.0 }), "mttr"),
+            (Box::new(|c: &mut FaultConfig| { c.slow_mtbf_s = 10.0; c.slow_factor = 0.5 }), "slow_factor"),
+            (
+                Box::new(|c: &mut FaultConfig| { c.slow_mtbf_s = 10.0; c.slow_duration_s = -1.0 }),
+                "slow_duration",
+            ),
+            (Box::new(|c: &mut FaultConfig| c.retry.max_attempts = 0), "max_attempts"),
+            (Box::new(|c: &mut FaultConfig| c.retry.base_backoff_s = -1.0), "backoff"),
+        ] {
+            let mut cfg = FaultConfig::default();
+            mutate(&mut cfg);
+            let err = cfg.validate().unwrap_err();
+            assert!(err.contains(needle), "error '{err}' should contain '{needle}'");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_order_insensitive() {
+        let cfg = crashy(7);
+        let mut a = FaultPlan::new(&cfg);
+        let mut b = FaultPlan::new(&cfg);
+        // query b at a later time first, then earlier — the schedule
+        // must agree with a's in-order walk
+        let late_b = b.crash_in(0, 0, 0.0, 10_000.0);
+        let late_a = a.crash_in(0, 0, 0.0, 10_000.0);
+        assert_eq!(late_a, late_b);
+        for t in [0.0, 100.0, 777.0, 5000.0] {
+            assert_eq!(a.up_at(0, 0, t), b.up_at(0, 0, t));
+            assert_eq!(a.slow_factor_at(1, 0, t), b.slow_factor_at(1, 0, t));
+        }
+        // distinct nodes get distinct schedules
+        let c00 = a.crash_in(0, 0, 0.0, 10_000.0);
+        let c01 = a.crash_in(0, 1, 0.0, 10_000.0);
+        let c10 = a.crash_in(1, 0, 0.0, 10_000.0);
+        assert!(c00.is_some() && c01.is_some() && c10.is_some(), "50 s MTBF over 10 ks must crash");
+        assert_ne!(c00, c01);
+        assert_ne!(c00, c10);
+    }
+
+    #[test]
+    fn up_at_bumps_out_of_down_intervals() {
+        let cfg = crashy(3);
+        let mut plan = FaultPlan::new(&cfg);
+        let c = plan.crash_in(0, 0, 0.0, 10_000.0).expect("a crash must occur");
+        // just after the crash the node is down: up_at lands strictly
+        // later, and at an instant where the node really is up
+        let up = plan.up_at(0, 0, c + 1e-9);
+        assert!(up > c);
+        assert_eq!(plan.up_at(0, 0, up), up, "repair instant must itself be up");
+        // before the crash the node is up
+        assert_eq!(plan.up_at(0, 0, c - 1.0), c - 1.0);
+    }
+
+    #[test]
+    fn crash_in_is_half_open_and_monotone() {
+        let cfg = crashy(11);
+        let mut plan = FaultPlan::new(&cfg);
+        let c = plan.crash_in(0, 0, 0.0, 10_000.0).unwrap();
+        // the crash instant itself is included at the right edge…
+        assert_eq!(plan.crash_in(0, 0, 0.0, c), Some(c));
+        // …and excluded at the left edge (no double detection across
+        // consecutive windows)
+        assert_eq!(plan.crash_in(0, 0, c, c), None);
+        let next = plan.crash_in(0, 0, c, 100_000.0).unwrap();
+        assert!(next > c);
+    }
+
+    #[test]
+    fn attempt_span_scales_and_crashes() {
+        let mut cfg = crashy(5);
+        cfg.mtbf_s = f64::INFINITY; // slowdowns only
+        let mut plan = FaultPlan::new(&cfg);
+        // find a slowed instant
+        let mut t = 0.0;
+        while plan.slow_factor_at(0, 0, t) == 1.0 {
+            t += 1.0;
+            assert!(t < 10_000.0, "80 s mean onset must slow within 10 ks");
+        }
+        let a = plan.attempt_span(0, 0, t, 2.0);
+        assert_eq!(a.factor, 2.0);
+        assert_eq!(a.dur_s, 4.0);
+        assert!(a.completes());
+        assert_eq!(a.executed_fraction(), 1.0);
+
+        // crashes: a span covering the whole horizon must hit one
+        let cfg = crashy(5);
+        let mut plan = FaultPlan::new(&cfg);
+        let a = plan.attempt_span(0, 0, 0.0, 10_000.0);
+        let c = a.crash_s.expect("span across the horizon must crash");
+        assert!(c > a.start_s && c <= a.start_s + a.dur_s);
+        assert!(a.executed_fraction() > 0.0 && a.executed_fraction() < 1.0);
+    }
+
+    #[test]
+    fn backoff_caps_exponentially() {
+        let r = RetryPolicy { max_attempts: 10, base_backoff_s: 0.5, max_backoff_s: 3.0, retry_other_system: false };
+        assert_eq!(r.backoff_s(1), 0.5);
+        assert_eq!(r.backoff_s(2), 1.0);
+        assert_eq!(r.backoff_s(3), 2.0);
+        assert_eq!(r.backoff_s(4), 3.0, "capped");
+        assert_eq!(r.backoff_s(60), 3.0, "shift count saturates safely");
+    }
+
+    #[test]
+    fn fault_state_retries_then_abandons() {
+        let mut cfg = crashy(1);
+        cfg.retry.max_attempts = 3;
+        cfg.retry.base_backoff_s = 1.0;
+        cfg.retry.max_backoff_s = 100.0;
+        let mut fs = FaultState::new(&cfg, 2);
+        let a = RetryAttempt {
+            due_s: 0.0,
+            orig: 42,
+            system: 1,
+            id: 9,
+            arrival_s: 10.0,
+            m: 8,
+            n: 4,
+            row: 42,
+            tenant: 0,
+        };
+        // attempt 1 fails at t=20: retry due 21
+        assert_eq!(fs.fail(a, 20.0), Some(21.0));
+        assert_eq!(fs.next_due(), Some(21.0));
+        assert_eq!(fs.retries_by_system, vec![0, 1]);
+        let popped = fs.pop_due().unwrap();
+        assert_eq!((popped.orig, popped.arrival_s), (42, 10.0));
+        // attempt 2 fails at t=25: doubled backoff
+        assert_eq!(fs.fail(popped, 25.0), Some(27.0));
+        let popped = fs.pop_due().unwrap();
+        // attempt 3 fails: exhausted → abandoned
+        assert_eq!(fs.fail(popped, 30.0), None);
+        assert_eq!(fs.abandoned, 1);
+        assert_eq!(fs.pending_retries(), 0);
+        assert_eq!(fs.retries_by_system, vec![0, 2]);
+    }
+
+    #[test]
+    fn retry_heap_orders_by_due_then_key() {
+        let mut cfg = crashy(1);
+        cfg.retry.max_attempts = 5;
+        cfg.retry.base_backoff_s = 1.0;
+        let mut fs = FaultState::new(&cfg, 1);
+        let mk = |orig: u64| RetryAttempt {
+            due_s: 0.0,
+            orig,
+            system: 0,
+            id: orig,
+            arrival_s: 0.0,
+            m: 1,
+            n: 1,
+            row: orig as usize,
+            tenant: 0,
+        };
+        // same failure instant → same due; ties break by orig
+        fs.fail(mk(7), 5.0);
+        fs.fail(mk(3), 5.0);
+        fs.fail(mk(5), 2.0);
+        assert_eq!(fs.pop_due().unwrap().orig, 5);
+        assert_eq!(fs.pop_due().unwrap().orig, 3);
+        assert_eq!(fs.pop_due().unwrap().orig, 7);
+    }
+
+    #[test]
+    fn max_attempts_one_abandons_immediately() {
+        let mut cfg = crashy(1);
+        cfg.retry.max_attempts = 1;
+        let mut fs = FaultState::new(&cfg, 1);
+        let a = RetryAttempt {
+            due_s: 0.0,
+            orig: 0,
+            system: 0,
+            id: 0,
+            arrival_s: 0.0,
+            m: 1,
+            n: 1,
+            row: 0,
+            tenant: 3,
+        };
+        assert_eq!(fs.fail(a, 1.0), None);
+        assert_eq!(fs.abandoned, 1);
+        assert_eq!(fs.retries_by_system, vec![0], "no retry was scheduled");
+    }
+}

@@ -7,6 +7,7 @@ pub mod admission;
 pub mod baselines;
 pub mod carbon;
 pub mod cost;
+pub mod faults;
 pub mod formation;
 pub mod oracle;
 pub mod overload;
@@ -14,6 +15,7 @@ pub mod policy;
 pub mod threshold;
 
 pub use cost::CostPolicy;
+pub use faults::{FaultConfig, FaultPlan, FaultState, RetryPolicy};
 pub use formation::FormationPolicy;
 pub use oracle::oracle_assign;
 pub use overload::{AdmissionConfig, AdmitDecision, OverloadPolicy, ShedReason};

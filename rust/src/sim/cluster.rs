@@ -146,6 +146,41 @@ impl NodeState {
         start
     }
 
+    /// Index of the earliest-free node (ties to the lowest index) —
+    /// the pick `schedule_batch` makes, exposed so fault-aware
+    /// dispatch can consult the fault schedule for that same node
+    /// before committing the span.
+    pub fn min_free_node(&self) -> usize {
+        self.node_free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("system has nodes")
+    }
+
+    /// Fault injection: book a dispatch that crashed mid-span. The
+    /// node was genuinely busy over `[start_s, crash_s)` and burned
+    /// `energy_j` doing work that produced no outcome; it stays
+    /// unavailable until `resume_s` (repair completion). No query is
+    /// counted — crashed members either retry (and are booked by their
+    /// eventual successful attempt) or are abandoned.
+    pub fn book_crash_on(
+        &mut self,
+        node_idx: usize,
+        start_s: f64,
+        crash_s: f64,
+        resume_s: f64,
+        energy_j: f64,
+    ) {
+        self.node_free_at[node_idx] = resume_s;
+        self.busy_s += (crash_s - start_s).max(0.0);
+        self.energy_j += energy_j;
+        // the doomed dispatch still occupies the node until the crash:
+        // queue_len sees it in flight over [start, crash)
+        self.inflight.push(Reverse(FinishAt(crash_s)));
+    }
+
     /// Continuous-batching support: re-book an in-flight episode on
     /// `node_idx` after a step-boundary admission. The node's free
     /// instant moves to the episode's new projected end, `extra_busy_s`
@@ -309,6 +344,26 @@ mod tests {
         let rb = b.get_mut(SystemId(0)).schedule_batch_on(0, 2.0, 4.0, &[1.0, 4.0]);
         assert_eq!(ra, rb);
         assert_eq!(a.node_free_at, b.node_free_at);
+    }
+
+    #[test]
+    fn book_crash_on_occupies_until_repair() {
+        let mut specs = system_catalog();
+        specs[0].count = 2;
+        let mut cs = ClusterState::new(&specs);
+        let n = cs.get_mut(SystemId(0));
+        assert_eq!(n.min_free_node(), 0, "ties break to the lowest index");
+        // dispatch at t=1 crashes at t=3; node 0 repairs at t=10
+        n.book_crash_on(0, 1.0, 3.0, 10.0, 5.0);
+        assert_eq!(n.node_free_at, vec![10.0, 0.0]);
+        assert_eq!(n.min_free_node(), 1);
+        assert!((n.busy_s - 2.0).abs() < 1e-12);
+        assert!((n.energy_j - 5.0).abs() < 1e-12);
+        assert_eq!(n.queries, 0, "crashed work serves no query");
+        n.advance_to(2.0);
+        assert_eq!(n.queue_len(), 1, "doomed dispatch is in flight until the crash");
+        n.advance_to(3.0);
+        assert_eq!(n.queue_len(), 0);
     }
 
     #[test]

@@ -65,6 +65,7 @@ use crate::perf::cost_table::{BatchTable, CostTable};
 use crate::perf::energy::EnergyModel;
 use crate::perf::model::Feasibility;
 use crate::sched::admission;
+use crate::sched::faults::{FaultConfig, FaultState, RetryAttempt};
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::overload::{AdmissionConfig, AdmitDecision, OverloadPolicy};
 use crate::sched::policy::{ClusterView, Policy};
@@ -294,6 +295,22 @@ pub struct SimOptions {
     /// serving coordinator's. `None` runs the historical
     /// admit-everything path byte-for-byte (property-pinned).
     pub admission: Option<AdmissionConfig>,
+    /// `Some` (and [`FaultConfig::enabled`]) injects the shared
+    /// deterministic fault schedule ([`crate::sched::faults`]): node
+    /// crashes requeue in-flight work through the retry/backoff policy,
+    /// slowdowns stretch runtime and energy, and the report gains
+    /// per-system retry counts plus wasted (crashed-attempt) joules.
+    /// `None` — or a disabled config — runs the historical fault-free
+    /// engines byte-for-byte (property-pinned in
+    /// `rust/tests/fault_properties.rs`).
+    pub faults: Option<FaultConfig>,
+}
+
+/// Whether this run actually injects faults — `Some` with a config that
+/// enables crashes or slowdowns. A disabled config is treated exactly
+/// like an absent one (the fault-free engines run unchanged).
+pub(crate) fn faults_live(opts: &SimOptions) -> bool {
+    opts.faults.as_ref().is_some_and(FaultConfig::enabled)
 }
 
 /// Run the simulation, evaluating the perf/energy model through a
@@ -421,6 +438,8 @@ fn finalize_report(
         batches,
         serial_energy_j,
         shed,
+        retries: vec![0; cluster.nodes.len()],
+        wasted_energy_j: 0.0,
     }
 }
 
@@ -441,6 +460,9 @@ pub fn simulate_with_table(
         opts.batching.is_none(),
         "SimOptions::batching requires simulate_batched_with_tables (or simulate)"
     );
+    if faults_live(opts) {
+        return simulate_faulted(queries, systems, policy, table, None, opts);
+    }
     assert_sorted(queries);
     assert_eq!(table.n_queries(), queries.len(), "cost table rows must match the trace");
     assert_eq!(table.n_systems(), systems.len(), "cost table columns must match the cluster");
@@ -618,6 +640,10 @@ pub fn simulate_batched_with_tables_scan(
     let bopts = opts
         .batching
         .expect("simulate_batched_with_tables_scan requires SimOptions::batching");
+    assert!(
+        !faults_live(opts),
+        "the scan reference predates fault injection; compare fault-free configs only"
+    );
     let mut sim = BatchedSim::new(queries, systems, table, batch_table, opts, bopts);
 
     loop {
@@ -1564,6 +1590,9 @@ pub fn simulate_batched_with_tables(
     let bopts = opts
         .batching
         .expect("simulate_batched_with_tables requires SimOptions::batching");
+    if faults_live(opts) {
+        return simulate_faulted(queries, systems, policy, table, Some(batch_table), opts);
+    }
     let mut sim = BatchedSim::new(queries, systems, table, batch_table, opts, bopts);
     // one live revision stamp per queue; an event is current iff its
     // stamp matches
@@ -1658,6 +1687,10 @@ pub fn simulate_batched_with_tables_reference(
     assert!(
         opts.admission.is_none(),
         "the reference engine predates admission; compare admission-free configs only"
+    );
+    assert!(
+        !faults_live(opts),
+        "the reference engine predates fault injection; compare fault-free configs only"
     );
 
     let mut cluster = ClusterState::new(systems);
@@ -1803,6 +1836,350 @@ pub fn simulate_batched_with_tables_reference(
         serial_energy_j,
         Vec::new(),
     )
+}
+
+/// One unit of dispatchable work in the fault-aware engine: a trace
+/// query or a retry of one. `orig` keys the query's trace row (cost
+/// pricing, outcome ordering, retry attribution) while `enq_s` is when
+/// it entered its current queue — the original arrival for first
+/// attempts, the backoff expiry for retries. `arrival_s` stays the
+/// *original* arrival throughout, so the final outcome's latency spans
+/// every failed attempt and backoff.
+#[derive(Clone, Copy, Debug)]
+struct FaultJob {
+    orig: u64,
+    id: u64,
+    arrival_s: f64,
+    enq_s: f64,
+    m: u32,
+    n: u32,
+    tenant: u32,
+}
+
+/// The fault-aware simulation loop — one engine for every materialized
+/// configuration once [`SimOptions::faults`] actually injects something
+/// (both [`simulate_with_table`] and [`simulate_batched_with_tables`]
+/// divert here; fault-free runs never reach this code, which is what
+/// keeps them bit-identical to the historical engines).
+///
+/// The model deliberately trades the incremental machinery of the
+/// fault-free engines for an auditable event loop:
+///
+/// - one FIFO queue per system class; batches are FIFO prefixes,
+///   joint-KV trimmed through the same [`BatchTable`] (batched configs)
+///   or priced per query through the same [`CostTable`] (serial), so
+///   retried work is re-priced through the very tables the fault-free
+///   run used;
+/// - dispatch lands on the node with the earliest *fault-adjusted*
+///   availability — a down node is skipped while a sibling is up, which
+///   is the degraded-fleet rescheduling the coordinator mirrors;
+/// - a crash mid-span books the partial runtime and energy on the node
+///   (surfaced as [`SimReport::wasted_energy_j`]), requeues every
+///   member through [`crate::sched::faults::RetryPolicy`]'s capped
+///   exponential backoff (retries may move to the minimum-ETA feasible
+///   system), and abandons members that exhausted their attempts —
+///   `arrived == served + shed + abandoned` stays u64-exact per tenant;
+/// - slowdown windows stretch a span's runtime and energy by
+///   `slow_factor`, sampled at span start.
+///
+/// Approximations, documented here and in ARCHITECTURE.md: batching is
+/// static FIFO-prefix under faults (formation lookahead, per-worker
+/// queue cadence, and iteration-level admission are fault-free-only
+/// refinements), and down nodes still burn their idle floor while
+/// under repair when idle energy is enabled.
+fn simulate_faulted(
+    queries: &[Query],
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    table: &CostTable,
+    batch_table: Option<&BatchTable>,
+    opts: &SimOptions,
+) -> SimReport {
+    let fcfg = opts.faults.as_ref().expect("simulate_faulted requires SimOptions::faults");
+    debug_assert!(fcfg.enabled(), "disabled fault configs take the fault-free engines");
+    if let Err(e) = fcfg.validate() {
+        panic!("invalid fault config: {e}");
+    }
+    assert_sorted(queries);
+    assert_eq!(table.n_queries(), queries.len(), "cost table rows must match the trace");
+    assert_eq!(table.n_systems(), systems.len(), "cost table columns must match the cluster");
+    let (max_batch, linger_s) = match (&opts.batching, batch_table) {
+        (Some(b), Some(bt)) => {
+            assert!(b.max_batch >= 1, "max_batch must be >= 1");
+            assert!(
+                b.linger_s >= 0.0 && b.linger_s.is_finite(),
+                "linger_s must be finite and non-negative"
+            );
+            assert_eq!(bt.n_systems(), systems.len(), "batch table must match the cluster");
+            (b.max_batch, b.linger_s)
+        }
+        (None, None) => (1, 0.0),
+        _ => panic!("batching options and batch table must be supplied together"),
+    };
+
+    let mut fs = FaultState::new(fcfg, systems.len());
+    let mut cluster = ClusterState::new(systems);
+    let mut queues: Vec<VecDeque<FaultJob>> = (0..systems.len()).map(|_| VecDeque::new()).collect();
+    let mut outcomes: Vec<(u64, QueryOutcome)> = Vec::with_capacity(queries.len());
+    let mut batches: Vec<BatchStats> = vec![BatchStats::default(); systems.len()];
+    let mut rerouted = 0u64;
+    let mut overload = opts.admission.clone().map(OverloadPolicy::new);
+    // fault mode always runs the ledger, admission or not: abandonment
+    // makes conservation non-vacuous even for admit-everything configs
+    let mut ledger = ShedLedger::new();
+    let mut next = 0usize;
+    let mut popped: Vec<FaultJob> = Vec::new();
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut member_rel: Vec<f64> = Vec::new();
+
+    loop {
+        let next_arrival = queries.get(next).map_or(f64::INFINITY, |q| q.arrival_s);
+        let next_retry = fs.next_due().unwrap_or(f64::INFINITY);
+        let next_in = next_arrival.min(next_retry);
+
+        // earliest due batch across the class queues (strict `<`, so
+        // ties break to the lowest system index)
+        let mut due: Option<(f64, usize)> = None;
+        for (s, q) in queues.iter().enumerate() {
+            let Some(front) = q.front() else { continue };
+            let free = cluster.nodes[s].earliest_free();
+            let ready = if q.len() >= max_batch {
+                free.max(q[max_batch - 1].enq_s)
+            } else {
+                free.max(front.enq_s) + linger_s
+            };
+            if due.map_or(true, |(t, _)| ready < t) {
+                due = Some((ready, s));
+            }
+        }
+
+        if let Some((ready, s)) = due {
+            // dispatch everything due before the next input event (an
+            // arrival or a retry exactly at the deadline misses it)
+            if ready <= next_in {
+                // FIFO-prefix membership, joint-KV trimmed; the tail
+                // returns to the head of the queue in order
+                popped.clear();
+                let cap = max_batch.min(queues[s].len());
+                popped.extend(queues[s].drain(..cap));
+                pairs.clear();
+                pairs.extend(popped.iter().map(|j| (j.m, j.n)));
+                let take = match batch_table {
+                    Some(bt) => bt.feasible_prefix(s, &pairs),
+                    None => 1,
+                };
+                assert!(take >= 1, "batch head must be individually feasible on its system");
+                for j in popped.drain(take..).rev() {
+                    queues[s].push_front(j);
+                }
+                pairs.truncate(take);
+
+                member_rel.clear();
+                let (base_dur, e_base) = match batch_table {
+                    Some(bt) => {
+                        let cost = bt.cost(s, &pairs);
+                        debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
+                        member_rel.extend_from_slice(&cost.member_finish_s);
+                        (cost.runtime_s, bt.energy_j(&cost))
+                    }
+                    None => {
+                        let row = popped[0].orig as usize;
+                        let dur = table.runtime_s(row, s);
+                        member_rel.push(dur);
+                        (dur, table.energy_j(row, s))
+                    }
+                };
+
+                // degraded-fleet node pick: earliest *fault-adjusted*
+                // start over the class's nodes (strict `<`, ties to the
+                // lowest index) — a down node is skipped while a
+                // sibling is up
+                let mut node_idx = 0usize;
+                let mut best_start = f64::INFINITY;
+                for (w, &free_w) in cluster.nodes[s].node_free_at.iter().enumerate() {
+                    let est = fs.plan.up_at(s, w, ready.max(free_w));
+                    if est < best_start {
+                        best_start = est;
+                        node_idx = w;
+                    }
+                }
+                let free_n = cluster.nodes[s].node_free_at[node_idx];
+                let att = fs.plan.attempt_span(s, node_idx, ready.max(free_n), base_dur);
+                debug_assert_eq!(att.start_s.to_bits(), best_start.to_bits());
+                let e_scaled = e_base * att.factor;
+
+                if let Some(c) = att.crash_s {
+                    // the node really ran [start, crash) and burned the
+                    // partial energy; nobody gets an outcome
+                    let e_partial = e_scaled * att.executed_fraction();
+                    fs.wasted_energy_j += e_partial;
+                    let resume = fs.plan.up_at(s, node_idx, c);
+                    cluster.nodes[s].book_crash_on(node_idx, att.start_s, c, resume, e_partial);
+                    for j in &popped {
+                        let a = RetryAttempt {
+                            due_s: 0.0,
+                            orig: j.orig,
+                            system: s,
+                            id: j.id,
+                            arrival_s: j.arrival_s,
+                            m: j.m,
+                            n: j.n,
+                            row: j.orig as usize,
+                            tenant: j.tenant,
+                        };
+                        if fs.fail(a, c).is_none() {
+                            ledger.abandon(j.tenant);
+                        }
+                    }
+                } else {
+                    for f in member_rel.iter_mut() {
+                        *f *= att.factor;
+                    }
+                    let start =
+                        cluster.nodes[s].schedule_batch_on(node_idx, att.start_s, att.dur_s, &member_rel);
+                    debug_assert_eq!(start.to_bits(), att.start_s.to_bits());
+                    cluster.nodes[s].energy_j += e_scaled;
+                    batches[s].record(
+                        take,
+                        systems[s].dispatch_energy_j(),
+                        FormationPolicy::straggler_steps(&pairs),
+                    );
+                    let batch_tokens: f64 = pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
+                    for (k, j) in popped.iter().enumerate() {
+                        let share = (pairs[k].0 + pairs[k].1) as f64 / batch_tokens;
+                        outcomes.push((
+                            j.orig,
+                            QueryOutcome {
+                                query_id: j.id,
+                                system: s,
+                                arrival_s: j.arrival_s,
+                                start_s: start,
+                                finish_s: start + member_rel[k],
+                                service_s: member_rel[k],
+                                energy_j: e_scaled * share,
+                            },
+                        ));
+                        ledger.serve(j.tenant);
+                        fs.served(j.orig);
+                    }
+                }
+                continue;
+            }
+        }
+
+        if next_in == f64::INFINITY {
+            break;
+        }
+
+        if next_arrival <= next_retry {
+            // route the next trace arrival (arrivals win ties, so the
+            // trace keeps its deterministic precedence over backoffs)
+            let qi = next;
+            let q = &queries[qi];
+            next += 1;
+            cluster.advance_to(q.arrival_s);
+            let mut depths = cluster.queue_depths_at(q.arrival_s);
+            let mut lens = cluster.queue_lens();
+            for (s, pq) in queues.iter().enumerate() {
+                if pq.is_empty() {
+                    continue;
+                }
+                lens[s] += pq.len();
+                depths[s] += pq.iter().map(|j| table.runtime_s(j.orig as usize, s)).sum::<f64>();
+            }
+            let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+            let mut sid =
+                route_query(policy, q, qi, &view, table, systems, opts.strict, &mut rerouted);
+            ledger.arrive(q.tenant);
+            if let Some(ov) = overload.as_mut() {
+                let mut eta = |s: usize| {
+                    if table.feasibility(qi, s) == Feasibility::Ok {
+                        depths[s] + table.runtime_s(qi, s)
+                    } else {
+                        f64::INFINITY
+                    }
+                };
+                match ov.decide(q, q.arrival_s, sid.0, &lens, &mut eta) {
+                    AdmitDecision::Admit(s2) => {
+                        if s2 != sid.0 && table.feasibility(qi, s2) == Feasibility::Ok {
+                            ledger.upgrade(q.tenant);
+                            sid = SystemId(s2);
+                        }
+                    }
+                    AdmitDecision::Shed(reason) => {
+                        ledger.shed(q.tenant, reason);
+                        continue;
+                    }
+                }
+            }
+            queues[sid.0].push_back(FaultJob {
+                orig: qi as u64,
+                id: q.id,
+                arrival_s: q.arrival_s,
+                enq_s: q.arrival_s,
+                m: q.input_tokens,
+                n: q.output_tokens,
+                tenant: q.tenant,
+            });
+        } else {
+            // a retry's backoff expired: requeue it, on the failed
+            // system or — when the policy allows — on the system with
+            // the minimum estimated completion time (backlog + its own
+            // runtime; strict `<`, ties to the lowest index, the
+            // upgrade shape `OverloadPolicy` uses). Already admitted:
+            // retries bypass admission and the routing policy.
+            let a = fs.pop_due().expect("next_retry was finite");
+            cluster.advance_to(a.due_s);
+            let target = if fs.retry.retry_other_system {
+                let depths = cluster.queue_depths_at(a.due_s);
+                let mut best = a.system;
+                let mut best_eta = f64::INFINITY;
+                for (s, d) in depths.iter().enumerate() {
+                    if table.feasibility(a.row, s) != Feasibility::Ok {
+                        continue;
+                    }
+                    let backlog: f64 =
+                        queues[s].iter().map(|j| table.runtime_s(j.orig as usize, s)).sum();
+                    let eta = d + backlog + table.runtime_s(a.row, s);
+                    if eta < best_eta {
+                        best_eta = eta;
+                        best = s;
+                    }
+                }
+                best
+            } else {
+                a.system
+            };
+            queues[target].push_back(FaultJob {
+                orig: a.orig,
+                id: a.id,
+                arrival_s: a.arrival_s,
+                enq_s: a.due_s,
+                m: a.m,
+                n: a.n,
+                tenant: a.tenant,
+            });
+        }
+    }
+
+    debug_assert_eq!(fs.abandoned, ledger.total_abandoned(), "abandonment double-entry");
+    outcomes.sort_unstable_by_key(|&(orig, _)| orig);
+    let serial_energy_j: f64 =
+        outcomes.iter().map(|&(orig, ref o)| table.energy_j(orig as usize, o.system)).sum();
+    let outcomes = outcomes.into_iter().map(|(_, o)| o).collect();
+    let mut report = finalize_report(
+        policy.name(),
+        &cluster,
+        outcomes,
+        opts,
+        rerouted,
+        batches,
+        serial_energy_j,
+        ledger.into_stats(),
+    );
+    report.retries = fs.retries_by_system;
+    report.wasted_energy_j = fs.wasted_energy_j;
+    report
 }
 
 #[cfg(test)]
@@ -2403,5 +2780,139 @@ mod tests {
                 assert_eq!(a.size_hist, b.size_hist);
             }
         }
+    }
+
+    use crate::sched::faults::{FaultConfig, RetryPolicy};
+
+    fn crashy() -> FaultConfig {
+        FaultConfig {
+            mtbf_s: 40.0,
+            mttr_s: 5.0,
+            retry: RetryPolicy { max_attempts: 3, ..RetryPolicy::default() },
+            ..FaultConfig::default()
+        }
+    }
+
+    /// `Some(disabled config)` must be byte-for-byte the fault-free
+    /// engines — the tentpole's pinning contract at its cheapest.
+    #[test]
+    fn disabled_fault_config_is_bit_identical_to_none() {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 80.0 }, 11).generate(800);
+        let systems = system_catalog();
+        let em = energy();
+        for batching in [None, Some(BatchingOptions::new(4, 0.05))] {
+            let base_opts = SimOptions { batching, ..Default::default() };
+            let opts = SimOptions { faults: Some(FaultConfig::default()), ..base_opts.clone() };
+            assert!(!faults_live(&opts), "default FaultConfig must be disabled");
+            let mut p1 = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let a = simulate(&queries, &systems, p1.as_mut(), &em, &base_opts);
+            let mut p2 = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let b = simulate(&queries, &systems, p2.as_mut(), &em, &opts);
+            assert_eq!(a.outcomes.len(), b.outcomes.len());
+            for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(x.query_id, y.query_id);
+                assert_eq!(x.system, y.system);
+                assert_eq!(x.finish_s.to_bits(), y.finish_s.to_bits());
+                assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+            }
+            assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+            assert_eq!(b.total_retries(), 0);
+            assert_eq!(b.wasted_energy_j.to_bits(), 0f64.to_bits());
+        }
+    }
+
+    /// Conservation under crashes: every arrival is served or abandoned
+    /// (u64-exact), energy balances once wasted joules are counted, and
+    /// latencies span the retries.
+    #[test]
+    fn fault_conservation_serial_and_batched() {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 60.0 }, 13).generate(1500);
+        let systems = system_catalog();
+        let em = energy();
+        for batching in [None, Some(BatchingOptions::new(4, 0.05))] {
+            let opts =
+                SimOptions { batching, faults: Some(crashy()), ..Default::default() };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let r = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+            let arrived: u64 = r.shed.iter().map(|s| s.arrived).sum();
+            assert_eq!(arrived, queries.len() as u64);
+            assert_eq!(
+                r.outcomes.len() as u64 + r.total_shed() + r.total_abandoned(),
+                queries.len() as u64,
+                "arrived == served + shed + abandoned"
+            );
+            assert!(
+                r.total_retries() > 0,
+                "a 40 s MTBF over a multi-minute trace must crash something"
+            );
+            assert!(r.wasted_energy_j > 0.0);
+            assert!(r.energy_conserved(), "wasted joules must balance the energy ledger");
+            for o in &r.outcomes {
+                assert!(o.start_s >= o.arrival_s - 1e-9);
+                assert!(o.finish_s >= o.start_s);
+            }
+            // outcomes stay unique per query even through retries
+            let mut ids: Vec<u64> = r.outcomes.iter().map(|o| o.query_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), r.outcomes.len(), "a retried query must be served once");
+        }
+    }
+
+    /// Admission composes with faults: the ledger splits losses between
+    /// shed (refused at the door) and abandoned (crashed out of
+    /// retries), and conservation still holds.
+    #[test]
+    fn fault_with_admission_conserves() {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 300.0 }, 17).generate(1200);
+        let systems = system_catalog();
+        let em = energy();
+        let adm = AdmissionConfig { queue_budget: 8, ..AdmissionConfig::default() };
+        let opts = SimOptions {
+            admission: Some(adm),
+            faults: Some(crashy()),
+            ..Default::default()
+        };
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let r = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+        let arrived: u64 = r.shed.iter().map(|s| s.arrived).sum();
+        assert_eq!(arrived, queries.len() as u64);
+        assert_eq!(
+            r.outcomes.len() as u64 + r.total_shed() + r.total_abandoned(),
+            queries.len() as u64
+        );
+        assert!(r.total_shed() > 0, "300 q/s into an 8-deep budget must shed");
+        assert!(r.energy_conserved());
+    }
+
+    /// Slowdown-only faults stretch runtime and energy but lose nothing:
+    /// served == arrived, zero retries, zero waste, and total energy is
+    /// strictly above the fault-free run.
+    #[test]
+    fn slowdowns_stretch_energy_without_losing_queries() {
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 40.0 }, 19).generate(600);
+        let systems = system_catalog();
+        let em = energy();
+        // Dense onsets relative to the ~15 s arrival span so every node
+        // sees at least one slowdown window during the run.
+        let slow = FaultConfig {
+            slow_mtbf_s: 2.0,
+            slow_duration_s: 20.0,
+            slow_factor: 3.0,
+            ..FaultConfig::default()
+        };
+        let opts = SimOptions { faults: Some(slow), ..Default::default() };
+        let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let r = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+        assert_eq!(r.outcomes.len(), queries.len());
+        assert_eq!(r.total_retries(), 0);
+        assert_eq!(r.wasted_energy_j.to_bits(), 0f64.to_bits());
+        assert!(r.energy_conserved());
+        let mut p2 = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+        let base = simulate(&queries, &systems, p2.as_mut(), &em, &SimOptions::default());
+        assert!(
+            r.total_energy_j > base.total_energy_j,
+            "a 3x slowdown window must burn extra joules"
+        );
     }
 }

@@ -85,8 +85,10 @@ impl BatchStats {
 /// Per-tenant admission accounting under overload — one row per tenant
 /// on [`SimReport::shed`] / `StreamReport::shed` (empty when admission
 /// is disabled). The conservation invariant the property suite pins:
-/// `arrived == served + shed_total() + pending()` per tenant, exactly
-/// (u64 counters, no floats).
+/// `arrived == served + shed_total() + abandoned + pending()` per
+/// tenant, exactly (u64 counters, no floats). `abandoned` is the
+/// fault-injection terminal state: admitted work that exhausted its
+/// retry budget (`sched::faults`); always 0 in fault-free runs.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ShedStats {
     pub tenant: u32,
@@ -103,6 +105,9 @@ pub struct ShedStats {
     /// admitted on a different system than the routing policy chose
     /// (SLO-driven upgrade; these are also counted in `served`)
     pub upgraded: u64,
+    /// admitted but never completed: every attempt crashed and the
+    /// retry budget ran out (fault injection only)
+    pub abandoned: u64,
 }
 
 impl ShedStats {
@@ -110,10 +115,10 @@ impl ShedStats {
         self.shed_rate_limit + self.shed_queue + self.shed_slo
     }
 
-    /// arrived but neither served nor shed (0 once a sim run drains;
-    /// nonzero mid-run or for coordinator snapshots)
+    /// arrived but neither served, shed, nor abandoned (0 once a sim
+    /// run drains; nonzero mid-run or for coordinator snapshots)
     pub fn pending(&self) -> u64 {
-        self.arrived - self.served - self.shed_total()
+        self.arrived - self.served - self.shed_total() - self.abandoned
     }
 
     /// fraction of this tenant's arrivals that were shed
@@ -172,8 +177,17 @@ impl ShedLedger {
         self.slot(tenant).upgraded += 1;
     }
 
+    /// Fault injection: the query exhausted its retry budget.
+    pub fn abandon(&mut self, tenant: u32) {
+        self.slot(tenant).abandoned += 1;
+    }
+
     pub fn total_shed(&self) -> u64 {
         self.per_tenant.iter().map(ShedStats::shed_total).sum()
+    }
+
+    pub fn total_abandoned(&self) -> u64 {
+        self.per_tenant.iter().map(|s| s.abandoned).sum()
     }
 
     pub fn stats(&self) -> &[ShedStats] {
@@ -369,6 +383,14 @@ pub struct SimReport {
     /// disabled (shed queries appear here and nowhere else — they have
     /// no outcome, no energy, no latency)
     pub shed: Vec<ShedStats>,
+    /// fault injection: retries scheduled per system, attributed to the
+    /// system whose failed attempt caused them (empty when faults are
+    /// disabled)
+    pub retries: Vec<u64>,
+    /// fault injection: joules burned by crashed attempts that produced
+    /// no outcome — real energy the cluster spent that no query's
+    /// outcome carries (0 when faults are disabled)
+    pub wasted_energy_j: f64,
 }
 
 impl SimReport {
@@ -395,11 +417,12 @@ impl SimReport {
         self.total_energy_j / self.outcomes.len() as f64
     }
 
-    /// conservation check: Σ query energy == Σ system energy
+    /// conservation check: Σ query energy (+ energy wasted by crashed
+    /// attempts) == Σ system energy
     pub fn energy_conserved(&self) -> bool {
         let by_query: f64 = self.outcomes.iter().map(|o| o.energy_j).sum();
         let by_system: f64 = self.systems.iter().map(|s| s.energy_j).sum();
-        (by_query - by_system).abs() <= 1e-6 * by_system.max(1.0)
+        (by_query + self.wasted_energy_j - by_system).abs() <= 1e-6 * by_system.max(1.0)
     }
 
     /// queries routed to each system, in system order
@@ -441,6 +464,29 @@ impl SimReport {
     /// total queries shed across tenants (0 when admission is disabled)
     pub fn total_shed(&self) -> u64 {
         self.shed.iter().map(ShedStats::shed_total).sum()
+    }
+
+    /// total queries abandoned after exhausting their retry budget
+    /// (0 when faults are disabled)
+    pub fn total_abandoned(&self) -> u64 {
+        self.shed.iter().map(|s| s.abandoned).sum()
+    }
+
+    /// total retries scheduled across systems (0 when faults are
+    /// disabled)
+    pub fn total_retries(&self) -> u64 {
+        self.retries.iter().sum()
+    }
+
+    /// served / arrived over all tenants (1.0 when the shed ledger is
+    /// empty — fault-free, admission-free runs complete everything)
+    pub fn completion_rate(&self) -> f64 {
+        let arrived: u64 = self.shed.iter().map(|s| s.arrived).sum();
+        if arrived == 0 {
+            return 1.0;
+        }
+        let served: u64 = self.shed.iter().map(|s| s.served).sum();
+        served as f64 / arrived as f64
     }
 
     /// shed fraction over all arrivals (served + shed)
@@ -495,6 +541,8 @@ mod tests {
             batches: vec![BatchStats::default()],
             serial_energy_j: 5.0,
             shed: Vec::new(),
+            retries: Vec::new(),
+            wasted_energy_j: 0.0,
         };
         assert!(r.energy_conserved());
         r.systems[0].energy_j = 6.0;
@@ -628,18 +676,22 @@ mod tests {
         l.serve(2);
         l.shed(2, ShedReason::QueueFull);
         l.upgrade(2);
+        l.abandon(2);
         assert_eq!(l.total_shed(), 3);
+        assert_eq!(l.total_abandoned(), 1);
         let stats = l.into_stats();
         assert_eq!(stats.len(), 3, "tenant 1 gets a zero row");
         assert_eq!(stats[1], ShedStats { tenant: 1, ..ShedStats::default() });
         for s in &stats {
-            assert_eq!(s.arrived, s.served + s.shed_total() + s.pending());
+            assert_eq!(s.arrived, s.served + s.shed_total() + s.abandoned + s.pending());
         }
         assert_eq!(stats[0].pending(), 1);
         assert_eq!(stats[0].shed_rate_limit, 1);
         assert_eq!(stats[0].shed_slo, 1);
         assert_eq!(stats[2].shed_queue, 1);
         assert_eq!(stats[2].upgraded, 1);
+        assert_eq!(stats[2].abandoned, 1);
+        assert_eq!(stats[2].pending(), 0);
         assert!((stats[0].shed_rate() - 0.4).abs() < 1e-12);
     }
 

@@ -39,7 +39,7 @@
 
 use super::cluster::{ClusterState, NodeState};
 use super::continuous::{episode_energy, Episode, LiveMember};
-use super::engine::{BatchMode, BatchingOptions, DueEvent, QueueModel, SimOptions};
+use super::engine::{faults_live, BatchMode, BatchingOptions, DueEvent, QueueModel, SimOptions};
 use super::report::{
     BatchStats, QueryOutcome, ShedLedger, ShedStats, StreamingOutcomes, SystemTotals,
 };
@@ -48,6 +48,7 @@ use crate::hw::spec::SystemSpec;
 use crate::perf::cost_table::{BatchTable, RowCache};
 use crate::perf::energy::EnergyModel;
 use crate::sched::admission;
+use crate::sched::faults::{FaultState, RetryAttempt};
 use crate::sched::overload::{AdmitDecision, OverloadPolicy};
 use crate::sched::formation::{FormationPolicy, FormationScratch, SortedWindow};
 use crate::sched::policy::{ClusterView, Policy};
@@ -98,6 +99,14 @@ pub struct StreamReport {
     /// per-tenant admission outcomes — empty when `opts.admission` is
     /// `None` (same semantics as [`crate::sim::SimReport::shed`])
     pub shed: Vec<ShedStats>,
+    /// retries scheduled per system under fault injection (all zero on
+    /// fault-free runs — same semantics as
+    /// [`crate::sim::SimReport::retries`])
+    pub retries: Vec<u64>,
+    /// joules burned by crashed attempts that produced no outcome (0.0
+    /// on fault-free runs — same semantics as
+    /// [`crate::sim::SimReport::wasted_energy_j`])
+    pub wasted_energy_j: f64,
 }
 
 impl StreamReport {
@@ -108,10 +117,12 @@ impl StreamReport {
         self.total_energy_j / self.queries as f64
     }
 
-    /// conservation check: Σ query energy == Σ system energy
+    /// conservation check: Σ query energy (plus fault-wasted joules)
+    /// == Σ system energy
     pub fn energy_conserved(&self) -> bool {
         let by_system: f64 = self.systems.iter().map(|s| s.energy_j).sum();
-        (self.outcome_energy_j - by_system).abs() <= 1e-6 * by_system.max(1.0)
+        (self.outcome_energy_j + self.wasted_energy_j - by_system).abs()
+            <= 1e-6 * by_system.max(1.0)
     }
 
     /// queries routed to each system, in system order
@@ -137,6 +148,29 @@ impl StreamReport {
         } else {
             self.total_shed() as f64 / arrived as f64
         }
+    }
+
+    /// total queries abandoned after exhausting their retry budget
+    /// (0 when faults are disabled)
+    pub fn total_abandoned(&self) -> u64 {
+        self.shed.iter().map(|s| s.abandoned).sum()
+    }
+
+    /// total retries scheduled across systems (0 when faults are
+    /// disabled)
+    pub fn total_retries(&self) -> u64 {
+        self.retries.iter().sum()
+    }
+
+    /// served / arrived over all tenants (1.0 when the shed ledger is
+    /// empty — fault-free, admission-free runs complete everything)
+    pub fn completion_rate(&self) -> f64 {
+        let arrived: u64 = self.shed.iter().map(|s| s.arrived).sum();
+        if arrived == 0 {
+            return 1.0;
+        }
+        let served: u64 = self.shed.iter().map(|s| s.served).sum();
+        served as f64 / arrived as f64
     }
 }
 
@@ -172,6 +206,25 @@ pub fn simulate_stream_with_sink(
     sink: &mut dyn FnMut(u64, &QueryOutcome),
 ) -> Result<StreamReport, String> {
     let mut cache = RowCache::new(energy.clone(), systems);
+    if faults_live(opts) {
+        // live fault injection diverts every configuration to the
+        // fault-aware loop — the streaming mirror of
+        // `engine::simulate_faulted` (fault-free runs never reach it,
+        // keeping them bit-identical to the historical engines)
+        let batch_table = opts
+            .batching
+            .map(|b| BatchTable::new(energy.clone(), systems).with_capacity(b.memo_capacity));
+        return stream_faulted(
+            source,
+            limit,
+            systems,
+            policy,
+            &mut cache,
+            batch_table.as_ref(),
+            opts,
+            sink,
+        );
+    }
     match opts.batching {
         None => stream_serial(source, limit, systems, policy, &mut cache, opts, sink),
         Some(bopts) => {
@@ -325,6 +378,7 @@ impl StreamTotals {
         };
         let total_energy: f64 =
             self.cluster.nodes.iter().map(|n| n.energy_j).sum::<f64>() + idle_energy;
+        let n_systems = self.batches.len();
 
         StreamReport {
             policy: policy_name,
@@ -353,6 +407,8 @@ impl StreamTotals {
             p99_latency_s: self.acc.p99_latency_s(),
             unique_shapes,
             peak_pending: self.peak_pending,
+            retries: vec![0; n_systems],
+            wasted_energy_j: 0.0,
             shed: self.ledger.into_stats(),
         }
     }
@@ -410,6 +466,331 @@ fn stream_serial(
         seq += 1;
     }
     Ok(st.finish(policy.name(), opts, cache.n_unique_rows()))
+}
+
+/// One unit of dispatchable work in the streaming fault loop — the
+/// streaming twin of the engine's `FaultJob`, keyed by trace sequence
+/// number and carrying its [`RowCache`] row so retries re-price without
+/// re-reading the source.
+#[derive(Clone, Copy, Debug)]
+struct StreamFaultJob {
+    seq: u64,
+    id: u64,
+    arrival_s: f64,
+    /// when this job entered its current queue (original arrival for
+    /// first attempts, backoff expiry for retries)
+    enq_s: f64,
+    m: u32,
+    n: u32,
+    row: usize,
+    tenant: u32,
+}
+
+/// The fault-aware streaming loop — `engine::simulate_faulted` over a
+/// [`QuerySource`], expression-for-expression: one FIFO queue per
+/// system class, FIFO-prefix batches trimmed through the same
+/// [`BatchTable`], dispatch on the node with the earliest
+/// fault-adjusted availability, crashes booking partial work and
+/// requeuing members through the shared retry/backoff policy, retries
+/// optionally moving to the minimum-ETA feasible system. Because every
+/// routing, pricing, scheduling, and attribution step mirrors the
+/// materialized loop (with [`RowCache`] rows in place of table rows), a
+/// streaming fault run over [`crate::workload::source::SliceSource`] is
+/// bit-identical to the materialized fault run on the same trace —
+/// pinned in `rust/tests/fault_properties.rs`. Outcomes flow through
+/// [`StreamingOutcomes`] out of completion order (served retries land
+/// late; the reorder buffer restores trace-order sums), and abandoned
+/// sequence numbers are [`StreamingOutcomes::skip`]ped exactly like
+/// shed ones.
+#[allow(clippy::too_many_arguments)]
+fn stream_faulted(
+    source: &mut dyn QuerySource,
+    limit: usize,
+    systems: &[SystemSpec],
+    policy: &mut dyn Policy,
+    cache: &mut RowCache,
+    batch_table: Option<&BatchTable>,
+    opts: &SimOptions,
+    sink: &mut dyn FnMut(u64, &QueryOutcome),
+) -> Result<StreamReport, String> {
+    let fcfg = opts.faults.as_ref().expect("stream_faulted requires SimOptions::faults");
+    debug_assert!(fcfg.enabled(), "disabled fault configs take the fault-free loops");
+    if let Err(e) = fcfg.validate() {
+        return Err(format!("invalid fault config: {e}"));
+    }
+    let (max_batch, linger_s) = match (&opts.batching, batch_table) {
+        (Some(b), Some(bt)) => {
+            assert!(b.max_batch >= 1, "max_batch must be >= 1");
+            assert!(
+                b.linger_s >= 0.0 && b.linger_s.is_finite(),
+                "linger_s must be finite and non-negative"
+            );
+            assert_eq!(bt.n_systems(), systems.len(), "batch table must match the cluster");
+            (b.max_batch, b.linger_s)
+        }
+        (None, None) => (1, 0.0),
+        _ => panic!("batching options and batch table must be supplied together"),
+    };
+
+    let mut fs = FaultState::new(fcfg, systems.len());
+    let mut st = StreamTotals::new(systems, opts);
+    let mut queues: Vec<VecDeque<StreamFaultJob>> =
+        (0..systems.len()).map(|_| VecDeque::new()).collect();
+    let mut upcoming: Option<(u64, Query)> = None;
+    let mut pulled = 0usize;
+    let mut last_arrival = f64::NEG_INFINITY;
+    let mut popped: Vec<StreamFaultJob> = Vec::new();
+    let mut pairs: Vec<(u32, u32)> = Vec::new();
+    let mut member_rel: Vec<f64> = Vec::new();
+
+    loop {
+        // keep exactly one arrival buffered
+        if upcoming.is_none() && pulled < limit {
+            match source.next_query()? {
+                Some(q) => {
+                    let seq = pulled as u64;
+                    check_sorted(&q, last_arrival, seq)?;
+                    last_arrival = q.arrival_s;
+                    upcoming = Some((seq, q));
+                    pulled += 1;
+                }
+                None => pulled = limit,
+            }
+        }
+        let next_arrival = upcoming.as_ref().map_or(f64::INFINITY, |(_, q)| q.arrival_s);
+        let next_retry = fs.next_due().unwrap_or(f64::INFINITY);
+        let next_in = next_arrival.min(next_retry);
+
+        // earliest due batch across the class queues (strict `<`, so
+        // ties break to the lowest system index) — same expressions as
+        // the materialized fault loop
+        let mut due: Option<(f64, usize)> = None;
+        for (s, q) in queues.iter().enumerate() {
+            let Some(front) = q.front() else { continue };
+            let free = st.cluster.nodes[s].earliest_free();
+            let ready = if q.len() >= max_batch {
+                free.max(q[max_batch - 1].enq_s)
+            } else {
+                free.max(front.enq_s) + linger_s
+            };
+            if due.map_or(true, |(t, _)| ready < t) {
+                due = Some((ready, s));
+            }
+        }
+
+        if let Some((ready, s)) = due {
+            if ready <= next_in {
+                popped.clear();
+                let cap = max_batch.min(queues[s].len());
+                popped.extend(queues[s].drain(..cap));
+                pairs.clear();
+                pairs.extend(popped.iter().map(|j| (j.m, j.n)));
+                let take = match batch_table {
+                    Some(bt) => bt.feasible_prefix(s, &pairs),
+                    None => 1,
+                };
+                assert!(take >= 1, "batch head must be individually feasible on its system");
+                for j in popped.drain(take..).rev() {
+                    queues[s].push_front(j);
+                }
+                pairs.truncate(take);
+
+                member_rel.clear();
+                let (base_dur, e_base) = match batch_table {
+                    Some(bt) => {
+                        let cost = bt.cost(s, &pairs);
+                        debug_assert!(cost.is_feasible(), "trimmed batch must be feasible");
+                        member_rel.extend_from_slice(&cost.member_finish_s);
+                        (cost.runtime_s, bt.energy_j(&cost))
+                    }
+                    None => {
+                        let row = popped[0].row;
+                        let dur = cache.runtime_s(row, s);
+                        member_rel.push(dur);
+                        (dur, cache.energy_j(row, s))
+                    }
+                };
+
+                let mut node_idx = 0usize;
+                let mut best_start = f64::INFINITY;
+                for (w, &free_w) in st.cluster.nodes[s].node_free_at.iter().enumerate() {
+                    let est = fs.plan.up_at(s, w, ready.max(free_w));
+                    if est < best_start {
+                        best_start = est;
+                        node_idx = w;
+                    }
+                }
+                let free_n = st.cluster.nodes[s].node_free_at[node_idx];
+                let att = fs.plan.attempt_span(s, node_idx, ready.max(free_n), base_dur);
+                debug_assert_eq!(att.start_s.to_bits(), best_start.to_bits());
+                let e_scaled = e_base * att.factor;
+
+                if let Some(c) = att.crash_s {
+                    let e_partial = e_scaled * att.executed_fraction();
+                    fs.wasted_energy_j += e_partial;
+                    let resume = fs.plan.up_at(s, node_idx, c);
+                    st.cluster.nodes[s].book_crash_on(node_idx, att.start_s, c, resume, e_partial);
+                    for j in &popped {
+                        let a = RetryAttempt {
+                            due_s: 0.0,
+                            orig: j.seq,
+                            system: s,
+                            id: j.id,
+                            arrival_s: j.arrival_s,
+                            m: j.m,
+                            n: j.n,
+                            row: j.row,
+                            tenant: j.tenant,
+                        };
+                        if fs.fail(a, c).is_none() {
+                            st.ledger.abandon(j.tenant);
+                            st.acc.skip(j.seq);
+                        }
+                    }
+                } else {
+                    for f in member_rel.iter_mut() {
+                        *f *= att.factor;
+                    }
+                    let start = st.cluster.nodes[s].schedule_batch_on(
+                        node_idx,
+                        att.start_s,
+                        att.dur_s,
+                        &member_rel,
+                    );
+                    debug_assert_eq!(start.to_bits(), att.start_s.to_bits());
+                    st.cluster.nodes[s].energy_j += e_scaled;
+                    st.batches[s].record(
+                        take,
+                        systems[s].dispatch_energy_j(),
+                        FormationPolicy::straggler_steps(&pairs),
+                    );
+                    let batch_tokens: f64 = pairs.iter().map(|&(m, n)| (m + n) as f64).sum();
+                    for (k, j) in popped.iter().enumerate() {
+                        let share = (pairs[k].0 + pairs[k].1) as f64 / batch_tokens;
+                        let o = QueryOutcome {
+                            query_id: j.id,
+                            system: s,
+                            arrival_s: j.arrival_s,
+                            start_s: start,
+                            finish_s: start + member_rel[k],
+                            service_s: member_rel[k],
+                            energy_j: e_scaled * share,
+                        };
+                        st.acc.push(j.seq, &o, cache.energy_j(j.row, s));
+                        sink(j.seq, &o);
+                        st.ledger.serve(j.tenant);
+                        fs.served(j.seq);
+                    }
+                }
+                continue;
+            }
+        }
+
+        if next_in == f64::INFINITY {
+            break;
+        }
+
+        if next_arrival <= next_retry {
+            // route the next arrival (arrivals win ties over backoffs,
+            // matching the materialized loop)
+            let (seq, q) = upcoming.take().expect("next_arrival was finite");
+            let row = cache.row(q.input_tokens, q.output_tokens);
+            st.cluster.advance_to(q.arrival_s);
+            let mut depths = st.cluster.queue_depths_at(q.arrival_s);
+            let mut lens = st.cluster.queue_lens();
+            for (s, pq) in queues.iter().enumerate() {
+                if pq.is_empty() {
+                    continue;
+                }
+                lens[s] += pq.len();
+                depths[s] += pq.iter().map(|j| cache.runtime_s(j.row, s)).sum::<f64>();
+            }
+            st.peak_pending = st.peak_pending.max(lens.iter().sum::<usize>() + 1);
+            let view = ClusterView { systems, queue_depth_s: &depths, queue_len: &lens };
+            let mut sid = st.route(policy, &q, row, &view, cache, opts.strict);
+            // fault mode always runs the ledger, admission or not:
+            // abandonment makes conservation non-vacuous even for
+            // admit-everything configs. Serve is recorded at outcome
+            // emission (a query in the retry loop is neither).
+            st.ledger.arrive(q.tenant);
+            if let Some(ov) = st.overload.as_mut() {
+                let mut eta = |s: usize| {
+                    if cache.is_feasible(row, s) {
+                        depths[s] + cache.runtime_s(row, s)
+                    } else {
+                        f64::INFINITY
+                    }
+                };
+                match ov.decide(&q, q.arrival_s, sid.0, &lens, &mut eta) {
+                    AdmitDecision::Admit(s2) => {
+                        if s2 != sid.0 && cache.is_feasible(row, s2) {
+                            st.ledger.upgrade(q.tenant);
+                            sid = SystemId(s2);
+                        }
+                    }
+                    AdmitDecision::Shed(reason) => {
+                        st.ledger.shed(q.tenant, reason);
+                        st.acc.skip(seq);
+                        continue;
+                    }
+                }
+            }
+            queues[sid.0].push_back(StreamFaultJob {
+                seq,
+                id: q.id,
+                arrival_s: q.arrival_s,
+                enq_s: q.arrival_s,
+                m: q.input_tokens,
+                n: q.output_tokens,
+                row,
+                tenant: q.tenant,
+            });
+        } else {
+            // a retry's backoff expired: requeue on the failed system
+            // or — when the policy allows — on the minimum-ETA feasible
+            // system (same scan as the materialized loop; retries
+            // bypass admission and the routing policy)
+            let a = fs.pop_due().expect("next_retry was finite");
+            st.cluster.advance_to(a.due_s);
+            let target = if fs.retry.retry_other_system {
+                let depths = st.cluster.queue_depths_at(a.due_s);
+                let mut best = a.system;
+                let mut best_eta = f64::INFINITY;
+                for (s, d) in depths.iter().enumerate() {
+                    if !cache.is_feasible(a.row, s) {
+                        continue;
+                    }
+                    let backlog: f64 =
+                        queues[s].iter().map(|j| cache.runtime_s(j.row, s)).sum();
+                    let eta = d + backlog + cache.runtime_s(a.row, s);
+                    if eta < best_eta {
+                        best_eta = eta;
+                        best = s;
+                    }
+                }
+                best
+            } else {
+                a.system
+            };
+            queues[target].push_back(StreamFaultJob {
+                seq: a.orig,
+                id: a.id,
+                arrival_s: a.arrival_s,
+                enq_s: a.due_s,
+                m: a.m,
+                n: a.n,
+                row: a.row,
+                tenant: a.tenant,
+            });
+        }
+    }
+
+    debug_assert_eq!(fs.abandoned, st.ledger.total_abandoned(), "abandonment double-entry");
+    let unique_shapes = cache.n_unique_rows();
+    let mut report = st.finish(policy.name(), opts, unique_shapes);
+    report.retries = fs.retries_by_system;
+    report.wasted_energy_j = fs.wasted_energy_j;
+    Ok(report)
 }
 
 /// One resident waiter of a streaming virtual queue: everything the
@@ -1405,6 +1786,84 @@ mod tests {
             assert_eq!(got.total_service_s.to_bits(), want.total_service_s.to_bits());
             assert!(got.energy_conserved());
             assert!(got.shed_rate() > 0.0 && got.shed_rate() < 1.0);
+        }
+    }
+
+    /// The streaming fault loop is bit-identical to the materialized
+    /// fault engine — outcomes, totals, ledger, retry counts, wasted
+    /// joules — across serial and batched configurations.
+    #[test]
+    fn faulted_stream_matches_materialized_engine_bitwise() {
+        use crate::sched::faults::{FaultConfig, RetryPolicy};
+        let queries = TraceGenerator::new(Arrival::Poisson { rate: 60.0 }, 13).generate(1000);
+        let systems = system_catalog();
+        let em = energy();
+        let faults = FaultConfig {
+            mtbf_s: 40.0,
+            mttr_s: 5.0,
+            slow_mtbf_s: 90.0,
+            slow_duration_s: 15.0,
+            slow_factor: 2.0,
+            retry: RetryPolicy { max_attempts: 3, ..RetryPolicy::default() },
+            ..FaultConfig::default()
+        };
+        for batching in [None, Some(BatchingOptions::new(4, 0.05))] {
+            let opts = SimOptions {
+                include_idle_energy: true,
+                batching,
+                faults: Some(faults.clone()),
+                ..Default::default()
+            };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let want = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+            assert!(want.total_retries() > 0, "the schedule must actually crash something");
+
+            let mut streamed: Vec<(u64, QueryOutcome)> = Vec::new();
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let got = simulate_stream_with_sink(
+                &mut SliceSource::new(&queries),
+                queries.len(),
+                &systems,
+                p.as_mut(),
+                &em,
+                &opts,
+                &mut |seq, o| streamed.push((seq, *o)),
+            )
+            .unwrap();
+
+            // materialized outcomes are sorted by trace index and hold
+            // exactly the served queries; sorting the sink's stream by
+            // sequence number lines the two up one-to-one
+            assert_eq!(streamed.len(), want.outcomes.len(), "batching={batching:?}");
+            streamed.sort_unstable_by_key(|&(seq, _)| seq);
+            for ((_, o), w) in streamed.iter().zip(&want.outcomes) {
+                assert_eq!(o.query_id, w.query_id);
+                assert_eq!(o.system, w.system);
+                assert_eq!(o.start_s.to_bits(), w.start_s.to_bits());
+                assert_eq!(o.finish_s.to_bits(), w.finish_s.to_bits());
+                assert_eq!(o.service_s.to_bits(), w.service_s.to_bits());
+                assert_eq!(o.energy_j.to_bits(), w.energy_j.to_bits());
+            }
+            assert_eq!(got.makespan_s.to_bits(), want.makespan_s.to_bits());
+            assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits());
+            assert_eq!(got.total_service_s.to_bits(), want.total_service_s.to_bits());
+            assert_eq!(got.serial_energy_j.to_bits(), want.serial_energy_j.to_bits());
+            assert_eq!(got.wasted_energy_j.to_bits(), want.wasted_energy_j.to_bits());
+            assert_eq!(got.retries, want.retries);
+            assert_eq!(got.shed, want.shed);
+            for (gs, ws) in got.systems.iter().zip(&want.systems) {
+                assert_eq!(gs.queries, ws.queries);
+                assert_eq!(gs.busy_s.to_bits(), ws.busy_s.to_bits());
+                assert_eq!(gs.energy_j.to_bits(), ws.energy_j.to_bits());
+            }
+            // conservation: every pull is served or abandoned, and the
+            // energy ledger balances once wasted joules are counted
+            assert_eq!(
+                got.queries + got.total_abandoned(),
+                queries.len() as u64,
+                "batching={batching:?}"
+            );
+            assert!(got.energy_conserved());
         }
     }
 

@@ -1,0 +1,272 @@
+//! Fault-scenario release gates: the failure process
+//! ([`hetsched::sched::faults`]) must never perturb a fault-free run
+//! (bit-identical pinning across every engine and dispatch mode), must
+//! conserve every arrival under arbitrary crash schedules
+//! (u64-exact `arrived == served + shed + abandoned`), and must
+//! attribute every retry and every wasted joule to the system that
+//! burned it. CI runs this suite in the `release-properties` job next
+//! to the overload and engine-equivalence gates.
+
+use hetsched::config::schema::PolicyConfig;
+use hetsched::hw::catalog::system_catalog;
+use hetsched::model::llm_catalog;
+use hetsched::perf::energy::EnergyModel;
+use hetsched::perf::model::PerfModel;
+use hetsched::sched::faults::{FaultConfig, RetryPolicy};
+use hetsched::sched::overload::AdmissionConfig;
+use hetsched::sched::policy::build_policy;
+use hetsched::sim::engine::{
+    simulate, BatchMode, BatchingOptions, QueueModel, SimOptions,
+};
+use hetsched::sim::report::SimReport;
+use hetsched::sim::stream::{simulate_stream, StreamReport};
+use hetsched::workload::generator::{Arrival, TraceGenerator};
+use hetsched::workload::source::SliceSource;
+use hetsched::workload::Query;
+
+fn energy_model() -> EnergyModel {
+    EnergyModel::new(PerfModel::new(llm_catalog()[1].clone()))
+}
+
+fn trace(n: usize, rate: f64, seed: u64) -> Vec<Query> {
+    TraceGenerator::new(Arrival::Poisson { rate }, seed).generate(n)
+}
+
+/// Every dispatch mode the simulator ships, for the pinning and parity
+/// loops below.
+fn all_modes() -> [(&'static str, Option<BatchingOptions>); 4] {
+    let per_class = BatchingOptions::new(4, 0.05).with_queues(QueueModel::PerClass);
+    let mut continuous = BatchingOptions::new(4, 0.05);
+    continuous.mode = BatchMode::Continuous { max_live: 8 };
+    [
+        ("serial", None),
+        ("static/per-worker", Some(BatchingOptions::new(4, 0.05))),
+        ("static/per-class", Some(per_class)),
+        ("continuous", Some(continuous)),
+    ]
+}
+
+/// A crash process dense enough to bite on a short trace.
+fn crashy(seed: u64) -> FaultConfig {
+    FaultConfig {
+        mtbf_s: 30.0,
+        mttr_s: 5.0,
+        seed,
+        retry: RetryPolicy { max_attempts: 3, ..RetryPolicy::default() },
+        ..FaultConfig::default()
+    }
+}
+
+/// The tentpole's pinning contract, through the public entry points: a
+/// `[faults]` section that parses but is disabled (`Some(default)`) and
+/// no section at all (`None`) produce byte-for-byte identical reports in
+/// every engine × dispatch mode — outcomes, totals, and the streaming
+/// engine's running aggregates alike.
+#[test]
+fn disabled_faults_pin_every_engine_bitwise() {
+    let queries = trace(900, 80.0, 11);
+    let systems = system_catalog();
+    let em = energy_model();
+
+    for (label, batching) in all_modes() {
+        let run = |faults: Option<FaultConfig>| -> SimReport {
+            let opts = SimOptions { batching, faults, ..Default::default() };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            simulate(&queries, &systems, p.as_mut(), &em, &opts)
+        };
+        let off = run(None);
+        let disabled = run(Some(FaultConfig::default()));
+
+        assert_eq!(off.outcomes.len(), disabled.outcomes.len(), "{label}");
+        for (a, b) in off.outcomes.iter().zip(&disabled.outcomes) {
+            assert_eq!(a.query_id, b.query_id, "{label}");
+            assert_eq!(a.system, b.system, "{label}");
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits(), "{label}");
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits(), "{label}");
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}");
+        }
+        assert_eq!(off.total_energy_j.to_bits(), disabled.total_energy_j.to_bits(), "{label}");
+        assert_eq!(off.makespan_s.to_bits(), disabled.makespan_s.to_bits(), "{label}");
+        assert_eq!(off.total_service_s.to_bits(), disabled.total_service_s.to_bits(), "{label}");
+        assert_eq!(off.serial_energy_j.to_bits(), disabled.serial_energy_j.to_bits(), "{label}");
+        assert_eq!(off.rerouted, disabled.rerouted, "{label}");
+        assert_eq!(disabled.total_retries(), 0, "{label}: nothing retries when nothing fails");
+        assert_eq!(disabled.wasted_energy_j.to_bits(), 0f64.to_bits(), "{label}");
+
+        // same pinning through the bounded-memory streaming engine
+        let stream = |faults: Option<FaultConfig>| -> StreamReport {
+            let opts = SimOptions { batching, faults, ..Default::default() };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            simulate_stream(
+                &mut SliceSource::new(&queries),
+                queries.len(),
+                &systems,
+                p.as_mut(),
+                &em,
+                &opts,
+            )
+            .unwrap()
+        };
+        let s_off = stream(None);
+        let s_disabled = stream(Some(FaultConfig::default()));
+        assert_eq!(s_off.total_energy_j.to_bits(), s_disabled.total_energy_j.to_bits(), "{label}");
+        assert_eq!(s_off.makespan_s.to_bits(), s_disabled.makespan_s.to_bits(), "{label}");
+        assert_eq!(s_off.queries, s_disabled.queries, "{label}");
+        assert_eq!(s_disabled.total_retries(), 0, "{label}");
+        assert_eq!(s_disabled.wasted_energy_j.to_bits(), 0f64.to_bits(), "{label}");
+    }
+}
+
+/// Conservation is not a property of one lucky schedule: across a grid
+/// of failure seeds and MTBFs, every arrival is served or abandoned
+/// (u64-exact), the energy ledger balances once wasted joules are
+/// counted, served outcomes stay unique per query, and the report's own
+/// aggregate helpers agree with the ledger.
+#[test]
+fn conservation_holds_under_random_fault_schedules() {
+    let queries = trace(800, 60.0, 13);
+    let systems = system_catalog();
+    let em = energy_model();
+    let mut crashed_somewhere = false;
+
+    for fault_seed in [1u64, 7, 23, 2024] {
+        for mtbf_s in [15.0f64, 40.0, 120.0] {
+            let faults = FaultConfig { mtbf_s, ..crashy(fault_seed) };
+            let label = format!("seed {fault_seed} mtbf {mtbf_s}");
+            let opts = SimOptions { faults: Some(faults), ..Default::default() };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let r = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+
+            let arrived: u64 = r.shed.iter().map(|s| s.arrived).sum();
+            assert_eq!(arrived, queries.len() as u64, "{label}: ledger must see every arrival");
+            assert_eq!(
+                r.outcomes.len() as u64 + r.total_shed() + r.total_abandoned(),
+                queries.len() as u64,
+                "{label}: arrived == served + shed + abandoned"
+            );
+            assert_eq!(r.total_shed(), 0, "{label}: no admission section, no door sheds");
+            assert!(r.energy_conserved(), "{label}: energy ledger must balance");
+            assert!(
+                r.completion_rate() > 0.0 && r.completion_rate() <= 1.0,
+                "{label}: completion {} out of range",
+                r.completion_rate()
+            );
+            let mut ids: Vec<u64> = r.outcomes.iter().map(|o| o.query_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), r.outcomes.len(), "{label}: a query is served at most once");
+            if r.total_retries() > 0 {
+                crashed_somewhere = true;
+                assert!(r.wasted_energy_j > 0.0, "{label}: retries must strand joules");
+            } else {
+                assert_eq!(r.wasted_energy_j.to_bits(), 0f64.to_bits(), "{label}");
+            }
+            // abandonment only happens by exhausting the retry budget
+            assert!(
+                r.total_abandoned() == 0 || r.total_retries() > 0,
+                "{label}: an abandoned query must have retried first"
+            );
+        }
+    }
+    assert!(crashed_somewhere, "the seed × MTBF grid must produce at least one crashing run");
+}
+
+/// Retry attribution: the per-system retry vector is the ground truth
+/// the sweep and the CLI print — it must have one slot per system, sum
+/// to `total_retries()`, and only ever grow on runs whose failure
+/// process is live.
+#[test]
+fn retries_attribute_to_systems_and_sum_to_total() {
+    let queries = trace(1200, 60.0, 17);
+    let systems = system_catalog();
+    let em = energy_model();
+    let opts = SimOptions { faults: Some(crashy(5)), ..Default::default() };
+    let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+    let r = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+
+    assert_eq!(r.retries.len(), systems.len(), "one retry counter per system");
+    assert_eq!(r.retries.iter().sum::<u64>(), r.total_retries());
+    assert!(r.total_retries() > 0, "a 30 s MTBF over this trace must crash something");
+    // the failed attempts burned real joules on the systems that held
+    // them — waste is positive and bounded by the total the run charged
+    assert!(r.wasted_energy_j > 0.0);
+    assert!(r.wasted_energy_j < r.total_energy_j, "waste is a strict part of the bill");
+
+    // determinism: the same failure seed reproduces the identical story
+    let mut p2 = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+    let r2 = simulate(&queries, &systems, p2.as_mut(), &em, &opts);
+    assert_eq!(r2.retries, r.retries);
+    assert_eq!(r2.total_energy_j.to_bits(), r.total_energy_j.to_bits());
+    assert_eq!(r2.wasted_energy_j.to_bits(), r.wasted_energy_j.to_bits());
+
+    // a different failure seed is a different schedule (same trace, same
+    // cluster) — the process is seeded, not hard-wired
+    let opts3 = SimOptions { faults: Some(crashy(6)), ..Default::default() };
+    let mut p3 = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+    let r3 = simulate(&queries, &systems, p3.as_mut(), &em, &opts3);
+    assert!(
+        r3.total_energy_j.to_bits() != r.total_energy_j.to_bits()
+            || r3.retries != r.retries
+            || r3.outcomes.len() != r.outcomes.len(),
+        "two failure seeds should not replay the same schedule"
+    );
+}
+
+/// Engine ↔ stream parity under live faults, through the public entry
+/// points: the streaming fault loop must reproduce the materialized
+/// fault engine bit for bit — totals, ledger, per-system retry counts,
+/// wasted joules — in serial and batched modes, with admission both off
+/// and on.
+#[test]
+fn faulted_stream_matches_engine_across_modes() {
+    let queries = trace(1000, 60.0, 19);
+    let systems = system_catalog();
+    let em = energy_model();
+    let admissions: [Option<AdmissionConfig>; 2] = [
+        None,
+        Some(AdmissionConfig { queue_budget: 8, ..AdmissionConfig::default() }),
+    ];
+    for admission in admissions {
+        for batching in [None, Some(BatchingOptions::new(4, 0.05))] {
+            let label = format!(
+                "admission={} batching={}",
+                admission.is_some(),
+                batching.is_some()
+            );
+            let opts = SimOptions {
+                batching,
+                admission: admission.clone(),
+                faults: Some(crashy(2024)),
+                ..Default::default()
+            };
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let want = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+            assert!(want.total_retries() > 0, "{label}: the schedule must crash something");
+
+            let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+            let got = simulate_stream(
+                &mut SliceSource::new(&queries),
+                queries.len(),
+                &systems,
+                p.as_mut(),
+                &em,
+                &opts,
+            )
+            .unwrap();
+            assert_eq!(got.queries, want.outcomes.len() as u64, "{label}");
+            assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits(), "{label}");
+            assert_eq!(got.makespan_s.to_bits(), want.makespan_s.to_bits(), "{label}");
+            assert_eq!(got.total_service_s.to_bits(), want.total_service_s.to_bits(), "{label}");
+            assert_eq!(got.wasted_energy_j.to_bits(), want.wasted_energy_j.to_bits(), "{label}");
+            assert_eq!(got.retries, want.retries, "{label}");
+            assert_eq!(got.shed, want.shed, "{label}");
+            assert_eq!(got.total_abandoned(), want.total_abandoned(), "{label}");
+            assert_eq!(
+                got.queries + got.total_shed() + got.total_abandoned(),
+                queries.len() as u64,
+                "{label}: stream-side conservation"
+            );
+            assert!(got.energy_conserved(), "{label}");
+        }
+    }
+}

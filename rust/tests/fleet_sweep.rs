@@ -246,7 +246,7 @@ fn batched_fleet_point_matches_direct_batched_simulation() {
         p.as_mut(),
         &table,
         &batch_table,
-        &SimOptions { include_idle_energy: true, batching, strict: false },
+        &SimOptions { include_idle_energy: true, batching, ..Default::default() },
     );
     assert_eq!(fp.total_energy_j, direct.total_energy_j);
     assert_eq!(fp.idle_energy_j, direct.idle_energy_j);

@@ -242,6 +242,121 @@ fn push_close_worker_random_walk() {
 }
 
 // ---------------------------------------------------------------------
+// Fault containment: crash-mid-batch × push × close × worker
+// ---------------------------------------------------------------------
+
+/// The panic-containment path of `run_worker` as a schedulable scenario:
+/// a worker takes a batch, "crashes" under it, and re-queues every
+/// member at the queue front ([`SystemQueue::requeue`] deliberately
+/// bypasses the cap and the closing gate — the drain guarantee must
+/// keep covering work whose worker died), racing a pusher and `close()`.
+/// Invariants, on every interleaving: the seeded request and whichever
+/// pushes were accepted are each served exactly once after the crash —
+/// never lost (even when the re-queue lands after `close()`), never
+/// duplicated — and the crashing request's batchmates are not starved:
+/// after a front re-queue the recovered drain still sees FIFO order.
+fn crash_requeue_close_worker_scenario() {
+    let q = Arc::new(SystemQueue::new(4));
+    // seeded before any thread runs: the crash victim is deterministic
+    q.push(req(1)).map_err(|_| "seed push refused").unwrap();
+    let worker = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || {
+            // first take: the batch the worker dies under. Non-empty by
+            // construction — id 1 is already waiting and nobody else
+            // consumes.
+            let doomed = q.take_batch(2, Duration::from_millis(1));
+            assert!(!doomed.is_empty(), "seeded queue handed the worker nothing");
+            let doomed_ids: Vec<u64> = doomed.iter().map(|r| r.id).collect();
+            assert_eq!(doomed_ids[0], 1, "FIFO: the seeded request leads the batch");
+            // contained crash: re-queue in reverse so the batch lands at
+            // the front in its original order, exactly as run_worker's
+            // containment path restores a died-under batch
+            for r in doomed.into_iter().rev() {
+                q.requeue(r);
+            }
+            // recovered: drain to completion
+            let mut served: Vec<u64> = Vec::new();
+            loop {
+                let b = q.take_batch(2, Duration::from_millis(1));
+                if b.is_empty() {
+                    assert!(q.is_closing() && q.is_empty());
+                    return (doomed_ids, served);
+                }
+                served.extend(b.iter().map(|r| r.id));
+            }
+        })
+    };
+    let pusher = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || match q.push(req(2)) {
+            Ok(()) => true,
+            Err((_, Rejected::ShuttingDown)) => false,
+            Err((_, why)) => panic!("cap-4 raw queue cannot refuse with {why:?}"),
+        })
+    };
+    let closer = {
+        let q = Arc::clone(&q);
+        vthread::spawn(move || q.close())
+    };
+    let accepted = pusher.join().unwrap();
+    closer.join().unwrap();
+    let (doomed_ids, served) = worker.join().unwrap();
+    // exactly-once: everything that entered the queue — the seeded
+    // victim and any accepted push — is served exactly once after the
+    // crash, no matter where close() landed relative to the re-queue
+    let mut expected = vec![1u64];
+    if accepted {
+        expected.push(2);
+    }
+    let mut sorted = served.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, expected, "crash-requeue lost or duplicated a request");
+    // the victim leads the recovered drain: a front re-queue cannot
+    // starve the crashed batch behind later arrivals
+    assert_eq!(served.first(), Some(&1), "re-queued victim must be served first");
+    // the crashed batch is a prefix of what the recovered worker serves
+    assert!(
+        served.starts_with(&doomed_ids),
+        "re-queue must restore the died-under batch in order (batch {doomed_ids:?}, served {served:?})"
+    );
+    assert!(q.is_empty());
+}
+
+/// Tentpole acceptance for the recovery path: exhaustively explore
+/// crash-mid-batch × push × close × worker with the same escalating
+/// preemption-bound ladder as the push/close gate.
+#[test]
+fn crash_requeue_exhaustive() {
+    let mut reported = 0usize;
+    let mut any_complete = false;
+    for bound in [Some(2), Some(3), Some(4), None] {
+        let report = explore(
+            ExploreOptions {
+                name: "crash-requeue-close-worker",
+                preemption_bound: bound,
+                max_interleavings: 60_000,
+                ..Default::default()
+            },
+            crash_requeue_close_worker_scenario,
+        );
+        report.expect_pass("crash-requeue-close-worker");
+        any_complete |= report.complete;
+        reported = report.interleavings;
+        eprintln!(
+            "crash-requeue-close-worker @ preemption bound {bound:?}: {reported} interleavings \
+             (complete: {})",
+            report.complete
+        );
+        if reported >= 10_000 {
+            break;
+        }
+    }
+    assert!(any_complete, "at least one preemption bound must exhaust its space");
+    assert!(reported >= 2, "crash × push × close must branch");
+}
+
+// ---------------------------------------------------------------------
 // Overload admission: submit × shed × close × worker
 // ---------------------------------------------------------------------
 

@@ -7,8 +7,11 @@
 //! the `release-properties` job next to the engine-equivalence
 //! properties.
 
-use hetsched::config::schema::PolicyConfig;
+use hetsched::config::schema::{ExperimentConfig, PolicyConfig, ServeConfig};
+use hetsched::coordinator::batcher::Rejected;
+use hetsched::coordinator::server::Server;
 use hetsched::hw::catalog::system_catalog;
+use hetsched::model::find_llm;
 use hetsched::model::llm_catalog;
 use hetsched::perf::energy::EnergyModel;
 use hetsched::perf::model::PerfModel;
@@ -354,5 +357,113 @@ fn combined_knobs_conserve_and_match_across_engines() {
         assert_eq!(got.shed, want.shed, "batching={batching:?}");
         assert_eq!(got.queries + got.total_shed(), queries.len() as u64);
         assert_eq!(got.total_energy_j.to_bits(), want.total_energy_j.to_bits());
+    }
+}
+
+/// Per-query shed *identity* between the real coordinator (over the
+/// model-driven `SimBackend`) and the batched simulator: not just the
+/// same shed rate, the same query IDs. The knobs are chosen so every
+/// shed decision is timing-independent — a near-zero-refill token
+/// bucket for tenant 0 (its burst admits exactly the first three
+/// arrivals, then the bucket never refills within the run on either
+/// clock) and an unmeetable deadline for tenant 1 (feasibility is a
+/// function of query shape alone). Queue budgets stay unbounded, so
+/// instantaneous queue state — the one axis where the stacks genuinely
+/// diverge — never participates in an admission decision.
+#[test]
+fn serving_and_sim_shed_the_same_query_ids() {
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    let queries = overloaded_trace(400);
+    let systems = system_catalog();
+    let em = energy_model();
+    let time_scale = 0.005; // real seconds per modeled second in the serving run
+    let admission = AdmissionConfig {
+        tenant_rate: vec![1e-6], // modeled q/s: ~0 refill over the trace span
+        tenant_burst: vec![3.0],
+        tenant_slo_s: vec![f64::INFINITY, 1e-9],
+        ..AdmissionConfig::default()
+    };
+
+    // ── sim side: batched engine, shed IDs = trace ∖ outcomes ──────────
+    let opts = SimOptions {
+        batching: Some(BatchingOptions::new(4, 0.05)),
+        admission: Some(admission.clone()),
+        ..Default::default()
+    };
+    let mut p = build_policy(&PolicyConfig::Cost { lambda: 1.0 }, em.clone(), &systems);
+    let rep = simulate(&queries, &systems, p.as_mut(), &em, &opts);
+    let served_sim: BTreeSet<u64> = rep.outcomes.iter().map(|o| o.query_id).collect();
+    let shed_sim: BTreeSet<u64> =
+        queries.iter().map(|q| q.id).filter(|id| !served_sim.contains(id)).collect();
+    assert!(!shed_sim.is_empty(), "the bucket and the deadline must both bite");
+    assert!(!served_sim.is_empty(), "tenant 2 has no limiter and must be served");
+
+    // ── serving side: same trace, same admission, rescaled bucket ──────
+    // (bucket refill runs on real seconds in the server — rescale the
+    // rate by 1/time_scale exactly as the fidelity harness does; a
+    // near-zero rate stays near-zero, which is what makes it clock-proof)
+    let mut serve_admission = admission.clone();
+    for r in &mut serve_admission.tenant_rate {
+        *r /= time_scale;
+    }
+    let cfg = ExperimentConfig {
+        policy: PolicyConfig::Cost { lambda: 1.0 },
+        serve: ServeConfig {
+            max_batch: 4,
+            max_wait_s: 0.05 * time_scale,
+            queue_cap: queries.len().max(1024),
+            ..ServeConfig::default()
+        },
+        admission: Some(serve_admission),
+        ..ExperimentConfig::default()
+    };
+    let perf = em.perf.clone();
+    let factory: hetsched::coordinator::worker::EngineFactory = Arc::new(move |spec| {
+        use hetsched::runtime::backend::{InferenceBackend, SimBackend};
+        Ok(Box::new(SimBackend::new(spec.clone(), perf.clone()).with_time_scale(time_scale))
+            as Box<dyn InferenceBackend>)
+    });
+    let server = Server::start(&cfg, factory).expect("server start");
+    let handle = server.handle();
+    let mut shed_serve = BTreeSet::new();
+    let mut receivers = Vec::new();
+    // no pacing: every admission decision here is independent of arrival
+    // timing, so the trace can be submitted as fast as the loop runs
+    for q in &queries {
+        let prompt = vec![0i32; q.input_tokens.max(1) as usize];
+        match handle.submit_with(prompt, Some(q.output_tokens), q.tenant, None) {
+            Ok(rx) => receivers.push(rx),
+            Err(Rejected::Shed(_)) => {
+                shed_serve.insert(q.id);
+            }
+            Err(other) => panic!("unexpected rejection: {other:?}"),
+        }
+    }
+    let served_serve = receivers.len() as u64;
+    for rx in receivers {
+        rx.recv().expect("worker dropped a response");
+    }
+    server.shutdown();
+
+    // the identity: same IDs shed, query for query
+    assert_eq!(shed_serve, shed_sim, "serving and sim must shed the identical query IDs");
+    assert_eq!(served_serve + shed_serve.len() as u64, queries.len() as u64);
+
+    // and the set decomposes exactly as constructed: three tenant-0
+    // arrivals through the burst, every tenant-1 arrival shed, tenant 2
+    // untouched
+    let t0_served = queries
+        .iter()
+        .filter(|q| q.tenant == 0 && !shed_sim.contains(&q.id))
+        .count();
+    assert_eq!(t0_served, 3, "tenant 0's burst admits exactly its three tokens");
+    for q in &queries {
+        match q.tenant {
+            1 => assert!(shed_sim.contains(&q.id), "query {}: tenant 1 is unmeetable", q.id),
+            2 => assert!(!shed_sim.contains(&q.id), "query {}: tenant 2 has no limiter", q.id),
+            _ => {}
+        }
     }
 }

@@ -335,7 +335,7 @@ fn prop_batched_engine_matches_reference() {
                     .with_queues(queues),
             ),
             include_idle_energy: g.bool(),
-            strict: false,
+            ..Default::default()
         };
         let mut p1 = build_policy(&cfg, em.clone(), &systems);
         let new = simulate_batched_with_tables(
@@ -447,7 +447,7 @@ fn prop_event_heap_matches_scan_due_picking() {
                     .with_queues(queues),
             ),
             include_idle_energy: g.bool(),
-            strict: false,
+            ..Default::default()
         };
         let mut p1 = build_policy(&cfg, em.clone(), &systems);
         let heap = simulate_batched_with_tables(
@@ -545,7 +545,7 @@ fn prop_streaming_engine_matches_materialized() {
         } else {
             None
         };
-        let opts = SimOptions { batching, include_idle_energy: g.bool(), strict: false };
+        let opts = SimOptions { batching, include_idle_energy: g.bool(), ..Default::default() };
         let mut p1 = build_policy(&cfg, em.clone(), &systems);
         let materialized = simulate(&queries, &systems, p1.as_mut(), &em, &opts);
         let mut p2 = build_policy(&cfg, em.clone(), &systems);
